@@ -1,0 +1,125 @@
+//! END-TO-END driver (DESIGN.md §4): the full three-layer stack on a real
+//! workload.
+//!
+//! 1. loads the AOT artifacts produced by `make artifacts` — each conv
+//!    layer is a Pallas im2col+GEMM kernel lowered through JAX to HLO text;
+//! 2. builds a heterogeneous 4-EP platform (C2) with emulated EP service
+//!    rates calibrated from the analytic chiplet model;
+//! 3. generates the Algorithm-1 seed, then runs Algorithm-2 online tuning
+//!    against *measured* throughput of the live threaded pipeline (one
+//!    worker per stage, each with its own PJRT CPU client);
+//! 4. serves a 200-image streaming workload on the tuned configuration and
+//!    reports throughput/latency before vs after tuning.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use anyhow::{Context, Result};
+use shisha::coordinator::{EpEmulation, OnlineTuner, PipelineRuntime};
+use shisha::explore::shisha::{generate_seed, AssignmentChoice};
+use shisha::metrics::table::{f, Table};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::platform::configs;
+use shisha::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let workload: usize = 200;
+
+    // --- load artifacts and cross-check against the rust layer table ----
+    let manifest = Manifest::load(&dir).context("run `make artifacts` first")?;
+    let net = networks::synthnet_small();
+    manifest.check_against(&net)?;
+    println!(
+        "artifacts: {} modules for {} ({} layers), hash {}",
+        manifest.artifacts.len(),
+        manifest.network,
+        manifest.layers,
+        manifest.layer_hash
+    );
+
+    // --- heterogeneous platform (emulated service rates) ----------------
+    let plat = configs::c2();
+    let model = CostModel::default();
+    let emu = EpEmulation::from_model(&net, &plat, &model);
+    println!("platform {}: EP slowdown factors {:?}", plat.name, emu.factors);
+    let rt = PipelineRuntime::new(manifest, emu)?;
+
+    // --- Algorithm 1 seed ------------------------------------------------
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+    println!("\nAlgorithm-1 seed: {}", seed.config.describe());
+    // warm-up run (PJRT compilation happens on first use per worker)
+    let _ = rt.measure(&seed.config, 8)?;
+    let seed_run = rt.measure(&seed.config, 64)?;
+    println!("seed measured throughput: {:.1} img/s", seed_run.throughput);
+
+    // --- Algorithm 2 online tuning against live measurements -------------
+    let mut tuner = OnlineTuner::new(&rt, &plat);
+    tuner.alpha = 6;
+    tuner.probe_inputs = 32;
+    let report = tuner.tune(seed.config.clone())?;
+    let mut trials = Table::new(["trial", "config", "img/s", "slowest stage (ms)"]);
+    for t in &report.trials {
+        trials.row([
+            t.trial.to_string(),
+            t.config.describe(),
+            f(t.throughput, 1),
+            f(t.stage_times.iter().cloned().fold(0.0, f64::max) * 1e3, 2),
+        ]);
+    }
+    println!("\nonline tuning ({} trials, {:.1}s):\n{}", report.trials.len(), report.total_wall_s, trials.to_markdown());
+
+    // --- serve the workload on the tuned configuration -------------------
+    let tuned_run = rt.measure(&report.best_config, workload)?;
+    let mut summary = Table::new(["configuration", "img/s", "workload wall (s)", "improvement"]);
+    let seed_serve = rt.measure(&seed.config, workload)?;
+    summary.row([
+        format!("seed  {}", seed.config.describe()),
+        f(seed_serve.throughput, 1),
+        f(seed_serve.wall_s, 2),
+        "1.00x".into(),
+    ]);
+    summary.row([
+        format!("tuned {}", report.best_config.describe()),
+        f(tuned_run.throughput, 1),
+        f(tuned_run.wall_s, 2),
+        format!("{:.2}x", tuned_run.throughput / seed_serve.throughput),
+    ]);
+    println!("\nserving {workload} images:\n{}", summary.to_markdown());
+
+    // --- sanity: measured ranking agrees with the analytic simulator -----
+    let db = PerfDb::build(&net, &plat, &model);
+    let sim_seed = shisha::pipeline::simulator::throughput(&net, &plat, &db, &seed.config);
+    let sim_tuned = shisha::pipeline::simulator::throughput(&net, &plat, &db, &report.best_config);
+    let consistent = report.best_config == seed.config
+        || (sim_tuned >= sim_seed) == (tuned_run.throughput >= 0.95 * seed_serve.throughput);
+    println!(
+        "\nanalytic model agrees on ranking: sim(tuned) {:.2} vs sim(seed) {:.2} img/s ({})",
+        sim_tuned,
+        sim_seed,
+        if consistent { "consistent" } else { "INCONSISTENT" }
+    );
+    assert!(
+        tuned_run.throughput >= 0.9 * seed_serve.throughput,
+        "tuning must not materially regress"
+    );
+
+    // --- open-loop serving latency (router-view, simulator-backed) -------
+    use shisha::coordinator::workload::{serve, Arrivals};
+    let tuned_eval = shisha::pipeline::simulator::evaluate(&net, &plat, &db, &report.best_config);
+    let lambda = 0.7 / tuned_eval.bottleneck_s; // 70% utilisation
+    let mut lat = Table::new(["configuration", "util", "p50 (ms)", "p99 (ms)"]);
+    for (label, cfg) in [("seed", &seed.config), ("tuned", &report.best_config)] {
+        let r = serve(&net, &plat, &db, cfg, Arrivals::Poisson(lambda), 2000, 7);
+        lat.row([
+            label.to_string(),
+            f(r.utilisation, 2),
+            f(r.p50_s * 1e3, 3),
+            f(r.p99_s * 1e3, 3),
+        ]);
+    }
+    println!("\nopen-loop Poisson serving at 70% of tuned capacity (simulated):\n{}", lat.to_markdown());
+    Ok(())
+}

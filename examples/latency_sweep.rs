@@ -1,0 +1,50 @@
+//! Interconnect study: how inter-chiplet latency AND bandwidth shape the
+//! best pipeline schedule (extends the paper's Figure 9 with a bandwidth
+//! axis — the "future work" interconnect dimension the paper motivates via
+//! Simba's heterogeneous interconnect).
+//!
+//! ```sh
+//! cargo run --release --example latency_sweep
+//! ```
+
+use shisha::explore::shisha::{ShishaExplorer, ShishaOptions};
+use shisha::explore::{Evaluator, Explorer};
+use shisha::metrics::fmt_duration;
+use shisha::metrics::table::{f, Table};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::platform::configs;
+
+fn main() {
+    let net = networks::yolov3();
+
+    let mut table = Table::new([
+        "latency",
+        "link GB/s",
+        "best throughput (img/s)",
+        "stages chosen",
+        "configs tried",
+    ]);
+    for &lat in &[1e-9, 1e-6, 1e-3, 0.1] {
+        for &bw in &[1.0, 8.0, 32.0, 128.0] {
+            let mut plat = configs::fig4_platform();
+            plat.link.latency_s = lat;
+            plat.link.bandwidth_gbs = bw;
+            let db = PerfDb::build(&net, &plat, &CostModel::default());
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+            table.row([
+                fmt_duration(lat),
+                f(bw, 0),
+                f(sol.best_throughput, 4),
+                sol.best_config.n_stages().to_string(),
+                sol.n_evals.to_string(),
+            ]);
+        }
+    }
+    println!("YOLOv3 on 8 EPs — Shisha under interconnect sweeps:\n{}", table.to_markdown());
+    println!(
+        "shape: latency ≤ 1ms is invisible (paper Fig. 9); starving bandwidth (1 GB/s)\n\
+         pushes Shisha towards fewer, fatter stages to avoid chip-to-chip transfers."
+    );
+}

@@ -1,0 +1,38 @@
+//! Quickstart: schedule a CNN pipeline on a heterogeneous chiplet platform
+//! with Shisha, in ~20 lines of library use.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use shisha::explore::shisha::{ShishaExplorer, ShishaOptions};
+use shisha::explore::{Evaluator, Explorer};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::space;
+use shisha::platform::configs;
+
+fn main() {
+    // 1. Pick a CNN and a platform (Table 3 C3: 4 fast + 2 slow EPs).
+    let net = networks::resnet50();
+    let plat = configs::c3();
+
+    // 2. Build the per-layer execution-time database (the paper queries a
+    //    gem5-generated database; we use the analytic chiplet model).
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+
+    // 3. Run Shisha: Algorithm-1 seed + Algorithm-2 online tuning (H3, α=10).
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+
+    // 4. Inspect the schedule.
+    let space = space::full_space_size(net.len(), plat.n_eps());
+    println!("network      : {} ({} layers)", net.name, net.len());
+    println!("platform     : {} ({} EPs)", plat.name, plat.n_eps());
+    println!("schedule     : {}", sol.best_config.describe());
+    println!("throughput   : {:.3} img/s", sol.best_throughput);
+    println!("configs tried: {} ({:.4}% of the design space)", sol.n_evals, 100.0 * sol.explored_fraction(space));
+    println!("online cost  : {:.2} virtual seconds", sol.virtual_time_s);
+
+    assert!(sol.best_config.validate(net.len(), &plat).is_ok());
+}

@@ -1,0 +1,131 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization *estimates*
+for the Pallas conv kernels (DESIGN.md §Hardware-Adaptation).
+
+interpret=True gives CPU-numpy timings which are NOT a TPU proxy, so the
+L1 perf pass optimises *structure*: pick GEMM block shapes that (a) fit
+the ~16 MiB/core VMEM budget with headroom for double buffering, (b) keep
+the MXU's 128×128 systolic array full, (c) minimise HBM traffic per
+output tile. This module computes those quantities per layer and chooses
+block sizes; `python -m compile.analysis` prints the tiling table that
+EXPERIMENTS.md §Perf records.
+
+MXU utilization estimate for an (M, N, K) GEMM tiled (bm, bn):
+    util = (M·N·K) / (ceil(M/bm)·ceil(N/bn) · bm·bn · K)   — pad waste only
+i.e. the fraction of issued MACs that are real work; a tile smaller than
+128 in any dimension underfills the systolic array by that ratio, which
+we fold in via eff = util · min(bm,128)/128 · min(bn,128)/128.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from . import model
+from .kernels.gemm import _pick_block, vmem_footprint_bytes
+
+#: Per-core VMEM budget (bytes) — TPU v4-class scratchpad.
+VMEM_BUDGET = 16 * 1024 * 1024
+#: Headroom factor for double buffering of input stripes.
+DOUBLE_BUFFER_FACTOR = 2.0
+#: MXU systolic array dimension.
+MXU_DIM = 128
+
+
+@dataclass(frozen=True)
+class TileChoice:
+    """Chosen tiling and its estimated quality for one layer's GEMM."""
+
+    name: str
+    m: int
+    n: int
+    k: int
+    bm: int
+    bn: int
+    vmem_bytes: int
+    mxu_eff: float
+    hbm_traffic_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        """True when the double-buffered footprint fits VMEM."""
+        return self.vmem_bytes * DOUBLE_BUFFER_FACTOR <= VMEM_BUDGET
+
+
+def mxu_efficiency(m: int, n: int, k: int, bm: int, bn: int) -> float:
+    """Fraction of issued MACs that are useful work (see module docs)."""
+    tiles = math.ceil(m / bm) * math.ceil(n / bn)
+    issued = tiles * bm * bn * k
+    util = (m * n * k) / issued
+    fill = min(bm, MXU_DIM) / MXU_DIM * min(bn, MXU_DIM) / MXU_DIM
+    return util * fill
+
+
+def hbm_traffic(m: int, n: int, k: int, bm: int, bn: int) -> int:
+    """Bytes moved HBM→VMEM per GEMM with the K-striped schedule: each
+    (bm, bn) output tile streams one (bm, K) stripe and one (K, bn) stripe,
+    and writes bm·bn once (f32)."""
+    tiles_m = math.ceil(m / bm)
+    tiles_n = math.ceil(n / bn)
+    reads = tiles_m * tiles_n * (bm * k + k * n // tiles_n)
+    return 4 * (reads + m * n)
+
+
+def choose_tile(name: str, m: int, n: int, k: int, target: int = 128) -> TileChoice:
+    """Pick the largest MXU-aligned blocks that divide the dims and fit
+    VMEM (the same `_pick_block` rule the kernel itself applies)."""
+    bm = _pick_block(m, target)
+    bn = _pick_block(n, target)
+    # shrink blocks (largest contributor first) while the double-buffered
+    # stripe footprint busts VMEM; for K so large that even 1×1 stripes
+    # don't fit, the kernel switches to the K-tiled variant — this analysis
+    # reports the striped footprint honestly and `fits` goes False.
+    while (bm > 1 or bn > 1) and vmem_footprint_bytes(m, n, k, bm, bn, None) * DOUBLE_BUFFER_FACTOR > VMEM_BUDGET:
+        if bm >= bn and bm > 1:
+            bm = _pick_block(m, bm // 2)
+        elif bn > 1:
+            bn = _pick_block(n, bn // 2)
+        else:
+            break
+    return TileChoice(
+        name=name,
+        m=m,
+        n=n,
+        k=k,
+        bm=bm,
+        bn=bn,
+        vmem_bytes=vmem_footprint_bytes(m, n, k, bm, bn, None),
+        mxu_eff=mxu_efficiency(m, n, k, bm, bn),
+        hbm_traffic_bytes=hbm_traffic(m, n, k, bm, bn),
+    )
+
+
+def layer_gemm_dims(spec: model.LayerSpec) -> tuple[int, int, int]:
+    """Darknet GEMM dims of a conv layer: M=OH·OW, N=K, K=R·S·C."""
+    oh, ow = spec.out_hw
+    return oh * ow, spec.k, spec.r * spec.s * spec.c
+
+
+def analyze(specs: list[model.LayerSpec]) -> list[TileChoice]:
+    """Tile choices for every layer."""
+    return [choose_tile(s.name, *layer_gemm_dims(s)) for s in specs]
+
+
+def main() -> None:
+    rows = analyze(model.SYNTHNET_SMALL)
+    hdr = f"{'layer':8} {'M':>6} {'N':>5} {'K':>5} {'bm':>4} {'bn':>4} {'VMEM KiB':>9} {'fits':>5} {'MXU eff':>8} {'HBM KiB':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for t in rows:
+        print(
+            f"{t.name:8} {t.m:>6} {t.n:>5} {t.k:>5} {t.bm:>4} {t.bn:>4} "
+            f"{t.vmem_bytes / 1024:>9.1f} {str(t.fits):>5} {t.mxu_eff:>8.3f} "
+            f"{t.hbm_traffic_bytes / 1024:>8.1f}"
+        )
+    worst = min(rows, key=lambda t: t.mxu_eff)
+    print(f"\nworst MXU efficiency: {worst.name} at {worst.mxu_eff:.3f} "
+          f"(N={worst.n} underfills the {MXU_DIM}-wide systolic array)")
+
+
+if __name__ == "__main__":
+    main()

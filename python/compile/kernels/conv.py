@@ -1,0 +1,47 @@
+"""L1 composition: one convolution layer = Pallas im2col + Pallas GEMM
+(+ bias + ReLU), exactly the Darknet operator decomposition the paper
+simulates (§6).
+
+This is the unit the L2 model (``compile.model``) chains into pipeline
+stages; both Pallas kernels lower (interpret=True) into the same HLO
+module as the surrounding jnp glue, so the whole layer becomes a single
+AOT artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gemm, im2col
+from .ref import out_dims
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = True,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """Pallas conv layer: ``(H,W,C),(R,S,C,K) -> (OH,OW,K)`` float32.
+
+    ``bm``/``bn`` are the GEMM output-tile block sizes (see
+    ``gemm.matmul``); they are clamped to divisors of the GEMM dims.
+    """
+    h, wdim, c = x.shape
+    r, s, c2, k = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    oh, ow = out_dims(h, wdim, r, s, stride, pad)
+    patches = im2col.im2col(x, r, s, stride, pad)  # (OH*OW, RSC)
+    out = gemm.matmul(patches, w.reshape(r * s * c, k), bm=bm, bn=bn)
+    out = out.reshape(oh, ow, k)
+    if b is not None:
+        out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out

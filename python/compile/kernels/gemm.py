@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: tiled GEMM — the compute hot-spot of the Darknet
+execution model (paper §6: every conv layer is Im2Col + GEMM).
+
+TPU-style tiling (DESIGN.md §Hardware-Adaptation): the grid walks (M, N)
+output tiles; each kernel instance owns one ``(bm, bn)`` output block in
+VMEM and contracts over K. Two variants:
+
+* :func:`matmul` — K-striped: each instance reads an ``(bm, K)`` × ``(K,
+  bn)`` stripe pair. Simplest HBM↔VMEM schedule; VMEM footprint
+  ``bm*K + K*bn + bm*bn`` floats. This is the production kernel for the
+  layer sizes the AOT path compiles (footprint table in DESIGN.md).
+* :func:`matmul_ktiled` — 3-D grid with a VMEM accumulator scratch: the
+  MXU-friendly schedule for large K where a full stripe would not fit
+  VMEM (double-buffered ``bk`` slabs).
+
+Both run under ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom call the CPU PJRT client cannot execute (/opt/xla-example README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_stripe_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: full-K stripe contraction on the MXU."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (block shapes must tile
+    the array exactly; conv layer GEMM dims are highly composite)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128) -> jax.Array:
+    """K-striped Pallas matmul: ``(M, K) @ (K, N) -> (M, N)`` in f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_stripe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_ktiled_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """K-tiled accumulation: one (bm, bn) tile accumulated over nk K-slabs
+    held in a VMEM scratch accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_ktiled(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """K-tiled Pallas matmul with a VMEM accumulator (3-D grid)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_ktiled_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int | None) -> int:
+    """Estimated VMEM bytes held live by one kernel instance (f32).
+
+    Used by the DESIGN.md tiling table and the L1 perf analysis: with the
+    K-striped schedule, footprint = bm*K + K*bn + bm*bn; with K-tiling,
+    bm*bk + bk*bn + 2*bm*bn (accumulator + output block).
+    """
+    del m, n
+    if bk is None:
+        return 4 * (bm * k + k * bn + bm * bn)
+    return 4 * (bm * bk + bk * bn + 2 * bm * bn)

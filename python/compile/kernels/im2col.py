@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: im2col patch extraction.
+
+The memory-bound half of the Darknet conv (paper §6). The grid walks
+output rows; each kernel instance loads the ``R`` input rows its output
+row needs (a dynamic slice of the pre-padded input held in ANY/HBM) and
+writes one ``(OW, R*S*C)`` block of the patch matrix.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): padding is materialised
+*outside* the kernel (a cheap fused pad in the surrounding jax function)
+so the kernel's loads are rectangular and BlockSpec-friendly; the
+per-instance VMEM footprint is ``R·Wp·C + OW·R·S·C`` floats — bounded by
+the row blocking regardless of image height.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import out_dims
+
+
+def _im2col_kernel(xp_ref, o_ref, *, r: int, s: int, stride: int, ow: int):
+    """Extract the patches of one output row.
+
+    ``xp_ref``: the full padded input (ANY memory space) — rows are
+    dynamically sliced per grid step; ``o_ref``: one (OW, R*S*C) block.
+    """
+    i = pl.program_id(0)
+    # rows [i*stride, i*stride + r) of the padded input
+    rows = xp_ref[pl.dslice(i * stride, r), :, :]  # (R, Wp, C)
+    ci = stride * jnp.arange(ow)[:, None] + jnp.arange(s)[None, :]  # (OW, S)
+    patches = rows[:, ci]  # (R, OW, S, C)
+    patches = jnp.transpose(patches, (1, 0, 2, 3))  # (OW, R, S, C)
+    c = rows.shape[-1]
+    o_ref[...] = patches.reshape(1, ow, r * s * c)
+
+
+def im2col(x: jax.Array, r: int, s: int, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Pallas im2col: ``(H, W, C) -> (OH*OW, R*S*C)`` (f32)."""
+    h, w, c = x.shape
+    oh, ow = out_dims(h, w, r, s, stride, pad)
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    hp, wp = h + 2 * pad, w + 2 * pad
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, r=r, s=s, stride=stride, ow=ow),
+        grid=(oh,),
+        in_specs=[
+            # whole padded input visible to every instance; rows sliced
+            # dynamically inside the kernel
+            pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, r * s * c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, r * s * c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out.reshape(oh * ow, r * s * c)

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package is validated against these references
+at build time (pytest) before its enclosing model is AOT-lowered. The
+references are written with plain jnp ops (no pallas, no custom calls) so
+they lower to vanilla HLO everywhere.
+
+Layouts (batch size 1 throughout — the pipeline runtime streams single
+images, which is the paper's inference scenario):
+
+* activations: ``(H, W, C)`` float32
+* conv weights: ``(R, S, C, K)`` float32
+* im2col patches: ``(OH * OW, R * S * C)`` — row-major over output pixels,
+  patch order (r, s, c), matching Darknet's GEMM formulation (paper §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def out_dims(h: int, w: int, r: int, s: int, stride: int, pad: int) -> tuple[int, int]:
+    """Output spatial dims of a convolution (same formula as rust Layer)."""
+    oh = (h + 2 * pad - r) // stride + 1
+    ow = (w + 2 * pad - s) // stride + 1
+    return oh, ow
+
+
+def im2col_ref(x: jax.Array, r: int, s: int, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Pure-jnp im2col: ``(H, W, C) -> (OH*OW, R*S*C)``."""
+    h, w, c = x.shape
+    oh, ow = out_dims(h, w, r, s, stride, pad)
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    # gather indices: output pixel (i, j) reads rows i*stride + 0..r,
+    # cols j*stride + 0..s
+    ri = stride * jnp.arange(oh)[:, None] + jnp.arange(r)[None, :]  # (OH, R)
+    ci = stride * jnp.arange(ow)[:, None] + jnp.arange(s)[None, :]  # (OW, S)
+    rows = xp[ri]  # (OH, R, Wp, C)
+    patches = rows[:, :, ci]  # (OH, R, OW, S, C)
+    patches = jnp.transpose(patches, (0, 2, 1, 3, 4))  # (OH, OW, R, S, C)
+    return patches.reshape(oh * ow, r * s * c)
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference matmul in f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jax.Array:
+    """Reference conv layer via im2col + GEMM: ``(H,W,C),(R,S,C,K) -> (OH,OW,K)``."""
+    h, wdim, c = x.shape
+    r, s, c2, k = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    oh, ow = out_dims(h, wdim, r, s, stride, pad)
+    patches = im2col_ref(x, r, s, stride, pad)  # (OH*OW, RSC)
+    out = gemm_ref(patches, w.reshape(r * s * c, k))  # (OH*OW, K)
+    out = out.reshape(oh, ow, k)
+    if b is not None:
+        out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_lax(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jax.Array:
+    """Second, independent oracle using lax.conv_general_dilated (used by the
+    test suite to cross-check ``conv2d_ref`` itself)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],  # NHWC
+        w,  # HWIO
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,136 @@
+"""L2 — the JAX model: CNN layers and pipeline-stage forward functions.
+
+This is the build-time model definition. Each layer calls the L1 Pallas
+kernels (``compile.kernels``); ``compile.aot`` lowers the functions defined
+here to HLO text, which the rust runtime (``rust/src/runtime``) loads and
+executes through PJRT. Python never runs at inference time.
+
+``SYNTHNET_SMALL`` mirrors ``rust/src/model/synthnet.rs::synthnet_small``
+exactly — the rust side asserts the shapes match through the generated
+artifact manifest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv
+from .kernels.ref import out_dims
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One conv layer: mirrors the rust `Layer` geometry fields."""
+
+    name: str
+    h: int
+    w: int
+    c: int
+    r: int
+    s: int
+    k: int
+    stride: int = 1
+    pad: int = 0
+    relu: bool = True
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        """Output spatial dims."""
+        return out_dims(self.h, self.w, self.r, self.s, self.stride, self.pad)
+
+    @property
+    def in_shape(self) -> tuple[int, int, int]:
+        """Input activation shape (H, W, C)."""
+        return (self.h, self.w, self.c)
+
+    @property
+    def out_shape(self) -> tuple[int, int, int]:
+        """Output activation shape (OH, OW, K)."""
+        oh, ow = self.out_hw
+        return (oh, ow, self.k)
+
+    @property
+    def w_shape(self) -> tuple[int, int, int, int]:
+        """Weight shape (R, S, C, K)."""
+        return (self.r, self.s, self.c, self.k)
+
+
+#: The small end-to-end network the PJRT example streams. MUST stay in
+#: lock-step with rust synthnet_small().
+SYNTHNET_SMALL: list[LayerSpec] = [
+    LayerSpec("s0", 32, 32, 3, 3, 3, 16, 1, 1),
+    LayerSpec("s1", 32, 32, 16, 3, 3, 32, 2, 1),
+    LayerSpec("s2", 16, 16, 32, 3, 3, 32, 1, 1),
+    LayerSpec("s3", 16, 16, 32, 3, 3, 64, 2, 1),
+    LayerSpec("s4", 8, 8, 64, 3, 3, 64, 1, 1),
+    LayerSpec("s5", 8, 8, 64, 1, 1, 32, 1, 0),
+]
+
+
+def validate_chain(specs: list[LayerSpec]) -> None:
+    """Assert each layer's input matches its predecessor's output."""
+    for a, b in zip(specs, specs[1:]):
+        assert a.out_shape == b.in_shape, f"{a.name} -> {b.name}: {a.out_shape} vs {b.in_shape}"
+
+
+def layer_forward(spec: LayerSpec):
+    """Forward function of one layer: ``f(x, w, b) -> y`` (Pallas conv)."""
+
+    def f(x, w, b):
+        return conv.conv2d(x, w, b, stride=spec.stride, pad=spec.pad, relu=spec.relu)
+
+    f.__name__ = f"layer_{spec.name}"
+    return f
+
+
+def stage_forward(specs: list[LayerSpec]):
+    """Forward of a contiguous pipeline stage: chains its layers into one
+    jit-able function ``f(x, w0, b0, w1, b1, ...) -> y``. Lowered as a
+    single fused HLO module — the L2 fusion the perf pass compares against
+    per-layer execution."""
+    validate_chain(specs)
+
+    def f(x, *params):
+        assert len(params) == 2 * len(specs)
+        for i, spec in enumerate(specs):
+            x = layer_forward(spec)(x, params[2 * i], params[2 * i + 1])
+        return x
+
+    f.__name__ = "stage_" + "_".join(s.name for s in specs)
+    return f
+
+
+def init_params(specs: list[LayerSpec], seed: int = 0) -> list[np.ndarray]:
+    """He-initialised weights + zero biases, flat [w0, b0, w1, b1, ...]."""
+    rng = np.random.RandomState(seed)
+    params: list[np.ndarray] = []
+    for spec in specs:
+        fan_in = spec.r * spec.s * spec.c
+        w = rng.randn(*spec.w_shape).astype(np.float32) * np.sqrt(2.0 / fan_in)
+        b = np.zeros((spec.k,), np.float32)
+        params += [w, b]
+    return params
+
+
+def example_args(spec: LayerSpec):
+    """ShapeDtypeStructs for AOT-lowering one layer."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct(spec.in_shape, f32),
+        jax.ShapeDtypeStruct(spec.w_shape, f32),
+        jax.ShapeDtypeStruct((spec.k,), f32),
+    )
+
+
+def stage_example_args(specs: list[LayerSpec]):
+    """ShapeDtypeStructs for AOT-lowering a stage function."""
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct(specs[0].in_shape, f32)]
+    for spec in specs:
+        args.append(jax.ShapeDtypeStruct(spec.w_shape, f32))
+        args.append(jax.ShapeDtypeStruct((spec.k,), f32))
+    return tuple(args)

@@ -1,0 +1,57 @@
+"""Tests for the L1 tiling analysis (compile.analysis)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import analysis, model
+
+
+def test_every_layer_fits_vmem():
+    for t in analysis.analyze(model.SYNTHNET_SMALL):
+        assert t.fits, f"{t.name}: {t.vmem_bytes} bytes with double buffering"
+
+
+def test_blocks_divide_dims():
+    for t in analysis.analyze(model.SYNTHNET_SMALL):
+        assert t.m % t.bm == 0
+        assert t.n % t.bn == 0
+
+
+def test_mxu_efficiency_bounds():
+    for t in analysis.analyze(model.SYNTHNET_SMALL):
+        assert 0.0 < t.mxu_eff <= 1.0
+
+
+def test_full_mxu_tile_is_perfect():
+    # A 1024x128x512 GEMM tiles perfectly at 128x128.
+    t = analysis.choose_tile("perfect", 1024, 128, 512)
+    assert (t.bm, t.bn) == (128, 128)
+    assert t.mxu_eff == 1.0
+
+
+def test_small_n_underfills_mxu():
+    # N=16 can fill only 16/128 of the array width.
+    t = analysis.choose_tile("narrow", 1024, 16, 512)
+    assert t.mxu_eff <= 16 / 128 + 1e-9
+
+
+def test_vmem_pressure_shrinks_blocks():
+    # Large K forces blocks down so the stripes fit.
+    t = analysis.choose_tile("big_k", 4096, 128, 1 << 16)
+    assert t.fits
+    assert t.bm < 128 or t.bn < 128
+
+
+def test_pathological_k_reports_unfit():
+    # K so large even 1x1 striping busts VMEM: analysis must say so
+    # (the kernel would use the K-tiled variant there).
+    t = analysis.choose_tile("huge_k", 4096, 128, 1 << 21)
+    assert not t.fits
+
+
+def test_hbm_traffic_grows_with_smaller_tiles():
+    big = analysis.choose_tile("big", 1024, 1024, 256, target=128)
+    small = analysis.choose_tile("small", 1024, 1024, 256, target=32)
+    assert small.hbm_traffic_bytes > big.hbm_traffic_bytes

@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal of the build path: every kernel that
+ends up inside an AOT artifact is swept here over shapes, strides,
+paddings and block sizes, hypothesis-style via parametrized grids plus a
+seeded random fuzz sweep.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import conv, gemm, im2col, ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- GEMM ----
+
+GEMM_SHAPES = [
+    (1, 1, 1),
+    (8, 8, 8),
+    (64, 32, 48),
+    (128, 128, 128),
+    (100, 36, 27),  # non-power-of-two (conv-like dims)
+    (256, 16, 144),
+    (1024, 32, 27),  # synthnet_small s0 gemm
+]
+
+
+@pytest.mark.parametrize("m,n,k", GEMM_SHAPES)
+def test_gemm_matches_ref(m, n, k):
+    x, y = rand((m, k), 0), rand((k, n), 1)
+    out = gemm.matmul(x, y)
+    np.testing.assert_allclose(out, ref.gemm_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,k", GEMM_SHAPES)
+def test_gemm_ktiled_matches_ref(m, n, k):
+    x, y = rand((m, k), 2), rand((k, n), 3)
+    out = gemm.matmul_ktiled(x, y)
+    np.testing.assert_allclose(out, ref.gemm_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 64), (128, 128), (1, 1)])
+def test_gemm_block_size_invariance(bm, bn):
+    """Result must not depend on the tiling (pure schedule change)."""
+    x, y = rand((64, 48), 4), rand((48, 32), 5)
+    out = gemm.matmul(x, y, bm=bm, bn=bn)
+    np.testing.assert_allclose(out, ref.gemm_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bk", [8, 16, 48])
+def test_gemm_ktile_size_invariance(bk):
+    x, y = rand((32, 48), 6), rand((48, 16), 7)
+    out = gemm.matmul_ktiled(x, y, bm=16, bn=16, bk=bk)
+    np.testing.assert_allclose(out, ref.gemm_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_fuzz_sweep():
+    """Seeded random shape fuzz (hypothesis substitute)."""
+    rng = np.random.RandomState(42)
+    for case in range(25):
+        m, n, k = rng.randint(1, 96, 3)
+        x, y = rand((m, k), 100 + case), rand((k, n), 200 + case)
+        np.testing.assert_allclose(
+            gemm.matmul(x, y), ref.gemm_ref(x, y), rtol=1e-4, atol=1e-4,
+            err_msg=f"case {case}: {m}x{k}@{k}x{n}",
+        )
+
+
+def test_gemm_identity():
+    x = rand((16, 16), 8)
+    np.testing.assert_allclose(gemm.matmul(x, jnp.eye(16)), x, rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_rejects_mismatch():
+    with pytest.raises(AssertionError):
+        gemm.matmul(rand((4, 5), 0), rand((6, 4), 1))
+
+
+def test_vmem_footprint_model():
+    # striped: bm*K + K*bn + bm*bn floats
+    assert gemm.vmem_footprint_bytes(0, 0, 256, 128, 128, None) == 4 * (128 * 256 * 2 + 128 * 128)
+    # k-tiled smaller for large K
+    big_k = 8192
+    striped = gemm.vmem_footprint_bytes(0, 0, big_k, 128, 128, None)
+    tiled = gemm.vmem_footprint_bytes(0, 0, big_k, 128, 128, 512)
+    assert tiled < striped
+
+
+# -------------------------------------------------------------- im2col ----
+
+IM2COL_CASES = [
+    # (h, w, c, r, s, stride, pad)
+    (8, 8, 3, 3, 3, 1, 1),
+    (8, 8, 3, 3, 3, 2, 1),
+    (8, 8, 1, 1, 1, 1, 0),
+    (12, 12, 4, 5, 5, 1, 2),
+    (9, 9, 2, 3, 3, 2, 0),
+    (32, 32, 3, 3, 3, 1, 1),   # synthnet_small s0
+    (16, 16, 32, 3, 3, 1, 1),  # synthnet_small s2
+    (7, 7, 8, 7, 7, 1, 3),
+    (5, 5, 3, 5, 5, 1, 0),     # full-image kernel
+]
+
+
+@pytest.mark.parametrize("h,w,c,r,s,stride,pad", IM2COL_CASES)
+def test_im2col_matches_ref(h, w, c, r, s, stride, pad):
+    x = rand((h, w, c), h * 31 + c)
+    out = im2col.im2col(x, r, s, stride, pad)
+    np.testing.assert_allclose(out, ref.im2col_ref(x, r, s, stride, pad), rtol=0, atol=0)
+
+
+def test_im2col_is_exact_copy():
+    """im2col only moves data — must be bit-exact, no arithmetic."""
+    x = rand((10, 10, 3), 9)
+    a = np.asarray(im2col.im2col(x, 3, 3, 1, 1))
+    b = np.asarray(ref.im2col_ref(x, 3, 3, 1, 1))
+    assert (a == b).all()
+
+
+def test_im2col_identity_1x1():
+    x = rand((6, 6, 5), 10)
+    out = im2col.im2col(x, 1, 1, 1, 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x).reshape(36, 5))
+
+
+def test_im2col_fuzz_sweep():
+    rng = np.random.RandomState(7)
+    for case in range(20):
+        h = int(rng.randint(4, 20))
+        w = int(rng.randint(4, 20))
+        c = int(rng.randint(1, 8))
+        r = int(rng.choice([1, 3, 5]))
+        s = r
+        stride = int(rng.choice([1, 2]))
+        pad = r // 2 if rng.rand() < 0.7 else 0
+        if (h + 2 * pad - r) < 0 or (w + 2 * pad - s) < 0:
+            continue
+        x = rand((h, w, c), 300 + case)
+        np.testing.assert_array_equal(
+            np.asarray(im2col.im2col(x, r, s, stride, pad)),
+            np.asarray(ref.im2col_ref(x, r, s, stride, pad)),
+            err_msg=f"case {case}: h={h} w={w} c={c} r={r} stride={stride} pad={pad}",
+        )
+
+
+# ---------------------------------------------------------------- conv ----
+
+CONV_CASES = [
+    (8, 8, 3, 3, 3, 4, 1, 1),
+    (8, 8, 3, 3, 3, 4, 2, 1),
+    (16, 16, 8, 1, 1, 16, 1, 0),
+    (12, 12, 4, 5, 5, 8, 1, 2),
+    (32, 32, 3, 3, 3, 16, 1, 1),  # synthnet_small s0
+    (8, 8, 64, 1, 1, 32, 1, 0),   # synthnet_small s5
+]
+
+
+@pytest.mark.parametrize("h,w,c,r,s,k,stride,pad", CONV_CASES)
+def test_conv_matches_both_oracles(h, w, c, r, s, k, stride, pad):
+    x = rand((h, w, c), 11)
+    wt = rand((r, s, c, k), 12)
+    b = rand((k,), 13)
+    out = conv.conv2d(x, wt, b, stride=stride, pad=pad, relu=True)
+    expect1 = ref.conv2d_ref(x, wt, b, stride=stride, pad=pad, relu=True)
+    expect2 = ref.conv2d_lax(x, wt, b, stride=stride, pad=pad, relu=True)
+    np.testing.assert_allclose(out, expect1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out, expect2, rtol=1e-4, atol=1e-4)
+
+
+def test_ref_oracles_agree():
+    """Cross-check the two independent references against each other."""
+    x = rand((14, 14, 6), 14)
+    wt = rand((3, 3, 6, 10), 15)
+    a = ref.conv2d_ref(x, wt, None, stride=2, pad=1)
+    b = ref.conv2d_lax(x, wt, None, stride=2, pad=1)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_relu_clamps():
+    x = rand((6, 6, 2), 16)
+    wt = rand((3, 3, 2, 4), 17)
+    out = conv.conv2d(x, wt, None, stride=1, pad=1, relu=True)
+    assert float(jnp.min(out)) >= 0.0
+
+
+def test_conv_no_relu_has_negatives():
+    x = rand((6, 6, 2), 16)
+    wt = rand((3, 3, 2, 4), 17)
+    out = conv.conv2d(x, wt, None, stride=1, pad=1, relu=False)
+    assert float(jnp.min(out)) < 0.0
+
+
+def test_conv_bias_applied():
+    x = rand((6, 6, 2), 18)
+    wt = jnp.zeros((1, 1, 2, 3), jnp.float32)
+    b = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    out = conv.conv2d(x, wt, b, relu=False)
+    np.testing.assert_allclose(out, jnp.broadcast_to(b, (6, 6, 3)), rtol=0, atol=0)

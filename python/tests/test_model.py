@@ -1,0 +1,91 @@
+"""L2 correctness: stage forwards, shape chaining, parameter handling."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_synthnet_small_chain_valid():
+    model.validate_chain(model.SYNTHNET_SMALL)
+
+
+def test_synthnet_small_matches_rust_table():
+    """Geometry must mirror rust synthnet_small() exactly."""
+    want = [
+        ("s0", 32, 32, 3, 3, 3, 16, 1, 1),
+        ("s1", 32, 32, 16, 3, 3, 32, 2, 1),
+        ("s2", 16, 16, 32, 3, 3, 32, 1, 1),
+        ("s3", 16, 16, 32, 3, 3, 64, 2, 1),
+        ("s4", 8, 8, 64, 3, 3, 64, 1, 1),
+        ("s5", 8, 8, 64, 1, 1, 32, 1, 0),
+    ]
+    got = [
+        (s.name, s.h, s.w, s.c, s.r, s.s, s.k, s.stride, s.pad)
+        for s in model.SYNTHNET_SMALL
+    ]
+    assert got == want
+
+
+def test_layer_forward_matches_ref():
+    spec = model.SYNTHNET_SMALL[0]
+    params = model.init_params([spec], seed=1)
+    x = jnp.asarray(np.random.RandomState(0).randn(*spec.in_shape).astype(np.float32))
+    out = model.layer_forward(spec)(x, params[0], params[1])
+    expect = ref.conv2d_lax(x, params[0], params[1], spec.stride, spec.pad, relu=True)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+    assert out.shape == spec.out_shape
+
+
+@pytest.mark.parametrize("lo,hi", [(0, 2), (1, 4), (0, 6), (4, 6)])
+def test_stage_forward_equals_layer_chain(lo, hi):
+    specs = model.SYNTHNET_SMALL[lo:hi]
+    params = model.init_params(specs, seed=2)
+    x = jnp.asarray(np.random.RandomState(3).randn(*specs[0].in_shape).astype(np.float32))
+    fused = model.stage_forward(specs)(x, *params)
+    y = x
+    for i, s in enumerate(specs):
+        y = model.layer_forward(s)(y, params[2 * i], params[2 * i + 1])
+    np.testing.assert_allclose(fused, y, rtol=1e-5, atol=1e-5)
+    assert fused.shape == specs[-1].out_shape
+
+
+def test_stage_forward_rejects_broken_chain():
+    bad = [model.SYNTHNET_SMALL[0], model.SYNTHNET_SMALL[3]]
+    with pytest.raises(AssertionError):
+        model.stage_forward(bad)
+
+
+def test_init_params_shapes_and_determinism():
+    specs = model.SYNTHNET_SMALL
+    p1 = model.init_params(specs, seed=5)
+    p2 = model.init_params(specs, seed=5)
+    assert len(p1) == 2 * len(specs)
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    for i, s in enumerate(specs):
+        assert p1[2 * i].shape == s.w_shape
+        assert p1[2 * i + 1].shape == (s.k,)
+
+
+def test_example_args_match_forward():
+    spec = model.SYNTHNET_SMALL[2]
+    args = model.example_args(spec)
+    lowered = jax.jit(model.layer_forward(spec)).lower(*args)
+    assert lowered is not None
+
+
+def test_whole_net_output_shape():
+    specs = model.SYNTHNET_SMALL
+    params = model.init_params(specs)
+    x = jnp.zeros(specs[0].in_shape, jnp.float32)
+    out = model.stage_forward(specs)(x, *params)
+    assert out.shape == (8, 8, 32)

@@ -1,0 +1,161 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Seed merging** — Algorithm 1's lightest-neighbour merging vs a
+//!    naive equal-layer split (both RankW-assigned): the merge should
+//!    balance Eq.(1) weight better and seed closer to the optimum.
+//! 2. **Scheduling objective** — throughput-optimal vs parallel-cost-
+//!    optimal schedules (§2's observation lifted to pipelines).
+//! 3. **Batching** — image throughput and schedule shape vs batch size.
+//! 4. **Mesh locality** — Shisha on an 8-chiplet mesh with high per-hop
+//!    latency, with and without locality-aware EP ordering.
+
+use shisha::explore::shisha::{generate_seed, tune, AssignmentChoice, BalancingChoice};
+use shisha::explore::Evaluator;
+use shisha::metrics::table::{f, Table};
+use shisha::model::networks;
+use shisha::perfdb::{batch, CostModel, PerfDb};
+use shisha::pipeline::{objective, simulator, space, PipelineConfig};
+use shisha::platform::{configs, MeshTopology};
+
+fn equal_split_seed(l: usize, n: usize) -> Vec<usize> {
+    let base = l / n;
+    let extra = l % n;
+    (0..n).map(|i| base + usize::from(i < extra)).collect()
+}
+
+fn main() {
+    let model = CostModel::default();
+
+    // ----- 1. seed merging ablation ------------------------------------
+    let mut t1 = Table::new([
+        "network",
+        "platform",
+        "Alg.1 seed tp",
+        "equal-split seed tp",
+        "Alg.1 tuned tp",
+        "equal-split tuned tp",
+    ]);
+    for net_name in ["resnet50", "yolov3", "synthnet"] {
+        let net = networks::by_name(net_name).unwrap();
+        for plat in [configs::c2(), configs::c5()] {
+            let db = PerfDb::build(&net, &plat, &model);
+            let alg1 = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+            let n = alg1.config.n_stages();
+            let eq = PipelineConfig::new(equal_split_seed(net.len(), n), alg1.config.assignment.clone());
+            let tp_alg1 = simulator::throughput(&net, &plat, &db, &alg1.config);
+            let tp_eq = simulator::throughput(&net, &plat, &db, &eq);
+            let tuned = |seed: PipelineConfig| {
+                let mut eval = Evaluator::new(&net, &plat, &db);
+                tune(&mut eval, seed, BalancingChoice::NlFep, 10);
+                eval.best().unwrap().1
+            };
+            t1.row([
+                net_name.to_string(),
+                plat.name.clone(),
+                f(tp_alg1, 4),
+                f(tp_eq, 4),
+                f(tuned(alg1.config.clone()), 4),
+                f(tuned(eq), 4),
+            ]);
+        }
+    }
+    println!("Ablation 1 — Algorithm-1 merging vs equal split:\n{}", t1.to_markdown());
+    t1.write_csv("results/ablation_seed_merge.csv").unwrap();
+
+    // ----- 2. objective ablation ----------------------------------------
+    let net = networks::synthnet();
+    let plat = configs::c2();
+    let db = PerfDb::build(&net, &plat, &model);
+    let eps: Vec<usize> = (0..plat.n_eps()).collect();
+    let mut best_tp: Option<(PipelineConfig, f64)> = None;
+    let mut best_cost: Option<(PipelineConfig, f64)> = None;
+    for cfg in space::enumerate_all(net.len(), &eps, 4) {
+        let tp = simulator::throughput(&net, &plat, &db, &cfg);
+        let c = objective::parallel_cost(&net, &plat, &db, &cfg);
+        if best_tp.as_ref().map_or(true, |(_, b)| tp > *b) {
+            best_tp = Some((cfg.clone(), tp));
+        }
+        if best_cost.as_ref().map_or(true, |(_, b)| c < *b) {
+            best_cost = Some((cfg, c));
+        }
+    }
+    let (tp_cfg, tp_val) = best_tp.unwrap();
+    let (c_cfg, c_val) = best_cost.unwrap();
+    let mut t2 = Table::new(["objective", "config", "throughput", "parallel cost (core*s)", "cores"]);
+    t2.row([
+        "max throughput".to_string(),
+        tp_cfg.describe(),
+        f(tp_val, 4),
+        f(objective::parallel_cost(&net, &plat, &db, &tp_cfg), 4),
+        objective::cores_used(&plat, &tp_cfg).to_string(),
+    ]);
+    t2.row([
+        "min parallel cost".to_string(),
+        c_cfg.describe(),
+        f(simulator::throughput(&net, &plat, &db, &c_cfg), 4),
+        f(c_val, 4),
+        objective::cores_used(&plat, &c_cfg).to_string(),
+    ]);
+    println!("Ablation 2 — objective trade-off (SynthNet/C2, ES depth<=4):\n{}", t2.to_markdown());
+    assert_ne!(tp_cfg, c_cfg, "§2: time-optimal != cost-optimal");
+    t2.write_csv("results/ablation_objective.csv").unwrap();
+
+    // ----- 3. batching ---------------------------------------------------
+    let mut t3 = Table::new(["batch", "img/s (tuned cfg)", "slot latency (ms)"]);
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+    let cfg = {
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        tune(&mut eval, seed.config, BalancingChoice::NlFep, 10);
+        eval.best().unwrap().0.clone()
+    };
+    for b in [1u32, 2, 4, 8, 16, 32] {
+        let tp = batch::throughput_batched(&net, &plat, &model, &cfg, b);
+        let slot = b as f64 / tp * 1e3;
+        t3.row([b.to_string(), f(tp, 3), f(slot, 3)]);
+    }
+    println!("Ablation 3 — batching (fixed tuned schedule):\n{}", t3.to_markdown());
+    t3.write_csv("results/ablation_batching.csv").unwrap();
+
+    // ----- 4. mesh locality ----------------------------------------------
+    let net = networks::yolov3();
+    let mut mesh_plat = configs::c5();
+    mesh_plat.topology = Some(MeshTopology::for_chiplets(8));
+    mesh_plat.link.latency_s = 2e-3; // latency-dominated regime (Fig 9 knee)
+    let db_mesh = PerfDb::build(&net, &mesh_plat, &model);
+    let rank_seed = generate_seed(&net, &mesh_plat, AssignmentChoice::RankW, 0);
+    // locality-aware variant: keep WHICH perf class every stage received
+    // (the Rank_w weight matching), but hand each class's EPs out along the
+    // serpentine mesh walk so consecutive same-class stages are adjacent.
+    let mesh = mesh_plat.topology.unwrap();
+    let serp = mesh.serpentine(8);
+    let pos = |ep: usize| serp.iter().position(|&c| c == mesh_plat.eps[ep].chiplet).unwrap();
+    let mut local_cfg = rank_seed.config.clone();
+    let mut classes: std::collections::BTreeMap<u64, Vec<usize>> = Default::default();
+    for (si, &ep) in rank_seed.config.assignment.iter().enumerate() {
+        classes.entry((mesh_plat.eps[ep].perf_score() * 1e6) as u64).or_default().push(si);
+    }
+    for stages in classes.into_values() {
+        let mut eps: Vec<usize> =
+            stages.iter().map(|&si| rank_seed.config.assignment[si]).collect();
+        eps.sort_by_key(|&e| pos(e));
+        for (si, ep) in stages.into_iter().zip(eps) {
+            local_cfg.assignment[si] = ep;
+        }
+    }
+    let tune_from = |seed: PipelineConfig| {
+        let mut eval = Evaluator::new(&net, &mesh_plat, &db_mesh);
+        tune(&mut eval, seed, BalancingChoice::NlFep, 10);
+        eval.best().unwrap().clone()
+    };
+    let (plain_cfg, plain) = tune_from(rank_seed.config.clone());
+    let (loc_cfg, local) = tune_from(local_cfg);
+    let mut t4 = Table::new(["seed ordering", "tuned throughput (img/s)", "config"]);
+    t4.row(["rank only".to_string(), f(plain, 4), plain_cfg.describe()]);
+    t4.row(["rank + mesh locality".to_string(), f(local, 4), loc_cfg.describe()]);
+    println!(
+        "Ablation 4 — mesh locality at 2 ms/hop (YOLOv3, 8-chiplet mesh):\n{}",
+        t4.to_markdown()
+    );
+    println!("locality-aware / rank-only = {:.3}x", local / plain);
+    t4.write_csv("results/ablation_locality.csv").unwrap();
+}

@@ -1,0 +1,65 @@
+//! Figure 2 — heatmaps of (a,b) execution time and (c,d) parallel cost of
+//! STREAM Triad over the thread grid MCDRAM ∈ {16,32,64,128} × DDR ∈
+//! {2,4,8,16}, for the 15+4 GB (19 GB) and 15+16 GB (31 GB) splits.
+//!
+//! Expected shape (paper §2): each data split has a *different* optimal
+//! thread assignment; the time-optimal cell is not the parallel-cost
+//! optimal cell; fewer threads can beat the maximum.
+
+use shisha::metrics::table::{f, Table};
+use shisha::stream::{DualMemorySimulator, DDR_THREADS, HBM_THREADS};
+
+fn heatmap(sim: &DualMemorySimulator, total: f64, cost: bool) -> Table {
+    let mut t = Table::new(
+        std::iter::once("HBM\\DDR threads".to_string())
+            .chain(DDR_THREADS.iter().map(|d| d.to_string()))
+            .collect::<Vec<_>>(),
+    );
+    for &ht in &HBM_THREADS {
+        let mut row = vec![ht.to_string()];
+        for &dt in &DDR_THREADS {
+            let r = sim.split(total, 15.0, ht, dt);
+            row.push(f(if cost { r.parallel_cost } else { r.time_s }, 3));
+        }
+        t.row(row);
+    }
+    t
+}
+
+fn argmin(sim: &DualMemorySimulator, total: f64, cost: bool) -> (u32, u32, f64) {
+    let mut best = (0, 0, f64::INFINITY);
+    for &ht in &HBM_THREADS {
+        for &dt in &DDR_THREADS {
+            let r = sim.split(total, 15.0, ht, dt);
+            let v = if cost { r.parallel_cost } else { r.time_s };
+            if v < best.2 {
+                best = (ht, dt, v);
+            }
+        }
+    }
+    best
+}
+
+fn main() {
+    let sim = DualMemorySimulator::default();
+    let mut any_divergence = false;
+    for (label, total) in [("19 GB (15+4)", 19.0), ("31 GB (15+16)", 31.0)] {
+        let tmap = heatmap(&sim, total, false);
+        let cmap = heatmap(&sim, total, true);
+        println!("Figure 2 — execution time [s], {label}:\n{}", tmap.to_markdown());
+        println!("Figure 2 — parallel cost [thread*s], {label}:\n{}", cmap.to_markdown());
+        let (ht, dt, _) = argmin(&sim, total, false);
+        let (ch, cd, _) = argmin(&sim, total, true);
+        println!("time-optimal: HBM {ht} + DDR {dt}; cost-optimal: HBM {ch} + DDR {cd}\n");
+        any_divergence |= (ht, dt) != (ch, cd);
+        tmap.write_csv(format!("results/fig2_time_{}gb.csv", total as u32)).unwrap();
+        cmap.write_csv(format!("results/fig2_cost_{}gb.csv", total as u32)).unwrap();
+    }
+    // paper shape (§2): "an optimal distribution does not always lead to a
+    // minimal parallel cost" — must diverge for at least one data split.
+    assert!(any_divergence, "time-opt must differ from cost-opt somewhere");
+    let a = argmin(&sim, 19.0, false);
+    let b = argmin(&sim, 31.0, false);
+    assert_ne!((a.0, a.1), (b.0, b.1), "paper shape: optimum moves with the split");
+    println!("wrote results/fig2_*.csv");
+}

@@ -1,0 +1,76 @@
+//! Figure 5 — solution quality: throughput of every search scheme
+//! normalized to Exhaustive Search, on a 4-EP system (ES feasible there),
+//! for ResNet50, YOLOv3 and SynthNet (paper §7.3).
+//!
+//! Expected shape: Shisha ≈ 1.0 (paper: equal to ES by exploring ~0.1% of
+//! the space for the big CNNs, ~2.5% for SynthNet).
+
+use shisha::explore::exhaustive::{EsOptions, ExhaustiveSearch};
+use shisha::explore::genetic::{GaOptions, Genetic};
+use shisha::explore::hill_climbing::{HcOptions, HillClimbing};
+use shisha::explore::pipe_search::{PipeSearch, PsOptions};
+use shisha::explore::random_walk::{RandomWalk, RwOptions};
+use shisha::explore::shisha::ShishaAuto;
+use shisha::explore::simulated_annealing::{SaOptions, SimulatedAnnealing};
+use shisha::explore::{EvalOptions, Evaluator, Explorer, Solution};
+use shisha::metrics::table::{f, Table};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::space;
+use shisha::platform::configs;
+
+fn main() {
+    let plat = configs::fig5_platform();
+    let mut table = Table::new([
+        "network",
+        "algorithm",
+        "throughput (img/s)",
+        "normalized to ES",
+        "configs tried",
+        "explored %",
+    ]);
+
+    for net_name in ["resnet50", "yolov3", "synthnet"] {
+        let net = networks::by_name(net_name).unwrap();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let space = space::full_space_size(net.len(), plat.n_eps());
+
+        // ES reference first (full depth on 4 EPs, like the paper).
+        let es_sol = {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            ExhaustiveSearch::new(EsOptions { max_depth: 4 }).explore(&mut eval)
+        };
+
+        let mut algos: Vec<(&str, Box<dyn FnMut(&mut Evaluator) -> Solution>)> = vec![
+            ("Shisha", Box::new(|e| ShishaAuto::new().explore(e))),
+            ("SA", Box::new(|e| SimulatedAnnealing::new(SaOptions::default()).explore(e))),
+            ("HC", Box::new(|e| HillClimbing::new(HcOptions::default()).explore(e))),
+            ("GA", Box::new(|e| Genetic::new(GaOptions::default()).explore(e))),
+            ("RW", Box::new(|e| RandomWalk::new(RwOptions::default()).explore(e))),
+            ("PS", Box::new(|e| PipeSearch::new(PsOptions::default()).explore(e))),
+        ];
+
+        let mut rows = vec![("ES", es_sol.clone())];
+        for (name, run) in algos.iter_mut() {
+            let opts = EvalOptions { max_evals: Some(5_000), ..Default::default() };
+            let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+            rows.push((name, run(&mut eval)));
+        }
+        for (name, sol) in &rows {
+            table.row([
+                net_name.to_string(),
+                name.to_string(),
+                f(sol.best_throughput, 4),
+                f(sol.best_throughput / es_sol.best_throughput, 3),
+                sol.n_evals.to_string(),
+                format!("{:.4}%", 100.0 * sol.explored_fraction(space)),
+            ]);
+        }
+        // paper shape: Shisha within a few percent of ES
+        let shisha_norm = rows[1].1.best_throughput / es_sol.best_throughput;
+        assert!(shisha_norm > 0.9, "{net_name}: Shisha at {shisha_norm:.3} of ES");
+    }
+    println!("Figure 5 — throughput normalized to ES (4-EP system):\n{}", table.to_markdown());
+    table.write_csv("results/fig5_optimality.csv").unwrap();
+    println!("wrote results/fig5_optimality.csv");
+}

@@ -1,0 +1,74 @@
+//! Figure 9 — impact of inter-chiplet latency on pipeline throughput:
+//! SynthNet's best configuration re-evaluated with added chip-to-chip
+//! latency swept from 1 ns to 1 s (paper §7.6).
+//!
+//! Expected shape: throughput flat below ~1 ms (stage execution dominates),
+//! collapsing beyond; Shisha re-run at each latency still finds a
+//! near-optimal configuration (it shifts towards fewer stages).
+
+use shisha::explore::shisha::ShishaAuto;
+use shisha::explore::{Evaluator, Explorer};
+use shisha::metrics::table::{f, Table};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+
+fn main() {
+    let net = networks::synthnet();
+    let base_plat = configs::fig4_platform();
+    let db0 = PerfDb::build(&net, &base_plat, &CostModel::default());
+
+    // best config at negligible latency (Shisha solution)
+    let best = {
+        let mut eval = Evaluator::new(&net, &base_plat, &db0);
+        ShishaAuto::new().explore(&mut eval).best_config
+    };
+    println!("fixed configuration: {}\n", best.describe());
+
+    let latencies = [
+        1e-9, 10e-9, 100e-9, 1e-6, 10e-6, 100e-6, 1e-3, 10e-3, 100e-3, 1.0,
+    ];
+    let mut table = Table::new([
+        "latency",
+        "throughput @ fixed config (img/s)",
+        "normalized",
+        "Shisha re-tuned (img/s)",
+        "re-tuned stages",
+    ]);
+    let mut base_tp = 0.0f64;
+    for (i, &lat) in latencies.iter().enumerate() {
+        let mut plat = configs::fig4_platform();
+        plat.link.latency_s = lat;
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let tp = simulator::throughput(&net, &plat, &db, &best);
+        if i == 0 {
+            base_tp = tp;
+        }
+        let retuned = {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            ShishaAuto::new().explore(&mut eval)
+        };
+        table.row([
+            shisha::metrics::fmt_duration(lat),
+            f(tp, 4),
+            f(tp / base_tp, 4),
+            f(retuned.best_throughput, 4),
+            retuned.best_config.n_stages().to_string(),
+        ]);
+    }
+    println!("Figure 9 — inter-chiplet latency sweep (SynthNet, 8 EPs):\n{}", table.to_markdown());
+
+    // paper shape assertions
+    let tp_at = |lat: f64| {
+        let mut plat = configs::fig4_platform();
+        plat.link.latency_s = lat;
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        simulator::throughput(&net, &plat, &db, &best)
+    };
+    assert!((tp_at(1e-6) - base_tp).abs() / base_tp < 0.02, "flat below 1us");
+    assert!((tp_at(100e-6) - base_tp).abs() / base_tp < 0.5, "mild at 100us");
+    assert!(tp_at(1.0) < 0.1 * base_tp, "collapsed at 1s");
+    table.write_csv("results/fig9_latency.csv").unwrap();
+    println!("wrote results/fig9_latency.csv");
+}

@@ -1,0 +1,105 @@
+//! §Perf — L3 hot-path micro-benchmarks (criterion substitute; see
+//! DESIGN.md §5 and EXPERIMENTS.md §Perf).
+//!
+//! Covers the paths every explorer hammers:
+//! * perf-database build and O(1) range queries,
+//! * pipeline throughput evaluation (allocation-free fast path vs full),
+//! * neighbourhood generation,
+//! * Algorithm-1 seed generation,
+//! * a complete Shisha run,
+//! * exhaustive enumeration rate (configs/s).
+
+use shisha::explore::shisha::{generate_seed, AssignmentChoice, ShishaExplorer, ShishaOptions};
+use shisha::explore::{neighbors, Evaluator, Explorer};
+use shisha::metrics::bench::Bencher;
+use shisha::metrics::table::Table;
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::{simulator, space, PipelineConfig};
+use shisha::platform::configs;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let net = networks::resnet50();
+    let plat = configs::c5();
+    let model = CostModel::default();
+    let db = PerfDb::build(&net, &plat, &model);
+    let cfg = PipelineConfig::new(vec![10, 10, 10, 10, 10], vec![0, 4, 1, 5, 2]);
+
+    let mut results = Vec::new();
+    results.push(b.run("perfdb_build_resnet50_c5", || PerfDb::build(&net, &plat, &model)));
+    results.push(b.run("perfdb_range_query", || db.range_time(7, 31, 3)));
+    results.push(b.run("throughput_fast_path", || simulator::throughput(&net, &plat, &db, &cfg)));
+    results.push(b.run("evaluate_full", || simulator::evaluate(&net, &plat, &db, &cfg)));
+    results.push(b.run("neighbors_gen", || neighbors(&cfg, &plat)));
+    results.push(b.run("seed_generation_resnet50", || {
+        generate_seed(&net, &plat, AssignmentChoice::RankW, 0)
+    }));
+    results.push(b.run("shisha_full_run_resnet50_c5", || {
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval)
+    }));
+    results.push(b.run("es_enumeration_synthnet_4ep_d3", || {
+        let eps: Vec<usize> = (0..4).collect();
+        space::enumerate_all(18, &eps, 3).count()
+    }));
+    results.push(b.run("sa_random_move", || {
+        let mut rng = shisha::rng::Xoshiro256::seed_from(1);
+        shisha::explore::random_move(&cfg, &plat, &mut rng)
+    }));
+
+    // --- L1/L2 PJRT path (needs `make artifacts`) ------------------------
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art_dir.join("manifest.txt").exists() {
+        use shisha::runtime::{synth_params, Manifest, Runtime};
+        let m = Manifest::load(&art_dir).unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load_all(&m).unwrap();
+        let layers = m.layer_artifacts();
+        let first = layers[0].clone();
+        let x0: Vec<f32> = (0..first.in_elems()).map(|i| (i % 7) as f32 * 0.1).collect();
+        let per_layer: Vec<(String, Vec<f32>, Vec<f32>)> = layers
+            .iter()
+            .map(|meta| {
+                let (w, bb) = synth_params(meta, meta.index as u64).unwrap();
+                (meta.name.clone(), w, bb)
+            })
+            .collect();
+        let mut params: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+        for meta in &layers {
+            let (w, bb) = synth_params(meta, meta.index as u64).unwrap();
+            params.push((w, meta.w_shape.clone().unwrap()));
+            params.push((bb, vec![meta.bias.unwrap()]));
+        }
+        results.push(b.run("pjrt_conv_s0_single_layer", || {
+            rt.execute_layer("conv_s0", &x0, &per_layer[0].1, &per_layer[0].2).unwrap()
+        }));
+        // L2 fusion study: chained per-layer dispatches vs one fused module
+        results.push(b.run("pjrt_net_chained_6_layers", || {
+            let mut x = x0.clone();
+            for (name, w, bb) in &per_layer {
+                x = rt.execute_layer(name, &x, w, bb).unwrap();
+            }
+            x
+        }));
+        results.push(b.run("pjrt_net_fused_module", || {
+            rt.execute_stage("net_synthnet_small", &x0, &params).unwrap()
+        }));
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+
+    let mut table = Table::new(["bench", "median_s", "mad_s", "throughput_per_s"]);
+    for r in &results {
+        table.row([
+            r.name.clone(),
+            format!("{:.3e}", r.median_s),
+            format!("{:.1e}", r.mad_s),
+            format!("{:.3e}", r.throughput()),
+        ]);
+    }
+    table.write_csv("results/perf_hotpath.csv").unwrap();
+    println!("\nwrote results/perf_hotpath.csv");
+}

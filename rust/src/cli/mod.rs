@@ -1,0 +1,160 @@
+//! Hand-rolled CLI argument parser (no clap in the offline environment —
+//! DESIGN.md §5).
+//!
+//! Grammar: `shisha <subcommand> [--key value]... [--flag]...`.
+//! [`Args`] collects the subcommand, options and flags with typed getters;
+//! unknown-option detection is the caller's responsibility via
+//! [`Args::expect_known`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first positional), if any.
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv-style iterator (excluding the program name).
+    pub fn parse<I, S>(argv: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required option --{key}"))
+    }
+
+    /// Typed option (parse from string).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// True when `--flag` was given.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Error on options/flags outside the allowed set (typo guard).
+    pub fn expect_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} (allowed: {allowed:?})");
+            }
+        }
+        for f in &self.flags {
+            if !allowed.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(["explore", "--net", "resnet50", "--fast", "--alpha=12", "extra"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("explore"));
+        assert_eq!(a.get("net"), Some("resnet50"));
+        assert_eq!(a.get("alpha"), Some("12"));
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(["x", "--n", "42", "--f", "2.5"]).unwrap();
+        assert_eq!(a.parsed_or::<u32>("n", 0).unwrap(), 42);
+        assert_eq!(a.parsed_or::<f64>("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.parsed_or::<u32>("missing", 7).unwrap(), 7);
+        assert!(a.get_parsed::<u32>("f").is_err());
+    }
+
+    #[test]
+    fn require_and_known() {
+        let a = Args::parse(["x", "--good", "1"]).unwrap();
+        assert!(a.require("good").is_ok());
+        assert!(a.require("bad").is_err());
+        assert!(a.expect_known(&["good"]).is_ok());
+        assert!(a.expect_known(&["other"]).is_err());
+    }
+
+    #[test]
+    fn flag_before_option_value_disambiguation() {
+        // --a --b 3: a is a flag, b an option
+        let a = Args::parse(["c", "--a", "--b", "3"]).unwrap();
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get("b"), Some("3"));
+    }
+
+    #[test]
+    fn empty_ok() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert!(a.command.is_none());
+    }
+}

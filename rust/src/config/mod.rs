@@ -1,0 +1,392 @@
+//! Experiment configuration files — a hand-rolled TOML-subset parser
+//! (the offline environment has no serde facade; DESIGN.md §5).
+//!
+//! Supported grammar (enough for `configs/*.toml` experiment files):
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 2.5
+//! flag = true
+//! list = [1, 2, 3]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Values live in [`Value`]; [`Config`] maps `section.key` → value with
+//! typed getters. [`ExperimentConfig`] is the typed view the CLI consumes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous-ish list of scalars.
+    List(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let tok = tok.trim();
+    if let Some(stripped) = tok.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match tok {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = tok.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    bail!("unparseable value {tok:?}")
+}
+
+fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if let Some(stripped) = raw.strip_prefix('[') {
+        let inner = stripped.strip_suffix(']').context("unterminated list")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            // split at commas not inside quotes
+            let mut depth_quote = false;
+            let mut cur = String::new();
+            for ch in inner.chars() {
+                match ch {
+                    '"' => {
+                        depth_quote = !depth_quote;
+                        cur.push(ch);
+                    }
+                    ',' if !depth_quote => {
+                        items.push(parse_scalar(&cur)?);
+                        cur.clear();
+                    }
+                    _ => cur.push(ch),
+                }
+            }
+            if !cur.trim().is_empty() {
+                items.push(parse_scalar(&cur)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    parse_scalar(raw)
+}
+
+/// Parsed config: flat map `section.key` → [`Value`].
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            // strip comments (naive: # outside quotes)
+            let mut in_quote = false;
+            let mut line = String::new();
+            for ch in raw.chars() {
+                if ch == '"' {
+                    in_quote = !in_quote;
+                }
+                if ch == '#' && !in_quote {
+                    break;
+                }
+                line.push(ch);
+            }
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(
+                key,
+                parse_value(v).with_context(|| format!("line {}", lineno + 1))?,
+            );
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// String getter.
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer getter (accepts Int).
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float getter (accepts Int or Float).
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Value::Float(x)) => Some(*x),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Bool getter.
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// List-of-strings getter.
+    pub fn str_list(&self, key: &str) -> Option<Vec<&str>> {
+        match self.get(key) {
+            Some(Value::List(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Some(s.as_str()),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+/// Typed experiment configuration consumed by `shisha explore --config`.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Network name (model registry).
+    pub network: String,
+    /// Platform name (platform registry).
+    pub platform: String,
+    /// Algorithms to run.
+    pub algorithms: Vec<String>,
+    /// Shisha α.
+    pub alpha: u32,
+    /// Probe inputs per online trial.
+    pub probe_inputs: u64,
+    /// Optional virtual-time limit.
+    pub time_limit_s: Option<f64>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            network: "synthnet".into(),
+            platform: "c2".into(),
+            algorithms: vec!["shisha".into()],
+            alpha: 10,
+            probe_inputs: 10,
+            time_limit_s: None,
+            seed: 42,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Extract from a parsed [`Config`] (section `[experiment]`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let mut out = ExperimentConfig::default();
+        if let Some(s) = cfg.str("experiment.network") {
+            out.network = s.to_string();
+        }
+        if let Some(s) = cfg.str("experiment.platform") {
+            out.platform = s.to_string();
+        }
+        if let Some(xs) = cfg.str_list("experiment.algorithms") {
+            out.algorithms = xs.into_iter().map(String::from).collect();
+        }
+        if let Some(i) = cfg.int("experiment.alpha") {
+            out.alpha = u32::try_from(i).context("alpha must be positive")?;
+        }
+        if let Some(i) = cfg.int("experiment.probe_inputs") {
+            out.probe_inputs = u64::try_from(i).context("probe_inputs must be positive")?;
+        }
+        if let Some(x) = cfg.float("experiment.time_limit_s") {
+            out.time_limit_s = Some(x);
+        }
+        if let Some(i) = cfg.int("experiment.seed") {
+            out.seed = i as u64;
+        }
+        // validate against registries
+        if crate::model::networks::by_name(&out.network).is_none() {
+            bail!("unknown network {:?}", out.network);
+        }
+        if crate::platform::configs::by_name(&out.platform).is_none() {
+            bail!("unknown platform {:?}", out.platform);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment file
+[experiment]
+network = "resnet50"
+platform = "c3"
+algorithms = ["shisha", "sa", "hc"]
+alpha = 12
+probe_inputs = 20
+time_limit_s = 600.5
+seed = 7
+
+[other]
+flag = true
+ratio = 0.25
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("experiment.network"), Some("resnet50"));
+        assert_eq!(c.int("experiment.alpha"), Some(12));
+        assert_eq!(c.float("experiment.time_limit_s"), Some(600.5));
+        assert_eq!(c.bool("other.flag"), Some(true));
+        assert_eq!(c.float("other.ratio"), Some(0.25));
+        assert_eq!(
+            c.str_list("experiment.algorithms"),
+            Some(vec!["shisha", "sa", "hc"])
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3\n").unwrap();
+        assert_eq!(c.float("x"), Some(3.0));
+        assert_eq!(c.int("x"), Some(3));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let c = Config::parse("# only a comment\n\nk = 1 # trailing\n").unwrap();
+        assert_eq!(c.int("k"), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Config::parse("key without equals\n").is_err());
+        assert!(Config::parse("k = [1, 2\n").is_err());
+        assert!(Config::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn experiment_config_roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.network, "resnet50");
+        assert_eq!(e.platform, "c3");
+        assert_eq!(e.algorithms.len(), 3);
+        assert_eq!(e.alpha, 12);
+        assert_eq!(e.time_limit_s, Some(600.5));
+    }
+
+    #[test]
+    fn experiment_config_validates_names() {
+        let c = Config::parse("[experiment]\nnetwork = \"nope\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let c = Config::parse("").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.network, "synthnet");
+        assert_eq!(e.alpha, 10);
+    }
+
+    #[test]
+    fn empty_list() {
+        let c = Config::parse("xs = []\n").unwrap();
+        assert_eq!(c.get("xs"), Some(&Value::List(vec![])));
+    }
+
+    #[test]
+    fn display_roundtrip_shapes() {
+        assert_eq!(Value::Int(3).to_string(), "3");
+        assert_eq!(Value::List(vec![Value::Int(1), Value::Bool(true)]).to_string(), "[1, true]");
+    }
+}

@@ -1,0 +1,229 @@
+//! Adaptive re-tuning under environment drift (the paper's stated reason
+//! for *online* tuning: cost models "are sensitive to changes in the
+//! execution environment (e.g., DVFS)", §1).
+//!
+//! [`AdaptiveController`] wraps the database-mode evaluation path with a
+//! mutable environment: DVFS events rescale an EP's service rate
+//! ([`DriftEvent`]), the controller monitors the running configuration's
+//! throughput each epoch, and when it regresses below
+//! `retune_threshold × baseline` it re-runs Algorithm 2 **warm** (from the
+//! current configuration, not from a fresh seed) — the cheap recovery the
+//! online design enables. The simulated clock charges monitoring epochs
+//! and every re-tuning trial, so recovery cost is measurable.
+
+use crate::explore::shisha::{tune, BalancingChoice};
+use crate::explore::{EvalOptions, Evaluator};
+use crate::model::Network;
+use crate::perfdb::{CostModel, PerfDb};
+use crate::pipeline::{simulator, PipelineConfig};
+use crate::platform::Platform;
+
+/// An environment change at a point in (epoch) time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftEvent {
+    /// Epoch at which the change takes effect.
+    pub epoch: usize,
+    /// EP whose service rate changes.
+    pub ep: usize,
+    /// Multiplier on that EP's layer times (2.0 = halved clock).
+    pub slowdown: f64,
+}
+
+/// One epoch record of the adaptive run.
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    /// Epoch index.
+    pub epoch: usize,
+    /// Configuration in service during the epoch.
+    pub config: PipelineConfig,
+    /// Observed throughput.
+    pub throughput: f64,
+    /// Whether a re-tune was triggered this epoch.
+    pub retuned: bool,
+    /// Trials spent re-tuning this epoch.
+    pub retune_trials: u64,
+}
+
+/// Outcome of an adaptive run.
+#[derive(Debug, Clone)]
+pub struct AdaptiveReport {
+    /// Per-epoch log.
+    pub epochs: Vec<EpochLog>,
+    /// Number of re-tunes triggered.
+    pub n_retunes: usize,
+    /// Total re-tuning trials.
+    pub total_trials: u64,
+}
+
+impl AdaptiveReport {
+    /// Throughput of the final epoch.
+    pub fn final_throughput(&self) -> f64 {
+        self.epochs.last().map_or(0.0, |e| e.throughput)
+    }
+}
+
+/// Monitors a running pipeline and re-tunes on drift.
+pub struct AdaptiveController {
+    net: Network,
+    plat: Platform,
+    model: CostModel,
+    /// Re-tune when throughput falls below this fraction of the rolling
+    /// baseline (default 0.9).
+    pub retune_threshold: f64,
+    /// α for warm re-tuning (smaller than the cold α: we start near-optimal).
+    pub alpha: u32,
+    /// Balancing choice for re-tuning.
+    pub balancing: BalancingChoice,
+}
+
+impl AdaptiveController {
+    /// New controller with default thresholds.
+    pub fn new(net: Network, plat: Platform, model: CostModel) -> Self {
+        Self {
+            net,
+            plat,
+            model,
+            retune_threshold: 0.9,
+            alpha: 5,
+            balancing: BalancingChoice::NlFep,
+        }
+    }
+
+    /// Run `epochs` monitoring epochs starting from `initial`, applying
+    /// `events` as they come due. Returns the per-epoch log.
+    pub fn run(
+        &self,
+        initial: PipelineConfig,
+        epochs: usize,
+        events: &[DriftEvent],
+    ) -> AdaptiveReport {
+        let mut db = PerfDb::build(&self.net, &self.plat, &self.model);
+        let mut conf = initial;
+        let mut baseline = simulator::throughput(&self.net, &self.plat, &db, &conf);
+        let mut log = Vec::with_capacity(epochs);
+        let mut n_retunes = 0;
+        let mut total_trials = 0;
+
+        for epoch in 0..epochs {
+            // apply due drift events to the environment
+            for ev in events.iter().filter(|e| e.epoch == epoch) {
+                db.scale_ep(ev.ep, ev.slowdown);
+            }
+            // observe the running configuration
+            let observed = simulator::throughput(&self.net, &self.plat, &db, &conf);
+            let mut retuned = false;
+            let mut trials = 0;
+            if observed < self.retune_threshold * baseline {
+                // warm re-tune from the current configuration
+                let opts = EvalOptions { max_evals: Some(200), ..Default::default() };
+                let mut eval = Evaluator::with_options(&self.net, &self.plat, &db, opts);
+                tune(&mut eval, conf.clone(), self.balancing, self.alpha);
+                let (best, tp) = eval.best().expect("tune evaluates at least once").clone();
+                trials = eval.n_evals();
+                if tp > observed {
+                    conf = best;
+                }
+                baseline = simulator::throughput(&self.net, &self.plat, &db, &conf);
+                retuned = true;
+                n_retunes += 1;
+                total_trials += trials;
+            } else {
+                baseline = baseline.max(observed);
+            }
+            log.push(EpochLog {
+                epoch,
+                config: conf.clone(),
+                throughput: simulator::throughput(&self.net, &self.plat, &db, &conf),
+                retuned,
+                retune_trials: trials,
+            });
+        }
+        AdaptiveReport { epochs: log, n_retunes, total_trials }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::shisha::{generate_seed, AssignmentChoice};
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn controller() -> (AdaptiveController, PipelineConfig) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let model = CostModel::default();
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        let db = PerfDb::build(&net, &plat, &model);
+        // tune once to a good starting configuration
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        tune(&mut eval, seed.config, BalancingChoice::NlFep, 10);
+        let start = eval.best().unwrap().0.clone();
+        (AdaptiveController::new(net, plat, model), start)
+    }
+
+    #[test]
+    fn no_drift_no_retune() {
+        let (ctl, start) = controller();
+        let report = ctl.run(start, 10, &[]);
+        assert_eq!(report.n_retunes, 0);
+        assert_eq!(report.epochs.len(), 10);
+        let t0 = report.epochs[0].throughput;
+        assert!(report.epochs.iter().all(|e| (e.throughput - t0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn drift_triggers_retune_and_recovers() {
+        let (ctl, start) = controller();
+        // find the EP hosting the biggest stage and cripple it 3x at epoch 3
+        let victim = start.assignment[0];
+        let events = [DriftEvent { epoch: 3, ep: victim, slowdown: 3.0 }];
+        let report = ctl.run(start.clone(), 12, &events);
+        assert!(report.n_retunes >= 1, "drift must trigger re-tuning");
+        // throughput after recovery must beat the un-tuned drifted config
+        let mut db = PerfDb::build(&ctl.net, &ctl.plat, &ctl.model);
+        db.scale_ep(victim, 3.0);
+        let untuned = simulator::throughput(&ctl.net, &ctl.plat, &db, &start);
+        assert!(
+            report.final_throughput() > untuned,
+            "recovered {} must beat untuned {untuned}",
+            report.final_throughput()
+        );
+    }
+
+    #[test]
+    fn small_drift_below_threshold_ignored() {
+        let (mut ctl, start) = controller();
+        ctl.retune_threshold = 0.5; // tolerate up to 2x loss
+        let victim = start.assignment[0];
+        let events = [DriftEvent { epoch: 2, ep: victim, slowdown: 1.05 }];
+        let report = ctl.run(start, 6, &events);
+        assert_eq!(report.n_retunes, 0);
+    }
+
+    #[test]
+    fn repeated_drift_multiple_retunes() {
+        let (ctl, start) = controller();
+        let a = start.assignment[0];
+        let b = *start.assignment.last().unwrap();
+        let events = [
+            DriftEvent { epoch: 2, ep: a, slowdown: 2.5 },
+            DriftEvent { epoch: 6, ep: b, slowdown: 2.5 },
+        ];
+        let report = ctl.run(start, 10, &events);
+        assert!(report.n_retunes >= 2, "got {}", report.n_retunes);
+        assert!(report.total_trials > 0);
+    }
+
+    #[test]
+    fn warm_retune_is_cheap() {
+        // recovery should take far fewer trials than a cold Shisha run's
+        // full auto sweep (the point of warm-starting from the running cfg)
+        let (ctl, start) = controller();
+        let victim = start.assignment[0];
+        let events = [DriftEvent { epoch: 1, ep: victim, slowdown: 3.0 }];
+        let report = ctl.run(start, 5, &events);
+        let per_retune = report.total_trials as f64 / report.n_retunes.max(1) as f64;
+        assert!(per_retune <= 60.0, "warm retune used {per_retune} trials");
+    }
+}

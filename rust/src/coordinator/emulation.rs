@@ -1,0 +1,96 @@
+//! EP heterogeneity emulation for the real-execution path.
+//!
+//! The paper's EPs differ in core count/type and memory bandwidth; our host
+//! is one homogeneous CPU. To exercise the *scheduling* problem unchanged,
+//! each EP gets a service-rate factor ≥ 1 derived from the analytic cost
+//! model: factor = (EP's serial network time) / (fastest EP's serial
+//! network time). A worker that computes a layer in `t` seconds then busy
+//! waits `t · (factor − 1)`, so the relative stage times across EPs match
+//! the modelled platform — which is all Shisha observes.
+
+use crate::model::Network;
+use crate::perfdb::{CostModel, PerfDb};
+use crate::platform::Platform;
+
+/// Per-EP service-rate slowdown factors (1.0 = fastest EP).
+#[derive(Debug, Clone)]
+pub struct EpEmulation {
+    /// factor[ep] ≥ 1.0.
+    pub factors: Vec<f64>,
+}
+
+impl EpEmulation {
+    /// No emulation: every EP at native speed.
+    pub fn none(n_eps: usize) -> Self {
+        Self { factors: vec![1.0; n_eps] }
+    }
+
+    /// Derive factors from the analytic model for `net` on `plat`.
+    pub fn from_model(net: &Network, plat: &Platform, model: &CostModel) -> Self {
+        let db = PerfDb::build(net, plat, model);
+        let times: Vec<f64> = (0..plat.n_eps()).map(|ep| db.network_time(ep)).collect();
+        let fastest = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        Self { factors: times.iter().map(|t| t / fastest).collect() }
+    }
+
+    /// Explicit factors (tests, what-if studies).
+    pub fn explicit(factors: Vec<f64>) -> Self {
+        assert!(factors.iter().all(|&f| f >= 1.0), "factors must be >= 1");
+        Self { factors }
+    }
+
+    /// Busy-wait so that total service time becomes `compute_s · factor`.
+    /// Busy-waiting (not sleeping) keeps timing accurate at sub-millisecond
+    /// service times.
+    pub fn pad(&self, ep: usize, compute_s: f64) {
+        let extra = compute_s * (self.factors[ep] - 1.0);
+        if extra <= 0.0 {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_secs_f64() < extra {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    #[test]
+    fn factors_reflect_heterogeneity() {
+        let net = networks::synthnet_small();
+        let plat = configs::c2();
+        let emu = EpEmulation::from_model(&net, &plat, &CostModel::default());
+        assert_eq!(emu.factors.len(), 4);
+        // fastest EP factor 1.0
+        let min = emu.factors.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((min - 1.0).abs() < 1e-12);
+        // SEPs (ids 2,3) slower than FEPs (0,1)
+        assert!(emu.factors[2] > emu.factors[0]);
+        assert!(emu.factors[3] > emu.factors[1]);
+        // big:little compute is 4x; with memory effects expect 2..8x
+        assert!((1.5..10.0).contains(&emu.factors[2]), "factor {}", emu.factors[2]);
+    }
+
+    #[test]
+    fn pad_extends_service_time() {
+        let emu = EpEmulation::explicit(vec![1.0, 3.0]);
+        let t0 = std::time::Instant::now();
+        emu.pad(1, 0.005); // 5ms compute -> +10ms padding
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.009, "padded {dt}");
+        let t1 = std::time::Instant::now();
+        emu.pad(0, 0.005); // factor 1: no padding
+        assert!(t1.elapsed().as_secs_f64() < 0.002);
+    }
+
+    #[test]
+    #[should_panic]
+    fn explicit_rejects_sub_unity() {
+        EpEmulation::explicit(vec![0.5]);
+    }
+}

@@ -1,0 +1,27 @@
+//! The L3 coordinator: a *real* threaded CNN pipeline runtime with online
+//! Shisha tuning.
+//!
+//! Where `explore::Evaluator` answers "what would this configuration do"
+//! from the perf database (the paper's gem5-database mode), this module
+//! actually **runs** the pipeline: one worker thread per stage, each with
+//! its own per-thread PJRT [`crate::runtime::Runtime`] executing the AOT
+//! Pallas/JAX conv artifacts, bounded channels for backpressure, and a
+//! sink measuring real throughput. The online tuner (Algorithm 2) then
+//! drives reconfiguration against these *measured* numbers — the fully
+//! online mode the paper targets on real hardware.
+//!
+//! Heterogeneity emulation: the host is a homogeneous CPU, so each EP
+//! applies a calibrated service-rate factor (busy-wait after compute)
+//! derived from the analytic cost model — Big/fast EPs run at measured
+//! speed, Little/slow EPs proportionally slower (DESIGN.md §1).
+
+pub mod adaptive;
+pub mod emulation;
+pub mod pipeline_rt;
+pub mod tuner;
+pub mod workload;
+
+pub use adaptive::{AdaptiveController, AdaptiveReport, DriftEvent};
+pub use emulation::EpEmulation;
+pub use pipeline_rt::{MeasuredRun, PipelineRuntime};
+pub use tuner::{OnlineTuner, TrialLog, TuneReport};

@@ -1,0 +1,221 @@
+//! The threaded pipeline runtime.
+//!
+//! [`PipelineRuntime::measure`] materialises a [`PipelineConfig`] as real
+//! OS threads — one worker per stage — streams `n` inputs through it and
+//! reports measured throughput and per-stage service times:
+//!
+//! ```text
+//!  feeder ──ch0──▶ [stage 0 worker] ──ch1──▶ [stage 1 worker] ──▶ sink
+//!                   own PJRT runtime          own PJRT runtime
+//!                   layers lo0..hi0           layers lo1..hi1
+//!                   EP emulation pad          EP emulation pad
+//! ```
+//!
+//! Channels are bounded (`CHANNEL_DEPTH`) so a slow stage backpressures
+//! upstream instead of queueing unboundedly — the steady-state behaviour
+//! the paper's throughput model (1 / max stage time) assumes.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::emulation::EpEmulation;
+use crate::pipeline::PipelineConfig;
+use crate::runtime::{synth_params, Manifest, Runtime};
+
+/// Bounded channel depth between stages (small: backpressure, not queueing).
+pub const CHANNEL_DEPTH: usize = 4;
+
+/// Measured result of streaming `n_inputs` through one configuration.
+#[derive(Debug, Clone)]
+pub struct MeasuredRun {
+    /// The measured configuration.
+    pub config: PipelineConfig,
+    /// Inputs streamed.
+    pub n_inputs: usize,
+    /// Steady-state throughput, images/s (first output excluded — fill).
+    pub throughput: f64,
+    /// Mean service time per stage, seconds (compute + emulation pad).
+    pub stage_times: Vec<f64>,
+    /// Wall-clock of the whole run (including pipeline fill), seconds.
+    pub wall_s: f64,
+}
+
+impl MeasuredRun {
+    /// Index of the slowest stage (Algorithm 2 line 5, measured online).
+    pub fn slowest_stage(&self) -> usize {
+        self.stage_times
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Factory for measured pipeline runs over the AOT artifacts.
+pub struct PipelineRuntime {
+    manifest: Manifest,
+    emulation: EpEmulation,
+    /// Layer artifact names in network order.
+    layer_names: Vec<String>,
+    /// Parameter seed (synth weights are deterministic per layer).
+    pub param_seed: u64,
+}
+
+impl PipelineRuntime {
+    /// Create from a loaded manifest and EP emulation table.
+    pub fn new(manifest: Manifest, emulation: EpEmulation) -> Result<Self> {
+        let layer_names: Vec<String> =
+            manifest.layer_artifacts().iter().map(|a| a.name.clone()).collect();
+        if layer_names.is_empty() {
+            bail!("manifest has no layer artifacts");
+        }
+        Ok(Self { manifest, emulation, layer_names, param_seed: 0xC0DE })
+    }
+
+    /// Number of layers available for pipelining.
+    pub fn n_layers(&self) -> usize {
+        self.layer_names.len()
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Deterministic input image `i` for the first layer (f32 in [-1, 1]).
+    pub fn make_input(&self, i: u64) -> Vec<f32> {
+        let meta = self.manifest.get(&self.layer_names[0]).unwrap();
+        let n = meta.in_elems();
+        let mut rng = crate::rng::Xoshiro256::seed_from(0x1317 + i);
+        (0..n).map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    /// Run `cfg` with `n_inputs` streamed inputs; returns measurements.
+    ///
+    /// Validation: `cfg` must partition exactly the manifest's layers and
+    /// reference EPs covered by the emulation table.
+    pub fn measure(&self, cfg: &PipelineConfig, n_inputs: usize) -> Result<MeasuredRun> {
+        if cfg.n_layers() != self.layer_names.len() {
+            bail!("config covers {} layers, artifacts have {}", cfg.n_layers(), self.layer_names.len());
+        }
+        for &ep in &cfg.assignment {
+            if ep >= self.emulation.factors.len() {
+                bail!("EP {ep} outside emulation table");
+            }
+        }
+        let n_stages = cfg.n_stages();
+        let bounds = cfg.stage_bounds();
+
+        // channels: feeder -> s0 -> s1 ... -> sink
+        let mut senders: Vec<mpsc::SyncSender<Vec<f32>>> = Vec::with_capacity(n_stages + 1);
+        let mut receivers: Vec<mpsc::Receiver<Vec<f32>>> = Vec::with_capacity(n_stages + 1);
+        for _ in 0..=n_stages {
+            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(CHANNEL_DEPTH);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+
+        let t0 = Instant::now();
+        let result: Result<(Vec<f64>, f64, usize)> = thread::scope(|scope| {
+            // stage workers (consume receivers[i], produce into senders[i+1])
+            let mut stage_handles = Vec::with_capacity(n_stages);
+            let mut rx_iter = receivers.into_iter();
+            let first_rx = rx_iter.next().unwrap();
+            let mut rxs: Vec<mpsc::Receiver<Vec<f32>>> = rx_iter.collect(); // n_stages receivers
+            // senders[0] feeds stage 0; worker i sends into senders[i+1]
+            let mut txs: Vec<mpsc::SyncSender<Vec<f32>>> = senders.split_off(1);
+            let feeder_tx = senders.pop().unwrap();
+            let sink_rx = rxs.pop().unwrap(); // last receiver is the sink's
+            rxs.insert(0, first_rx);
+            let sink_tx = txs.pop(); // worker of last stage sends here
+            txs.push(sink_tx.context("stage sender")?);
+
+            for (si, (rx, tx)) in rxs.into_iter().zip(txs.into_iter()).enumerate() {
+                let (lo, hi) = bounds[si];
+                let names: Vec<String> = self.layer_names[lo..hi].to_vec();
+                let ep = cfg.assignment[si];
+                let emu = self.emulation.clone();
+                let manifest = &self.manifest;
+                let seed = self.param_seed;
+                stage_handles.push(scope.spawn(move || -> Result<f64> {
+                    // per-thread PJRT runtime with only this stage's layers
+                    let mut rt = Runtime::new()?;
+                    let mut params = Vec::with_capacity(names.len());
+                    for (li, name) in names.iter().enumerate() {
+                        rt.load(manifest, name)?;
+                        let meta = rt.meta(name).unwrap();
+                        params.push(synth_params(meta, seed + (lo + li) as u64)?);
+                    }
+                    let mut busy = 0.0f64;
+                    let mut count = 0u64;
+                    while let Ok(mut x) = rx.recv() {
+                        let t = Instant::now();
+                        for (name, (w, b)) in names.iter().zip(&params) {
+                            x = rt.execute_layer(name, &x, w, b)?;
+                        }
+                        let compute = t.elapsed().as_secs_f64();
+                        emu.pad(ep, compute);
+                        busy += t.elapsed().as_secs_f64();
+                        count += 1;
+                        if tx.send(x).is_err() {
+                            break; // sink gone
+                        }
+                    }
+                    Ok(if count > 0 { busy / count as f64 } else { 0.0 })
+                }));
+            }
+
+            // feeder
+            let feeder = scope.spawn(move || {
+                for i in 0..n_inputs {
+                    let x = self.make_input(i as u64);
+                    if feeder_tx.send(x).is_err() {
+                        break;
+                    }
+                }
+                // dropping feeder_tx closes the pipeline
+            });
+
+            // sink: timestamps
+            let mut first: Option<Instant> = None;
+            let mut last: Option<Instant> = None;
+            let mut n_out = 0usize;
+            while let Ok(_y) = sink_rx.recv() {
+                let now = Instant::now();
+                if first.is_none() {
+                    first = Some(now);
+                }
+                last = Some(now);
+                n_out += 1;
+            }
+            feeder.join().expect("feeder panicked");
+            let mut stage_times = Vec::with_capacity(n_stages);
+            for h in stage_handles {
+                stage_times.push(h.join().expect("stage worker panicked")?);
+            }
+            let throughput = match (first, last) {
+                (Some(f), Some(l)) if n_out > 1 => (n_out - 1) as f64 / (l - f).as_secs_f64(),
+                _ => 0.0,
+            };
+            Ok((stage_times, throughput, n_out))
+        });
+        let (stage_times, throughput, n_out) = result?;
+        if n_out != n_inputs {
+            bail!("pipeline dropped inputs: {n_out}/{n_inputs}");
+        }
+        Ok(MeasuredRun {
+            config: cfg.clone(),
+            n_inputs,
+            throughput,
+            stage_times,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// Integration tests that need real artifacts live in
+// rust/tests/coordinator_e2e.rs (after `make artifacts`).

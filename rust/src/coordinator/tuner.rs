@@ -1,0 +1,186 @@
+//! Online tuning against *measured* throughput (Algorithm 2, live mode).
+//!
+//! Mirrors `explore::shisha::tuning` but drives the real
+//! [`PipelineRuntime`]: every trial spawns the pipeline, streams probe
+//! inputs, reads measured per-stage service times, and moves one layer off
+//! the measured-slowest stage. This is the fully online deployment the
+//! paper targets: no database, no model — the running system is the
+//! oracle.
+
+use anyhow::Result;
+
+use super::pipeline_rt::{MeasuredRun, PipelineRuntime};
+use crate::explore::shisha::BalancingChoice;
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
+
+/// One tuning trial.
+#[derive(Debug, Clone)]
+pub struct TrialLog {
+    /// Trial index (0 = seed).
+    pub trial: usize,
+    /// Configuration measured.
+    pub config: PipelineConfig,
+    /// Measured throughput, images/s.
+    pub throughput: f64,
+    /// Measured mean service time per stage.
+    pub stage_times: Vec<f64>,
+    /// Wall-clock spent measuring, seconds.
+    pub wall_s: f64,
+}
+
+/// Outcome of an online tuning session.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// All trials in order (first = seed).
+    pub trials: Vec<TrialLog>,
+    /// Best configuration observed.
+    pub best_config: PipelineConfig,
+    /// Its measured throughput.
+    pub best_throughput: f64,
+    /// Total tuning wall-clock, seconds.
+    pub total_wall_s: f64,
+}
+
+impl TuneReport {
+    /// Throughput of the seed (trial 0).
+    pub fn seed_throughput(&self) -> f64 {
+        self.trials[0].throughput
+    }
+
+    /// Improvement of best over seed (≥ 1 when tuning helped or held).
+    pub fn improvement(&self) -> f64 {
+        self.best_throughput / self.seed_throughput()
+    }
+}
+
+/// Online Shisha tuner over a live pipeline.
+pub struct OnlineTuner<'a> {
+    rt: &'a PipelineRuntime,
+    plat: &'a Platform,
+    /// α — consecutive non-improvements before stopping.
+    pub alpha: u32,
+    /// Balancing choice (nFEP / nlFEP).
+    pub balancing: BalancingChoice,
+    /// Probe inputs streamed per trial.
+    pub probe_inputs: usize,
+}
+
+impl<'a> OnlineTuner<'a> {
+    /// New tuner with the paper's α = 10.
+    pub fn new(rt: &'a PipelineRuntime, plat: &'a Platform) -> Self {
+        Self { rt, plat, alpha: 10, balancing: BalancingChoice::NlFep, probe_inputs: 16 }
+    }
+
+    /// Pick the move target next to `slowest` using *measured* stage times.
+    fn pick_target(&self, cfg: &PipelineConfig, run: &MeasuredRun, slowest: usize) -> Option<usize> {
+        if cfg.stages[slowest] <= 1 {
+            return None;
+        }
+        let mut candidates: Vec<usize> = Vec::with_capacity(2);
+        if slowest > 0 {
+            candidates.push(slowest - 1);
+        }
+        if slowest + 1 < cfg.n_stages() {
+            candidates.push(slowest + 1);
+        }
+        if candidates.is_empty() {
+            return None;
+        }
+        match self.balancing {
+            BalancingChoice::NFep => candidates.into_iter().max_by(|&a, &b| {
+                let pa = self.plat.eps[cfg.assignment[a]].perf_score();
+                let pb = self.plat.eps[cfg.assignment[b]].perf_score();
+                pa.partial_cmp(&pb).unwrap().then(b.cmp(&a))
+            }),
+            BalancingChoice::NlFep => candidates.into_iter().min_by(|&a, &b| {
+                run.stage_times[a]
+                    .partial_cmp(&run.stage_times[b])
+                    .unwrap()
+                    .then_with(|| {
+                        let pa = self.plat.eps[cfg.assignment[a]].perf_score();
+                        let pb = self.plat.eps[cfg.assignment[b]].perf_score();
+                        pb.partial_cmp(&pa).unwrap()
+                    })
+                    .then(a.cmp(&b))
+            }),
+        }
+    }
+
+    /// Run Algorithm 2 from `seed` against the live pipeline.
+    pub fn tune(&self, seed: PipelineConfig) -> Result<TuneReport> {
+        let t0 = std::time::Instant::now();
+        let mut trials = Vec::new();
+
+        let mut conf = seed;
+        let mut run = self.rt.measure(&conf, self.probe_inputs)?;
+        let mut throughput = run.throughput;
+        let mut best = (conf.clone(), run.throughput);
+        trials.push(TrialLog {
+            trial: 0,
+            config: conf.clone(),
+            throughput: run.throughput,
+            stage_times: run.stage_times.clone(),
+            wall_s: run.wall_s,
+        });
+
+        let mut gamma = 0u32;
+        while gamma < self.alpha {
+            let slowest = run.slowest_stage();
+            let next = match self.pick_target(&conf, &run, slowest) {
+                Some(target) => conf.move_layer(slowest, target).expect("legal move"),
+                None => {
+                    // Deployment-mode extension (not in Algorithm 2): a
+                    // single-layer slowest stage cannot shed load, but it
+                    // can trade EPs with the *fastest* stage when that one
+                    // sits on a stronger EP — the only greedy move that can
+                    // still reduce the bottleneck. Non-improving swaps are
+                    // bounded by gamma like any other trial.
+                    let fastest = run
+                        .stage_times
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let stronger = self.plat.eps[conf.assignment[fastest]].perf_score()
+                        > self.plat.eps[conf.assignment[slowest]].perf_score();
+                    match (fastest != slowest && stronger, conf.swap_eps(slowest, fastest)) {
+                        (true, Some(swapped)) => swapped,
+                        _ => {
+                            gamma += 1;
+                            continue;
+                        }
+                    }
+                }
+            };
+            conf = next;
+            run = self.rt.measure(&conf, self.probe_inputs)?;
+            trials.push(TrialLog {
+                trial: trials.len(),
+                config: conf.clone(),
+                throughput: run.throughput,
+                stage_times: run.stage_times.clone(),
+                wall_s: run.wall_s,
+            });
+            if run.throughput > best.1 {
+                best = (conf.clone(), run.throughput);
+            }
+            if run.throughput <= throughput {
+                gamma += 1;
+            } else {
+                gamma = 0;
+                throughput = run.throughput;
+            }
+        }
+
+        Ok(TuneReport {
+            trials,
+            best_config: best.0,
+            best_throughput: best.1,
+            total_wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// Live-pipeline tests require artifacts: see rust/tests/coordinator_e2e.rs.

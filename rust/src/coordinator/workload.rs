@@ -1,0 +1,231 @@
+//! Open-loop serving workloads and latency statistics (extension).
+//!
+//! The paper measures steady-state throughput of closed pipelines; a
+//! serving deployment sees an *open-loop* arrival process and cares about
+//! tail latency. This module models request arrivals (deterministic,
+//! Poisson, bursty) over the pipeline simulator's timing and reports
+//! queueing + service latency percentiles — the metrics a router/batcher
+//! above Shisha would track.
+//!
+//! The model is a single-server queue at the bottleneck stage (service =
+//! one bottleneck period per image, which is exactly the steady-state
+//! abstraction the paper uses) plus the pipeline fill latency for each
+//! request's own pass.
+
+use crate::metrics::Stats;
+use crate::model::Network;
+use crate::perfdb::PerfDb;
+use crate::pipeline::{simulator, PipelineConfig};
+use crate::platform::Platform;
+use crate::rng::Xoshiro256;
+
+/// Arrival process of an open-loop workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Fixed inter-arrival gap (seconds).
+    Uniform(f64),
+    /// Poisson with rate λ (requests/second).
+    Poisson(f64),
+    /// Bursts of `k` back-to-back requests every `gap` seconds.
+    Bursty {
+        /// Requests per burst.
+        k: u32,
+        /// Gap between burst starts, seconds.
+        gap: f64,
+    },
+}
+
+impl Arrivals {
+    /// Generate `n` arrival timestamps.
+    pub fn timestamps(&self, n: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            Arrivals::Uniform(gap) => {
+                for i in 0..n {
+                    out.push(i as f64 * gap);
+                }
+            }
+            Arrivals::Poisson(lambda) => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    // exponential inter-arrival via inverse CDF
+                    let u = rng.gen_f64().max(1e-12);
+                    t += -u.ln() / lambda;
+                    out.push(t);
+                }
+            }
+            Arrivals::Bursty { k, gap } => {
+                let mut i = 0usize;
+                let mut burst = 0u64;
+                while i < n {
+                    for _ in 0..k {
+                        if i >= n {
+                            break;
+                        }
+                        out.push(burst as f64 * gap);
+                        i += 1;
+                    }
+                    burst += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Latency report of a served workload.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests served.
+    pub n: usize,
+    /// Offered load vs pipeline capacity (ρ = λ · bottleneck).
+    pub utilisation: f64,
+    /// Mean end-to-end latency, seconds.
+    pub mean_s: f64,
+    /// Median latency.
+    pub p50_s: f64,
+    /// 99th percentile latency.
+    pub p99_s: f64,
+    /// Achieved throughput over the run, images/s.
+    pub throughput: f64,
+}
+
+/// Serve `n` requests with the given arrival process through `cfg`,
+/// reporting latency percentiles. Deterministic given `seed`.
+pub fn serve(
+    net: &Network,
+    plat: &Platform,
+    db: &PerfDb,
+    cfg: &PipelineConfig,
+    arrivals: Arrivals,
+    n: usize,
+    seed: u64,
+) -> ServeReport {
+    let eval = simulator::evaluate(net, plat, db, cfg);
+    let service = eval.bottleneck_s;
+    let fill = eval.latency_s;
+    let mut rng = Xoshiro256::seed_from(seed);
+    let ts = arrivals.timestamps(n, &mut rng);
+
+    let mut stats = Stats::new();
+    let mut free_at = 0.0f64; // bottleneck server free time
+    let mut last_done = 0.0f64;
+    for &arr in &ts {
+        let start = arr.max(free_at);
+        free_at = start + service;
+        // completion = admission to bottleneck + its service + remaining fill
+        let done = start + service + (fill - service).max(0.0);
+        last_done = last_done.max(done);
+        stats.push(done - arr);
+    }
+    let span = last_done - ts.first().copied().unwrap_or(0.0);
+    let offered_rate = if ts.len() > 1 {
+        (ts.len() - 1) as f64 / (ts.last().unwrap() - ts[0]).max(1e-12)
+    } else {
+        0.0
+    };
+    ServeReport {
+        n,
+        utilisation: offered_rate * service,
+        mean_s: stats.mean(),
+        p50_s: stats.median(),
+        p99_s: stats.percentile(99.0),
+        throughput: n as f64 / span.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::CostModel;
+    use crate::platform::configs;
+
+    fn setup() -> (Network, Platform, PerfDb, PipelineConfig) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        (net, plat, db, cfg)
+    }
+
+    #[test]
+    fn arrivals_counts_and_monotonicity() {
+        let mut rng = Xoshiro256::seed_from(1);
+        for a in [Arrivals::Uniform(0.1), Arrivals::Poisson(10.0), Arrivals::Bursty { k: 4, gap: 1.0 }] {
+            let ts = a.timestamps(50, &mut rng);
+            assert_eq!(ts.len(), 50);
+            for w in ts.windows(2) {
+                assert!(w[1] >= w[0], "{a:?} non-decreasing");
+            }
+        }
+    }
+
+    #[test]
+    fn underload_latency_is_fill_time() {
+        let (net, plat, db, cfg) = setup();
+        let eval = simulator::evaluate(&net, &plat, &db, &cfg);
+        // arrivals far slower than service: no queueing
+        let r = serve(&net, &plat, &db, &cfg, Arrivals::Uniform(10.0 * eval.bottleneck_s), 100, 1);
+        assert!(r.utilisation < 0.2);
+        assert!((r.p50_s - eval.latency_s).abs() < 1e-9, "p50 {} vs fill {}", r.p50_s, eval.latency_s);
+        assert!((r.p99_s - r.p50_s).abs() < 1e-9, "no tail without queueing");
+    }
+
+    #[test]
+    fn overload_latency_grows() {
+        let (net, plat, db, cfg) = setup();
+        let eval = simulator::evaluate(&net, &plat, &db, &cfg);
+        // offered load 2x capacity: queue builds, p99 >> p50 of underload
+        let r = serve(&net, &plat, &db, &cfg, Arrivals::Uniform(eval.bottleneck_s / 2.0), 200, 1);
+        assert!(r.utilisation > 1.5);
+        assert!(r.p99_s > 10.0 * eval.latency_s, "p99 {} under overload", r.p99_s);
+        // throughput caps at pipeline capacity
+        assert!(r.throughput <= 1.05 / eval.bottleneck_s);
+    }
+
+    #[test]
+    fn bursts_create_tail() {
+        let (net, plat, db, cfg) = setup();
+        let eval = simulator::evaluate(&net, &plat, &db, &cfg);
+        let burst = serve(
+            &net,
+            &plat,
+            &db,
+            &cfg,
+            Arrivals::Bursty { k: 16, gap: 32.0 * eval.bottleneck_s },
+            160,
+            2,
+        );
+        let smooth = serve(
+            &net,
+            &plat,
+            &db,
+            &cfg,
+            Arrivals::Uniform(2.0 * eval.bottleneck_s),
+            160,
+            2,
+        );
+        assert!(burst.p99_s > smooth.p99_s, "bursty tail {} vs smooth {}", burst.p99_s, smooth.p99_s);
+    }
+
+    #[test]
+    fn poisson_rate_respected() {
+        let mut rng = Xoshiro256::seed_from(3);
+        let ts = Arrivals::Poisson(100.0).timestamps(2000, &mut rng);
+        let rate = (ts.len() - 1) as f64 / (ts.last().unwrap() - ts[0]);
+        assert!((rate - 100.0).abs() < 10.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn better_schedule_lower_tail_at_same_load() {
+        let (net, plat, db, _) = setup();
+        let good = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let bad = PipelineConfig::new(vec![1, 17], vec![0, 1]);
+        let good_eval = simulator::evaluate(&net, &plat, &db, &good);
+        let arr = Arrivals::Poisson(0.5 / good_eval.bottleneck_s);
+        let rg = serve(&net, &plat, &db, &good, arr, 300, 4);
+        let rb = serve(&net, &plat, &db, &bad, arr, 300, 4);
+        assert!(rg.p99_s < rb.p99_s, "good p99 {} < bad p99 {}", rg.p99_s, rb.p99_s);
+    }
+}

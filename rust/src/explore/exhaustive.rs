@@ -1,0 +1,140 @@
+//! Exhaustive Search baseline (§7.2/7.3): enumerate the entire design space
+//! (depth-capped like the paper, which found database generation for
+//! `pipeline_depth > 4` impractical on the large CNNs) and evaluate every
+//! configuration. ES first *generates* its configuration database, which is
+//! charged to the virtual clock at [`EvalOptions::db_gen_per_config_s`] per
+//! configuration — reproducing the ~1200 s setup plateau of Figure 4.
+
+use super::{Evaluator, Explorer, Solution};
+use crate::pipeline::space;
+
+/// Exhaustive-search options.
+#[derive(Debug, Clone)]
+pub struct EsOptions {
+    /// Maximum pipeline depth enumerated (the paper caps at 4).
+    pub max_depth: usize,
+}
+
+impl Default for EsOptions {
+    fn default() -> Self {
+        Self { max_depth: 4 }
+    }
+}
+
+/// Depth-capped exhaustive search.
+pub struct ExhaustiveSearch {
+    opts: EsOptions,
+}
+
+impl ExhaustiveSearch {
+    /// Create with options.
+    pub fn new(opts: EsOptions) -> Self {
+        Self { opts }
+    }
+
+    /// Number of configurations this search will enumerate for `l` layers
+    /// over `e` EPs.
+    pub fn space(&self, l: usize, e: usize) -> u128 {
+        space::space_size(l, e, self.opts.max_depth)
+    }
+}
+
+impl Explorer for ExhaustiveSearch {
+    fn name(&self) -> &str {
+        "ES"
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let l = eval.network().len();
+        let plat = eval.platform().clone();
+        let eps: Vec<usize> = (0..plat.n_eps()).collect();
+
+        // Database generation phase (the paper's 1200 s plateau).
+        let n_configs = self.space(l, plat.n_eps());
+        eval.charge_setup(n_configs as f64 * eval.opts.db_gen_per_config_s);
+
+        for cfg in space::enumerate_all(l, &eps, self.opts.max_depth) {
+            if eval.exhausted() && eval.n_evals() > 0 {
+                break;
+            }
+            eval.evaluate(&cfg);
+        }
+        eval.solution("ES")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::EvalOptions;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::pipeline::PipelineConfig;
+    use crate::platform::configs;
+
+    #[test]
+    fn es_finds_global_optimum_small_space() {
+        let net = networks::alexnet(); // 5 layers
+        let plat = configs::c1(); // 2 EPs
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = ExhaustiveSearch::new(EsOptions { max_depth: 2 }).explore(&mut eval);
+        // brute-force check
+        let mut best = 0.0f64;
+        for cfg in crate::pipeline::space::enumerate_all(5, &[0, 1], 2) {
+            best = best.max(crate::pipeline::simulator::throughput(&net, &plat, &db, &cfg));
+        }
+        assert!((sol.best_throughput - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn es_charges_database_generation() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let es = ExhaustiveSearch::new(EsOptions { max_depth: 2 });
+        let expected_setup = es.space(5, 2) as f64 * eval.opts.db_gen_per_config_s;
+        let sol = ExhaustiveSearch::new(EsOptions { max_depth: 2 }).explore(&mut eval);
+        assert!(sol.virtual_time_s >= expected_setup);
+        // first trace point can't be earlier than setup completion
+        assert!(sol.trace[0].time_s >= expected_setup);
+    }
+
+    #[test]
+    fn es_evaluates_whole_capped_space() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = ExhaustiveSearch::new(EsOptions { max_depth: 2 }).explore(&mut eval);
+        assert_eq!(sol.n_evals as u128, crate::pipeline::space::space_size(5, 2, 2));
+    }
+
+    #[test]
+    fn es_beats_or_matches_any_fixed_config() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = ExhaustiveSearch::new(EsOptions { max_depth: 4 }).explore(&mut eval);
+        for cfg in [
+            PipelineConfig::new(vec![9, 9], vec![0, 1]),
+            PipelineConfig::new(vec![5, 6, 7], vec![0, 1, 2]),
+        ] {
+            let tp = crate::pipeline::simulator::throughput(&net, &plat, &db, &cfg);
+            assert!(sol.best_throughput >= tp - 1e-12);
+        }
+    }
+
+    #[test]
+    fn respects_budget_mid_enumeration() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(25), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = ExhaustiveSearch::new(EsOptions::default()).explore(&mut eval);
+        assert!(sol.n_evals <= 26);
+    }
+}

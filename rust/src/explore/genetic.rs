@@ -1,0 +1,259 @@
+//! Evolutionary-search baseline.
+//!
+//! §3 notes that "various stochastic optimization and machine learning
+//! algorithms have been used such as Simulated Annealing [38],
+//! evolutionary algorithms [1, 30] ..." — Halide's autoscheduler and
+//! Pipe-Search both evolve candidate populations. This baseline lets the
+//! benches compare Shisha against that family too:
+//!
+//! * genome = the pipeline configuration (cut points + EP assignment);
+//! * fitness = online-measured throughput (through the shared Evaluator,
+//!   so every trial is charged its online cost like all other explorers);
+//! * tournament selection, cut-point-union crossover, `random_move`
+//!   mutation, elitism of 1.
+
+use super::{random_config, random_move, Evaluator, Explorer, Solution};
+use crate::pipeline::PipelineConfig;
+use crate::platform::{EpId, Platform};
+use crate::rng::Xoshiro256;
+
+/// Genetic-algorithm options.
+#[derive(Debug, Clone)]
+pub struct GaOptions {
+    /// Population size.
+    pub population: usize,
+    /// Generations (also bounded by the evaluator budget).
+    pub generations: usize,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    /// Per-child mutation probability.
+    pub mutation_p: f64,
+    /// PRNG seed.
+    pub rng_seed: u64,
+}
+
+impl Default for GaOptions {
+    fn default() -> Self {
+        Self { population: 20, generations: 50, tournament: 3, mutation_p: 0.4, rng_seed: 0x6A }
+    }
+}
+
+/// Evolutionary explorer.
+pub struct Genetic {
+    opts: GaOptions,
+}
+
+impl Genetic {
+    /// Create with options.
+    pub fn new(opts: GaOptions) -> Self {
+        Self { opts }
+    }
+
+    /// Cut-point-union crossover: child cut points are sampled from the
+    /// union of both parents' cut points (keeping contiguity by
+    /// construction); the EP assignment takes parent A's genes where still
+    /// injective, filling gaps from parent B then from the free pool.
+    fn crossover(
+        a: &PipelineConfig,
+        b: &PipelineConfig,
+        l: usize,
+        plat: &Platform,
+        rng: &mut Xoshiro256,
+    ) -> PipelineConfig {
+        let cuts = |c: &PipelineConfig| -> Vec<usize> {
+            let mut out = Vec::with_capacity(c.n_stages().saturating_sub(1));
+            let mut acc = 0;
+            for &s in &c.stages[..c.n_stages() - 1] {
+                acc += s;
+                out.push(acc);
+            }
+            out
+        };
+        let mut pool: Vec<usize> = cuts(a);
+        for c in cuts(b) {
+            if !pool.contains(&c) {
+                pool.push(c);
+            }
+        }
+        let max_n = l.min(plat.n_eps());
+        let target_n = rng
+            .gen_range(1, (pool.len() + 1).min(max_n) + 1)
+            .min(max_n);
+        rng.shuffle(&mut pool);
+        let mut chosen: Vec<usize> = pool.into_iter().take(target_n.saturating_sub(1)).collect();
+        chosen.sort_unstable();
+        chosen.dedup();
+        let mut stages = Vec::with_capacity(chosen.len() + 1);
+        let mut prev = 0;
+        for &c in &chosen {
+            stages.push(c - prev);
+            prev = c;
+        }
+        stages.push(l - prev);
+        let n = stages.len();
+
+        // assignment: parent A genes (stage-aligned where possible), then
+        // parent B, then any free EP.
+        let mut assignment: Vec<EpId> = Vec::with_capacity(n);
+        let mut used = vec![false; plat.n_eps()];
+        for i in 0..n {
+            let candidates = [
+                a.assignment.get(i).copied(),
+                b.assignment.get(i).copied(),
+            ];
+            let mut picked = None;
+            for c in candidates.into_iter().flatten() {
+                if !used[c] {
+                    picked = Some(c);
+                    break;
+                }
+            }
+            let ep = picked.unwrap_or_else(|| {
+                let free: Vec<EpId> =
+                    (0..plat.n_eps()).filter(|&e| !used[e]).collect();
+                free[rng.gen_range(0, free.len())]
+            });
+            used[ep] = true;
+            assignment.push(ep);
+        }
+        PipelineConfig::new(stages, assignment)
+    }
+}
+
+impl Explorer for Genetic {
+    fn name(&self) -> &str {
+        "GA"
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let mut rng = Xoshiro256::seed_from(self.opts.rng_seed);
+        let l = eval.network().len();
+        let plat = eval.platform().clone();
+        let psize = self.opts.population.max(2);
+
+        // initial population
+        let mut pop: Vec<(PipelineConfig, f64)> = Vec::with_capacity(psize);
+        for _ in 0..psize {
+            if eval.exhausted() && !pop.is_empty() {
+                break;
+            }
+            let cfg = random_config(l, &plat, &mut rng);
+            let fit = eval.evaluate(&cfg);
+            pop.push((cfg, fit));
+        }
+
+        let tournament = |pop: &[(PipelineConfig, f64)], rng: &mut Xoshiro256| -> PipelineConfig {
+            let mut best: Option<&(PipelineConfig, f64)> = None;
+            for _ in 0..self.opts.tournament {
+                let cand = &pop[rng.gen_range(0, pop.len())];
+                if best.map_or(true, |b| cand.1 > b.1) {
+                    best = Some(cand);
+                }
+            }
+            best.unwrap().0.clone()
+        };
+
+        for _gen in 0..self.opts.generations {
+            if eval.exhausted() {
+                break;
+            }
+            pop.sort_by(|x, y| y.1.partial_cmp(&x.1).unwrap());
+            let elite = pop[0].clone();
+            let mut next = vec![elite];
+            while next.len() < psize && !eval.exhausted() {
+                let pa = tournament(&pop, &mut rng);
+                let pb = tournament(&pop, &mut rng);
+                let mut child = Self::crossover(&pa, &pb, l, &plat, &mut rng);
+                if rng.gen_bool(self.opts.mutation_p) {
+                    if let Some(m) = random_move(&child, &plat, &mut rng) {
+                        child = m;
+                    }
+                }
+                debug_assert!(child.validate(l, &plat).is_ok(), "{}", child.describe());
+                let fit = eval.evaluate(&child);
+                next.push((child, fit));
+            }
+            pop = next;
+        }
+        eval.solution("GA")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::EvalOptions;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+    use crate::testutil;
+
+    #[test]
+    fn crossover_produces_valid_children() {
+        testutil::check("ga crossover valid", 0x6A6A, 300, |g| {
+            let plat = g.platform(2, 7);
+            let l = g.usize(2, 30);
+            let a = g.config(l, &plat);
+            let b = g.config(l, &plat);
+            let child = Genetic::crossover(&a, &b, l, &plat, g.rng());
+            child.validate(l, &plat).map_err(|e| format!("{e}: {}", child.describe()))
+        });
+    }
+
+    #[test]
+    fn ga_finds_reasonable_solution() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(600), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = Genetic::new(GaOptions::default()).explore(&mut eval);
+        let single = crate::pipeline::simulator::throughput(
+            &net,
+            &plat,
+            &db,
+            &PipelineConfig::single_stage(net.len(), 2),
+        );
+        assert!(sol.best_throughput > single);
+        assert!(sol.best_config.validate(net.len(), &plat).is_ok());
+    }
+
+    #[test]
+    fn ga_deterministic_per_seed() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let run = |seed| {
+            let opts = EvalOptions { max_evals: Some(120), ..Default::default() };
+            let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+            Genetic::new(GaOptions { rng_seed: seed, ..Default::default() })
+                .explore(&mut eval)
+                .best_throughput
+        };
+        assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn ga_respects_budget() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(30), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = Genetic::new(GaOptions::default()).explore(&mut eval);
+        assert!(sol.n_evals <= 31);
+    }
+
+    #[test]
+    fn elitism_keeps_best_monotone() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(400), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = Genetic::new(GaOptions::default()).explore(&mut eval);
+        for w in sol.trace.windows(2) {
+            assert!(w[1].throughput >= w[0].throughput);
+        }
+    }
+}

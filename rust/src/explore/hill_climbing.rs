@@ -1,0 +1,167 @@
+//! Hill Climbing baseline (§7.2): steepest-ascent local search over the
+//! shared neighbourhood, with optional random restarts. The paper runs
+//! `HC` from a random start and `HC_s` from the Shisha seed.
+
+use super::simulated_annealing::Start;
+use super::{neighbors, random_config, Evaluator, Explorer, Solution};
+use crate::pipeline::PipelineConfig;
+use crate::rng::Xoshiro256;
+
+/// Hill-climbing options.
+#[derive(Debug, Clone)]
+pub struct HcOptions {
+    /// Starting configuration.
+    pub start: Start,
+    /// Random restarts after reaching a local optimum (0 = plain HC).
+    pub restarts: u32,
+    /// PRNG seed (restart starting points).
+    pub rng_seed: u64,
+}
+
+impl Default for HcOptions {
+    fn default() -> Self {
+        Self { start: Start::Random, restarts: 3, rng_seed: 0x4C }
+    }
+}
+
+/// Steepest-ascent hill climbing.
+pub struct HillClimbing {
+    opts: HcOptions,
+    name: &'static str,
+}
+
+impl HillClimbing {
+    /// HC from a random start.
+    pub fn new(opts: HcOptions) -> Self {
+        let name = match opts.start {
+            Start::Random => "HC",
+            Start::From(_) => "HC_s",
+        };
+        Self { opts, name }
+    }
+
+    /// `HC_s`: seeded variant (no restarts — it refines the given seed).
+    pub fn seeded(seed: PipelineConfig) -> Self {
+        Self::new(HcOptions { start: Start::From(seed), restarts: 0, ..Default::default() })
+    }
+
+    /// One climb to a local optimum; returns when no neighbour improves.
+    fn climb(&self, eval: &mut Evaluator<'_>, mut current: PipelineConfig) {
+        let plat = eval.platform().clone();
+        let mut current_tp = eval.evaluate(&current);
+        loop {
+            if eval.exhausted() {
+                return;
+            }
+            let mut best_next: Option<(PipelineConfig, f64)> = None;
+            for cand in neighbors(&current, &plat) {
+                if eval.exhausted() {
+                    return;
+                }
+                let tp = eval.evaluate(&cand);
+                if tp > current_tp && best_next.as_ref().map_or(true, |(_, b)| tp > *b) {
+                    best_next = Some((cand, tp));
+                }
+            }
+            match best_next {
+                Some((c, tp)) => {
+                    current = c;
+                    current_tp = tp;
+                }
+                None => return, // local optimum
+            }
+        }
+    }
+}
+
+impl Explorer for HillClimbing {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let mut rng = Xoshiro256::seed_from(self.opts.rng_seed);
+        let l = eval.network().len();
+        let plat = eval.platform().clone();
+        let start = match &self.opts.start {
+            Start::Random => random_config(l, &plat, &mut rng),
+            Start::From(c) => c.clone(),
+        };
+        self.climb(eval, start);
+        for _ in 0..self.opts.restarts {
+            if eval.exhausted() {
+                break;
+            }
+            let restart = random_config(l, &plat, &mut rng);
+            self.climb(eval, restart);
+        }
+        eval.solution(self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::EvalOptions;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+
+    fn setup() -> (crate::model::Network, crate::platform::Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn hc_reaches_local_optimum() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(5_000), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = HillClimbing::new(HcOptions { restarts: 0, ..Default::default() }).explore(&mut eval);
+        // verify local optimality of the returned best w.r.t. neighbourhood
+        let best_tp = sol.best_throughput;
+        for cand in super::neighbors(&sol.best_config, &plat) {
+            let tp = crate::pipeline::simulator::throughput(&net, &plat, &db, &cand);
+            assert!(tp <= best_tp + 1e-12, "not a local optimum");
+        }
+    }
+
+    #[test]
+    fn seeded_hc_at_least_seed_quality() {
+        let (net, plat, db) = setup();
+        let seed = crate::explore::shisha::generate_seed(
+            &net,
+            &plat,
+            crate::explore::shisha::AssignmentChoice::RankW,
+            0,
+        );
+        let seed_tp = crate::pipeline::simulator::throughput(&net, &plat, &db, &seed.config);
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = HillClimbing::seeded(seed.config).explore(&mut eval);
+        assert_eq!(sol.algorithm, "HC_s");
+        assert!(sol.best_throughput >= seed_tp);
+    }
+
+    #[test]
+    fn restarts_spend_more_evals() {
+        let (net, plat, db) = setup();
+        let run = |restarts| {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            HillClimbing::new(HcOptions { restarts, rng_seed: 1, ..Default::default() })
+                .explore(&mut eval)
+                .n_evals
+        };
+        assert!(run(3) > run(0));
+    }
+
+    #[test]
+    fn respects_budget() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(7), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = HillClimbing::new(HcOptions::default()).explore(&mut eval);
+        assert!(sol.n_evals <= 8);
+    }
+}

@@ -1,0 +1,581 @@
+//! Design-space exploration: Shisha and every baseline the paper compares
+//! against (§7: Simulated Annealing, Hill Climbing, Random Walk, Exhaustive
+//! Search, Pipe-Search).
+//!
+//! ## The online-cost model
+//!
+//! All algorithms drive an [`Evaluator`], which plays the role of the
+//! paper's measurement substrate: it returns the throughput of a
+//! configuration (from the perf database / pipeline simulator) **and
+//! charges a virtual clock the cost of having tried it online** — the
+//! makespan of pushing `probe_inputs` inputs through that pipeline, plus a
+//! per-trial algorithm overhead. Slow configurations therefore cost more
+//! exploration time, which is exactly the effect that makes blind search
+//! expensive online and guided search cheap (Figure 4). Database-building
+//! approaches (Exhaustive Search, Pipe-Search) additionally charge a
+//! per-enumerated-configuration generation cost, reproducing the ~1200 s
+//! setup plateau the paper reports.
+
+pub mod exhaustive;
+pub mod genetic;
+pub mod hill_climbing;
+pub mod pipe_search;
+pub mod random_walk;
+pub mod shisha;
+pub mod simulated_annealing;
+
+use crate::model::Network;
+use crate::perfdb::PerfDb;
+use crate::pipeline::{simulator, PipelineConfig};
+use crate::platform::{EpId, Platform};
+use crate::rng::Xoshiro256;
+
+/// One point of a convergence trace: best throughput after `time_s` of
+/// (virtual) online exploration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    /// Virtual online time, seconds.
+    pub time_s: f64,
+    /// Best throughput found so far, images/s.
+    pub throughput: f64,
+    /// Evaluations consumed so far.
+    pub evals: u64,
+}
+
+/// Options controlling the evaluator's online-cost accounting.
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Inputs pushed through a candidate pipeline per trial.
+    pub probe_inputs: u64,
+    /// Fixed per-trial overhead (reconfiguration, bookkeeping), seconds.
+    pub trial_overhead_s: f64,
+    /// Per-configuration cost of *generating* a configuration database
+    /// (charged by ES / Pipe-Search), seconds. 1 ms/config reproduces the
+    /// paper's ~1200 s for SynthNet on 8 EPs at depth ≤ 4.
+    pub db_gen_per_config_s: f64,
+    /// Optional virtual-time budget; explorers should stop when exhausted.
+    pub time_limit_s: Option<f64>,
+    /// Optional cap on evaluations.
+    pub max_evals: Option<u64>,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        Self {
+            probe_inputs: 10,
+            trial_overhead_s: 1e-3,
+            db_gen_per_config_s: 1e-3,
+            time_limit_s: None,
+            max_evals: None,
+        }
+    }
+}
+
+/// The measurement substrate explorers query. See module docs.
+pub struct Evaluator<'a> {
+    net: &'a Network,
+    plat: &'a Platform,
+    db: &'a PerfDb,
+    /// Accounting options.
+    pub opts: EvalOptions,
+    virtual_time_s: f64,
+    n_evals: u64,
+    best: Option<(PipelineConfig, f64)>,
+    trace: Vec<TracePoint>,
+}
+
+impl<'a> Evaluator<'a> {
+    /// New evaluator with default options.
+    pub fn new(net: &'a Network, plat: &'a Platform, db: &'a PerfDb) -> Self {
+        Self::with_options(net, plat, db, EvalOptions::default())
+    }
+
+    /// New evaluator with explicit options.
+    pub fn with_options(net: &'a Network, plat: &'a Platform, db: &'a PerfDb, opts: EvalOptions) -> Self {
+        Self {
+            net,
+            plat,
+            db,
+            opts,
+            virtual_time_s: 0.0,
+            n_evals: 0,
+            best: None,
+            trace: Vec::new(),
+        }
+    }
+
+    /// The network under exploration.
+    pub fn network(&self) -> &Network {
+        self.net
+    }
+
+    /// The platform under exploration.
+    pub fn platform(&self) -> &Platform {
+        self.plat
+    }
+
+    /// The time database (explorers may consult static info only through
+    /// the seed generator; direct queries here are for tests/benches).
+    pub fn db(&self) -> &PerfDb {
+        self.db
+    }
+
+    /// Evaluate a configuration *online*: returns throughput and charges
+    /// the virtual clock.
+    pub fn evaluate(&mut self, cfg: &PipelineConfig) -> f64 {
+        debug_assert!(cfg.validate(self.net.len(), self.plat).is_ok(), "invalid {}", cfg.describe());
+        let tp = simulator::throughput(self.net, self.plat, self.db, cfg);
+        let cost = simulator::makespan(self.net, self.plat, self.db, cfg, self.opts.probe_inputs)
+            + self.opts.trial_overhead_s;
+        self.virtual_time_s += cost;
+        self.n_evals += 1;
+        let improved = self.best.as_ref().map_or(true, |(_, b)| tp > *b);
+        if improved {
+            self.best = Some((cfg.clone(), tp));
+            self.trace.push(TracePoint {
+                time_s: self.virtual_time_s,
+                throughput: tp,
+                evals: self.n_evals,
+            });
+        }
+        tp
+    }
+
+    /// Charge a fixed setup cost (database generation for ES/PS).
+    pub fn charge_setup(&mut self, seconds: f64) {
+        self.virtual_time_s += seconds;
+    }
+
+    /// Virtual online time consumed so far.
+    pub fn virtual_time_s(&self) -> f64 {
+        self.virtual_time_s
+    }
+
+    /// Evaluations consumed so far.
+    pub fn n_evals(&self) -> u64 {
+        self.n_evals
+    }
+
+    /// True once the time or evaluation budget is exhausted.
+    pub fn exhausted(&self) -> bool {
+        if let Some(t) = self.opts.time_limit_s {
+            if self.virtual_time_s >= t {
+                return true;
+            }
+        }
+        if let Some(m) = self.opts.max_evals {
+            if self.n_evals >= m {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Best (config, throughput) so far.
+    pub fn best(&self) -> Option<&(PipelineConfig, f64)> {
+        self.best.as_ref()
+    }
+
+    /// Build the final [`Solution`] for an explorer.
+    pub fn solution(&self, algo: &str) -> Solution {
+        let (cfg, tp) = self
+            .best
+            .clone()
+            .expect("solution() requires at least one evaluation");
+        Solution {
+            algorithm: algo.to_string(),
+            best_config: cfg,
+            best_throughput: tp,
+            n_evals: self.n_evals,
+            virtual_time_s: self.virtual_time_s,
+            trace: self.trace.clone(),
+        }
+    }
+}
+
+/// Result of one exploration run.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Algorithm name.
+    pub algorithm: String,
+    /// Best configuration found.
+    pub best_config: PipelineConfig,
+    /// Its throughput (images/s).
+    pub best_throughput: f64,
+    /// Configurations evaluated.
+    pub n_evals: u64,
+    /// Total virtual online time, seconds (the paper's convergence time).
+    pub virtual_time_s: f64,
+    /// Best-so-far convergence curve.
+    pub trace: Vec<TracePoint>,
+}
+
+impl Solution {
+    /// Virtual time at which the final best configuration was found
+    /// (the paper's convergence time — later trials did not improve).
+    pub fn convergence_time_s(&self) -> f64 {
+        self.trace.last().map_or(0.0, |p| p.time_s)
+    }
+
+    /// Fraction of the given design-space size explored.
+    pub fn explored_fraction(&self, space: u128) -> f64 {
+        if space == 0 {
+            return 0.0;
+        }
+        self.n_evals as f64 / space as f64
+    }
+}
+
+/// An exploration algorithm.
+pub trait Explorer {
+    /// Algorithm name for reports.
+    fn name(&self) -> &str;
+    /// Run the exploration against the evaluator; must perform at least one
+    /// evaluation.
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution;
+}
+
+/// Generate a uniformly random valid configuration.
+pub fn random_config(l: usize, plat: &Platform, rng: &mut Xoshiro256) -> PipelineConfig {
+    let max_n = l.min(plat.n_eps());
+    let n = rng.gen_range(1, max_n + 1);
+    // choose n-1 distinct cut points in 1..l
+    let mut stages = vec![0usize; n];
+    if n == 1 {
+        stages[0] = l;
+    } else {
+        let mut cuts = Vec::with_capacity(n - 1);
+        while cuts.len() < n - 1 {
+            let c = rng.gen_range(1, l);
+            if !cuts.contains(&c) {
+                cuts.push(c);
+            }
+        }
+        cuts.sort_unstable();
+        let mut prev = 0;
+        for (i, &c) in cuts.iter().enumerate() {
+            stages[i] = c - prev;
+            prev = c;
+        }
+        stages[n - 1] = l - prev;
+    }
+    let mut ids: Vec<EpId> = (0..plat.n_eps()).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(n);
+    PipelineConfig::new(stages, ids)
+}
+
+/// All legal single-step neighbours of a configuration: layer moves across
+/// each stage boundary (both directions), EP swaps between stages,
+/// reassignments to unused EPs, stage merges, and balanced splits onto
+/// unused EPs.
+pub fn neighbors(cfg: &PipelineConfig, plat: &Platform) -> Vec<PipelineConfig> {
+    let mut out = Vec::new();
+    let n = cfg.n_stages();
+    // layer moves
+    for s in 0..n {
+        if s > 0 {
+            if let Some(c) = cfg.move_layer(s, s - 1) {
+                out.push(c);
+            }
+        }
+        if s + 1 < n {
+            if let Some(c) = cfg.move_layer(s, s + 1) {
+                out.push(c);
+            }
+        }
+    }
+    // EP swaps
+    for a in 0..n {
+        for b in a + 1..n {
+            if let Some(c) = cfg.swap_eps(a, b) {
+                out.push(c);
+            }
+        }
+    }
+    // reassignment to unused EPs
+    let used: Vec<bool> = {
+        let mut u = vec![false; plat.n_eps()];
+        for &e in &cfg.assignment {
+            u[e] = true;
+        }
+        u
+    };
+    for s in 0..n {
+        for (ep, &u) in used.iter().enumerate() {
+            if !u {
+                if let Some(c) = cfg.reassign(s, ep) {
+                    out.push(c);
+                }
+            }
+        }
+    }
+    // merges
+    for s in 0..n.saturating_sub(1) {
+        if let Some(c) = cfg.merge_stages(s) {
+            out.push(c);
+        }
+    }
+    // balanced splits onto each unused EP
+    for s in 0..n {
+        if cfg.stages[s] >= 2 {
+            for (ep, &u) in used.iter().enumerate() {
+                if !u {
+                    if let Some(c) = cfg.split_stage(s, cfg.stages[s] / 2, ep) {
+                        out.push(c);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A uniformly random legal neighbour (None if the neighbourhood is empty,
+/// which cannot happen for L ≥ 2 on heterogeneous platforms).
+pub fn random_neighbor(
+    cfg: &PipelineConfig,
+    plat: &Platform,
+    rng: &mut Xoshiro256,
+) -> Option<PipelineConfig> {
+    let ns = neighbors(cfg, plat);
+    if ns.is_empty() {
+        None
+    } else {
+        Some(ns[rng.gen_range(0, ns.len())].clone())
+    }
+}
+
+/// O(1) random legal move (perf hot path for SA — §Perf L3-1).
+///
+/// Samples a move *kind* and its indices directly instead of materialising
+/// the whole neighbourhood (`neighbors()` allocates ~n² configs). Not
+/// perfectly uniform over the neighbourhood — SA only needs a reversible
+/// proposal distribution with full support, which this provides: every
+/// `neighbors()` move kind is sampled with positive probability, with up
+/// to `tries` rejection rounds before falling back to the exact sampler.
+pub fn random_move(
+    cfg: &PipelineConfig,
+    plat: &Platform,
+    rng: &mut Xoshiro256,
+) -> Option<PipelineConfig> {
+    let n = cfg.n_stages();
+    let e = plat.n_eps();
+    let tries = 12;
+    for _ in 0..tries {
+        let cand = match rng.gen_range(0, 5) {
+            0 => {
+                // layer move across a random boundary, random direction
+                if n < 2 {
+                    continue;
+                }
+                let s = rng.gen_range(0, n);
+                let to = if s == 0 {
+                    1
+                } else if s == n - 1 {
+                    n - 2
+                } else if rng.gen_bool(0.5) {
+                    s - 1
+                } else {
+                    s + 1
+                };
+                cfg.move_layer(s, to)
+            }
+            1 => {
+                // EP swap between two random stages
+                if n < 2 {
+                    continue;
+                }
+                let a = rng.gen_range(0, n);
+                let b = rng.gen_range(0, n);
+                cfg.swap_eps(a, b)
+            }
+            2 => {
+                // reassign a random stage to a random (hopefully free) EP
+                let s = rng.gen_range(0, n);
+                let ep = rng.gen_range(0, e);
+                cfg.reassign(s, ep)
+            }
+            3 => {
+                // merge a random adjacent pair
+                if n < 2 {
+                    continue;
+                }
+                cfg.merge_stages(rng.gen_range(0, n - 1))
+            }
+            _ => {
+                // split a random stage in half onto a random EP
+                if n >= e {
+                    continue;
+                }
+                let s = rng.gen_range(0, n);
+                if cfg.stages[s] < 2 {
+                    continue;
+                }
+                let ep = rng.gen_range(0, e);
+                cfg.split_stage(s, cfg.stages[s] / 2, ep)
+            }
+        };
+        if cand.is_some() {
+            return cand;
+        }
+    }
+    // pathological corner (tiny configs): fall back to the exact sampler
+    random_neighbor(cfg, plat, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::CostModel;
+    use crate::platform::configs;
+    use crate::testutil;
+
+    fn setup() -> (Network, Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn evaluator_charges_time_and_counts() {
+        let (net, plat, db) = setup();
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let tp = eval.evaluate(&cfg);
+        assert!(tp > 0.0);
+        assert_eq!(eval.n_evals(), 1);
+        assert!(eval.virtual_time_s() > 0.0);
+    }
+
+    #[test]
+    fn slow_configs_cost_more() {
+        let (net, plat, db) = setup();
+        let slow_cfg = PipelineConfig::single_stage(18, 2); // all on a SEP
+        let fast_cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]); // split on FEPs
+        let mut e1 = Evaluator::new(&net, &plat, &db);
+        e1.evaluate(&slow_cfg);
+        let mut e2 = Evaluator::new(&net, &plat, &db);
+        e2.evaluate(&fast_cfg);
+        assert!(e1.virtual_time_s() > e2.virtual_time_s());
+    }
+
+    #[test]
+    fn trace_records_improvements_only() {
+        let (net, plat, db) = setup();
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let good = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let bad = PipelineConfig::single_stage(18, 2);
+        eval.evaluate(&good);
+        eval.evaluate(&bad); // worse: no new trace point
+        let sol = eval.solution("t");
+        assert_eq!(sol.trace.len(), 1);
+        assert_eq!(sol.n_evals, 2);
+        assert_eq!(sol.best_config, good);
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(2), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        assert!(!eval.exhausted());
+        eval.evaluate(&cfg);
+        eval.evaluate(&cfg);
+        assert!(eval.exhausted());
+    }
+
+    #[test]
+    fn time_limit_exhaustion() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { time_limit_s: Some(1e-9), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        eval.evaluate(&PipelineConfig::new(vec![9, 9], vec![0, 1]));
+        assert!(eval.exhausted());
+    }
+
+    #[test]
+    fn random_configs_valid_property() {
+        testutil::check("random_config valid", 0xABCD, 300, |g| {
+            let plat = g.platform(2, 9);
+            let l = g.usize(2, 60);
+            let cfg = random_config(l, &plat, g.rng());
+            cfg.validate(l, &plat).map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn neighbors_all_valid_property() {
+        testutil::check("neighbors valid", 0xBEEF, 150, |g| {
+            let plat = g.platform(2, 7);
+            let l = g.usize(2, 30);
+            let cfg = g.config(l, &plat);
+            for n in neighbors(&cfg, &plat) {
+                n.validate(l, &plat)
+                    .map_err(|e| format!("{e}: {} -> {}", cfg.describe(), n.describe()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_move_always_valid_property() {
+        testutil::check("random_move valid", 0xD00D, 400, |g| {
+            let plat = g.platform(2, 8);
+            let l = g.usize(2, 30);
+            let cfg = g.config(l, &plat);
+            match random_move(&cfg, &plat, g.rng()) {
+                Some(m) => m.validate(l, &plat).map_err(|e| format!("{e}: {}", m.describe())),
+                None => Err(format!("no move from {}", cfg.describe())),
+            }
+        });
+    }
+
+    #[test]
+    fn random_move_covers_all_kinds() {
+        let (_, plat, _) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let mut rng = crate::rng::Xoshiro256::seed_from(3);
+        let mut kinds = [false; 4]; // move, swap/reassign, merge, split
+        for _ in 0..400 {
+            let m = random_move(&cfg, &plat, &mut rng).unwrap();
+            if m.n_stages() == 1 { kinds[2] = true; }
+            else if m.n_stages() == 3 { kinds[3] = true; }
+            else if m.stages != cfg.stages { kinds[0] = true; }
+            else { kinds[1] = true; }
+        }
+        assert!(kinds.iter().all(|&k| k), "kinds hit: {kinds:?}");
+    }
+
+    #[test]
+    fn neighbors_nonempty_for_nontrivial() {
+        let (_, plat, _) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        assert!(!neighbors(&cfg, &plat).is_empty());
+    }
+
+    #[test]
+    fn neighborhood_contains_all_move_kinds() {
+        let (_, plat, _) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let ns = neighbors(&cfg, &plat);
+        assert!(ns.iter().any(|c| c.n_stages() == 1), "has a merge");
+        assert!(ns.iter().any(|c| c.n_stages() == 3), "has a split");
+        assert!(ns.iter().any(|c| c.stages == vec![8, 10]), "has a layer move");
+        assert!(ns.iter().any(|c| c.assignment == vec![2, 0]), "has a swap");
+        assert!(ns.iter().any(|c| c.assignment.contains(&1)), "has a reassign");
+    }
+
+    #[test]
+    fn solution_metrics() {
+        let (net, plat, db) = setup();
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        eval.evaluate(&PipelineConfig::new(vec![9, 9], vec![0, 1]));
+        let sol = eval.solution("x");
+        assert!(sol.convergence_time_s() > 0.0);
+        assert!(sol.explored_fraction(1000) > 0.0 && sol.explored_fraction(1000) < 1.0);
+    }
+}

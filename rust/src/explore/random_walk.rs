@@ -1,0 +1,87 @@
+//! Random Walk baseline (§7.2): sample uniformly random valid
+//! configurations until the budget runs out. The paper runs RW "for a
+//! longer period of time" as a sanity baseline.
+
+use super::{random_config, Evaluator, Explorer, Solution};
+use crate::rng::Xoshiro256;
+
+/// Random-walk options.
+#[derive(Debug, Clone)]
+pub struct RwOptions {
+    /// Maximum samples (also bounded by the evaluator budget).
+    pub max_samples: u64,
+    /// PRNG seed.
+    pub rng_seed: u64,
+}
+
+impl Default for RwOptions {
+    fn default() -> Self {
+        Self { max_samples: 5_000, rng_seed: 0x57 }
+    }
+}
+
+/// Uniform random sampling explorer.
+pub struct RandomWalk {
+    opts: RwOptions,
+}
+
+impl RandomWalk {
+    /// Create with options.
+    pub fn new(opts: RwOptions) -> Self {
+        Self { opts }
+    }
+}
+
+impl Explorer for RandomWalk {
+    fn name(&self) -> &str {
+        "RW"
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let mut rng = Xoshiro256::seed_from(self.opts.rng_seed);
+        let l = eval.network().len();
+        let plat = eval.platform().clone();
+        for _ in 0..self.opts.max_samples {
+            if eval.exhausted() && eval.n_evals() > 0 {
+                break;
+            }
+            let cfg = random_config(l, &plat, &mut rng);
+            eval.evaluate(&cfg);
+        }
+        eval.solution("RW")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::EvalOptions;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+
+    #[test]
+    fn rw_improves_with_budget() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let run = |n| {
+            let opts = EvalOptions { max_evals: Some(n), ..Default::default() };
+            let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+            RandomWalk::new(RwOptions::default()).explore(&mut eval).best_throughput
+        };
+        assert!(run(500) >= run(2));
+    }
+
+    #[test]
+    fn rw_always_produces_solution() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(1), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = RandomWalk::new(RwOptions::default()).explore(&mut eval);
+        assert_eq!(sol.n_evals, 1);
+        assert!(sol.best_throughput > 0.0);
+    }
+}

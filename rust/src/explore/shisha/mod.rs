@@ -1,0 +1,233 @@
+//! Shisha — the paper's contribution (§5): a two-step online scheduler.
+//!
+//! 1. [`seed`] — **seed generation** (Algorithm 1): merge the CNN's layer
+//!    chain into `N` pipeline stages by repeatedly folding the lightest
+//!    layer into its lighter neighbour, then assign stages to EPs with one
+//!    of the ranking heuristics (`Rank_l`, `Rank_w`, random — Table 2).
+//! 2. [`tuning`] — **online tuning** (Algorithm 2): repeatedly move one
+//!    layer off the slowest stage towards a faster/lighter neighbouring
+//!    stage (`nFEP` / `nlFEP` balancing), measuring throughput online, and
+//!    stop after `α` consecutive non-improvements.
+
+pub mod seed;
+pub mod tuning;
+
+pub use seed::{generate_seed, AssignmentChoice, Seed};
+pub use tuning::{tune, BalancingChoice};
+
+use super::{Evaluator, Explorer, Solution};
+
+/// Heuristic identifiers H1–H6 of Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Heuristic {
+    /// H1: `Rank_l` assignment, `nlFEP` balancing.
+    H1,
+    /// H2: `Rank_l` assignment, `nFEP` balancing.
+    H2,
+    /// H3: `Rank_w` assignment, `nlFEP` balancing (the paper's
+    /// recommendation, §7.5).
+    H3,
+    /// H4: `Rank_w` assignment, `nFEP` balancing.
+    H4,
+    /// H5: random assignment, `nlFEP` balancing.
+    H5,
+    /// H6: random assignment, `nFEP` balancing.
+    H6,
+}
+
+impl Heuristic {
+    /// All heuristics in Table-2 order.
+    pub const ALL: [Heuristic; 6] = [
+        Heuristic::H1,
+        Heuristic::H2,
+        Heuristic::H3,
+        Heuristic::H4,
+        Heuristic::H5,
+        Heuristic::H6,
+    ];
+
+    /// The (assignment, balancing) pair of this heuristic.
+    pub fn choices(self) -> (AssignmentChoice, BalancingChoice) {
+        match self {
+            Heuristic::H1 => (AssignmentChoice::RankL, BalancingChoice::NlFep),
+            Heuristic::H2 => (AssignmentChoice::RankL, BalancingChoice::NFep),
+            Heuristic::H3 => (AssignmentChoice::RankW, BalancingChoice::NlFep),
+            Heuristic::H4 => (AssignmentChoice::RankW, BalancingChoice::NFep),
+            Heuristic::H5 => (AssignmentChoice::Random, BalancingChoice::NlFep),
+            Heuristic::H6 => (AssignmentChoice::Random, BalancingChoice::NFep),
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Heuristic::H1 => "H1",
+            Heuristic::H2 => "H2",
+            Heuristic::H3 => "H3",
+            Heuristic::H4 => "H4",
+            Heuristic::H5 => "H5",
+            Heuristic::H6 => "H6",
+        }
+    }
+}
+
+/// Options for a full Shisha run.
+#[derive(Debug, Clone)]
+pub struct ShishaOptions {
+    /// Stage-to-EP assignment heuristic (Algorithm 1's choice `C`).
+    pub assignment: AssignmentChoice,
+    /// Balancing target choice for the tuning phase.
+    pub balancing: BalancingChoice,
+    /// `α`: consecutive non-improvements tolerated before stopping
+    /// (the paper uses α = 10).
+    pub alpha: u32,
+    /// Seed for the random-assignment heuristics (H5/H6).
+    pub rng_seed: u64,
+}
+
+impl Default for ShishaOptions {
+    fn default() -> Self {
+        // H3 is the paper's recommended configuration (§7.5).
+        Self {
+            assignment: AssignmentChoice::RankW,
+            balancing: BalancingChoice::NlFep,
+            alpha: 10,
+            rng_seed: 0x5515_A0_5EED,
+        }
+    }
+}
+
+impl ShishaOptions {
+    /// Options corresponding to a Table-2 heuristic.
+    pub fn heuristic(h: Heuristic) -> Self {
+        let (assignment, balancing) = h.choices();
+        Self { assignment, balancing, ..Default::default() }
+    }
+}
+
+/// The complete Shisha explorer: Algorithm 1 then Algorithm 2.
+pub struct ShishaExplorer {
+    opts: ShishaOptions,
+    name: String,
+}
+
+impl ShishaExplorer {
+    /// Create with explicit options.
+    pub fn new(opts: ShishaOptions) -> Self {
+        Self { name: format!("Shisha({:?},{:?})", opts.assignment, opts.balancing), opts }
+    }
+
+    /// Create from a Table-2 heuristic id.
+    pub fn heuristic(h: Heuristic) -> Self {
+        Self { name: format!("Shisha-{}", h.name()), opts: ShishaOptions::heuristic(h) }
+    }
+}
+
+impl Explorer for ShishaExplorer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let seed = generate_seed(
+            eval.network(),
+            eval.platform(),
+            self.opts.assignment,
+            self.opts.rng_seed,
+        );
+        tune(eval, seed.config, self.opts.balancing, self.opts.alpha);
+        let mut sol = eval.solution(&self.name);
+        sol.algorithm = self.name.clone();
+        sol
+    }
+}
+
+/// Shisha in the paper's recommended *deployment* mode: "we keep both
+/// options open for the user to select. The complexity of Shisha is
+/// negligible therefore it does not cause much work to test different
+/// choices for a given CNN and computing platform" (§5.2). This explorer
+/// runs the four deterministic heuristics (H1–H4) back to back inside one
+/// evaluator — still only ~4·(α + stage count) trials, a tiny fraction of
+/// the design space — and reports the best.
+pub struct ShishaAuto {
+    /// α per heuristic run.
+    pub alpha: u32,
+}
+
+impl ShishaAuto {
+    /// Auto-mode with the paper's α = 10.
+    pub fn new() -> Self {
+        Self { alpha: 10 }
+    }
+}
+
+impl Default for ShishaAuto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Explorer for ShishaAuto {
+    fn name(&self) -> &str {
+        "Shisha"
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        for h in [Heuristic::H1, Heuristic::H2, Heuristic::H3, Heuristic::H4] {
+            let mut opts = ShishaOptions::heuristic(h);
+            opts.alpha = self.alpha;
+            let seed = generate_seed(eval.network(), eval.platform(), opts.assignment, opts.rng_seed);
+            tune(eval, seed.config, opts.balancing, opts.alpha);
+            if eval.exhausted() {
+                break;
+            }
+        }
+        let mut sol = eval.solution("Shisha");
+        sol.algorithm = "Shisha".into();
+        sol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+
+    #[test]
+    fn all_heuristics_run_and_find_solutions() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        for h in Heuristic::ALL {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            let sol = ShishaExplorer::heuristic(h).explore(&mut eval);
+            assert!(sol.best_throughput > 0.0, "{}", h.name());
+            assert!(sol.best_config.validate(net.len(), &plat).is_ok());
+        }
+    }
+
+    #[test]
+    fn explores_tiny_fraction_of_space() {
+        // Paper §7.3: Shisha tries ~25-35 points with alpha=10 and explores
+        // ~0.1% of the ResNet50 design space.
+        let net = networks::resnet50();
+        let plat = configs::fig5_platform();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+        assert!(sol.n_evals <= 120, "evals {}", sol.n_evals);
+        let space = crate::pipeline::space::full_space_size(net.len(), plat.n_eps());
+        assert!(sol.explored_fraction(space) < 0.005, "{}", sol.explored_fraction(space));
+    }
+
+    #[test]
+    fn heuristic_table_mapping() {
+        assert_eq!(
+            Heuristic::H3.choices(),
+            (AssignmentChoice::RankW, BalancingChoice::NlFep)
+        );
+        assert_eq!(Heuristic::H6.choices().0, AssignmentChoice::Random);
+    }
+}

@@ -1,0 +1,283 @@
+//! Algorithm 1 — Shisha seed generation.
+//!
+//! Phase 1 (lines 3–8): starting from one group per layer, repeat `L − N`
+//! times: find the group with the lowest Eq. (1) weight and merge it with
+//! its lighter immediate neighbour (layers form a chain, so only adjacent
+//! groups may merge). The surviving `N` groups become the pipeline stages.
+//!
+//! Phase 2 (lines 9–12): rank the stages according to the assignment choice
+//! `C` and map them onto the performance-sorted EP list `H_e`:
+//!
+//! * [`AssignmentChoice::RankL`] — stages ranked by **layer count**; the
+//!   stages with the most layers go to SEPs (they hold many light layers,
+//!   which gives the tuning phase freedom to move layers off them);
+//! * [`AssignmentChoice::RankW`] — stages ranked by **aggregated weight**;
+//!   the heaviest stages go to the fastest EPs (load balancing);
+//! * [`AssignmentChoice::Random`] — no heuristic (H5/H6 ablation).
+
+use crate::model::Network;
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
+use crate::rng::Xoshiro256;
+
+/// Stage-to-EP assignment heuristic (Algorithm 1's choice `C`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignmentChoice {
+    /// `Rank_l`: most-layers stages onto SEPs.
+    RankL,
+    /// `Rank_w`: heaviest stages onto FEPs.
+    RankW,
+    /// Random assignment (ablation).
+    Random,
+}
+
+/// Output of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct Seed {
+    /// The seed pipeline configuration (stage sizes + EP assignment).
+    pub config: PipelineConfig,
+    /// Aggregated Eq. (1) weight per stage.
+    pub stage_weights: Vec<u64>,
+}
+
+/// Phase 1: merge `L` layers into `n_stages` contiguous groups by folding
+/// the lightest group into its lighter neighbour. Returns per-stage layer
+/// counts and aggregated weights.
+pub fn merge_layers(weights: &[u64], n_stages: usize) -> (Vec<usize>, Vec<u64>) {
+    assert!(n_stages >= 1 && n_stages <= weights.len());
+    let mut sizes: Vec<usize> = vec![1; weights.len()];
+    let mut ws: Vec<u64> = weights.to_vec();
+    while ws.len() > n_stages {
+        // line 4: group with minimal weight (first on ties, deterministic)
+        let (mi, _) = ws
+            .iter()
+            .enumerate()
+            .min_by(|(ai, a), (bi, b)| a.cmp(b).then(ai.cmp(bi)))
+            .unwrap();
+        // line 5: lighter immediate neighbour
+        let ni = match (mi.checked_sub(1), mi + 1 < ws.len()) {
+            (Some(l), true) => {
+                if ws[l] <= ws[mi + 1] {
+                    l
+                } else {
+                    mi + 1
+                }
+            }
+            (Some(l), false) => l,
+            (None, true) => mi + 1,
+            (None, false) => unreachable!("ws.len() > n_stages >= 1"),
+        };
+        // line 6-7: merge
+        let (keep, gone) = if ni < mi { (ni, mi) } else { (mi, ni) };
+        ws[keep] += ws[gone];
+        sizes[keep] += sizes[gone];
+        ws.remove(gone);
+        sizes.remove(gone);
+    }
+    (sizes, ws)
+}
+
+/// Phase 2: assign the `N` stages to EPs per the chosen heuristic.
+/// Returns the EP id per stage (in stage order).
+pub fn assign_eps(
+    plat: &Platform,
+    sizes: &[usize],
+    stage_weights: &[u64],
+    choice: AssignmentChoice,
+    rng_seed: u64,
+) -> Vec<usize> {
+    let n = sizes.len();
+    // H_e: EPs in descending performance; we use the top-N.
+    let he: Vec<usize> = plat.eps_by_rank().into_iter().take(n).collect();
+
+    // Rank stages: produce stage indices in "rank order" (rank 0 first),
+    // then hand EPs out in the matching order.
+    let mut stage_order: Vec<usize> = (0..n).collect();
+    let ep_order: Vec<usize> = match choice {
+        AssignmentChoice::RankL => {
+            // most layers first; ties by weight ascending (lighter stage of
+            // equal length is "more movable")
+            stage_order.sort_by(|&a, &b| {
+                sizes[b]
+                    .cmp(&sizes[a])
+                    .then(stage_weights[a].cmp(&stage_weights[b]))
+                    .then(a.cmp(&b))
+            });
+            // highest rank -> SEP: hand out H_e from the back (slowest first)
+            he.iter().rev().cloned().collect()
+        }
+        AssignmentChoice::RankW => {
+            // heaviest first
+            stage_order.sort_by(|&a, &b| stage_weights[b].cmp(&stage_weights[a]).then(a.cmp(&b)));
+            // heaviest -> fastest
+            he.clone()
+        }
+        AssignmentChoice::Random => {
+            let mut rng = Xoshiro256::seed_from(rng_seed);
+            let mut shuffled = he.clone();
+            rng.shuffle(&mut shuffled);
+            shuffled
+        }
+    };
+
+    let mut assignment = vec![usize::MAX; n];
+    for (rank, &stage) in stage_order.iter().enumerate() {
+        assignment[stage] = ep_order[rank];
+    }
+    assignment
+}
+
+/// Algorithm 1 end-to-end: seed configuration for `net` on `plat`.
+///
+/// `N = min(L, #EPs)` stages; assignment per `choice`.
+pub fn generate_seed(
+    net: &Network,
+    plat: &Platform,
+    choice: AssignmentChoice,
+    rng_seed: u64,
+) -> Seed {
+    let weights = net.weights();
+    let n_stages = weights.len().min(plat.n_eps()).max(1);
+    let (sizes, stage_weights) = merge_layers(&weights, n_stages);
+    let assignment = assign_eps(plat, &sizes, &stage_weights, choice, rng_seed);
+    Seed { config: PipelineConfig::new(sizes, assignment), stage_weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+    use crate::testutil;
+
+    #[test]
+    fn merge_reduces_to_n_contiguous_groups() {
+        let w = vec![10, 1, 1, 10, 5, 5];
+        let (sizes, ws) = merge_layers(&w, 3);
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert_eq!(ws.iter().sum::<u64>(), 32);
+    }
+
+    #[test]
+    fn merge_folds_lightest_into_lighter_neighbor() {
+        // [10, 1, 2, 10] one pass: min=1 at idx1, neighbours 10 and 2 -> merge with 2.
+        let (sizes, ws) = merge_layers(&[10, 1, 2, 10], 3);
+        assert_eq!(sizes, vec![1, 2, 1]);
+        assert_eq!(ws, vec![10, 3, 10]);
+    }
+
+    #[test]
+    fn merge_edge_layer_has_single_neighbor() {
+        // min at position 0 must merge right.
+        let (sizes, ws) = merge_layers(&[1, 10, 10], 2);
+        assert_eq!(sizes, vec![2, 1]);
+        assert_eq!(ws, vec![11, 10]);
+    }
+
+    #[test]
+    fn merge_balances_weights() {
+        // Merging should make stage weights more even than the worst case.
+        let net = networks::resnet50();
+        let w = net.weights();
+        let (_, ws) = merge_layers(&w, 4);
+        let total: u64 = w.iter().sum();
+        let max_stage = *ws.iter().max().unwrap() as f64;
+        // a balanced 4-way split would be total/4; accept up to 2.5x of that
+        assert!(max_stage < 2.5 * (total as f64 / 4.0), "max stage {max_stage}");
+    }
+
+    #[test]
+    fn merge_n1_single_group() {
+        let (sizes, ws) = merge_layers(&[3, 4, 5], 1);
+        assert_eq!(sizes, vec![3]);
+        assert_eq!(ws, vec![12]);
+    }
+
+    #[test]
+    fn rank_w_puts_heaviest_on_fastest() {
+        let plat = configs::c2(); // EPs 0,1 fast; 2,3 slow
+        let sizes = vec![1, 1, 1, 1];
+        let ws = vec![100, 5, 50, 10];
+        let a = assign_eps(&plat, &sizes, &ws, AssignmentChoice::RankW, 0);
+        // stage 0 heaviest -> best EP (0 or 1); stage 1 lightest -> slowest.
+        assert!(plat.eps[a[0]].is_fep());
+        assert!(!plat.eps[a[1]].is_fep());
+        assert!(plat.eps[a[2]].is_fep());
+        assert!(!plat.eps[a[3]].is_fep());
+    }
+
+    #[test]
+    fn rank_l_puts_many_layer_stages_on_seps() {
+        let plat = configs::c2();
+        let sizes = vec![8, 1, 6, 3];
+        let ws = vec![10, 100, 20, 30];
+        let a = assign_eps(&plat, &sizes, &ws, AssignmentChoice::RankL, 0);
+        // stages 0 (8 layers) and 2 (6 layers) -> SEPs
+        assert!(!plat.eps[a[0]].is_fep());
+        assert!(!plat.eps[a[2]].is_fep());
+        assert!(plat.eps[a[1]].is_fep());
+        assert!(plat.eps[a[3]].is_fep());
+    }
+
+    #[test]
+    fn random_assignment_deterministic_per_seed() {
+        let plat = configs::c5();
+        let sizes = vec![3; 8];
+        let ws = vec![1; 8];
+        let a1 = assign_eps(&plat, &sizes, &ws, AssignmentChoice::Random, 42);
+        let a2 = assign_eps(&plat, &sizes, &ws, AssignmentChoice::Random, 42);
+        let a3 = assign_eps(&plat, &sizes, &ws, AssignmentChoice::Random, 43);
+        assert_eq!(a1, a2);
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn seed_is_valid_config_for_all_nets_and_platforms() {
+        for net in ["resnet50", "yolov3", "alexnet", "synthnet"] {
+            let net = networks::by_name(net).unwrap();
+            for plat in configs::all_c() {
+                for choice in [AssignmentChoice::RankL, AssignmentChoice::RankW, AssignmentChoice::Random] {
+                    let seed = generate_seed(&net, &plat, choice, 7);
+                    assert_eq!(
+                        seed.config.validate(net.len(), &plat),
+                        Ok(()),
+                        "{} on {} with {:?}",
+                        net.name,
+                        plat.name,
+                        choice
+                    );
+                    assert_eq!(seed.config.n_stages(), net.len().min(plat.n_eps()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_property_valid_on_random_inputs() {
+        testutil::check("seed valid", 0x5EED, 200, |g| {
+            let net = g.network(2, 40);
+            let plat = g.platform(2, 9);
+            for choice in [AssignmentChoice::RankL, AssignmentChoice::RankW, AssignmentChoice::Random] {
+                let seed = generate_seed(&net, &plat, choice, 1);
+                seed.config
+                    .validate(net.len(), &plat)
+                    .map_err(|e| format!("{choice:?}: {e}"))?;
+                // stage weights must sum to the network total
+                let total: u64 = seed.stage_weights.iter().sum();
+                if total != net.total_weight() {
+                    return Err(format!("weight leak: {total} vs {}", net.total_weight()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_eps_than_layers_caps_stage_count() {
+        let net = networks::alexnet(); // 5 layers
+        let plat = configs::c5(); // 8 EPs
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        assert_eq!(seed.config.n_stages(), 5);
+    }
+}

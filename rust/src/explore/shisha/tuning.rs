@@ -1,0 +1,244 @@
+//! Algorithm 2 — Shisha online tuning.
+//!
+//! Starting from the seed configuration, repeatedly reduce the load of the
+//! slowest pipeline stage by moving one boundary layer to a neighbouring
+//! stage (the chain constraint means only the two adjacent stages are legal
+//! targets), re-measure throughput online, and stop after `α` consecutive
+//! non-improving trials. Per the paper the walk continues through worse
+//! configurations (line 7 updates `conf` unconditionally); the best visited
+//! configuration is what the evaluator reports.
+//!
+//! Two balancing choices (§5.2):
+//! * [`BalancingChoice::NFep`] — move to the **nearest fast EP**: the
+//!   adjacent stage whose EP has the higher performance score;
+//! * [`BalancingChoice::NlFep`] — move to the **nearest lightest fast
+//!   EP**: the adjacent stage with the lightest measured load (preferring
+//!   the faster EP on ties).
+
+use super::super::Evaluator;
+use crate::pipeline::{simulator, PipelineConfig};
+
+/// Balancing target choice for Algorithm 2 line 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancingChoice {
+    /// Nearest fast EP.
+    NFep,
+    /// Nearest lightest fast EP (the paper's recommendation).
+    NlFep,
+}
+
+/// Pick the target stage to receive one layer from `slowest`, or `None`
+/// when no legal move exists (slowest stage down to one layer, or a
+/// single-stage pipeline).
+pub fn pick_target(
+    eval: &Evaluator<'_>,
+    cfg: &PipelineConfig,
+    slowest: usize,
+    balancing: BalancingChoice,
+) -> Option<usize> {
+    if cfg.stages[slowest] <= 1 {
+        return None;
+    }
+    let mut candidates: Vec<usize> = Vec::with_capacity(2);
+    if slowest > 0 {
+        candidates.push(slowest - 1);
+    }
+    if slowest + 1 < cfg.n_stages() {
+        candidates.push(slowest + 1);
+    }
+    if candidates.is_empty() {
+        return None;
+    }
+    let plat = eval.platform();
+    match balancing {
+        BalancingChoice::NFep => candidates.into_iter().max_by(|&a, &b| {
+            let pa = plat.eps[cfg.assignment[a]].perf_score();
+            let pb = plat.eps[cfg.assignment[b]].perf_score();
+            pa.partial_cmp(&pb).unwrap().then(b.cmp(&a))
+        }),
+        BalancingChoice::NlFep => {
+            // "nearest lightest fast EP": among the adjacent stages, prefer
+            // those on an EP at least as fast as the slowest stage's own EP
+            // (the move should offload towards *fast* EPs); among those,
+            // pick the lightest by measured stage time. Fall back to the
+            // lightest neighbour when no faster EP is adjacent.
+            let ev = simulator::evaluate(eval.network(), plat, eval.db(), cfg);
+            let own = plat.eps[cfg.assignment[slowest]].perf_score();
+            let faster: Vec<usize> = candidates
+                .iter()
+                .copied()
+                .filter(|&c| plat.eps[cfg.assignment[c]].perf_score() >= own)
+                .collect();
+            let pool = if faster.is_empty() { candidates } else { faster };
+            pool.into_iter().min_by(|&a, &b| {
+                let ta = ev.stages[a].total();
+                let tb = ev.stages[b].total();
+                ta.partial_cmp(&tb)
+                    .unwrap()
+                    .then_with(|| {
+                        // tie: prefer the faster EP
+                        let pa = plat.eps[cfg.assignment[a]].perf_score();
+                        let pb = plat.eps[cfg.assignment[b]].perf_score();
+                        pb.partial_cmp(&pa).unwrap()
+                    })
+                    .then(a.cmp(&b))
+            })
+        }
+    }
+}
+
+/// Algorithm 2: online tuning from `seed`. Returns the final walked
+/// configuration; the best visited configuration lives in the evaluator.
+pub fn tune(
+    eval: &mut Evaluator<'_>,
+    seed: PipelineConfig,
+    balancing: BalancingChoice,
+    alpha: u32,
+) -> PipelineConfig {
+    let mut conf = seed;
+    let mut throughput = eval.evaluate(&conf); // line 2
+    let mut gamma = 0u32; // line 3
+    while gamma < alpha && !eval.exhausted() {
+        // line 5: the stage observed slowest in the last trial
+        let slowest = simulator::slowest_stage(eval.network(), eval.platform(), eval.db(), &conf);
+        // line 6: target per balancing choice
+        let Some(target) = pick_target(eval, &conf, slowest, balancing) else {
+            // No legal layer move (stage already minimal): counts as a
+            // non-improving attempt; the walk cannot progress further from
+            // this state, so each pass increments gamma until alpha.
+            gamma += 1;
+            continue;
+        };
+        // line 7: move one layer (unconditional walk)
+        conf = conf
+            .move_layer(slowest, target)
+            .expect("pick_target guarantees a legal move");
+        // line 8: measure online
+        let tp = eval.evaluate(&conf);
+        // lines 9-14
+        if tp <= throughput {
+            gamma += 1;
+        } else {
+            gamma = 0;
+            throughput = tp;
+        }
+    }
+    conf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::shisha::seed::{generate_seed, AssignmentChoice};
+    use crate::explore::{EvalOptions, Evaluator};
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+
+    fn run(net_name: &str, alpha: u32) -> (f64, u64) {
+        let net = networks::by_name(net_name).unwrap();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        tune(&mut eval, seed.config, BalancingChoice::NlFep, alpha);
+        let sol = eval.solution("shisha");
+        (sol.best_throughput, sol.n_evals)
+    }
+
+    #[test]
+    fn tuning_improves_or_matches_seed() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        let seed_tp = crate::pipeline::simulator::throughput(&net, &plat, &db, &seed.config);
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        tune(&mut eval, seed.config, BalancingChoice::NlFep, 10);
+        let best = eval.best().unwrap().1;
+        assert!(best >= seed_tp, "tuned {best} >= seed {seed_tp}");
+    }
+
+    #[test]
+    fn terminates_with_bounded_evals() {
+        // alpha = 10: the paper sees 25-35 exploration points; allow slack
+        // but require the same order of magnitude.
+        for name in ["synthnet", "resnet50", "yolov3"] {
+            let (_, evals) = run(name, 10);
+            assert!(evals >= 1 && evals <= 150, "{name}: {evals} evals");
+        }
+    }
+
+    #[test]
+    fn alpha_controls_budget() {
+        let (_, short) = run("resnet50", 2);
+        let (_, long) = run("resnet50", 25);
+        assert!(long >= short);
+    }
+
+    #[test]
+    fn respects_time_limit() {
+        let net = networks::resnet50();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let opts = EvalOptions { max_evals: Some(3), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        tune(&mut eval, seed.config, BalancingChoice::NlFep, 100);
+        assert!(eval.n_evals() <= 4);
+    }
+
+    #[test]
+    fn single_stage_pipeline_terminates() {
+        // One EP -> single stage -> no moves possible; must stop after alpha.
+        let net = networks::alexnet();
+        let plat = crate::platform::Platform::new(
+            "one",
+            vec![configs::ep_big8(0)],
+        );
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+        let out = tune(&mut eval, seed.config.clone(), BalancingChoice::NFep, 5);
+        assert_eq!(out, seed.config);
+        assert_eq!(eval.n_evals(), 1, "only the seed evaluation");
+    }
+
+    #[test]
+    fn nfep_targets_faster_neighbor() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let eval = Evaluator::new(&net, &plat, &db);
+        // stage 1 slowest; neighbors 0 (EP2: slow) and 2 (EP0: fast) -> pick 2
+        let cfg = PipelineConfig::new(vec![5, 8, 5], vec![2, 3, 0]);
+        assert_eq!(pick_target(&eval, &cfg, 1, BalancingChoice::NFep), Some(2));
+    }
+
+    #[test]
+    fn nlfep_targets_lighter_neighbor() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let eval = Evaluator::new(&net, &plat, &db);
+        // neighbors: stage 0 has 1 layer (light), stage 2 has 12 (heavy);
+        // both on same-class EPs -> pick the lighter stage 0.
+        let cfg = PipelineConfig::new(vec![1, 5, 12], vec![0, 2, 1]);
+        let ev = crate::pipeline::simulator::evaluate(&net, &plat, &db, &cfg);
+        let target = pick_target(&eval, &cfg, 1, BalancingChoice::NlFep).unwrap();
+        assert!(
+            ev.stages[target].total() <= ev.stages[2 - target + 0].total().max(ev.stages[0].total()),
+        );
+        assert_eq!(target, 0);
+    }
+
+    #[test]
+    fn minimal_slowest_stage_yields_none() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let eval = Evaluator::new(&net, &plat, &db);
+        let cfg = PipelineConfig::new(vec![1, 17], vec![0, 1]);
+        assert_eq!(pick_target(&eval, &cfg, 0, BalancingChoice::NFep), None);
+    }
+}

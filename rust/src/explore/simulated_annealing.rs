@@ -1,0 +1,178 @@
+//! Simulated Annealing baseline (used by TVM's auto-scheduler [38]; §7.2).
+//!
+//! Classic SA over the pipeline configuration space with the shared
+//! neighbourhood (layer moves, EP swaps/reassignments, merges, splits).
+//! The paper runs two variants: `SA` from a random start and `SA_s` seeded
+//! with Shisha's Algorithm-1 configuration — both are supported via
+//! [`SaOptions::start`].
+
+use super::{random_config, Evaluator, Explorer, Solution};
+use crate::pipeline::PipelineConfig;
+use crate::rng::Xoshiro256;
+
+/// Starting point for SA / HC.
+#[derive(Debug, Clone)]
+pub enum Start {
+    /// Uniformly random configuration.
+    Random,
+    /// Fixed configuration (e.g. a Shisha seed, for `SA_s`/`HC_s`).
+    From(PipelineConfig),
+}
+
+/// Simulated-annealing options.
+#[derive(Debug, Clone)]
+pub struct SaOptions {
+    /// Starting configuration.
+    pub start: Start,
+    /// Initial temperature as a fraction of the initial throughput.
+    pub t0_frac: f64,
+    /// Geometric cooling rate per step.
+    pub cooling: f64,
+    /// Maximum steps (also bounded by the evaluator budget).
+    pub max_steps: u64,
+    /// PRNG seed.
+    pub rng_seed: u64,
+}
+
+impl Default for SaOptions {
+    fn default() -> Self {
+        Self {
+            start: Start::Random,
+            t0_frac: 0.3,
+            cooling: 0.995,
+            max_steps: 2_000,
+            rng_seed: 0x5A,
+        }
+    }
+}
+
+/// Simulated-annealing explorer.
+pub struct SimulatedAnnealing {
+    opts: SaOptions,
+    name: &'static str,
+}
+
+impl SimulatedAnnealing {
+    /// SA from a random start.
+    pub fn new(opts: SaOptions) -> Self {
+        let name = match opts.start {
+            Start::Random => "SA",
+            Start::From(_) => "SA_s",
+        };
+        Self { opts, name }
+    }
+
+    /// `SA_s`: seeded variant.
+    pub fn seeded(seed: PipelineConfig) -> Self {
+        Self::new(SaOptions { start: Start::From(seed), ..Default::default() })
+    }
+}
+
+impl Explorer for SimulatedAnnealing {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn explore(&mut self, eval: &mut Evaluator<'_>) -> Solution {
+        let mut rng = Xoshiro256::seed_from(self.opts.rng_seed);
+        let l = eval.network().len();
+        let plat = eval.platform().clone();
+        let mut current = match &self.opts.start {
+            Start::Random => random_config(l, &plat, &mut rng),
+            Start::From(c) => c.clone(),
+        };
+        let mut current_tp = eval.evaluate(&current);
+        let mut temp = (self.opts.t0_frac * current_tp).max(1e-12);
+
+        for _ in 0..self.opts.max_steps {
+            if eval.exhausted() {
+                break;
+            }
+            // O(1) proposal sampler (§Perf L3-1): avoids materialising the
+            // whole neighbourhood per step like `neighbors()` does.
+            let Some(cand) = super::random_move(&current, &plat, &mut rng) else {
+                break;
+            };
+            let tp = eval.evaluate(&cand);
+            let accept = tp > current_tp || rng.gen_f64() < ((tp - current_tp) / temp).exp();
+            if accept {
+                current = cand;
+                current_tp = tp;
+            }
+            temp = (temp * self.opts.cooling).max(1e-12);
+        }
+        eval.solution(self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::EvalOptions;
+    use crate::model::networks;
+    use crate::perfdb::{CostModel, PerfDb};
+    use crate::platform::configs;
+
+    fn setup() -> (crate::model::Network, crate::platform::Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn sa_finds_reasonable_solution() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(500), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = SimulatedAnnealing::new(SaOptions::default()).explore(&mut eval);
+        // must beat the trivial single-slow-EP configuration comfortably
+        let single = crate::pipeline::simulator::throughput(
+            &net,
+            &plat,
+            &db,
+            &crate::pipeline::PipelineConfig::single_stage(net.len(), 2),
+        );
+        assert!(sol.best_throughput > single);
+        assert!(sol.best_config.validate(net.len(), &plat).is_ok());
+    }
+
+    #[test]
+    fn sa_deterministic_per_seed() {
+        let (net, plat, db) = setup();
+        let run = |seed| {
+            let opts = EvalOptions { max_evals: Some(100), ..Default::default() };
+            let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+            SimulatedAnnealing::new(SaOptions { rng_seed: seed, ..Default::default() })
+                .explore(&mut eval)
+                .best_throughput
+        };
+        assert_eq!(run(1), run(1));
+    }
+
+    #[test]
+    fn seeded_variant_starts_from_seed() {
+        let (net, plat, db) = setup();
+        let seed = crate::explore::shisha::generate_seed(
+            &net,
+            &plat,
+            crate::explore::shisha::AssignmentChoice::RankW,
+            0,
+        );
+        let opts = EvalOptions { max_evals: Some(50), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = SimulatedAnnealing::seeded(seed.config.clone()).explore(&mut eval);
+        assert_eq!(sol.algorithm, "SA_s");
+        let seed_tp = crate::pipeline::simulator::throughput(&net, &plat, &db, &seed.config);
+        assert!(sol.best_throughput >= seed_tp);
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(10), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let sol = SimulatedAnnealing::new(SaOptions::default()).explore(&mut eval);
+        assert!(sol.n_evals <= 11);
+    }
+}

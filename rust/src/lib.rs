@@ -1,0 +1,55 @@
+//! # Shisha — online scheduling of CNN pipelines on heterogeneous architectures
+//!
+//! A from-scratch reproduction of *Shisha: Online scheduling of CNN pipelines on
+//! heterogeneous architectures* (Soomro et al., 2022) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Shisha scheduler (seed generation +
+//!   online tuning), all baseline explorers (simulated annealing, hill
+//!   climbing, random walk, exhaustive search, Pipe-Search), the chiplet
+//!   platform model, the gem5-substitute performance database, the pipeline
+//!   steady-state simulator, and a real threaded pipeline runtime that
+//!   executes AOT-compiled CNN stages through PJRT.
+//! * **Layer 2 (python/compile/model.py)** — JAX stage-forward functions,
+//!   lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas im2col + tiled-GEMM
+//!   kernels (the compute hot-spot), verified against a pure-jnp oracle.
+//!
+//! Python never runs at inference time: `make artifacts` lowers the model
+//! once, the Rust binary loads `artifacts/*.hlo.txt` through the `xla` crate.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use shisha::model::networks;
+//! use shisha::platform::configs;
+//! use shisha::perfdb::{CostModel, PerfDb};
+//! use shisha::explore::{Evaluator, shisha::{ShishaExplorer, ShishaOptions}, Explorer};
+//!
+//! let net = networks::resnet50();
+//! let plat = configs::c3();
+//! let db = PerfDb::build(&net, &plat, &CostModel::default());
+//! let mut eval = Evaluator::new(&net, &plat, &db);
+//! let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+//! println!("best throughput {:.4} img/s", sol.best_throughput);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod explore;
+pub mod metrics;
+pub mod model;
+pub mod perfdb;
+pub mod pipeline;
+pub mod platform;
+pub mod rng;
+pub mod runtime;
+pub mod stream;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Crate version string (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,313 @@
+//! `shisha` — CLI for the Shisha reproduction.
+//!
+//! Subcommands:
+//!
+//! * `explore`    — run explorers against the perf database (paper mode)
+//! * `run`        — live pipeline + online tuning over PJRT artifacts
+//! * `platforms`  — print Table 1 EP kinds and Table 3 configs C1–C5
+//! * `designspace`— design-space sizes (the paper's "explored %" denominator)
+//! * `stream`     — the §2 STREAM Triad motivation experiment
+//! * `seed`       — show the Algorithm-1 seed for a network/platform
+//! * `version`    — print version
+
+use anyhow::{bail, Context, Result};
+
+use shisha::cli::Args;
+use shisha::coordinator::{EpEmulation, OnlineTuner, PipelineRuntime};
+use shisha::explore::exhaustive::{EsOptions, ExhaustiveSearch};
+use shisha::explore::hill_climbing::{HcOptions, HillClimbing};
+use shisha::explore::pipe_search::{PipeSearch, PsOptions};
+use shisha::explore::random_walk::{RandomWalk, RwOptions};
+use shisha::explore::shisha::{
+    generate_seed, AssignmentChoice, Heuristic, ShishaExplorer, ShishaOptions,
+};
+use shisha::explore::simulated_annealing::{SaOptions, SimulatedAnnealing};
+use shisha::explore::{EvalOptions, Evaluator, Explorer};
+use shisha::metrics::table::{f as fnum, Table};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::space;
+use shisha::platform::configs;
+use shisha::runtime::Manifest;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_deref() {
+        Some("explore") => cmd_explore(&args),
+        Some("run") => cmd_run(&args),
+        Some("platforms") => cmd_platforms(),
+        Some("designspace") => cmd_designspace(&args),
+        Some("stream") => cmd_stream(&args),
+        Some("seed") => cmd_seed(&args),
+        Some("version") => {
+            println!("shisha {}", shisha::VERSION);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try: explore, run, platforms, designspace, stream, seed, version)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "shisha {} — online scheduling of CNN pipelines on heterogeneous architectures\n\n\
+         USAGE: shisha <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+           explore     --net <name> --platform <c1..c5> [--algo all|shisha|sa|hc|rw|es|ps]\n\
+                       [--alpha N] [--heuristic h1..h6] [--config file.toml]\n\
+           run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
+           platforms   print Table 1 / Table 3 configurations\n\
+           designspace --net <name> --eps N [--depth D]\n\
+           stream      [--size GB] [--hbm GB]\n\
+           seed        --net <name> --platform <name> [--choice rankl|rankw|random]\n\
+           version",
+        shisha::VERSION
+    );
+}
+
+fn load_net_platform(args: &Args) -> Result<(shisha::model::Network, shisha::platform::Platform)> {
+    let net_name = args.get_or("net", "synthnet");
+    let plat_name = args.get_or("platform", "c2");
+    let net = networks::by_name(net_name).with_context(|| format!("unknown network {net_name:?}"))?;
+    let plat = configs::by_name(plat_name).with_context(|| format!("unknown platform {plat_name:?}"))?;
+    Ok((net, plat))
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "net", "platform", "algo", "alpha", "heuristic", "config", "probe-inputs", "max-evals",
+        "seed",
+    ])?;
+    let (net, plat) = if let Some(path) = args.get("config") {
+        let cfg = shisha::config::Config::load(path)?;
+        let e = shisha::config::ExperimentConfig::from_config(&cfg)?;
+        (
+            networks::by_name(&e.network).unwrap(),
+            configs::by_name(&e.platform).unwrap(),
+        )
+    } else {
+        load_net_platform(args)?
+    };
+    let alpha: u32 = args.parsed_or("alpha", 10)?;
+    let algo = args.get_or("algo", "all").to_string();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+
+    let mut opts = EvalOptions::default();
+    if let Some(p) = args.get_parsed::<u64>("probe-inputs")? {
+        opts.probe_inputs = p;
+    }
+    if let Some(m) = args.get_parsed::<u64>("max-evals")? {
+        opts.max_evals = Some(m);
+    }
+
+    let heuristic = match args.get("heuristic").map(str::to_ascii_lowercase).as_deref() {
+        None | Some("h3") => Heuristic::H3,
+        Some("h1") => Heuristic::H1,
+        Some("h2") => Heuristic::H2,
+        Some("h4") => Heuristic::H4,
+        Some("h5") => Heuristic::H5,
+        Some("h6") => Heuristic::H6,
+        Some(other) => bail!("unknown heuristic {other:?}"),
+    };
+
+    type RunFn = Box<dyn FnMut(&mut Evaluator) -> shisha::explore::Solution>;
+    let mut runs: Vec<RunFn> = Vec::new();
+    let want = |name: &str| algo == "all" || algo.eq_ignore_ascii_case(name);
+    if want("shisha") {
+        let mut sopts = ShishaOptions::heuristic(heuristic);
+        sopts.alpha = alpha;
+        runs.push(Box::new(move |e| ShishaExplorer::new(sopts.clone()).explore(e)));
+    }
+    if want("sa") {
+        runs.push(Box::new(|e| SimulatedAnnealing::new(SaOptions::default()).explore(e)));
+    }
+    if want("hc") {
+        runs.push(Box::new(|e| HillClimbing::new(HcOptions::default()).explore(e)));
+    }
+    if want("rw") {
+        runs.push(Box::new(|e| RandomWalk::new(RwOptions::default()).explore(e)));
+    }
+    if want("es") {
+        runs.push(Box::new(|e| ExhaustiveSearch::new(EsOptions::default()).explore(e)));
+    }
+    if want("ps") {
+        runs.push(Box::new(|e| PipeSearch::new(PsOptions::default()).explore(e)));
+    }
+    if runs.is_empty() {
+        bail!("unknown --algo {algo:?}");
+    }
+
+    let space = space::full_space_size(net.len(), plat.n_eps());
+    println!(
+        "network {} ({} layers), platform {} ({} EPs), design space {:.3e} configs\n",
+        net.name,
+        net.len(),
+        plat.name,
+        plat.n_eps(),
+        space as f64
+    );
+    let mut table = Table::new([
+        "algorithm",
+        "best throughput (img/s)",
+        "configs tried",
+        "explored %",
+        "convergence time (virt s)",
+        "best config",
+    ]);
+    for mut run in runs {
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts.clone());
+        let sol = run(&mut eval);
+        table.row([
+            sol.algorithm.clone(),
+            fnum(sol.best_throughput, 4),
+            sol.n_evals.to_string(),
+            format!("{:.4}%", 100.0 * sol.explored_fraction(space)),
+            fnum(sol.convergence_time_s(), 2),
+            sol.best_config.describe(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "platform", "probes", "alpha"])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let plat = configs::by_name(args.get_or("platform", "c2")).context("unknown platform")?;
+    let probes: usize = args.parsed_or("probes", 16)?;
+    let alpha: u32 = args.parsed_or("alpha", 10)?;
+
+    let manifest = Manifest::load(dir)?;
+    let net = networks::synthnet_small();
+    manifest.check_against(&net)?;
+    let emu = EpEmulation::from_model(&net, &plat, &CostModel::default());
+    println!(
+        "loaded {} artifacts for {} ({} layers); EP slowdown factors {:?}",
+        manifest.artifacts.len(),
+        manifest.network,
+        manifest.layers,
+        emu.factors.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+
+    let rt = PipelineRuntime::new(manifest, emu)?;
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+    println!("Algorithm-1 seed: {}", seed.config.describe());
+
+    let mut tuner = OnlineTuner::new(&rt, &plat);
+    tuner.alpha = alpha;
+    tuner.probe_inputs = probes;
+    let report = tuner.tune(seed.config)?;
+
+    let mut table = Table::new(["trial", "config", "throughput (img/s)", "bottleneck stage (ms)"]);
+    for t in &report.trials {
+        let max_ms = t.stage_times.iter().cloned().fold(0.0, f64::max) * 1e3;
+        table.row([
+            t.trial.to_string(),
+            t.config.describe(),
+            fnum(t.throughput, 2),
+            fnum(max_ms, 3),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "best {} at {:.2} img/s ({:.2}x over seed), {} trials, {:.2}s tuning wall-clock",
+        report.best_config.describe(),
+        report.best_throughput,
+        report.improvement(),
+        report.trials.len(),
+        report.total_wall_s
+    );
+    Ok(())
+}
+
+fn cmd_platforms() -> Result<()> {
+    println!("Table 1 EP kinds: big x4/x8 @ 40 GB/s (FEP), little x4/x8 @ 20 GB/s (SEP)\n");
+    for plat in configs::all_c() {
+        println!("## {} ({} EPs)", plat.name, plat.n_eps());
+        println!("{}", plat.describe_table());
+    }
+    Ok(())
+}
+
+fn cmd_designspace(args: &Args) -> Result<()> {
+    args.expect_known(&["net", "eps", "depth"])?;
+    let net_name = args.get_or("net", "resnet50");
+    let net = networks::by_name(net_name).context("unknown network")?;
+    let eps: usize = args.parsed_or("eps", 4)?;
+    let depth: usize = args.parsed_or("depth", eps)?;
+    let mut table = Table::new(["depth", "configurations", "cumulative"]);
+    let mut cum: u128 = 0;
+    for d in 1..=depth.min(eps).min(net.len()) {
+        let at_depth = space::space_size(net.len(), eps, d) - cum;
+        cum += at_depth;
+        table.row([d.to_string(), format!("{at_depth}"), format!("{cum}")]);
+    }
+    println!(
+        "design space of {} ({} layers) on {} EPs:\n{}",
+        net.name,
+        net.len(),
+        eps,
+        table.to_markdown()
+    );
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    args.expect_known(&["size", "hbm"])?;
+    let size: f64 = args.parsed_or("size", 19.0)?;
+    let hbm: f64 = args.parsed_or("hbm", 15.0)?;
+    let sim = shisha::stream::DualMemorySimulator::default();
+    let ddr_only = sim.ddr_only(size, 16);
+    let cache = sim.cache_mode(size, 64);
+    let ((ht, dt), best) =
+        sim.best_assignment(size, hbm, &shisha::stream::HBM_THREADS, &shisha::stream::DDR_THREADS);
+    let mut table = Table::new(["scenario", "time (s)", "bandwidth (GB/s)"]);
+    table.row(["DDR only (16t)".to_string(), fnum(ddr_only.time_s, 3), fnum(ddr_only.bandwidth_gbs, 1)]);
+    table.row(["cache mode (64t)".to_string(), fnum(cache.time_s, 3), fnum(cache.bandwidth_gbs, 1)]);
+    table.row([
+        format!("split {hbm}+{} GB ({ht}+{dt}t)", size - hbm),
+        fnum(best.time_s, 3),
+        fnum(best.bandwidth_gbs, 1),
+    ]);
+    println!("STREAM Triad, {size} GB total:\n{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_seed(args: &Args) -> Result<()> {
+    args.expect_known(&["net", "platform", "choice"])?;
+    let (net, plat) = load_net_platform(args)?;
+    let choice = match args.get_or("choice", "rankw").to_ascii_lowercase().as_str() {
+        "rankl" => AssignmentChoice::RankL,
+        "rankw" => AssignmentChoice::RankW,
+        "random" => AssignmentChoice::Random,
+        other => bail!("unknown choice {other:?}"),
+    };
+    let seed = generate_seed(&net, &plat, choice, 42);
+    println!("seed for {} on {} ({choice:?}): {}", net.name, plat.name, seed.config.describe());
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let eval = shisha::pipeline::simulator::evaluate(&net, &plat, &db, &seed.config);
+    let mut table = Table::new(["stage", "layers", "EP", "weight", "time (ms)"]);
+    for (i, st) in eval.stages.iter().enumerate() {
+        table.row([
+            i.to_string(),
+            seed.config.stages[i].to_string(),
+            plat.eps[seed.config.assignment[i]].describe(),
+            seed.stage_weights[i].to_string(),
+            fnum(st.total() * 1e3, 3),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("seed throughput: {:.4} img/s", eval.throughput);
+    Ok(())
+}

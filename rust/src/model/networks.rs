@@ -1,0 +1,61 @@
+//! Network registry: every CNN the paper evaluates, addressable by name.
+
+use super::Network;
+
+pub use super::alexnet::alexnet;
+pub use super::resnet50::resnet50;
+pub use super::synthnet::{synthnet, synthnet_n, synthnet_small};
+pub use super::yolov3::yolov3;
+
+/// Names of all registered networks.
+pub const NETWORK_NAMES: [&str; 5] = ["resnet50", "yolov3", "alexnet", "synthnet", "synthnet_small"];
+
+/// Look a network up by name (case-insensitive). `synthnetN` builds an
+/// N-layer SynthNet variant.
+pub fn by_name(name: &str) -> Option<Network> {
+    let n = name.to_ascii_lowercase();
+    match n.as_str() {
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        "yolov3" | "yolo-v3" | "darknet53" => Some(yolov3()),
+        "alexnet" => Some(alexnet()),
+        "synthnet" => Some(synthnet()),
+        "synthnet_small" | "synthnet-small" => Some(synthnet_small()),
+        _ => {
+            // synthnet<N>
+            n.strip_prefix("synthnet")
+                .and_then(|suffix| suffix.parse::<usize>().ok())
+                .filter(|&k| (1..=512).contains(&k))
+                .map(synthnet_n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in NETWORK_NAMES {
+            assert!(by_name(name).is_some(), "{name} must resolve");
+        }
+    }
+
+    #[test]
+    fn parametric_synthnet() {
+        assert_eq!(by_name("synthnet24").unwrap().len(), 24);
+        assert!(by_name("synthnet0").is_none());
+        assert!(by_name("synthnetx").is_none());
+    }
+
+    #[test]
+    fn unknown_is_none() {
+        assert!(by_name("vgg16").is_none());
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert!(by_name("ResNet50").is_some());
+        assert!(by_name("YOLOv3").is_some());
+    }
+}

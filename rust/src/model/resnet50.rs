@@ -1,0 +1,138 @@
+//! ResNet-50 layer table (He et al., CVPR 2016).
+//!
+//! The paper states ResNet50 has **50 compute-intensive layers** (§7.1).
+//! We model exactly those 50: the stem conv, the 48 bottleneck convolutions
+//! (16 blocks × [1×1, 3×3, 1×1]) and the final fully connected layer
+//! (treated as a 1×1 GEMM). The four projection-shortcut 1×1 convolutions
+//! are folded into the first convolution of their stage for scheduling
+//! purposes (they run in parallel with it on the same resources and are
+//! an order of magnitude lighter), keeping the schedulable chain at the
+//! paper's 50 layers.
+
+use super::{Layer, LayerKind, Network};
+
+/// Bottleneck stage description: `(blocks, mid_channels, out_channels, in_hw)`.
+const STAGES: [(u32, u32, u32, u32); 4] = [
+    (3, 64, 256, 56),
+    (4, 128, 512, 28),
+    (6, 256, 1024, 14),
+    (3, 512, 2048, 7),
+];
+
+/// Build the 50-layer ResNet-50 chain at 224×224×3 input.
+pub fn resnet50() -> Network {
+    let mut layers = Vec::with_capacity(50);
+
+    // Stem: 7x7/2, 64 filters, 224 -> 112 (then 3x3/2 maxpool -> 56).
+    layers.push(Layer::conv("conv1", 224, 224, 3, 7, 7, 64, 2, 3));
+
+    let mut in_c = 64u32;
+    for (si, &(blocks, mid, out, hw)) in STAGES.iter().enumerate() {
+        let stage = si + 2; // conv2_x .. conv5_x
+        for b in 0..blocks {
+            // Spatial reduction happens in the first 3x3 of stages 3..5;
+            // the layer table records *input* H,W per Eq. (1).
+            let (in_hw, stride) = if si > 0 && b == 0 {
+                (hw * 2, 2)
+            } else {
+                (hw, 1)
+            };
+            layers.push(Layer::conv(
+                format!("conv{stage}_{}_1x1a", b + 1),
+                in_hw,
+                in_hw,
+                in_c,
+                1,
+                1,
+                mid,
+                1,
+                0,
+            ));
+            layers.push(Layer::conv(
+                format!("conv{stage}_{}_3x3", b + 1),
+                in_hw,
+                in_hw,
+                mid,
+                3,
+                3,
+                mid,
+                stride,
+                1,
+            ));
+            layers.push(Layer::conv(
+                format!("conv{stage}_{}_1x1b", b + 1),
+                hw,
+                hw,
+                mid,
+                1,
+                1,
+                out,
+                1,
+                0,
+            ));
+            in_c = out;
+        }
+    }
+
+    // Final FC: 2048 -> 1000, modelled as a dense GEMM layer.
+    let mut fc = Layer::conv("fc1000", 1, 1, 2048, 1, 1, 1000, 1, 0);
+    fc.kind = LayerKind::Dense;
+    layers.push(fc);
+
+    Network::new("resnet50", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_paper_layer_count() {
+        assert_eq!(resnet50().len(), 50);
+    }
+
+    #[test]
+    fn stem_shape() {
+        let net = resnet50();
+        let stem = &net.layers[0];
+        assert_eq!((stem.h, stem.w, stem.c, stem.k), (224, 224, 3, 64));
+        assert_eq!(stem.out_h(), 112);
+    }
+
+    #[test]
+    fn bottleneck_channel_chain() {
+        let net = resnet50();
+        // conv2_1: 1x1 64->64, 3x3 64->64, 1x1 64->256
+        assert_eq!(net.layers[1].c, 64);
+        assert_eq!(net.layers[1].k, 64);
+        assert_eq!(net.layers[3].k, 256);
+        // conv3_1 first 1x1 takes 256 channels at 56x56
+        assert_eq!(net.layers[10].c, 256);
+        assert_eq!(net.layers[10].h, 56);
+    }
+
+    #[test]
+    fn total_flops_in_expected_range() {
+        // ResNet50 is ~3.8 GMACs = ~7.7 GFLOPs at 2 FLOPs/MAC (the widely
+        // quoted "4 GFLOPs" counts MACs); folding shortcuts keeps us within
+        // [6.0, 9.0] GFLOPs.
+        let gf = resnet50().total_flops() as f64 / 1e9;
+        assert!((6.0..9.0).contains(&gf), "got {gf} GFLOPs");
+    }
+
+    #[test]
+    fn weights_are_irregular() {
+        // The paper's premise: weight distribution across layers is variable
+        // (light layers between heavy ones). Check non-monotonicity.
+        let w = resnet50().weights();
+        let ups = w.windows(2).filter(|p| p[1] > p[0]).count();
+        let downs = w.windows(2).filter(|p| p[1] < p[0]).count();
+        assert!(ups > 10 && downs > 10);
+    }
+
+    #[test]
+    fn fc_is_dense() {
+        let net = resnet50();
+        assert_eq!(net.layers.last().unwrap().kind, LayerKind::Dense);
+    }
+}

@@ -1,0 +1,98 @@
+//! SynthNet — the paper's 18-layer synthetic network (§7.1): "a replication
+//! of AlexNet convolutional layers", built so that CNNs can be run on a
+//! higher number of EPs while keeping a compute complexity matching widely
+//! used CNNs.
+//!
+//! We tile the five AlexNet conv shapes cyclically to 18 layers, which
+//! preserves AlexNet's irregular weight distribution (the property Shisha's
+//! merging phase exercises).
+
+use super::alexnet::alexnet_conv_layers;
+use super::{Layer, Network};
+
+/// Number of layers in SynthNet per the paper.
+pub const SYNTHNET_LAYERS: usize = 18;
+
+/// Build the 18-layer SynthNet.
+pub fn synthnet() -> Network {
+    synthnet_n(SYNTHNET_LAYERS)
+}
+
+/// Build a SynthNet variant with `n` layers (used by scaling studies).
+pub fn synthnet_n(n: usize) -> Network {
+    let base = alexnet_conv_layers();
+    let mut layers = Vec::with_capacity(n);
+    for i in 0..n {
+        let proto = &base[i % base.len()];
+        let mut l = proto.clone();
+        l.name = format!("synth{}_{}", i, proto.name);
+        // Replications after the first consume the previous replica's output
+        // channel count where the prototype chain would: keep the prototype
+        // geometry (the paper replicates layers, not a valid end-to-end
+        // network — scheduling only needs weights and transfer volumes).
+        layers.push(l);
+    }
+    Network::new(if n == SYNTHNET_LAYERS { "synthnet".into() } else { format!("synthnet{n}") }, layers)
+}
+
+/// A *small* SynthNet used by the real-execution (PJRT) end-to-end example:
+/// six shape-chained conv layers small enough to AOT-compile and stream on a
+/// CPU PJRT client. The chain is valid (each layer's input = previous
+/// layer's output), matching `python/compile/model.py::SYNTHNET_SMALL`.
+pub fn synthnet_small() -> Network {
+    Network::new(
+        "synthnet_small",
+        vec![
+            Layer::conv("s0", 32, 32, 3, 3, 3, 16, 1, 1),  // 32x32x16
+            Layer::conv("s1", 32, 32, 16, 3, 3, 32, 2, 1), // 16x16x32
+            Layer::conv("s2", 16, 16, 32, 3, 3, 32, 1, 1), // 16x16x32
+            Layer::conv("s3", 16, 16, 32, 3, 3, 64, 2, 1), // 8x8x64
+            Layer::conv("s4", 8, 8, 64, 3, 3, 64, 1, 1),   // 8x8x64
+            Layer::conv("s5", 8, 8, 64, 1, 1, 32, 1, 0),   // 8x8x32
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_paper_layer_count() {
+        assert_eq!(synthnet().len(), 18);
+    }
+
+    #[test]
+    fn replicates_alexnet_shapes() {
+        let s = synthnet();
+        let a = alexnet_conv_layers();
+        for (i, l) in s.layers.iter().enumerate() {
+            let p = &a[i % 5];
+            assert_eq!((l.h, l.w, l.c, l.r, l.s, l.k), (p.h, p.w, p.c, p.r, p.s, p.k));
+        }
+    }
+
+    #[test]
+    fn variable_sizes() {
+        assert_eq!(synthnet_n(7).len(), 7);
+        assert_eq!(synthnet_n(36).len(), 36);
+    }
+
+    #[test]
+    fn small_chain_is_shape_valid() {
+        let net = synthnet_small();
+        for pair in net.layers.windows(2) {
+            assert_eq!(pair[0].out_h(), pair[1].h, "h chain at {}", pair[1].name);
+            assert_eq!(pair[0].out_w(), pair[1].w, "w chain at {}", pair[1].name);
+            assert_eq!(pair[0].k, pair[1].c, "c chain at {}", pair[1].name);
+        }
+    }
+
+    #[test]
+    fn compute_complexity_matches_alexnet_scale() {
+        // 18 layers tiling 5 AlexNet convs ≈ 3.6x AlexNet conv FLOPs.
+        let s = synthnet().total_flops() as f64;
+        let a = super::super::alexnet::alexnet().total_flops() as f64;
+        assert!((s / a - 3.6).abs() < 0.3, "ratio {}", s / a);
+    }
+}

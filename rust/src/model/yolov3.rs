@@ -1,0 +1,128 @@
+//! YOLOv3 / Darknet-53 backbone layer table (Redmon & Farhadi, 2018).
+//!
+//! The paper states YOLOv3 has **52 compute-intensive layers** (§7.1); the
+//! Darknet-53 feature extractor has exactly 52 convolutions at 416×416:
+//! the stem conv, five stride-2 downsampling convs, and 2 convs per residual
+//! block with block counts [1, 2, 8, 8, 4].
+
+use super::{Layer, Network};
+
+/// Residual block counts per resolution stage.
+const BLOCKS: [u32; 5] = [1, 2, 8, 8, 4];
+
+/// Build the 52-conv Darknet-53 chain at 416×416×3 input.
+pub fn yolov3() -> Network {
+    let mut layers = Vec::with_capacity(52);
+
+    // Stem: 3x3, 32 filters, 416x416.
+    layers.push(Layer::conv("conv0", 416, 416, 3, 3, 3, 32, 1, 1));
+
+    let mut hw = 416u32;
+    let mut c = 32u32;
+    for (si, &nblocks) in BLOCKS.iter().enumerate() {
+        // Downsample conv: 3x3 stride 2, doubles channels.
+        let k = c * 2;
+        layers.push(Layer::conv(
+            format!("down{}", si + 1),
+            hw,
+            hw,
+            c,
+            3,
+            3,
+            k,
+            2,
+            1,
+        ));
+        hw /= 2;
+        c = k;
+        for b in 0..nblocks {
+            // Residual: 1x1 halving channels, then 3x3 restoring them.
+            layers.push(Layer::conv(
+                format!("res{}_{}_1x1", si + 1, b + 1),
+                hw,
+                hw,
+                c,
+                1,
+                1,
+                c / 2,
+                1,
+                0,
+            ));
+            layers.push(Layer::conv(
+                format!("res{}_{}_3x3", si + 1, b + 1),
+                hw,
+                hw,
+                c / 2,
+                3,
+                3,
+                c,
+                1,
+                1,
+            ));
+        }
+    }
+
+    Network::new("yolov3", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_paper_layer_count() {
+        assert_eq!(yolov3().len(), 52);
+    }
+
+    #[test]
+    fn spatial_chain() {
+        let net = yolov3();
+        // Stem keeps 416; final stage operates at 13x13.
+        assert_eq!(net.layers[0].out_h(), 416);
+        assert_eq!(net.layers.last().unwrap().h, 13);
+        assert_eq!(net.layers.last().unwrap().k, 1024);
+    }
+
+    #[test]
+    fn downsamples_have_stride2() {
+        let net = yolov3();
+        let downs: Vec<_> = net
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("down"))
+            .collect();
+        assert_eq!(downs.len(), 5);
+        assert!(downs.iter().all(|l| l.stride == 2));
+    }
+
+    #[test]
+    fn channel_doubling() {
+        let net = yolov3();
+        let ks: Vec<u32> = net
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("down"))
+            .map(|l| l.k)
+            .collect();
+        assert_eq!(ks, vec![64, 128, 256, 512, 1024]);
+    }
+
+    #[test]
+    fn total_flops_in_expected_range() {
+        // Darknet-53 at 416x416 is ~65 GFLOPs (~32.7 GMACs).
+        let gf = yolov3().total_flops() as f64 / 1e9;
+        assert!((45.0..80.0).contains(&gf), "got {gf} GFLOPs");
+    }
+
+    #[test]
+    fn residual_conv_pairs_consistent() {
+        let net = yolov3();
+        for pair in net.layers.windows(2) {
+            if pair[0].name.contains("_1x1") && pair[1].name.contains("_3x3") {
+                // 1x1 output channels feed the 3x3.
+                assert_eq!(pair[0].k, pair[1].c);
+                assert_eq!(pair[1].k, pair[0].c);
+            }
+        }
+    }
+}

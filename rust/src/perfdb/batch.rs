@@ -1,0 +1,107 @@
+//! Batched execution support (extension).
+//!
+//! The paper streams single images; serving deployments batch. Batching
+//! amortises the fixed per-operator launch overhead and improves GEMM
+//! efficiency (larger M dimension), at the price of latency. This module
+//! builds batch-aware databases so every explorer runs unchanged on a
+//! batched pipeline:
+//!
+//! * compute/traffic terms scale linearly with batch `B`;
+//! * the per-operator overhead is paid once per batch;
+//! * GEMM efficiency gains a mild boost with `B` (larger tiles), modeled
+//!   as a saturating +20% at large `B`.
+
+use super::{CostModel, PerfDb};
+use crate::model::{Layer, Network};
+use crate::platform::{ExecutionPlace, Platform};
+
+/// Batch-aware layer time on an EP: `B` images per pipeline slot.
+pub fn layer_time_batched(model: &CostModel, layer: &Layer, ep: &ExecutionPlace, batch: u32) -> f64 {
+    assert!(batch >= 1);
+    let ot = model.operator_times(layer, ep);
+    let b = batch as f64;
+    // gemm efficiency boost: saturating towards 1.2x at large batches
+    let gemm_boost = 1.0 + 0.2 * (1.0 - 1.0 / b);
+    ot.im2col_s * b + ot.gemm_s * b / gemm_boost + ot.overhead_s
+}
+
+/// Build a batched per-layer database; `batch = 1` reproduces
+/// [`PerfDb::build`] exactly.
+pub fn build_batched(net: &Network, plat: &Platform, model: &CostModel, batch: u32) -> PerfDb {
+    let rows: Vec<Vec<f64>> = plat
+        .eps
+        .iter()
+        .map(|ep| net.layers.iter().map(|l| layer_time_batched(model, l, ep, batch)).collect())
+        .collect();
+    PerfDb::from_rows(rows)
+}
+
+/// Steady-state *image* throughput of a batched pipeline: `B` images leave
+/// per bottleneck period.
+pub fn throughput_batched(
+    net: &Network,
+    plat: &Platform,
+    model: &CostModel,
+    cfg: &crate::pipeline::PipelineConfig,
+    batch: u32,
+) -> f64 {
+    let db = build_batched(net, plat, model, batch);
+    batch as f64 * crate::pipeline::simulator::throughput(net, plat, &db, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::pipeline::PipelineConfig;
+    use crate::platform::configs;
+
+    #[test]
+    fn batch1_matches_unbatched() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let model = CostModel::default();
+        let db1 = build_batched(&net, &plat, &model, 1);
+        let db = PerfDb::build(&net, &plat, &model);
+        for ep in 0..plat.n_eps() {
+            for l in 0..net.len() {
+                assert!((db1.layer_time(l, ep) - db.layer_time(l, ep)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn batching_improves_image_throughput() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let model = CostModel::default();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let t1 = throughput_batched(&net, &plat, &model, &cfg, 1);
+        let t8 = throughput_batched(&net, &plat, &model, &cfg, 8);
+        assert!(t8 > t1, "batched {t8} vs single {t1}");
+    }
+
+    #[test]
+    fn batching_gains_saturate() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let model = CostModel::default();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let t8 = throughput_batched(&net, &plat, &model, &cfg, 8);
+        let t64 = throughput_batched(&net, &plat, &model, &cfg, 64);
+        let gain_8_64 = t64 / t8;
+        let gain_1_8 = t8 / throughput_batched(&net, &plat, &model, &cfg, 1);
+        assert!(gain_8_64 < gain_1_8, "diminishing returns: {gain_1_8} then {gain_8_64}");
+    }
+
+    #[test]
+    fn per_image_latency_grows_with_batch() {
+        // latency per image = bottleneck period / ... : batch period grows
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let model = CostModel::default();
+        let l1 = layer_time_batched(&model, &net.layers[0], &plat.eps[0], 1);
+        let l16 = layer_time_batched(&model, &net.layers[0], &plat.eps[0], 16);
+        assert!(l16 > 5.0 * l1, "batch-16 slot much longer than batch-1");
+    }
+}

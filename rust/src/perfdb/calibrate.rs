@@ -1,0 +1,135 @@
+//! Calibration of the analytic cost model against real measurements.
+//!
+//! The end-to-end example measures real per-layer times by executing the
+//! AOT-compiled Pallas/JAX artifacts through PJRT (see `runtime`). This
+//! module fits a per-EP scale factor so the analytic database matches the
+//! measured substrate, mirroring how the paper scales a "fixed fraction of
+//! each layer ... to the full size of the layer" (§6).
+
+use super::{CostModel, PerfDb};
+use crate::model::Network;
+use crate::platform::Platform;
+
+/// Result of calibrating one EP: measured vs predicted and the fitted scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpCalibration {
+    /// EP id.
+    pub ep: usize,
+    /// Geometric-mean measured/predicted ratio.
+    pub scale: f64,
+    /// Residual spread (max/min per-layer ratio after scaling).
+    pub spread: f64,
+}
+
+/// Fit per-EP scale factors from measured layer times.
+///
+/// `measured[ep][layer]` may contain `None` for layers that were not
+/// measured (the paper measures a fixed fraction; we allow sparse probes).
+/// Returns one calibration per EP; EPs with no measurements get scale 1.
+pub fn fit_scales(
+    net: &Network,
+    plat: &Platform,
+    model: &CostModel,
+    measured: &[Vec<Option<f64>>],
+) -> Vec<EpCalibration> {
+    assert_eq!(measured.len(), plat.n_eps());
+    let mut out = Vec::with_capacity(plat.n_eps());
+    for (ep_id, row) in measured.iter().enumerate() {
+        assert_eq!(row.len(), net.len(), "measurement row length");
+        let ep = &plat.eps[ep_id];
+        let mut log_sum = 0.0;
+        let mut n = 0usize;
+        let mut ratios: Vec<f64> = Vec::new();
+        for (li, m) in row.iter().enumerate() {
+            if let Some(t_meas) = m {
+                let t_pred = model.layer_time(&net.layers[li], ep);
+                if *t_meas > 0.0 && t_pred > 0.0 {
+                    let r = t_meas / t_pred;
+                    log_sum += r.ln();
+                    ratios.push(r);
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            out.push(EpCalibration { ep: ep_id, scale: 1.0, spread: 1.0 });
+            continue;
+        }
+        let scale = (log_sum / n as f64).exp();
+        let spread = {
+            let mx = ratios.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = ratios.iter().cloned().fold(f64::MAX, f64::min);
+            mx / mn
+        };
+        out.push(EpCalibration { ep: ep_id, scale, spread });
+    }
+    out
+}
+
+/// Build a calibrated database: analytic model scaled per-EP to match
+/// measurements.
+pub fn calibrated_db(
+    net: &Network,
+    plat: &Platform,
+    model: &CostModel,
+    measured: &[Vec<Option<f64>>],
+) -> (PerfDb, Vec<EpCalibration>) {
+    let cals = fit_scales(net, plat, model, measured);
+    let mut db = PerfDb::build(net, plat, model);
+    for c in &cals {
+        db.scale_ep(c.ep, c.scale);
+    }
+    (db, cals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    #[test]
+    fn perfect_measurement_gives_unit_scale() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        let model = CostModel::default();
+        let measured: Vec<Vec<Option<f64>>> = plat
+            .eps
+            .iter()
+            .map(|ep| net.layers.iter().map(|l| Some(model.layer_time(l, ep))).collect())
+            .collect();
+        let cals = fit_scales(&net, &plat, &model, &measured);
+        for c in &cals {
+            assert!((c.scale - 1.0).abs() < 1e-9);
+            assert!((c.spread - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_slowdown_recovered() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        let model = CostModel::default();
+        let measured: Vec<Vec<Option<f64>>> = plat
+            .eps
+            .iter()
+            .map(|ep| net.layers.iter().map(|l| Some(3.0 * model.layer_time(l, ep))).collect())
+            .collect();
+        let (db, cals) = calibrated_db(&net, &plat, &model, &measured);
+        assert!((cals[0].scale - 3.0).abs() < 1e-9);
+        let raw = PerfDb::build(&net, &plat, &model);
+        assert!((db.layer_time(0, 0) / raw.layer_time(0, 0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_measurements_ok() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        let model = CostModel::default();
+        let mut measured: Vec<Vec<Option<f64>>> = vec![vec![None; net.len()]; plat.n_eps()];
+        measured[0][0] = Some(2.0 * model.layer_time(&net.layers[0], &plat.eps[0]));
+        let cals = fit_scales(&net, &plat, &model, &measured);
+        assert!((cals[0].scale - 2.0).abs() < 1e-9);
+        assert_eq!(cals[1].scale, 1.0); // unmeasured EP untouched
+    }
+}

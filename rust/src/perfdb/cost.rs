@@ -1,0 +1,234 @@
+//! The analytic chiplet cost model that substitutes gem5.
+//!
+//! Per layer the Darknet execution model (paper §6) runs two operators:
+//!
+//! 1. **Im2Col** — pure data movement: the input tensor is expanded into a
+//!    patch matrix of `(out_h·out_w) × (R·S·C)` elements. Modeled as
+//!    memory-bound: `t = bytes_moved / BW_eff(n)`.
+//! 2. **GEMM** — `M×K · K×N` with `M = out_h·out_w`, `N = K_filters`,
+//!    `K = R·S·C`. Modeled as a roofline:
+//!    `t = max(flops / (P_peak·η(n)·ε_gemm), bytes / BW_eff(n))`.
+//!
+//! Scaling behaviour (the motivation experiment of §2 — more threads do not
+//! always help) enters through two saturating curves:
+//!
+//! * `η(n) = 1 / (1 + σ·(n−1))` — parallel efficiency loss per extra core;
+//! * `BW_eff(n) = BW_peak · n / (n + n_half)` — per-thread bandwidth ramp
+//!   that saturates at the memory's peak.
+
+use crate::model::{Layer, LayerKind};
+use crate::platform::ExecutionPlace;
+
+/// Tunable constants of the analytic model. Defaults are chosen so the
+/// Big:Little and fast:slow ratios of Table 1 are preserved and GEMM on a
+/// big 8-core EP reaches ~50% of peak — typical for a tuned CPU sgemm on
+/// moderately sized layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Parallel-efficiency loss coefficient σ in `η(n) = 1/(1+σ(n−1))`.
+    pub sigma: f64,
+    /// Half-saturation thread count in the bandwidth ramp.
+    pub bw_n_half: f64,
+    /// Fraction of peak FLOPs a tuned GEMM achieves (`ε_gemm`).
+    pub gemm_efficiency: f64,
+    /// Fixed per-operator launch overhead in seconds (kernel dispatch,
+    /// synchronisation). Two operators per layer.
+    pub op_overhead_s: f64,
+    /// Multiplier on Im2Col traffic to account for read+write streams.
+    pub im2col_rw_factor: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            sigma: 0.04,
+            bw_n_half: 1.5,
+            gemm_efficiency: 0.5,
+            op_overhead_s: 20e-6,
+            im2col_rw_factor: 2.0,
+        }
+    }
+}
+
+/// Decomposed per-operator times for one layer on one EP.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatorTimes {
+    /// Im2Col (memory-bound) time, seconds.
+    pub im2col_s: f64,
+    /// GEMM roofline time, seconds.
+    pub gemm_s: f64,
+    /// Fixed overheads, seconds.
+    pub overhead_s: f64,
+}
+
+impl OperatorTimes {
+    /// Total layer time.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.im2col_s + self.gemm_s + self.overhead_s
+    }
+
+    /// True when the GEMM side is memory-bound on this EP.
+    pub fn gemm_memory_bound(&self, flops: f64, peak_flops: f64) -> bool {
+        self.gemm_s > flops / peak_flops + 1e-15
+    }
+}
+
+impl CostModel {
+    /// Parallel efficiency `η(n)`.
+    #[inline]
+    pub fn parallel_eff(&self, n_cores: u32) -> f64 {
+        1.0 / (1.0 + self.sigma * (n_cores.saturating_sub(1)) as f64)
+    }
+
+    /// Effective bandwidth in bytes/s when `n_cores` threads stream from the
+    /// EP's memory: saturating ramp towards the Table-1 peak.
+    #[inline]
+    pub fn effective_bandwidth(&self, ep: &ExecutionPlace, n_cores: u32) -> f64 {
+        let peak = ep.bandwidth_gbs() * 1e9;
+        let n = n_cores as f64;
+        peak * n / (n + self.bw_n_half)
+    }
+
+    /// Aggregate sustained compute in FLOP/s for GEMM on this EP.
+    #[inline]
+    pub fn sustained_gflops(&self, ep: &ExecutionPlace) -> f64 {
+        ep.peak_gflops() * 1e9 * self.parallel_eff(ep.n_cores) * self.gemm_efficiency
+    }
+
+    /// Decomposed operator times for `layer` on `ep`.
+    pub fn operator_times(&self, layer: &Layer, ep: &ExecutionPlace) -> OperatorTimes {
+        let bw = self.effective_bandwidth(ep, ep.n_cores);
+        let compute = self.sustained_gflops(ep);
+
+        let (im2col_s, gemm_bytes) = match layer.kind {
+            LayerKind::Conv => {
+                // Im2Col: read input (cached, amortised into the rw factor),
+                // write the patch matrix.
+                let bytes = layer.im2col_bytes() as f64 * self.im2col_rw_factor;
+                // GEMM traffic: patch matrix + filter weights + output.
+                let gb = (layer.im2col_bytes() + layer.weight_bytes() + layer.output_bytes()) as f64;
+                (bytes / bw, gb)
+            }
+            LayerKind::Dense => {
+                // Dense layers skip Im2Col; traffic is weights-dominated.
+                let gb = (layer.input_bytes() + layer.weight_bytes() + layer.output_bytes()) as f64;
+                (0.0, gb)
+            }
+        };
+
+        let flops = layer.flops() as f64;
+        let gemm_s = (flops / compute).max(gemm_bytes / bw);
+
+        OperatorTimes { im2col_s, gemm_s, overhead_s: 2.0 * self.op_overhead_s }
+    }
+
+    /// Total execution time of `layer` on `ep` in seconds — the quantity
+    /// the paper's gem5 database stores.
+    #[inline]
+    pub fn layer_time(&self, layer: &Layer, ep: &ExecutionPlace) -> f64 {
+        self.operator_times(layer, ep).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{configs, CoreType, MemoryClass};
+
+    fn layer() -> Layer {
+        Layer::conv("t", 56, 56, 64, 3, 3, 64, 1, 1)
+    }
+
+    #[test]
+    fn parallel_eff_monotone_decreasing() {
+        let m = CostModel::default();
+        assert!(m.parallel_eff(1) == 1.0);
+        assert!(m.parallel_eff(4) > m.parallel_eff(8));
+        assert!(m.parallel_eff(8) > 0.5);
+    }
+
+    #[test]
+    fn bandwidth_ramp_saturates() {
+        let m = CostModel::default();
+        let ep = configs::ep_big8(0);
+        let b1 = m.effective_bandwidth(&ep, 1);
+        let b4 = m.effective_bandwidth(&ep, 4);
+        let b8 = m.effective_bandwidth(&ep, 8);
+        assert!(b1 < b4 && b4 < b8);
+        assert!(b8 < ep.bandwidth_gbs() * 1e9);
+        // diminishing returns: 1->4 gains more than 4->8 per added thread
+        assert!((b4 - b1) / 3.0 > (b8 - b4) / 4.0);
+    }
+
+    #[test]
+    fn big_beats_little_at_same_count() {
+        let m = CostModel::default();
+        let big = configs::ep_big4(0);
+        let little = configs::ep_little4(1);
+        let l = layer();
+        assert!(m.layer_time(&l, &big) < m.layer_time(&l, &little));
+    }
+
+    #[test]
+    fn eight_cores_beat_four_same_type() {
+        let m = CostModel::default();
+        let l = layer();
+        assert!(m.layer_time(&l, &configs::ep_big8(0)) < m.layer_time(&l, &configs::ep_big4(0)));
+    }
+
+    #[test]
+    fn compute_bound_layer_detected() {
+        // A 3x3x512->512 conv at 14x14 has high arithmetic intensity.
+        let m = CostModel::default();
+        let l = Layer::conv("heavy", 14, 14, 512, 3, 3, 512, 1, 1);
+        let ep = configs::ep_big8(0);
+        let ot = m.operator_times(&l, &ep);
+        assert!(!ot.gemm_memory_bound(l.flops() as f64, m.sustained_gflops(&ep)));
+    }
+
+    #[test]
+    fn memory_bound_layer_detected() {
+        // A 1x1 conv with very few channels is traffic-dominated: its
+        // arithmetic intensity is ~C/4 flops/byte for C=K, and the big8 EP's
+        // machine balance is ~1.5, so C=K=4 is firmly memory-bound.
+        let m = CostModel::default();
+        let l = Layer::conv("light", 112, 112, 4, 1, 1, 4, 1, 0);
+        let ep = configs::ep_big8(0);
+        let ot = m.operator_times(&l, &ep);
+        assert!(ot.gemm_memory_bound(l.flops() as f64, m.sustained_gflops(&ep)));
+    }
+
+    #[test]
+    fn dense_skips_im2col() {
+        let m = CostModel::default();
+        let mut l = Layer::conv("fc", 1, 1, 2048, 1, 1, 1000, 1, 0);
+        l.kind = LayerKind::Dense;
+        let ot = m.operator_times(&l, &configs::ep_big8(0));
+        assert_eq!(ot.im2col_s, 0.0);
+        assert!(ot.gemm_s > 0.0);
+    }
+
+    #[test]
+    fn heterogeneity_ratios_sane() {
+        // Full big8/fast EP should be ~3-8x faster than little8/slow on a
+        // compute-heavy layer (4x compute ratio, 2x bandwidth ratio).
+        let m = CostModel::default();
+        let l = Layer::conv("heavy", 28, 28, 256, 3, 3, 256, 1, 1);
+        let fast = m.layer_time(&l, &configs::ep_big8(0));
+        let slow = m.layer_time(&l, &configs::ep_little8(1));
+        let ratio = slow / fast;
+        assert!((2.0..8.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn mixed_ep_classes_allowed() {
+        // Big cores on slow memory: slower than big-on-fast for a
+        // memory-bound layer.
+        let m = CostModel::default();
+        let l = Layer::conv("light", 112, 112, 16, 1, 1, 16, 1, 0);
+        let on_fast = configs::ep_big8(0);
+        let on_slow = crate::platform::ExecutionPlace::new(1, CoreType::Big, 8, MemoryClass::Slow, 1);
+        assert!(m.layer_time(&l, &on_fast) < m.layer_time(&l, &on_slow));
+    }
+}

@@ -1,0 +1,216 @@
+//! The gem5-substitute performance database.
+//!
+//! The paper obtains per-layer execution times by simulating the Im2Col +
+//! GEMM operators of each CNN layer in gem5 for every system configuration
+//! of Table 1, storing the results in a database which every exploration
+//! algorithm then queries ("In our experiments we use database to query
+//! execution time of layers", §6). We reproduce that structure exactly,
+//! substituting gem5 with an **analytic chiplet cost model**
+//! ([`CostModel`]): a roofline over aggregate compute and saturating
+//! memory bandwidth, applied separately to the Im2Col (memory-bound) and
+//! GEMM (compute/memory roofline) operators.
+//!
+//! The substitution is sound for reproducing the paper because the
+//! explorers only ever observe `time(layer, EP)`; heterogeneity structure
+//! (Big≈4× Little compute, fast≈2× slow bandwidth, per-core scaling loss)
+//! is preserved, so ordering and crossover behaviour matches.
+//!
+//! [`PerfDb::build`] materialises the table for a (network, platform) pair
+//! and additionally stores per-EP prefix sums so that the time of a whole
+//! contiguous stage is an O(1) query — the explorer hot path.
+
+pub mod batch;
+pub mod calibrate;
+pub mod cost;
+pub mod store;
+
+pub use cost::{CostModel, OperatorTimes};
+
+use crate::model::{Layer, Network};
+use crate::platform::{EpId, Platform};
+
+/// Per-layer, per-EP execution-time database (the paper's gem5 database).
+#[derive(Debug, Clone)]
+pub struct PerfDb {
+    /// `times[ep][layer]` in seconds.
+    times: Vec<Vec<f64>>,
+    /// `prefix[ep][i]` = sum of `times[ep][0..i]`; `prefix[ep][L]` is the
+    /// whole-network time on that EP. Enables O(1) stage-time queries.
+    prefix: Vec<Vec<f64>>,
+    /// Number of layers.
+    n_layers: usize,
+}
+
+impl PerfDb {
+    /// Build the database for every (layer, EP) pair, like the paper's
+    /// offline gem5 simulation pass.
+    pub fn build(net: &Network, plat: &Platform, model: &CostModel) -> Self {
+        let mut times = Vec::with_capacity(plat.n_eps());
+        let mut prefix = Vec::with_capacity(plat.n_eps());
+        for ep in &plat.eps {
+            let row: Vec<f64> = net.layers.iter().map(|l| model.layer_time(l, ep)).collect();
+            let mut pfx = Vec::with_capacity(row.len() + 1);
+            let mut acc = 0.0;
+            pfx.push(0.0);
+            for &t in &row {
+                acc += t;
+                pfx.push(acc);
+            }
+            times.push(row);
+            prefix.push(pfx);
+        }
+        Self { times, prefix, n_layers: net.len() }
+    }
+
+    /// Build from externally measured rows (used by calibration and the
+    /// real-execution coordinator, where times come from PJRT runs).
+    pub fn from_rows(times: Vec<Vec<f64>>) -> Self {
+        assert!(!times.is_empty());
+        let n_layers = times[0].len();
+        assert!(times.iter().all(|r| r.len() == n_layers), "ragged rows");
+        let prefix = times
+            .iter()
+            .map(|row| {
+                let mut pfx = Vec::with_capacity(row.len() + 1);
+                let mut acc = 0.0;
+                pfx.push(0.0);
+                for &t in row {
+                    acc += t;
+                    pfx.push(acc);
+                }
+                pfx
+            })
+            .collect();
+        Self { times, prefix, n_layers }
+    }
+
+    /// Execution time of one layer on one EP — the paper's database query.
+    #[inline]
+    pub fn layer_time(&self, layer: usize, ep: EpId) -> f64 {
+        self.times[ep][layer]
+    }
+
+    /// Execution time of the contiguous layer range `[lo, hi)` on one EP.
+    /// O(1) via prefix sums.
+    #[inline]
+    pub fn range_time(&self, lo: usize, hi: usize, ep: EpId) -> f64 {
+        debug_assert!(lo <= hi && hi <= self.n_layers);
+        self.prefix[ep][hi] - self.prefix[ep][lo]
+    }
+
+    /// Number of layers covered.
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Number of EPs covered.
+    #[inline]
+    pub fn n_eps(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Whole-network serial time on the given EP.
+    pub fn network_time(&self, ep: EpId) -> f64 {
+        self.prefix[ep][self.n_layers]
+    }
+
+    /// Scale every entry of one EP's row (calibration hook).
+    pub fn scale_ep(&mut self, ep: EpId, factor: f64) {
+        for t in &mut self.times[ep] {
+            *t *= factor;
+        }
+        for p in &mut self.prefix[ep] {
+            *p *= factor;
+        }
+    }
+}
+
+/// Convenience: time of a single layer on a given EP without a database
+/// (used by tests and spot checks).
+pub fn layer_time_on(layer: &Layer, plat: &Platform, ep: EpId, model: &CostModel) -> f64 {
+    model.layer_time(layer, &plat.eps[ep])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn setup() -> (crate::model::Network, Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn dimensions() {
+        let (net, plat, db) = setup();
+        assert_eq!(db.n_layers(), net.len());
+        assert_eq!(db.n_eps(), plat.n_eps());
+    }
+
+    #[test]
+    fn all_times_positive_finite() {
+        let (_, _, db) = setup();
+        for ep in 0..db.n_eps() {
+            for l in 0..db.n_layers() {
+                let t = db.layer_time(l, ep);
+                assert!(t.is_finite() && t > 0.0, "t[{ep}][{l}] = {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fep_faster_than_sep_everywhere() {
+        // C2: EPs 0,1 are big/fast; 2,3 little/slow. Every layer must run
+        // faster on the FEP — the heterogeneity premise of the paper.
+        let (_, _, db) = setup();
+        for l in 0..db.n_layers() {
+            assert!(db.layer_time(l, 0) < db.layer_time(l, 2), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn prefix_sums_match_direct_sums() {
+        let (_, _, db) = setup();
+        for ep in 0..db.n_eps() {
+            for lo in 0..db.n_layers() {
+                for hi in lo..=db.n_layers() {
+                    let direct: f64 = (lo..hi).map(|l| db.layer_time(l, ep)).sum();
+                    assert!((db.range_time(lo, hi, ep) - direct).abs() < 1e-12 * (1.0 + direct));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn network_time_is_full_range() {
+        let (_, _, db) = setup();
+        assert_eq!(db.network_time(0), db.range_time(0, db.n_layers(), 0));
+    }
+
+    #[test]
+    fn scale_ep_scales_row_and_prefix() {
+        let (_, _, mut db) = setup();
+        let before = db.range_time(2, 7, 1);
+        db.scale_ep(1, 2.0);
+        assert!((db.range_time(2, 7, 1) - 2.0 * before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![0.5, 0.5, 0.5]];
+        let db = PerfDb::from_rows(rows);
+        assert_eq!(db.range_time(0, 3, 0), 6.0);
+        assert_eq!(db.range_time(1, 3, 1), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_rows_rejects_ragged() {
+        PerfDb::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,158 @@
+//! On-disk persistence of the performance database.
+//!
+//! The paper generates its gem5 timing database offline and queries it
+//! during exploration (§6). This module gives the database the same
+//! lifecycle: [`save`] writes a self-describing CSV (one row per EP, one
+//! column per layer, header with network/platform names for drift
+//! detection), [`load`] restores it, so the expensive build (or real
+//! measurement collection) happens once per (network, platform) pair.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::PerfDb;
+
+/// Save `db` for a (network, platform) pair.
+pub fn save(
+    db: &PerfDb,
+    network: &str,
+    platform: &str,
+    path: impl AsRef<Path>,
+) -> io::Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# shisha perfdb v1 network={network} platform={platform} layers={} eps={}\n",
+        db.n_layers(),
+        db.n_eps()
+    ));
+    for ep in 0..db.n_eps() {
+        let row: Vec<String> = (0..db.n_layers())
+            .map(|l| format!("{:.17e}", db.layer_time(l, ep)))
+            .collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    if let Some(parent) = path.as_ref().parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, out)
+}
+
+/// Load a database, checking it was saved for the expected names.
+pub fn load(path: impl AsRef<Path>, network: &str, platform: &str) -> Result<PerfDb> {
+    let text = fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty perfdb file")?;
+    if !header.starts_with("# shisha perfdb v1 ") {
+        bail!("not a shisha perfdb file: {header:?}");
+    }
+    let mut meta = std::collections::HashMap::new();
+    for kv in header.trim_start_matches("# shisha perfdb v1 ").split_whitespace() {
+        if let Some((k, v)) = kv.split_once('=') {
+            meta.insert(k, v);
+        }
+    }
+    if meta.get("network").copied() != Some(network) {
+        bail!("perfdb is for network {:?}, expected {network:?}", meta.get("network"));
+    }
+    if meta.get("platform").copied() != Some(platform) {
+        bail!("perfdb is for platform {:?}, expected {platform:?}", meta.get("platform"));
+    }
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: std::result::Result<Vec<f64>, _> =
+            line.split(',').map(|t| t.trim().parse::<f64>()).collect();
+        rows.push(row.with_context(|| format!("row {i} unparseable"))?);
+    }
+    let expect_eps: usize = meta.get("eps").and_then(|s| s.parse().ok()).unwrap_or(rows.len());
+    if rows.len() != expect_eps {
+        bail!("expected {expect_eps} EP rows, found {}", rows.len());
+    }
+    Ok(PerfDb::from_rows(rows))
+}
+
+/// Build-or-load: load when a valid cached file exists, otherwise build
+/// with `builder` and save. Returns (db, was_cached).
+pub fn build_or_load(
+    path: impl AsRef<Path>,
+    network: &str,
+    platform: &str,
+    builder: impl FnOnce() -> PerfDb,
+) -> Result<(PerfDb, bool)> {
+    if path.as_ref().exists() {
+        if let Ok(db) = load(&path, network, platform) {
+            return Ok((db, true));
+        }
+    }
+    let db = builder();
+    save(&db, network, platform, &path)?;
+    Ok((db, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::CostModel;
+    use crate::platform::configs;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("shisha_perfdb_store").join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let path = tmp("rt.csv");
+        save(&db, "synthnet", "C2", &path).unwrap();
+        let loaded = load(&path, "synthnet", "C2").unwrap();
+        for ep in 0..db.n_eps() {
+            for l in 0..db.n_layers() {
+                assert_eq!(db.layer_time(l, ep), loaded.layer_time(l, ep), "exact at [{ep}][{l}]");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_names() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let path = tmp("names.csv");
+        save(&db, "alexnet", "C1", &path).unwrap();
+        assert!(load(&path, "resnet50", "C1").is_err());
+        assert!(load(&path, "alexnet", "C9").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.csv");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "hello\n1,2\n").unwrap();
+        assert!(load(&path, "x", "y").is_err());
+    }
+
+    #[test]
+    fn build_or_load_caches() {
+        let net = networks::alexnet();
+        let plat = configs::c1();
+        let path = tmp("cache.csv");
+        let _ = std::fs::remove_file(&path);
+        let (db1, cached1) =
+            build_or_load(&path, "alexnet", "C1", || PerfDb::build(&net, &plat, &CostModel::default()))
+                .unwrap();
+        assert!(!cached1);
+        let (db2, cached2) = build_or_load(&path, "alexnet", "C1", || panic!("must not rebuild")).unwrap();
+        assert!(cached2);
+        assert_eq!(db1.layer_time(0, 0), db2.layer_time(0, 0));
+    }
+}

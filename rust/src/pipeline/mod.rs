@@ -1,0 +1,324 @@
+//! Pipeline configurations and their evaluation.
+//!
+//! A pipeline configuration (paper §5) has two components:
+//!
+//! 1. a partition of the CNN's `L` layers into `N ≤ #EPs` **contiguous**
+//!    pipeline stages (layers form a chain DAG, so only consecutive layers
+//!    may be merged — §5.1), recorded as per-stage layer counts;
+//! 2. an injective assignment of stages to Execution Places.
+//!
+//! [`simulator`] computes per-stage times and steady-state throughput for a
+//! configuration against a [`crate::perfdb::PerfDb`] (the paper's database
+//! mode) including inter-chiplet transfer costs; [`space`] counts and
+//! enumerates the design space for Exhaustive Search and the paper's
+//! "explored %" metric.
+
+pub mod objective;
+pub mod simulator;
+pub mod space;
+
+use crate::platform::{EpId, Platform};
+
+/// A pipeline configuration: stage sizes + stage-to-EP assignment.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PipelineConfig {
+    /// Layers per stage; `stages.len() == N`, `sum(stages) == L`, all ≥ 1.
+    pub stages: Vec<usize>,
+    /// EP assigned to each stage; distinct, `assignment.len() == N`.
+    pub assignment: Vec<EpId>,
+}
+
+/// Validation failure for a [`PipelineConfig`].
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ConfigError {
+    /// No stages at all.
+    #[error("configuration has zero stages")]
+    Empty,
+    /// A stage with zero layers.
+    #[error("stage {0} has zero layers")]
+    EmptyStage(usize),
+    /// Stage sizes don't sum to the layer count.
+    #[error("stage sizes sum to {got}, network has {want} layers")]
+    WrongLayerTotal {
+        /// Sum of stage sizes.
+        got: usize,
+        /// Network layer count.
+        want: usize,
+    },
+    /// Assignment length mismatch.
+    #[error("{stages} stages but {eps} assigned EPs")]
+    AssignmentLength {
+        /// Number of stages.
+        stages: usize,
+        /// Number of assigned EPs.
+        eps: usize,
+    },
+    /// An EP referenced that the platform does not have.
+    #[error("assigned EP {0} does not exist on the platform")]
+    UnknownEp(EpId),
+    /// The same EP assigned to two stages.
+    #[error("EP {0} assigned to more than one stage")]
+    DuplicateEp(EpId),
+}
+
+impl PipelineConfig {
+    /// Construct without validation.
+    pub fn new(stages: Vec<usize>, assignment: Vec<EpId>) -> Self {
+        Self { stages, assignment }
+    }
+
+    /// Single-stage configuration: the whole network on one EP.
+    pub fn single_stage(n_layers: usize, ep: EpId) -> Self {
+        Self { stages: vec![n_layers], assignment: vec![ep] }
+    }
+
+    /// Number of pipeline stages `N`.
+    #[inline]
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total layers covered.
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.stages.iter().sum()
+    }
+
+    /// Per-stage `[lo, hi)` layer-index bounds.
+    pub fn stage_bounds(&self) -> Vec<(usize, usize)> {
+        let mut bounds = Vec::with_capacity(self.stages.len());
+        let mut lo = 0;
+        for &n in &self.stages {
+            bounds.push((lo, lo + n));
+            lo += n;
+        }
+        bounds
+    }
+
+    /// The stage containing layer index `layer`, if covered.
+    pub fn stage_of_layer(&self, layer: usize) -> Option<usize> {
+        let mut lo = 0;
+        for (si, &n) in self.stages.iter().enumerate() {
+            if layer < lo + n {
+                return Some(si);
+            }
+            lo += n;
+        }
+        None
+    }
+
+    /// Validate against a network size and platform.
+    pub fn validate(&self, n_layers: usize, plat: &Platform) -> Result<(), ConfigError> {
+        if self.stages.is_empty() {
+            return Err(ConfigError::Empty);
+        }
+        if let Some(si) = self.stages.iter().position(|&n| n == 0) {
+            return Err(ConfigError::EmptyStage(si));
+        }
+        let got = self.n_layers();
+        if got != n_layers {
+            return Err(ConfigError::WrongLayerTotal { got, want: n_layers });
+        }
+        if self.assignment.len() != self.stages.len() {
+            return Err(ConfigError::AssignmentLength {
+                stages: self.stages.len(),
+                eps: self.assignment.len(),
+            });
+        }
+        let mut seen = vec![false; plat.n_eps()];
+        for &ep in &self.assignment {
+            if ep >= plat.n_eps() {
+                return Err(ConfigError::UnknownEp(ep));
+            }
+            if seen[ep] {
+                return Err(ConfigError::DuplicateEp(ep));
+            }
+            seen[ep] = true;
+        }
+        Ok(())
+    }
+
+    /// Move one layer from stage `from` to the adjacent stage `to`
+    /// (`|from − to| == 1`), shrinking `from` by one layer on the shared
+    /// boundary. Returns `None` if the move would empty `from` or the
+    /// stages are not adjacent.
+    pub fn move_layer(&self, from: usize, to: usize) -> Option<PipelineConfig> {
+        if from >= self.stages.len() || to >= self.stages.len() {
+            return None;
+        }
+        if from.abs_diff(to) != 1 || self.stages[from] <= 1 {
+            return None;
+        }
+        let mut next = self.clone();
+        next.stages[from] -= 1;
+        next.stages[to] += 1;
+        Some(next)
+    }
+
+    /// Merge stage `s` with `s+1`, freeing the EP of `s+1`.
+    /// Returns `None` when out of range or only one stage remains.
+    pub fn merge_stages(&self, s: usize) -> Option<PipelineConfig> {
+        if self.stages.len() < 2 || s + 1 >= self.stages.len() {
+            return None;
+        }
+        let mut next = self.clone();
+        next.stages[s] += next.stages[s + 1];
+        next.stages.remove(s + 1);
+        next.assignment.remove(s + 1);
+        Some(next)
+    }
+
+    /// Split stage `s` after `left` layers, assigning the new right half to
+    /// `new_ep` (which must be unused). Returns `None` when illegal.
+    pub fn split_stage(&self, s: usize, left: usize, new_ep: EpId) -> Option<PipelineConfig> {
+        if s >= self.stages.len() || left == 0 || left >= self.stages[s] {
+            return None;
+        }
+        if self.assignment.contains(&new_ep) {
+            return None;
+        }
+        let mut next = self.clone();
+        let right = next.stages[s] - left;
+        next.stages[s] = left;
+        next.stages.insert(s + 1, right);
+        next.assignment.insert(s + 1, new_ep);
+        Some(next)
+    }
+
+    /// Swap the EPs of stages `a` and `b`.
+    pub fn swap_eps(&self, a: usize, b: usize) -> Option<PipelineConfig> {
+        if a >= self.stages.len() || b >= self.stages.len() || a == b {
+            return None;
+        }
+        let mut next = self.clone();
+        next.assignment.swap(a, b);
+        Some(next)
+    }
+
+    /// Reassign stage `s` to a currently unused EP.
+    pub fn reassign(&self, s: usize, ep: EpId) -> Option<PipelineConfig> {
+        if s >= self.stages.len() || self.assignment.contains(&ep) {
+            return None;
+        }
+        let mut next = self.clone();
+        next.assignment[s] = ep;
+        Some(next)
+    }
+
+    /// Compact display, e.g. `[3@EP0, 7@EP2, 8@EP1]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .zip(&self.assignment)
+            .map(|(n, ep)| format!("{n}@EP{ep}"))
+            .collect();
+        format!("[{}]", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::configs;
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig::new(vec![3, 7, 8], vec![0, 2, 1])
+    }
+
+    #[test]
+    fn bounds_partition_layers() {
+        let c = cfg();
+        assert_eq!(c.stage_bounds(), vec![(0, 3), (3, 10), (10, 18)]);
+        assert_eq!(c.n_layers(), 18);
+    }
+
+    #[test]
+    fn stage_of_layer_lookup() {
+        let c = cfg();
+        assert_eq!(c.stage_of_layer(0), Some(0));
+        assert_eq!(c.stage_of_layer(3), Some(1));
+        assert_eq!(c.stage_of_layer(17), Some(2));
+        assert_eq!(c.stage_of_layer(18), None);
+    }
+
+    #[test]
+    fn validate_accepts_good_config() {
+        let c = cfg();
+        assert_eq!(c.validate(18, &configs::c2()), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_bad_total() {
+        let c = cfg();
+        assert!(matches!(
+            c.validate(20, &configs::c2()),
+            Err(ConfigError::WrongLayerTotal { got: 18, want: 20 })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_ep() {
+        let c = PipelineConfig::new(vec![9, 9], vec![1, 1]);
+        assert!(matches!(c.validate(18, &configs::c2()), Err(ConfigError::DuplicateEp(1))));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_ep() {
+        let c = PipelineConfig::new(vec![18], vec![9]);
+        assert!(matches!(c.validate(18, &configs::c2()), Err(ConfigError::UnknownEp(9))));
+    }
+
+    #[test]
+    fn validate_rejects_empty_stage() {
+        let c = PipelineConfig::new(vec![18, 0], vec![0, 1]);
+        assert!(matches!(c.validate(18, &configs::c2()), Err(ConfigError::EmptyStage(1))));
+    }
+
+    #[test]
+    fn move_layer_adjacent_only() {
+        let c = cfg();
+        let m = c.move_layer(1, 0).unwrap();
+        assert_eq!(m.stages, vec![4, 6, 8]);
+        assert!(c.move_layer(0, 2).is_none(), "non-adjacent");
+    }
+
+    #[test]
+    fn move_layer_never_empties() {
+        let c = PipelineConfig::new(vec![1, 17], vec![0, 1]);
+        assert!(c.move_layer(0, 1).is_none());
+    }
+
+    #[test]
+    fn merge_and_split_roundtrip() {
+        let c = cfg();
+        let merged = c.merge_stages(1).unwrap();
+        assert_eq!(merged.stages, vec![3, 15]);
+        assert_eq!(merged.assignment, vec![0, 2]);
+        let split = merged.split_stage(1, 7, 1).unwrap();
+        assert_eq!(split.stages, vec![3, 7, 8]);
+        assert_eq!(split.assignment, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn split_rejects_used_ep() {
+        let c = cfg();
+        assert!(c.split_stage(2, 4, 0).is_none());
+    }
+
+    #[test]
+    fn swap_and_reassign() {
+        let c = cfg();
+        let s = c.swap_eps(0, 2).unwrap();
+        assert_eq!(s.assignment, vec![1, 2, 0]);
+        let c2 = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let r = c2.reassign(0, 3).unwrap();
+        assert_eq!(r.assignment, vec![3, 1]);
+        assert!(c2.reassign(0, 1).is_none(), "EP 1 already used");
+    }
+
+    #[test]
+    fn describe_format() {
+        assert_eq!(cfg().describe(), "[3@EP0, 7@EP2, 8@EP1]");
+    }
+}

@@ -1,0 +1,162 @@
+//! Alternative scheduling objectives (extension of §2).
+//!
+//! The paper's motivation experiment observes that "an optimal distribution
+//! does not always lead to a minimal parallel cost. A suboptimal
+//! distribution can, in turn, reduce the parallel cost" and calls finding a
+//! distribution good on *both* axes challenging. The evaluation then
+//! optimises throughput only; this module adds the second axis as a
+//! first-class objective so the trade-off can be explored:
+//!
+//! * [`parallel_cost`] — Figure 2(c,d)'s metric lifted to pipelines: the
+//!   core-seconds consumed per inference in steady state, `Σ_s n_cores(EP_s)
+//!   · bottleneck` (every stage's cores are held for one bottleneck period
+//!   per image, busy or not — idle cores are the *cost* of imbalance);
+//! * [`efficiency`] — images/s per core: throughput divided by total
+//!   allocated cores;
+//! * [`Objective`] — scalarisation used by [`score`]: pure throughput
+//!   (the paper), pure cost, or a weighted throughput-per-cost blend.
+
+use super::{simulator, PipelineConfig};
+use crate::model::Network;
+use crate::perfdb::PerfDb;
+use crate::platform::Platform;
+
+/// What the scheduler optimises.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Maximise steady-state throughput (the paper's objective).
+    Throughput,
+    /// Minimise parallel cost (core·seconds per image); score = 1/cost.
+    ParallelCost,
+    /// Maximise throughput per allocated core.
+    Efficiency,
+    /// Weighted blend: `throughput · efficiency^alpha` (alpha in [0, 1]).
+    Blend(f64),
+}
+
+/// Cores allocated by a configuration.
+pub fn cores_used(plat: &Platform, cfg: &PipelineConfig) -> u32 {
+    cfg.assignment.iter().map(|&ep| plat.eps[ep].n_cores).sum()
+}
+
+/// Parallel cost in core·seconds per image: all allocated cores are held
+/// for one bottleneck period per inference (imbalance ⇒ idle cores ⇒ cost).
+pub fn parallel_cost(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) -> f64 {
+    let eval = simulator::evaluate(net, plat, db, cfg);
+    cores_used(plat, cfg) as f64 * eval.bottleneck_s
+}
+
+/// Throughput per allocated core (images/s/core).
+pub fn efficiency(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) -> f64 {
+    simulator::throughput(net, plat, db, cfg) / cores_used(plat, cfg) as f64
+}
+
+/// Scalar score of `cfg` under an objective (higher = better for all
+/// variants, so explorers can maximise uniformly).
+pub fn score(
+    net: &Network,
+    plat: &Platform,
+    db: &PerfDb,
+    cfg: &PipelineConfig,
+    objective: Objective,
+) -> f64 {
+    match objective {
+        Objective::Throughput => simulator::throughput(net, plat, db, cfg),
+        Objective::ParallelCost => 1.0 / parallel_cost(net, plat, db, cfg),
+        Objective::Efficiency => efficiency(net, plat, db, cfg),
+        Objective::Blend(alpha) => {
+            let tp = simulator::throughput(net, plat, db, cfg);
+            let eff = efficiency(net, plat, db, cfg);
+            tp * eff.powf(alpha.clamp(0.0, 1.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::CostModel;
+    use crate::platform::configs;
+
+    fn setup() -> (Network, Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn cores_accounting() {
+        let (_, plat, _) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        assert_eq!(cores_used(&plat, &cfg), 16); // two 8-core EPs
+        let one = PipelineConfig::single_stage(18, 1);
+        assert_eq!(cores_used(&plat, &one), 8);
+    }
+
+    #[test]
+    fn cost_is_cores_times_bottleneck() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let eval = simulator::evaluate(&net, &plat, &db, &cfg);
+        let cost = parallel_cost(&net, &plat, &db, &cfg);
+        assert!((cost - 16.0 * eval.bottleneck_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn papers_observation_throughput_opt_not_cost_opt() {
+        // §2: the throughput-optimal schedule is not the parallel-cost
+        // optimal one — exhibit it on the pipeline problem.
+        let (net, plat, db) = setup();
+        let eps: Vec<usize> = (0..plat.n_eps()).collect();
+        let mut best_tp: Option<(PipelineConfig, f64)> = None;
+        let mut best_cost: Option<(PipelineConfig, f64)> = None;
+        for cfg in crate::pipeline::space::enumerate_all(net.len(), &eps, 3) {
+            let tp = simulator::throughput(&net, &plat, &db, &cfg);
+            let c = parallel_cost(&net, &plat, &db, &cfg);
+            if best_tp.as_ref().map_or(true, |(_, b)| tp > *b) {
+                best_tp = Some((cfg.clone(), tp));
+            }
+            if best_cost.as_ref().map_or(true, |(_, b)| c < *b) {
+                best_cost = Some((cfg, c));
+            }
+        }
+        let (tp_cfg, _) = best_tp.unwrap();
+        let (cost_cfg, _) = best_cost.unwrap();
+        assert_ne!(tp_cfg, cost_cfg, "throughput-opt == cost-opt would contradict §2");
+    }
+
+    #[test]
+    fn efficiency_prefers_fewer_cores_at_equal_throughput() {
+        let (net, plat, db) = setup();
+        // same partition, FEP-only vs FEP+SEP where SEP adds little
+        let lean = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let eff_lean = efficiency(&net, &plat, &db, &lean);
+        assert!(eff_lean > 0.0);
+    }
+
+    #[test]
+    fn scores_monotone_and_finite() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![6, 6, 6], vec![0, 1, 2]);
+        for obj in [
+            Objective::Throughput,
+            Objective::ParallelCost,
+            Objective::Efficiency,
+            Objective::Blend(0.5),
+        ] {
+            let s = score(&net, &plat, &db, &cfg, obj);
+            assert!(s.is_finite() && s > 0.0, "{obj:?}: {s}");
+        }
+    }
+
+    #[test]
+    fn blend_interpolates() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let b0 = score(&net, &plat, &db, &cfg, Objective::Blend(0.0));
+        let tp = score(&net, &plat, &db, &cfg, Objective::Throughput);
+        assert!((b0 - tp).abs() < 1e-12, "alpha=0 is pure throughput");
+    }
+}

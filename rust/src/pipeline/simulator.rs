@@ -1,0 +1,235 @@
+//! Steady-state pipeline simulator.
+//!
+//! Evaluates a [`PipelineConfig`] against the per-layer time database:
+//!
+//! * **stage compute time** — sum of its layers' times on its EP (O(1) via
+//!   the database prefix sums);
+//! * **stage transfer time** — receiving the previous stage's output across
+//!   the inter-chiplet link (latency + bytes/bandwidth), §7.6;
+//! * **throughput** — `1 / max_stage_time` (images/s): in steady state the
+//!   pipeline is limited by its slowest stage;
+//! * **makespan** — fill latency plus `(k−1)` bottleneck periods for `k`
+//!   inputs, used to charge explorers the *online* cost of trying a
+//!   configuration (slow configurations cost more wall-clock to test —
+//!   the effect that separates Shisha from blind search in Figure 4).
+
+use super::PipelineConfig;
+use crate::model::Network;
+use crate::perfdb::PerfDb;
+use crate::platform::Platform;
+
+/// Per-stage evaluation breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageEval {
+    /// Stage index.
+    pub stage: usize,
+    /// Compute time on the assigned EP, seconds.
+    pub compute_s: f64,
+    /// Inbound transfer time (0 for the first stage or same-chiplet), seconds.
+    pub transfer_s: f64,
+}
+
+impl StageEval {
+    /// Total stage service time.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.transfer_s
+    }
+}
+
+/// Full evaluation of one pipeline configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineEval {
+    /// Per-stage breakdown.
+    pub stages: Vec<StageEval>,
+    /// Bottleneck stage service time, seconds.
+    pub bottleneck_s: f64,
+    /// Steady-state throughput, images/s.
+    pub throughput: f64,
+    /// Pipeline fill latency (sum of all stage times), seconds.
+    pub latency_s: f64,
+}
+
+/// Evaluate `cfg` on `net`/`plat` using the time database `db`.
+///
+/// `db` rows must correspond to `plat.eps` and columns to `net.layers`.
+pub fn evaluate(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) -> PipelineEval {
+    debug_assert_eq!(db.n_layers(), net.len());
+    let bounds = cfg.stage_bounds();
+    let mut stages = Vec::with_capacity(bounds.len());
+    for (si, &(lo, hi)) in bounds.iter().enumerate() {
+        let ep = cfg.assignment[si];
+        let compute_s = db.range_time(lo, hi, ep);
+        let transfer_s = if si == 0 {
+            0.0
+        } else {
+            let prev_ep = cfg.assignment[si - 1];
+            // the previous stage's last layer's output crosses the NoC
+            crate::platform::topology::transfer_time(plat, prev_ep, ep, net.layers[lo - 1].output_bytes())
+        };
+        stages.push(StageEval { stage: si, compute_s, transfer_s });
+    }
+    let bottleneck_s = stages.iter().map(StageEval::total).fold(0.0, f64::max);
+    let latency_s = stages.iter().map(StageEval::total).sum();
+    PipelineEval {
+        stages,
+        bottleneck_s,
+        throughput: if bottleneck_s > 0.0 { 1.0 / bottleneck_s } else { f64::INFINITY },
+        latency_s,
+    }
+}
+
+/// Steady-state throughput only (hot path for explorers).
+#[inline]
+pub fn throughput(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) -> f64 {
+    // Specialised: avoid allocating StageEval vec.
+    let mut lo = 0usize;
+    let mut bottleneck = 0.0f64;
+    for (si, &n) in cfg.stages.iter().enumerate() {
+        let hi = lo + n;
+        let ep = cfg.assignment[si];
+        let mut t = db.range_time(lo, hi, ep);
+        if si > 0 {
+            let prev_ep = cfg.assignment[si - 1];
+            t += crate::platform::topology::transfer_time(plat, prev_ep, ep, net.layers[lo - 1].output_bytes());
+        }
+        if t > bottleneck {
+            bottleneck = t;
+        }
+        lo = hi;
+    }
+    if bottleneck > 0.0 {
+        1.0 / bottleneck
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Index of the slowest stage (Algorithm 2, line 5).
+pub fn slowest_stage(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) -> usize {
+    let eval = evaluate(net, plat, db, cfg);
+    eval.stages
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.total().partial_cmp(&b.total()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Wall-clock time to push `k` inputs through the pipeline: fill latency +
+/// `(k−1)` bottleneck periods. This is what an *online* tuner pays to test
+/// a configuration with `k` probe inputs.
+pub fn makespan(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig, k: u64) -> f64 {
+    let eval = evaluate(net, plat, db, cfg);
+    eval.latency_s + (k.saturating_sub(1)) as f64 * eval.bottleneck_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::perfdb::CostModel;
+    use crate::platform::configs;
+
+    fn setup() -> (Network, Platform, PerfDb) {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        (net, plat, db)
+    }
+
+    #[test]
+    fn throughput_is_inverse_bottleneck() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let eval = evaluate(&net, &plat, &db, &cfg);
+        assert!((eval.throughput - 1.0 / eval.bottleneck_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fast_path_matches_full_eval() {
+        let (net, plat, db) = setup();
+        for cfg in [
+            PipelineConfig::new(vec![18], vec![0]),
+            PipelineConfig::new(vec![9, 9], vec![0, 2]),
+            PipelineConfig::new(vec![5, 6, 7], vec![1, 0, 3]),
+            PipelineConfig::new(vec![4, 4, 5, 5], vec![3, 2, 1, 0]),
+        ] {
+            let full = evaluate(&net, &plat, &db, &cfg).throughput;
+            let fast = throughput(&net, &plat, &db, &cfg);
+            assert!((full - fast).abs() < 1e-12 * full.max(1.0), "{}", cfg.describe());
+        }
+    }
+
+    #[test]
+    fn single_stage_has_no_transfer() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::single_stage(18, 0);
+        let eval = evaluate(&net, &plat, &db, &cfg);
+        assert_eq!(eval.stages.len(), 1);
+        assert_eq!(eval.stages[0].transfer_s, 0.0);
+        assert!((eval.stages[0].compute_s - db.network_time(0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelining_beats_single_stage() {
+        // With two equally loaded halves on two fast EPs, throughput must
+        // exceed the single-EP configuration.
+        let (net, plat, db) = setup();
+        let single = throughput(&net, &plat, &db, &PipelineConfig::single_stage(18, 0));
+        let dual = throughput(&net, &plat, &db, &PipelineConfig::new(vec![9, 9], vec![0, 1]));
+        assert!(dual > single, "dual {dual} vs single {single}");
+    }
+
+    #[test]
+    fn transfer_charged_across_chiplets() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let eval = evaluate(&net, &plat, &db, &cfg);
+        assert!(eval.stages[1].transfer_s > 0.0);
+    }
+
+    #[test]
+    fn huge_link_latency_hurts_throughput() {
+        // Figure 9's mechanism: throughput insensitive to small latencies,
+        // crushed by >= 1ms-scale latencies.
+        let (net, mut plat, _) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        plat.link.latency_s = 1e-9;
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let fast = throughput(&net, &plat, &db, &cfg);
+        plat.link.latency_s = 1.0;
+        let slow = throughput(&net, &plat, &db, &cfg);
+        assert!(slow < fast / 10.0, "1s latency must dominate: {slow} vs {fast}");
+        plat.link.latency_s = 1e-6;
+        let micro = throughput(&net, &plat, &db, &cfg);
+        assert!((micro - fast).abs() / fast < 0.01, "1us latency negligible");
+    }
+
+    #[test]
+    fn slowest_stage_identified() {
+        let (net, plat, db) = setup();
+        // Put 17 layers on a slow EP, 1 on a fast: stage 0 is the bottleneck.
+        let cfg = PipelineConfig::new(vec![17, 1], vec![2, 0]);
+        assert_eq!(slowest_stage(&net, &plat, &db, &cfg), 0);
+    }
+
+    #[test]
+    fn makespan_scales_linearly_in_k() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let eval = evaluate(&net, &plat, &db, &cfg);
+        let m1 = makespan(&net, &plat, &db, &cfg, 1);
+        let m11 = makespan(&net, &plat, &db, &cfg, 11);
+        assert!((m1 - eval.latency_s).abs() < 1e-12);
+        assert!((m11 - m1 - 10.0 * eval.bottleneck_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_beats_imbalanced_on_same_eps() {
+        let (net, plat, db) = setup();
+        let imb = throughput(&net, &plat, &db, &PipelineConfig::new(vec![1, 17], vec![0, 1]));
+        let bal = throughput(&net, &plat, &db, &PipelineConfig::new(vec![9, 9], vec![0, 1]));
+        assert!(bal > imb);
+    }
+}

@@ -1,0 +1,259 @@
+//! Design-space counting and enumeration.
+//!
+//! The configuration space for `L` layers on `E` EPs is
+//!
+//! ```text
+//! |S| = Σ_{N=1}^{min(L,E)}  C(L−1, N−1) · P(E, N)
+//! ```
+//!
+//! — `C(L−1, N−1)` contiguous partitions of the layer chain into `N`
+//! stages, times `P(E, N)` ordered injective assignments of stages to EPs.
+//! This is the denominator of the paper's "Shisha explores ~0.1% of the
+//! design space" claim and the generator that Exhaustive Search and
+//! Pipe-Search iterate (the paper's §7.1 notes generating it is already
+//! impractical for `pipeline_depth > 4` on the large CNNs, which is why we,
+//! like the paper, cap enumeration depth).
+
+use crate::pipeline::PipelineConfig;
+use crate::platform::EpId;
+
+/// Binomial coefficient with u128 accumulation and saturation at u128::MAX.
+pub fn binomial(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul((n - i) as u128) / (i + 1) as u128;
+    }
+    acc
+}
+
+/// Falling factorial `P(e, n) = e·(e−1)···(e−n+1)`.
+pub fn permutations(e: u64, n: u64) -> u128 {
+    if n > e {
+        return 0;
+    }
+    let mut acc: u128 = 1;
+    for i in 0..n {
+        acc = acc.saturating_mul((e - i) as u128);
+    }
+    acc
+}
+
+/// Size of the design space for `l` layers, `e` EPs, depths `1..=max_depth`.
+pub fn space_size(l: usize, e: usize, max_depth: usize) -> u128 {
+    let lim = max_depth.min(l).min(e);
+    (1..=lim)
+        .map(|n| binomial(l as u64 - 1, n as u64 - 1).saturating_mul(permutations(e as u64, n as u64)))
+        .fold(0u128, u128::saturating_add)
+}
+
+/// Full design-space size (depth up to `min(l, e)`).
+pub fn full_space_size(l: usize, e: usize) -> u128 {
+    space_size(l, e, l.min(e))
+}
+
+/// Iterator over all configurations of exactly `n` stages: every
+/// composition of `l` into `n` positive parts × every injective EP
+/// assignment. Compositions iterate in lexicographic cut-point order;
+/// assignments in lexicographic permutation order.
+pub struct DepthEnumerator {
+    l: usize,
+    n: usize,
+    eps: Vec<EpId>,
+    /// current cut points (n-1 strictly increasing values in 1..l)
+    cuts: Vec<usize>,
+    /// current assignment as indices into `eps`
+    perm: Vec<usize>,
+    done: bool,
+}
+
+impl DepthEnumerator {
+    /// Create an enumerator; yields nothing when n > l or n > #eps.
+    pub fn new(l: usize, n: usize, eps: Vec<EpId>) -> Self {
+        let done = n == 0 || n > l || n > eps.len();
+        let cuts: Vec<usize> = (1..n).collect();
+        let perm: Vec<usize> = (0..n).collect();
+        Self { l, n, eps, cuts, perm, done }
+    }
+
+    fn stages_from_cuts(&self) -> Vec<usize> {
+        let mut stages = Vec::with_capacity(self.n);
+        let mut prev = 0;
+        for &c in &self.cuts {
+            stages.push(c - prev);
+            prev = c;
+        }
+        stages.push(self.l - prev);
+        stages
+    }
+
+    fn assignment(&self) -> Vec<EpId> {
+        self.perm.iter().map(|&i| self.eps[i]).collect()
+    }
+
+    /// Advance `perm` to the next k-permutation of `0..eps.len()`;
+    /// false when exhausted.
+    fn next_perm(&mut self) -> bool {
+        // Next injective sequence in lexicographic order: odometer with
+        // distinctness constraint.
+        let e = self.eps.len();
+        let n = self.n;
+        let mut i = n;
+        loop {
+            if i == 0 {
+                return false;
+            }
+            i -= 1;
+            // find next free value above current for position i
+            let mut v = self.perm[i] + 1;
+            loop {
+                if v >= e {
+                    break;
+                }
+                if !self.perm[..i].contains(&v) {
+                    break;
+                }
+                v += 1;
+            }
+            if v < e {
+                self.perm[i] = v;
+                // reset positions after i to smallest free values
+                for j in i + 1..n {
+                    let mut w = 0;
+                    while self.perm[..j].contains(&w) {
+                        w += 1;
+                    }
+                    self.perm[j] = w;
+                }
+                return true;
+            }
+            // carry: continue to position i-1
+        }
+    }
+
+    /// Advance cut points; false when exhausted.
+    fn next_cuts(&mut self) -> bool {
+        if self.n <= 1 {
+            return false;
+        }
+        let k = self.cuts.len();
+        let mut i = k;
+        while i > 0 {
+            i -= 1;
+            if self.cuts[i] < self.l - (k - i) {
+                self.cuts[i] += 1;
+                for j in i + 1..k {
+                    self.cuts[j] = self.cuts[j - 1] + 1;
+                }
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl Iterator for DepthEnumerator {
+    type Item = PipelineConfig;
+
+    fn next(&mut self) -> Option<PipelineConfig> {
+        if self.done {
+            return None;
+        }
+        let cfg = PipelineConfig::new(self.stages_from_cuts(), self.assignment());
+        // advance: permutations fastest, then cuts
+        if !self.next_perm() {
+            self.perm = (0..self.n).collect();
+            if !self.next_cuts() {
+                self.done = true;
+            }
+        }
+        Some(cfg)
+    }
+}
+
+/// Enumerate every configuration with depth `1..=max_depth` over the given
+/// EPs (in the order produced by [`DepthEnumerator`], shallowest first).
+pub fn enumerate_all(l: usize, eps: &[EpId], max_depth: usize) -> impl Iterator<Item = PipelineConfig> + '_ {
+    let lim = max_depth.min(l).min(eps.len());
+    (1..=lim).flat_map(move |n| DepthEnumerator::new(l, n, eps.to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn binomials() {
+        assert_eq!(binomial(49, 3), 18424);
+        assert_eq!(binomial(17, 2), 136);
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(3, 5), 0);
+    }
+
+    #[test]
+    fn perms() {
+        assert_eq!(permutations(4, 4), 24);
+        assert_eq!(permutations(8, 3), 336);
+        assert_eq!(permutations(2, 3), 0);
+    }
+
+    #[test]
+    fn space_size_small_exhaustive_check() {
+        // l=3, e=2: N=1 -> C(2,0)*2 = 2; N=2 -> C(2,1)*P(2,2) = 2*2=4. total 6.
+        assert_eq!(full_space_size(3, 2), 6);
+        let eps = vec![0, 1];
+        let all: Vec<_> = enumerate_all(3, &eps, 2).collect();
+        assert_eq!(all.len(), 6);
+    }
+
+    #[test]
+    fn enumerator_count_matches_formula() {
+        for (l, e, d) in [(6, 3, 3), (5, 4, 4), (7, 2, 2), (18, 4, 2)] {
+            let eps: Vec<usize> = (0..e).collect();
+            let count = enumerate_all(l, &eps, d).count() as u128;
+            assert_eq!(count, space_size(l, e, d), "l={l} e={e} d={d}");
+        }
+    }
+
+    #[test]
+    fn enumerator_yields_unique_valid_configs() {
+        let eps: Vec<usize> = (0..3).collect();
+        let mut seen = HashSet::new();
+        for cfg in enumerate_all(6, &eps, 3) {
+            assert_eq!(cfg.n_layers(), 6);
+            assert!(cfg.stages.iter().all(|&s| s >= 1));
+            let mut a = cfg.assignment.clone();
+            a.sort_unstable();
+            a.dedup();
+            assert_eq!(a.len(), cfg.assignment.len(), "injective");
+            assert!(seen.insert((cfg.stages.clone(), cfg.assignment.clone())), "dup {:?}", cfg);
+        }
+    }
+
+    #[test]
+    fn paper_scale_space_sizes() {
+        // ResNet50 (50 layers) on 4 EPs, full depth:
+        // N=1..4 -> 4 + 49*12 + C(49,2)*24 + C(49,3)*24
+        let s = full_space_size(50, 4);
+        assert_eq!(s, 4 + 49 * 12 + 1176 * 24 + 18424 * 24);
+        // SynthNet on 8 EPs is astronomically larger at full depth.
+        assert!(full_space_size(18, 8) > s);
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let eps: Vec<usize> = (0..8).collect();
+        let max_n = enumerate_all(18, &eps, 4).map(|c| c.n_stages()).max().unwrap();
+        assert_eq!(max_n, 4);
+    }
+
+    #[test]
+    fn zero_depth_yields_nothing() {
+        let eps: Vec<usize> = (0..2).collect();
+        assert_eq!(enumerate_all(5, &eps, 0).count(), 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Named platform configurations from the paper.
+//!
+//! * Table 1 (gem5 system configuration) defines the four EP *kinds*:
+//!   big×4 / big×8 on 40 GB/s memory, little×4 / little×8 on 20 GB/s.
+//! * Table 3 defines the five EP *mixes* C1–C5 used in the sensitivity
+//!   study (Figures 7–8).
+//! * Figure 4 runs SynthNet on 8 EPs (we use C5: 4 FEP + 4 SEP);
+//!   Figure 5 uses a 4-EP system (we use C2: 2 FEP + 2 SEP).
+
+use super::{CoreType, ExecutionPlace, MemoryClass, Platform};
+
+/// Table 1, row 1: 4 Big cores on fast memory.
+pub fn ep_big4(chiplet: u32) -> ExecutionPlace {
+    ExecutionPlace::new(0, CoreType::Big, 4, MemoryClass::Fast, chiplet)
+}
+
+/// Table 1, row 2: 8 Big cores on fast memory.
+pub fn ep_big8(chiplet: u32) -> ExecutionPlace {
+    ExecutionPlace::new(0, CoreType::Big, 8, MemoryClass::Fast, chiplet)
+}
+
+/// Table 1, row 3: 4 Little cores on slow memory.
+pub fn ep_little4(chiplet: u32) -> ExecutionPlace {
+    ExecutionPlace::new(0, CoreType::Little, 4, MemoryClass::Slow, chiplet)
+}
+
+/// Table 1, row 4: 8 Little cores on slow memory.
+pub fn ep_little8(chiplet: u32) -> ExecutionPlace {
+    ExecutionPlace::new(0, CoreType::Little, 8, MemoryClass::Slow, chiplet)
+}
+
+/// Table 3 C1: 1× 8-core FEP, 1× 8-core SEP.
+pub fn c1() -> Platform {
+    Platform::new("C1", vec![ep_big8(0), ep_little8(1)])
+}
+
+/// Table 3 C2: 2× 8-core FEP, 2× 8-core SEP.
+pub fn c2() -> Platform {
+    Platform::new("C2", vec![ep_big8(0), ep_big8(1), ep_little8(2), ep_little8(3)])
+}
+
+/// Table 3 C3: 4× 4-core FEP, 2× 8-core SEP.
+pub fn c3() -> Platform {
+    Platform::new(
+        "C3",
+        vec![ep_big4(0), ep_big4(1), ep_big4(2), ep_big4(3), ep_little8(4), ep_little8(5)],
+    )
+}
+
+/// Table 3 C4: 2× 8-core FEP, 4× 4-core SEP.
+pub fn c4() -> Platform {
+    Platform::new(
+        "C4",
+        vec![ep_big8(0), ep_big8(1), ep_little4(2), ep_little4(3), ep_little4(4), ep_little4(5)],
+    )
+}
+
+/// Table 3 C5: 4× 4-core FEP, 4× 4-core SEP (the 8-EP system of Figure 4).
+pub fn c5() -> Platform {
+    Platform::new(
+        "C5",
+        vec![
+            ep_big4(0),
+            ep_big4(1),
+            ep_big4(2),
+            ep_big4(3),
+            ep_little4(4),
+            ep_little4(5),
+            ep_little4(6),
+            ep_little4(7),
+        ],
+    )
+}
+
+/// All Table 3 configs in order.
+pub fn all_c() -> Vec<Platform> {
+    vec![c1(), c2(), c3(), c4(), c5()]
+}
+
+/// The 8-EP platform of Figure 4.
+pub fn fig4_platform() -> Platform {
+    let mut p = c5();
+    p.name = "Fig4-8EP".into();
+    p
+}
+
+/// The 4-EP platform of Figure 5 (ES feasible).
+pub fn fig5_platform() -> Platform {
+    let mut p = c2();
+    p.name = "Fig5-4EP".into();
+    p
+}
+
+/// Look up a platform by name: `c1`..`c5`, `fig4`/`8ep`, `fig5`/`4ep`.
+pub fn by_name(name: &str) -> Option<Platform> {
+    match name.to_ascii_lowercase().as_str() {
+        "c1" => Some(c1()),
+        "c2" => Some(c2()),
+        "c3" => Some(c3()),
+        "c4" => Some(c4()),
+        "c5" => Some(c5()),
+        "fig4" | "8ep" => Some(fig4_platform()),
+        "fig5" | "4ep" => Some(fig5_platform()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_ep_counts() {
+        assert_eq!(c1().n_eps(), 2);
+        assert_eq!(c2().n_eps(), 4);
+        assert_eq!(c3().n_eps(), 6);
+        assert_eq!(c4().n_eps(), 6);
+        assert_eq!(c5().n_eps(), 8);
+    }
+
+    #[test]
+    fn table3_fep_sep_split() {
+        assert_eq!(c3().fep_ids().len(), 4);
+        assert_eq!(c3().sep_ids().len(), 2);
+        assert_eq!(c4().fep_ids().len(), 2);
+        assert_eq!(c4().sep_ids().len(), 4);
+    }
+
+    #[test]
+    fn fig4_has_8_eps() {
+        assert_eq!(fig4_platform().n_eps(), 8);
+    }
+
+    #[test]
+    fn fig5_has_4_eps() {
+        assert_eq!(fig5_platform().n_eps(), 4);
+    }
+
+    #[test]
+    fn each_ep_own_chiplet() {
+        for p in all_c() {
+            let mut chiplets: Vec<u32> = p.eps.iter().map(|e| e.chiplet).collect();
+            chiplets.dedup();
+            assert_eq!(chiplets.len(), p.n_eps(), "{}: one chiplet per EP", p.name);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["c1", "c2", "c3", "c4", "c5", "fig4", "fig5"] {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("c9").is_none());
+    }
+
+    #[test]
+    fn ranking_feps_before_seps() {
+        for p in all_c() {
+            let rank = p.eps_by_rank();
+            let n_fep = p.fep_ids().len();
+            for &id in &rank[..n_fep] {
+                assert!(p.eps[id].is_fep(), "{}: top ranks are FEPs", p.name);
+            }
+        }
+    }
+}

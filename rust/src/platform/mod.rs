@@ -1,0 +1,307 @@
+//! The heterogeneous chiplet platform model.
+//!
+//! The paper targets MCM/chiplet systems built from clusters of cores, each
+//! attached to its own memory (Figure 3): *Fast Execution Places* (FEPs —
+//! high-performance cores on high-bandwidth memory) and *Slow Execution
+//! Places* (SEPs — slower cores on low-bandwidth memory). This module
+//! provides:
+//!
+//! * [`CoreType`] / [`ExecutionPlace`] — the EP abstraction (a set of cores
+//!   attached to one memory module, Table 1);
+//! * [`InterChipletLink`] — the chip-to-chip interconnect (latency +
+//!   bandwidth), swept in the paper's Figure 9;
+//! * [`Platform`] — a named collection of EPs with ranking helpers
+//!   (`H_e`, the performance-sorted EP list Algorithm 1 consumes);
+//! * [`configs`] — the gem5 system configurations of Table 1 and the EP
+//!   mixes C1–C5 of Table 3.
+
+pub mod configs;
+pub mod topology;
+
+pub use topology::MeshTopology;
+
+/// Identifier of an execution place within a [`Platform`].
+pub type EpId = usize;
+
+/// Core microarchitecture class (ARM big.LITTLE in the paper's gem5 setup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreType {
+    /// ARM "Big" (out-of-order, high frequency).
+    Big,
+    /// ARM "Little" (in-order, low power).
+    Little,
+}
+
+impl CoreType {
+    /// Peak single-core throughput in GFLOP/s used by the analytic cost
+    /// model. The absolute values are calibration constants; what matters
+    /// for reproducing the paper is the Big:Little ratio (~4×, consistent
+    /// with Cortex-A15 vs A7 on NEON FP32).
+    pub fn peak_gflops(self) -> f64 {
+        match self {
+            CoreType::Big => 16.0,
+            CoreType::Little => 4.0,
+        }
+    }
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreType::Big => "big",
+            CoreType::Little => "little",
+        }
+    }
+}
+
+/// Memory class attached to an EP (Figure 3's "memory type X / Y").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoryClass {
+    /// High-bandwidth memory (40 GB/s in Table 1).
+    Fast,
+    /// Low-bandwidth memory (20 GB/s in Table 1).
+    Slow,
+}
+
+impl MemoryClass {
+    /// Peak bandwidth in GB/s per Table 1.
+    pub fn bandwidth_gbs(self) -> f64 {
+        match self {
+            MemoryClass::Fast => 40.0,
+            MemoryClass::Slow => 20.0,
+        }
+    }
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MemoryClass::Fast => "fast",
+            MemoryClass::Slow => "slow",
+        }
+    }
+}
+
+/// An Execution Place: a set of cores attached to one memory module,
+/// residing on one chiplet. The unit Shisha maps pipeline stages onto.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlace {
+    /// Index within the owning platform.
+    pub id: EpId,
+    /// Core microarchitecture.
+    pub core_type: CoreType,
+    /// Number of cores in this EP.
+    pub n_cores: u32,
+    /// Attached memory class.
+    pub memory: MemoryClass,
+    /// Chiplet this EP lives on (transfers between different chiplets pay
+    /// the inter-chiplet link cost).
+    pub chiplet: u32,
+}
+
+impl ExecutionPlace {
+    /// Construct an EP. Table-1 pairing: Big cores sit on fast memory,
+    /// Little cores on slow memory, but mixed EPs are allowed.
+    pub fn new(id: EpId, core_type: CoreType, n_cores: u32, memory: MemoryClass, chiplet: u32) -> Self {
+        Self { id, core_type, n_cores, memory, chiplet }
+    }
+
+    /// Aggregate peak compute in GFLOP/s (before parallel-efficiency loss).
+    pub fn peak_gflops(&self) -> f64 {
+        self.core_type.peak_gflops() * self.n_cores as f64
+    }
+
+    /// Peak memory bandwidth in GB/s.
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.memory.bandwidth_gbs()
+    }
+
+    /// Scalar performance score used to rank EPs into the `H_e` list of
+    /// Algorithm 1: geometric mean of compute and bandwidth, so an EP that
+    /// is fast on both axes outranks one fast on only one.
+    pub fn perf_score(&self) -> f64 {
+        (self.peak_gflops() * self.bandwidth_gbs()).sqrt()
+    }
+
+    /// FEP = attached to fast memory (the paper's green EPs).
+    pub fn is_fep(&self) -> bool {
+        self.memory == MemoryClass::Fast
+    }
+
+    /// Short description, e.g. `EP2[big x4 @ fast]`.
+    pub fn describe(&self) -> String {
+        format!(
+            "EP{}[{} x{} @ {}]",
+            self.id,
+            self.core_type.name(),
+            self.n_cores,
+            self.memory.name()
+        )
+    }
+}
+
+/// Chip-to-chip interconnect parameters. The paper's Figure 9 sweeps the
+/// per-transfer latency from 1 ns to 1 s and finds throughput unaffected
+/// below ~1 ms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterChipletLink {
+    /// Per-hop latency in seconds.
+    pub latency_s: f64,
+    /// Link bandwidth in GB/s.
+    pub bandwidth_gbs: f64,
+}
+
+impl Default for InterChipletLink {
+    fn default() -> Self {
+        // Interposer-class link: ~100 ns, 32 GB/s (Simba-like inter-chiplet
+        // bandwidth is substantially below intra-chiplet bandwidth).
+        Self { latency_s: 100e-9, bandwidth_gbs: 32.0 }
+    }
+}
+
+impl InterChipletLink {
+    /// Time to move `bytes` across the link once.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / (self.bandwidth_gbs * 1e9)
+    }
+}
+
+/// A complete platform: a set of EPs plus the inter-chiplet link.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    /// Config name (e.g. `C3`).
+    pub name: String,
+    /// All execution places.
+    pub eps: Vec<ExecutionPlace>,
+    /// Inter-chiplet interconnect.
+    pub link: InterChipletLink,
+    /// Optional chiplet mesh; `None` = the paper's single-hop model.
+    pub topology: Option<MeshTopology>,
+}
+
+impl Platform {
+    /// Build a platform, re-numbering EP ids to be dense.
+    pub fn new(name: impl Into<String>, mut eps: Vec<ExecutionPlace>) -> Self {
+        for (i, ep) in eps.iter_mut().enumerate() {
+            ep.id = i;
+        }
+        Self { name: name.into(), eps, link: InterChipletLink::default(), topology: None }
+    }
+
+    /// Number of EPs.
+    pub fn n_eps(&self) -> usize {
+        self.eps.len()
+    }
+
+    /// `H_e`: EP ids sorted in descending order of performance (ties broken
+    /// by id for determinism) — the input list of Algorithm 1.
+    pub fn eps_by_rank(&self) -> Vec<EpId> {
+        let mut ids: Vec<EpId> = (0..self.eps.len()).collect();
+        ids.sort_by(|&a, &b| {
+            self.eps[b]
+                .perf_score()
+                .partial_cmp(&self.eps[a].perf_score())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        ids
+    }
+
+    /// Ids of fast execution places (fast memory).
+    pub fn fep_ids(&self) -> Vec<EpId> {
+        self.eps.iter().filter(|e| e.is_fep()).map(|e| e.id).collect()
+    }
+
+    /// Ids of slow execution places.
+    pub fn sep_ids(&self) -> Vec<EpId> {
+        self.eps.iter().filter(|e| !e.is_fep()).map(|e| e.id).collect()
+    }
+
+    /// Whether two EPs live on different chiplets (and so transfers between
+    /// them pay the link cost).
+    pub fn crosses_chiplet(&self, a: EpId, b: EpId) -> bool {
+        self.eps[a].chiplet != self.eps[b].chiplet
+    }
+
+    /// Markdown table of the platform (used by the bench harnesses).
+    pub fn describe_table(&self) -> String {
+        let mut out = String::from("| EP | cores | type | memory | GFLOP/s | GB/s |\n|---|---|---|---|---|---|\n");
+        for ep in &self.eps {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {:.0} | {:.0} |\n",
+                ep.id,
+                ep.n_cores,
+                ep.core_type.name(),
+                ep.memory.name(),
+                ep.peak_gflops(),
+                ep.bandwidth_gbs()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plat2() -> Platform {
+        Platform::new(
+            "t",
+            vec![
+                ExecutionPlace::new(0, CoreType::Little, 8, MemoryClass::Slow, 0),
+                ExecutionPlace::new(0, CoreType::Big, 8, MemoryClass::Fast, 1),
+            ],
+        )
+    }
+
+    #[test]
+    fn ids_renumbered_dense() {
+        let p = plat2();
+        assert_eq!(p.eps[0].id, 0);
+        assert_eq!(p.eps[1].id, 1);
+    }
+
+    #[test]
+    fn rank_puts_fep_first() {
+        let p = plat2();
+        assert_eq!(p.eps_by_rank(), vec![1, 0]);
+    }
+
+    #[test]
+    fn fep_sep_split() {
+        let p = plat2();
+        assert_eq!(p.fep_ids(), vec![1]);
+        assert_eq!(p.sep_ids(), vec![0]);
+    }
+
+    #[test]
+    fn big_little_perf_ratio() {
+        assert!((CoreType::Big.peak_gflops() / CoreType::Little.peak_gflops() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_bandwidths() {
+        assert_eq!(MemoryClass::Fast.bandwidth_gbs(), 40.0);
+        assert_eq!(MemoryClass::Slow.bandwidth_gbs(), 20.0);
+    }
+
+    #[test]
+    fn link_transfer_time() {
+        let link = InterChipletLink { latency_s: 1e-6, bandwidth_gbs: 10.0 };
+        let t = link.transfer_time(10_000_000_000);
+        assert!((t - (1e-6 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_chiplet_detection() {
+        let p = plat2();
+        assert!(p.crosses_chiplet(0, 1));
+        assert!(!p.crosses_chiplet(0, 0));
+    }
+
+    #[test]
+    fn perf_score_ordering() {
+        let fast = ExecutionPlace::new(0, CoreType::Big, 8, MemoryClass::Fast, 0);
+        let slow = ExecutionPlace::new(1, CoreType::Little, 8, MemoryClass::Slow, 1);
+        assert!(fast.perf_score() > slow.perf_score());
+    }
+}

@@ -1,0 +1,182 @@
+//! Chiplet mesh topology (extension).
+//!
+//! The paper's transfer model charges one inter-chiplet hop per stage
+//! boundary (Figure 9 sweeps that hop's latency). Real MCM packages —
+//! Simba [28] is the paper's own example — arrange chiplets in a 2-D mesh
+//! where chip-to-chip latency grows with Manhattan distance. This module
+//! adds an optional [`MeshTopology`] to [`super::Platform`]: when present,
+//! transfers pay `hops × latency + bytes/bandwidth`; when absent the
+//! paper's single-hop model applies unchanged.
+//!
+//! `locality_order` provides the placement-aware refinement studied in
+//! `examples/latency_sweep.rs`: within performance-equivalence classes,
+//! EPs are ordered along a serpentine walk of the mesh so consecutive
+//! pipeline stages land on adjacent chiplets.
+
+use super::{EpId, Platform};
+
+/// A 2-D mesh of chiplets; chiplet `c` sits at `(c % width, c / width)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshTopology {
+    /// Mesh width (chiplets per row).
+    pub width: u32,
+    /// Mesh height.
+    pub height: u32,
+}
+
+impl MeshTopology {
+    /// Square-ish mesh large enough for `n` chiplets.
+    pub fn for_chiplets(n: u32) -> Self {
+        let width = (n as f64).sqrt().ceil() as u32;
+        let height = n.div_ceil(width.max(1)).max(1);
+        Self { width: width.max(1), height }
+    }
+
+    /// Coordinates of a chiplet.
+    pub fn coords(&self, chiplet: u32) -> (u32, u32) {
+        (chiplet % self.width, chiplet / self.width)
+    }
+
+    /// Manhattan hop count between two chiplets (0 when equal).
+    pub fn hops(&self, a: u32, b: u32) -> u32 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Serpentine (boustrophedon) order of chiplet ids: consecutive
+    /// positions in the returned order are mesh-adjacent.
+    pub fn serpentine(&self, n_chiplets: u32) -> Vec<u32> {
+        let mut order = Vec::with_capacity(n_chiplets as usize);
+        for y in 0..self.height {
+            let row: Vec<u32> = (0..self.width)
+                .map(|x| y * self.width + x)
+                .filter(|&c| c < n_chiplets)
+                .collect();
+            if y % 2 == 0 {
+                order.extend(row);
+            } else {
+                order.extend(row.into_iter().rev());
+            }
+        }
+        order
+    }
+}
+
+/// Transfer time between two EPs on `plat` for `bytes`, honouring the
+/// mesh when present (single hop otherwise). Same-chiplet transfers are
+/// free, matching the paper's model.
+pub fn transfer_time(plat: &Platform, from: EpId, to: EpId, bytes: u64) -> f64 {
+    let a = plat.eps[from].chiplet;
+    let b = plat.eps[to].chiplet;
+    if a == b {
+        return 0.0;
+    }
+    let hops = plat.topology.map_or(1, |m| m.hops(a, b).max(1));
+    hops as f64 * plat.link.latency_s + bytes as f64 / (plat.link.bandwidth_gbs * 1e9)
+}
+
+/// Reorder an EP ranking for locality: stable within performance classes
+/// (score ties broken by serpentine mesh position), so the seed generator
+/// keeps its heterogeneity-aware order while consecutive same-class EPs
+/// become mesh-adjacent.
+pub fn locality_order(plat: &Platform) -> Vec<EpId> {
+    let Some(mesh) = plat.topology else {
+        return plat.eps_by_rank();
+    };
+    let serp = mesh.serpentine(plat.eps.iter().map(|e| e.chiplet + 1).max().unwrap_or(1));
+    let pos = |ep: &EpId| serp.iter().position(|&c| c == plat.eps[*ep].chiplet).unwrap_or(0);
+    let mut ids = plat.eps_by_rank();
+    // stable sort by (perf class, serpentine position): classes keep rank
+    // order, members inside a class follow the mesh walk.
+    ids.sort_by(|a, b| {
+        let pa = plat.eps[*a].perf_score();
+        let pb = plat.eps[*b].perf_score();
+        pb.partial_cmp(&pa).unwrap().then(pos(a).cmp(&pos(b)))
+    });
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::configs;
+
+    #[test]
+    fn mesh_shapes() {
+        let m = MeshTopology::for_chiplets(8);
+        assert_eq!((m.width, m.height), (3, 3));
+        assert_eq!(MeshTopology::for_chiplets(4).width, 2);
+        assert_eq!(MeshTopology::for_chiplets(1).width, 1);
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        let m = MeshTopology { width: 3, height: 3 };
+        assert_eq!(m.hops(0, 0), 0);
+        assert_eq!(m.hops(0, 1), 1);
+        assert_eq!(m.hops(0, 8), 4); // (0,0) -> (2,2)
+        assert_eq!(m.hops(2, 6), 4); // (2,0) -> (0,2)
+    }
+
+    #[test]
+    fn serpentine_adjacency() {
+        let m = MeshTopology { width: 3, height: 3 };
+        let order = m.serpentine(9);
+        assert_eq!(order.len(), 9);
+        for w in order.windows(2) {
+            assert_eq!(m.hops(w[0], w[1]), 1, "consecutive {w:?} adjacent");
+        }
+    }
+
+    #[test]
+    fn transfer_single_hop_without_mesh() {
+        let plat = configs::c2();
+        let t = transfer_time(&plat, 0, 1, 1_000_000);
+        let expect = plat.link.latency_s + 1_000_000.0 / (plat.link.bandwidth_gbs * 1e9);
+        assert!((t - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn transfer_scales_with_hops() {
+        let mut plat = configs::c5(); // 8 chiplets
+        plat.topology = Some(MeshTopology { width: 3, height: 3 });
+        plat.link.latency_s = 1e-3; // make latency dominate
+        let near = transfer_time(&plat, 0, 1, 1);
+        let far = transfer_time(&plat, 0, 7, 1); // chiplet 0 (0,0) -> 7 (1,2): 3 hops
+        assert!((far / near - 3.0).abs() < 1e-6, "near {near} far {far}");
+    }
+
+    #[test]
+    fn same_chiplet_free() {
+        let mut plat = configs::c1();
+        plat.eps[1].chiplet = plat.eps[0].chiplet;
+        assert_eq!(transfer_time(&plat, 0, 1, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn locality_order_keeps_class_ranks() {
+        let mut plat = configs::c5();
+        plat.topology = Some(MeshTopology::for_chiplets(8));
+        let order = locality_order(&plat);
+        // first four must still be the FEPs
+        for &id in &order[..4] {
+            assert!(plat.eps[id].is_fep());
+        }
+        // the locality order must not be worse than plain rank order in
+        // total consecutive-pair hop distance
+        let m = plat.topology.unwrap();
+        let path = |ids: &[crate::platform::EpId]| -> u32 {
+            ids.windows(2)
+                .map(|w| m.hops(plat.eps[w[0]].chiplet, plat.eps[w[1]].chiplet))
+                .sum()
+        };
+        assert!(path(&order) <= path(&plat.eps_by_rank()), "{order:?}");
+    }
+
+    #[test]
+    fn locality_order_without_mesh_is_rank_order() {
+        let plat = configs::c3();
+        assert_eq!(locality_order(&plat), plat.eps_by_rank());
+    }
+}

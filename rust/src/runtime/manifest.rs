@@ -1,0 +1,320 @@
+//! Artifact manifest parser.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt` describing every
+//! AOT-lowered HLO module. The grammar is line-oriented:
+//!
+//! ```text
+//! # comment
+//! version=1
+//! network=synthnet_small
+//! layers=6
+//! layer_hash=abc123...
+//! artifact name=conv_s0 file=conv_s0.hlo.txt kind=layer index=0 \
+//!          in=32x32x3 out=32x32x16 w=3x3x3x16 bias=16 stride=1 pad=1
+//! ```
+//!
+//! The rust model table (`model::synthnet_small`) is cross-checked against
+//! the manifest shapes at load time so drift between the python and rust
+//! layer tables is caught immediately.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Kind of an AOT artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One conv layer.
+    Layer,
+    /// A fused multi-layer stage.
+    Stage,
+    /// A bare GEMM probe (calibration).
+    Gemm,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "layer" => ArtifactKind::Layer,
+            "stage" => ArtifactKind::Stage,
+            "gemm" => ArtifactKind::Gemm,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Metadata of one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Logical name, e.g. `conv_s0`.
+    pub name: String,
+    /// File name within the artifact directory.
+    pub file: String,
+    /// Artifact kind.
+    pub kind: ArtifactKind,
+    /// Layer index within the network (layers) or 0.
+    pub index: usize,
+    /// Input activation dims.
+    pub in_shape: Vec<i64>,
+    /// Output activation dims.
+    pub out_shape: Vec<i64>,
+    /// Weight dims (layers only).
+    pub w_shape: Option<Vec<i64>>,
+    /// Bias length (layers only).
+    pub bias: Option<i64>,
+    /// Stride (layers only).
+    pub stride: Option<u32>,
+    /// Padding (layers only).
+    pub pad: Option<u32>,
+    /// Parameter count for stages (2 per layer).
+    pub params: Option<usize>,
+}
+
+impl ArtifactMeta {
+    /// Number of f32 elements in the input activation.
+    pub fn in_elems(&self) -> usize {
+        self.in_shape.iter().product::<i64>() as usize
+    }
+
+    /// Number of f32 elements in the output activation.
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product::<i64>() as usize
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Manifest format version.
+    pub version: u32,
+    /// Network name the layer artifacts belong to.
+    pub network: String,
+    /// Number of layers.
+    pub layers: usize,
+    /// Layer-geometry hash (drift detection).
+    pub layer_hash: String,
+    /// All artifacts in file order.
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<i64>> {
+    s.split('x')
+        .map(|d| d.parse::<i64>().with_context(|| format!("bad dim {d:?} in {s:?}")))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse manifest text (directory recorded for artifact paths).
+    pub fn parse(text: &str, dir: impl Into<PathBuf>) -> Result<Manifest> {
+        let mut version = 0u32;
+        let mut network = String::new();
+        let mut layers = 0usize;
+        let mut layer_hash = String::new();
+        let mut artifacts = Vec::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("artifact ") {
+                let mut kv: HashMap<&str, &str> = HashMap::new();
+                for field in rest.split_whitespace() {
+                    let (k, v) = field
+                        .split_once('=')
+                        .with_context(|| format!("line {}: bad field {field:?}", lineno + 1))?;
+                    kv.insert(k, v);
+                }
+                let get = |k: &str| -> Result<&str> {
+                    kv.get(k)
+                        .copied()
+                        .with_context(|| format!("line {}: missing key {k}", lineno + 1))
+                };
+                artifacts.push(ArtifactMeta {
+                    name: get("name")?.to_string(),
+                    file: get("file")?.to_string(),
+                    kind: ArtifactKind::parse(get("kind")?)?,
+                    index: get("index")?.parse()?,
+                    in_shape: parse_dims(get("in")?)?,
+                    out_shape: parse_dims(get("out")?)?,
+                    w_shape: kv.get("w").map(|s| parse_dims(s)).transpose()?,
+                    bias: kv.get("bias").map(|s| s.parse()).transpose()?,
+                    stride: kv.get("stride").map(|s| s.parse()).transpose()?,
+                    pad: kv.get("pad").map(|s| s.parse()).transpose()?,
+                    params: kv.get("params").map(|s| s.parse()).transpose()?,
+                });
+            } else if let Some((k, v)) = line.split_once('=') {
+                match k {
+                    "version" => version = v.parse()?,
+                    "network" => network = v.to_string(),
+                    "layers" => layers = v.parse()?,
+                    "layer_hash" => layer_hash = v.to_string(),
+                    _ => {} // forward-compatible: ignore unknown keys
+                }
+            } else {
+                bail!("line {}: unparseable {line:?}", lineno + 1);
+            }
+        }
+        if version == 0 {
+            bail!("manifest missing version");
+        }
+        Ok(Manifest { version, network, layers, layer_hash, artifacts, dir: dir.into() })
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Layer artifacts ordered by index.
+    pub fn layer_artifacts(&self) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Layer).collect();
+        v.sort_by_key(|a| a.index);
+        v
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Cross-check against a rust-side network table: layer count and all
+    /// activation/weight shapes must match.
+    pub fn check_against(&self, net: &crate::model::Network) -> Result<()> {
+        let las = self.layer_artifacts();
+        if las.len() != net.len() {
+            bail!("manifest has {} layers, rust table {}", las.len(), net.len());
+        }
+        for (meta, layer) in las.iter().zip(&net.layers) {
+            let want_in = vec![layer.h as i64, layer.w as i64, layer.c as i64];
+            let want_out = vec![layer.out_h() as i64, layer.out_w() as i64, layer.k as i64];
+            if meta.in_shape != want_in {
+                bail!("{}: in {:?} != rust {:?}", meta.name, meta.in_shape, want_in);
+            }
+            if meta.out_shape != want_out {
+                bail!("{}: out {:?} != rust {:?}", meta.name, meta.out_shape, want_out);
+            }
+            if let Some(w) = &meta.w_shape {
+                let want_w =
+                    vec![layer.r as i64, layer.s as i64, layer.c as i64, layer.k as i64];
+                if *w != want_w {
+                    bail!("{}: w {:?} != rust {:?}", meta.name, w, want_w);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+version=1
+network=synthnet_small
+layers=2
+layer_hash=cafebabe
+artifact name=conv_a file=conv_a.hlo.txt kind=layer index=0 in=8x8x3 out=8x8x4 w=3x3x3x4 bias=4 stride=1 pad=1
+artifact name=net file=net.hlo.txt kind=stage index=0 in=8x8x3 out=8x8x4 params=4
+artifact name=gemm_probe file=g.hlo.txt kind=gemm index=0 in=8x8 out=8x8 k=8
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, "/tmp").unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.network, "synthnet_small");
+        assert_eq!(m.layers, 2);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("conv_a").unwrap();
+        assert_eq!(a.in_shape, vec![8, 8, 3]);
+        assert_eq!(a.w_shape.as_deref(), Some(&[3, 3, 3, 4][..]));
+        assert_eq!(a.bias, Some(4));
+        assert_eq!(a.kind, ArtifactKind::Layer);
+        assert_eq!(a.in_elems(), 192);
+        assert_eq!(a.out_elems(), 256);
+    }
+
+    #[test]
+    fn stage_and_gemm_kinds() {
+        let m = Manifest::parse(SAMPLE, "/tmp").unwrap();
+        assert_eq!(m.get("net").unwrap().kind, ArtifactKind::Stage);
+        assert_eq!(m.get("net").unwrap().params, Some(4));
+        assert_eq!(m.get("gemm_probe").unwrap().kind, ArtifactKind::Gemm);
+    }
+
+    #[test]
+    fn layer_artifacts_ordered() {
+        let txt = "version=1\n\
+artifact name=b file=b kind=layer index=1 in=2 out=2\n\
+artifact name=a file=a kind=layer index=0 in=2 out=2\n";
+        let m = Manifest::parse(txt, "/tmp").unwrap();
+        let names: Vec<&str> = m.layer_artifacts().iter().map(|a| a.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn rejects_missing_version() {
+        assert!(Manifest::parse("network=x\n", "/tmp").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind_and_dims() {
+        assert!(Manifest::parse(
+            "version=1\nartifact name=x file=f kind=zzz index=0 in=2 out=2\n",
+            "/tmp"
+        )
+        .is_err());
+        assert!(Manifest::parse(
+            "version=1\nartifact name=x file=f kind=layer index=0 in=2xq out=2\n",
+            "/tmp"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unknown_toplevel_keys_ignored() {
+        let m = Manifest::parse("version=1\nfuture_key=hello\n", "/tmp").unwrap();
+        assert_eq!(m.version, 1);
+    }
+
+    #[test]
+    fn check_against_synthnet_small() {
+        // build a manifest text from the rust table and verify round-trip
+        let net = crate::model::networks::synthnet_small();
+        let mut txt = String::from("version=1\nnetwork=synthnet_small\nlayers=6\n");
+        for (i, l) in net.layers.iter().enumerate() {
+            txt.push_str(&format!(
+                "artifact name=conv_{} file=f{} kind=layer index={} in={}x{}x{} out={}x{}x{} w={}x{}x{}x{} bias={} stride={} pad={}\n",
+                l.name, i, i, l.h, l.w, l.c, l.out_h(), l.out_w(), l.k, l.r, l.s, l.c, l.k, l.k, l.stride, l.pad
+            ));
+        }
+        let m = Manifest::parse(&txt, "/tmp").unwrap();
+        m.check_against(&net).unwrap();
+    }
+
+    #[test]
+    fn check_against_detects_drift() {
+        let net = crate::model::networks::synthnet_small();
+        let txt = "version=1\nlayers=1\n\
+artifact name=conv_x file=f kind=layer index=0 in=9x9x9 out=9x9x9\n";
+        let m = Manifest::parse(txt, "/tmp").unwrap();
+        assert!(m.check_against(&net).is_err());
+    }
+}

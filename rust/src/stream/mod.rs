@@ -1,0 +1,249 @@
+//! STREAM Triad motivation experiment (§2, Figures 1–2).
+//!
+//! The paper motivates Shisha with STREAM Triad on Intel Knights Landing:
+//! two memories (16 GB MCDRAM at ~4× the bandwidth of DDR4), data split
+//! between them, and a sweep of thread assignments per memory showing that
+//! (a) a sensible split beats DDR-only and cache mode, and (b) each data
+//! split has a different optimal thread split, with *fewer* threads often
+//! beating the maximum.
+//!
+//! We reproduce this with two components:
+//!
+//! * [`DualMemorySimulator`] — an analytic model of a two-memory node with
+//!   per-thread bandwidth ramps and contention (the KNL substitute — we
+//!   have no KNL), generating Figures 1 and 2;
+//! * [`triad`] — a real multi-threaded Triad kernel run on the host CPU,
+//!   used to sanity-check the simulator's saturation shape (bandwidth
+//!   rises with threads then flattens) against actual hardware.
+
+pub mod triad;
+
+/// Parameters of one memory domain.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryDomain {
+    /// Peak bandwidth, GB/s.
+    pub peak_gbs: f64,
+    /// Per-thread achievable bandwidth, GB/s (single-stream limit).
+    pub per_thread_gbs: f64,
+    /// Capacity, GB.
+    pub capacity_gb: f64,
+}
+
+/// KNL-like dual-memory node: MCDRAM ~4× DDR bandwidth (§2), 16 GB MCDRAM.
+#[derive(Debug, Clone, Copy)]
+pub struct DualMemorySimulator {
+    /// High-bandwidth memory (MCDRAM).
+    pub hbm: MemoryDomain,
+    /// DDR4 memory.
+    pub ddr: MemoryDomain,
+    /// Thread scheduling overhead per extra thread (fraction).
+    pub thread_overhead: f64,
+}
+
+impl Default for DualMemorySimulator {
+    fn default() -> Self {
+        Self {
+            // KNL: MCDRAM ~400 GB/s effective for Triad, DDR4 ~90 GB/s,
+            // ratio ~4x as the paper states.
+            hbm: MemoryDomain { peak_gbs: 400.0, per_thread_gbs: 12.0, capacity_gb: 16.0 },
+            ddr: MemoryDomain { peak_gbs: 90.0, per_thread_gbs: 11.0, capacity_gb: 96.0 },
+            thread_overhead: 0.002,
+        }
+    }
+}
+
+/// Result of one simulated STREAM Triad run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TriadResult {
+    /// Execution time, seconds.
+    pub time_s: f64,
+    /// Parallel cost = total threads × execution time (Figure 2c/d).
+    pub parallel_cost: f64,
+    /// Aggregate achieved bandwidth, GB/s.
+    pub bandwidth_gbs: f64,
+}
+
+impl DualMemorySimulator {
+    /// Effective bandwidth of a domain under `n` streaming threads:
+    /// per-thread linear ramp saturating at peak, with a mild contention
+    /// penalty beyond saturation (more threads than needed slightly *hurt*,
+    /// which is what Figure 2 shows on DDR).
+    pub fn domain_bandwidth(&self, dom: &MemoryDomain, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let ramp = dom.per_thread_gbs * n as f64;
+        let sat_threads = dom.peak_gbs / dom.per_thread_gbs;
+        let over = (n as f64 - sat_threads).max(0.0);
+        // contention: 1.5% loss per thread beyond saturation
+        let contention = 1.0 / (1.0 + 0.015 * over);
+        ramp.min(dom.peak_gbs) * contention
+    }
+
+    /// Triad moves 3 arrays (2 reads + 1 write) per element: bytes of
+    /// traffic for `gb` GB of aggregate working set is `gb` (we express
+    /// sizes directly as traffic volume, matching STREAM's own reporting).
+    ///
+    /// `hbm_gb`/`ddr_gb`: data placed in each memory; `hbm_threads` /
+    /// `ddr_threads`: threads assigned to stream each partition. The two
+    /// partitions proceed in parallel; total time is the max of the two,
+    /// with a per-thread scheduling overhead.
+    pub fn run(&self, hbm_gb: f64, ddr_gb: f64, hbm_threads: u32, ddr_threads: u32) -> TriadResult {
+        assert!(hbm_gb <= self.hbm.capacity_gb + 1e-9, "HBM overcommitted");
+        let t_hbm = if hbm_gb > 0.0 {
+            hbm_gb / self.domain_bandwidth(&self.hbm, hbm_threads).max(1e-9)
+        } else {
+            0.0
+        };
+        let t_ddr = if ddr_gb > 0.0 {
+            ddr_gb / self.domain_bandwidth(&self.ddr, ddr_threads).max(1e-9)
+        } else {
+            0.0
+        };
+        let n_threads = hbm_threads + ddr_threads;
+        let overhead = 1.0 + self.thread_overhead * n_threads as f64;
+        let time_s = t_hbm.max(t_ddr) * overhead;
+        TriadResult {
+            time_s,
+            parallel_cost: n_threads as f64 * time_s,
+            bandwidth_gbs: (hbm_gb + ddr_gb) / time_s,
+        }
+    }
+
+    /// Figure-1 scenario "DDR only": everything in DDR.
+    pub fn ddr_only(&self, total_gb: f64, threads: u32) -> TriadResult {
+        self.run(0.0, total_gb, 0, threads)
+    }
+
+    /// Figure-1 scenario "cache mode": MCDRAM as a transparent cache in
+    /// front of DDR. Data ≤ 16 GB hits at HBM speed; beyond that the miss
+    /// traffic is re-fetched from DDR **through** the cache, paying both
+    /// transfers for the missing fraction (the reason cache mode loses to
+    /// an explicit split in the paper's Figure 1).
+    pub fn cache_mode(&self, total_gb: f64, threads: u32) -> TriadResult {
+        let hit = total_gb.min(self.hbm.capacity_gb);
+        let miss = (total_gb - hit).max(0.0);
+        let bw_hbm = self.domain_bandwidth(&self.hbm, threads);
+        let bw_ddr = self.domain_bandwidth(&self.ddr, threads);
+        // hit fraction at HBM speed; miss fraction at DDR speed plus the
+        // fill traffic through HBM.
+        let time = hit / bw_hbm + miss / bw_ddr + miss / bw_hbm;
+        let overhead = 1.0 + self.thread_overhead * threads as f64;
+        let time_s = time * overhead;
+        TriadResult {
+            time_s,
+            parallel_cost: threads as f64 * time_s,
+            bandwidth_gbs: total_gb / time_s,
+        }
+    }
+
+    /// The paper's split scenario: 15 GB in MCDRAM, remainder in DDR.
+    pub fn split(&self, total_gb: f64, hbm_gb: f64, hbm_threads: u32, ddr_threads: u32) -> TriadResult {
+        self.run(hbm_gb, (total_gb - hbm_gb).max(0.0), hbm_threads, ddr_threads)
+    }
+
+    /// Best thread assignment for a given split over the given candidate
+    /// thread counts; returns ((hbm_threads, ddr_threads), result).
+    pub fn best_assignment(
+        &self,
+        total_gb: f64,
+        hbm_gb: f64,
+        hbm_choices: &[u32],
+        ddr_choices: &[u32],
+    ) -> ((u32, u32), TriadResult) {
+        let mut best: Option<((u32, u32), TriadResult)> = None;
+        for &ht in hbm_choices {
+            for &dt in ddr_choices {
+                let r = self.split(total_gb, hbm_gb, ht, dt);
+                if best.as_ref().map_or(true, |(_, b)| r.time_s < b.time_s) {
+                    best = Some(((ht, dt), r));
+                }
+            }
+        }
+        best.unwrap()
+    }
+}
+
+/// The paper's Figure-2 thread grids.
+pub const HBM_THREADS: [u32; 4] = [16, 32, 64, 128];
+/// DDR thread grid of Figure 2.
+pub const DDR_THREADS: [u32; 4] = [2, 4, 8, 16];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hbm_is_4x_ddr() {
+        let sim = DualMemorySimulator::default();
+        let ratio = sim.hbm.peak_gbs / sim.ddr.peak_gbs;
+        assert!((3.5..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bandwidth_ramps_then_saturates() {
+        let sim = DualMemorySimulator::default();
+        let b8 = sim.domain_bandwidth(&sim.hbm, 8);
+        let b32 = sim.domain_bandwidth(&sim.hbm, 32);
+        let b64 = sim.domain_bandwidth(&sim.hbm, 64);
+        assert!(b8 < b32);
+        assert!((b64 - b32) / b32 < 0.3, "saturating");
+    }
+
+    #[test]
+    fn oversubscription_hurts_ddr() {
+        // Figure 2's key shape: fewer threads can beat maximum threads.
+        let sim = DualMemorySimulator::default();
+        let few = sim.domain_bandwidth(&sim.ddr, 8);
+        let many = sim.domain_bandwidth(&sim.ddr, 64);
+        assert!(few > many, "8 threads {few} should beat 64 {many} on DDR");
+    }
+
+    #[test]
+    fn split_beats_ddr_only_and_cache_19gb() {
+        // Figure 1 at 19 GB: split(15 HBM + 4 DDR) wins with sensible threads.
+        let sim = DualMemorySimulator::default();
+        let ddr_only = sim.ddr_only(19.0, 16);
+        let cache = sim.cache_mode(19.0, 64);
+        let (_, split) = sim.best_assignment(19.0, 15.0, &HBM_THREADS, &DDR_THREADS);
+        assert!(split.time_s < ddr_only.time_s, "split beats DDR-only");
+        assert!(split.time_s < cache.time_s, "split beats cache mode");
+    }
+
+    #[test]
+    fn different_split_different_optimal_threads() {
+        // §2: "for each data partitioning ... there is a different optimal
+        // thread partitioning" — check 15/4 vs 15/16 differ.
+        let sim = DualMemorySimulator::default();
+        let (a, _) = sim.best_assignment(19.0, 15.0, &HBM_THREADS, &DDR_THREADS);
+        let (b, _) = sim.best_assignment(31.0, 15.0, &HBM_THREADS, &DDR_THREADS);
+        assert_ne!(a, b, "optimal assignment shifts with the data split");
+    }
+
+    #[test]
+    fn optimal_time_not_optimal_parallel_cost() {
+        // §2: the time-optimal distribution does not minimise parallel cost.
+        let sim = DualMemorySimulator::default();
+        let mut best_time: Option<((u32, u32), TriadResult)> = None;
+        let mut best_cost: Option<((u32, u32), TriadResult)> = None;
+        for &ht in &HBM_THREADS {
+            for &dt in &DDR_THREADS {
+                let r = sim.split(19.0, 15.0, ht, dt);
+                if best_time.as_ref().map_or(true, |(_, b)| r.time_s < b.time_s) {
+                    best_time = Some(((ht, dt), r));
+                }
+                if best_cost.as_ref().map_or(true, |(_, b)| r.parallel_cost < b.parallel_cost) {
+                    best_cost = Some(((ht, dt), r));
+                }
+            }
+        }
+        assert_ne!(best_time.unwrap().0, best_cost.unwrap().0);
+    }
+
+    #[test]
+    fn capacity_guard() {
+        let sim = DualMemorySimulator::default();
+        let r = std::panic::catch_unwind(|| sim.run(20.0, 0.0, 16, 0));
+        assert!(r.is_err(), "HBM capacity 16 GB enforced");
+    }
+}

@@ -1,0 +1,89 @@
+//! Real multi-threaded STREAM Triad kernel.
+//!
+//! Used to calibrate/sanity-check the [`super::DualMemorySimulator`] shape
+//! on the host: achieved bandwidth must rise with threads and then
+//! saturate. This is a real measurement, not a simulation — the host has a
+//! single memory domain, so only the saturation *shape* is compared.
+
+use std::thread;
+
+/// Result of a real Triad run.
+#[derive(Debug, Clone, Copy)]
+pub struct TriadMeasurement {
+    /// Threads used.
+    pub threads: u32,
+    /// Elapsed seconds.
+    pub time_s: f64,
+    /// Achieved bandwidth, GB/s (3 streams × 8 bytes per element).
+    pub bandwidth_gbs: f64,
+}
+
+/// Run `a[i] = b[i] + s * c[i]` over `n` f64 elements with `threads`
+/// threads, `reps` repetitions; returns the best-rep measurement
+/// (STREAM convention).
+pub fn run_triad(n: usize, threads: u32, reps: u32) -> TriadMeasurement {
+    assert!(threads >= 1 && n >= threads as usize);
+    let b = vec![1.0f64; n];
+    let c = vec![2.0f64; n];
+    let mut a = vec![0.0f64; n];
+    let s = 3.0f64;
+
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let chunk = n.div_ceil(threads as usize);
+        let t0 = std::time::Instant::now();
+        // Scoped threads: each writes a disjoint chunk of `a`.
+        thread::scope(|scope| {
+            for (ai, (bi, ci)) in a
+                .chunks_mut(chunk)
+                .zip(b.chunks(chunk).zip(c.chunks(chunk)))
+            {
+                scope.spawn(move || {
+                    for ((x, &y), &z) in ai.iter_mut().zip(bi).zip(ci) {
+                        *x = y + s * z;
+                    }
+                });
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    // guard against the compiler eliding the work
+    assert!(a.iter().take(8).all(|&x| (x - 7.0).abs() < 1e-12));
+
+    let bytes = 3.0 * 8.0 * n as f64;
+    TriadMeasurement { threads, time_s: best, bandwidth_gbs: bytes / best / 1e9 }
+}
+
+/// Sweep thread counts; returns one measurement per count.
+pub fn sweep(n: usize, thread_counts: &[u32], reps: u32) -> Vec<TriadMeasurement> {
+    thread_counts.iter().map(|&t| run_triad(n, t, reps)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triad_computes_correctly_and_reports_bandwidth() {
+        let m = run_triad(1 << 20, 2, 2);
+        assert!(m.bandwidth_gbs > 0.1, "bandwidth {}", m.bandwidth_gbs);
+        assert!(m.time_s > 0.0);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let m = run_triad(1 << 16, 1, 1);
+        assert_eq!(m.threads, 1);
+        assert!(m.time_s > 0.0);
+    }
+
+    #[test]
+    fn more_threads_not_catastrophically_slower() {
+        // On any multi-core host, 4 threads on a large array should not be
+        // slower than 1 thread by more than 2x (sanity, not a perf claim).
+        let n = 1 << 22;
+        let t1 = run_triad(n, 1, 3);
+        let t4 = run_triad(n, 4, 3);
+        assert!(t4.time_s < t1.time_s * 2.0, "t1 {} t4 {}", t1.time_s, t4.time_s);
+    }
+}

@@ -1,0 +1,185 @@
+//! Mini property-testing framework (proptest substitute, DESIGN.md §5).
+//!
+//! Deterministic, seeded randomized testing: a [`Gen`] wraps the crate PRNG
+//! with generator combinators for the domain types (networks, platforms,
+//! pipeline configurations), and [`check`] runs a property over many cases,
+//! reporting the seed and a compact description of the failing case so
+//! failures are reproducible.
+
+use crate::model::{Layer, Network};
+use crate::pipeline::PipelineConfig;
+use crate::platform::{CoreType, EpId, ExecutionPlace, MemoryClass, Platform};
+use crate::rng::Xoshiro256;
+
+/// Random-input generator with domain-specific combinators.
+pub struct Gen {
+    rng: Xoshiro256,
+}
+
+impl Gen {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::seed_from(seed) }
+    }
+
+    /// Access the raw PRNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo, hi)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    /// Random plausible conv layer (small-to-medium CNN shapes).
+    pub fn layer(&mut self, name: &str) -> Layer {
+        let hw = *self.rng.choose(&[7u32, 13, 14, 27, 28, 56, 112]);
+        let c = *self.rng.choose(&[3u32, 16, 32, 64, 128, 256]);
+        let k = *self.rng.choose(&[16u32, 32, 64, 128, 256]);
+        let rs = *self.rng.choose(&[1u32, 3, 5]);
+        let stride = if self.rng.gen_bool(0.2) { 2 } else { 1 };
+        let pad = rs / 2;
+        Layer::conv(name, hw, hw, c, rs, rs, k, stride, pad)
+    }
+
+    /// Random network with `lo..hi` layers.
+    pub fn network(&mut self, lo: usize, hi: usize) -> Network {
+        let n = self.usize(lo, hi);
+        let layers = (0..n).map(|i| self.layer(&format!("g{i}"))).collect();
+        Network::new("generated", layers)
+    }
+
+    /// Random heterogeneous platform with `lo..hi` EPs (at least one FEP
+    /// and one SEP when the count allows).
+    pub fn platform(&mut self, lo: usize, hi: usize) -> Platform {
+        let n = self.usize(lo, hi);
+        let mut eps = Vec::with_capacity(n);
+        for i in 0..n {
+            // Guarantee heterogeneity for n >= 2: first EP fast, second slow.
+            let fast = if i == 0 {
+                true
+            } else if i == 1 {
+                false
+            } else {
+                self.rng.gen_bool(0.5)
+            };
+            let cores = *self.rng.choose(&[2u32, 4, 8]);
+            let (ct, mc) = if fast {
+                (CoreType::Big, MemoryClass::Fast)
+            } else {
+                (CoreType::Little, MemoryClass::Slow)
+            };
+            eps.push(ExecutionPlace::new(i, ct, cores, mc, i as u32));
+        }
+        Platform::new("generated", eps)
+    }
+
+    /// Random valid pipeline configuration for `l` layers over a platform.
+    pub fn config(&mut self, l: usize, plat: &Platform) -> PipelineConfig {
+        let max_n = l.min(plat.n_eps());
+        let n = self.usize(1, max_n + 1);
+        // random composition of l into n positive parts: choose n-1 cuts
+        let mut cuts: Vec<usize> = Vec::with_capacity(n - 1);
+        while cuts.len() < n - 1 {
+            let c = self.usize(1, l);
+            if !cuts.contains(&c) {
+                cuts.push(c);
+            }
+        }
+        cuts.sort_unstable();
+        let mut stages = Vec::with_capacity(n);
+        let mut prev = 0;
+        for &c in &cuts {
+            stages.push(c - prev);
+            prev = c;
+        }
+        stages.push(l - prev);
+        // random injective assignment
+        let mut ids: Vec<EpId> = (0..plat.n_eps()).collect();
+        self.rng.shuffle(&mut ids);
+        ids.truncate(n);
+        PipelineConfig::new(stages, ids)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the case index and
+/// seed on the first failure. `prop` returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are close (relative + absolute tolerance).
+pub fn assert_close(a: f64, b: f64, rel: f64, abs: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let tol = abs + rel * a.abs().max(b.abs());
+    if diff <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (diff {diff}, tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_configs_always_valid() {
+        check("configs valid", 0xC0FFEE, 300, |g| {
+            let plat = g.platform(2, 9);
+            let l = g.usize(2, 40);
+            let cfg = g.config(l, &plat);
+            cfg.validate(l, &plat).map_err(|e| format!("{e} for {}", cfg.describe()))
+        });
+    }
+
+    #[test]
+    fn generated_platforms_heterogeneous() {
+        check("platform het", 7, 100, |g| {
+            let p = g.platform(2, 6);
+            if p.fep_ids().is_empty() || p.sep_ids().is_empty() {
+                return Err(format!("platform not heterogeneous: {}", p.name));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generated_layers_have_positive_output() {
+        check("layer shapes", 99, 200, |g| {
+            let l = g.layer("x");
+            if l.out_h() == 0 || l.out_w() == 0 {
+                return Err(format!("degenerate output for {l:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 1, 5, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, 0.0).is_err());
+        assert!(assert_close(0.0, 1e-12, 0.0, 1e-9).is_ok());
+    }
+}

@@ -1,0 +1,128 @@
+//! CLI smoke tests: drive the `shisha` binary end-to-end per subcommand
+//! and assert on its output and exit codes (failure paths included).
+
+use std::process::{Command, Output};
+
+fn shisha(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_shisha"))
+        .args(args)
+        .output()
+        .expect("binary runs")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let o = shisha(&[]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("USAGE"));
+    assert!(stdout(&o).contains("explore"));
+}
+
+#[test]
+fn version_prints_version() {
+    let o = shisha(&["version"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains(env!("CARGO_PKG_VERSION")));
+}
+
+#[test]
+fn platforms_lists_all_configs() {
+    let o = shisha(&["platforms"]);
+    assert!(o.status.success());
+    for c in ["C1", "C2", "C3", "C4", "C5"] {
+        assert!(stdout(&o).contains(c), "missing {c}");
+    }
+}
+
+#[test]
+fn explore_shisha_on_synthnet() {
+    let o = shisha(&["explore", "--net", "synthnet", "--platform", "c2", "--algo", "shisha"]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("design space"));
+    assert!(out.contains("Shisha"));
+    assert!(out.contains("img/s"));
+}
+
+#[test]
+fn explore_rejects_unknown_network() {
+    let o = shisha(&["explore", "--net", "vgg16"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("unknown network"));
+}
+
+#[test]
+fn explore_rejects_unknown_option() {
+    let o = shisha(&["explore", "--nett", "synthnet"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("unknown option"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let o = shisha(&["frobnicate"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("unknown subcommand"));
+}
+
+#[test]
+fn designspace_matches_formula() {
+    let o = shisha(&["designspace", "--net", "alexnet", "--eps", "2"]);
+    assert!(o.status.success());
+    // full space for 5 layers / 2 EPs = 2 + C(4,1)*2 = 10; cumulative "10"
+    assert!(stdout(&o).contains("10"), "{}", stdout(&o));
+}
+
+#[test]
+fn stream_reports_split_win() {
+    let o = shisha(&["stream", "--size", "19"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("DDR only"));
+    assert!(stdout(&o).contains("cache mode"));
+    assert!(stdout(&o).contains("split"));
+}
+
+#[test]
+fn seed_shows_stage_table() {
+    let o = shisha(&["seed", "--net", "yolov3", "--platform", "c5", "--choice", "rankw"]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("seed throughput"));
+    assert!(out.contains("EP"));
+}
+
+#[test]
+fn seed_rejects_bad_choice() {
+    let o = shisha(&["seed", "--choice", "bogus"]);
+    assert!(!o.status.success());
+}
+
+#[test]
+fn explore_with_config_file() {
+    let dir = std::env::temp_dir().join("shisha_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        "[experiment]\nnetwork = \"alexnet\"\nplatform = \"c1\"\n",
+    )
+    .unwrap();
+    let o = shisha(&["explore", "--config", cfg.to_str().unwrap(), "--algo", "shisha"]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    assert!(stdout(&o).contains("alexnet"));
+}
+
+#[test]
+fn run_fails_gracefully_without_artifacts() {
+    let o = shisha(&["run", "--artifacts", "/nonexistent/dir"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("make artifacts"), "{}", stderr(&o));
+}

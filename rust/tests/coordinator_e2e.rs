@@ -1,0 +1,95 @@
+//! Coordinator end-to-end: the threaded pipeline runtime over real PJRT
+//! artifacts — throughput measurement, backpressure, EP emulation effects
+//! and live online tuning. Skipped when artifacts are absent.
+
+use shisha::coordinator::{EpEmulation, OnlineTuner, PipelineRuntime};
+use shisha::explore::shisha::{generate_seed, AssignmentChoice};
+use shisha::model::networks;
+use shisha::perfdb::CostModel;
+use shisha::pipeline::PipelineConfig;
+use shisha::platform::configs;
+use shisha::runtime::Manifest;
+
+fn runtime(emu: EpEmulation) -> Option<PipelineRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    Some(PipelineRuntime::new(manifest, emu).unwrap())
+}
+
+#[test]
+fn single_stage_pipeline_streams_all_inputs() {
+    let Some(rt) = runtime(EpEmulation::none(2)) else { return };
+    let cfg = PipelineConfig::single_stage(rt.n_layers(), 0);
+    let run = rt.measure(&cfg, 12).unwrap();
+    assert_eq!(run.n_inputs, 12);
+    assert!(run.throughput > 0.0);
+    assert_eq!(run.stage_times.len(), 1);
+    assert!(run.stage_times[0] > 0.0);
+}
+
+#[test]
+fn multi_stage_pipeline_measures_each_stage() {
+    let Some(rt) = runtime(EpEmulation::none(4)) else { return };
+    let cfg = PipelineConfig::new(vec![2, 2, 2], vec![0, 1, 2]);
+    let run = rt.measure(&cfg, 16).unwrap();
+    assert_eq!(run.stage_times.len(), 3);
+    assert!(run.stage_times.iter().all(|&t| t > 0.0));
+    assert!(run.throughput > 0.0);
+}
+
+#[test]
+fn emulated_slow_ep_becomes_bottleneck() {
+    // EP1 heavily slowed: the stage mapped to it must dominate.
+    let Some(rt) = runtime(EpEmulation::explicit(vec![1.0, 8.0])) else { return };
+    let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+    // warmup (first run pays PJRT compilation in each worker)
+    let _ = rt.measure(&cfg, 4).unwrap();
+    let run = rt.measure(&cfg, 24).unwrap();
+    assert_eq!(run.slowest_stage(), 1, "stage times {:?}", run.stage_times);
+    assert!(run.stage_times[1] > 2.0 * run.stage_times[0], "{:?}", run.stage_times);
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let Some(rt) = runtime(EpEmulation::none(2)) else { return };
+    // wrong layer count
+    assert!(rt.measure(&PipelineConfig::new(vec![3], vec![0]), 4).is_err());
+    // EP outside emulation table
+    assert!(rt
+        .measure(&PipelineConfig::new(vec![3, 3], vec![0, 7]), 4)
+        .is_err());
+}
+
+#[test]
+fn online_tuner_improves_or_holds_seed() {
+    let net = networks::synthnet_small();
+    let plat = configs::c1();
+    let emu = EpEmulation::from_model(&net, &plat, &CostModel::default());
+    let Some(rt) = runtime(emu) else { return };
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+    // warmup to amortise PJRT compilation before measuring
+    let _ = rt.measure(&seed.config, 4).unwrap();
+    let mut tuner = OnlineTuner::new(&rt, &plat);
+    tuner.alpha = 3;
+    tuner.probe_inputs = 12;
+    let report = tuner.tune(seed.config).unwrap();
+    assert!(!report.trials.is_empty());
+    assert!(report.best_throughput >= 0.8 * report.seed_throughput(), "noise tolerance");
+    for t in &report.trials {
+        assert!(t.config.validate(net.len(), &plat).is_ok());
+    }
+}
+
+#[test]
+fn measured_inputs_flow_in_order_and_complete() {
+    let Some(rt) = runtime(EpEmulation::none(4)) else { return };
+    for n in [1usize, 2, 7] {
+        let cfg = PipelineConfig::new(vec![4, 2], vec![0, 1]);
+        let run = rt.measure(&cfg, n).unwrap();
+        assert_eq!(run.n_inputs, n);
+    }
+}

@@ -1,0 +1,203 @@
+//! Integration tests across explore × perfdb × pipeline × platform:
+//! every algorithm on every platform and network must produce valid,
+//! sensible solutions, and the paper's qualitative relationships must hold.
+
+use shisha::explore::exhaustive::{EsOptions, ExhaustiveSearch};
+use shisha::explore::hill_climbing::{HcOptions, HillClimbing};
+use shisha::explore::pipe_search::{PipeSearch, PsOptions};
+use shisha::explore::random_walk::{RandomWalk, RwOptions};
+use shisha::explore::shisha::{
+    generate_seed, AssignmentChoice, Heuristic, ShishaExplorer, ShishaOptions,
+};
+use shisha::explore::simulated_annealing::{SaOptions, SimulatedAnnealing};
+use shisha::explore::{EvalOptions, Evaluator, Explorer, Solution};
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::{simulator, space, PipelineConfig};
+use shisha::platform::configs;
+
+fn run_all(net_name: &str, plat_name: &str, max_evals: u64) -> Vec<Solution> {
+    let net = networks::by_name(net_name).unwrap();
+    let plat = configs::by_name(plat_name).unwrap();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let opts = EvalOptions { max_evals: Some(max_evals), ..Default::default() };
+    let mut out = Vec::new();
+    let mut explorers: Vec<Box<dyn Explorer>> = vec![
+        Box::new(ShishaExplorer::new(ShishaOptions::default())),
+        Box::new(SimulatedAnnealing::new(SaOptions::default())),
+        Box::new(HillClimbing::new(HcOptions::default())),
+        Box::new(RandomWalk::new(RwOptions::default())),
+        Box::new(ExhaustiveSearch::new(EsOptions { max_depth: 3 })),
+        Box::new(PipeSearch::new(PsOptions::default())),
+    ];
+    for ex in explorers.iter_mut() {
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts.clone());
+        let sol = ex.explore(&mut eval);
+        assert!(
+            sol.best_config.validate(net.len(), &plat).is_ok(),
+            "{}: invalid config {}",
+            sol.algorithm,
+            sol.best_config.describe()
+        );
+        assert!(sol.best_throughput > 0.0);
+        assert!(sol.n_evals > 0);
+        assert!(!sol.trace.is_empty());
+        // trace monotone in both axes
+        for w in sol.trace.windows(2) {
+            assert!(w[1].time_s >= w[0].time_s, "{}: time monotone", sol.algorithm);
+            assert!(w[1].throughput >= w[0].throughput, "{}: best monotone", sol.algorithm);
+        }
+        out.push(sol);
+    }
+    out
+}
+
+#[test]
+fn all_explorers_all_platforms_synthnet() {
+    for plat in ["c1", "c2", "c3", "c4", "c5"] {
+        run_all("synthnet", plat, 2_000);
+    }
+}
+
+#[test]
+fn all_explorers_large_nets() {
+    run_all("resnet50", "c2", 1_500);
+    run_all("yolov3", "c3", 1_500);
+}
+
+#[test]
+fn shisha_matches_es_on_small_exhaustible_space() {
+    // AlexNet (5 layers) on C1 (2 EPs): full space is tiny; ES is exact.
+    let net = networks::alexnet();
+    let plat = configs::c1();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let es = ExhaustiveSearch::new(EsOptions { max_depth: 2 }).explore(&mut eval);
+    let mut eval2 = Evaluator::new(&net, &plat, &db);
+    let sh = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval2);
+    assert!(
+        sh.best_throughput >= 0.95 * es.best_throughput,
+        "Shisha {} vs ES {}",
+        sh.best_throughput,
+        es.best_throughput
+    );
+}
+
+#[test]
+fn shisha_converges_much_faster_than_blind_search() {
+    // The headline mechanism on SynthNet/C2: Shisha's total online time is
+    // far below SA/RW/ES's time-to-equal-quality.
+    let net = networks::synthnet();
+    let plat = configs::c2();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let sh = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+
+    let opts = EvalOptions { max_evals: Some(3_000), ..Default::default() };
+    let mut eval2 = Evaluator::with_options(&net, &plat, &db, opts);
+    let es = ExhaustiveSearch::new(EsOptions { max_depth: 4 }).explore(&mut eval2);
+
+    assert!(
+        es.virtual_time_s > 5.0 * sh.virtual_time_s,
+        "ES {} vs Shisha {}",
+        es.virtual_time_s,
+        sh.virtual_time_s
+    );
+}
+
+#[test]
+fn seeded_variants_never_worse_than_seed() {
+    let net = networks::synthnet();
+    let plat = configs::c5();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+    let seed_tp = simulator::throughput(&net, &plat, &db, &seed.config);
+
+    let opts = EvalOptions { max_evals: Some(400), ..Default::default() };
+    let mut e1 = Evaluator::with_options(&net, &plat, &db, opts.clone());
+    let sa = SimulatedAnnealing::seeded(seed.config.clone()).explore(&mut e1);
+    let mut e2 = Evaluator::with_options(&net, &plat, &db, opts);
+    let hc = HillClimbing::seeded(seed.config.clone()).explore(&mut e2);
+    assert!(sa.best_throughput >= seed_tp);
+    assert!(hc.best_throughput >= seed_tp);
+}
+
+#[test]
+fn heuristics_all_valid_on_all_platforms() {
+    let net = networks::yolov3();
+    for plat in configs::all_c() {
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        for h in Heuristic::ALL {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            let sol = ShishaExplorer::heuristic(h).explore(&mut eval);
+            assert!(sol.best_config.validate(net.len(), &plat).is_ok());
+            assert!(sol.n_evals <= 200, "{} evals on {}", sol.n_evals, plat.name);
+        }
+    }
+}
+
+#[test]
+fn explored_fraction_tiny_for_big_networks() {
+    // §7.3: ~0.1% for ResNet50/YOLOv3 class networks on 4 EPs.
+    for name in ["resnet50", "yolov3"] {
+        let net = networks::by_name(name).unwrap();
+        let plat = configs::fig5_platform();
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+        let frac = sol.explored_fraction(space::full_space_size(net.len(), plat.n_eps()));
+        assert!(frac < 0.002, "{name}: explored {frac}");
+    }
+}
+
+#[test]
+fn es_optimum_dominates_everyone_small_space() {
+    let net = networks::synthnet();
+    let plat = configs::c2();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let es = ExhaustiveSearch::new(EsOptions { max_depth: 4 }).explore(&mut eval);
+    for sol in run_all("synthnet", "c2", 2_000) {
+        assert!(
+            sol.best_throughput <= es.best_throughput + 1e-9,
+            "{} beat full-depth ES?!",
+            sol.algorithm
+        );
+    }
+}
+
+#[test]
+fn evaluator_time_accounting_consistent() {
+    // virtual time equals sum of per-trial makespans + overheads (+ setup)
+    let net = networks::alexnet();
+    let plat = configs::c1();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let opts = EvalOptions::default();
+    let mut eval = Evaluator::with_options(&net, &plat, &db, opts.clone());
+    let cfgs = [
+        PipelineConfig::new(vec![5], vec![0]),
+        PipelineConfig::new(vec![2, 3], vec![0, 1]),
+    ];
+    let mut expect = 0.0;
+    for cfg in &cfgs {
+        eval.evaluate(cfg);
+        expect += simulator::makespan(&net, &plat, &db, cfg, opts.probe_inputs)
+            + opts.trial_overhead_s;
+    }
+    assert!((eval.virtual_time_s() - expect).abs() < 1e-9);
+}
+
+#[test]
+fn deeper_pipelines_win_when_eps_available() {
+    // On C5 (8 EPs) the best Shisha schedule for an 18-layer net should
+    // use several stages, not collapse to one.
+    let net = networks::synthnet();
+    let plat = configs::c5();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+    assert!(sol.best_config.n_stages() >= 4, "{}", sol.best_config.describe());
+    let single = simulator::throughput(&net, &plat, &db, &PipelineConfig::single_stage(18, 0));
+    assert!(sol.best_throughput > 1.5 * single);
+}

@@ -1,0 +1,190 @@
+//! Round-trip integration: the AOT artifacts (Pallas conv layers lowered
+//! through JAX to HLO text) must load, compile and compute **correct
+//! numbers** through the rust PJRT runtime.
+//!
+//! Correctness oracle: a naive rust convolution implemented here from the
+//! manifest geometry — an independent third implementation (after the
+//! Pallas kernel and the jnp reference), so agreement means the whole
+//! python→HLO→rust path preserves semantics.
+//!
+//! These tests require `make artifacts`; they are skipped (with a notice)
+//! when the artifact directory is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use shisha::model::networks;
+use shisha::runtime::{synth_params, ArtifactKind, Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+/// Naive conv+bias+ReLU oracle: x (H,W,C), w (R,S,C,K) -> (OH,OW,K).
+#[allow(clippy::too_many_arguments)]
+fn naive_conv(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    h: usize,
+    wd: usize,
+    c: usize,
+    r: usize,
+    s: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = (h + 2 * pad - r) / stride + 1;
+    let ow = (wd + 2 * pad - s) / stride + 1;
+    let mut out = vec![0f32; oh * ow * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for kk in 0..k {
+                let mut acc = b[kk];
+                for rr in 0..r {
+                    for ss in 0..s {
+                        let iy = oy * stride + rr;
+                        let ix = ox * stride + ss;
+                        if iy < pad || ix < pad {
+                            continue;
+                        }
+                        let (iy, ix) = (iy - pad, ix - pad);
+                        if iy >= h || ix >= wd {
+                            continue;
+                        }
+                        for cc in 0..c {
+                            acc += x[(iy * wd + ix) * c + cc]
+                                * w[((rr * s + ss) * c + cc) * k + kk];
+                        }
+                    }
+                }
+                out[(oy * ow + ox) * k + kk] = acc.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = shisha::rng::Xoshiro256::seed_from(seed);
+    (0..n).map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+#[test]
+fn manifest_matches_rust_layer_table() {
+    let Some(m) = manifest() else { return };
+    m.check_against(&networks::synthnet_small()).expect("no drift");
+    assert_eq!(m.network, "synthnet_small");
+    assert_eq!(m.layers, 6);
+}
+
+#[test]
+fn every_layer_artifact_computes_correct_numbers() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::new().unwrap();
+    for meta in m.layer_artifacts() {
+        rt.load(&m, &meta.name).unwrap();
+        let (h, wd, c) = (meta.in_shape[0] as usize, meta.in_shape[1] as usize, meta.in_shape[2] as usize);
+        let ws = meta.w_shape.as_ref().unwrap();
+        let (r, s, k) = (ws[0] as usize, ws[1] as usize, ws[3] as usize);
+        let stride = meta.stride.unwrap() as usize;
+        let pad = meta.pad.unwrap() as usize;
+
+        let x = rand_vec(h * wd * c, 42 + meta.index as u64);
+        let w = rand_vec(r * s * c * k, 77 + meta.index as u64);
+        let b = rand_vec(k, 99 + meta.index as u64);
+
+        let got = rt.execute_layer(&meta.name, &x, &w, &b).unwrap();
+        let want = naive_conv(&x, &w, &b, h, wd, c, r, s, k, stride, pad);
+        assert_eq!(got.len(), want.len(), "{}", meta.name);
+        let mut max_err = 0f32;
+        for (g, e) in got.iter().zip(&want) {
+            max_err = max_err.max((g - e).abs());
+        }
+        assert!(max_err < 1e-3, "{}: max abs err {max_err}", meta.name);
+    }
+}
+
+#[test]
+fn fused_network_artifact_matches_layer_chain() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load_all(&m).unwrap();
+
+    // chain per-layer execution
+    let layers = m.layer_artifacts();
+    let first = layers[0];
+    let mut x = rand_vec(first.in_elems(), 7);
+    let input = x.clone();
+    let mut params: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+    for meta in &layers {
+        let (w, b) = synth_params(meta, 1000 + meta.index as u64).unwrap();
+        x = rt.execute_layer(&meta.name, &x, &w, &b).unwrap();
+        params.push((w.clone(), meta.w_shape.clone().unwrap()));
+        params.push((b.clone(), vec![meta.bias.unwrap()]));
+    }
+
+    // fused artifact with identical params
+    let fused = rt.execute_stage("net_synthnet_small", &input, &params).unwrap();
+    assert_eq!(fused.len(), x.len());
+    let max_err = fused
+        .iter()
+        .zip(&x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "fused vs chained max err {max_err}");
+}
+
+#[test]
+fn gemm_probe_computes_matmul() {
+    let Some(m) = manifest() else { return };
+    let meta = m.get("gemm_probe").expect("probe artifact");
+    assert_eq!(meta.kind, ArtifactKind::Gemm);
+    let mut rt = Runtime::new().unwrap();
+    rt.load(&m, "gemm_probe").unwrap();
+    // 256x256 @ 256x256: check a few entries against a naive dot product
+    let n = 256usize;
+    let a = rand_vec(n * n, 5);
+    let b = rand_vec(n * n, 6);
+    let got = rt.execute_raw("gemm_probe", &[(&a, &[n as i64, n as i64]), (&b, &[n as i64, n as i64])]).unwrap();
+    assert_eq!(got.len(), n * n);
+    let mut rng = shisha::rng::Xoshiro256::seed_from(9);
+    for _ in 0..20 {
+        let i = rng.gen_range(0, n);
+        let j = rng.gen_range(0, n);
+        let want: f32 = (0..n).map(|t| a[i * n + t] * b[t * n + j]).sum();
+        let g = got[i * n + j];
+        assert!((g - want).abs() < 1e-2 * (1.0 + want.abs()), "({i},{j}): {g} vs {want}");
+    }
+}
+
+#[test]
+fn execute_layer_rejects_wrong_input_size() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load(&m, "conv_s0").unwrap();
+    let bad = vec![0f32; 10];
+    let (w, b) = synth_params(rt.meta("conv_s0").unwrap(), 0).unwrap();
+    assert!(rt.execute_layer("conv_s0", &bad, &w, &b).is_err());
+}
+
+#[test]
+fn deterministic_across_executions_and_runtimes() {
+    let Some(m) = manifest() else { return };
+    let meta = m.get("conv_s2").unwrap().clone();
+    let x = rand_vec(meta.in_elems(), 3);
+    let (w, b) = synth_params(&meta, 4).unwrap();
+    let mut rt1 = Runtime::new().unwrap();
+    rt1.load(&m, "conv_s2").unwrap();
+    let y1 = rt1.execute_layer("conv_s2", &x, &w, &b).unwrap();
+    let y2 = rt1.execute_layer("conv_s2", &x, &w, &b).unwrap();
+    let mut rt2 = Runtime::new().unwrap();
+    rt2.load(&m, "conv_s2").unwrap();
+    let y3 = rt2.execute_layer("conv_s2", &x, &w, &b).unwrap();
+    assert_eq!(y1, y2, "same runtime deterministic");
+    assert_eq!(y1, y3, "fresh runtime deterministic");
+}
