@@ -1,0 +1,97 @@
+//! Serving scale sweep: tenants × arrival intensity on the 8-EP C5
+//! platform.
+//!
+//! Each cell serves `T` SynthNet tenants, every one Shisha-tuned and
+//! offered `ρ × capacity/T` Poisson traffic (ρ = offered load relative to
+//! the platform share), and reports tail latency, goodput and drop rate
+//! through the shared latency-percentile renderer. The interesting
+//! structure: at low ρ co-location is free; as ρ → 1 time-sliced
+//! contention inflates p99 long before throughput saturates, and the
+//! online re-tuner starts migrating stages off shared EPs.
+//!
+//! ```sh
+//! cargo bench --bench serve_scale
+//! ```
+
+use shisha::metrics::table::{latency_table, LatencyRow};
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{serve, shisha_config, ArrivalProcess, ServeOptions, TenantSpec};
+
+fn main() {
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    println!(
+        "C5 ({} EPs), synthnet capacity {:.1} req/s at {}\n",
+        plat.n_eps(),
+        cap,
+        config.describe()
+    );
+
+    let mut rows = Vec::new();
+    for &n_tenants in &[1usize, 2, 4] {
+        for &rho in &[0.3f64, 0.7, 1.2] {
+            let rate = rho * cap / n_tenants as f64;
+            let tenants: Vec<_> = (0..n_tenants)
+                .map(|i| {
+                    (
+                        TenantSpec::new(
+                            format!("T{n_tenants}ρ{rho}#{i}"),
+                            net.clone(),
+                            ArrivalProcess::Poisson { rate },
+                        )
+                        .with_slo(0.250)
+                        .with_queue_capacity(64),
+                        config.clone(),
+                    )
+                })
+                .collect();
+            let opts = ServeOptions {
+                duration_s: 30.0,
+                seed: 42,
+                control_epoch_s: 5.0,
+                ..Default::default()
+            };
+            let report = serve(&plat, tenants, &opts).expect("serve run");
+            // aggregate the symmetric tenants into one row per cell
+            let mut sketch = shisha::serve::QuantileSketch::new();
+            let mut offered = 0u64;
+            let mut shed = 0u64;
+            let mut slo_ok = 0u64;
+            let mut retunes = 0u32;
+            for t in &report.tenants {
+                sketch.merge(&t.latency);
+                offered += t.offered;
+                shed += t.rejected + t.dropped;
+                slo_ok += t.slo_ok;
+                retunes += t.retunes;
+            }
+            println!(
+                "tenants={n_tenants} ρ={rho}: {} events, fairness {:.3}, {} re-tunes",
+                report.n_events,
+                report.fairness(),
+                retunes
+            );
+            rows.push(LatencyRow {
+                label: format!("{n_tenants} tenants @ ρ={rho}"),
+                p50_s: sketch.p50(),
+                p95_s: sketch.p95(),
+                p99_s: sketch.p99(),
+                max_s: sketch.max_s(),
+                goodput_rps: slo_ok as f64 / report.duration_s,
+                drop_rate: if offered == 0 { 0.0 } else { shed as f64 / offered as f64 },
+            });
+        }
+    }
+    let table = latency_table(rows);
+    println!("\n{}", table.to_markdown());
+    if let Err(e) = table.write_csv("results/serve_scale.csv") {
+        eprintln!("warning: could not write results/serve_scale.csv: {e}");
+    } else {
+        println!("wrote results/serve_scale.csv");
+    }
+}

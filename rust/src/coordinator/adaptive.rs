@@ -2,14 +2,23 @@
 //! for *online* tuning: cost models "are sensitive to changes in the
 //! execution environment (e.g., DVFS)", §1).
 //!
-//! [`AdaptiveController`] wraps the database-mode evaluation path with a
-//! mutable environment: DVFS events rescale an EP's service rate
-//! ([`DriftEvent`]), the controller monitors the running configuration's
-//! throughput each epoch, and when it regresses below
-//! `retune_threshold × baseline` it re-runs Algorithm 2 **warm** (from the
-//! current configuration, not from a fresh seed) — the cheap recovery the
-//! online design enables. The simulated clock charges monitoring epochs
-//! and every re-tuning trial, so recovery cost is measurable.
+//! Two drift sources feed this controller:
+//!
+//! * **DVFS-style events** — [`DriftEvent`] rescales an EP's service rate
+//!   directly, driven by [`AdaptiveController::run`]'s epoch loop;
+//! * **arrival-rate drift** — the serving engine
+//!   ([`crate::serve::engine`]) observes per-EP slowdowns and SLO-goodput
+//!   regressions under live traffic (load surges, cross-tenant
+//!   contention) and calls [`AdaptiveController::warm_retune`] with the
+//!   observed database.
+//!
+//! Either way, when throughput regresses below
+//! `retune_threshold × baseline` the controller re-runs Algorithm 2
+//! **warm** (from the current configuration, not from a fresh seed), plus
+//! a local reassign/swap pass for the bottleneck stage so the walk can
+//! escape a drifted or contended EP — the cheap recovery the online
+//! design enables. The simulated clock charges monitoring epochs and
+//! every re-tuning trial, so recovery cost is measurable.
 
 use crate::explore::shisha::{tune, BalancingChoice};
 use crate::explore::{EvalOptions, Evaluator};
@@ -89,6 +98,47 @@ impl AdaptiveController {
         }
     }
 
+    /// Warm re-tune `current` against an (observed or drifted) database:
+    /// Algorithm 2 from the current configuration, then a local
+    /// reassign/swap pass for the bottleneck stage so the tuner can move
+    /// off an EP whose observed service rate collapsed (DVFS, or
+    /// cross-tenant contention measured by the serving engine). Returns
+    /// the best configuration found — `current` itself when nothing
+    /// better — and the number of online trials charged.
+    pub fn warm_retune(&self, db: &PerfDb, current: PipelineConfig) -> (PipelineConfig, u64) {
+        let opts = EvalOptions { max_evals: Some(200), ..Default::default() };
+        let mut eval = Evaluator::with_options(&self.net, &self.plat, db, opts);
+        tune(&mut eval, current.clone(), self.balancing, self.alpha);
+        let walked = eval.best().expect("tune evaluates at least once").0.clone();
+        // escape pass: try every reassignment of the bottleneck stage to a
+        // free EP, and every EP swap with another stage
+        let slow = simulator::slowest_stage(&self.net, &self.plat, db, &walked);
+        let mut candidates = Vec::new();
+        for ep in 0..self.plat.n_eps() {
+            if let Some(c) = walked.reassign(slow, ep) {
+                candidates.push(c);
+            }
+        }
+        for other in 0..walked.n_stages() {
+            if other != slow {
+                if let Some(c) = walked.swap_eps(slow, other) {
+                    candidates.push(c);
+                }
+            }
+        }
+        for c in candidates {
+            eval.evaluate(&c);
+        }
+        let (best, best_tp) = eval.best().expect("evaluated above").clone();
+        let current_tp = simulator::throughput(&self.net, &self.plat, db, &current);
+        let trials = eval.n_evals();
+        if best_tp > current_tp {
+            (best, trials)
+        } else {
+            (current, trials)
+        }
+    }
+
     /// Run `epochs` monitoring epochs starting from `initial`, applying
     /// `events` as they come due. Returns the per-epoch log.
     pub fn run(
@@ -115,14 +165,9 @@ impl AdaptiveController {
             let mut trials = 0;
             if observed < self.retune_threshold * baseline {
                 // warm re-tune from the current configuration
-                let opts = EvalOptions { max_evals: Some(200), ..Default::default() };
-                let mut eval = Evaluator::with_options(&self.net, &self.plat, &db, opts);
-                tune(&mut eval, conf.clone(), self.balancing, self.alpha);
-                let (best, tp) = eval.best().expect("tune evaluates at least once").clone();
-                trials = eval.n_evals();
-                if tp > observed {
-                    conf = best;
-                }
+                let (best, n) = self.warm_retune(&db, conf.clone());
+                trials = n;
+                conf = best;
                 baseline = simulator::throughput(&self.net, &self.plat, &db, &conf);
                 retuned = true;
                 n_retunes += 1;

@@ -15,6 +15,14 @@
 //! approaches (Exhaustive Search, Pipe-Search) additionally charge a
 //! per-enumerated-configuration generation cost, reproducing the ~1200 s
 //! setup plateau the paper reports.
+//!
+//! The database an [`Evaluator`] consults need not be static: the
+//! adaptive controller re-runs the tuner when an EP's service rate drifts
+//! (DVFS, [`crate::coordinator::adaptive`]), and the serving engine does
+//! the same when **arrival-rate drift** or cross-tenant contention
+//! regresses SLO goodput under live traffic
+//! ([`crate::serve::engine`]) — in both cases against a database rescaled
+//! to the observed per-EP rates.
 
 pub mod exhaustive;
 pub mod genetic;

@@ -16,7 +16,42 @@
 //!   kernels (the compute hot-spot), verified against a pure-jnp oracle.
 //!
 //! Python never runs at inference time: `make artifacts` lowers the model
-//! once, the Rust binary loads `artifacts/*.hlo.txt` through the `xla` crate.
+//! once, the Rust binary loads `artifacts/*.hlo.txt` through the `xla`
+//! crate (PJRT execution is behind the `pjrt` cargo feature; without it a
+//! compile-time stub keeps everything building and fails with a clear
+//! error at run time — see [`runtime`]).
+//!
+//! ## Serving
+//!
+//! The [`serve`] subsystem evaluates schedules under *load* instead of in
+//! steady state: a deterministic discrete-event simulator pushes
+//! timestamped requests from Poisson / bursty (MMPP) / diurnal /
+//! piecewise / trace arrival processes through N tenants' pipelines on
+//! one shared platform. Its event model and contention assumptions:
+//!
+//! * each pipeline stage owns a bounded FIFO queue and serves one batch
+//!   at a time; service times come from the same per-layer database and
+//!   transfer model as [`pipeline::simulator`], so an uncontended single
+//!   tenant reproduces the analytic `1/max_stage_time` throughput;
+//! * EPs and the inter-chiplet link are **time-sliced** between tenants:
+//!   a service dispatched alongside `k` concurrent co-runners takes
+//!   `(k+1)×` its base time (the factor is frozen at dispatch — a
+//!   processor-sharing approximation that keeps the simulation exact-event
+//!   and deterministic);
+//! * full downstream queues exert backpressure (completed batches wait,
+//!   the stage stalls); full entry queues reject or drop-oldest per the
+//!   tenant's admission policy;
+//! * every control epoch, per-tenant SLO goodput is compared against its
+//!   rolling baseline; regression under queue pressure — the signature of
+//!   arrival-rate drift or contention — triggers
+//!   [`coordinator::AdaptiveController::warm_retune`] on a database
+//!   rescaled by the observed per-EP slowdowns, and the new configuration
+//!   is swapped in without losing requests.
+//!
+//! Metrics per tenant: p50/p95/p99/max latency (streaming quantile
+//! sketch), goodput, drop rate, per-epoch time series, and Jain fairness
+//! across tenants. See `shisha serve --help` output, the `serving_storm`
+//! example, and `benches/serve_scale.rs`.
 //!
 //! ## Quick tour
 //!
@@ -45,6 +80,7 @@ pub mod pipeline;
 pub mod platform;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stream;
 pub mod testutil;
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!
 //! * `explore`    — run explorers against the perf database (paper mode)
+//! * `serve`      — multi-tenant discrete-event serving with online re-tuning
 //! * `run`        — live pipeline + online tuning over PJRT artifacts
 //! * `platforms`  — print Table 1 EP kinds and Table 3 configs C1–C5
 //! * `designspace`— design-space sizes (the paper's "explored %" denominator)
@@ -23,12 +24,13 @@ use shisha::explore::shisha::{
 };
 use shisha::explore::simulated_annealing::{SaOptions, SimulatedAnnealing};
 use shisha::explore::{EvalOptions, Evaluator, Explorer};
-use shisha::metrics::table::{f as fnum, Table};
+use shisha::metrics::table::{f as fnum, latency_table, Table};
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::space;
 use shisha::platform::configs;
 use shisha::runtime::Manifest;
+use shisha::serve::{AdmissionPolicy, ArrivalProcess, ServeOptions, TenantSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -42,6 +44,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_deref() {
         Some("explore") => cmd_explore(&args),
+        Some("serve") => cmd_serve(&args),
         Some("run") => cmd_run(&args),
         Some("platforms") => cmd_platforms(),
         Some("designspace") => cmd_designspace(&args),
@@ -51,7 +54,7 @@ fn run(argv: Vec<String>) -> Result<()> {
             println!("shisha {}", shisha::VERSION);
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?} (try: explore, run, platforms, designspace, stream, seed, version)"),
+        Some(other) => bail!("unknown subcommand {other:?} (try: explore, serve, run, platforms, designspace, stream, seed, version)"),
         None => {
             print_usage();
             Ok(())
@@ -66,6 +69,12 @@ fn print_usage() {
          SUBCOMMANDS:\n\
            explore     --net <name> --platform <c1..c5> [--algo all|shisha|sa|hc|rw|es|ps]\n\
                        [--alpha N] [--heuristic h1..h6] [--config file.toml]\n\
+           serve       [--tenants N] [--nets a,b,..] [--platform c3] [--duration S]\n\
+                       [--arrivals SPEC[;SPEC..]] [--slo-ms MS] [--queue N] [--batch N]\n\
+                       [--epoch S] [--policy reject|drop-oldest] [--seed N]\n\
+                       [--no-control] [--no-contention] [--csv FILE]\n\
+                       SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
+                             | piecewise:R@T,R@T,.. | trace:FILE\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
@@ -178,6 +187,109 @@ fn cmd_explore(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "tenants",
+        "nets",
+        "platform",
+        "duration",
+        "arrivals",
+        "slo-ms",
+        "queue",
+        "batch",
+        "epoch",
+        "policy",
+        "seed",
+        "no-control",
+        "no-contention",
+        "csv",
+    ])?;
+    let n_tenants: usize = args.parsed_or("tenants", 2)?;
+    if n_tenants == 0 {
+        bail!("--tenants must be ≥ 1");
+    }
+    let plat = configs::by_name(args.get_or("platform", "c3")).context("unknown platform")?;
+    let net_names: Vec<&str> = args.get_or("nets", "synthnet").split(',').collect();
+    let arrival_specs: Vec<&str> = args.get_or("arrivals", "poisson:100").split(';').collect();
+    let slo_ms: f64 = args.parsed_or("slo-ms", 250.0)?;
+    let queue: usize = args.parsed_or("queue", 64)?;
+    let batch: usize = args.parsed_or("batch", 1)?;
+    let policy = match args.get_or("policy", "reject").to_ascii_lowercase().as_str() {
+        "reject" => AdmissionPolicy::Reject,
+        "drop-oldest" | "dropoldest" => AdmissionPolicy::DropOldest,
+        other => bail!("unknown --policy {other:?} (reject, drop-oldest)"),
+    };
+    let opts = ServeOptions {
+        duration_s: args.parsed_or("duration", 60.0)?,
+        seed: args.parsed_or("seed", 42)?,
+        control: !args.has_flag("no-control"),
+        control_epoch_s: args.parsed_or("epoch", 5.0)?,
+        contention: !args.has_flag("no-contention"),
+        ..Default::default()
+    };
+
+    let mut tenants = Vec::with_capacity(n_tenants);
+    println!(
+        "serving {} tenant(s) on {} ({} EPs) for {:.1}s (seed {})",
+        n_tenants,
+        plat.name,
+        plat.n_eps(),
+        opts.duration_s,
+        opts.seed
+    );
+    // shisha_config is deterministic in (net, platform): tune once per net
+    let mut config_cache: std::collections::BTreeMap<String, shisha::pipeline::PipelineConfig> =
+        std::collections::BTreeMap::new();
+    for i in 0..n_tenants {
+        let net_name = net_names[i % net_names.len()].trim();
+        let net = networks::by_name(net_name).with_context(|| format!("unknown network {net_name:?}"))?;
+        let spec_str = arrival_specs[i % arrival_specs.len()].trim();
+        let arrivals = ArrivalProcess::parse(spec_str)?;
+        let config = config_cache
+            .entry(net_name.to_string())
+            .or_insert_with(|| shisha::serve::shisha_config(&net, &plat))
+            .clone();
+        println!("  tenant {i}: {net_name}, arrivals {spec_str}, config {}", config.describe());
+        let spec = TenantSpec::new(format!("{net_name}-{i}"), net, arrivals)
+            .with_slo(slo_ms * 1e-3)
+            .with_queue_capacity(queue)
+            .with_batch(batch)
+            .with_admission(policy);
+        tenants.push((spec, config));
+    }
+
+    let report = shisha::serve::serve(&plat, tenants, &opts)?;
+    let table =
+        latency_table(report.tenants.iter().map(|t| t.latency_row(report.duration_s)));
+    println!("\n{}", table.to_markdown());
+    for t in &report.tenants {
+        println!(
+            "{}: offered {} / completed {} / rejected {} / dropped {} / in-flight {}; \
+             {} re-tune(s) ({} trials), final config {}",
+            t.name,
+            t.offered,
+            t.completed,
+            t.rejected,
+            t.dropped,
+            t.in_flight,
+            t.retunes,
+            t.retune_trials,
+            t.final_config.describe()
+        );
+    }
+    println!(
+        "{} events, fairness (Jain) {:.4}{}",
+        report.n_events,
+        report.fairness(),
+        if report.truncated { " [TRUNCATED at event cap]" } else { "" }
+    );
+    if let Some(path) = args.get("csv") {
+        table.write_csv(path).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -97,6 +97,53 @@ impl Table {
     }
 }
 
+/// One row of a latency-percentile table (times in seconds; rendered in
+/// milliseconds). Shared by the `serve` CLI subcommand and the
+/// `serve_scale` bench so per-tenant SLO results print identically
+/// everywhere.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    /// Row label (tenant or scenario name).
+    pub label: String,
+    /// Median latency, seconds.
+    pub p50_s: f64,
+    /// 95th-percentile latency, seconds.
+    pub p95_s: f64,
+    /// 99th-percentile latency, seconds.
+    pub p99_s: f64,
+    /// Maximum latency, seconds.
+    pub max_s: f64,
+    /// SLO goodput, requests/second.
+    pub goodput_rps: f64,
+    /// Fraction of offered requests rejected or dropped, in [0, 1].
+    pub drop_rate: f64,
+}
+
+/// Canonical latency-percentile table: one [`LatencyRow`] per row.
+pub fn latency_table(rows: impl IntoIterator<Item = LatencyRow>) -> Table {
+    let mut t = Table::new([
+        "tenant",
+        "p50 (ms)",
+        "p95 (ms)",
+        "p99 (ms)",
+        "max (ms)",
+        "goodput (req/s)",
+        "drop rate",
+    ]);
+    for r in rows {
+        t.row([
+            r.label,
+            f(r.p50_s * 1e3, 3),
+            f(r.p95_s * 1e3, 3),
+            f(r.p99_s * 1e3, 3),
+            f(r.max_s * 1e3, 3),
+            f(r.goodput_rps, 2),
+            pct(r.drop_rate),
+        ]);
+    }
+    t
+}
+
 /// Format an f64 with `digits` significant decimals.
 pub fn f(x: f64, digits: usize) -> String {
     format!("{x:.digits$}")
@@ -154,5 +201,25 @@ mod tests {
         assert_eq!(f(1.23456, 2), "1.23");
         assert_eq!(times(34.567), "34.57×");
         assert_eq!(pct(0.00123), "0.123%");
+    }
+
+    #[test]
+    fn latency_table_renders_ms_and_pct() {
+        let t = latency_table([LatencyRow {
+            label: "tenant-0".into(),
+            p50_s: 0.010,
+            p95_s: 0.020,
+            p99_s: 0.0405,
+            max_s: 0.100,
+            goodput_rps: 123.456,
+            drop_rate: 0.05,
+        }]);
+        assert_eq!(t.len(), 1);
+        let md = t.to_markdown();
+        assert!(md.contains("p99 (ms)"), "{md}");
+        assert!(md.contains("10.000"), "{md}");
+        assert!(md.contains("40.500"), "{md}");
+        assert!(md.contains("123.46"), "{md}");
+        assert!(md.contains("5.000%"), "{md}");
     }
 }

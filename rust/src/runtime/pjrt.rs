@@ -1,0 +1,156 @@
+//! The real PJRT execution path (enabled by the `pjrt` cargo feature).
+//!
+//! See the module docs of [`crate::runtime`] for the load/compile/execute
+//! pipeline and the per-thread ownership model.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+/// A compiled artifact: metadata + loaded PJRT executable.
+pub struct Compiled {
+    /// Artifact metadata from the manifest.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A per-thread PJRT runtime holding compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client with no artifacts loaded.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, compiled: HashMap::new() })
+    }
+
+    /// Platform the client runs on (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one artifact from the manifest.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = manifest.path_of(&meta);
+        let path_str = path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.compiled.insert(name.to_string(), Compiled { meta, exe });
+        Ok(())
+    }
+
+    /// Load every artifact in the manifest.
+    pub fn load_all(&mut self, manifest: &Manifest) -> Result<()> {
+        for a in &manifest.artifacts {
+            self.load(manifest, &a.name)?;
+        }
+        Ok(())
+    }
+
+    /// Names of loaded artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.compiled.keys().map(String::as_str).collect()
+    }
+
+    /// Metadata of a loaded artifact.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.compiled.get(name).map(|c| &c.meta)
+    }
+
+    /// Execute a loaded artifact on raw f32 buffers with explicit shapes.
+    /// Returns the flattened f32 output (artifacts are lowered with
+    /// `return_tuple=True`, so the single result is unwrapped from a
+    /// 1-tuple).
+    pub fn execute_raw(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let c = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a *layer* artifact: `y = conv(x, w, b)`.
+    pub fn execute_layer(&self, name: &str, x: &[f32], w: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .meta(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?
+            .clone();
+        if meta.kind != ArtifactKind::Layer {
+            bail!("{name} is not a layer artifact");
+        }
+        let w_shape = meta.w_shape.clone().context("layer missing weight shape")?;
+        let bias = meta.bias.context("layer missing bias length")?;
+        if x.len() != meta.in_elems() {
+            bail!("{name}: input has {} elems, expected {}", x.len(), meta.in_elems());
+        }
+        let out = self.execute_raw(name, &[(x, &meta.in_shape), (w, &w_shape), (b, &[bias])])?;
+        debug_assert_eq!(out.len(), meta.out_elems());
+        Ok(out)
+    }
+
+    /// Execute the fused whole-network *stage* artifact:
+    /// `y = net(x, w0, b0, w1, b1, ...)`.
+    pub fn execute_stage(
+        &self,
+        name: &str,
+        x: &[f32],
+        params: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .meta(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?
+            .clone();
+        if meta.kind != ArtifactKind::Stage {
+            bail!("{name} is not a stage artifact");
+        }
+        let mut inputs: Vec<(&[f32], &[i64])> = Vec::with_capacity(1 + params.len());
+        inputs.push((x, &meta.in_shape));
+        for (data, dims) in params {
+            inputs.push((data.as_slice(), dims.as_slice()));
+        }
+        self.execute_raw(name, &inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_constructs() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.platform().to_lowercase().contains("pu"), "platform {}", rt.platform());
+        assert!(rt.loaded().is_empty());
+    }
+
+    #[test]
+    fn execute_unloaded_fails() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.execute_raw("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Compile-time stub for the PJRT runtime (the `pjrt` feature is **off**).
+//!
+//! Mirrors the public surface of [`super::pjrt`] so that the coordinator,
+//! CLI and examples compile without the `xla` crate. Every entry point that
+//! would need a real PJRT client fails with [`PJRT_DISABLED`]; pure
+//! metadata queries behave normally on the (necessarily empty) artifact
+//! set.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Error message returned by every stubbed execution entry point.
+pub const PJRT_DISABLED: &str =
+    "PJRT support not compiled in: rebuild with `cargo build --features pjrt` \
+     (requires the xla crate and a local XLA/PJRT C library)";
+
+/// Stub of the compiled-artifact handle. Never constructed without PJRT.
+pub struct Compiled {
+    /// Artifact metadata from the manifest.
+    pub meta: ArtifactMeta,
+}
+
+/// Stub runtime: same API as the PJRT-backed one, but `new()` fails.
+pub struct Runtime {
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Runtime {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn new() -> Result<Self> {
+        bail!(PJRT_DISABLED);
+    }
+
+    /// Platform name placeholder.
+    pub fn platform(&self) -> String {
+        "none (pjrt feature disabled)".to_string()
+    }
+
+    /// Always fails: artifacts cannot be compiled without PJRT.
+    pub fn load(&mut self, _manifest: &Manifest, _name: &str) -> Result<()> {
+        bail!(PJRT_DISABLED);
+    }
+
+    /// Always fails: artifacts cannot be compiled without PJRT.
+    pub fn load_all(&mut self, _manifest: &Manifest) -> Result<()> {
+        bail!(PJRT_DISABLED);
+    }
+
+    /// Names of loaded artifacts (always empty in the stub).
+    pub fn loaded(&self) -> Vec<&str> {
+        self.compiled.keys().map(String::as_str).collect()
+    }
+
+    /// Metadata of a loaded artifact (always `None` in the stub).
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.compiled.get(name).map(|c| &c.meta)
+    }
+
+    /// Always fails in the stub.
+    pub fn execute_raw(&self, _name: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        bail!(PJRT_DISABLED);
+    }
+
+    /// Always fails in the stub.
+    pub fn execute_layer(
+        &self,
+        _name: &str,
+        _x: &[f32],
+        _w: &[f32],
+        _b: &[f32],
+    ) -> Result<Vec<f32>> {
+        bail!(PJRT_DISABLED);
+    }
+
+    /// Always fails in the stub.
+    pub fn execute_stage(
+        &self,
+        _name: &str,
+        _x: &[f32],
+        _params: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<f32>> {
+        bail!(PJRT_DISABLED);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_reports_missing_feature() {
+        let err = Runtime::new().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,508 @@
+//! Arrival processes for the serving engine.
+//!
+//! Four generators, all driven by the crate's [`Xoshiro256`] so a run is
+//! reproducible from a single seed:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless, constant rate;
+//! * [`ArrivalProcess::Mmpp`] — two-state Markov-modulated Poisson
+//!   process, the classic bursty-traffic model (low/high rate with
+//!   exponentially distributed dwell times);
+//! * [`ArrivalProcess::Diurnal`] — sinusoidally rate-modulated Poisson,
+//!   sampled by Lewis–Shedler thinning (day/night load curves);
+//! * [`ArrivalProcess::Piecewise`] — piecewise-constant rates with exact
+//!   change points, the *arrival-rate drift* scenario that exercises the
+//!   online re-tuning loop;
+//! * [`ArrivalProcess::Trace`] — replay of explicit timestamps (e.g. from
+//!   a production log), for exact reproduction of a recorded workload.
+//!
+//! Specs parse from compact CLI strings via [`ArrivalProcess::parse`]:
+//! `poisson:200`, `mmpp:50,400,5,1`, `diurnal:200,0.8,60`,
+//! `piecewise:100@0,400@30`, `trace:/path/to/times.txt`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Xoshiro256;
+
+/// A request arrival process (per tenant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate Poisson arrivals, `rate` requests/second.
+    Poisson {
+        /// Mean arrival rate, requests/second.
+        rate: f64,
+    },
+    /// Two-state Markov-modulated Poisson process.
+    Mmpp {
+        /// Arrival rate in the low state, requests/second.
+        low_rate: f64,
+        /// Arrival rate in the high (burst) state, requests/second.
+        high_rate: f64,
+        /// Mean dwell time in the low state, seconds.
+        mean_low_s: f64,
+        /// Mean dwell time in the high state, seconds.
+        mean_high_s: f64,
+    },
+    /// Sinusoidally modulated Poisson: `rate(t) = base·(1 + amp·sin(2πt/period))`.
+    Diurnal {
+        /// Mean rate, requests/second.
+        base_rate: f64,
+        /// Relative modulation amplitude in [0, 1].
+        amplitude: f64,
+        /// Modulation period, seconds.
+        period_s: f64,
+    },
+    /// Piecewise-constant rate: `(start_s, rate)` segments, sorted by start.
+    /// The first segment should start at 0; rate 0 means silence.
+    Piecewise {
+        /// `(segment start time, rate)` pairs, ascending starts.
+        segments: Vec<(f64, f64)>,
+    },
+    /// Replay of explicit arrival timestamps (seconds, ascending).
+    Trace {
+        /// Absolute arrival times, seconds.
+        times: Vec<f64>,
+    },
+}
+
+impl ArrivalProcess {
+    /// Parse a compact spec string (see module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<ArrivalProcess> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .with_context(|| format!("arrival spec {spec:?}: expected kind:params"))?;
+        let nums = |s: &str| -> Result<Vec<f64>> {
+            s.split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("arrival spec {spec:?}: {x:?}: {e}"))
+                })
+                .collect()
+        };
+        match kind.trim().to_ascii_lowercase().as_str() {
+            "poisson" => {
+                let v = nums(rest)?;
+                if v.len() != 1 || v[0] < 0.0 {
+                    bail!("poisson wants one non-negative rate, got {rest:?}");
+                }
+                Ok(ArrivalProcess::Poisson { rate: v[0] })
+            }
+            "mmpp" => {
+                let v = nums(rest)?;
+                if v.len() != 4 {
+                    bail!("mmpp wants low_rate,high_rate,mean_low_s,mean_high_s, got {rest:?}");
+                }
+                if v.iter().any(|&x| x < 0.0) || v[2] <= 0.0 || v[3] <= 0.0 {
+                    bail!("mmpp rates must be ≥ 0 and dwell times > 0, got {rest:?}");
+                }
+                Ok(ArrivalProcess::Mmpp {
+                    low_rate: v[0],
+                    high_rate: v[1],
+                    mean_low_s: v[2],
+                    mean_high_s: v[3],
+                })
+            }
+            "diurnal" => {
+                let v = nums(rest)?;
+                if v.len() != 3 {
+                    bail!("diurnal wants base_rate,amplitude,period_s, got {rest:?}");
+                }
+                if v[0] < 0.0 || !(0.0..=1.0).contains(&v[1]) || v[2] <= 0.0 {
+                    bail!("diurnal wants rate ≥ 0, amplitude ∈ [0,1], period > 0, got {rest:?}");
+                }
+                Ok(ArrivalProcess::Diurnal { base_rate: v[0], amplitude: v[1], period_s: v[2] })
+            }
+            "piecewise" => {
+                let mut segments = Vec::new();
+                for part in rest.split(',') {
+                    let (r, t) = part
+                        .split_once('@')
+                        .with_context(|| format!("piecewise segment {part:?}: want rate@start"))?;
+                    let rate: f64 = r.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("piecewise rate {r:?}: {e}")
+                    })?;
+                    let start: f64 = t.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("piecewise start {t:?}: {e}")
+                    })?;
+                    if rate < 0.0 || start < 0.0 {
+                        bail!("piecewise segment {part:?}: negative value");
+                    }
+                    segments.push((start, rate));
+                }
+                if segments.is_empty() {
+                    bail!("piecewise wants at least one rate@start segment");
+                }
+                if segments.windows(2).any(|w| w[0].0 >= w[1].0) {
+                    bail!("piecewise segment starts must be strictly ascending");
+                }
+                Ok(ArrivalProcess::Piecewise { segments })
+            }
+            "trace" => {
+                let text = std::fs::read_to_string(rest.trim())
+                    .with_context(|| format!("reading arrival trace {rest:?}"))?;
+                Self::parse_trace(&text)
+            }
+            other => bail!("unknown arrival kind {other:?} (poisson, mmpp, diurnal, piecewise, trace)"),
+        }
+    }
+
+    /// Parse a trace body: one timestamp (seconds) per line; `#` comments
+    /// and blank lines ignored. Timestamps must be non-negative ascending.
+    pub fn parse_trace(text: &str) -> Result<ArrivalProcess> {
+        let mut times = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let t: f64 = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: {s:?}: {e}", ln + 1))?;
+            if t < 0.0 {
+                bail!("trace line {}: negative timestamp {t}", ln + 1);
+            }
+            times.push(t);
+        }
+        if times.windows(2).any(|w| w[0] > w[1]) {
+            bail!("trace timestamps must be ascending");
+        }
+        Ok(ArrivalProcess::Trace { times })
+    }
+
+    /// Mean rate over `[0, horizon_s]` (for reporting / load estimates).
+    pub fn mean_rate(&self, horizon_s: f64) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Mmpp { low_rate, high_rate, mean_low_s, mean_high_s } => {
+                // stationary distribution of the two-state chain
+                let p_high = mean_high_s / (mean_low_s + mean_high_s);
+                low_rate * (1.0 - p_high) + high_rate * p_high
+            }
+            ArrivalProcess::Diurnal { base_rate, .. } => *base_rate,
+            ArrivalProcess::Piecewise { segments } => {
+                if horizon_s <= 0.0 {
+                    return segments.first().map_or(0.0, |&(_, r)| r);
+                }
+                let mut acc = 0.0;
+                for (i, &(start, rate)) in segments.iter().enumerate() {
+                    let end = segments.get(i + 1).map_or(horizon_s, |&(s, _)| s).min(horizon_s);
+                    if end > start {
+                        acc += rate * (end - start);
+                    }
+                }
+                acc / horizon_s
+            }
+            ArrivalProcess::Trace { times } => {
+                if horizon_s <= 0.0 {
+                    0.0
+                } else {
+                    times.iter().filter(|&&t| t <= horizon_s).count() as f64 / horizon_s
+                }
+            }
+        }
+    }
+
+    /// Instantiate a sampler with its own RNG stream.
+    pub fn sampler(&self, rng: Xoshiro256) -> ArrivalSampler {
+        ArrivalSampler {
+            proc: self.clone(),
+            rng,
+            mmpp_high: false,
+            mmpp_switch_s: f64::NEG_INFINITY,
+            trace_idx: 0,
+        }
+    }
+}
+
+/// Stateful arrival-time generator; yields strictly increasing timestamps.
+#[derive(Debug, Clone)]
+pub struct ArrivalSampler {
+    proc: ArrivalProcess,
+    rng: Xoshiro256,
+    /// MMPP: currently in the high state?
+    mmpp_high: bool,
+    /// MMPP: time at which the current state ends.
+    mmpp_switch_s: f64,
+    /// Trace: next index to replay.
+    trace_idx: usize,
+}
+
+/// Exponential variate with the given rate (mean 1/rate). Free function
+/// over the RNG so the sampler can borrow its process parameters and its
+/// RNG as disjoint fields (no per-sample clone of the process).
+fn exp_var(rng: &mut Xoshiro256, rate: f64) -> f64 {
+    // 1 − u ∈ (0, 1] so ln is finite
+    -(1.0 - rng.gen_f64()).ln() / rate
+}
+
+impl ArrivalSampler {
+    /// Next arrival after `now` (strictly after for the stochastic
+    /// processes; traces replay entries **at or after** `now`, each entry
+    /// exactly once, so a `t = 0` first arrival and simultaneous
+    /// timestamps are preserved), or `None` when the process is exhausted
+    /// (trace ended / rate zero forever).
+    pub fn next_after(&mut self, now: f64) -> Option<f64> {
+        match &self.proc {
+            ArrivalProcess::Trace { times } => {
+                while self.trace_idx < times.len() {
+                    let t = times[self.trace_idx];
+                    self.trace_idx += 1;
+                    if t >= now {
+                        return Some(t);
+                    }
+                }
+                None
+            }
+            ArrivalProcess::Poisson { rate } => {
+                if *rate <= 0.0 {
+                    return None;
+                }
+                Some(now + exp_var(&mut self.rng, *rate))
+            }
+            ArrivalProcess::Mmpp { low_rate, high_rate, mean_low_s, mean_high_s } => {
+                let (lo, hi, ml, mh) = (*low_rate, *high_rate, *mean_low_s, *mean_high_s);
+                if lo <= 0.0 && hi <= 0.0 {
+                    return None;
+                }
+                // initialise the state machine on first use
+                if self.mmpp_switch_s == f64::NEG_INFINITY {
+                    self.mmpp_high = false;
+                    let dwell = exp_var(&mut self.rng, 1.0 / ml);
+                    self.mmpp_switch_s = now + dwell;
+                }
+                let mut t = now;
+                loop {
+                    let rate = if self.mmpp_high { hi } else { lo };
+                    let candidate = if rate > 0.0 {
+                        let dt = exp_var(&mut self.rng, rate);
+                        Some(t + dt)
+                    } else {
+                        None
+                    };
+                    match candidate {
+                        // arrival lands inside the current state: accept
+                        Some(c) if c < self.mmpp_switch_s => return Some(c),
+                        // otherwise advance to the state switch and retry
+                        // (the exponential is memoryless, so resampling in
+                        // the new state is exact)
+                        _ => {
+                            t = self.mmpp_switch_s;
+                            self.mmpp_high = !self.mmpp_high;
+                            let mean = if self.mmpp_high { mh } else { ml };
+                            let dwell = exp_var(&mut self.rng, 1.0 / mean);
+                            self.mmpp_switch_s = t + dwell;
+                        }
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_s } => {
+                let (base, amp, period) = (*base_rate, *amplitude, *period_s);
+                if base <= 0.0 {
+                    return None;
+                }
+                // Lewis–Shedler thinning against λ_max = base·(1+amp)
+                let lambda_max = base * (1.0 + amp);
+                let mut t = now;
+                for _ in 0..1_000_000 {
+                    t += exp_var(&mut self.rng, lambda_max);
+                    let lambda_t = base
+                        * (1.0 + amp * (2.0 * std::f64::consts::PI * t / period).sin());
+                    if self.rng.gen_f64() * lambda_max <= lambda_t {
+                        return Some(t);
+                    }
+                }
+                None // pathological parameters; treat as silence
+            }
+            ArrivalProcess::Piecewise { segments } => {
+                let segs = segments;
+                let mut t = now;
+                loop {
+                    // active segment at time t (last segment whose start ≤ t);
+                    // before the first segment the rate is 0
+                    let idx = match segs.iter().rposition(|&(s, _)| s <= t) {
+                        Some(i) => i,
+                        None => {
+                            t = segs[0].0;
+                            0
+                        }
+                    };
+                    let (_, rate) = segs[idx];
+                    let seg_end = segs.get(idx + 1).map_or(f64::INFINITY, |&(s, _)| s);
+                    if rate <= 0.0 {
+                        if seg_end.is_infinite() {
+                            return None; // silent forever
+                        }
+                        t = seg_end;
+                        continue;
+                    }
+                    let candidate = t + exp_var(&mut self.rng, rate);
+                    if candidate < seg_end {
+                        return Some(candidate);
+                    }
+                    t = seg_end; // memoryless: resample in the next segment
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_until(proc: &ArrivalProcess, seed: u64, horizon: f64) -> usize {
+        let mut s = proc.sampler(Xoshiro256::seed_from(seed));
+        let mut t = 0.0;
+        let mut n = 0;
+        while let Some(next) = s.next_after(t) {
+            if next > horizon {
+                break;
+            }
+            t = next;
+            n += 1;
+        }
+        n
+    }
+
+    #[test]
+    fn poisson_count_near_rate() {
+        let p = ArrivalProcess::Poisson { rate: 100.0 };
+        let n = count_until(&p, 42, 50.0) as f64;
+        // 5000 expected, σ ≈ 71 — allow ±5σ
+        assert!((4650.0..=5350.0).contains(&n), "poisson count {n}");
+    }
+
+    #[test]
+    fn poisson_strictly_increasing_and_deterministic() {
+        let p = ArrivalProcess::Poisson { rate: 50.0 };
+        let run = |seed| {
+            let mut s = p.sampler(Xoshiro256::seed_from(seed));
+            let mut t = 0.0;
+            let mut out = Vec::new();
+            for _ in 0..200 {
+                let next = s.next_after(t).unwrap();
+                assert!(next > t);
+                t = next;
+                out.push(next);
+            }
+            out
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn zero_rate_is_silence() {
+        assert_eq!(count_until(&ArrivalProcess::Poisson { rate: 0.0 }, 1, 100.0), 0);
+    }
+
+    #[test]
+    fn mmpp_mixes_rates() {
+        let p = ArrivalProcess::Mmpp {
+            low_rate: 10.0,
+            high_rate: 400.0,
+            mean_low_s: 2.0,
+            mean_high_s: 2.0,
+        };
+        let n = count_until(&p, 3, 200.0) as f64;
+        let mean = p.mean_rate(200.0) * 200.0; // 205 · 200 = 41000
+        assert!(n > 0.5 * mean && n < 1.5 * mean, "mmpp count {n} vs mean {mean}");
+        // must exceed pure-low and undercut pure-high
+        assert!(n > 10.0 * 200.0 * 1.5);
+        assert!(n < 400.0 * 200.0 * 0.9);
+    }
+
+    #[test]
+    fn diurnal_count_near_base_rate_over_full_periods() {
+        let p = ArrivalProcess::Diurnal { base_rate: 100.0, amplitude: 0.8, period_s: 10.0 };
+        // 20 full periods: modulation integrates out
+        let n = count_until(&p, 11, 200.0) as f64;
+        assert!((18000.0..=22000.0).contains(&n), "diurnal count {n}");
+    }
+
+    #[test]
+    fn piecewise_rates_shift_at_boundaries() {
+        let p = ArrivalProcess::Piecewise { segments: vec![(0.0, 100.0), (50.0, 0.0), (80.0, 400.0)] };
+        let mut s = p.sampler(Xoshiro256::seed_from(5));
+        let mut t = 0.0;
+        let (mut n_a, mut n_b, mut n_c) = (0, 0, 0);
+        while let Some(next) = s.next_after(t) {
+            if next > 100.0 {
+                break;
+            }
+            t = next;
+            if t < 50.0 {
+                n_a += 1;
+            } else if t < 80.0 {
+                n_b += 1;
+            } else {
+                n_c += 1;
+            }
+        }
+        assert!((4000..=6000).contains(&n_a), "segment A {n_a}");
+        assert_eq!(n_b, 0, "silent segment must produce nothing");
+        assert!((7000..=9000).contains(&n_c), "segment C {n_c}");
+    }
+
+    #[test]
+    fn trace_replays_exact_times() {
+        let p = ArrivalProcess::parse_trace("# demo\n0.5\n1.0\n\n2.25\n").unwrap();
+        let mut s = p.sampler(Xoshiro256::seed_from(0));
+        assert_eq!(s.next_after(0.0), Some(0.5));
+        assert_eq!(s.next_after(0.5), Some(1.0));
+        assert_eq!(s.next_after(1.0), Some(2.25));
+        assert_eq!(s.next_after(2.25), None);
+    }
+
+    #[test]
+    fn trace_keeps_time_zero_and_simultaneous_arrivals() {
+        let p = ArrivalProcess::parse_trace("0\n1.0\n1.0\n").unwrap();
+        let mut s = p.sampler(Xoshiro256::seed_from(0));
+        assert_eq!(s.next_after(0.0), Some(0.0), "t=0 entry must not be dropped");
+        assert_eq!(s.next_after(0.0), Some(1.0));
+        assert_eq!(s.next_after(1.0), Some(1.0), "duplicate timestamps each replay once");
+        assert_eq!(s.next_after(1.0), None);
+    }
+
+    #[test]
+    fn parse_specs_roundtrip() {
+        assert_eq!(
+            ArrivalProcess::parse("poisson:200").unwrap(),
+            ArrivalProcess::Poisson { rate: 200.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("mmpp:50,400,5,1").unwrap(),
+            ArrivalProcess::Mmpp { low_rate: 50.0, high_rate: 400.0, mean_low_s: 5.0, mean_high_s: 1.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("diurnal:200,0.8,60").unwrap(),
+            ArrivalProcess::Diurnal { base_rate: 200.0, amplitude: 0.8, period_s: 60.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("piecewise:100@0,400@30").unwrap(),
+            ArrivalProcess::Piecewise { segments: vec![(0.0, 100.0), (30.0, 400.0)] }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "poisson",
+            "poisson:-5",
+            "mmpp:1,2,3",
+            "diurnal:100,1.5,60",
+            "piecewise:100@30,400@10",
+            "warp:9",
+        ] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn mean_rate_estimates() {
+        let p = ArrivalProcess::Piecewise { segments: vec![(0.0, 100.0), (50.0, 300.0)] };
+        assert!((p.mean_rate(100.0) - 200.0).abs() < 1e-9);
+        let m = ArrivalProcess::Mmpp { low_rate: 0.0, high_rate: 100.0, mean_low_s: 1.0, mean_high_s: 1.0 };
+        assert!((m.mean_rate(10.0) - 50.0).abs() < 1e-9);
+    }
+}

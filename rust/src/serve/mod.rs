@@ -1,0 +1,77 @@
+//! `serve` — a discrete-event multi-tenant serving engine with online
+//! Shisha re-tuning.
+//!
+//! Where [`crate::pipeline::simulator`] answers "what is the steady-state
+//! throughput of this configuration" and [`crate::coordinator`] runs a
+//! real threaded pipeline, this subsystem evaluates Shisha schedules **the
+//! way a production deployment experiences them**: timestamped requests,
+//! bounded queues, batching, tail latency, multiple models contending for
+//! the same chiplets, and arrival-rate drift that forces the scheduler to
+//! adapt online.
+//!
+//! Module map:
+//!
+//! * [`arrivals`] — Poisson / Markov-modulated / diurnal / piecewise /
+//!   trace-replay arrival processes, all reproducible from one seed;
+//! * [`tenant`] — per-model serving specs (SLO, queueing, batching,
+//!   admission policy);
+//! * [`engine`] — the event-heap simulator plus the control loop that
+//!   feeds observed per-EP slowdowns back into
+//!   [`crate::coordinator::AdaptiveController::warm_retune`];
+//! * [`slo`] — streaming latency-quantile sketch, goodput and Jain
+//!   fairness.
+//!
+//! See the crate-level docs ("Serving") for the event model and the
+//! contention assumptions.
+
+pub mod arrivals;
+pub mod engine;
+pub mod slo;
+pub mod tenant;
+
+pub use arrivals::{ArrivalProcess, ArrivalSampler};
+pub use engine::{serve, EpochStats, ServeOptions, ServeReport, TenantReport};
+pub use slo::{jain_fairness, QuantileSketch};
+pub use tenant::{AdmissionPolicy, TenantSpec};
+
+use crate::explore::shisha::{ShishaExplorer, ShishaOptions};
+use crate::explore::{EvalOptions, Evaluator, Explorer};
+use crate::model::Network;
+use crate::perfdb::{CostModel, PerfDb};
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
+
+/// Tune a tenant's initial pipeline configuration with Shisha (H3, bounded
+/// evaluations) against the contention-free database — the natural starting
+/// point before the serving engine's online loop takes over.
+pub fn shisha_config(net: &Network, plat: &Platform) -> PipelineConfig {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let opts = EvalOptions { max_evals: Some(500), ..Default::default() };
+    let mut eval = Evaluator::with_options(net, plat, &db, opts);
+    ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval).best_config
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::pipeline::simulator;
+    use crate::platform::configs;
+
+    #[test]
+    fn shisha_config_is_valid_and_competitive() {
+        let net = networks::synthnet();
+        let plat = configs::c2();
+        let cfg = shisha_config(&net, &plat);
+        assert!(cfg.validate(net.len(), &plat).is_ok());
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let tuned = simulator::throughput(&net, &plat, &db, &cfg);
+        let single = simulator::throughput(
+            &net,
+            &plat,
+            &db,
+            &PipelineConfig::single_stage(net.len(), 0),
+        );
+        assert!(tuned > single, "Shisha ({tuned}) must beat single-EP ({single})");
+    }
+}

@@ -1,0 +1,294 @@
+//! SLO metrics: streaming latency quantiles, goodput and fairness.
+//!
+//! The serving engine completes millions of requests per simulated run, so
+//! latencies are folded into a fixed-size **geometric histogram sketch**
+//! ([`QuantileSketch`]) instead of being stored: buckets are log-spaced
+//! between [`QuantileSketch::FLOOR_S`] and [`QuantileSketch::CEIL_S`]
+//! (~2.8% relative width), insertion is O(1), and any quantile is read out
+//! in O(#buckets) with a worst-case relative error of one bucket width.
+//! The sketch is fully deterministic — identical insert sequences yield
+//! identical quantiles — which the engine's determinism guarantee relies
+//! on.
+//!
+//! [`jain_fairness`] is the standard Jain index over per-tenant goodputs:
+//! 1.0 when all tenants receive equal goodput, → 1/n under starvation.
+
+/// Streaming latency quantile sketch over a geometric bucket grid.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    n: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    /// Smallest resolvable latency (1 µs); anything below lands in bucket 0.
+    pub const FLOOR_S: f64 = 1e-6;
+    /// Largest resolvable latency (100 000 s); anything above saturates.
+    pub const CEIL_S: f64 = 1e5;
+    /// Buckets per decade (relative bucket width ≈ 10^(1/80) − 1 ≈ 2.9%).
+    const PER_DECADE: usize = 80;
+    /// Total bucket count: 11 decades × PER_DECADE + 1 overflow.
+    const N_BUCKETS: usize = 11 * Self::PER_DECADE + 1;
+
+    /// Empty sketch.
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; Self::N_BUCKETS],
+            n: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if x <= Self::FLOOR_S {
+            return 0;
+        }
+        let idx = ((x / Self::FLOOR_S).log10() * Self::PER_DECADE as f64).floor() as usize;
+        idx.min(Self::N_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket (representative value on readout).
+    fn bucket_value(idx: usize) -> f64 {
+        Self::FLOOR_S * 10f64.powf((idx as f64 + 0.5) / Self::PER_DECADE as f64)
+    }
+
+    /// Record one latency observation (seconds). Negative values clamp to 0.
+    pub fn record(&mut self, latency_s: f64) {
+        let x = latency_s.max(0.0);
+        self.counts[Self::bucket_of(x)] += 1;
+        self.n += 1;
+        self.sum_s += x;
+        self.min_s = self.min_s.min(x);
+        self.max_s = self.max_s.max(x);
+    }
+
+    /// Number of observations.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_s / self.n as f64
+        }
+    }
+
+    /// Exact maximum observed (0 when empty).
+    pub fn max_s(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max_s
+        }
+    }
+
+    /// Exact minimum observed (0 when empty).
+    pub fn min_s(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` in seconds (0 when empty). Returns the
+    /// geometric midpoint of the bucket holding the q-th observation,
+    /// clamped to the exact observed [min, max].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank ∈ [1, n]: the smallest observation has rank 1
+        let rank = ((q * self.n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(idx).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// p50 shorthand (seconds).
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// p95 shorthand (seconds).
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// p99 shorthand (seconds).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another sketch into this one (same grid by construction).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum_s += other.sum_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+}
+
+/// Jain's fairness index over per-tenant goodputs:
+/// `(Σx)² / (n·Σx²)` ∈ [1/n, 1]. Returns 1.0 for empty or all-zero input
+/// (nobody is being treated unfairly when nobody gets anything).
+pub fn jain_fairness(goodputs: &[f64]) -> f64 {
+    if goodputs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = goodputs.iter().sum();
+    let sq_sum: f64 = goodputs.iter().map(|x| x * x).sum();
+    if sq_sum <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (goodputs.len() as f64 * sq_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sketch_reads_zero() {
+        let s = QuantileSketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.mean_s(), 0.0);
+        assert_eq!(s.max_s(), 0.0);
+    }
+
+    #[test]
+    fn single_value_all_quantiles() {
+        let mut s = QuantileSketch::new();
+        s.record(0.125);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let v = s.quantile(q);
+            assert!((v - 0.125).abs() / 0.125 < 0.05, "q={q} v={v}");
+        }
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn uniform_grid_quantiles_within_bucket_error() {
+        // 1..=1000 ms uniformly: p50 ≈ 0.5 s, p95 ≈ 0.95 s, p99 ≈ 0.99 s.
+        let mut s = QuantileSketch::new();
+        for i in 1..=1000 {
+            s.record(i as f64 * 1e-3);
+        }
+        for (q, want) in [(0.50, 0.5), (0.95, 0.95), (0.99, 0.99)] {
+            let got = s.quantile(q);
+            assert!((got - want).abs() / want < 0.05, "q={q}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut s = QuantileSketch::new();
+        let mut x = 1e-4;
+        for _ in 0..500 {
+            s.record(x);
+            x *= 1.017;
+        }
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert!(s.p99() <= s.max_s() * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn extremes_clamped_and_counted() {
+        let mut s = QuantileSketch::new();
+        s.record(0.0); // below floor
+        s.record(1e9); // above ceiling
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.min_s(), 0.0);
+        assert_eq!(s.max_s(), 1e9);
+        assert!(s.quantile(1.0) <= 1e9);
+    }
+
+    #[test]
+    fn mean_and_sum_exact() {
+        let mut s = QuantileSketch::new();
+        for v in [0.1, 0.2, 0.3] {
+            s.record(v);
+        }
+        assert!((s.mean_s() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_matches_combined_stream() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        let mut both = QuantileSketch::new();
+        for i in 1..=100 {
+            let x = i as f64 * 1e-3;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), both.len());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), both.quantile(q));
+        }
+    }
+
+    #[test]
+    fn determinism_identical_streams() {
+        let feed = |s: &mut QuantileSketch| {
+            let mut x = 3e-3;
+            for _ in 0..1000 {
+                s.record(x);
+                x = (x * 1.37) % 2.0 + 1e-4;
+            }
+        };
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        feed(&mut a);
+        feed(&mut b);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), b.quantile(q));
+        }
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert!((jain_fairness(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        let skew = jain_fairness(&[10.0, 0.0, 0.0]);
+        assert!((skew - 1.0 / 3.0).abs() < 1e-12, "starvation → 1/n, got {skew}");
+        let mid = jain_fairness(&[4.0, 2.0]);
+        assert!(mid > 1.0 / 2.0 && mid < 1.0);
+    }
+}

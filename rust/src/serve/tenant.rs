@@ -1,0 +1,149 @@
+//! Multi-tenant workload description.
+//!
+//! A [`TenantSpec`] bundles everything the engine needs to serve one model
+//! under load: the network, its arrival process, the SLO target, queueing
+//! and batching parameters, and the admission policy. Tenants contend for
+//! the *shared* [`crate::platform::Platform`]: each tenant owns a
+//! [`crate::pipeline::PipelineConfig`] over the same EP set, and the
+//! engine's contention model charges stages that execute concurrently on
+//! one EP (or push transfers over the inter-chiplet link concurrently)
+//! proportionally to the number of co-runners.
+
+use anyhow::{bail, Result};
+
+use crate::model::Network;
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
+
+use super::arrivals::ArrivalProcess;
+
+/// What to do when a request arrives and the tenant's entry queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Reject the incoming request (counted as `rejected`).
+    Reject,
+    /// Drop the oldest queued request (counted as `dropped`) and admit the
+    /// new one — bounds staleness under overload.
+    DropOldest,
+}
+
+/// One tenant: a model served under an arrival process with an SLO.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display name (unique per run).
+    pub name: String,
+    /// The CNN this tenant serves.
+    pub net: Network,
+    /// Request arrival process.
+    pub arrivals: ArrivalProcess,
+    /// Latency SLO: completions within this bound count towards goodput.
+    pub slo_latency_s: f64,
+    /// Bound on every per-stage FIFO queue (≥ 1).
+    pub queue_capacity: usize,
+    /// Maximum images a stage services per slot (≥ 1; 1 = no batching).
+    pub batch: usize,
+    /// Admission policy at the entry queue.
+    pub admission: AdmissionPolicy,
+}
+
+impl TenantSpec {
+    /// New tenant with serving defaults: 250 ms SLO, 64-deep queues, no
+    /// batching, reject-on-full admission.
+    pub fn new(name: impl Into<String>, net: Network, arrivals: ArrivalProcess) -> Self {
+        Self {
+            name: name.into(),
+            net,
+            arrivals,
+            slo_latency_s: 0.250,
+            queue_capacity: 64,
+            batch: 1,
+            admission: AdmissionPolicy::Reject,
+        }
+    }
+
+    /// Builder-style SLO override.
+    pub fn with_slo(mut self, slo_latency_s: f64) -> Self {
+        self.slo_latency_s = slo_latency_s;
+        self
+    }
+
+    /// Builder-style queue-capacity override.
+    pub fn with_queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_capacity = cap;
+        self
+    }
+
+    /// Builder-style batch override.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Builder-style admission-policy override.
+    pub fn with_admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    /// Validate the spec against the platform it will be served on.
+    pub fn validate(&self, plat: &Platform, config: &PipelineConfig) -> Result<()> {
+        if self.queue_capacity == 0 {
+            bail!("tenant {}: queue capacity must be ≥ 1", self.name);
+        }
+        if self.batch == 0 {
+            bail!("tenant {}: batch must be ≥ 1", self.name);
+        }
+        if self.slo_latency_s <= 0.0 {
+            bail!("tenant {}: SLO latency must be positive", self.name);
+        }
+        if let Err(e) = config.validate(self.net.len(), plat) {
+            bail!("tenant {}: invalid pipeline config: {e}", self.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn spec() -> TenantSpec {
+        TenantSpec::new("t0", networks::synthnet(), ArrivalProcess::Poisson { rate: 10.0 })
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let s = spec();
+        assert_eq!(s.queue_capacity, 64);
+        assert_eq!(s.batch, 1);
+        assert_eq!(s.admission, AdmissionPolicy::Reject);
+        assert!(s.slo_latency_s > 0.0);
+    }
+
+    #[test]
+    fn builders_override() {
+        let s = spec()
+            .with_slo(1.5)
+            .with_queue_capacity(8)
+            .with_batch(4)
+            .with_admission(AdmissionPolicy::DropOldest);
+        assert_eq!(s.slo_latency_s, 1.5);
+        assert_eq!(s.queue_capacity, 8);
+        assert_eq!(s.batch, 4);
+        assert_eq!(s.admission, AdmissionPolicy::DropOldest);
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        let plat = configs::c2();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        assert!(spec().validate(&plat, &cfg).is_ok());
+        assert!(spec().with_queue_capacity(0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_batch(0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_slo(0.0).validate(&plat, &cfg).is_err());
+        let bad_cfg = PipelineConfig::new(vec![5], vec![0]);
+        assert!(spec().validate(&plat, &bad_cfg).is_err());
+    }
+}

@@ -126,3 +126,62 @@ fn run_fails_gracefully_without_artifacts() {
     assert!(!o.status.success());
     assert!(stderr(&o).contains("make artifacts"), "{}", stderr(&o));
 }
+
+#[test]
+fn serve_reports_percentiles_per_tenant() {
+    // tiny deterministic run: 2 synthnet_small tenants, short horizon
+    let o = shisha(&[
+        "serve",
+        "--tenants",
+        "2",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--arrivals",
+        "poisson:50",
+        "--duration",
+        "2",
+        "--seed",
+        "7",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("p50 (ms)"), "{out}");
+    assert!(out.contains("p99 (ms)"), "{out}");
+    assert!(out.contains("goodput (req/s)"), "{out}");
+    assert!(out.contains("drop rate"), "{out}");
+    assert!(out.contains("fairness (Jain)"), "{out}");
+    assert!(out.contains("synthnet_small-0"), "{out}");
+    assert!(out.contains("synthnet_small-1"), "{out}");
+}
+
+#[test]
+fn serve_is_deterministic_across_invocations() {
+    let args = [
+        "serve",
+        "--tenants",
+        "1",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--arrivals",
+        "mmpp:20,200,1,0.5",
+        "--duration",
+        "2",
+        "--seed",
+        "11",
+    ];
+    let a = shisha(&args);
+    let b = shisha(&args);
+    assert!(a.status.success(), "{}", stderr(&a));
+    assert_eq!(stdout(&a), stdout(&b), "same seed must reproduce the report");
+}
+
+#[test]
+fn serve_rejects_bad_arrival_spec() {
+    let o = shisha(&["serve", "--arrivals", "warp:9"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("unknown arrival kind"), "{}", stderr(&o));
+}

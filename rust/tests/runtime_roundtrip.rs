@@ -7,9 +7,11 @@
 //! Pallas kernel and the jnp reference), so agreement means the whole
 //! python→HLO→rust path preserves semantics.
 //!
-//! These tests require `make artifacts`; they are skipped (with a notice)
-//! when the artifact directory is absent so `cargo test` stays green on a
-//! fresh checkout.
+//! These tests require `make artifacts` **and** the `pjrt` cargo feature
+//! (the whole file is compiled out otherwise); they are additionally
+//! skipped (with a notice) when the artifact directory is absent so
+//! `cargo test --features pjrt` stays green on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use shisha::model::networks;
 use shisha::runtime::{synth_params, ArtifactKind, Manifest, Runtime};
