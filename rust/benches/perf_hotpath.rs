@@ -7,16 +7,28 @@
 //! * neighbourhood generation,
 //! * Algorithm-1 seed generation,
 //! * a complete Shisha run,
-//! * exhaustive enumeration rate (configs/s).
+//! * exhaustive enumeration rate (configs/s),
+//!
+//! plus the serving/control hot paths this PR optimised:
+//! * the clone-free evaluator inner loop (`Evaluator::evaluate`),
+//! * the scratch observed-database refresh vs the old clone-per-epoch,
+//! * a warm re-tune (evals/s),
+//! * a steady-state serve run (events/s).
+//!
+//! Results go to `results/perf_hotpath.csv` and, machine-readable, to
+//! `BENCH_hotpath.json` at the repository root (ns/op, ops/s, events/s,
+//! evals/s per case). Pass `--quick` for the CI profile.
 
+use shisha::coordinator::AdaptiveController;
 use shisha::explore::shisha::{generate_seed, AssignmentChoice, ShishaExplorer, ShishaOptions};
 use shisha::explore::{neighbors, Evaluator, Explorer};
-use shisha::metrics::bench::Bencher;
+use shisha::metrics::bench::{Bencher, JsonReport};
 use shisha::metrics::table::Table;
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::{simulator, space, PipelineConfig};
 use shisha::platform::configs;
+use shisha::serve::{serve, ArrivalProcess, ServeOptions, TenantSpec};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -49,6 +61,100 @@ fn main() {
         let mut rng = shisha::rng::Xoshiro256::seed_from(1);
         shisha::explore::random_move(&cfg, &plat, &mut rng)
     }));
+
+    let mut json = JsonReport::new();
+    json.note(
+        "perf_hotpath: ns/op + ops/s per case (median of batched samples). \
+         *_baseline cases are the pre-refactor implementations kept for \
+         comparison (clone-per-epoch observed database); events_per_s / \
+         evals_per_s are derived from per-run counts.",
+    );
+
+    // --- evaluator inner loop ---------------------------------------------
+    {
+        // steady state: the candidate never beats the stored best, so this
+        // measures the pure evaluate-and-compare path
+        let mut eval = Evaluator::new(&net, &plat, &db);
+        results.push(b.run("evaluator_evaluate_steady", || eval.evaluate(&cfg)));
+    }
+    {
+        // improvement path: a fresh evaluator sees a slow config then a
+        // fast one, so every iteration runs the best-so-far update
+        // (PipelineConfig::clone_from — allocation-free after warmup)
+        let slow_cfg = PipelineConfig::single_stage(net.len(), 2);
+        results.push(b.run("evaluator_best_update", || {
+            let mut eval = Evaluator::new(&net, &plat, &db);
+            eval.evaluate(&slow_cfg);
+            eval.evaluate(&cfg)
+        }));
+    }
+
+    // --- observed-database refresh: scratch copy vs clone-per-epoch ------
+    {
+        let factors: Vec<f64> =
+            (0..plat.n_eps()).map(|ep| if ep % 2 == 0 { 1.25 } else { 1.0 }).collect();
+        results.push(b.run("observed_db_clone_scale_baseline", || {
+            let mut d = db.clone();
+            for (ep, &f) in factors.iter().enumerate() {
+                if f > 1.001 {
+                    d.scale_ep(ep, f);
+                }
+            }
+            d
+        }));
+        let mut scratch = db.clone();
+        results.push(b.run("observed_db_copy_scaled", || {
+            scratch.copy_scaled_from(&db, &factors);
+        }));
+    }
+
+    // --- warm re-tune (the control loop's exploration burst) -------------
+    let ctl = AdaptiveController::new(net.clone(), plat.clone(), model.clone());
+    let (_, retune_trials) = ctl.warm_retune(&db, cfg.clone());
+    let warm = b.run("warm_retune_resnet50_c5", || ctl.warm_retune(&db, cfg.clone()));
+    json.metric(
+        "warm_retune_resnet50_c5",
+        "evals_per_s",
+        retune_trials as f64 * warm.throughput(),
+    );
+    results.push(warm);
+
+    // --- steady-state serve run (the discrete-event hot loop) ------------
+    {
+        let c1 = configs::c1();
+        let small = networks::synthnet_small();
+        let scfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let sdb = PerfDb::build(&small, &c1, &model);
+        let scap = simulator::throughput(&small, &c1, &sdb, &scfg);
+        let serve_opts = ServeOptions {
+            duration_s: 400.0 / scap,
+            control: false,
+            control_epoch_s: 0.0,
+            ..Default::default()
+        };
+        let tenants = || {
+            vec![(
+                TenantSpec::new(
+                    "bench",
+                    small.clone(),
+                    ArrivalProcess::Poisson { rate: 0.8 * scap },
+                )
+                .with_slo(50.0 / scap),
+                scfg.clone(),
+            )]
+        };
+        let events_per_run =
+            serve(&c1, tenants(), &serve_opts).expect("serve probe").n_events;
+        let run = b.run("serve_steady_400req_small", || {
+            serve(&c1, tenants(), &serve_opts).expect("serve run")
+        });
+        json.metric(
+            "serve_steady_400req_small",
+            "events_per_s",
+            events_per_run as f64 * run.throughput(),
+        );
+        results.push(run);
+    }
 
     // --- L1/L2 PJRT path (needs `make artifacts`) ------------------------
     let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -99,7 +205,14 @@ fn main() {
             format!("{:.1e}", r.mad_s),
             format!("{:.3e}", r.throughput()),
         ]);
+        json.result(r);
     }
     table.write_csv("results/perf_hotpath.csv").unwrap();
     println!("\nwrote results/perf_hotpath.csv");
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_hotpath.json");
+    json.write(&bench_path).expect("write BENCH_hotpath.json");
+    println!("wrote {}", bench_path.display());
 }

@@ -1,5 +1,5 @@
 //! Serving scale sweep: tenants × arrival intensity on the 8-EP C5
-//! platform.
+//! platform, with a machine-readable perf trajectory.
 //!
 //! Each cell serves `T` SynthNet tenants, every one Shisha-tuned and
 //! offered `ρ × capacity/T` Poisson traffic (ρ = offered load relative to
@@ -9,17 +9,36 @@
 //! contention inflates p99 long before throughput saturates, and the
 //! online re-tuner starts migrating stages off shared EPs.
 //!
+//! Every cell runs twice — once with the event-driven settle
+//! (`PumpMode::EventDriven`, the optimised hot path) and once with the
+//! PR-1-equivalent whole-pipeline rescan (`PumpMode::FullRescan`, the
+//! in-tree baseline) — asserting byte-identical `log_hash`es, and the
+//! simulated-events-per-second of both go to `BENCH_serve.json` at the
+//! repository root so the perf trajectory is tracked from this PR onward.
+//!
 //! ```sh
-//! cargo bench --bench serve_scale
+//! cargo bench --bench serve_scale            # full grid
+//! cargo bench --bench serve_scale -- --quick # CI profile
 //! ```
 
+use std::time::Instant;
+
+use shisha::metrics::bench::JsonReport;
 use shisha::metrics::table::{latency_table, LatencyRow};
 use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::simulator;
 use shisha::platform::configs;
-use shisha::serve::{serve, shisha_config, ArrivalProcess, ServeOptions, TenantSpec};
+use shisha::serve::sweep::{self, Scenario, SweepOutcome};
+use shisha::serve::{shisha_config, PumpMode, ScenarioStats, ServeOptions};
+
+/// Latency-table row for one scenario outcome (tenants merged).
+fn latency_row(outcome: &SweepOutcome) -> LatencyRow {
+    let r = outcome.report.as_ref().expect("serve run");
+    ScenarioStats::from_report(r).latency_row(outcome.name.clone())
+}
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let plat = configs::c5();
     let net = shisha::model::networks::synthnet();
     let config = shisha_config(&net, &plat);
@@ -32,66 +51,119 @@ fn main() {
         config.describe()
     );
 
-    let mut rows = Vec::new();
-    for &n_tenants in &[1usize, 2, 4] {
-        for &rho in &[0.3f64, 0.7, 1.2] {
-            let rate = rho * cap / n_tenants as f64;
-            let tenants: Vec<_> = (0..n_tenants)
-                .map(|i| {
-                    (
-                        TenantSpec::new(
-                            format!("T{n_tenants}ρ{rho}#{i}"),
-                            net.clone(),
-                            ArrivalProcess::Poisson { rate },
-                        )
-                        .with_slo(0.250)
-                        .with_queue_capacity(64),
-                        config.clone(),
-                    )
-                })
-                .collect();
-            let opts = ServeOptions {
-                duration_s: 30.0,
-                seed: 42,
-                control_epoch_s: 5.0,
-                ..Default::default()
-            };
-            let report = serve(&plat, tenants, &opts).expect("serve run");
-            // aggregate the symmetric tenants into one row per cell
-            let mut sketch = shisha::serve::QuantileSketch::new();
-            let mut offered = 0u64;
-            let mut shed = 0u64;
-            let mut slo_ok = 0u64;
-            let mut retunes = 0u32;
-            for t in &report.tenants {
-                sketch.merge(&t.latency);
-                offered += t.offered;
-                shed += t.rejected + t.dropped;
-                slo_ok += t.slo_ok;
-                retunes += t.retunes;
-            }
-            println!(
-                "tenants={n_tenants} ρ={rho}: {} events, fairness {:.3}, {} re-tunes",
-                report.n_events,
-                report.fairness(),
-                retunes
-            );
-            rows.push(LatencyRow {
-                label: format!("{n_tenants} tenants @ ρ={rho}"),
-                p50_s: sketch.p50(),
-                p95_s: sketch.p95(),
-                p99_s: sketch.p99(),
-                max_s: sketch.max_s(),
-                goodput_rps: slo_ok as f64 / report.duration_s,
-                drop_rate: if offered == 0 { 0.0 } else { shed as f64 / offered as f64 },
-            });
-        }
+    let (tenant_grid, rho_grid, duration): (&[usize], &[f64], f64) = if quick {
+        (&[1, 2], &[0.3, 1.2], 8.0)
+    } else {
+        (&[1, 2, 4], &[0.3, 0.7, 1.2], 30.0)
+    };
+    let base = ServeOptions {
+        duration_s: duration,
+        seed: 42,
+        control_epoch_s: 5.0,
+        ..Default::default()
+    };
+    let scenarios = sweep::load_grid(&plat, &net, &config, tenant_grid, rho_grid, &[42], &base);
+    // baseline: identical scenario set under the PR-1 whole-pipeline rescan
+    let baseline: Vec<Scenario> = scenarios
+        .iter()
+        .cloned()
+        .map(|mut s| {
+            s.opts.pump = PumpMode::FullRescan;
+            s
+        })
+        .collect();
+
+    let threads = sweep::available_threads();
+    let t0 = Instant::now();
+    let fast = sweep::run_sweep(scenarios, threads);
+    let fast_wall = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let slow = sweep::run_sweep(baseline, threads);
+    let slow_wall = t1.elapsed().as_secs_f64();
+
+    let mut json = JsonReport::new();
+    json.note(
+        "serve_scale: simulated discrete events per wall-clock second, per scenario. \
+         events_per_s = event-driven settle (the optimised engine); \
+         events_per_s_full_rescan = the same engine forced onto the PR-1 \
+         whole-pipeline rescan on the same scenario (the committed baseline mode); \
+         settle_speedup is their ratio. log_hash equality between both modes is \
+         asserted before anything is written.",
+    );
+    let mut total_events = 0u64;
+    let mut fast_serve_wall = 0.0f64;
+    let mut slow_serve_wall = 0.0f64;
+    for (f, s) in fast.iter().zip(&slow) {
+        let fr = f.report.as_ref().expect("serve run");
+        let sr = s.report.as_ref().expect("baseline run");
+        assert_eq!(
+            fr.log_hash, sr.log_hash,
+            "{}: event-driven settle must reproduce the full-rescan outcome",
+            f.name
+        );
+        assert_eq!(fr.n_events, sr.n_events, "{}: event counts must match", f.name);
+        let stats = ScenarioStats::from_report(fr);
+        total_events += fr.n_events;
+        fast_serve_wall += f.wall_s;
+        slow_serve_wall += s.wall_s;
+        let ev_s = f.events_per_s().unwrap_or(0.0);
+        let ev_s_base = s.events_per_s().unwrap_or(0.0);
+        println!(
+            "{}: {} events, {:.3e} events/s (full-rescan {:.3e}, settle speedup {:.2}x), \
+             fairness {:.3}, {} re-tunes",
+            f.name,
+            fr.n_events,
+            ev_s,
+            ev_s_base,
+            if ev_s_base > 0.0 { ev_s / ev_s_base } else { 0.0 },
+            stats.fairness,
+            stats.retunes
+        );
+        json.metric(&f.name, "events", fr.n_events as f64);
+        json.metric(&f.name, "events_per_s", ev_s);
+        json.metric(&f.name, "events_per_s_full_rescan", ev_s_base);
+        json.metric(
+            &f.name,
+            "settle_speedup",
+            if ev_s_base > 0.0 { ev_s / ev_s_base } else { f64::NAN },
+        );
+        json.metric(&f.name, "goodput_rps", stats.goodput_rps);
+        json.metric(&f.name, "p99_ms", stats.p99_s * 1e3);
+        json.metric(&f.name, "drop_rate", stats.drop_rate());
+        json.metric(&f.name, "retunes", f64::from(stats.retunes));
     }
-    let table = latency_table(rows);
+
+    let agg_fast = if fast_serve_wall > 0.0 { total_events as f64 / fast_serve_wall } else { 0.0 };
+    let agg_slow = if slow_serve_wall > 0.0 { total_events as f64 / slow_serve_wall } else { 0.0 };
+    json.metric("aggregate", "events", total_events as f64);
+    json.metric("aggregate", "events_per_s", agg_fast);
+    json.metric("aggregate", "events_per_s_full_rescan", agg_slow);
+    json.metric(
+        "aggregate",
+        "settle_speedup",
+        if agg_slow > 0.0 { agg_fast / agg_slow } else { f64::NAN },
+    );
+    json.metric("aggregate", "sweep_wall_s", fast_wall);
+    json.metric("aggregate", "baseline_sweep_wall_s", slow_wall);
+    json.metric("aggregate", "threads", threads as f64);
+
+    let table = latency_table(fast.iter().map(latency_row));
     println!("\n{}", table.to_markdown());
+    println!(
+        "aggregate: {:.3e} simulated events/s (full-rescan baseline {:.3e}, {:.2}x)",
+        agg_fast,
+        agg_slow,
+        if agg_slow > 0.0 { agg_fast / agg_slow } else { 0.0 }
+    );
     if let Err(e) = table.write_csv("results/serve_scale.csv") {
         eprintln!("warning: could not write results/serve_scale.csv: {e}");
     } else {
         println!("wrote results/serve_scale.csv");
     }
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_serve.json");
+    json.write(&bench_path).expect("write BENCH_serve.json");
+    println!("wrote {}", bench_path.display());
 }

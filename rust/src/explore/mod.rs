@@ -139,7 +139,16 @@ impl<'a> Evaluator<'a> {
         self.n_evals += 1;
         let improved = self.best.as_ref().map_or(true, |(_, b)| tp > *b);
         if improved {
-            self.best = Some((cfg.clone(), tp));
+            // clone_from reuses the stored config's Vec buffers, so the
+            // best-so-far update in explorer inner loops is allocation-free
+            // after the first improvement
+            match &mut self.best {
+                Some((c, b)) => {
+                    c.clone_from(cfg);
+                    *b = tp;
+                }
+                None => self.best = Some((cfg.clone(), tp)),
+            }
             self.trace.push(TracePoint {
                 time_s: self.virtual_time_s,
                 throughput: tp,
@@ -185,18 +194,23 @@ impl<'a> Evaluator<'a> {
     }
 
     /// Build the final [`Solution`] for an explorer.
-    pub fn solution(&self, algo: &str) -> Solution {
+    ///
+    /// Moves the convergence trace out instead of cloning it (a long run's
+    /// trace is the largest evaluator allocation); a second call on the
+    /// same evaluator therefore returns an empty trace. Every explorer
+    /// calls this exactly once, at the end of its run.
+    pub fn solution(&mut self, algo: &str) -> Solution {
         let (cfg, tp) = self
             .best
-            .clone()
+            .as_ref()
             .expect("solution() requires at least one evaluation");
         Solution {
             algorithm: algo.to_string(),
-            best_config: cfg,
-            best_throughput: tp,
+            best_config: cfg.clone(),
+            best_throughput: *tp,
             n_evals: self.n_evals,
             virtual_time_s: self.virtual_time_s,
-            trace: self.trace.clone(),
+            trace: std::mem::take(&mut self.trace),
         }
     }
 }

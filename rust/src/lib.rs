@@ -51,7 +51,37 @@
 //! Metrics per tenant: p50/p95/p99/max latency (streaming quantile
 //! sketch), goodput, drop rate, per-epoch time series, and Jain fairness
 //! across tenants. See `shisha serve --help` output, the `serving_storm`
-//! example, and `benches/serve_scale.rs`.
+//! example, and `benches/serve_scale.rs`. Independent scenario grids
+//! (tenant mixes × load factors × seeds) fan out across CPU cores via
+//! [`serve::sweep`] (`shisha serve --sweep`), with outcomes that are
+//! invariant to thread count.
+//!
+//! ## Performance
+//!
+//! The serving event loop is the hottest code in the crate; its steady
+//! state is **allocation-free** by design:
+//!
+//! * requests live in a per-tenant slab arena with a free-slot list;
+//!   stage queues and in-flight batches carry `u32` indices, and batch
+//!   buffers are recycled through a per-tenant pool;
+//! * after each event only the stages that event could have enabled are
+//!   settled (a dirty-stage bitmask worklist, processed in the same
+//!   descending order as a whole-pipeline rescan, so outcomes are
+//!   bit-identical — [`serve::PumpMode::FullRescan`] keeps the rescan as
+//!   the golden reference, pinned by `tests/serve_golden.rs`);
+//! * warm re-tunes overwrite a preallocated scratch database
+//!   ([`perfdb::PerfDb::copy_scaled_from`]) instead of cloning the cost
+//!   table every control epoch, and [`explore::Evaluator`] updates its
+//!   best-so-far configuration via `clone_from` (no allocation after the
+//!   first improvement).
+//!
+//! The perf trajectory is machine-readable: `cargo bench --bench
+//! serve_scale` writes `BENCH_serve.json` (simulated events/s per
+//! scenario, plus the full-rescan baseline and their ratio) and `cargo
+//! bench --bench perf_hotpath` writes `BENCH_hotpath.json` (ns/op and
+//! ops/s per hot-path case, evals/s for re-tunes) — both at the
+//! repository root; CI runs the `--quick` profiles and uploads them as
+//! artifacts.
 //!
 //! ## Quick tour
 //!

@@ -75,6 +75,10 @@ fn print_usage() {
                        [--no-control] [--no-contention] [--csv FILE]\n\
                        SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
                              | piecewise:R@T,R@T,.. | trace:FILE\n\
+           serve --sweep  parallel scenario grid: [--nets synthnet] [--platform c5]\n\
+                       [--tenant-grid 1,2,4] [--rho-grid 0.3,0.7,1.2] [--seeds 42]\n\
+                       [--threads N] [--duration S] [--epoch S] [--full-rescan]\n\
+                       [--no-control] [--no-contention] [--csv FILE]\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
@@ -191,6 +195,9 @@ fn cmd_explore(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has_flag("sweep") {
+        return cmd_serve_sweep(args);
+    }
     args.expect_known(&[
         "tenants",
         "nets",
@@ -289,6 +296,170 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("csv") {
         table.write_csv(path).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated list of values (`"1,2,4"`).
+fn parse_list<T: std::str::FromStr>(key: &str, s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    let out: Result<Vec<T>> = s
+        .split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {x:?}: {e}"))
+        })
+        .collect();
+    let out = out?;
+    if out.is_empty() {
+        bail!("--{key} must not be empty");
+    }
+    Ok(out)
+}
+
+/// `serve --sweep`: run a tenant-count × offered-load × seed scenario grid
+/// across CPU cores and report deterministic per-scenario outcomes plus
+/// wall-clock event rates.
+fn cmd_serve_sweep(args: &Args) -> Result<()> {
+    use shisha::serve::sweep;
+    args.expect_known(&[
+        "sweep",
+        "nets",
+        "platform",
+        "duration",
+        "epoch",
+        "seeds",
+        "tenant-grid",
+        "rho-grid",
+        "threads",
+        "full-rescan",
+        "no-control",
+        "no-contention",
+        "csv",
+    ])?;
+    let plat = configs::by_name(args.get_or("platform", "c5")).context("unknown platform")?;
+    let net_names: Vec<String> = args
+        .get_or("nets", "synthnet")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let tenant_grid: Vec<usize> = parse_list("tenant-grid", args.get_or("tenant-grid", "1,2,4"))?;
+    let rho_grid: Vec<f64> = parse_list("rho-grid", args.get_or("rho-grid", "0.3,0.7,1.2"))?;
+    let seeds: Vec<u64> = parse_list("seeds", args.get_or("seeds", "42"))?;
+    if tenant_grid.iter().any(|&t| t == 0) {
+        bail!("--tenant-grid entries must be ≥ 1");
+    }
+    let threads: usize = args.parsed_or("threads", sweep::available_threads())?;
+    let base = shisha::serve::ServeOptions {
+        duration_s: args.parsed_or("duration", 20.0)?,
+        control: !args.has_flag("no-control"),
+        control_epoch_s: args.parsed_or("epoch", 5.0)?,
+        contention: !args.has_flag("no-contention"),
+        pump: if args.has_flag("full-rescan") {
+            shisha::serve::PumpMode::FullRescan
+        } else {
+            shisha::serve::PumpMode::EventDriven
+        },
+        ..Default::default()
+    };
+
+    // one grid per network, concatenated; scenario names embed the net name
+    let mut scenarios = Vec::new();
+    for net_name in &net_names {
+        let net = networks::by_name(net_name)
+            .with_context(|| format!("unknown network {net_name:?}"))?;
+        let config = shisha::serve::shisha_config(&net, &plat);
+        println!("  {}: Shisha config {}", net.name, config.describe());
+        scenarios.extend(sweep::load_grid(
+            &plat,
+            &net,
+            &config,
+            &tenant_grid,
+            &rho_grid,
+            &seeds,
+            &base,
+        ));
+    }
+    println!(
+        "sweeping {} scenario(s) of {} network(s) on {} ({} EPs) across {} thread(s)",
+        scenarios.len(),
+        net_names.len(),
+        plat.name,
+        plat.n_eps(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = sweep::run_sweep(scenarios, threads);
+    let sweep_wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new([
+        "scenario",
+        "offered",
+        "events",
+        "log_hash",
+        "goodput (req/s)",
+        "p99 (ms)",
+        "drop rate",
+        "re-tunes",
+    ]);
+    let mut total_events = 0u64;
+    let mut serve_wall = 0.0f64;
+    let mut first_err: Option<String> = None;
+    for o in &outcomes {
+        match &o.report {
+            Ok(r) => {
+                let stats = shisha::serve::ScenarioStats::from_report(r);
+                total_events += r.n_events;
+                serve_wall += o.wall_s;
+                table.row([
+                    o.name.clone(),
+                    stats.offered.to_string(),
+                    r.n_events.to_string(),
+                    format!("{:016x}", r.log_hash),
+                    fnum(stats.goodput_rps, 2),
+                    fnum(stats.p99_s * 1e3, 3),
+                    format!("{:.3}%", 100.0 * stats.drop_rate()),
+                    stats.retunes.to_string(),
+                ]);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(format!("{}: {e:#}", o.name));
+                }
+                table.row([
+                    o.name.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "ERROR".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.to_markdown());
+    if serve_wall > 0.0 {
+        println!(
+            "{} events total; {:.3e} events/s per core, {:.3e} events/s across the sweep \
+             ({:.2}s wall, {:.2}s summed serve time)",
+            total_events,
+            total_events as f64 / serve_wall,
+            total_events as f64 / sweep_wall.max(1e-12),
+            sweep_wall,
+            serve_wall
+        );
+    }
+    if let Some(path) = args.get("csv") {
+        table.write_csv(path).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(e) = first_err {
+        bail!("sweep: scenario failed: {e}");
     }
     Ok(())
 }

@@ -3,6 +3,9 @@
 //! The offline build environment does not ship criterion (DESIGN.md §5), so
 //! the `cargo bench` targets use this small harness: warmup, fixed-duration
 //! sampling, median + MAD reporting, and CSV output under `results/`.
+//! [`JsonReport`] additionally emits the machine-readable `BENCH_*.json`
+//! files at the repository root that track the perf trajectory across PRs
+//! (CI runs the quick bench profiles and uploads them as artifacts).
 
 use super::{fmt_duration, Stats, Timer};
 use std::hint::black_box;
@@ -102,6 +105,124 @@ impl Bencher {
     }
 }
 
+/// Machine-readable benchmark report (`BENCH_*.json`).
+///
+/// One flat JSON object per file:
+///
+/// ```json
+/// {
+///   "schema": "shisha-bench-v1",
+///   "note": "free text: units, baseline semantics",
+///   "cases": { "case_name": { "metric": 1.23e4, ... }, ... }
+/// }
+/// ```
+///
+/// Metrics are plain `f64`s (ns/op, ops/s, events/s, …); non-finite
+/// values serialise as `null`. No serde in the offline environment, so
+/// the writer is hand-rolled — keep case and metric names free of
+/// exotic characters and the output stays trivially parseable.
+#[derive(Debug, Clone, Default)]
+pub struct JsonReport {
+    note: Option<String>,
+    cases: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl JsonReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach a free-text note (units, how to read the baselines).
+    pub fn note(&mut self, text: impl Into<String>) -> &mut Self {
+        self.note = Some(text.into());
+        self
+    }
+
+    /// Record one metric under `case`, creating the case on first use.
+    pub fn metric(&mut self, case: &str, key: &str, value: f64) -> &mut Self {
+        if let Some((_, metrics)) = self.cases.iter_mut().find(|(c, _)| c == case) {
+            metrics.push((key.to_string(), value));
+        } else {
+            self.cases.push((case.to_string(), vec![(key.to_string(), value)]));
+        }
+        self
+    }
+
+    /// Record a [`BenchResult`] under its own name: ns/op, MAD and ops/s.
+    pub fn result(&mut self, r: &BenchResult) -> &mut Self {
+        self.metric(&r.name, "ns_per_op", r.median_s * 1e9);
+        self.metric(&r.name, "mad_ns", r.mad_s * 1e9);
+        self.metric(&r.name, "ops_per_s", r.throughput())
+    }
+
+    /// Render the report as a JSON object string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"shisha-bench-v1\"");
+        if let Some(note) = &self.note {
+            out.push_str(",\n  \"note\": ");
+            out.push_str(&json_str(note));
+        }
+        out.push_str(",\n  \"cases\": {");
+        for (i, (case, metrics)) in self.cases.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    ");
+            out.push_str(&json_str(case));
+            out.push_str(": {");
+            for (j, (key, value)) in metrics.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&json_str(key));
+                out.push_str(": ");
+                out.push_str(&json_num(*value));
+            }
+            out.push('}');
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Write the JSON form to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        // JSON has no NaN/Infinity; null keeps downstream parsers alive
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +242,44 @@ mod tests {
         let cheap = b.run("cheap", || (0..10u64).sum::<u64>());
         let costly = b.run("costly", || (0..100_000u64).sum::<u64>());
         assert!(costly.median_s > cheap.median_s);
+    }
+
+    #[test]
+    fn json_report_renders_valid_shape() {
+        let mut j = JsonReport::new();
+        j.note("units: ns per \"op\"");
+        j.metric("case_a", "ns_per_op", 123.0);
+        j.metric("case_a", "ops_per_s", 1.5e6);
+        j.metric("case_b", "events_per_s", f64::INFINITY);
+        let s = j.to_json();
+        assert!(s.contains("\"schema\": \"shisha-bench-v1\""), "{s}");
+        assert!(s.contains("\"case_a\""), "{s}");
+        assert!(s.contains("\"ns_per_op\": 1.23e2"), "{s}");
+        assert!(s.contains("\\\"op\\\""), "quotes must be escaped: {s}");
+        assert!(s.contains("null"), "non-finite must serialise as null: {s}");
+        assert_eq!(s.matches('{').count(), s.matches('}').count(), "balanced braces: {s}");
+    }
+
+    #[test]
+    fn json_report_records_bench_results() {
+        let mut j = JsonReport::new();
+        let r = BenchResult { name: "r".into(), median_s: 2e-6, mad_s: 1e-7, iters: 10 };
+        j.result(&r);
+        let s = j.to_json();
+        assert!(s.contains("\"r\""), "{s}");
+        for key in ["ns_per_op", "mad_ns", "ops_per_s"] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing {key}: {s}");
+        }
+        assert!(!s.contains("null"), "finite metrics must serialise as numbers: {s}");
+    }
+
+    #[test]
+    fn json_report_writes_file() {
+        let mut j = JsonReport::new();
+        j.metric("c", "v", 1.0);
+        let path = std::env::temp_dir().join("shisha_bench_json_test/BENCH_test.json");
+        j.write(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with('{') && s.trim_end().ends_with('}'));
     }
 }

@@ -124,6 +124,41 @@ impl PerfDb {
             *p *= factor;
         }
     }
+
+    /// Overwrite `self` with `src` scaled per EP: row `ep` becomes
+    /// `src`'s row times `factors[ep]` (`1.0` rows are byte-copied).
+    ///
+    /// `self` must have the same shape as `src` (build it once with
+    /// `src.clone()`). All writes go into `self`'s existing buffers, so a
+    /// warm caller performs **no heap allocation** — this is the serving
+    /// engine's per-epoch "observed database" path, which previously
+    /// cloned the whole table every control epoch. The arithmetic is
+    /// exactly `clone()` + [`PerfDb::scale_ep`] (one multiply per entry,
+    /// prefix sums scaled directly rather than recomputed), so results are
+    /// bit-identical to the clone-per-epoch implementation.
+    pub fn copy_scaled_from(&mut self, src: &PerfDb, factors: &[f64]) {
+        assert_eq!(self.n_layers, src.n_layers, "copy_scaled_from: layer-count mismatch");
+        assert_eq!(self.times.len(), src.times.len(), "copy_scaled_from: EP-count mismatch");
+        assert_eq!(factors.len(), src.times.len(), "copy_scaled_from: one factor per EP");
+        for ((dst, s), &f) in self.times.iter_mut().zip(&src.times).zip(factors) {
+            if f == 1.0 {
+                dst.copy_from_slice(s);
+            } else {
+                for (d, x) in dst.iter_mut().zip(s) {
+                    *d = x * f;
+                }
+            }
+        }
+        for ((dst, s), &f) in self.prefix.iter_mut().zip(&src.prefix).zip(factors) {
+            if f == 1.0 {
+                dst.copy_from_slice(s);
+            } else {
+                for (d, x) in dst.iter_mut().zip(s) {
+                    *d = x * f;
+                }
+            }
+        }
+    }
 }
 
 /// Convenience: time of a single layer on a given EP without a database
@@ -198,6 +233,49 @@ mod tests {
         let before = db.range_time(2, 7, 1);
         db.scale_ep(1, 2.0);
         assert!((db.range_time(2, 7, 1) - 2.0 * before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_scaled_matches_clone_plus_scale_exactly() {
+        let (_, plat, db) = setup();
+        let mut factors = vec![1.0; plat.n_eps()];
+        factors[1] = 1.75;
+        factors[3] = 3.2;
+        // reference: the old per-epoch path (clone, then scale_ep per EP)
+        let mut want = db.clone();
+        for (ep, &f) in factors.iter().enumerate() {
+            if f != 1.0 {
+                want.scale_ep(ep, f);
+            }
+        }
+        // scratch path: reuse an existing same-shape database
+        let mut got = db.clone();
+        got.scale_ep(0, 9.9); // dirty it; copy must fully overwrite
+        got.copy_scaled_from(&db, &factors);
+        for ep in 0..db.n_eps() {
+            for l in 0..db.n_layers() {
+                assert_eq!(
+                    got.layer_time(l, ep).to_bits(),
+                    want.layer_time(l, ep).to_bits(),
+                    "t[{ep}][{l}] must be bit-identical"
+                );
+            }
+            for lo in 0..db.n_layers() {
+                assert_eq!(
+                    got.range_time(lo, db.n_layers(), ep).to_bits(),
+                    want.range_time(lo, db.n_layers(), ep).to_bits(),
+                    "prefix[{ep}][{lo}] must be bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn copy_scaled_rejects_shape_mismatch() {
+        let (_, _, db) = setup();
+        let mut small = PerfDb::from_rows(vec![vec![1.0], vec![2.0]]);
+        small.copy_scaled_from(&db, &[1.0, 1.0, 1.0, 1.0]);
     }
 
     #[test]

@@ -20,12 +20,27 @@ pub mod space;
 use crate::platform::{EpId, Platform};
 
 /// A pipeline configuration: stage sizes + stage-to-EP assignment.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, PartialEq, Eq, Hash)]
 pub struct PipelineConfig {
     /// Layers per stage; `stages.len() == N`, `sum(stages) == L`, all ≥ 1.
     pub stages: Vec<usize>,
     /// EP assigned to each stage; distinct, `assignment.len() == N`.
     pub assignment: Vec<EpId>,
+}
+
+// Hand-written so `clone_from` reuses the destination's Vec allocations:
+// the evaluator's best-so-far update (`Evaluator::evaluate`) runs in every
+// explorer inner loop, and the derived impl would discard and reallocate
+// both vectors on each improvement.
+impl Clone for PipelineConfig {
+    fn clone(&self) -> Self {
+        Self { stages: self.stages.clone(), assignment: self.assignment.clone() }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        self.stages.clone_from(&source.stages);
+        self.assignment.clone_from(&source.assignment);
+    }
 }
 
 /// Validation failure for a [`PipelineConfig`].

@@ -16,7 +16,7 @@
 use super::PipelineConfig;
 use crate::model::Network;
 use crate::perfdb::PerfDb;
-use crate::platform::Platform;
+use crate::platform::{EpId, Platform};
 
 /// Per-stage evaluation breakdown.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +50,42 @@ pub struct PipelineEval {
     pub latency_s: f64,
 }
 
+/// Compute and transfer time of the contiguous stage `[lo, hi)` served on
+/// `ep`, receiving its input from `from_ep` (`None` for the entry stage),
+/// with `batch` images per pipeline slot.
+///
+/// This is the **single source of truth** for per-stage service math: the
+/// steady-state evaluators below and the serving engine's dispatch path
+/// ([`crate::serve::engine`]) both call it, so the discrete-event
+/// contention model cannot silently drift from the analytic model. The
+/// transfer term charges the previous stage's last layer's output crossing
+/// the NoC (`batch` images per slot); `db` must already be batch-aware for
+/// the compute term (see [`crate::perfdb::batch`]).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn stage_service_time(
+    net: &Network,
+    plat: &Platform,
+    db: &PerfDb,
+    lo: usize,
+    hi: usize,
+    ep: EpId,
+    from_ep: Option<EpId>,
+    batch: u64,
+) -> (f64, f64) {
+    let compute_s = db.range_time(lo, hi, ep);
+    let transfer_s = match from_ep {
+        None => 0.0,
+        Some(prev_ep) => crate::platform::topology::transfer_time(
+            plat,
+            prev_ep,
+            ep,
+            net.layers[lo - 1].output_bytes() * batch,
+        ),
+    };
+    (compute_s, transfer_s)
+}
+
 /// Evaluate `cfg` on `net`/`plat` using the time database `db`.
 ///
 /// `db` rows must correspond to `plat.eps` and columns to `net.layers`.
@@ -59,14 +95,8 @@ pub fn evaluate(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfi
     let mut stages = Vec::with_capacity(bounds.len());
     for (si, &(lo, hi)) in bounds.iter().enumerate() {
         let ep = cfg.assignment[si];
-        let compute_s = db.range_time(lo, hi, ep);
-        let transfer_s = if si == 0 {
-            0.0
-        } else {
-            let prev_ep = cfg.assignment[si - 1];
-            // the previous stage's last layer's output crosses the NoC
-            crate::platform::topology::transfer_time(plat, prev_ep, ep, net.layers[lo - 1].output_bytes())
-        };
+        let from_ep = if si == 0 { None } else { Some(cfg.assignment[si - 1]) };
+        let (compute_s, transfer_s) = stage_service_time(net, plat, db, lo, hi, ep, from_ep, 1);
         stages.push(StageEval { stage: si, compute_s, transfer_s });
     }
     let bottleneck_s = stages.iter().map(StageEval::total).fold(0.0, f64::max);
@@ -88,11 +118,9 @@ pub fn throughput(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineCon
     for (si, &n) in cfg.stages.iter().enumerate() {
         let hi = lo + n;
         let ep = cfg.assignment[si];
-        let mut t = db.range_time(lo, hi, ep);
-        if si > 0 {
-            let prev_ep = cfg.assignment[si - 1];
-            t += crate::platform::topology::transfer_time(plat, prev_ep, ep, net.layers[lo - 1].output_bytes());
-        }
+        let from_ep = if si == 0 { None } else { Some(cfg.assignment[si - 1]) };
+        let (compute_s, transfer_s) = stage_service_time(net, plat, db, lo, hi, ep, from_ep, 1);
+        let t = compute_s + transfer_s;
         if t > bottleneck {
             bottleneck = t;
         }
@@ -159,6 +187,24 @@ mod tests {
             let fast = throughput(&net, &plat, &db, &cfg);
             assert!((full - fast).abs() < 1e-12 * full.max(1.0), "{}", cfg.describe());
         }
+    }
+
+    #[test]
+    fn stage_service_time_is_the_shared_formula() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let eval = evaluate(&net, &plat, &db, &cfg);
+        let (c0, x0) = stage_service_time(&net, &plat, &db, 0, 9, 0, None, 1);
+        assert_eq!(c0, eval.stages[0].compute_s);
+        assert_eq!(x0, 0.0);
+        let (c1, x1) = stage_service_time(&net, &plat, &db, 9, 18, 2, Some(0), 1);
+        assert_eq!(c1, eval.stages[1].compute_s);
+        assert_eq!(x1, eval.stages[1].transfer_s);
+        // batching multiplies the transferred bytes, not the compute term
+        // (the engine passes a batch-aware db for compute)
+        let (c1b, x1b) = stage_service_time(&net, &plat, &db, 9, 18, 2, Some(0), 4);
+        assert_eq!(c1b, c1);
+        assert!(x1b > x1, "batched transfer must move more bytes");
     }
 
     #[test]

@@ -9,10 +9,12 @@
 //!   deterministic for a fixed seed.
 //! * **Stages** — each tenant stage owns a bounded FIFO queue and serves at
 //!   most one batch at a time. Service time comes from the tenant's
-//!   batch-aware [`PerfDb`] plus the inter-chiplet transfer cost, exactly
-//!   as in [`crate::pipeline::simulator`], so with one tenant and no
-//!   contention the engine's steady-state throughput equals the analytic
-//!   `1/max_stage_time`.
+//!   batch-aware [`PerfDb`] plus the inter-chiplet transfer cost, through
+//!   the **shared** per-stage formula
+//!   [`crate::pipeline::simulator::stage_service_time`], so with one tenant
+//!   and no contention the engine's steady-state throughput equals the
+//!   analytic `1/max_stage_time` and the contention model cannot drift from
+//!   the analytic model.
 //! * **Contention** — EPs are time-sliced: a batch dispatched while `k`
 //!   other services are active on its EP runs `k+1`× slower (the factor is
 //!   frozen at dispatch, a standard processor-sharing approximation);
@@ -33,6 +35,31 @@
 //!   reconfiguration penalty. Re-binning on a new stage structure may
 //!   transiently overshoot queue bounds; the bound is a steady-state
 //!   admission bound.
+//!
+//! ## Hot-path design (§Perf)
+//!
+//! The event loop is the hottest code in the crate, so its steady state is
+//! **allocation-free**:
+//!
+//! * Requests live in a per-tenant **slab arena** (`TenantRt::arena`) with
+//!   a free-slot list; stage queues and in-flight batches carry `u32`
+//!   arena indices, and the `Vec<u32>` batch buffers are recycled through
+//!   a per-tenant pool. Partial downstream delivery advances a cursor
+//!   instead of shifting the buffer.
+//! * After each event the pipeline is **settled event-driven**: only the
+//!   stages the event could have enabled (and, transitively, their
+//!   neighbours) are visited, via a dirty-stage bitmask processed in
+//!   descending stage order — the exact action order of the old
+//!   whole-pipeline fixpoint rescan, without touching quiescent stages.
+//!   [`ServeOptions::pump`] can select [`PumpMode::FullRescan`] to force
+//!   the old scan; golden tests assert both modes produce byte-identical
+//!   event streams and reports.
+//! * Warm re-tunes reuse a preallocated scratch [`PerfDb`]
+//!   ([`PerfDb::copy_scaled_from`]) instead of cloning the database every
+//!   control epoch.
+//!
+//! `benches/serve_scale.rs` tracks simulated events/second per scenario in
+//! `BENCH_serve.json` at the repository root.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, VecDeque};
@@ -41,13 +68,34 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::AdaptiveController;
 use crate::perfdb::{batch, CostModel, PerfDb};
-use crate::pipeline::PipelineConfig;
-use crate::platform::{topology, Platform};
+use crate::pipeline::{simulator, PipelineConfig};
+use crate::platform::Platform;
 use crate::rng::Xoshiro256;
 
 use super::arrivals::ArrivalSampler;
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
+
+/// How the engine settles a tenant's pipeline after each event.
+///
+/// Both modes produce **identical** simulated outcomes (event stream,
+/// `log_hash`, reports); `FullRescan` exists as the always-correct
+/// reference the golden determinism tests pin [`EventDriven`] against.
+///
+/// [`EventDriven`]: PumpMode::EventDriven
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PumpMode {
+    /// Visit only the stages an event could have enabled (plus the
+    /// neighbours each action enables, transitively). The fast default.
+    #[default]
+    EventDriven,
+    /// The PR-1 fixpoint loop, reproduced verbatim: scan **every** stage
+    /// in descending order, and repeat whole-pipeline passes until one
+    /// makes no progress — independent of the event-driven dirty-mask
+    /// propagation, so the golden tests comparing the two modes catch a
+    /// missed enablement channel instead of inheriting it.
+    FullRescan,
+}
 
 /// Engine-level options (tenant-level knobs live on [`TenantSpec`]).
 #[derive(Debug, Clone)]
@@ -73,6 +121,8 @@ pub struct ServeOptions {
     pub record_log: bool,
     /// Safety valve: abort (with `truncated = true`) past this many events.
     pub max_events: u64,
+    /// Settling strategy; see [`PumpMode`].
+    pub pump: PumpMode,
 }
 
 impl Default for ServeOptions {
@@ -88,11 +138,13 @@ impl Default for ServeOptions {
             contention: true,
             record_log: false,
             max_events: 20_000_000,
+            pump: PumpMode::EventDriven,
         }
     }
 }
 
-/// One request travelling through a tenant's pipeline.
+/// One request travelling through a tenant's pipeline. Lives in the
+/// tenant's slab arena; queues and batches refer to it by index.
 #[derive(Debug, Clone)]
 struct Request {
     id: u64,
@@ -104,7 +156,11 @@ struct Request {
 /// A batch being serviced (or completed and awaiting downstream room).
 #[derive(Debug, Clone)]
 struct InFlight {
-    reqs: Vec<Request>,
+    /// Arena indices of the batch; `reqs[..taken]` are already delivered
+    /// downstream (partial delivery under backpressure).
+    reqs: Vec<u32>,
+    /// Delivery cursor into `reqs`.
+    taken: usize,
     ep: usize,
     uses_link: bool,
     done_s: f64,
@@ -114,9 +170,16 @@ struct InFlight {
     layers_after: usize,
 }
 
+impl InFlight {
+    /// Requests not yet delivered downstream.
+    fn pending(&self) -> usize {
+        self.reqs.len() - self.taken
+    }
+}
+
 #[derive(Debug, Default)]
 struct StageRt {
-    queue: VecDeque<Request>,
+    queue: VecDeque<u32>,
     busy: Option<InFlight>,
 }
 
@@ -170,6 +233,10 @@ pub struct TenantReport {
     pub in_flight: u64,
     /// Largest per-stage queue length observed (steady-state admissions).
     pub max_queue_len: usize,
+    /// Request-slab high-water mark: the most requests simultaneously
+    /// alive (queued or in service). Slot recycling keeps this bounded by
+    /// queue depth × stages, not by `offered`.
+    pub arena_peak: usize,
     /// Latency sketch over completed requests.
     pub latency: QuantileSketch,
     /// Per-epoch time series.
@@ -347,8 +414,23 @@ struct TenantRt {
     /// Reconfiguration generation; stale StageDone events are ignored.
     gen: u64,
     frozen_until: f64,
+    /// A reconfiguration froze dispatch; the first settle at or past
+    /// `frozen_until` must reconsider every stage (dispatch was globally
+    /// blocked, so any stage may have become runnable).
+    thaw_pending: bool,
     /// Observed per-EP slowdown EWMA (1.0 = uncontended).
     ep_slow: Vec<f64>,
+    /// Request slab; queues and batches hold indices into it.
+    arena: Vec<Request>,
+    /// Recycled arena slots of completed/dropped requests.
+    free_slots: Vec<u32>,
+    /// Recycled batch buffers (at most one per stage alive at a time).
+    buf_pool: Vec<Vec<u32>>,
+    /// Preallocated observed database for warm re-tunes; overwritten in
+    /// place each control epoch (no per-epoch clone).
+    scratch_db: PerfDb,
+    /// Preallocated per-EP factor buffer feeding `scratch_db`.
+    scale_buf: Vec<f64>,
     next_id: u64,
     // cumulative counters
     offered: u64,
@@ -376,8 +458,7 @@ impl TenantRt {
         self.stages
             .iter()
             .map(|s| {
-                s.queue.len() as u64
-                    + s.busy.as_ref().map_or(0, |inf| inf.reqs.len() as u64)
+                s.queue.len() as u64 + s.busy.as_ref().map_or(0, |inf| inf.pending() as u64)
             })
             .sum()
     }
@@ -387,6 +468,26 @@ impl TenantRt {
     /// a non-empty queue means demand outruns service.
     fn queued(&self) -> u64 {
         self.stages.iter().map(|s| s.queue.len() as u64).sum()
+    }
+
+    /// Place a new request in the arena, reusing a freed slot when one
+    /// exists (steady state: no allocation).
+    fn alloc(&mut self, id: u64, arrival_s: f64) -> u32 {
+        let req = Request { id, arrival_s, layers_done: 0 };
+        if let Some(ix) = self.free_slots.pop() {
+            self.arena[ix as usize] = req;
+            ix
+        } else {
+            let ix = self.arena.len() as u32;
+            self.arena.push(req);
+            ix
+        }
+    }
+
+    /// Return a drained batch buffer to the pool.
+    fn recycle(&mut self, mut buf: Vec<u32>) {
+        buf.clear();
+        self.buf_pool.push(buf);
     }
 }
 
@@ -406,8 +507,8 @@ fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
     if finishes {
         let inf = t.stages[si].busy.take().expect("checked above");
         let slo = t.spec.slo_latency_s;
-        for req in inf.reqs {
-            let lat = inf.done_s - req.arrival_s;
+        for &ix in &inf.reqs[inf.taken..] {
+            let lat = inf.done_s - t.arena[ix as usize].arrival_s;
             t.completed += 1;
             t.ep_completed += 1;
             if lat <= slo {
@@ -415,7 +516,9 @@ fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
                 t.ep_slo_ok += 1;
             }
             t.latency.record(lat);
+            t.free_slots.push(ix);
         }
+        t.recycle(inf.reqs);
         return true;
     }
     if si + 1 >= t.stages.len() {
@@ -430,14 +533,16 @@ fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
         let cur = &mut left[si];
         let next = &mut right[0];
         let inf = cur.busy.as_mut().expect("checked above");
-        while !inf.reqs.is_empty() && next.queue.len() < cap {
-            next.queue.push_back(inf.reqs.remove(0));
+        while inf.taken < inf.reqs.len() && next.queue.len() < cap {
+            next.queue.push_back(inf.reqs[inf.taken]);
+            inf.taken += 1;
             moved = true;
         }
-        inf.reqs.is_empty()
+        inf.taken == inf.reqs.len()
     };
     if drained {
-        t.stages[si].busy = None;
+        let inf = t.stages[si].busy.take().expect("checked above");
+        t.recycle(inf.reqs);
     }
     if moved {
         let l = t.stages[si + 1].queue.len();
@@ -469,20 +574,25 @@ fn dispatch_stage(
     let b = t.spec.batch.min(t.stages[si].queue.len());
     let (lo, hi) = t.bounds[si];
     let ep = t.config.assignment[si];
-    let compute = t.dbs[b - 1].range_time(lo, hi, ep);
-    let transfer = if si == 0 {
-        0.0
-    } else {
-        let prev = t.config.assignment[si - 1];
-        topology::transfer_time(plat, prev, ep, t.spec.net.layers[lo - 1].output_bytes() * b as u64)
-    };
+    let from_ep = if si == 0 { None } else { Some(t.config.assignment[si - 1]) };
+    let (compute, transfer) = simulator::stage_service_time(
+        &t.spec.net,
+        plat,
+        &t.dbs[b - 1],
+        lo,
+        hi,
+        ep,
+        from_ep,
+        b as u64,
+    );
     let uses_link = transfer > 0.0;
     let ep_factor = if sh.contention { (sh.ep_busy[ep] + 1) as f64 } else { 1.0 };
     let link_factor =
         if sh.contention && uses_link { (sh.link_busy + 1) as f64 } else { 1.0 };
     let base = compute + transfer;
     let actual = compute * ep_factor + transfer * link_factor;
-    let mut reqs = Vec::with_capacity(b);
+    let mut reqs = t.buf_pool.pop().unwrap_or_default();
+    debug_assert!(reqs.is_empty(), "pooled buffers are returned drained");
     for _ in 0..b {
         reqs.push(t.stages[si].queue.pop_front().expect("len checked"));
     }
@@ -492,26 +602,132 @@ fn dispatch_stage(
     }
     let done = now + actual;
     let factor = if base > 0.0 { actual / base } else { 1.0 };
-    t.stages[si].busy =
-        Some(InFlight { reqs, ep, uses_link, done_s: done, factor, completed: false, layers_after: hi });
+    t.stages[si].busy = Some(InFlight {
+        reqs,
+        taken: 0,
+        ep,
+        uses_link,
+        done_s: done,
+        factor,
+        completed: false,
+        layers_after: hi,
+    });
     if done <= duration_s {
         sh.schedule(done, EvKind::StageDone { tenant: ti, stage: si, gen: t.gen });
     }
     true
 }
 
-/// Settle a tenant's pipeline after any state change: repeatedly deliver
-/// completed batches and dispatch idle stages until a fixpoint.
-fn pump(t: &mut TenantRt, sh: &mut Shared, plat: &Platform, ti: usize, now: f64, duration_s: f64) {
+/// Bitmask with one bit per stage (the engine caps pipelines at 64 stages).
+fn all_mask(n_stages: usize) -> u64 {
+    if n_stages >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n_stages) - 1
+    }
+}
+
+/// Debug-only oracle: could stage `si` make any progress right now?
+/// Mirrors the `deliver_stage` / `dispatch_stage` preconditions; `settle`
+/// asserts it is false everywhere on exit, so a missed enablement channel
+/// fails loudly under `cargo test` instead of silently stalling a queue.
+#[cfg(debug_assertions)]
+fn can_progress(t: &TenantRt, si: usize, now: f64) -> bool {
+    let n_layers = t.spec.net.len();
+    if let Some(inf) = &t.stages[si].busy {
+        if inf.completed {
+            if inf.layers_after >= n_layers {
+                return true;
+            }
+            if si + 1 < t.stages.len()
+                && inf.pending() > 0
+                && t.stages[si + 1].queue.len() < t.spec.queue_capacity
+            {
+                return true;
+            }
+        }
+        false
+    } else {
+        now >= t.frozen_until && !t.stages[si].queue.is_empty()
+    }
+}
+
+/// Settle a tenant's pipeline after a state change: repeatedly deliver
+/// completed batches and dispatch idle stages until a fixpoint, visiting
+/// only stages marked dirty (plus the neighbours each action enables).
+///
+/// `dirty` seeds the worklist: bit `s` means stage `s` may have been
+/// enabled by the triggering event (arrival → bit 0, stage completion →
+/// that stage's bit, resume/reconfig/epoch → all). Stages are processed in
+/// **descending** index order within a round, exactly like the old
+/// whole-pipeline rescan, and marks at or above the scan position are
+/// deferred to the next round — so the action sequence (and therefore
+/// every frozen contention factor and event sequence number) is identical
+/// to scanning all stages, as the `FullRescan` golden tests verify.
+#[allow(clippy::too_many_arguments)]
+fn settle(
+    t: &mut TenantRt,
+    sh: &mut Shared,
+    plat: &Platform,
+    ti: usize,
+    now: f64,
+    duration_s: f64,
+    dirty: u64,
+    full_rescan: bool,
+) {
+    let n = t.stages.len();
+    let all = all_mask(n);
+    let mut cur = if full_rescan { all } else { dirty & all };
+    if t.thaw_pending && now >= t.frozen_until {
+        // dispatch was frozen pipeline-wide: every stage may be runnable
+        t.thaw_pending = false;
+        cur = all;
+    }
+    let mut next: u64 = 0;
     loop {
         let mut progress = false;
-        for si in (0..t.stages.len()).rev() {
-            progress |= deliver_stage(t, si);
-            progress |= dispatch_stage(t, sh, plat, ti, si, now, duration_s);
+        while cur != 0 {
+            let si = 63 - cur.leading_zeros() as usize;
+            cur &= !(1u64 << si);
+            if deliver_stage(t, si) {
+                // the downstream queue grew and this stage may deliver
+                // again / have been freed: both are at or above the scan
+                // position, so they belong to the next round
+                progress = true;
+                next |= 1u64 << si;
+                if si + 1 < n {
+                    next |= 1u64 << (si + 1);
+                }
+            }
+            if dispatch_stage(t, sh, plat, ti, si, now, duration_s) {
+                // queue `si` shrank: the upstream stage blocked on it can
+                // deliver now, and si-1 is still ahead of this scan
+                progress = true;
+                if si > 0 {
+                    cur |= 1u64 << (si - 1);
+                }
+            }
         }
-        if !progress {
+        if full_rescan {
+            // reference mode: ignore the dirty-mask bookkeeping entirely
+            // and repeat full descending passes until a pass is quiet —
+            // the PR-1 loop, kept independent of the propagation rules
+            next = 0;
+            if !progress {
+                break;
+            }
+            cur = all;
+            continue;
+        }
+        if next == 0 {
             break;
         }
+        cur = next;
+        next = 0;
+    }
+    #[cfg(debug_assertions)]
+    for si in 0..n {
+        debug_assert!(!can_progress(t, si, now), "settle fixpoint missed stage {si}");
     }
 }
 
@@ -528,7 +744,8 @@ fn apply_reconfig(
     duration_s: f64,
 ) {
     t.gen += 1;
-    let mut orphans: Vec<Request> = Vec::new();
+    let mut orphans: Vec<u32> = Vec::new();
+    let mut spare_bufs: Vec<Vec<u32>> = Vec::new();
     for st in &mut t.stages {
         if let Some(inf) = st.busy.take() {
             if !inf.completed {
@@ -537,27 +754,33 @@ fn apply_reconfig(
                     sh.link_busy = sh.link_busy.saturating_sub(1);
                 }
             }
-            orphans.extend(inf.reqs);
+            orphans.extend_from_slice(&inf.reqs[inf.taken..]);
+            spare_bufs.push(inf.reqs);
         }
         orphans.extend(st.queue.drain(..));
     }
+    for buf in spare_bufs {
+        t.recycle(buf);
+    }
     // oldest requests re-queue first (deterministic, arrival-order fair)
-    orphans.sort_by_key(|r| r.id);
+    orphans.sort_by_key(|&ix| t.arena[ix as usize].id);
     t.config = new_config;
     t.bounds = t.config.stage_bounds();
     t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
     let n_layers = t.spec.net.len();
-    for req in orphans {
+    for ix in orphans {
         // completed-but-undelivered batches sit at a stage boundary; resume
         // from the stage owning the next layer (never past the last stage)
-        let si = if req.layers_done >= n_layers {
+        let layers_done = t.arena[ix as usize].layers_done;
+        let si = if layers_done >= n_layers {
             t.stages.len() - 1
         } else {
-            t.config.stage_of_layer(req.layers_done).expect("layer in range")
+            t.config.stage_of_layer(layers_done).expect("layer in range")
         };
-        t.stages[si].queue.push_back(req);
+        t.stages[si].queue.push_back(ix);
     }
     t.frozen_until = now + penalty_s;
+    t.thaw_pending = true;
     if t.frozen_until <= duration_s {
         sh.schedule(t.frozen_until, EvKind::Resume { tenant: ti });
     }
@@ -592,15 +815,15 @@ fn epoch_tick(
     {
         // observed database: contention-free costs at the tenant's service
         // batch size (what dispatch actually charges), rescaled by the
-        // per-EP slowdown the tenant experienced
-        let mut db = t.dbs[t.spec.batch - 1].clone();
+        // per-EP slowdown the tenant experienced — written into the
+        // preallocated scratch database, so a warm re-tune epoch allocates
+        // nothing for its observed-cost model
         for ep in 0..plat.n_eps() {
             let f = t.ep_slow[ep].max(1.0);
-            if f > 1.001 {
-                db.scale_ep(ep, f);
-            }
+            t.scale_buf[ep] = if f > 1.001 { f } else { 1.0 };
         }
-        let (best, n) = t.controller.warm_retune(&db, t.config.clone());
+        t.scratch_db.copy_scaled_from(&t.dbs[t.spec.batch - 1], &t.scale_buf);
+        let (best, n) = t.controller.warm_retune(&t.scratch_db, t.config.clone());
         trials = n;
         t.retunes += 1;
         t.retune_trials += n;
@@ -661,6 +884,9 @@ pub fn serve(
     let mut rts: Vec<TenantRt> = Vec::with_capacity(tenants.len());
     for (spec, config) in tenants {
         spec.validate(plat, &config)?;
+        if config.n_stages() > 64 {
+            bail!("serve: at most 64 pipeline stages supported (settle bitmask)");
+        }
         let mut dbs = Vec::with_capacity(spec.batch);
         for b in 1..=spec.batch {
             dbs.push(if b == 1 {
@@ -669,6 +895,7 @@ pub fn serve(
                 batch::build_batched(&spec.net, plat, &model, b as u32)
             });
         }
+        let scratch_db = dbs[spec.batch - 1].clone();
         let sampler = spec.arrivals.sampler(master.fork());
         let controller = AdaptiveController::new(spec.net.clone(), plat.clone(), model.clone());
         let bounds = config.stage_bounds();
@@ -683,7 +910,13 @@ pub fn serve(
             controller,
             gen: 0,
             frozen_until: 0.0,
+            thaw_pending: false,
             ep_slow: vec![1.0; plat.n_eps()],
+            arena: Vec::with_capacity(spec.queue_capacity + 1),
+            free_slots: Vec::new(),
+            buf_pool: Vec::new(),
+            scratch_db,
+            scale_buf: vec![1.0; plat.n_eps()],
             next_id: 0,
             offered: 0,
             rejected: 0,
@@ -729,6 +962,7 @@ pub fn serve(
         sh.schedule(opts.control_epoch_s, EvKind::Epoch);
     }
 
+    let full_rescan = opts.pump == PumpMode::FullRescan;
     let mut truncated = false;
     while let Some(Reverse(ev)) = sh.heap.pop() {
         sh.n_events += 1;
@@ -745,7 +979,7 @@ pub fn serve(
                 });
                 t.offered += 1;
                 t.ep_offered += 1;
-                let req = Request { id: t.next_id, arrival_s: now, layers_done: 0 };
+                let id = t.next_id;
                 t.next_id += 1;
                 let cap = t.spec.queue_capacity;
                 if t.stages[0].queue.len() >= cap {
@@ -755,14 +989,18 @@ pub fn serve(
                             t.ep_rejected += 1;
                         }
                         AdmissionPolicy::DropOldest => {
-                            t.stages[0].queue.pop_front();
+                            if let Some(old) = t.stages[0].queue.pop_front() {
+                                t.free_slots.push(old);
+                            }
                             t.dropped += 1;
                             t.ep_dropped += 1;
-                            t.stages[0].queue.push_back(req);
+                            let ix = t.alloc(id, now);
+                            t.stages[0].queue.push_back(ix);
                         }
                     }
                 } else {
-                    t.stages[0].queue.push_back(req);
+                    let ix = t.alloc(id, now);
+                    t.stages[0].queue.push_back(ix);
                     let l = t.stages[0].queue.len();
                     if l > t.max_queue_len {
                         t.max_queue_len = l;
@@ -773,7 +1011,7 @@ pub fn serve(
                         sh.schedule(next, EvKind::Arrival { tenant });
                     }
                 }
-                pump(t, &mut sh, plat, tenant, now, opts.duration_s);
+                settle(t, &mut sh, plat, tenant, now, opts.duration_s, 1, full_rescan);
             }
             EvKind::StageDone { tenant, stage, gen } => {
                 let t = &mut rts[tenant];
@@ -791,10 +1029,10 @@ pub fn serve(
                     if !inf.completed {
                         inf.completed = true;
                         let la = inf.layers_after;
-                        for r in &mut inf.reqs {
-                            r.layers_done = la;
-                        }
                         let (ep, uses_link, factor) = (inf.ep, inf.uses_link, inf.factor);
+                        for &ix in inf.reqs.iter() {
+                            t.arena[ix as usize].layers_done = la;
+                        }
                         sh.ep_busy[ep] = sh.ep_busy[ep].saturating_sub(1);
                         if uses_link {
                             sh.link_busy = sh.link_busy.saturating_sub(1);
@@ -803,20 +1041,20 @@ pub fn serve(
                             (1.0 - EWMA_GAIN) * t.ep_slow[ep] + EWMA_GAIN * factor;
                     }
                 }
-                pump(t, &mut sh, plat, tenant, now, opts.duration_s);
+                settle(t, &mut sh, plat, tenant, now, opts.duration_s, 1u64 << stage, full_rescan);
             }
             EvKind::Resume { tenant } => {
                 let t = &mut rts[tenant];
                 sh.note(now, 4, tenant as u64, 0, || {
                     format!("{now:.6} resume {}", t.spec.name)
                 });
-                pump(t, &mut sh, plat, tenant, now, opts.duration_s);
+                settle(t, &mut sh, plat, tenant, now, opts.duration_s, u64::MAX, full_rescan);
             }
             EvKind::Epoch => {
                 sh.note(now, 5, 0, 0, || format!("{now:.6} epoch"));
                 for (ti, t) in rts.iter_mut().enumerate() {
                     epoch_tick(t, &mut sh, ti, now, opts, plat);
-                    pump(t, &mut sh, plat, ti, now, opts.duration_s);
+                    settle(t, &mut sh, plat, ti, now, opts.duration_s, u64::MAX, full_rescan);
                 }
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
@@ -841,6 +1079,7 @@ pub fn serve(
                 slo_ok: t.slo_ok,
                 in_flight,
                 max_queue_len: t.max_queue_len,
+                arena_peak: t.arena.len(),
                 latency: t.latency,
                 epochs: t.epochs,
                 retunes: t.retunes,
@@ -985,6 +1224,38 @@ mod tests {
     }
 
     #[test]
+    fn event_driven_settle_matches_full_rescan() {
+        // The event-driven worklist must reproduce the whole-pipeline
+        // rescan bit-for-bit: contention, batching and backpressure all on.
+        let plat = crate::platform::configs::c2();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let run = |pump: PumpMode| {
+            let (a, ca) = small_tenant("a", 2.0 * cap);
+            let a = a.with_batch(3).with_queue_capacity(9);
+            let (b, cb) = small_tenant("b", 0.7 * cap);
+            let mut opts = base_opts(250.0 / cap);
+            opts.pump = pump;
+            opts.record_log = true;
+            serve(&plat, vec![(a, ca), (b, cb)], &opts).unwrap()
+        };
+        let ev = run(PumpMode::EventDriven);
+        let fr = run(PumpMode::FullRescan);
+        assert_eq!(ev.log_hash, fr.log_hash, "event streams must be identical");
+        assert_eq!(ev.event_log, fr.event_log);
+        assert_eq!(ev.n_events, fr.n_events);
+        for (x, y) in ev.tenants.iter().zip(&fr.tenants) {
+            assert_eq!(x.offered, y.offered);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.slo_ok, y.slo_ok);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(x.rejected, y.rejected);
+            assert_eq!(x.max_queue_len, y.max_queue_len);
+            assert_eq!(x.latency.p99(), y.latency.p99());
+        }
+    }
+
+    #[test]
     fn contention_halves_co_located_tenants() {
         let plat = crate::platform::configs::c1();
         let net = networks::synthnet_small();
@@ -1044,6 +1315,35 @@ mod tests {
             "batched run should not collapse: {} vs {}",
             b8.tenants[0].completed,
             b1.tenants[0].completed
+        );
+    }
+
+    #[test]
+    fn arena_recycles_slots_under_sustained_load() {
+        // The slab must stay bounded by the live-request watermark, not by
+        // the offered-request count: completed slots are reused.
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let (spec, cfg) = small_tenant("t0", 0.5 * cap);
+        let spec = spec.with_queue_capacity(8);
+        let report = serve(&plat, vec![(spec, cfg)], &base_opts(500.0 / cap)).unwrap();
+        let t = &report.tenants[0];
+        assert!(t.offered > 100, "need sustained traffic, got {}", t.offered);
+        assert!(t.conserved());
+        // watermark bound: each of the 2 stages can hold at most 8 queued
+        // requests plus one in-service batch (batch = 1); without slot
+        // recycling the slab would instead grow to ~offered entries
+        let watermark = 2 * (8 + 1);
+        assert!(
+            t.offered > 2 * watermark as u64,
+            "scenario must offer well beyond the watermark"
+        );
+        assert!(
+            t.arena_peak <= watermark,
+            "slab must recycle slots: peak {} vs watermark {watermark} ({} offered)",
+            t.arena_peak,
+            t.offered
         );
     }
 

@@ -17,21 +17,29 @@
 //!   admission policy);
 //! * [`engine`] — the event-heap simulator plus the control loop that
 //!   feeds observed per-EP slowdowns back into
-//!   [`crate::coordinator::AdaptiveController::warm_retune`];
+//!   [`crate::coordinator::AdaptiveController::warm_retune`]; its steady
+//!   state is allocation-free (request slab arena, recycled batch
+//!   buffers, event-driven settling, scratch re-tune database — see the
+//!   engine docs §Hot-path design);
+//! * [`sweep`] — parallel scenario sweeps: independent serving scenarios
+//!   fanned out across CPU cores with order- and thread-count-invariant
+//!   results (`shisha serve --sweep`);
 //! * [`slo`] — streaming latency-quantile sketch, goodput and Jain
 //!   fairness.
 //!
-//! See the crate-level docs ("Serving") for the event model and the
-//! contention assumptions.
+//! See the crate-level docs ("Serving" and "Performance") for the event
+//! model and the contention assumptions.
 
 pub mod arrivals;
 pub mod engine;
 pub mod slo;
+pub mod sweep;
 pub mod tenant;
 
 pub use arrivals::{ArrivalProcess, ArrivalSampler};
-pub use engine::{serve, EpochStats, ServeOptions, ServeReport, TenantReport};
+pub use engine::{serve, EpochStats, PumpMode, ServeOptions, ServeReport, TenantReport};
 pub use slo::{jain_fairness, QuantileSketch};
+pub use sweep::{run_sweep, Scenario, ScenarioStats, SweepOutcome};
 pub use tenant::{AdmissionPolicy, TenantSpec};
 
 use crate::explore::shisha::{ShishaExplorer, ShishaOptions};

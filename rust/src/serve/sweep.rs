@@ -1,0 +1,329 @@
+//! Parallel scenario sweeps: run many independent serving scenarios
+//! across CPU cores.
+//!
+//! A serving run ([`serve`]) is a pure function of its inputs, so a
+//! scenario grid — tenant counts × offered-load factors × seeds — is
+//! embarrassingly parallel. This module fans the grid out over a thread
+//! pool and returns outcomes **in input order**, each byte-identical to a
+//! sequential run (every scenario owns its RNG stream and report slot, so
+//! thread count and scheduling cannot perturb results). This is the first
+//! step towards the ROADMAP's sharded-serving item: the same machinery
+//! that sweeps scenarios can evaluate shard placements side by side.
+//!
+//! Two execution engines:
+//!
+//! * default — a fixed pool of `std::thread`s pulling scenario indices
+//!   from an atomic counter (no dependencies; builds in the offline
+//!   container);
+//! * `--features rayon` — a rayon work-stealing pool (requires
+//!   uncommenting the `rayon` dependency in `Cargo.toml` on machines
+//!   whose registry has it).
+//!
+//! The `shisha serve --sweep` CLI subcommand and `benches/serve_scale.rs`
+//! both drive [`run_sweep`] over [`load_grid`] scenario sets.
+
+use anyhow::Result;
+
+use crate::model::Network;
+use crate::perfdb::{CostModel, PerfDb};
+use crate::pipeline::{simulator, PipelineConfig};
+use crate::platform::Platform;
+
+use super::arrivals::ArrivalProcess;
+use super::engine::{serve, ServeOptions, ServeReport};
+use super::slo::QuantileSketch;
+use super::tenant::TenantSpec;
+
+/// One independent serving scenario: a platform, a tenant mix, and the
+/// engine options to run them under.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Display name (unique within a sweep).
+    pub name: String,
+    /// The shared platform the tenants contend on.
+    pub plat: Platform,
+    /// Tenant specs with their initial pipeline configurations.
+    pub tenants: Vec<(TenantSpec, PipelineConfig)>,
+    /// Engine options (seed, horizon, control loop, pump mode).
+    pub opts: ServeOptions,
+}
+
+/// Outcome of one scenario within a sweep.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Scenario name, copied from the input.
+    pub name: String,
+    /// Wall-clock seconds the (single-threaded) serve run took.
+    pub wall_s: f64,
+    /// The serving report, or the engine's validation error.
+    pub report: Result<ServeReport>,
+}
+
+impl SweepOutcome {
+    /// Simulated events per wall-clock second (None on error runs).
+    pub fn events_per_s(&self) -> Option<f64> {
+        match &self.report {
+            Ok(r) if self.wall_s > 0.0 => Some(r.n_events as f64 / self.wall_s),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate view of one scenario report, merged across its tenants — the
+/// shared row shape for the sweep CLI and `benches/serve_scale.rs`.
+#[derive(Debug, Clone)]
+pub struct ScenarioStats {
+    /// Total arrivals offered.
+    pub offered: u64,
+    /// Arrivals rejected plus requests dropped.
+    pub shed: u64,
+    /// Completions within the SLO.
+    pub slo_ok: u64,
+    /// Warm re-tunes across all tenants.
+    pub retunes: u32,
+    /// Merged median latency, seconds.
+    pub p50_s: f64,
+    /// Merged 95th-percentile latency, seconds.
+    pub p95_s: f64,
+    /// Merged 99th-percentile latency, seconds.
+    pub p99_s: f64,
+    /// Merged maximum latency, seconds.
+    pub max_s: f64,
+    /// Aggregate SLO goodput, requests/second.
+    pub goodput_rps: f64,
+    /// Jain fairness across the scenario's tenants.
+    pub fairness: f64,
+}
+
+impl ScenarioStats {
+    /// Merge the per-tenant reports of one run.
+    pub fn from_report(r: &ServeReport) -> Self {
+        let mut sketch = QuantileSketch::new();
+        let mut offered = 0u64;
+        let mut shed = 0u64;
+        let mut slo_ok = 0u64;
+        let mut retunes = 0u32;
+        for t in &r.tenants {
+            sketch.merge(&t.latency);
+            offered += t.offered;
+            shed += t.rejected + t.dropped;
+            slo_ok += t.slo_ok;
+            retunes += t.retunes;
+        }
+        Self {
+            offered,
+            shed,
+            slo_ok,
+            retunes,
+            p50_s: sketch.p50(),
+            p95_s: sketch.p95(),
+            p99_s: sketch.p99(),
+            max_s: sketch.max_s(),
+            goodput_rps: if r.duration_s > 0.0 { slo_ok as f64 / r.duration_s } else { 0.0 },
+            fairness: r.fairness(),
+        }
+    }
+
+    /// Fraction of offered requests shed (rejected or dropped).
+    pub fn drop_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// The shared latency-percentile row for this scenario.
+    pub fn latency_row(&self, label: impl Into<String>) -> crate::metrics::table::LatencyRow {
+        crate::metrics::table::LatencyRow {
+            label: label.into(),
+            p50_s: self.p50_s,
+            p95_s: self.p95_s,
+            p99_s: self.p99_s,
+            max_s: self.max_s,
+            goodput_rps: self.goodput_rps,
+            drop_rate: self.drop_rate(),
+        }
+    }
+}
+
+/// Number of hardware threads available to a sweep (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Build the standard load-sweep scenario grid: every combination of
+/// `tenant_counts` × `rhos` × `seeds`, with each cell offering
+/// `rho × capacity / n_tenants` Poisson traffic per tenant on copies of
+/// `config` (capacity = the analytic steady-state throughput of `config`).
+pub fn load_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    tenant_counts: &[usize],
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let mut out = Vec::with_capacity(tenant_counts.len() * rhos.len() * seeds.len());
+    for &n_tenants in tenant_counts {
+        for &rho in rhos {
+            for &seed in seeds {
+                let rate = if n_tenants > 0 { rho * cap / n_tenants as f64 } else { 0.0 };
+                let tenants: Vec<(TenantSpec, PipelineConfig)> = (0..n_tenants)
+                    .map(|i| {
+                        (
+                            TenantSpec::new(
+                                format!("{}t{n_tenants}-rho{rho}-s{seed}-#{i}", net.name),
+                                net.clone(),
+                                ArrivalProcess::Poisson { rate },
+                            ),
+                            config.clone(),
+                        )
+                    })
+                    .collect();
+                let mut opts = base.clone();
+                opts.seed = seed;
+                out.push(Scenario {
+                    name: format!("{} {n_tenants}t rho={rho} seed={seed}", net.name),
+                    plat: plat.clone(),
+                    tenants,
+                    opts,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn run_one(sc: &Scenario) -> SweepOutcome {
+    let t0 = std::time::Instant::now();
+    let report = serve(&sc.plat, sc.tenants.clone(), &sc.opts);
+    SweepOutcome { name: sc.name.clone(), wall_s: t0.elapsed().as_secs_f64(), report }
+}
+
+/// Run every scenario across up to `threads` worker threads; outcomes come
+/// back in input order and are independent of the thread count.
+pub fn run_sweep(scenarios: Vec<Scenario>, threads: usize) -> Vec<SweepOutcome> {
+    let threads = threads.clamp(1, scenarios.len().max(1));
+    if threads == 1 || scenarios.len() <= 1 {
+        return scenarios.iter().map(run_one).collect();
+    }
+    run_parallel(&scenarios, threads)
+}
+
+#[cfg(not(feature = "rayon"))]
+fn run_parallel(scenarios: &[Scenario], threads: usize) -> Vec<SweepOutcome> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<SweepOutcome>> = Vec::new();
+    slots.resize_with(scenarios.len(), || None);
+    let results = Mutex::new(slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let ix = next.fetch_add(1, Ordering::Relaxed);
+                if ix >= scenarios.len() {
+                    break;
+                }
+                let out = run_one(&scenarios[ix]);
+                results.lock().expect("sweep mutex poisoned")[ix] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .expect("sweep mutex poisoned")
+        .into_iter()
+        .map(|o| o.expect("every scenario index was claimed exactly once"))
+        .collect()
+}
+
+#[cfg(feature = "rayon")]
+fn run_parallel(scenarios: &[Scenario], threads: usize) -> Vec<SweepOutcome> {
+    use rayon::prelude::*;
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("rayon pool");
+    pool.install(|| scenarios.par_iter().map(run_one).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn grid(seeds: &[u64]) -> Vec<Scenario> {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let base = ServeOptions {
+            duration_s: 80.0 / cap,
+            control: false,
+            control_epoch_s: 0.0,
+            ..Default::default()
+        };
+        load_grid(&plat, &net, &cfg, &[1, 2], &[0.4], seeds, &base)
+    }
+
+    #[test]
+    fn grid_covers_cross_product_with_unique_names() {
+        let sc = grid(&[1, 2, 3]);
+        assert_eq!(sc.len(), 2 * 3);
+        let mut names: Vec<&str> = sc.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), sc.len(), "scenario names must be unique");
+        assert_eq!(sc[0].opts.seed, 1);
+        assert_eq!(sc[1].opts.seed, 2);
+        assert_eq!(sc[3].tenants.len(), 2);
+    }
+
+    #[test]
+    fn sweep_outcomes_in_input_order_and_thread_invariant() {
+        let a = run_sweep(grid(&[5, 6]), 1);
+        let b = run_sweep(grid(&[5, 6]), 4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name, "order must match input order");
+            let rx = x.report.as_ref().expect("serve run");
+            let ry = y.report.as_ref().expect("serve run");
+            assert_eq!(rx.log_hash, ry.log_hash, "{}: thread count changed outcome", x.name);
+            assert_eq!(rx.n_events, ry.n_events);
+            assert_eq!(rx.tenants[0].completed, ry.tenants[0].completed);
+            assert!(rx.tenants.iter().all(|t| t.conserved()));
+        }
+    }
+
+    #[test]
+    fn sweep_isolates_scenario_errors() {
+        let mut sc = grid(&[9]);
+        assert_eq!(sc.len(), 2);
+        sc[0].opts.duration_s = 0.0; // invalid: engine must reject it
+        let out = run_sweep(sc, 2);
+        assert!(out[0].report.is_err(), "invalid scenario must error");
+        assert!(out[1].report.is_ok(), "other scenarios must still run");
+        assert!(out[1].events_per_s().unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn scenario_stats_aggregate_tenants() {
+        let out = run_sweep(grid(&[11]), 1);
+        let r = out[1].report.as_ref().expect("serve run"); // 2-tenant cell
+        let stats = ScenarioStats::from_report(r);
+        let offered: u64 = r.tenants.iter().map(|t| t.offered).sum();
+        assert_eq!(stats.offered, offered);
+        assert!(stats.goodput_rps > 0.0);
+        assert!(stats.p99_s >= stats.p50_s);
+        assert!(stats.fairness > 0.0 && stats.fairness <= 1.0 + 1e-12);
+        assert!(stats.drop_rate() <= 1.0);
+    }
+}

@@ -185,3 +185,61 @@ fn serve_rejects_bad_arrival_spec() {
     assert!(!o.status.success());
     assert!(stderr(&o).contains("unknown arrival kind"), "{}", stderr(&o));
 }
+
+fn sweep_args(threads: &'static str) -> Vec<&'static str> {
+    vec![
+        "serve",
+        "--sweep",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--tenant-grid",
+        "1,2",
+        "--rho-grid",
+        "0.4",
+        "--seeds",
+        "7",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.5",
+        "--threads",
+        threads,
+    ]
+}
+
+#[test]
+fn serve_sweep_runs_and_reports_event_rates() {
+    let o = shisha(&sweep_args("2"));
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("sweeping 2 scenario(s)"), "{out}");
+    assert!(out.contains("log_hash"), "{out}");
+    assert!(out.contains("events/s"), "{out}");
+    assert!(out.contains("rho=0.4"), "{out}");
+}
+
+#[test]
+fn serve_sweep_outcomes_invariant_to_thread_count() {
+    // the table (scenario names, event counts, log hashes, goodput) must
+    // not depend on parallelism; only the timing summary lines may differ
+    let table_of = |o: &Output| -> Vec<String> {
+        stdout(o).lines().filter(|l| l.starts_with('|')).map(str::to_string).collect()
+    };
+    let a = shisha(&sweep_args("1"));
+    let b = shisha(&sweep_args("4"));
+    assert!(a.status.success(), "{}", stderr(&a));
+    assert!(b.status.success(), "{}", stderr(&b));
+    let ta = table_of(&a);
+    let tb = table_of(&b);
+    assert!(!ta.is_empty());
+    assert_eq!(ta, tb, "sweep outcomes must be thread-count invariant");
+}
+
+#[test]
+fn serve_sweep_rejects_bad_grid() {
+    let o = shisha(&["serve", "--sweep", "--tenant-grid", "0", "--duration", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("tenant-grid"), "{}", stderr(&o));
+}
