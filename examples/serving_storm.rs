@@ -19,7 +19,7 @@ use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::simulator;
 use shisha::platform::configs;
 use shisha::serve::{
-    serve, shisha_config, ArrivalProcess, ServeOptions, TenantSpec,
+    serve, shisha_config, ArrivalProcess, BalancerPolicy, ServeOptions, TenantSpec,
 };
 
 fn main() {
@@ -61,10 +61,14 @@ fn main() {
         .zip(arrivals)
         .map(|((name, net, config), arr)| {
             let slo = 0.100; // 100 ms SLO for everyone
-            (
-                TenantSpec::new(*name, net, arr).with_slo(slo).with_queue_capacity(128),
-                config,
-            )
+            let mut spec =
+                TenantSpec::new(*name, net, arr).with_slo(slo).with_queue_capacity(128);
+            if *name == "bursty" {
+                // the storm source runs replicated: up to two pipelines on
+                // disjoint EP subsets behind a join-shortest-queue balancer
+                spec = spec.with_shards(2).with_balancer(BalancerPolicy::JoinShortestQueue);
+            }
+            (spec, config)
         })
         .collect();
 
@@ -103,6 +107,17 @@ fn main() {
             t.retunes,
             t.final_config.describe()
         );
+        if t.shards.len() > 1 {
+            for (i, s) in t.shards.iter().enumerate() {
+                println!(
+                    "  shard {i} on EPs {:?}: routed {}, completed {}, final {}",
+                    s.eps,
+                    s.offered,
+                    s.completed,
+                    s.final_config.describe()
+                );
+            }
+        }
     }
     println!(
         "fairness (Jain) {:.4} over {} events",

@@ -29,7 +29,7 @@ use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::simulator;
 use shisha::platform::configs;
 use shisha::serve::sweep::{self, Scenario, SweepOutcome};
-use shisha::serve::{shisha_config, PumpMode, ScenarioStats, ServeOptions};
+use shisha::serve::{shisha_config, BalancerPolicy, PumpMode, ScenarioStats, ServeOptions};
 
 /// Latency-table row for one scenario outcome (tenants merged).
 fn latency_row(outcome: &SweepOutcome) -> LatencyRow {
@@ -146,6 +146,67 @@ fn main() {
     json.metric("aggregate", "sweep_wall_s", fast_wall);
     json.metric("aggregate", "baseline_sweep_wall_s", slow_wall);
     json.metric("aggregate", "threads", threads as f64);
+
+    // --- shard-scaling section: goodput vs shard budget on the MMPP
+    // drift workload, identical arrival stream per cell; both pump modes
+    // run and must agree byte-for-byte before anything is recorded.
+    let shard_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let shard_scenarios = sweep::shard_grid(
+        &plat,
+        &net,
+        &config,
+        shard_counts,
+        BalancerPolicy::JoinShortestQueue,
+        &[1.0],
+        &[42],
+        &base,
+    );
+    let shard_baseline: Vec<Scenario> = shard_scenarios
+        .iter()
+        .cloned()
+        .map(|mut s| {
+            s.opts.pump = PumpMode::FullRescan;
+            s
+        })
+        .collect();
+    let shard_fast = sweep::run_sweep(shard_scenarios, threads);
+    let shard_slow = sweep::run_sweep(shard_baseline, threads);
+    let mut shard_goodputs = Vec::new();
+    for ((f, s), &k) in shard_fast.iter().zip(&shard_slow).zip(shard_counts) {
+        let fr = f.report.as_ref().expect("shard serve run");
+        let sr = s.report.as_ref().expect("shard baseline run");
+        assert_eq!(fr.log_hash, sr.log_hash, "{}: pump modes diverged", f.name);
+        let stats = ScenarioStats::from_report(fr);
+        println!(
+            "{}: goodput {:.2} req/s, p99 {:.1} ms, {} replicas, {:.3e} events/s",
+            f.name,
+            stats.goodput_rps,
+            stats.p99_s * 1e3,
+            fr.tenants[0].shards.len(),
+            f.events_per_s().unwrap_or(0.0)
+        );
+        json.metric(&format!("shard_k{k}"), "goodput_rps", stats.goodput_rps);
+        json.metric(&format!("shard_k{k}"), "p99_ms", stats.p99_s * 1e3);
+        json.metric(
+            &format!("shard_k{k}"),
+            "replicas",
+            fr.tenants[0].shards.len() as f64,
+        );
+        json.metric(
+            &format!("shard_k{k}"),
+            "events_per_s",
+            f.events_per_s().unwrap_or(0.0),
+        );
+        shard_goodputs.push(stats.goodput_rps);
+    }
+    if let (Some(first), Some(last)) = (shard_goodputs.first(), shard_goodputs.last()) {
+        json.metric("aggregate", "shard_scaling", if *first > 0.0 { last / first } else { f64::NAN });
+        println!(
+            "shard scaling (k={} vs k=1 goodput): {:.3}x",
+            shard_counts.last().unwrap(),
+            if *first > 0.0 { last / first } else { 0.0 }
+        );
+    }
 
     let table = latency_table(fast.iter().map(latency_row));
     println!("\n{}", table.to_markdown());

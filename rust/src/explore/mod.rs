@@ -27,6 +27,7 @@
 pub mod exhaustive;
 pub mod genetic;
 pub mod hill_climbing;
+pub mod partition;
 pub mod pipe_search;
 pub mod random_walk;
 pub mod shisha;

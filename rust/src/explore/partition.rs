@@ -1,0 +1,162 @@
+//! Partition-then-tune: schedule one pipeline per disjoint EP subset.
+//!
+//! Sharded serving ([`crate::serve::shard`]) replicates a tenant's
+//! pipeline across disjoint EP subsets. Each subset is an independent
+//! scheduling problem on the restricted platform
+//! ([`crate::platform::Platform::subset`]), and this module solves it:
+//!
+//! * when the subset's restricted design space
+//!   ([`crate::pipeline::space::subset_space_size`]) is small — the common
+//!   case for shard subsets of 2–4 EPs — the space is enumerated
+//!   **exhaustively** and the optimum taken, so small shards lose nothing
+//!   to heuristics;
+//! * otherwise the existing Shisha explorer runs on the sub-platform with
+//!   a bounded evaluation budget, exactly like
+//!   [`crate::serve::shisha_config`] does for a whole platform.
+//!
+//! Both paths are deterministic: enumeration order is fixed and Shisha's
+//! options carry a fixed RNG seed, so a partition always tunes to the
+//! same configurations — a requirement for the serving engine's
+//! one-seed-one-event-log determinism guarantee.
+
+use crate::model::Network;
+use crate::perfdb::{CostModel, PerfDb};
+use crate::pipeline::{simulator, space, PipelineConfig};
+use crate::platform::{EpId, Platform};
+
+use super::shisha::{ShishaExplorer, ShishaOptions};
+use super::{EvalOptions, Evaluator, Explorer};
+
+/// Restricted spaces at or below this size are enumerated exhaustively
+/// (an 18-layer network on a 4-EP subset is 19 792 configurations; 5-EP
+/// subsets already exceed the limit and fall back to Shisha).
+pub const EXHAUSTIVE_LIMIT: u128 = 25_000;
+
+/// Tuning outcome for one EP subset.
+#[derive(Debug, Clone)]
+pub struct SubsetPlan {
+    /// Best configuration found, in the **sub-platform's local EP ids**
+    /// (`0..eps.len()`, densely renumbered in subset order).
+    pub config: PipelineConfig,
+    /// Analytic steady-state throughput of `config` on the subset, img/s.
+    pub predicted_throughput: f64,
+    /// True when the restricted space was enumerated exhaustively (the
+    /// configuration is then the subset optimum under the cost model).
+    pub exhaustive: bool,
+}
+
+/// Tune one pipeline on the restriction of `plat` to `eps`.
+///
+/// `max_evals` bounds the Shisha fallback only; the exhaustive path always
+/// scans its (bounded) space. Deterministic in all inputs.
+pub fn tune_subset(net: &Network, plat: &Platform, eps: &[EpId], max_evals: u64) -> SubsetPlan {
+    let sub = plat.subset(eps);
+    let db = PerfDb::build(net, &sub, &CostModel::default());
+    let l = net.len();
+    if space::subset_space_size(l, eps) <= EXHAUSTIVE_LIMIT {
+        let local_ids: Vec<EpId> = (0..sub.n_eps()).collect();
+        let mut best: Option<(PipelineConfig, f64)> = None;
+        for cfg in space::enumerate_all(l, &local_ids, l.min(sub.n_eps())) {
+            let tp = simulator::throughput(net, &sub, &db, &cfg);
+            // strict `>` keeps the first-enumerated optimum on ties, so
+            // the plan is independent of enumeration internals changing
+            // relative order among equals only if the values differ —
+            // deterministic either way for a fixed enumerator
+            if best.as_ref().map_or(true, |(_, b)| tp > *b) {
+                best = Some((cfg, tp));
+            }
+        }
+        let (config, predicted_throughput) =
+            best.expect("restricted space is non-empty for l >= 1");
+        SubsetPlan { config, predicted_throughput, exhaustive: true }
+    } else {
+        let opts = EvalOptions { max_evals: Some(max_evals), ..Default::default() };
+        let mut eval = Evaluator::with_options(net, &sub, &db, opts);
+        let sol = ShishaExplorer::new(ShishaOptions::default()).explore(&mut eval);
+        SubsetPlan {
+            config: sol.best_config,
+            predicted_throughput: sol.best_throughput,
+            exhaustive: false,
+        }
+    }
+}
+
+/// Tune every subset of a disjoint partition independently (the
+/// partition-then-tune driver behind [`crate::serve::shard::plan_shards`]).
+pub fn tune_partition(
+    net: &Network,
+    plat: &Platform,
+    parts: &[Vec<EpId>],
+    max_evals: u64,
+) -> Vec<SubsetPlan> {
+    parts.iter().map(|eps| tune_subset(net, plat, eps, max_evals)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    #[test]
+    fn small_subset_is_exhaustive_and_optimal() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let plan = tune_subset(&net, &plat, &[0, 4], 500);
+        assert!(plan.exhaustive);
+        let sub = plat.subset(&[0, 4]);
+        assert!(plan.config.validate(net.len(), &sub).is_ok());
+        // optimum beats both trivial single-EP placements
+        let db = PerfDb::build(&net, &sub, &CostModel::default());
+        for ep in 0..2 {
+            let single = simulator::throughput(
+                &net,
+                &sub,
+                &db,
+                &PipelineConfig::single_stage(net.len(), ep),
+            );
+            assert!(plan.predicted_throughput >= single, "optimum at least single-EP");
+        }
+    }
+
+    #[test]
+    fn large_subset_falls_back_to_shisha() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let all: Vec<usize> = (0..plat.n_eps()).collect();
+        let plan = tune_subset(&net, &plat, &all, 500);
+        assert!(!plan.exhaustive, "8-EP space is far beyond the limit");
+        assert!(plan.config.validate(net.len(), &plat).is_ok());
+        assert!(plan.predicted_throughput > 0.0);
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        for eps in [vec![0usize, 4], vec![0, 1, 4, 5], (0..8).collect::<Vec<_>>()] {
+            let a = tune_subset(&net, &plat, &eps, 400);
+            let b = tune_subset(&net, &plat, &eps, 400);
+            assert_eq!(a.config, b.config, "subset {eps:?}");
+            assert_eq!(
+                a.predicted_throughput.to_bits(),
+                b.predicted_throughput.to_bits(),
+                "subset {eps:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_tunes_every_subset() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let parts = vec![vec![0usize, 2, 4, 6], vec![1, 3, 5, 7]];
+        let plans = tune_partition(&net, &plat, &parts, 500);
+        assert_eq!(plans.len(), 2);
+        for (plan, eps) in plans.iter().zip(&parts) {
+            let sub = plat.subset(eps);
+            assert!(plan.config.validate(net.len(), &sub).is_ok());
+            assert!(plan.exhaustive, "4-EP subsets sit under the limit");
+        }
+    }
+}

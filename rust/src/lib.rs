@@ -56,6 +56,41 @@
 //! [`serve::sweep`] (`shisha serve --sweep`), with outcomes that are
 //! invariant to thread count.
 //!
+//! ## Sharding
+//!
+//! A single pipeline's throughput is capped by its slowest stage; once
+//! that stage is one indivisible layer, adding EPs to the same pipeline
+//! cannot help — but **replicating** the pipeline can. A tenant with
+//! `TenantSpec::with_shards(k)` runs up to `k` replica pipelines on
+//! disjoint EP subsets behind a deterministic front-end load balancer
+//! (round-robin, join-shortest-queue, or throughput-weighted smooth
+//! round-robin — [`serve::BalancerPolicy`]):
+//!
+//! * the **placement search** ([`serve::shard::plan_shards`]) deals the
+//!   platform's ranked EPs into candidate disjoint partitions
+//!   (heterogeneity-balanced and class-contiguous) for every shard count
+//!   `1..=k`, tunes each subset through the partition-then-tune driver
+//!   ([`explore::partition`] — exhaustive enumeration of the EP-subset
+//!   restricted space when small, Shisha otherwise), and keeps the plan
+//!   with the highest total predicted throughput. The 1-shard plan is
+//!   always a candidate, so a larger shard budget never plans a slower
+//!   deployment;
+//! * each replica owns the full serving runtime (queues, slab arena,
+//!   scratch re-tune database, adaptive controller) against its
+//!   sub-platform view ([`platform::Platform::subset`]); contention stays
+//!   global through a local→global EP map — replicas of one tenant never
+//!   contend on compute but share the inter-chiplet link with everyone;
+//! * warm re-tunes run per replica on its own sub-platform, so a
+//!   regressing replica recovers without ever migrating onto a sibling's
+//!   EPs.
+//!
+//! `serve --shards K --balancer rr|jsq|wtp` shards every CLI tenant;
+//! `serve --sweep --shard-grid 1,2,4` compares shard budgets side by side
+//! on an MMPP drift workload ([`serve::sweep::shard_grid`]) — on
+//! C5/SynthNet goodput scales monotonically with the budget, with
+//! determinism preserved (one seed → one event-log hash at any thread
+//! count; `tests/serve_golden.rs` pins sharded scenarios absolutely).
+//!
 //! ## Performance
 //!
 //! The serving event loop is the hottest code in the crate; its steady

@@ -72,13 +72,21 @@ fn print_usage() {
            serve       [--tenants N] [--nets a,b,..] [--platform c3] [--duration S]\n\
                        [--arrivals SPEC[;SPEC..]] [--slo-ms MS] [--queue N] [--batch N]\n\
                        [--epoch S] [--policy reject|drop-oldest] [--seed N]\n\
+                       [--shards K] [--balancer rr|jsq|wtp]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
                        SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
                              | piecewise:R@T,R@T,.. | trace:FILE\n\
+                       --shards K replicates each tenant's pipeline over up to K\n\
+                       disjoint EP subsets (placement search); --balancer picks the\n\
+                       front-end routing: rr = round-robin, jsq = join-shortest-queue,\n\
+                       wtp = throughput-weighted round-robin\n\
            serve --sweep  parallel scenario grid: [--nets synthnet] [--platform c5]\n\
                        [--tenant-grid 1,2,4] [--rho-grid 0.3,0.7,1.2] [--seeds 42]\n\
+                       [--shard-grid 1,2,4] [--balancer rr|jsq|wtp]\n\
                        [--threads N] [--duration S] [--epoch S] [--full-rescan]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
+                       --shard-grid swaps the tenant-count grid for a side-by-side\n\
+                       shard-count comparison on an MMPP drift workload\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
@@ -210,6 +218,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "epoch",
         "policy",
         "seed",
+        "shards",
+        "balancer",
         "no-control",
         "no-contention",
         "csv",
@@ -218,6 +228,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if n_tenants == 0 {
         bail!("--tenants must be ≥ 1");
     }
+    let shards: usize = args.parsed_or("shards", 1)?;
+    if shards == 0 {
+        bail!("--shards must be ≥ 1");
+    }
+    let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "rr"))?;
     let plat = configs::by_name(args.get_or("platform", "c3")).context("unknown platform")?;
     let net_names: Vec<&str> = args.get_or("nets", "synthnet").split(',').collect();
     let arrival_specs: Vec<&str> = args.get_or("arrivals", "poisson:100").split(';').collect();
@@ -264,7 +279,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_slo(slo_ms * 1e-3)
             .with_queue_capacity(queue)
             .with_batch(batch)
-            .with_admission(policy);
+            .with_admission(policy)
+            .with_shards(shards)
+            .with_balancer(balancer);
         tenants.push((spec, config));
     }
 
@@ -286,6 +303,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             t.retune_trials,
             t.final_config.describe()
         );
+        if t.shards.len() > 1 {
+            for (i, s) in t.shards.iter().enumerate() {
+                println!(
+                    "  shard {i}: EPs {:?}, routed {} / completed {}, predicted {:.1} req/s, \
+                     {} re-tune(s), final {}",
+                    s.eps,
+                    s.offered,
+                    s.completed,
+                    s.predicted_throughput,
+                    s.retunes,
+                    s.final_config.describe()
+                );
+            }
+        }
     }
     println!(
         "{} events, fairness (Jain) {:.4}{}",
@@ -334,6 +365,8 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "seeds",
         "tenant-grid",
         "rho-grid",
+        "shard-grid",
+        "balancer",
         "threads",
         "full-rescan",
         "no-control",
@@ -366,22 +399,46 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    // one grid per network, concatenated; scenario names embed the net name
+    // one grid per network, concatenated; scenario names embed the net
+    // name. --shard-grid swaps the tenant-count load grid for the
+    // side-by-side shard-count comparison (same arrival stream per cell).
+    let shard_grid: Option<Vec<usize>> = match args.get("shard-grid") {
+        Some(s) => Some(parse_list("shard-grid", s)?),
+        None => None,
+    };
+    if let Some(counts) = &shard_grid {
+        if counts.iter().any(|&k| k == 0) {
+            bail!("--shard-grid entries must be ≥ 1");
+        }
+    }
+    let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
     for net_name in &net_names {
         let net = networks::by_name(net_name)
             .with_context(|| format!("unknown network {net_name:?}"))?;
         let config = shisha::serve::shisha_config(&net, &plat);
         println!("  {}: Shisha config {}", net.name, config.describe());
-        scenarios.extend(sweep::load_grid(
-            &plat,
-            &net,
-            &config,
-            &tenant_grid,
-            &rho_grid,
-            &seeds,
-            &base,
-        ));
+        match &shard_grid {
+            Some(counts) => scenarios.extend(sweep::shard_grid(
+                &plat,
+                &net,
+                &config,
+                counts,
+                balancer,
+                &rho_grid,
+                &seeds,
+                &base,
+            )),
+            None => scenarios.extend(sweep::load_grid(
+                &plat,
+                &net,
+                &config,
+                &tenant_grid,
+                &rho_grid,
+                &seeds,
+                &base,
+            )),
+        }
     }
     println!(
         "sweeping {} scenario(s) of {} network(s) on {} ({} EPs) across {} thread(s)",

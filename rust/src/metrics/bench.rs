@@ -282,4 +282,31 @@ mod tests {
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.starts_with('{') && s.trim_end().ends_with('}'));
     }
+
+    #[test]
+    fn committed_bench_json_copies_match_writer_shape() {
+        // The BENCH_*.json copies at the repository root are refreshed
+        // from CI bench artifacts; this guards their envelope against
+        // rotting away from what JsonReport::to_json emits (CI
+        // additionally diffs the per-case metric keys against a fresh
+        // --quick run via scripts/check_bench_schema.py).
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ lives under the repo root");
+        for name in ["BENCH_hotpath.json", "BENCH_serve.json"] {
+            let path = root.join(name);
+            let s = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{name} must stay committed at the repo root: {e}"));
+            assert!(
+                s.contains("\"schema\": \"shisha-bench-v1\""),
+                "{name}: schema tag missing"
+            );
+            assert!(s.contains("\"cases\""), "{name}: cases object missing");
+            assert_eq!(
+                s.matches('{').count(),
+                s.matches('}').count(),
+                "{name}: unbalanced braces"
+            );
+        }
+    }
 }

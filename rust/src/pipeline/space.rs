@@ -55,6 +55,18 @@ pub fn full_space_size(l: usize, e: usize) -> u128 {
     space_size(l, e, l.min(e))
 }
 
+/// Size of the design space **restricted to an EP subset** (full depth).
+///
+/// The space only depends on how many EPs are available, so this is
+/// `full_space_size(l, eps.len())` — but naming the restriction keeps call
+/// sites honest: the shard planner ([`crate::serve::shard`]) partitions a
+/// platform's EPs into disjoint subsets and enumerates each shard's
+/// restricted space exhaustively via [`enumerate_all`] whenever this count
+/// is small enough, falling back to Shisha tuning otherwise.
+pub fn subset_space_size(l: usize, eps: &[EpId]) -> u128 {
+    full_space_size(l, eps.len())
+}
+
 /// Iterator over all configurations of exactly `n` stages: every
 /// composition of `l` into `n` positive parts × every injective EP
 /// assignment. Compositions iterate in lexicographic cut-point order;
@@ -255,5 +267,18 @@ mod tests {
     fn zero_depth_yields_nothing() {
         let eps: Vec<usize> = (0..2).collect();
         assert_eq!(enumerate_all(5, &eps, 0).count(), 0);
+    }
+
+    #[test]
+    fn subset_space_matches_enumeration() {
+        // the restricted space a 2-EP shard enumerates: N=1 -> 2,
+        // N=2 -> C(17,1)·P(2,2) = 34; total 36
+        let eps = vec![3, 6];
+        assert_eq!(subset_space_size(18, &eps), 36);
+        assert_eq!(enumerate_all(18, &eps, 2).count() as u128, 36);
+        // a 4-EP shard on an 18-layer net stays under the planner's
+        // exhaustive limit; a 5-EP subset does not
+        assert_eq!(subset_space_size(18, &[0, 1, 2, 3]), 19_792);
+        assert!(subset_space_size(18, &[0, 1, 2, 3, 4]) > 25_000);
     }
 }

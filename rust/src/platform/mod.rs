@@ -221,6 +221,35 @@ impl Platform {
         self.eps[a].chiplet != self.eps[b].chiplet
     }
 
+    /// Restriction of this platform to the given EPs, **in the given
+    /// order**: EP ids are renumbered densely (`subset[i]` becomes local id
+    /// `i`), while chiplet ids, the inter-chiplet link and the optional
+    /// mesh topology are preserved — so per-layer times and transfer costs
+    /// computed on the sub-platform are identical to the same EPs on the
+    /// full platform. This is the view a pipeline replica sees under
+    /// sharded serving ([`crate::serve::shard`]): each shard schedules
+    /// against its own disjoint EP subset.
+    ///
+    /// Panics if `eps` is empty, contains duplicates, or references an
+    /// unknown EP.
+    pub fn subset(&self, eps: &[EpId]) -> Platform {
+        assert!(!eps.is_empty(), "subset: at least one EP required");
+        let mut seen = vec![false; self.n_eps()];
+        let picked: Vec<ExecutionPlace> = eps
+            .iter()
+            .map(|&id| {
+                assert!(id < self.n_eps(), "subset: unknown EP {id}");
+                assert!(!seen[id], "subset: duplicate EP {id}");
+                seen[id] = true;
+                self.eps[id].clone()
+            })
+            .collect();
+        let mut plat = Platform::new(format!("{}[{}]", self.name, eps.len()), picked);
+        plat.link = self.link;
+        plat.topology = self.topology;
+        plat
+    }
+
     /// Markdown table of the platform (used by the bench harnesses).
     pub fn describe_table(&self) -> String {
         let mut out = String::from("| EP | cores | type | memory | GFLOP/s | GB/s |\n|---|---|---|---|---|---|\n");
@@ -303,5 +332,35 @@ mod tests {
         let fast = ExecutionPlace::new(0, CoreType::Big, 8, MemoryClass::Fast, 0);
         let slow = ExecutionPlace::new(1, CoreType::Little, 8, MemoryClass::Slow, 1);
         assert!(fast.perf_score() > slow.perf_score());
+    }
+
+    #[test]
+    fn subset_renumbers_but_preserves_hardware() {
+        let p = configs::c5();
+        let sub = p.subset(&[5, 0, 6]);
+        assert_eq!(sub.n_eps(), 3);
+        // local ids dense in the given order
+        assert_eq!(sub.eps[0].id, 0);
+        assert_eq!(sub.eps[1].id, 1);
+        assert_eq!(sub.eps[2].id, 2);
+        // hardware identity preserved: chiplet, cores, memory
+        assert_eq!(sub.eps[0].chiplet, p.eps[5].chiplet);
+        assert_eq!(sub.eps[0].core_type, p.eps[5].core_type);
+        assert_eq!(sub.eps[1].memory, p.eps[0].memory);
+        assert_eq!(sub.link, p.link);
+        // cross-chiplet semantics carry over (every C5 EP owns a chiplet)
+        assert!(sub.crosses_chiplet(0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate EP")]
+    fn subset_rejects_duplicates() {
+        configs::c2().subset(&[1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown EP")]
+    fn subset_rejects_unknown() {
+        configs::c1().subset(&[7]);
     }
 }

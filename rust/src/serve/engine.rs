@@ -58,6 +58,23 @@
 //!   ([`PerfDb::copy_scaled_from`]) instead of cloning the database every
 //!   control epoch.
 //!
+//! ## Sharding
+//!
+//! A tenant with `TenantSpec::shards > 1` runs as `k` **replica
+//! pipelines** on disjoint EP subsets, planned by
+//! [`crate::serve::shard::plan_shards`] at serve start. Each replica
+//! (`ShardRt`) owns the full per-pipeline runtime — bounded queues, slab
+//! arena, batch buffers, scratch re-tune database, adaptive controller —
+//! against a *sub-platform view* ([`Platform::subset`]) whose EP ids are
+//! local; a per-replica `ep_map` translates to global ids for the shared
+//! contention counters, so replicas of one tenant never contend on
+//! compute (disjoint EPs) but do share the inter-chiplet link. Arrivals
+//! route through the tenant's [`BalancerPolicy`] (round-robin,
+//! join-shortest-queue, or throughput-weighted smooth round-robin — all
+//! RNG-free), admission applies at the chosen replica's entry queue, and
+//! warm re-tunes run per replica against its own sub-platform, so a
+//! re-tuned replica can never migrate onto a sibling's EPs.
+//!
 //! `benches/serve_scale.rs` tracks simulated events/second per scenario in
 //! `BENCH_serve.json` at the repository root.
 
@@ -69,10 +86,11 @@ use anyhow::{bail, Result};
 use crate::coordinator::AdaptiveController;
 use crate::perfdb::{batch, CostModel, PerfDb};
 use crate::pipeline::{simulator, PipelineConfig};
-use crate::platform::Platform;
+use crate::platform::{EpId, Platform};
 use crate::rng::Xoshiro256;
 
 use super::arrivals::ArrivalSampler;
+use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
 
@@ -210,7 +228,50 @@ pub struct EpochStats {
     pub retune_trials: u64,
 }
 
-/// Final per-tenant report.
+/// Final report for one pipeline replica of a tenant (tenants without
+/// sharding have exactly one). Configurations are reported in **global**
+/// EP ids (translated from the replica's sub-platform).
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Global EP ids this replica runs on (disjoint from its siblings).
+    pub eps: Vec<EpId>,
+    /// Replica configuration at serve start (global EP ids).
+    pub initial_config: PipelineConfig,
+    /// Replica configuration at the horizon (global EP ids).
+    pub final_config: PipelineConfig,
+    /// Analytic throughput the placement search predicted, img/s (the
+    /// weight under [`BalancerPolicy::WeightedThroughput`]).
+    pub predicted_throughput: f64,
+    /// Arrivals the balancer routed to this replica.
+    pub offered: u64,
+    /// Routed arrivals rejected at this replica's entry queue.
+    pub rejected: u64,
+    /// Admitted requests dropped later (DropOldest).
+    pub dropped: u64,
+    /// Requests completed by this replica.
+    pub completed: u64,
+    /// Completions within the SLO.
+    pub slo_ok: u64,
+    /// Requests still queued or in service at the horizon.
+    pub in_flight: u64,
+    /// Largest per-stage queue length observed.
+    pub max_queue_len: usize,
+    /// Replica slab high-water mark.
+    pub arena_peak: usize,
+    /// Warm re-tunes of this replica.
+    pub retunes: u32,
+    /// Evaluator trials across this replica's re-tunes.
+    pub retune_trials: u64,
+    /// Latency sketch over this replica's completions.
+    pub latency: QuantileSketch,
+    /// Per-epoch time series of this replica.
+    pub epochs: Vec<EpochStats>,
+}
+
+/// Final per-tenant report. All counters aggregate over the tenant's
+/// replicas ([`TenantReport::shards`]); `initial_config`/`final_config`
+/// are replica 0's (in global EP ids), `max_queue_len` is the max across
+/// replicas, and `arena_peak` sums replica slabs.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
     /// Tenant name.
@@ -245,6 +306,8 @@ pub struct TenantReport {
     pub retunes: u32,
     /// Total evaluator trials across re-tunes.
     pub retune_trials: u64,
+    /// Per-replica reports (length 1 for unsharded tenants).
+    pub shards: Vec<ShardReport>,
 }
 
 impl TenantReport {
@@ -326,9 +389,17 @@ impl ServeReport {
 #[derive(Debug, Clone, Copy)]
 enum EvKind {
     Arrival { tenant: usize },
-    StageDone { tenant: usize, stage: usize, gen: u64 },
+    StageDone { tenant: usize, shard: usize, stage: usize, gen: u64 },
     Epoch,
-    Resume { tenant: usize },
+    Resume { tenant: usize, shard: usize },
+}
+
+/// Pack a (tenant, shard) pair into one hash/log word. Shard counts are
+/// bounded by the EP count (≤ 64 in any supported platform), so 8 bits
+/// for the shard index are plenty.
+#[inline]
+fn pack_ts(tenant: usize, shard: usize) -> u64 {
+    ((tenant as u64) << 8) | shard as u64
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -401,15 +472,22 @@ const EWMA_EPOCH_RELAX: f64 = 0.5;
 /// ratcheting to the all-time peak and firing re-tunes all night.
 const BASELINE_DECAY: f64 = 0.95;
 
-struct TenantRt {
-    spec: TenantSpec,
+/// One pipeline replica of a tenant: the full per-pipeline runtime
+/// (queues, slab arena, scratch re-tune database, adaptive controller)
+/// against the replica's sub-platform view. Unsharded tenants run exactly
+/// one with an identity `ep_map`.
+struct ShardRt {
+    /// Restriction of the serving platform to this replica's EPs
+    /// ([`Platform::subset`]); all configs/databases use its local ids.
+    subplat: Platform,
+    /// Local EP id → global EP id (shared contention counters are global).
+    ep_map: Vec<EpId>,
     config: PipelineConfig,
     initial_config: PipelineConfig,
     bounds: Vec<(usize, usize)>,
     /// Batch-aware databases: `dbs[b-1]` holds per-stage times at batch `b`.
     dbs: Vec<PerfDb>,
     stages: Vec<StageRt>,
-    sampler: ArrivalSampler,
     controller: AdaptiveController,
     /// Reconfiguration generation; stale StageDone events are ignored.
     gen: u64,
@@ -418,7 +496,7 @@ struct TenantRt {
     /// `frozen_until` must reconsider every stage (dispatch was globally
     /// blocked, so any stage may have become runnable).
     thaw_pending: bool,
-    /// Observed per-EP slowdown EWMA (1.0 = uncontended).
+    /// Observed per-EP slowdown EWMA (1.0 = uncontended), local ids.
     ep_slow: Vec<f64>,
     /// Request slab; queues and batches hold indices into it.
     arena: Vec<Request>,
@@ -431,8 +509,11 @@ struct TenantRt {
     scratch_db: PerfDb,
     /// Preallocated per-EP factor buffer feeding `scratch_db`.
     scale_buf: Vec<f64>,
-    next_id: u64,
-    // cumulative counters
+    /// Predicted analytic throughput (smooth-WRR balancer weight).
+    weight: f64,
+    /// Smooth-WRR credit accumulator (deterministic, RNG-free).
+    credit: f64,
+    // cumulative counters (per replica)
     offered: u64,
     rejected: u64,
     dropped: u64,
@@ -453,7 +534,7 @@ struct TenantRt {
     epochs: Vec<EpochStats>,
 }
 
-impl TenantRt {
+impl ShardRt {
     fn backlog(&self) -> u64 {
         self.stages
             .iter()
@@ -491,22 +572,90 @@ impl TenantRt {
     }
 }
 
+/// One logical tenant: the arrival stream, the front-end balancer state,
+/// and the replica runtimes it routes into.
+struct TenantRt {
+    spec: TenantSpec,
+    sampler: ArrivalSampler,
+    next_id: u64,
+    /// Arrivals offered to the tenant (= Σ replica `offered`).
+    offered: u64,
+    /// Round-robin cursor.
+    rr: u64,
+    shards: Vec<ShardRt>,
+}
+
+impl TenantRt {
+    /// Route one arrival at simulated time `now`: pick the replica per
+    /// the tenant's balancer. Deterministic — every policy is a pure
+    /// function of engine state.
+    fn pick_shard(&mut self, now: f64) -> usize {
+        let k = self.shards.len();
+        if k == 1 {
+            return 0;
+        }
+        match self.spec.balancer {
+            BalancerPolicy::RoundRobin => {
+                let s = (self.rr % k as u64) as usize;
+                self.rr += 1;
+                s
+            }
+            BalancerPolicy::JoinShortestQueue => {
+                // least-loaded by *total* backlog, not just the entry
+                // queue: after a reconfiguration the orphaned requests sit
+                // at downstream stages and dispatch is frozen, so an
+                // entry-queue-only rule would flood exactly the replica
+                // that cannot serve. Frozen replicas are deprioritized
+                // outright; ties break on the lowest index.
+                let mut best = 0;
+                let mut best_key = (true, u64::MAX);
+                for (i, srt) in self.shards.iter().enumerate() {
+                    let key = (now < srt.frozen_until, srt.backlog());
+                    if key < best_key {
+                        best_key = key;
+                        best = i;
+                    }
+                }
+                best
+            }
+            BalancerPolicy::WeightedThroughput => {
+                // smooth weighted round-robin: every replica accrues its
+                // weight, the highest credit serves and pays the total —
+                // over time replica `i` receives weight_i/Σweights of the
+                // arrivals with no bursts towards any single replica
+                let total: f64 = self.shards.iter().map(|s| s.weight).sum();
+                let mut best = 0;
+                let mut best_credit = f64::NEG_INFINITY;
+                for (i, srt) in self.shards.iter_mut().enumerate() {
+                    srt.credit += srt.weight;
+                    if srt.credit > best_credit {
+                        best_credit = srt.credit;
+                        best = i;
+                    }
+                }
+                self.shards[best].credit -= total;
+                best
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // per-stage mechanics (free functions keep the borrows simple)
 
 /// Move a completed batch forward: finish requests on the last stage, or
 /// shift them into the downstream queue while it has room. Returns true on
 /// any progress.
-fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
+fn deliver_stage(spec: &TenantSpec, t: &mut ShardRt, si: usize) -> bool {
     let is_completed = matches!(&t.stages[si].busy, Some(inf) if inf.completed);
     if !is_completed {
         return false;
     }
-    let n_layers = t.spec.net.len();
+    let n_layers = spec.net.len();
     let finishes = t.stages[si].busy.as_ref().map_or(false, |inf| inf.layers_after >= n_layers);
     if finishes {
         let inf = t.stages[si].busy.take().expect("checked above");
-        let slo = t.spec.slo_latency_s;
+        let slo = spec.slo_latency_s;
         for &ix in &inf.reqs[inf.taken..] {
             let lat = inf.done_s - t.arena[ix as usize].arrival_s;
             t.completed += 1;
@@ -526,7 +675,7 @@ fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
         // handles it, never ordinary delivery
         return false;
     }
-    let cap = t.spec.queue_capacity;
+    let cap = spec.queue_capacity;
     let mut moved = false;
     let drained = {
         let (left, right) = t.stages.split_at_mut(si + 1);
@@ -555,12 +704,18 @@ fn deliver_stage(t: &mut TenantRt, si: usize) -> bool {
 
 /// Start servicing a batch on stage `si` if it is idle and has queued work.
 /// Returns true when a service was started.
+///
+/// EP ids in the replica's configuration are **local** to its
+/// sub-platform; the shared contention counters are indexed through
+/// `t.ep_map`, so co-located stages of *different* tenants (or the shared
+/// inter-chiplet link across sibling replicas) still contend globally.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_stage(
-    t: &mut TenantRt,
+    spec: &TenantSpec,
+    t: &mut ShardRt,
     sh: &mut Shared,
-    plat: &Platform,
     ti: usize,
+    shard_ix: usize,
     si: usize,
     now: f64,
     duration_s: f64,
@@ -571,13 +726,13 @@ fn dispatch_stage(
     if t.stages[si].busy.is_some() || t.stages[si].queue.is_empty() {
         return false;
     }
-    let b = t.spec.batch.min(t.stages[si].queue.len());
+    let b = spec.batch.min(t.stages[si].queue.len());
     let (lo, hi) = t.bounds[si];
     let ep = t.config.assignment[si];
     let from_ep = if si == 0 { None } else { Some(t.config.assignment[si - 1]) };
     let (compute, transfer) = simulator::stage_service_time(
-        &t.spec.net,
-        plat,
+        &spec.net,
+        &t.subplat,
         &t.dbs[b - 1],
         lo,
         hi,
@@ -585,8 +740,9 @@ fn dispatch_stage(
         from_ep,
         b as u64,
     );
+    let gep = t.ep_map[ep];
     let uses_link = transfer > 0.0;
-    let ep_factor = if sh.contention { (sh.ep_busy[ep] + 1) as f64 } else { 1.0 };
+    let ep_factor = if sh.contention { (sh.ep_busy[gep] + 1) as f64 } else { 1.0 };
     let link_factor =
         if sh.contention && uses_link { (sh.link_busy + 1) as f64 } else { 1.0 };
     let base = compute + transfer;
@@ -596,7 +752,7 @@ fn dispatch_stage(
     for _ in 0..b {
         reqs.push(t.stages[si].queue.pop_front().expect("len checked"));
     }
-    sh.ep_busy[ep] += 1;
+    sh.ep_busy[gep] += 1;
     if uses_link {
         sh.link_busy += 1;
     }
@@ -613,7 +769,10 @@ fn dispatch_stage(
         layers_after: hi,
     });
     if done <= duration_s {
-        sh.schedule(done, EvKind::StageDone { tenant: ti, stage: si, gen: t.gen });
+        sh.schedule(
+            done,
+            EvKind::StageDone { tenant: ti, shard: shard_ix, stage: si, gen: t.gen },
+        );
     }
     true
 }
@@ -632,8 +791,8 @@ fn all_mask(n_stages: usize) -> u64 {
 /// asserts it is false everywhere on exit, so a missed enablement channel
 /// fails loudly under `cargo test` instead of silently stalling a queue.
 #[cfg(debug_assertions)]
-fn can_progress(t: &TenantRt, si: usize, now: f64) -> bool {
-    let n_layers = t.spec.net.len();
+fn can_progress(spec: &TenantSpec, t: &ShardRt, si: usize, now: f64) -> bool {
+    let n_layers = spec.net.len();
     if let Some(inf) = &t.stages[si].busy {
         if inf.completed {
             if inf.layers_after >= n_layers {
@@ -641,7 +800,7 @@ fn can_progress(t: &TenantRt, si: usize, now: f64) -> bool {
             }
             if si + 1 < t.stages.len()
                 && inf.pending() > 0
-                && t.stages[si + 1].queue.len() < t.spec.queue_capacity
+                && t.stages[si + 1].queue.len() < spec.queue_capacity
             {
                 return true;
             }
@@ -666,10 +825,11 @@ fn can_progress(t: &TenantRt, si: usize, now: f64) -> bool {
 /// to scanning all stages, as the `FullRescan` golden tests verify.
 #[allow(clippy::too_many_arguments)]
 fn settle(
-    t: &mut TenantRt,
+    spec: &TenantSpec,
+    t: &mut ShardRt,
     sh: &mut Shared,
-    plat: &Platform,
     ti: usize,
+    shard_ix: usize,
     now: f64,
     duration_s: f64,
     dirty: u64,
@@ -689,7 +849,7 @@ fn settle(
         while cur != 0 {
             let si = 63 - cur.leading_zeros() as usize;
             cur &= !(1u64 << si);
-            if deliver_stage(t, si) {
+            if deliver_stage(spec, t, si) {
                 // the downstream queue grew and this stage may deliver
                 // again / have been freed: both are at or above the scan
                 // position, so they belong to the next round
@@ -699,7 +859,7 @@ fn settle(
                     next |= 1u64 << (si + 1);
                 }
             }
-            if dispatch_stage(t, sh, plat, ti, si, now, duration_s) {
+            if dispatch_stage(spec, t, sh, ti, shard_ix, si, now, duration_s) {
                 // queue `si` shrank: the upstream stage blocked on it can
                 // deliver now, and si-1 is still ahead of this scan
                 progress = true;
@@ -727,17 +887,21 @@ fn settle(
     }
     #[cfg(debug_assertions)]
     for si in 0..n {
-        debug_assert!(!can_progress(t, si, now), "settle fixpoint missed stage {si}");
+        debug_assert!(!can_progress(spec, t, si, now), "settle fixpoint missed stage {si}");
     }
 }
 
-/// Apply a new configuration: interrupt in-flight work (requests are
-/// re-queued at their completed-layer position; partial stage work is
-/// lost), rebuild the stage array, and freeze dispatch for the penalty.
+/// Apply a new configuration to one replica: interrupt in-flight work
+/// (requests are re-queued at their completed-layer position; partial
+/// stage work is lost), rebuild the stage array, and freeze dispatch for
+/// the penalty.
+#[allow(clippy::too_many_arguments)]
 fn apply_reconfig(
-    t: &mut TenantRt,
+    spec: &TenantSpec,
+    t: &mut ShardRt,
     sh: &mut Shared,
     ti: usize,
+    shard_ix: usize,
     now: f64,
     new_config: PipelineConfig,
     penalty_s: f64,
@@ -749,7 +913,8 @@ fn apply_reconfig(
     for st in &mut t.stages {
         if let Some(inf) = st.busy.take() {
             if !inf.completed {
-                sh.ep_busy[inf.ep] = sh.ep_busy[inf.ep].saturating_sub(1);
+                let gep = t.ep_map[inf.ep];
+                sh.ep_busy[gep] = sh.ep_busy[gep].saturating_sub(1);
                 if inf.uses_link {
                     sh.link_busy = sh.link_busy.saturating_sub(1);
                 }
@@ -766,8 +931,11 @@ fn apply_reconfig(
     orphans.sort_by_key(|&ix| t.arena[ix as usize].id);
     t.config = new_config;
     t.bounds = t.config.stage_bounds();
+    // the WTP balancer weight tracks current capacity: a re-tuned replica
+    // immediately receives its new proportional share of arrivals
+    t.weight = simulator::throughput(&spec.net, &t.subplat, &t.dbs[0], &t.config);
     t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
-    let n_layers = t.spec.net.len();
+    let n_layers = spec.net.len();
     for ix in orphans {
         // completed-but-undelivered batches sit at a stage boundary; resume
         // from the stage owning the next layer (never past the last stage)
@@ -782,20 +950,23 @@ fn apply_reconfig(
     t.frozen_until = now + penalty_s;
     t.thaw_pending = true;
     if t.frozen_until <= duration_s {
-        sh.schedule(t.frozen_until, EvKind::Resume { tenant: ti });
+        sh.schedule(t.frozen_until, EvKind::Resume { tenant: ti, shard: shard_ix });
     }
 }
 
-/// Finalize one tenant's control epoch: record stats and, under goodput
-/// regression with queue pressure, run the warm re-tune.
+/// Finalize one replica's control epoch: record stats and, under goodput
+/// regression with queue pressure, run the warm re-tune. Sharded tenants
+/// tick every replica independently — a regressing replica re-tunes on
+/// its own sub-platform without touching its siblings' EPs.
 #[allow(clippy::too_many_arguments)]
 fn epoch_tick(
-    t: &mut TenantRt,
+    spec: &TenantSpec,
+    t: &mut ShardRt,
     sh: &mut Shared,
     ti: usize,
+    shard_ix: usize,
     now: f64,
     opts: &ServeOptions,
-    plat: &Platform,
 ) {
     let epoch_s = opts.control_epoch_s;
     let goodput = t.ep_slo_ok as f64 / epoch_s;
@@ -815,14 +986,14 @@ fn epoch_tick(
     {
         // observed database: contention-free costs at the tenant's service
         // batch size (what dispatch actually charges), rescaled by the
-        // per-EP slowdown the tenant experienced — written into the
+        // per-EP slowdown the replica experienced — written into the
         // preallocated scratch database, so a warm re-tune epoch allocates
         // nothing for its observed-cost model
-        for ep in 0..plat.n_eps() {
+        for ep in 0..t.subplat.n_eps() {
             let f = t.ep_slow[ep].max(1.0);
             t.scale_buf[ep] = if f > 1.001 { f } else { 1.0 };
         }
-        t.scratch_db.copy_scaled_from(&t.dbs[t.spec.batch - 1], &t.scale_buf);
+        t.scratch_db.copy_scaled_from(&t.dbs[spec.batch - 1], &t.scale_buf);
         let (best, n) = t.controller.warm_retune(&t.scratch_db, t.config.clone());
         trials = n;
         t.retunes += 1;
@@ -830,7 +1001,17 @@ fn epoch_tick(
         t.epochs_since_retune = 0;
         retuned = true;
         if best != t.config {
-            apply_reconfig(t, sh, ti, now, best, opts.reconfig_penalty_s, opts.duration_s);
+            apply_reconfig(
+                spec,
+                t,
+                sh,
+                ti,
+                shard_ix,
+                now,
+                best,
+                opts.reconfig_penalty_s,
+                opts.duration_s,
+            );
         }
     }
     if !retuned {
@@ -868,6 +1049,14 @@ fn epoch_tick(
 /// Serve `tenants` (spec + initial pipeline configuration) on `plat` for
 /// `opts.duration_s` simulated seconds. Deterministic for a fixed
 /// `opts.seed`.
+///
+/// For tenants with `spec.shards > 1` the engine runs the shard-placement
+/// search ([`shard::plan_shards`], itself deterministic) and serves the
+/// planned replicas — unless the plan's total predicted throughput does
+/// not beat the analytic throughput of the configuration the caller
+/// passed in, in which case that configuration is served unsharded. The
+/// caller's config is thus always the baseline candidate: opting into
+/// sharding can never plan a slower deployment than it.
 pub fn serve(
     plat: &Platform,
     tenants: Vec<(TenantSpec, PipelineConfig)>,
@@ -884,59 +1073,93 @@ pub fn serve(
     let mut rts: Vec<TenantRt> = Vec::with_capacity(tenants.len());
     for (spec, config) in tenants {
         spec.validate(plat, &config)?;
-        if config.n_stages() > 64 {
-            bail!("serve: at most 64 pipeline stages supported (settle bitmask)");
-        }
-        let mut dbs = Vec::with_capacity(spec.batch);
-        for b in 1..=spec.batch {
-            dbs.push(if b == 1 {
-                PerfDb::build(&spec.net, plat, &model)
+        // shard placement: identity for unsharded tenants, planned
+        // otherwise. The caller's configuration is always the baseline
+        // candidate — a plan that does not predict strictly above it
+        // (e.g. the caller pre-tuned harder than the planner's budget)
+        // falls back to serving the provided config unsharded, so opting
+        // into sharding can never plan a slower deployment than the
+        // configuration that was passed in.
+        let identity: Vec<EpId> = (0..plat.n_eps()).collect();
+        let placements: Vec<(Vec<EpId>, PipelineConfig)> = if spec.shards > 1 {
+            let plan = shard::plan_shards(&spec.net, plat, spec.shards)?;
+            let provided_tp = {
+                let db = PerfDb::build(&spec.net, plat, &model);
+                simulator::throughput(&spec.net, plat, &db, &config)
+            };
+            if plan.total_predicted() > provided_tp {
+                plan.partitions.into_iter().zip(plan.configs).collect()
             } else {
-                batch::build_batched(&spec.net, plat, &model, b as u32)
+                vec![(identity, config.clone())]
+            }
+        } else {
+            vec![(identity, config.clone())]
+        };
+        let mut shards = Vec::with_capacity(placements.len());
+        for (ep_map, cfg) in placements {
+            let subplat = plat.subset(&ep_map);
+            if let Err(e) = cfg.validate(spec.net.len(), &subplat) {
+                bail!("serve: tenant {}: invalid replica config: {e}", spec.name);
+            }
+            if cfg.n_stages() > 64 {
+                bail!("serve: at most 64 pipeline stages supported (settle bitmask)");
+            }
+            let mut dbs = Vec::with_capacity(spec.batch);
+            for b in 1..=spec.batch {
+                dbs.push(if b == 1 {
+                    PerfDb::build(&spec.net, &subplat, &model)
+                } else {
+                    batch::build_batched(&spec.net, &subplat, &model, b as u32)
+                });
+            }
+            let scratch_db = dbs[spec.batch - 1].clone();
+            let weight = simulator::throughput(&spec.net, &subplat, &dbs[0], &cfg);
+            let controller =
+                AdaptiveController::new(spec.net.clone(), subplat.clone(), model.clone());
+            let bounds = cfg.stage_bounds();
+            let n_stages = cfg.n_stages();
+            let n_sub_eps = subplat.n_eps();
+            shards.push(ShardRt {
+                initial_config: cfg.clone(),
+                config: cfg,
+                bounds,
+                dbs,
+                stages: (0..n_stages).map(|_| StageRt::default()).collect(),
+                controller,
+                gen: 0,
+                frozen_until: 0.0,
+                thaw_pending: false,
+                ep_slow: vec![1.0; n_sub_eps],
+                arena: Vec::with_capacity(spec.queue_capacity + 1),
+                free_slots: Vec::new(),
+                buf_pool: Vec::new(),
+                scratch_db,
+                scale_buf: vec![1.0; n_sub_eps],
+                weight,
+                credit: 0.0,
+                offered: 0,
+                rejected: 0,
+                dropped: 0,
+                completed: 0,
+                slo_ok: 0,
+                max_queue_len: 0,
+                latency: QuantileSketch::new(),
+                ep_offered: 0,
+                ep_completed: 0,
+                ep_slo_ok: 0,
+                ep_rejected: 0,
+                ep_dropped: 0,
+                baseline_goodput: 0.0,
+                epochs_since_retune: opts.retune_cooldown_epochs,
+                retunes: 0,
+                retune_trials: 0,
+                epochs: Vec::new(),
+                subplat,
+                ep_map,
             });
         }
-        let scratch_db = dbs[spec.batch - 1].clone();
         let sampler = spec.arrivals.sampler(master.fork());
-        let controller = AdaptiveController::new(spec.net.clone(), plat.clone(), model.clone());
-        let bounds = config.stage_bounds();
-        let n_stages = config.n_stages();
-        rts.push(TenantRt {
-            initial_config: config.clone(),
-            config,
-            bounds,
-            dbs,
-            stages: (0..n_stages).map(|_| StageRt::default()).collect(),
-            sampler,
-            controller,
-            gen: 0,
-            frozen_until: 0.0,
-            thaw_pending: false,
-            ep_slow: vec![1.0; plat.n_eps()],
-            arena: Vec::with_capacity(spec.queue_capacity + 1),
-            free_slots: Vec::new(),
-            buf_pool: Vec::new(),
-            scratch_db,
-            scale_buf: vec![1.0; plat.n_eps()],
-            next_id: 0,
-            offered: 0,
-            rejected: 0,
-            dropped: 0,
-            completed: 0,
-            slo_ok: 0,
-            max_queue_len: 0,
-            latency: QuantileSketch::new(),
-            ep_offered: 0,
-            ep_completed: 0,
-            ep_slo_ok: 0,
-            ep_rejected: 0,
-            ep_dropped: 0,
-            baseline_goodput: 0.0,
-            epochs_since_retune: opts.retune_cooldown_epochs,
-            retunes: 0,
-            retune_trials: 0,
-            epochs: Vec::new(),
-            spec,
-        });
+        rts.push(TenantRt { sampler, next_id: 0, offered: 0, rr: 0, shards, spec });
     }
 
     let mut sh = Shared {
@@ -974,36 +1197,40 @@ pub fn serve(
         match ev.kind {
             EvKind::Arrival { tenant } => {
                 let t = &mut rts[tenant];
-                sh.note(now, 1, tenant as u64, t.next_id, || {
-                    format!("{now:.6} arrival {}#{}", t.spec.name, t.next_id)
+                let s = t.pick_shard(now);
+                let id = t.next_id;
+                sh.note(now, 1, pack_ts(tenant, s), id, || {
+                    format!("{now:.6} arrival {}#{id}->r{s}", t.spec.name)
                 });
                 t.offered += 1;
-                t.ep_offered += 1;
-                let id = t.next_id;
                 t.next_id += 1;
                 let cap = t.spec.queue_capacity;
-                if t.stages[0].queue.len() >= cap {
-                    match t.spec.admission {
+                let admission = t.spec.admission;
+                let srt = &mut t.shards[s];
+                srt.offered += 1;
+                srt.ep_offered += 1;
+                if srt.stages[0].queue.len() >= cap {
+                    match admission {
                         AdmissionPolicy::Reject => {
-                            t.rejected += 1;
-                            t.ep_rejected += 1;
+                            srt.rejected += 1;
+                            srt.ep_rejected += 1;
                         }
                         AdmissionPolicy::DropOldest => {
-                            if let Some(old) = t.stages[0].queue.pop_front() {
-                                t.free_slots.push(old);
+                            if let Some(old) = srt.stages[0].queue.pop_front() {
+                                srt.free_slots.push(old);
                             }
-                            t.dropped += 1;
-                            t.ep_dropped += 1;
-                            let ix = t.alloc(id, now);
-                            t.stages[0].queue.push_back(ix);
+                            srt.dropped += 1;
+                            srt.ep_dropped += 1;
+                            let ix = srt.alloc(id, now);
+                            srt.stages[0].queue.push_back(ix);
                         }
                     }
                 } else {
-                    let ix = t.alloc(id, now);
-                    t.stages[0].queue.push_back(ix);
-                    let l = t.stages[0].queue.len();
-                    if l > t.max_queue_len {
-                        t.max_queue_len = l;
+                    let ix = srt.alloc(id, now);
+                    srt.stages[0].queue.push_back(ix);
+                    let l = srt.stages[0].queue.len();
+                    if l > srt.max_queue_len {
+                        srt.max_queue_len = l;
                     }
                 }
                 if let Some(next) = t.sampler.next_after(now) {
@@ -1011,50 +1238,94 @@ pub fn serve(
                         sh.schedule(next, EvKind::Arrival { tenant });
                     }
                 }
-                settle(t, &mut sh, plat, tenant, now, opts.duration_s, 1, full_rescan);
+                settle(
+                    &t.spec,
+                    &mut t.shards[s],
+                    &mut sh,
+                    tenant,
+                    s,
+                    now,
+                    opts.duration_s,
+                    1,
+                    full_rescan,
+                );
             }
-            EvKind::StageDone { tenant, stage, gen } => {
+            EvKind::StageDone { tenant, shard, stage, gen } => {
                 let t = &mut rts[tenant];
-                if gen != t.gen {
+                if gen != t.shards[shard].gen {
                     // the batch was interrupted by a reconfiguration
-                    sh.note(now, 2, tenant as u64, stage as u64, || {
-                        format!("{now:.6} stale-done {} s{stage}", t.spec.name)
+                    sh.note(now, 2, pack_ts(tenant, shard), stage as u64, || {
+                        format!("{now:.6} stale-done {} r{shard}.s{stage}", t.spec.name)
                     });
                     continue;
                 }
-                sh.note(now, 3, tenant as u64, stage as u64, || {
-                    format!("{now:.6} done {} s{stage}", t.spec.name)
+                sh.note(now, 3, pack_ts(tenant, shard), stage as u64, || {
+                    format!("{now:.6} done {} r{shard}.s{stage}", t.spec.name)
                 });
-                if let Some(inf) = t.stages[stage].busy.as_mut() {
+                let srt = &mut t.shards[shard];
+                if let Some(inf) = srt.stages[stage].busy.as_mut() {
                     if !inf.completed {
                         inf.completed = true;
                         let la = inf.layers_after;
                         let (ep, uses_link, factor) = (inf.ep, inf.uses_link, inf.factor);
                         for &ix in inf.reqs.iter() {
-                            t.arena[ix as usize].layers_done = la;
+                            srt.arena[ix as usize].layers_done = la;
                         }
-                        sh.ep_busy[ep] = sh.ep_busy[ep].saturating_sub(1);
+                        let gep = srt.ep_map[ep];
+                        sh.ep_busy[gep] = sh.ep_busy[gep].saturating_sub(1);
                         if uses_link {
                             sh.link_busy = sh.link_busy.saturating_sub(1);
                         }
-                        t.ep_slow[ep] =
-                            (1.0 - EWMA_GAIN) * t.ep_slow[ep] + EWMA_GAIN * factor;
+                        srt.ep_slow[ep] =
+                            (1.0 - EWMA_GAIN) * srt.ep_slow[ep] + EWMA_GAIN * factor;
                     }
                 }
-                settle(t, &mut sh, plat, tenant, now, opts.duration_s, 1u64 << stage, full_rescan);
+                settle(
+                    &t.spec,
+                    &mut t.shards[shard],
+                    &mut sh,
+                    tenant,
+                    shard,
+                    now,
+                    opts.duration_s,
+                    1u64 << stage,
+                    full_rescan,
+                );
             }
-            EvKind::Resume { tenant } => {
+            EvKind::Resume { tenant, shard } => {
                 let t = &mut rts[tenant];
-                sh.note(now, 4, tenant as u64, 0, || {
-                    format!("{now:.6} resume {}", t.spec.name)
+                sh.note(now, 4, pack_ts(tenant, shard), 0, || {
+                    format!("{now:.6} resume {} r{shard}", t.spec.name)
                 });
-                settle(t, &mut sh, plat, tenant, now, opts.duration_s, u64::MAX, full_rescan);
+                settle(
+                    &t.spec,
+                    &mut t.shards[shard],
+                    &mut sh,
+                    tenant,
+                    shard,
+                    now,
+                    opts.duration_s,
+                    u64::MAX,
+                    full_rescan,
+                );
             }
             EvKind::Epoch => {
                 sh.note(now, 5, 0, 0, || format!("{now:.6} epoch"));
                 for (ti, t) in rts.iter_mut().enumerate() {
-                    epoch_tick(t, &mut sh, ti, now, opts, plat);
-                    settle(t, &mut sh, plat, ti, now, opts.duration_s, u64::MAX, full_rescan);
+                    for si in 0..t.shards.len() {
+                        epoch_tick(&t.spec, &mut t.shards[si], &mut sh, ti, si, now, opts);
+                        settle(
+                            &t.spec,
+                            &mut t.shards[si],
+                            &mut sh,
+                            ti,
+                            si,
+                            now,
+                            opts.duration_s,
+                            u64::MAX,
+                            full_rescan,
+                        );
+                    }
                 }
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
@@ -1064,29 +1335,7 @@ pub fn serve(
         }
     }
 
-    let tenants = rts
-        .into_iter()
-        .map(|t| {
-            let in_flight = t.backlog();
-            TenantReport {
-                name: t.spec.name.clone(),
-                initial_config: t.initial_config,
-                final_config: t.config,
-                offered: t.offered,
-                rejected: t.rejected,
-                dropped: t.dropped,
-                completed: t.completed,
-                slo_ok: t.slo_ok,
-                in_flight,
-                max_queue_len: t.max_queue_len,
-                arena_peak: t.arena.len(),
-                latency: t.latency,
-                epochs: t.epochs,
-                retunes: t.retunes,
-                retune_trials: t.retune_trials,
-            }
-        })
-        .collect();
+    let tenants = rts.into_iter().map(tenant_report).collect();
     Ok(ServeReport {
         duration_s: opts.duration_s,
         tenants,
@@ -1095,6 +1344,91 @@ pub fn serve(
         event_log: sh.log,
         truncated,
     })
+}
+
+/// Fold a tenant runtime into its report: per-replica reports (configs
+/// translated to global EP ids) plus tenant-level aggregates, including a
+/// merged latency sketch and a per-epoch series summed across replicas
+/// (every replica ticks at every epoch, so the series zip exactly).
+fn tenant_report(t: TenantRt) -> TenantReport {
+    let TenantRt { spec, shards, offered, .. } = t;
+    let mut shard_reports: Vec<ShardReport> = Vec::with_capacity(shards.len());
+    let mut latency = QuantileSketch::new();
+    for s in shards {
+        let in_flight = s.backlog();
+        latency.merge(&s.latency);
+        shard_reports.push(ShardReport {
+            initial_config: shard::to_global(&s.initial_config, &s.ep_map),
+            final_config: shard::to_global(&s.config, &s.ep_map),
+            predicted_throughput: s.weight,
+            offered: s.offered,
+            rejected: s.rejected,
+            dropped: s.dropped,
+            completed: s.completed,
+            slo_ok: s.slo_ok,
+            in_flight,
+            max_queue_len: s.max_queue_len,
+            arena_peak: s.arena.len(),
+            retunes: s.retunes,
+            retune_trials: s.retune_trials,
+            latency: s.latency,
+            epochs: s.epochs,
+            eps: s.ep_map,
+        });
+    }
+    let n_epochs = shard_reports.first().map_or(0, |s| s.epochs.len());
+    debug_assert!(
+        shard_reports.iter().all(|s| s.epochs.len() == n_epochs),
+        "replicas tick in lockstep"
+    );
+    let mut epochs = Vec::with_capacity(n_epochs);
+    for e in 0..n_epochs {
+        let mut agg = EpochStats {
+            end_s: shard_reports[0].epochs[e].end_s,
+            offered: 0,
+            completed: 0,
+            slo_ok: 0,
+            rejected: 0,
+            dropped: 0,
+            goodput: 0.0,
+            throughput: 0.0,
+            backlog: 0,
+            retuned: false,
+            retune_trials: 0,
+        };
+        for sr in &shard_reports {
+            let ep = &sr.epochs[e];
+            agg.offered += ep.offered;
+            agg.completed += ep.completed;
+            agg.slo_ok += ep.slo_ok;
+            agg.rejected += ep.rejected;
+            agg.dropped += ep.dropped;
+            agg.goodput += ep.goodput;
+            agg.throughput += ep.throughput;
+            agg.backlog += ep.backlog;
+            agg.retuned |= ep.retuned;
+            agg.retune_trials += ep.retune_trials;
+        }
+        epochs.push(agg);
+    }
+    TenantReport {
+        name: spec.name,
+        initial_config: shard_reports[0].initial_config.clone(),
+        final_config: shard_reports[0].final_config.clone(),
+        offered,
+        rejected: shard_reports.iter().map(|s| s.rejected).sum(),
+        dropped: shard_reports.iter().map(|s| s.dropped).sum(),
+        completed: shard_reports.iter().map(|s| s.completed).sum(),
+        slo_ok: shard_reports.iter().map(|s| s.slo_ok).sum(),
+        in_flight: shard_reports.iter().map(|s| s.in_flight).sum(),
+        max_queue_len: shard_reports.iter().map(|s| s.max_queue_len).max().unwrap_or(0),
+        arena_peak: shard_reports.iter().map(|s| s.arena_peak).sum(),
+        latency,
+        epochs,
+        retunes: shard_reports.iter().map(|s| s.retunes).sum(),
+        retune_trials: shard_reports.iter().map(|s| s.retune_trials).sum(),
+        shards: shard_reports,
+    }
 }
 
 #[cfg(test)]
@@ -1374,5 +1708,157 @@ mod tests {
         let (spec, _) = small_tenant("t0", 1.0);
         let bad = PipelineConfig::new(vec![2], vec![0]);
         assert!(serve(&plat, vec![(spec, bad)], &ServeOptions::default()).is_err());
+        let (spec, cfg) = small_tenant("t0", 1.0);
+        assert!(serve(&plat, vec![(spec.with_shards(0), cfg)], &ServeOptions::default()).is_err());
+    }
+
+    // --- sharding ---------------------------------------------------------
+
+    /// SynthNet on C5: the fixture where replication provably beats one
+    /// pipeline (the bottleneck layer caps any single pipeline at ~1/63ms
+    /// while 4× (1 FEP + 1 SEP) replicas total ~10% more capacity).
+    fn sharded_tenant(
+        rate_factor: f64,
+        shards: usize,
+        balancer: BalancerPolicy,
+    ) -> (Platform, TenantSpec, PipelineConfig, f64) {
+        let plat = crate::platform::configs::c5();
+        let net = networks::synthnet();
+        let cfg = crate::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let spec = TenantSpec::new("sharded", net, ArrivalProcess::Poisson {
+            rate: rate_factor * cap,
+        })
+        .with_shards(shards)
+        .with_balancer(balancer)
+        .with_queue_capacity(16)
+        .with_admission(AdmissionPolicy::DropOldest)
+        .with_slo(200.0 / cap);
+        (plat, spec, cfg, cap)
+    }
+
+    #[test]
+    fn sharded_tenant_conserves_and_replicas_are_disjoint() {
+        let (plat, spec, cfg, cap) = sharded_tenant(2.0, 2, BalancerPolicy::RoundRobin);
+        let report = serve(&plat, vec![(spec, cfg)], &base_opts(200.0 / cap)).unwrap();
+        let t = &report.tenants[0];
+        assert!(t.conserved(), "conservation: {t:?}");
+        assert!(t.completed > 0);
+        assert_eq!(t.shards.len(), 2, "C5 SynthNet must actually replicate");
+        // replicas own disjoint EP subsets
+        let mut seen = vec![false; plat.n_eps()];
+        for s in &t.shards {
+            assert!(!s.eps.is_empty());
+            for &e in &s.eps {
+                assert!(e < plat.n_eps());
+                assert!(!seen[e], "EP {e} owned by two replicas");
+                seen[e] = true;
+            }
+            // global configs stay inside the replica's subset
+            for ep in &s.final_config.assignment {
+                assert!(s.eps.contains(ep), "final config escaped its subset");
+            }
+        }
+        // replica counters sum to the tenant aggregates
+        assert_eq!(t.offered, t.shards.iter().map(|s| s.offered).sum::<u64>());
+        assert_eq!(t.completed, t.shards.iter().map(|s| s.completed).sum::<u64>());
+        assert_eq!(t.slo_ok, t.shards.iter().map(|s| s.slo_ok).sum::<u64>());
+        assert_eq!(
+            t.in_flight,
+            t.shards.iter().map(|s| s.in_flight).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn unsharded_tenant_reports_single_identity_replica() {
+        let plat = crate::platform::configs::c1();
+        let (spec, cfg) = small_tenant("t0", 0.0);
+        let cap = capacity(&spec, &plat, &cfg);
+        let (spec, cfg) = small_tenant("t0", 0.4 * cap);
+        let report = serve(&plat, vec![(spec, cfg.clone())], &base_opts(100.0 / cap)).unwrap();
+        let t = &report.tenants[0];
+        assert_eq!(t.shards.len(), 1);
+        let s = &t.shards[0];
+        assert_eq!(s.eps, (0..plat.n_eps()).collect::<Vec<_>>());
+        assert_eq!(s.initial_config, cfg, "identity map keeps global ids");
+        assert_eq!(t.final_config, s.final_config);
+        assert_eq!(t.offered, s.offered);
+    }
+
+    #[test]
+    fn balancers_split_load_and_stay_deterministic() {
+        for policy in [
+            BalancerPolicy::RoundRobin,
+            BalancerPolicy::JoinShortestQueue,
+            BalancerPolicy::WeightedThroughput,
+        ] {
+            let run = || {
+                let (plat, spec, cfg, cap) = sharded_tenant(1.5, 2, policy);
+                let mut opts = base_opts(150.0 / cap);
+                opts.record_log = true;
+                serve(&plat, vec![(spec, cfg)], &opts).unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.log_hash, b.log_hash, "{policy:?}: nondeterministic");
+            assert_eq!(a.event_log, b.event_log, "{policy:?}");
+            let t = &a.tenants[0];
+            assert!(t.conserved());
+            for s in &t.shards {
+                assert!(
+                    s.offered > t.offered / 5,
+                    "{policy:?}: replica starved ({} of {})",
+                    s.offered,
+                    t.offered
+                );
+            }
+            if policy == BalancerPolicy::RoundRobin {
+                let diff =
+                    t.shards[0].offered.abs_diff(t.shards[1].offered);
+                assert!(diff <= 1, "round-robin alternates exactly: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_plan_never_predicts_below_provided_config() {
+        // Whether or not the planner replicates on this small fixture,
+        // the served deployment's total predicted throughput must be at
+        // least the analytic throughput of the caller's configuration
+        // (the provided-config baseline of the placement decision).
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let (spec, cfg) = small_tenant("t0", 0.5 * cap);
+        let spec = spec.with_shards(2);
+        let report = serve(&plat, vec![(spec, cfg)], &base_opts(60.0 / cap)).unwrap();
+        let t = &report.tenants[0];
+        let total: f64 = t.shards.iter().map(|s| s.predicted_throughput).sum();
+        assert!(
+            total >= cap * (1.0 - 1e-12),
+            "deployment predicts {total}, below the provided config's {cap}"
+        );
+        assert!(t.conserved());
+    }
+
+    #[test]
+    fn sharding_increases_completions_under_overload() {
+        // Offered load saturates every deployment; completions then track
+        // capacity, which the placement search grows with the shard budget.
+        let run = |shards: usize| {
+            let (plat, spec, cfg, cap) = sharded_tenant(3.0, shards, BalancerPolicy::JoinShortestQueue);
+            (serve(&plat, vec![(spec, cfg)], &base_opts(300.0 / cap)).unwrap(), cap)
+        };
+        let (r1, _) = run(1);
+        let (r4, _) = run(4);
+        let c1 = r1.tenants[0].completed as f64;
+        let c4 = r4.tenants[0].completed as f64;
+        assert!(r1.tenants[0].conserved() && r4.tenants[0].conserved());
+        assert!(r4.tenants[0].shards.len() > 1, "budget of 4 must replicate");
+        assert!(
+            c4 > 1.02 * c1,
+            "4-way sharding must add capacity: {c4} vs {c1}"
+        );
     }
 }

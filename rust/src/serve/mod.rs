@@ -21,9 +21,14 @@
 //!   state is allocation-free (request slab arena, recycled batch
 //!   buffers, event-driven settling, scratch re-tune database — see the
 //!   engine docs §Hot-path design);
+//! * [`shard`] — sharded serving: the shard-placement search that
+//!   partitions the platform's EPs into disjoint subsets, tunes one
+//!   replica pipeline per subset, and the front-end [`BalancerPolicy`]
+//!   the engine routes arrivals with (`TenantSpec::with_shards`);
 //! * [`sweep`] — parallel scenario sweeps: independent serving scenarios
 //!   fanned out across CPU cores with order- and thread-count-invariant
-//!   results (`shisha serve --sweep`);
+//!   results (`shisha serve --sweep`), including side-by-side shard-count
+//!   grids ([`sweep::shard_grid`], `shisha serve --sweep --shard-grid`);
 //! * [`slo`] — streaming latency-quantile sketch, goodput and Jain
 //!   fairness.
 //!
@@ -32,12 +37,16 @@
 
 pub mod arrivals;
 pub mod engine;
+pub mod shard;
 pub mod slo;
 pub mod sweep;
 pub mod tenant;
 
 pub use arrivals::{ArrivalProcess, ArrivalSampler};
-pub use engine::{serve, EpochStats, PumpMode, ServeOptions, ServeReport, TenantReport};
+pub use engine::{
+    serve, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport, TenantReport,
+};
+pub use shard::{plan_shards, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};
 pub use sweep::{run_sweep, Scenario, ScenarioStats, SweepOutcome};
 pub use tenant::{AdmissionPolicy, TenantSpec};

@@ -1,0 +1,380 @@
+//! Sharded serving: replicate a tenant's pipeline across disjoint EP
+//! subsets behind a front-end load balancer.
+//!
+//! A single Shisha pipeline is throughput-bound by its slowest stage; once
+//! that stage is a single indivisible layer, adding EPs to the *same*
+//! pipeline cannot help. Replication can: partition the platform's EPs
+//! into `k` disjoint subsets, run one tuned replica per subset, and split
+//! arrivals across the replicas — the ROADMAP's "sharded serving" item,
+//! and the inter-layer multi-instance placement argument of Odema et al.
+//! (2312.09401) / Scope (2602.14393).
+//!
+//! This module is the **placement search**:
+//!
+//! * [`candidate_partitions`] proposes deterministic ways of dealing the
+//!   platform's EPs (ranked by [`crate::platform::Platform::eps_by_rank`])
+//!   into `k` disjoint, heterogeneity-balanced or class-contiguous bins;
+//! * [`plan_shards`] tunes every candidate partition for every shard count
+//!   `1..=k` through the partition-then-tune driver
+//!   ([`crate::explore::partition`] — exhaustive on small restricted
+//!   spaces, Shisha otherwise) and keeps the plan with the highest total
+//!   predicted throughput. Because the 1-shard plan is always a candidate,
+//!   the chosen plan's predicted throughput is **monotonically
+//!   non-decreasing in `k`**: asking for more replicas never plans a
+//!   slower deployment ("shards" on [`super::TenantSpec`] is a maximum,
+//!   not a mandate).
+//!
+//! The serving engine ([`super::engine`]) materialises a plan as one
+//! replica runtime per subset (own queues, slab arena, scratch re-tune
+//! database, sub-platform view) and routes each arrival through the
+//! tenant's [`BalancerPolicy`].
+
+use anyhow::{bail, Result};
+
+use crate::explore::partition::{tune_partition, SubsetPlan};
+use crate::model::Network;
+use crate::pipeline::PipelineConfig;
+use crate::platform::{EpId, Platform};
+
+/// How a sharded tenant's front-end spreads arrivals over its replicas.
+///
+/// All policies are deterministic (no RNG): a serving run remains a pure
+/// function of its seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BalancerPolicy {
+    /// Cycle through replicas in index order.
+    #[default]
+    RoundRobin,
+    /// Route to the least-loaded replica: smallest total backlog (queued
+    /// plus in-service requests across all stages), with replicas frozen
+    /// in a reconfiguration penalty window deprioritized outright. Ties
+    /// break on the lowest replica index.
+    JoinShortestQueue,
+    /// Smooth weighted round-robin with each replica weighted by its
+    /// predicted (analytic) throughput — faster replicas receive
+    /// proportionally more arrivals.
+    WeightedThroughput,
+}
+
+impl BalancerPolicy {
+    /// Short display name (also the CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            BalancerPolicy::RoundRobin => "rr",
+            BalancerPolicy::JoinShortestQueue => "jsq",
+            BalancerPolicy::WeightedThroughput => "wtp",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr`, `jsq`, `wtp` and long aliases).
+    pub fn parse(s: &str) -> Result<BalancerPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Ok(BalancerPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(BalancerPolicy::JoinShortestQueue),
+            "wtp" | "weighted" | "weighted-throughput" => Ok(BalancerPolicy::WeightedThroughput),
+            other => bail!("unknown balancer {other:?} (rr, jsq, wtp)"),
+        }
+    }
+}
+
+/// A concrete shard placement: disjoint EP subsets with one tuned replica
+/// configuration per subset.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Disjoint EP subsets (global EP ids); `partitions[s]` is also the
+    /// local-to-global id map of shard `s`'s sub-platform.
+    pub partitions: Vec<Vec<EpId>>,
+    /// Replica configuration per shard, in the **local** EP ids of that
+    /// shard's sub-platform ([`Platform::subset`] of the partition entry).
+    pub configs: Vec<PipelineConfig>,
+    /// Analytic steady-state throughput per replica, img/s.
+    pub predicted: Vec<f64>,
+    /// Which candidate strategy produced the winning partition.
+    pub strategy: &'static str,
+}
+
+impl ShardPlan {
+    /// Number of replicas.
+    pub fn n_shards(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Sum of per-replica predicted throughputs (the planning objective).
+    pub fn total_predicted(&self) -> f64 {
+        self.predicted.iter().sum()
+    }
+
+    /// Replica configurations translated to **global** EP ids (display /
+    /// reporting; the engine keeps local ids internally).
+    pub fn global_configs(&self) -> Vec<PipelineConfig> {
+        self.configs
+            .iter()
+            .zip(&self.partitions)
+            .map(|(cfg, map)| to_global(cfg, map))
+            .collect()
+    }
+}
+
+/// Translate a local-EP-id configuration to global ids via the shard's
+/// local-to-global map.
+pub fn to_global(cfg: &PipelineConfig, ep_map: &[EpId]) -> PipelineConfig {
+    PipelineConfig::new(
+        cfg.stages.clone(),
+        cfg.assignment.iter().map(|&e| ep_map[e]).collect(),
+    )
+}
+
+/// Deal `items` round-robin into `k` bins: bin `i` gets items `i`, `i+k`, …
+fn deal<T: Copy>(items: &[T], k: usize) -> Vec<Vec<T>> {
+    let mut bins = vec![Vec::new(); k];
+    for (i, &x) in items.iter().enumerate() {
+        bins[i % k].push(x);
+    }
+    bins
+}
+
+/// Snake-deal `items` into `k` bins (0,1,…,k−1,k−1,…,1,0,0,1,…): pairs the
+/// best remaining EP with the worst-served bin, balancing aggregate
+/// performance more tightly than a plain deal.
+fn snake<T: Copy>(items: &[T], k: usize) -> Vec<Vec<T>> {
+    let mut bins = vec![Vec::new(); k];
+    for (i, &x) in items.iter().enumerate() {
+        let lap = i / k;
+        let pos = i % k;
+        let bin = if lap % 2 == 0 { pos } else { k - 1 - pos };
+        bins[bin].push(x);
+    }
+    bins
+}
+
+/// Split `items` into `k` contiguous blocks of near-equal size (earlier
+/// blocks take the remainder) — class-contiguous partitions: on a ranked
+/// EP list this groups FEPs with FEPs and SEPs with SEPs.
+fn blocks<T: Copy>(items: &[T], k: usize) -> Vec<Vec<T>> {
+    let n = items.len();
+    let base = n / k;
+    let extra = n % k;
+    let mut bins = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        bins.push(items[lo..lo + len].to_vec());
+        lo += len;
+    }
+    bins
+}
+
+/// Deterministic candidate partitions of the platform's EPs into `k`
+/// disjoint, non-empty subsets, each tagged with its strategy name.
+/// Requires `1 ≤ k ≤ n_eps`. For `k = 1` the single candidate keeps EPs in
+/// **platform id order**, so a 1-shard plan tunes exactly the full
+/// platform (byte-identical to [`super::shisha_config`]'s search).
+pub fn candidate_partitions(plat: &Platform, k: usize) -> Vec<(&'static str, Vec<Vec<EpId>>)> {
+    assert!(
+        (1..=plat.n_eps()).contains(&k),
+        "candidate_partitions: 1 <= k <= n_eps"
+    );
+    if k == 1 {
+        return vec![("full", vec![(0..plat.n_eps()).collect()])];
+    }
+    let ranked = plat.eps_by_rank();
+    let mut out: Vec<(&'static str, Vec<Vec<EpId>>)> = Vec::new();
+    for (name, parts) in [
+        ("rank-deal", deal(&ranked, k)),
+        ("rank-snake", snake(&ranked, k)),
+        ("rank-blocks", blocks(&ranked, k)),
+    ] {
+        debug_assert!(parts.iter().all(|p| !p.is_empty()), "k <= n_eps keeps bins non-empty");
+        // skip duplicates (e.g. deal == snake when each bin holds one EP)
+        if !out.iter().any(|(_, seen)| *seen == parts) {
+            out.push((name, parts));
+        }
+    }
+    out
+}
+
+/// Search shard placements for up to `max_shards` replicas of `net` on
+/// `plat` and return the best plan by total predicted throughput.
+///
+/// Every shard count `1..=min(max_shards, n_eps)` and every candidate
+/// partition is tuned via [`tune_partition`]; ties keep the earlier
+/// (fewer-shard, earlier-strategy) plan, so results are deterministic and
+/// `plan_shards(net, plat, k+1)` never predicts below
+/// `plan_shards(net, plat, k)` (the candidate sets nest).
+pub fn plan_shards(net: &Network, plat: &Platform, max_shards: usize) -> Result<ShardPlan> {
+    if max_shards == 0 {
+        bail!("plan_shards: at least one shard required");
+    }
+    if net.is_empty() {
+        bail!("plan_shards: empty network");
+    }
+    let kmax = max_shards.min(plat.n_eps());
+    let mut best: Option<ShardPlan> = None;
+    for k in 1..=kmax {
+        for (strategy, parts) in candidate_partitions(plat, k) {
+            let plans: Vec<SubsetPlan> = tune_partition(net, plat, &parts, SHARD_TUNE_EVALS);
+            let plan = ShardPlan {
+                predicted: plans.iter().map(|p| p.predicted_throughput).collect(),
+                configs: plans.into_iter().map(|p| p.config).collect(),
+                partitions: parts,
+                strategy,
+            };
+            if best.as_ref().map_or(true, |b| plan.total_predicted() > b.total_predicted()) {
+                best = Some(plan);
+            }
+        }
+    }
+    Ok(best.expect("kmax >= 1 evaluates at least one candidate"))
+}
+
+/// Shisha evaluation budget per subset when the restricted space is too
+/// large to enumerate — matches [`super::shisha_config`]'s budget so the
+/// 1-shard plan reproduces the unsharded initial configuration.
+pub const SHARD_TUNE_EVALS: u64 = 500;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn assert_disjoint_cover(parts: &[Vec<EpId>], n_eps: usize) {
+        let mut seen = vec![false; n_eps];
+        for p in parts {
+            assert!(!p.is_empty(), "no empty bins");
+            for &e in p {
+                assert!(e < n_eps);
+                assert!(!seen[e], "EP {e} in two bins");
+                seen[e] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every EP covered");
+    }
+
+    #[test]
+    fn candidates_are_disjoint_covering_partitions() {
+        for plat in configs::all_c() {
+            for k in 1..=plat.n_eps().min(4) {
+                let cands = candidate_partitions(&plat, k);
+                assert!(!cands.is_empty());
+                for (name, parts) in &cands {
+                    assert_eq!(parts.len(), k, "{name} on {}", plat.name);
+                    assert_disjoint_cover(parts, plat.n_eps());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snake_balances_rank_pairs() {
+        // 8 ranked items into 4 bins: snake pairs best with worst
+        let items: Vec<usize> = (0..8).collect();
+        let bins = snake(&items, 4);
+        assert_eq!(bins[0], vec![0, 7]);
+        assert_eq!(bins[3], vec![3, 4]);
+    }
+
+    #[test]
+    fn balancer_policy_parses_and_names() {
+        for (s, want) in [
+            ("rr", BalancerPolicy::RoundRobin),
+            ("round-robin", BalancerPolicy::RoundRobin),
+            ("jsq", BalancerPolicy::JoinShortestQueue),
+            ("wtp", BalancerPolicy::WeightedThroughput),
+            ("weighted", BalancerPolicy::WeightedThroughput),
+        ] {
+            let got = BalancerPolicy::parse(s).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(BalancerPolicy::parse(got.name()).unwrap(), got);
+        }
+        assert!(BalancerPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn plan_configs_valid_on_their_subsets() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let plan = plan_shards(&net, &plat, 4).unwrap();
+        assert!((1..=4).contains(&plan.n_shards()));
+        assert_disjoint_cover_subsets(&plan, plat.n_eps());
+        for (cfg, eps) in plan.configs.iter().zip(&plan.partitions) {
+            let sub = plat.subset(eps);
+            assert!(cfg.validate(net.len(), &sub).is_ok(), "{}", cfg.describe());
+        }
+        // global translation stays inside the shard's subset
+        for (g, eps) in plan.global_configs().iter().zip(&plan.partitions) {
+            for ep in &g.assignment {
+                assert!(eps.contains(ep), "global id {ep} outside its partition");
+            }
+        }
+    }
+
+    fn assert_disjoint_cover_subsets(plan: &ShardPlan, n_eps: usize) {
+        let mut seen = vec![false; n_eps];
+        for p in &plan.partitions {
+            for &e in p {
+                assert!(!seen[e], "shard subsets overlap on EP {e}");
+                seen[e] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn predicted_throughput_monotone_in_max_shards() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let mut prev = 0.0;
+        for k in [1usize, 2, 4] {
+            let plan = plan_shards(&net, &plat, k).unwrap();
+            let total = plan.total_predicted();
+            assert!(
+                total >= prev,
+                "max_shards {k}: predicted {total} fell below {prev}"
+            );
+            prev = total;
+        }
+    }
+
+    #[test]
+    fn replication_beats_single_pipeline_on_c5() {
+        // The headline: SynthNet's bottleneck layer caps any single
+        // pipeline, while 4 replicas of (1 FEP + 1 SEP) each add capacity.
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let single = plan_shards(&net, &plat, 1).unwrap();
+        let quad = plan_shards(&net, &plat, 4).unwrap();
+        assert!(quad.n_shards() > 1, "planner should actually replicate");
+        assert!(
+            quad.total_predicted() > 1.02 * single.total_predicted(),
+            "replication headroom: {} vs {}",
+            quad.total_predicted(),
+            single.total_predicted()
+        );
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let net = networks::synthnet();
+        let plat = configs::c4();
+        let a = plan_shards(&net, &plat, 3).unwrap();
+        let b = plan_shards(&net, &plat, 3).unwrap();
+        assert_eq!(a.partitions, b.partitions);
+        assert_eq!(a.configs, b.configs);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.total_predicted().to_bits(), b.total_predicted().to_bits());
+    }
+
+    #[test]
+    fn plan_rejects_zero_shards() {
+        let net = networks::synthnet_small();
+        assert!(plan_shards(&net, &configs::c1(), 0).is_err());
+    }
+
+    #[test]
+    fn max_shards_capped_at_ep_count() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1(); // 2 EPs
+        let plan = plan_shards(&net, &plat, 16).unwrap();
+        assert!(plan.n_shards() <= 2);
+    }
+}

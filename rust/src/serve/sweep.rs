@@ -31,6 +31,7 @@ use crate::platform::Platform;
 
 use super::arrivals::ArrivalProcess;
 use super::engine::{serve, ServeOptions, ServeReport};
+use super::shard::BalancerPolicy;
 use super::slo::QuantileSketch;
 use super::tenant::TenantSpec;
 
@@ -198,6 +199,71 @@ pub fn load_grid(
     out
 }
 
+/// Build the shard-scaling scenario grid: for every shard budget in
+/// `shard_counts` (× load factor × seed), one tenant serves the same
+/// **MMPP drift workload** — a low phase under a single pipeline's
+/// capacity and a burst phase at `2.5 × rho × capacity` that saturates
+/// every deployment — so goodput differences across cells isolate the
+/// capacity added by replication under the identical contention model.
+///
+/// `capacity` is the analytic throughput of `config` (the unsharded
+/// fallback, also served verbatim by the `shards = 1` cells); dwell times
+/// split the horizon into ~6 alternating phases, and the SLO is set wide
+/// (300 bottleneck periods) so bounded-queue completions count as goodput
+/// for every shard count — the comparison measures throughput scaling,
+/// not SLO tuning.
+#[allow(clippy::too_many_arguments)]
+pub fn shard_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    shard_counts: &[usize],
+    balancer: BalancerPolicy,
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let dwell_s = (base.duration_s / 6.0).max(1e-6);
+    let mut out = Vec::with_capacity(shard_counts.len() * rhos.len() * seeds.len());
+    for &rho in rhos {
+        for &seed in seeds {
+            for &k in shard_counts {
+                let arrivals = ArrivalProcess::Mmpp {
+                    low_rate: 0.5 * rho * cap,
+                    high_rate: 2.5 * rho * cap,
+                    mean_low_s: dwell_s,
+                    mean_high_s: dwell_s,
+                };
+                let spec = TenantSpec::new(
+                    format!("{}-k{k}-rho{rho}-s{seed}", net.name),
+                    net.clone(),
+                    arrivals,
+                )
+                .with_shards(k)
+                .with_balancer(balancer)
+                .with_queue_capacity(16)
+                .with_admission(super::tenant::AdmissionPolicy::DropOldest)
+                .with_slo(300.0 / cap);
+                let mut opts = base.clone();
+                opts.seed = seed;
+                out.push(Scenario {
+                    name: format!(
+                        "{} shards={k} rho={rho} seed={seed} {}",
+                        net.name,
+                        balancer.name()
+                    ),
+                    plat: plat.clone(),
+                    tenants: vec![(spec, config.clone())],
+                    opts,
+                });
+            }
+        }
+    }
+    out
+}
+
 fn run_one(sc: &Scenario) -> SweepOutcome {
     let t0 = std::time::Instant::now();
     let report = serve(&sc.plat, sc.tenants.clone(), &sc.opts);
@@ -312,6 +378,85 @@ mod tests {
         assert!(out[0].report.is_err(), "invalid scenario must error");
         assert!(out[1].report.is_ok(), "other scenarios must still run");
         assert!(out[1].events_per_s().unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn shard_grid_covers_counts_and_same_seed_same_arrivals() {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let base = ServeOptions {
+            duration_s: 2.0,
+            control: false,
+            control_epoch_s: 0.0,
+            ..Default::default()
+        };
+        let sc = shard_grid(
+            &plat,
+            &net,
+            &cfg,
+            &[1, 2],
+            crate::serve::BalancerPolicy::RoundRobin,
+            &[1.0],
+            &[7, 8],
+            &base,
+        );
+        assert_eq!(sc.len(), 4);
+        let mut names: Vec<&str> = sc.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4, "cell names unique");
+        // cells of one seed differ only in the shard budget
+        assert_eq!(sc[0].opts.seed, sc[1].opts.seed);
+        assert_eq!(sc[0].tenants[0].0.arrivals, sc[1].tenants[0].0.arrivals);
+        assert_eq!(sc[0].tenants[0].0.shards, 1);
+        assert_eq!(sc[1].tenants[0].0.shards, 2);
+    }
+
+    #[test]
+    fn shard_grid_goodput_monotone_on_mmpp_drift() {
+        // The ROADMAP headline: on C5/SynthNet, goodput under the same
+        // MMPP drift workload must not decrease as the shard budget grows
+        // {1, 2, 4} — the placement search guarantees the *predicted*
+        // ordering (candidate sets nest), and the saturating burst phase
+        // makes realized goodput track capacity.
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = crate::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let base = ServeOptions {
+            duration_s: 400.0 / cap,
+            control: false,
+            control_epoch_s: 0.0,
+            ..Default::default()
+        };
+        let sc = shard_grid(
+            &plat,
+            &net,
+            &cfg,
+            &[1, 2, 4],
+            crate::serve::BalancerPolicy::JoinShortestQueue,
+            &[1.0],
+            &[31],
+            &base,
+        );
+        let out = run_sweep(sc, available_threads());
+        let goodputs: Vec<f64> = out
+            .iter()
+            .map(|o| ScenarioStats::from_report(o.report.as_ref().expect("serve run")).goodput_rps)
+            .collect();
+        assert_eq!(goodputs.len(), 3);
+        for w in goodputs.windows(2) {
+            assert!(
+                w[1] >= 0.999 * w[0],
+                "goodput must not decrease with shard budget: {goodputs:?}"
+            );
+        }
+        assert!(
+            goodputs[2] > 1.01 * goodputs[0],
+            "replication must add real capacity: {goodputs:?}"
+        );
     }
 
     #[test]

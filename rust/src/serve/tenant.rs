@@ -16,6 +16,7 @@ use crate::pipeline::PipelineConfig;
 use crate::platform::Platform;
 
 use super::arrivals::ArrivalProcess;
+use super::shard::BalancerPolicy;
 
 /// What to do when a request arrives and the tenant's entry queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +45,16 @@ pub struct TenantSpec {
     pub batch: usize,
     /// Admission policy at the entry queue.
     pub admission: AdmissionPolicy,
+    /// Maximum pipeline replicas (≥ 1; 1 = unsharded). When > 1 the
+    /// engine runs [`crate::serve::shard::plan_shards`] and serves the
+    /// best placement with **at most** this many replicas on disjoint EP
+    /// subsets — the planner never picks a sharded placement predicted to
+    /// be slower than fewer shards, and counts beyond the platform's EP
+    /// count are capped there.
+    pub shards: usize,
+    /// Front-end arrival routing across replicas (ignored when the plan
+    /// ends up with a single replica).
+    pub balancer: BalancerPolicy,
 }
 
 impl TenantSpec {
@@ -58,6 +69,8 @@ impl TenantSpec {
             queue_capacity: 64,
             batch: 1,
             admission: AdmissionPolicy::Reject,
+            shards: 1,
+            balancer: BalancerPolicy::RoundRobin,
         }
     }
 
@@ -85,6 +98,19 @@ impl TenantSpec {
         self
     }
 
+    /// Builder-style shard-count override (maximum replicas; see
+    /// [`TenantSpec::shards`]).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Builder-style load-balancer override.
+    pub fn with_balancer(mut self, balancer: BalancerPolicy) -> Self {
+        self.balancer = balancer;
+        self
+    }
+
     /// Validate the spec against the platform it will be served on.
     pub fn validate(&self, plat: &Platform, config: &PipelineConfig) -> Result<()> {
         if self.queue_capacity == 0 {
@@ -95,6 +121,9 @@ impl TenantSpec {
         }
         if self.slo_latency_s <= 0.0 {
             bail!("tenant {}: SLO latency must be positive", self.name);
+        }
+        if self.shards == 0 {
+            bail!("tenant {}: shards must be ≥ 1", self.name);
         }
         if let Err(e) = config.validate(self.net.len(), plat) {
             bail!("tenant {}: invalid pipeline config: {e}", self.name);
@@ -119,6 +148,8 @@ mod tests {
         assert_eq!(s.queue_capacity, 64);
         assert_eq!(s.batch, 1);
         assert_eq!(s.admission, AdmissionPolicy::Reject);
+        assert_eq!(s.shards, 1, "unsharded by default");
+        assert_eq!(s.balancer, BalancerPolicy::RoundRobin);
         assert!(s.slo_latency_s > 0.0);
     }
 
@@ -128,11 +159,15 @@ mod tests {
             .with_slo(1.5)
             .with_queue_capacity(8)
             .with_batch(4)
-            .with_admission(AdmissionPolicy::DropOldest);
+            .with_admission(AdmissionPolicy::DropOldest)
+            .with_shards(3)
+            .with_balancer(BalancerPolicy::JoinShortestQueue);
         assert_eq!(s.slo_latency_s, 1.5);
         assert_eq!(s.queue_capacity, 8);
         assert_eq!(s.batch, 4);
         assert_eq!(s.admission, AdmissionPolicy::DropOldest);
+        assert_eq!(s.shards, 3);
+        assert_eq!(s.balancer, BalancerPolicy::JoinShortestQueue);
     }
 
     #[test]
@@ -143,6 +178,8 @@ mod tests {
         assert!(spec().with_queue_capacity(0).validate(&plat, &cfg).is_err());
         assert!(spec().with_batch(0).validate(&plat, &cfg).is_err());
         assert!(spec().with_slo(0.0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_shards(0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_shards(9).validate(&plat, &cfg).is_ok(), "counts above n_eps cap");
         let bad_cfg = PipelineConfig::new(vec![5], vec![0]);
         assert!(spec().validate(&plat, &bad_cfg).is_err());
     }

@@ -243,3 +243,91 @@ fn serve_sweep_rejects_bad_grid() {
     assert!(!o.status.success());
     assert!(stderr(&o).contains("tenant-grid"), "{}", stderr(&o));
 }
+
+#[test]
+fn serve_sharded_reports_replicas() {
+    // --shards 2 on C1 (2 EPs): a tiny but real sharded run; per-replica
+    // lines appear whenever the placement search actually replicates
+    let o = shisha(&[
+        "serve",
+        "--tenants",
+        "1",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--arrivals",
+        "poisson:120",
+        "--duration",
+        "2",
+        "--shards",
+        "2",
+        "--balancer",
+        "jsq",
+        "--seed",
+        "5",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("synthnet_small-0"), "{out}");
+    // the run must succeed and stay conserved regardless of whether the
+    // planner chose 1 or 2 replicas; replica detail lines are shard-only
+    if out.contains("shard 0") {
+        assert!(out.contains("shard 1"), "{out}");
+        assert!(out.contains("predicted"), "{out}");
+    }
+}
+
+#[test]
+fn serve_rejects_bad_balancer() {
+    let o = shisha(&["serve", "--balancer", "warp", "--duration", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("unknown balancer"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_sweep_shard_grid_compares_shard_counts() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--shard-grid",
+        "1,2",
+        "--rho-grid",
+        "1.0",
+        "--seeds",
+        "7",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.5",
+        "--threads",
+        "2",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("sweeping 2 scenario(s)"), "{out}");
+    assert!(out.contains("shards=1"), "{out}");
+    assert!(out.contains("shards=2"), "{out}");
+    assert!(out.contains("goodput (req/s)"), "{out}");
+}
+
+#[test]
+fn serve_sweep_rejects_bad_shard_grid() {
+    let o = shisha(&["serve", "--sweep", "--shard-grid", "0", "--duration", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("shard-grid"), "{}", stderr(&o));
+}
+
+#[test]
+fn usage_lists_shard_flags() {
+    let o = shisha(&[]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("--shards"), "{out}");
+    assert!(out.contains("--balancer"), "{out}");
+    assert!(out.contains("--shard-grid"), "{out}");
+}

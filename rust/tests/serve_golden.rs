@@ -1,27 +1,46 @@
-//! Golden determinism tests for the serving engine's hot-path refactor.
+//! Golden determinism tests for the serving engine.
 //!
-//! The arena/settle/scratch-db rework (PR 2) must not change a single
-//! simulated outcome. Rather than committing literal hash constants —
-//! which would have to be produced by the same binary they test — these
-//! tests pin the optimised engine against the in-tree reference:
-//! [`PumpMode::FullRescan`] forces the PR-1 whole-pipeline fixpoint
-//! rescan on every event, so for each fixed-seed scenario the
-//! event-driven settle must reproduce its `log_hash`, event log, epoch
-//! series and every report counter **byte-for-byte**. Any future engine
-//! change that alters simulated outcomes breaks the cross-mode equality
-//! (or the rerun equality) loudly.
+//! Three layers of protection, strongest first:
 //!
-//! Three scenario families, per the acceptance criteria: steady Poisson
-//! multi-tenant (batching + DropOldest backpressure), MMPP plus
-//! piecewise arrival drift that triggers a warm re-tune (exercising the
-//! scratch observed-database path), and trace-driven replay.
+//! 1. **Cross-mode equality** — every scenario runs under both
+//!    [`PumpMode`]s: the event-driven settle must reproduce the PR-1
+//!    whole-pipeline fixpoint rescan (`FullRescan`) **byte-for-byte**
+//!    (`log_hash`, event log, epoch series, every report counter). Any
+//!    engine change that alters the settle propagation breaks this
+//!    loudly.
+//! 2. **Rerun equality** — each scenario runs twice under the default
+//!    mode; a nondeterministic engine (hash iteration, RNG misuse,
+//!    uninitialised state) fails immediately.
+//! 3. **Absolute pinning** — each scenario's `log_hash`/event count is
+//!    asserted against the committed fingerprint file
+//!    `tests/golden/serve_fingerprints.txt`. Unlike 1–2 this catches
+//!    drift that hits *both* modes (e.g. a bug in the shared arena
+//!    plumbing, a cost-model change leaking into the engine). Scenarios
+//!    missing from the file are **minted into it** on first run — run
+//!    `cargo test --test serve_golden` once and commit the updated file;
+//!    from then on any absolute outcome change fails with no environment
+//!    variables involved. To intentionally re-bless after a semantic
+//!    engine change, delete the affected lines (or the file) and rerun.
+//!    (This replaces the PR-2 `SHISHA_GOLDEN_*` env-var stopgap.)
+//!
+//! Scenario families: steady Poisson multi-tenant (batching + DropOldest
+//! backpressure), MMPP plus piecewise arrival drift that triggers a warm
+//! re-tune (the scratch observed-database path), trace-driven replay, and
+//! two **sharded** scenarios (round-robin and throughput-weighted
+//! balancers, the second with the control loop live) covering replica
+//! routing, disjoint placement and per-replica re-tuning.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
 
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::{simulator, PipelineConfig};
 use shisha::platform::configs;
 use shisha::serve::{
-    serve, ArrivalProcess, PumpMode, ServeOptions, ServeReport, TenantSpec,
+    serve, ArrivalProcess, BalancerPolicy, PumpMode, ServeOptions, ServeReport, TenantSpec,
 };
 
 /// Every observable of the two reports must match exactly.
@@ -55,11 +74,83 @@ fn assert_identical(a: &ServeReport, b: &ServeReport, what: &str) {
             "{what}/{name}: max latency"
         );
         assert!(x.conserved(), "{what}/{name}: conservation");
+        // per-replica observables (length 1 for unsharded tenants)
+        assert_eq!(x.shards.len(), y.shards.len(), "{what}/{name}: replica count");
+        for (sx, sy) in x.shards.iter().zip(&y.shards) {
+            assert_eq!(sx.eps, sy.eps, "{what}/{name}: replica EPs");
+            assert_eq!(sx.offered, sy.offered, "{what}/{name}: replica offered");
+            assert_eq!(sx.completed, sy.completed, "{what}/{name}: replica completed");
+            assert_eq!(sx.final_config, sy.final_config, "{what}/{name}: replica config");
+            assert_eq!(sx.retunes, sy.retunes, "{what}/{name}: replica retunes");
+            assert_eq!(sx.epochs, sy.epochs, "{what}/{name}: replica epochs");
+        }
+    }
+}
+
+/// Serialises fingerprint-file access across concurrently running tests.
+static PINS: Mutex<()> = Mutex::new(());
+
+fn pin_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/serve_fingerprints.txt")
+}
+
+/// Assert `what`'s fingerprint against the committed file, or mint the
+/// entry when absent (commit the updated file to lock it in).
+fn check_pin(what: &str, log_hash: u64, n_events: u64) {
+    assert!(
+        !what.contains(char::is_whitespace),
+        "scenario keys are whitespace-free: {what:?}"
+    );
+    let _guard = PINS.lock().expect("fingerprint lock poisoned");
+    let path = pin_path();
+    let text = std::fs::read_to_string(&path).unwrap_or_default();
+    let mut pins: BTreeMap<&str, (&str, &str)> = BTreeMap::new();
+    for line in text.lines() {
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        match (it.next(), it.next(), it.next()) {
+            (Some(k), Some(h), Some(n)) => {
+                pins.insert(k, (h, n));
+            }
+            _ => panic!("malformed fingerprint line: {line:?}"),
+        }
+    }
+    let hash_hex = format!("{log_hash:016x}");
+    match pins.get(what) {
+        Some(&(h, n)) => {
+            assert_eq!(
+                hash_hex, h,
+                "{what}: log_hash drifted from the committed golden fingerprint \
+                 ({path:?}); if the change is intentional, delete the line and rerun \
+                 to re-mint",
+            );
+            assert_eq!(
+                n_events.to_string(),
+                n,
+                "{what}: event count drifted from the committed golden fingerprint"
+            );
+        }
+        None => {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .expect("open fingerprint file for minting");
+            writeln!(f, "{what} {hash_hex} {n_events}").expect("mint fingerprint");
+            println!(
+                "{what}: minted fingerprint {hash_hex} ({n_events} events) into {path:?} — \
+                 commit the file to pin it"
+            );
+        }
     }
 }
 
 /// Run the scenario builder under both pump modes (and the event-driven
-/// mode twice) and require byte-identical outcomes.
+/// mode twice), require byte-identical outcomes, and pin the absolute
+/// fingerprint against the committed golden file.
 fn check_golden(
     what: &str,
     build: impl Fn() -> (shisha::platform::Platform, Vec<(TenantSpec, PipelineConfig)>, ServeOptions),
@@ -77,23 +168,7 @@ fn check_golden(
     assert_identical(&ev, &fr, &format!("{what} (vs full-rescan)"));
     // for the record (visible with --nocapture): the pinned fingerprint
     println!("{what}: log_hash {:016x}, {} events", ev.log_hash, ev.n_events);
-    // Absolute pinning hook: cross-mode equality cannot catch drift that
-    // hits BOTH modes (e.g. a bug in the shared arena plumbing). Once a
-    // toolchain run has printed the fingerprints above, export them —
-    //   SHISHA_GOLDEN_POISSON=<hex> SHISHA_GOLDEN_MMPP_DRIFT=<hex>
-    //   SHISHA_GOLDEN_TRACE=<hex> cargo test --test serve_golden
-    // — and any absolute outcome change fails here.
-    let key = format!(
-        "SHISHA_GOLDEN_{}",
-        what.to_uppercase().replace(|c: char| !c.is_ascii_alphanumeric(), "_")
-    );
-    if let Ok(want) = std::env::var(&key) {
-        assert_eq!(
-            format!("{:016x}", ev.log_hash),
-            want.trim().to_lowercase(),
-            "{what}: log_hash drifted from the pinned {key}"
-        );
-    }
+    check_pin(what, ev.log_hash, ev.n_events);
     ev
 }
 
@@ -221,4 +296,66 @@ fn golden_trace_driven_replay() {
     let t = &report.tenants[0];
     assert_eq!(t.offered, 80, "trace replays every recorded arrival");
     assert!(t.completed > 0);
+}
+
+/// Shared builder for the sharded scenarios: SynthNet on C5 (the fixture
+/// where replication provably adds capacity) under a saturating burst.
+fn sharded_scenario(
+    shards: usize,
+    balancer: BalancerPolicy,
+    control: bool,
+    seed: u64,
+) -> (shisha::platform::Platform, Vec<(TenantSpec, PipelineConfig)>, ServeOptions) {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let tenant = TenantSpec::new(
+        "sharded",
+        net,
+        ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: 50.0 / cap,
+            mean_high_s: 50.0 / cap,
+        },
+    )
+    .with_shards(shards)
+    .with_balancer(balancer)
+    .with_queue_capacity(16)
+    .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+    .with_slo(200.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 300.0 / cap,
+        seed,
+        control,
+        control_epoch_s: if control { 30.0 / cap } else { 0.0 },
+        retune_cooldown_epochs: 1,
+        ..Default::default()
+    };
+    (plat, vec![(tenant, cfg)], opts)
+}
+
+#[test]
+fn golden_sharded_round_robin() {
+    let report = check_golden("shard2-rr", || {
+        sharded_scenario(2, BalancerPolicy::RoundRobin, false, 41)
+    });
+    let t = &report.tenants[0];
+    assert_eq!(t.shards.len(), 2, "C5/SynthNet must replicate at budget 2");
+    assert!(t.shards.iter().all(|s| s.completed > 0), "both replicas served");
+    assert!(t.dropped > 0, "the burst must exercise DropOldest per replica");
+}
+
+#[test]
+fn golden_sharded_weighted_with_control() {
+    let report = check_golden("shard4-wtp-control", || {
+        sharded_scenario(4, BalancerPolicy::WeightedThroughput, true, 43)
+    });
+    let t = &report.tenants[0];
+    assert!(t.shards.len() > 1, "budget 4 must replicate");
+    assert!(t.completed > 0);
+    // weighted routing: every replica receives traffic
+    assert!(t.shards.iter().all(|s| s.offered > 0));
 }

@@ -1,0 +1,122 @@
+//! Property test for `serve::sweep::run_sweep`: outcomes are **invariant
+//! to the worker-thread count** on randomized scenario grids.
+//!
+//! PR 2's docs claim thread-count invariance (every scenario owns its RNG
+//! stream and report slot); until now only two fixed grids asserted it.
+//! Here randomized grids — mixed networks, tenant counts, load factors,
+//! seeds, control on/off, and shard budgets — run once on one thread and
+//! once on all available threads, and every observable of every outcome
+//! must match bit-for-bit.
+
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::{simulator, PipelineConfig};
+use shisha::platform::configs;
+use shisha::serve::sweep::{available_threads, run_sweep};
+use shisha::serve::{
+    ArrivalProcess, BalancerPolicy, Scenario, ServeOptions, TenantSpec,
+};
+use shisha::testutil;
+
+/// Build a randomized scenario grid (2–4 cells) from the generator.
+fn random_grid(g: &mut testutil::Gen) -> Vec<Scenario> {
+    let n_cells = g.usize(2, 5);
+    let mut cells = Vec::with_capacity(n_cells);
+    for c in 0..n_cells {
+        // small fixtures keep the property fast; both platforms exercise
+        // multi-EP contention
+        let (plat, net, cfg) = if g.usize(0, 2) == 0 {
+            (
+                configs::c1(),
+                shisha::model::networks::synthnet_small(),
+                PipelineConfig::new(vec![3, 3], vec![0, 1]),
+            )
+        } else {
+            (
+                configs::c2(),
+                shisha::model::networks::synthnet_small(),
+                PipelineConfig::new(vec![2, 4], vec![0, 2]),
+            )
+        };
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let rho = g.f64(0.2, 2.0);
+        let n_tenants = g.usize(1, 3);
+        let control = g.usize(0, 2) == 0;
+        let shards = if g.usize(0, 3) == 0 { 2 } else { 1 };
+        let tenants = (0..n_tenants)
+            .map(|i| {
+                let spec = TenantSpec::new(
+                    format!("c{c}t{i}"),
+                    net.clone(),
+                    ArrivalProcess::Poisson { rate: rho * cap / n_tenants as f64 },
+                )
+                .with_queue_capacity(g.usize(4, 32))
+                .with_slo(g.f64(10.0, 80.0) / cap)
+                .with_shards(if i == 0 { shards } else { 1 })
+                .with_balancer(BalancerPolicy::JoinShortestQueue);
+                (spec, cfg.clone())
+            })
+            .collect();
+        let duration_s = g.f64(40.0, 120.0) / cap;
+        cells.push(Scenario {
+            name: format!("cell{c}"),
+            plat,
+            tenants,
+            opts: ServeOptions {
+                duration_s,
+                seed: g.usize(1, 1 << 20) as u64,
+                control,
+                control_epoch_s: if control { duration_s / 5.0 } else { 0.0 },
+                record_log: true,
+                ..Default::default()
+            },
+        });
+    }
+    cells
+}
+
+#[test]
+fn run_sweep_outcomes_invariant_to_thread_count_property() {
+    let threads = available_threads();
+    testutil::check("sweep thread invariance", 0x5EED_5117, 6, |g| {
+        let grid = random_grid(g);
+        let a = run_sweep(grid.clone(), 1);
+        let b = run_sweep(grid, threads);
+        if a.len() != b.len() {
+            return Err(format!("outcome counts differ: {} vs {}", a.len(), b.len()));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.name != y.name {
+                return Err(format!("order diverged: {} vs {}", x.name, y.name));
+            }
+            let rx = x.report.as_ref().map_err(|e| format!("{}: {e:#}", x.name))?;
+            let ry = y.report.as_ref().map_err(|e| format!("{}: {e:#}", y.name))?;
+            if rx.log_hash != ry.log_hash {
+                return Err(format!("{}: log_hash diverged across thread counts", x.name));
+            }
+            if rx.event_log != ry.event_log {
+                return Err(format!("{}: event log diverged", x.name));
+            }
+            if rx.n_events != ry.n_events {
+                return Err(format!("{}: event count diverged", x.name));
+            }
+            for (tx, ty) in rx.tenants.iter().zip(&ry.tenants) {
+                if tx.offered != ty.offered
+                    || tx.completed != ty.completed
+                    || tx.slo_ok != ty.slo_ok
+                    || tx.rejected != ty.rejected
+                    || tx.dropped != ty.dropped
+                    || tx.retunes != ty.retunes
+                    || tx.final_config != ty.final_config
+                    || tx.latency.p99().to_bits() != ty.latency.p99().to_bits()
+                {
+                    return Err(format!("{}/{}: tenant report diverged", x.name, tx.name));
+                }
+                if !tx.conserved() {
+                    return Err(format!("{}/{}: conservation violated", x.name, tx.name));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""CI guard for the committed BENCH_*.json perf-trajectory files.
+
+The quick bench profiles overwrite BENCH_hotpath.json / BENCH_serve.json in
+the CI checkout; this script then compares each freshly generated file
+against the copy committed at HEAD:
+
+* the fresh file must parse, carry the `shisha-bench-v1` schema tag, and
+  contain at least one case (the benches just ran — an empty file means the
+  writer regressed);
+* if the committed copy has cases, every case name shared with the fresh
+  run must expose the **same metric-key set** — a renamed or dropped metric
+  fails CI so the committed trajectory cannot silently diverge from what
+  the benches emit;
+* a committed copy with zero cases is a placeholder (authored without a
+  Rust toolchain): that emits a loud GitHub warning annotation telling the
+  next committer to refresh it from the `bench-json` artifact, but does not
+  fail — refusing would wedge CI on the very commit that adds the check.
+
+Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
+(paths relative to the repository root; run from anywhere inside the repo).
+"""
+
+import json
+import subprocess
+import sys
+
+SCHEMA = "shisha-bench-v1"
+
+
+def load_fresh(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def load_committed(path: str):
+    """The copy at HEAD, or None when the file is new in this change."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True,
+            check=True,
+            text=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None
+    return json.loads(out)
+
+
+def main(paths: list[str]) -> int:
+    failures = []
+    for path in paths:
+        try:
+            fresh = load_fresh(path)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"{path}: fresh bench output unreadable: {e}")
+            continue
+        if fresh.get("schema") != SCHEMA:
+            failures.append(f"{path}: fresh schema tag {fresh.get('schema')!r} != {SCHEMA!r}")
+            continue
+        fresh_cases = fresh.get("cases")
+        if not isinstance(fresh_cases, dict) or not fresh_cases:
+            failures.append(f"{path}: fresh bench output has no cases — writer regressed?")
+            continue
+
+        committed = load_committed(path)
+        if committed is None:
+            print(f"{path}: no committed copy at HEAD (new file), skipping diff")
+            continue
+        if committed.get("schema") != SCHEMA:
+            failures.append(
+                f"{path}: committed schema tag {committed.get('schema')!r} != {SCHEMA!r}"
+            )
+            continue
+        committed_cases = committed.get("cases") or {}
+        if not committed_cases:
+            print(
+                f"::warning file={path}::{path} is still a schema placeholder (no cases); "
+                "refresh it from this run's `bench-json` artifact so the committed perf "
+                "trajectory carries real measurements."
+            )
+            continue
+        shared = sorted(set(committed_cases) & set(fresh_cases))
+        if not shared:
+            failures.append(
+                f"{path}: committed cases {sorted(committed_cases)[:5]}... share no names "
+                f"with the fresh run {sorted(fresh_cases)[:5]}... — bench case naming drifted"
+            )
+            continue
+        for case in shared:
+            want = set(committed_cases[case])
+            got = set(fresh_cases[case])
+            if want != got:
+                failures.append(
+                    f"{path}: case {case!r} metric keys drifted: committed {sorted(want)} "
+                    f"vs fresh {sorted(got)}"
+                )
+        print(f"{path}: OK ({len(shared)} shared case(s) schema-checked)")
+
+    for msg in failures:
+        print(f"::error::{msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print("usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1:]))
