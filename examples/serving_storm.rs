@@ -9,6 +9,11 @@
 //! Every tenant starts from its own Shisha-tuned configuration; when the
 //! burst saturates shared EPs, time-slicing slows its neighbours, the SLO
 //! goodput regresses, and the engine warm re-tunes the victims online.
+//! The bursty tenant runs sharded with the **runtime autoscaler** live,
+//! so its replicas park through the whispers and re-activate for the
+//! floods; a second run under the **cross-tenant co-planner** (disjoint
+//! EP budgets, weighted water-filling) shows what isolating the storm
+//! costs and saves.
 //!
 //! ```sh
 //! cargo run --release --example serving_storm
@@ -19,7 +24,8 @@ use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::simulator;
 use shisha::platform::configs;
 use shisha::serve::{
-    serve, shisha_config, ArrivalProcess, BalancerPolicy, ServeOptions, TenantSpec,
+    serve, shisha_config, ArrivalProcess, AutoscaleOptions, BalancerPolicy, ServeOptions,
+    TenantSpec,
 };
 
 fn main() {
@@ -56,7 +62,7 @@ fn main() {
         ArrivalProcess::Diurnal { base_rate: 0.3 * caps[2], amplitude: 0.9, period_s: 40.0 },
     ];
 
-    let specs = tenants
+    let specs: Vec<(TenantSpec, _)> = tenants
         .into_iter()
         .zip(arrivals)
         .map(|((name, net, config), arr)| {
@@ -65,8 +71,12 @@ fn main() {
                 TenantSpec::new(*name, net, arr).with_slo(slo).with_queue_capacity(128);
             if *name == "bursty" {
                 // the storm source runs replicated: up to two pipelines on
-                // disjoint EP subsets behind a join-shortest-queue balancer
-                spec = spec.with_shards(2).with_balancer(BalancerPolicy::JoinShortestQueue);
+                // disjoint EP subsets behind a join-shortest-queue
+                // balancer, weighted double for the co-planned run below
+                spec = spec
+                    .with_shards(2)
+                    .with_balancer(BalancerPolicy::JoinShortestQueue)
+                    .with_weight(2.0);
             }
             (spec, config)
         })
@@ -76,9 +86,12 @@ fn main() {
         duration_s: duration,
         seed: 7,
         control_epoch_s: 5.0,
+        // the autoscaler parks the bursty tenant's spare replica between
+        // floods and re-activates it when the MMPP switches high
+        autoscale: AutoscaleOptions::enabled(),
         ..Default::default()
     };
-    let report = serve(&plat, specs, &opts).expect("serve run");
+    let report = serve(&plat, specs.clone(), &opts).expect("serve run");
 
     println!("\nper-epoch goodput (req/s), * marks a warm re-tune:");
     let mut timeline = Table::new(["t (s)", "steady", "bursty", "diurnal"]);
@@ -110,18 +123,49 @@ fn main() {
         if t.shards.len() > 1 {
             for (i, s) in t.shards.iter().enumerate() {
                 println!(
-                    "  shard {i} on EPs {:?}: routed {}, completed {}, final {}",
+                    "  shard {i} on EPs {:?}: routed {}, completed {}, {} scale event(s), \
+                     {} at horizon, final {}",
                     s.eps,
                     s.offered,
                     s.completed,
+                    s.scale_events.len(),
+                    s.final_state.name(),
                     s.final_config.describe()
                 );
             }
+            println!(
+                "  EP-epochs {} (always-on would pay {})",
+                t.ep_epochs(),
+                t.always_on_ep_epochs()
+            );
         }
     }
     println!(
         "fairness (Jain) {:.4} over {} events",
         report.fairness(),
         report.n_events
+    );
+
+    // --- the same storm under the cross-tenant co-planner: disjoint EP
+    // budgets (bursty weighted 2×) mean the flood can no longer slow its
+    // neighbours — at the price of capping everyone at their own budget
+    let co_opts = ServeOptions { coplan: true, ..opts };
+    let co = serve(&plat, specs, &co_opts).expect("co-planned serve run");
+    println!("\nco-planned rerun (disjoint EP budgets, bursty weighted 2x):");
+    for (t, shared) in co.tenants.iter().zip(&report.tenants) {
+        let eps: Vec<_> = t.shards.iter().flat_map(|s| s.eps.iter().copied()).collect();
+        println!(
+            "{}: budget EPs {:?}, goodput {} req/s (shared run: {}), {} re-tune(s)",
+            t.name,
+            eps,
+            f(t.goodput(co.duration_s), 1),
+            f(shared.goodput(report.duration_s), 1),
+            t.retunes
+        );
+    }
+    println!(
+        "co-planned fairness (Jain) {:.4} over {} events",
+        co.fairness(),
+        co.n_events
     );
 }

@@ -13,6 +13,7 @@ use shisha::explore::random_walk::{RandomWalk, RwOptions};
 use shisha::explore::shisha::ShishaAuto;
 use shisha::explore::simulated_annealing::{SaOptions, SimulatedAnnealing};
 use shisha::explore::{EvalOptions, Evaluator, Explorer, Solution};
+use shisha::metrics::bench::JsonReport;
 use shisha::metrics::table::{f, Table};
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
@@ -20,6 +21,12 @@ use shisha::pipeline::space;
 use shisha::platform::configs;
 
 fn main() {
+    // --quick (CI profile): smaller per-algorithm budgets; the ES
+    // reference always runs to completion (feasible on 4 EPs) so
+    // normalized_to_es keeps its meaning and the Shisha ≥ 0.9×ES
+    // assertion stays honest in both profiles.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget: u64 = if quick { 1_500 } else { 5_000 };
     let plat = configs::fig5_platform();
     let mut table = Table::new([
         "network",
@@ -29,6 +36,16 @@ fn main() {
         "configs tried",
         "explored %",
     ]);
+    let mut json = JsonReport::new();
+    json.note(
+        "fig5_optimality: per network × algorithm on the 4-EP fig5 platform — \
+         throughput (img/s), throughput normalized to Exhaustive Search \
+         (normalized_to_es, the paper's y-axis; Shisha ≈ 1.0), configurations \
+         tried, and explored fraction of the full space (%). \
+         aggregate.min_shisha_norm is the worst Shisha/ES ratio across the \
+         three networks (asserted > 0.9 before anything is written).",
+    );
+    let mut min_shisha_norm = f64::INFINITY;
 
     for net_name in ["resnet50", "yolov3", "synthnet"] {
         let net = networks::by_name(net_name).unwrap();
@@ -52,7 +69,7 @@ fn main() {
 
         let mut rows = vec![("ES", es_sol.clone())];
         for (name, run) in algos.iter_mut() {
-            let opts = EvalOptions { max_evals: Some(5_000), ..Default::default() };
+            let opts = EvalOptions { max_evals: Some(budget), ..Default::default() };
             let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
             rows.push((name, run(&mut eval)));
         }
@@ -65,12 +82,25 @@ fn main() {
                 sol.n_evals.to_string(),
                 format!("{:.4}%", 100.0 * sol.explored_fraction(space)),
             ]);
+            let case = format!("{net_name}_{name}");
+            json.metric(&case, "throughput", sol.best_throughput);
+            json.metric(&case, "normalized_to_es", sol.best_throughput / es_sol.best_throughput);
+            json.metric(&case, "n_evals", sol.n_evals as f64);
+            json.metric(&case, "explored_pct", 100.0 * sol.explored_fraction(space));
         }
         // paper shape: Shisha within a few percent of ES
         let shisha_norm = rows[1].1.best_throughput / es_sol.best_throughput;
         assert!(shisha_norm > 0.9, "{net_name}: Shisha at {shisha_norm:.3} of ES");
+        min_shisha_norm = min_shisha_norm.min(shisha_norm);
     }
+    json.metric("aggregate", "min_shisha_norm", min_shisha_norm);
     println!("Figure 5 — throughput normalized to ES (4-EP system):\n{}", table.to_markdown());
     table.write_csv("results/fig5_optimality.csv").unwrap();
     println!("wrote results/fig5_optimality.csv");
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_fig5.json");
+    json.write(&bench_path).expect("write BENCH_fig5.json");
+    println!("wrote {}", bench_path.display());
 }

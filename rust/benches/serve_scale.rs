@@ -28,8 +28,12 @@ use shisha::metrics::table::{latency_table, LatencyRow};
 use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::simulator;
 use shisha::platform::configs;
+use shisha::serve::cluster::coplan::{coplan, greedy_plan};
 use shisha::serve::sweep::{self, Scenario, SweepOutcome};
-use shisha::serve::{shisha_config, BalancerPolicy, PumpMode, ScenarioStats, ServeOptions};
+use shisha::serve::{
+    serve, shisha_config, ArrivalProcess, BalancerPolicy, PumpMode, ScenarioStats, ServeOptions,
+    TenantSpec,
+};
 
 /// Latency-table row for one scenario outcome (tenants merged).
 fn latency_row(outcome: &SweepOutcome) -> LatencyRow {
@@ -206,6 +210,172 @@ fn main() {
             shard_counts.last().unwrap(),
             if *first > 0.0 { last / first } else { 0.0 }
         );
+    }
+
+    // --- autoscale section: static shard budgets vs the runtime
+    // autoscaler on an MMPP tidal workload (identical arrival stream per
+    // cell). Records goodput and EP-epochs per cell; the acceptance bar
+    // (goodput within 2% of the best static cell at fewer EP-epochs than
+    // static max-k) is asserted in tests/cluster_autoscale.rs — here the
+    // trajectory is just tracked. Cross-mode hash equality is asserted
+    // before anything is written, like every other section.
+    let auto_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let auto_base = ServeOptions {
+        duration_s: base.duration_s,
+        seed: 42,
+        control: false,
+        control_epoch_s: base.duration_s / 40.0,
+        ..Default::default()
+    };
+    let auto_scenarios = sweep::autoscale_grid(
+        &plat,
+        &net,
+        &config,
+        auto_counts,
+        BalancerPolicy::JoinShortestQueue,
+        &[1.0],
+        &[42],
+        &auto_base,
+    );
+    let auto_baseline: Vec<Scenario> = auto_scenarios
+        .iter()
+        .cloned()
+        .map(|mut s| {
+            s.opts.pump = PumpMode::FullRescan;
+            s
+        })
+        .collect();
+    let auto_fast = sweep::run_sweep(auto_scenarios, threads);
+    let auto_slow = sweep::run_sweep(auto_baseline, threads);
+    // classify cells by name, not position, so grid-shape changes cannot
+    // silently mislabel a case; the single-rho single-seed grid above
+    // yields exactly one cell per label
+    let kmax = auto_counts.iter().copied().max().unwrap_or(1);
+    let mut static_goodputs: Vec<f64> = Vec::new();
+    let mut static_kmax_ep = 0u64;
+    let mut auto_stats: Option<ScenarioStats> = None;
+    for (f, s) in auto_fast.iter().zip(&auto_slow) {
+        let fr = f.report.as_ref().expect("autoscale serve run");
+        let sr = s.report.as_ref().expect("autoscale baseline run");
+        assert_eq!(fr.log_hash, sr.log_hash, "{}: pump modes diverged", f.name);
+        let stats = ScenarioStats::from_report(fr);
+        println!(
+            "{}: goodput {:.2} req/s, EP-epochs {}, {} scale event(s)",
+            f.name, stats.goodput_rps, stats.ep_epochs, stats.scale_events
+        );
+        if f.name.contains(" autoscale-k") {
+            assert!(auto_stats.is_none(), "exactly one autoscaled cell expected");
+            auto_stats = Some(stats);
+            continue;
+        }
+        let k = auto_counts
+            .iter()
+            .copied()
+            .find(|k| f.name.contains(&format!(" static-k{k} ")))
+            .unwrap_or_else(|| panic!("{}: cell matches no shard count", f.name));
+        let case = format!("autoscale_static_k{k}");
+        json.metric(&case, "goodput_rps", stats.goodput_rps);
+        json.metric(&case, "ep_epochs", stats.ep_epochs as f64);
+        static_goodputs.push(stats.goodput_rps);
+        if k == kmax {
+            static_kmax_ep = stats.ep_epochs;
+        }
+    }
+    let auto_stats = auto_stats.expect("the grid always ends with an autoscaled cell");
+    json.metric("autoscale_auto", "goodput_rps", auto_stats.goodput_rps);
+    json.metric("autoscale_auto", "ep_epochs", auto_stats.ep_epochs as f64);
+    json.metric("autoscale_auto", "scale_events", auto_stats.scale_events as f64);
+    let best = static_goodputs.iter().cloned().fold(0.0, f64::max);
+    json.metric(
+        "aggregate",
+        "autoscale_goodput_ratio",
+        if best > 0.0 { auto_stats.goodput_rps / best } else { f64::NAN },
+    );
+    json.metric(
+        "aggregate",
+        "autoscale_ep_epoch_saving",
+        if static_kmax_ep > 0 {
+            1.0 - auto_stats.ep_epochs as f64 / static_kmax_ep as f64
+        } else {
+            f64::NAN
+        },
+    );
+
+    // --- co-planner section: joint disjoint EP allocation vs the greedy
+    // first-come baseline on a weighted 3-tenant C5 mix (predicted
+    // objective), plus the realized goodput of serving the joint plan
+    // against the shared-platform status quo under the same arrivals.
+    {
+        let mix = [
+            ("hot", shisha::model::networks::synthnet(), 2.0, 2usize),
+            ("warm", shisha::model::networks::alexnet(), 1.0, 2),
+            ("cold", shisha::model::networks::synthnet_small(), 1.0, 1),
+        ];
+        let mut tenants = Vec::new();
+        let mut slo_s = 0.0f64;
+        for (name, mnet, weight, shards) in &mix {
+            let mcfg = shisha_config(mnet, &plat);
+            let mdb = PerfDb::build(mnet, &plat, &CostModel::default());
+            let mcap = simulator::throughput(mnet, &plat, &mdb, &mcfg);
+            slo_s = slo_s.max(100.0 / mcap);
+            let spec = TenantSpec::new(
+                *name,
+                mnet.clone(),
+                ArrivalProcess::Poisson { rate: 0.5 * mcap },
+            )
+            .with_weight(*weight)
+            .with_shards(*shards)
+            .with_queue_capacity(32);
+            tenants.push((spec, mcfg));
+        }
+        let tenants: Vec<(TenantSpec, _)> =
+            tenants.into_iter().map(|(s, c)| (s.with_slo(slo_s), c)).collect();
+        let specs: Vec<TenantSpec> = tenants.iter().map(|(s, _)| s.clone()).collect();
+        let joint = coplan(&plat, &specs).expect("coplan");
+        let greedy = greedy_plan(&plat, &specs).expect("greedy plan");
+        assert!(
+            joint.objective() >= greedy.objective(),
+            "co-planner proof obligation violated: {} < {}",
+            joint.objective(),
+            greedy.objective()
+        );
+        let serve_one = |coplan_on: bool| {
+            let opts = ServeOptions {
+                duration_s: base.duration_s,
+                seed: 42,
+                control: false,
+                control_epoch_s: 0.0,
+                coplan: coplan_on,
+                ..Default::default()
+            };
+            serve(&plat, tenants.clone(), &opts).expect("coplan serve run")
+        };
+        let co = serve_one(true);
+        let sh_run = serve_one(false);
+        let co_goodput: f64 = co.goodputs().iter().sum();
+        let sh_goodput: f64 = sh_run.goodputs().iter().sum();
+        println!(
+            "coplan C5 3t ({}): weighted predicted {:.2} vs greedy {:.2}; realized \
+             goodput {:.2} req/s co-planned vs {:.2} shared",
+            joint.strategy,
+            joint.objective(),
+            greedy.objective(),
+            co_goodput,
+            sh_goodput
+        );
+        json.metric("coplan_c5_3t", "joint_weighted_tp", joint.objective());
+        json.metric("coplan_c5_3t", "greedy_weighted_tp", greedy.objective());
+        json.metric(
+            "coplan_c5_3t",
+            "gain",
+            if greedy.objective() > 0.0 {
+                joint.objective() / greedy.objective()
+            } else {
+                f64::NAN
+            },
+        );
+        json.metric("coplan_c5_3t", "goodput_coplan_rps", co_goodput);
+        json.metric("coplan_c5_3t", "goodput_shared_rps", sh_goodput);
     }
 
     let table = latency_table(fast.iter().map(latency_row));

@@ -18,6 +18,14 @@
 //! options carry a fixed RNG seed, so a partition always tunes to the
 //! same configurations — a requirement for the serving engine's
 //! one-seed-one-event-log determinism guarantee.
+//!
+//! Beyond sharding, the cross-tenant co-planner
+//! ([`crate::serve::cluster::coplan`]) drives this module once per
+//! water-filling step: every candidate EP grant re-tunes the receiving
+//! tenant's shard placement on its grown budget, so the marginal
+//! throughput the co-planner ranks by is the *tuned* value, not a
+//! heuristic estimate. Determinism here is what keeps the whole cluster
+//! plan a pure function of its inputs.
 
 use crate::model::Network;
 use crate::perfdb::{CostModel, PerfDb};

@@ -91,6 +91,46 @@
 //! determinism preserved (one seed → one event-log hash at any thread
 //! count; `tests/serve_golden.rs` pins sharded scenarios absolutely).
 //!
+//! ## Cluster planning & autoscaling
+//!
+//! Sharding plans one tenant at a time against the full platform; the
+//! [`serve::cluster`] subsystem lifts both decisions to the whole
+//! cluster:
+//!
+//! * the **cross-tenant co-planner** ([`serve::cluster::coplan`],
+//!   `serve --coplan`) jointly allocates **disjoint** EP budgets across
+//!   every tenant — EPs are ranked once, then water-filled onto tenants
+//!   by weighted predicted marginal throughput (each grant re-plans the
+//!   tenant's shard placement on its grown budget via the same
+//!   partition-then-tune driver), with [`serve::TenantSpec::weight`] as
+//!   the priority knob. The planner returns the better of water-filling
+//!   and the greedy first-come baseline under the joint objective
+//!   `Σ weight × predicted throughput`, so a co-planned cluster is
+//!   **provably never worse than greedy first-come allocation** —
+//!   asserted on a weighted 3-tenant C5 mix in
+//!   `tests/cluster_autoscale.rs`. Disjoint budgets mean tenants never
+//!   contend on compute (the inter-chiplet link stays shared);
+//! * the **runtime shard autoscaler** ([`serve::cluster::autoscale`],
+//!   `serve --autoscale`) turns the replica set dynamic: every control
+//!   epoch a deterministic, RNG-free controller compares the observed
+//!   offered rate, shed count and queued backlog against the active
+//!   replicas' predicted capacity, scaling **up fast** (one pressure
+//!   epoch activates as many parked replicas as the load needs) and
+//!   **down slowly** (consecutive slack epochs drain the weakest active
+//!   replica, which serves out its backlog before parking — no request
+//!   is ever lost or double-served across a scale transition, and a
+//!   constant-rate workload inside the hysteresis deadband never scales
+//!   at all; both property-tested). Parked replicas stop accruing the
+//!   EP-epoch meter ([`serve::EpochStats::active_eps`]): on the MMPP
+//!   tidal sweep ([`serve::sweep::autoscale_grid`],
+//!   `serve --sweep --autoscale-grid 1,2,4`) the autoscaled deployment
+//!   holds goodput within 2% of the best static shard count at strictly
+//!   fewer EP-epochs than static max-k.
+//!
+//! Scale transitions are hashed into the event log and recorded in
+//! [`serve::ShardReport::scale_events`], so co-planned + autoscaled runs
+//! stay bit-deterministic and golden-pinnable like everything else.
+//!
 //! ## Performance
 //!
 //! The serving event loop is the hottest code in the crate; its steady

@@ -73,6 +73,7 @@ fn print_usage() {
                        [--arrivals SPEC[;SPEC..]] [--slo-ms MS] [--queue N] [--batch N]\n\
                        [--epoch S] [--policy reject|drop-oldest] [--seed N]\n\
                        [--shards K] [--balancer rr|jsq|wtp]\n\
+                       [--coplan] [--autoscale] [--min-shards K]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
                        SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
                              | piecewise:R@T,R@T,.. | trace:FILE\n\
@@ -80,13 +81,20 @@ fn print_usage() {
                        disjoint EP subsets (placement search); --balancer picks the\n\
                        front-end routing: rr = round-robin, jsq = join-shortest-queue,\n\
                        wtp = throughput-weighted round-robin\n\
+                       --coplan allocates disjoint EP budgets across tenants jointly\n\
+                       (weighted water-filling, never worse than greedy first-come);\n\
+                       --autoscale activates/drains/parks replicas with the load at\n\
+                       every control epoch (floor --min-shards, default 1)\n\
            serve --sweep  parallel scenario grid: [--nets synthnet] [--platform c5]\n\
                        [--tenant-grid 1,2,4] [--rho-grid 0.3,0.7,1.2] [--seeds 42]\n\
-                       [--shard-grid 1,2,4] [--balancer rr|jsq|wtp]\n\
+                       [--shard-grid 1,2,4 | --autoscale-grid 1,2,4] [--balancer rr|jsq|wtp]\n\
                        [--threads N] [--duration S] [--epoch S] [--full-rescan]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
                        --shard-grid swaps the tenant-count grid for a side-by-side\n\
-                       shard-count comparison on an MMPP drift workload\n\
+                       shard-count comparison on an MMPP drift workload;\n\
+                       --autoscale-grid compares static shard counts against the\n\
+                       runtime autoscaler on an MMPP tidal workload (goodput and\n\
+                       EP-epochs per cell)\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
@@ -220,6 +228,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "seed",
         "shards",
         "balancer",
+        "coplan",
+        "autoscale",
+        "min-shards",
         "no-control",
         "no-contention",
         "csv",
@@ -250,6 +261,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         control: !args.has_flag("no-control"),
         control_epoch_s: args.parsed_or("epoch", 5.0)?,
         contention: !args.has_flag("no-contention"),
+        coplan: args.has_flag("coplan"),
+        autoscale: shisha::serve::AutoscaleOptions {
+            enabled: args.has_flag("autoscale"),
+            min_shards: args.parsed_or("min-shards", 1)?,
+            ..Default::default()
+        },
         ..Default::default()
     };
 
@@ -285,6 +302,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tenants.push((spec, config));
     }
 
+    if opts.coplan {
+        println!("co-planning: joint disjoint EP budgets across {n_tenants} tenant(s)");
+    }
+    if opts.autoscale.enabled {
+        println!(
+            "autoscaling: replicas activate/drain/park per control epoch (floor {})",
+            opts.autoscale.min_shards
+        );
+    }
     let report = shisha::serve::serve(&plat, tenants, &opts)?;
     let table =
         latency_table(report.tenants.iter().map(|t| t.latency_row(report.duration_s)));
@@ -307,15 +333,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             for (i, s) in t.shards.iter().enumerate() {
                 println!(
                     "  shard {i}: EPs {:?}, routed {} / completed {}, predicted {:.1} req/s, \
-                     {} re-tune(s), final {}",
+                     {} re-tune(s), {} scale event(s), {} at horizon, final {}",
                     s.eps,
                     s.offered,
                     s.completed,
                     s.predicted_throughput,
                     s.retunes,
+                    s.scale_events.len(),
+                    s.final_state.name(),
                     s.final_config.describe()
                 );
             }
+        }
+        if opts.autoscale.enabled {
+            println!(
+                "  EP-epochs: {} (always-on would pay {})",
+                t.ep_epochs(),
+                t.always_on_ep_epochs()
+            );
         }
     }
     println!(
@@ -366,6 +401,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "tenant-grid",
         "rho-grid",
         "shard-grid",
+        "autoscale-grid",
         "balancer",
         "threads",
         "full-rescan",
@@ -411,6 +447,18 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             bail!("--shard-grid entries must be ≥ 1");
         }
     }
+    let autoscale_grid: Option<Vec<usize>> = match args.get("autoscale-grid") {
+        Some(s) => Some(parse_list("autoscale-grid", s)?),
+        None => None,
+    };
+    if let Some(counts) = &autoscale_grid {
+        if counts.iter().any(|&k| k == 0) {
+            bail!("--autoscale-grid entries must be ≥ 1");
+        }
+        if shard_grid.is_some() {
+            bail!("--shard-grid and --autoscale-grid are mutually exclusive");
+        }
+    }
     let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
     for net_name in &net_names {
@@ -418,8 +466,14 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             .with_context(|| format!("unknown network {net_name:?}"))?;
         let config = shisha::serve::shisha_config(&net, &plat);
         println!("  {}: Shisha config {}", net.name, config.describe());
-        match &shard_grid {
-            Some(counts) => scenarios.extend(sweep::shard_grid(
+        if let Some(counts) = &autoscale_grid {
+            // the tidal comparison wants many control epochs per dwell
+            // phase; default the epoch to horizon/40 unless set explicitly
+            let mut auto_base = base.clone();
+            if args.get("epoch").is_none() {
+                auto_base.control_epoch_s = auto_base.duration_s / 40.0;
+            }
+            scenarios.extend(sweep::autoscale_grid(
                 &plat,
                 &net,
                 &config,
@@ -427,17 +481,30 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                 balancer,
                 &rho_grid,
                 &seeds,
-                &base,
-            )),
-            None => scenarios.extend(sweep::load_grid(
-                &plat,
-                &net,
-                &config,
-                &tenant_grid,
-                &rho_grid,
-                &seeds,
-                &base,
-            )),
+                &auto_base,
+            ));
+        } else {
+            match &shard_grid {
+                Some(counts) => scenarios.extend(sweep::shard_grid(
+                    &plat,
+                    &net,
+                    &config,
+                    counts,
+                    balancer,
+                    &rho_grid,
+                    &seeds,
+                    &base,
+                )),
+                None => scenarios.extend(sweep::load_grid(
+                    &plat,
+                    &net,
+                    &config,
+                    &tenant_grid,
+                    &rho_grid,
+                    &seeds,
+                    &base,
+                )),
+            }
         }
     }
     println!(
@@ -461,6 +528,8 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "p99 (ms)",
         "drop rate",
         "re-tunes",
+        "EP-epochs",
+        "scale events",
     ]);
     let mut total_events = 0u64;
     let mut serve_wall = 0.0f64;
@@ -480,6 +549,8 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     fnum(stats.p99_s * 1e3, 3),
                     format!("{:.3}%", 100.0 * stats.drop_rate()),
                     stats.retunes.to_string(),
+                    stats.ep_epochs.to_string(),
+                    stats.scale_events.to_string(),
                 ]);
             }
             Err(e) => {
@@ -491,6 +562,8 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     "-".into(),
                     "-".into(),
                     "ERROR".into(),
+                    "-".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),

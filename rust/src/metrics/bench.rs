@@ -293,7 +293,12 @@ mod tests {
         let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .expect("rust/ lives under the repo root");
-        for name in ["BENCH_hotpath.json", "BENCH_serve.json"] {
+        for name in [
+            "BENCH_hotpath.json",
+            "BENCH_serve.json",
+            "BENCH_fig4.json",
+            "BENCH_fig5.json",
+        ] {
             let path = root.join(name);
             let s = std::fs::read_to_string(&path)
                 .unwrap_or_else(|e| panic!("{name} must stay committed at the repo root: {e}"));

@@ -1,0 +1,401 @@
+//! Runtime shard autoscaling: an epoch-driven controller that grows and
+//! shrinks a tenant's **live** replica count within its planned budget.
+//!
+//! The shard planner ([`crate::serve::shard::plan_shards`]) sizes a
+//! deployment for peak load; serving it statically burns every replica's
+//! EPs through the quiet hours too. The autoscaler instead watches each
+//! tenant's per-epoch serving signals (offered rate, shed requests,
+//! queued backlog) and moves replicas between three states:
+//!
+//! * **Active** — receives balancer traffic and serves;
+//! * **Draining** — receives no new arrivals but keeps serving its
+//!   backlog; once empty it parks (no request is ever lost to a scale
+//!   event — the conservation property tests pin this);
+//! * **Parked** — idle; its EPs are free (they stop accruing in the
+//!   [`crate::serve::EpochStats::active_eps`] meter) until a scale-up
+//!   re-activates the replica.
+//!
+//! The decision rule ([`decide`]) is a pure, RNG-free function of the
+//! observed load, so autoscaled runs keep the engine's determinism
+//! guarantee. It is deliberately **asymmetric**:
+//!
+//! * *scale up fast* — one pressure epoch (shed requests, queued backlog
+//!   beyond [`AutoscaleOptions::backlog_frac`] of the queue slots, or an
+//!   offered rate above active capacity) activates as many replicas as
+//!   needed to bring the offered rate under
+//!   [`AutoscaleOptions::target_util`] of capacity, highest-weight
+//!   replicas first;
+//! * *scale down slowly* — retiring the weakest active replica requires
+//!   [`AutoscaleOptions::down_epochs`] consecutive slack epochs (nothing
+//!   shed, nothing queued, and the offered rate low enough that the
+//!   *remaining* replicas stay under [`AutoscaleOptions::scale_down_util`]
+//!   utilisation), plus a cooldown after every scale event. The deadband
+//!   between the up- and down-conditions is the hysteresis: a
+//!   constant-rate workload inside it never triggers a scale event
+//!   (property-tested), so oscillating load cannot thrash replicas.
+
+use anyhow::{bail, Result};
+
+/// State of one pipeline replica under autoscaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaState {
+    /// Routed to by the balancer and serving.
+    #[default]
+    Active,
+    /// No longer routed to; serving out its backlog before parking.
+    Draining,
+    /// Idle with empty queues; its EPs are free until re-activated.
+    Parked,
+}
+
+impl ReplicaState {
+    /// Short display name (also the event-log spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaState::Active => "active",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Parked => "parked",
+        }
+    }
+
+    /// Stable code hashed into the serving event log.
+    pub fn code(self) -> u64 {
+        match self {
+            ReplicaState::Active => 0,
+            ReplicaState::Draining => 1,
+            ReplicaState::Parked => 2,
+        }
+    }
+}
+
+/// One scale transition of a replica, recorded in
+/// [`crate::serve::ShardReport::scale_events`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// Simulated time of the transition (an epoch tick), seconds.
+    pub t_s: f64,
+    /// The state the replica moved to.
+    pub to: ReplicaState,
+}
+
+/// Autoscaler configuration (engine-wide; carried on
+/// [`crate::serve::ServeOptions::autoscale`]).
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Master switch; when false the engine never changes replica states.
+    pub enabled: bool,
+    /// Floor on the number of active replicas per tenant (≥ 1).
+    pub min_shards: usize,
+    /// Scale-up sizing target: activate replicas until the offered rate
+    /// is at most this fraction of active predicted capacity.
+    pub target_util: f64,
+    /// Scale-down gate: the weakest active replica retires only if the
+    /// offered rate stays under this fraction of the *remaining* active
+    /// capacity. Must sit below `target_util` — the gap is the hysteresis
+    /// deadband.
+    pub scale_down_util: f64,
+    /// Pressure threshold: queued requests beyond this fraction of the
+    /// active replicas' entry-queue slots count as pressure.
+    pub backlog_frac: f64,
+    /// Consecutive pressure epochs before scaling up (≥ 1).
+    pub up_epochs: u32,
+    /// Consecutive slack epochs before scaling down (≥ 1).
+    pub down_epochs: u32,
+    /// Hold epochs after any scale event before the next one.
+    pub cooldown_epochs: u32,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            min_shards: 1,
+            target_util: 0.75,
+            scale_down_util: 0.6,
+            backlog_frac: 0.25,
+            up_epochs: 1,
+            down_epochs: 2,
+            cooldown_epochs: 1,
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    /// Enabled with defaults.
+    pub fn enabled() -> Self {
+        Self { enabled: true, ..Default::default() }
+    }
+
+    /// Validate the knobs (called by the engine when enabled).
+    pub fn validate(&self) -> Result<()> {
+        if self.min_shards == 0 {
+            bail!("autoscale: min_shards must be ≥ 1");
+        }
+        if !(self.target_util > 0.0 && self.target_util <= 1.0) {
+            bail!("autoscale: target_util must be in (0, 1]");
+        }
+        if !(self.scale_down_util > 0.0 && self.scale_down_util < self.target_util) {
+            bail!("autoscale: scale_down_util must be in (0, target_util)");
+        }
+        if !(self.backlog_frac >= 0.0 && self.backlog_frac.is_finite()) {
+            bail!("autoscale: backlog_frac must be finite and ≥ 0");
+        }
+        if self.up_epochs == 0 || self.down_epochs == 0 {
+            bail!("autoscale: up_epochs and down_epochs must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
+/// Hysteresis state, one per tenant (engine-internal).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AutoscaleState {
+    /// Consecutive pressure epochs observed.
+    pub pressure_run: u32,
+    /// Consecutive slack epochs observed.
+    pub slack_run: u32,
+    /// Epochs remaining before another scale event may fire.
+    pub cooldown: u32,
+}
+
+/// One epoch's observation of a tenant, as the engine sees it at the
+/// epoch tick (counters from the epoch that just closed, queue state and
+/// replica states as of now).
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Arrivals offered during the last epoch, per second.
+    pub offered_rate: f64,
+    /// Requests rejected or dropped during the last epoch.
+    pub shed: u64,
+    /// Requests currently waiting in the active replicas' queues
+    /// (excludes batches in service).
+    pub queued: u64,
+    /// Entry-queue slots across active replicas (pressure denominator).
+    pub queue_slots: u64,
+    /// Currently active replicas.
+    pub active: usize,
+    /// Σ predicted throughput of the active replicas, req/s.
+    pub active_capacity: f64,
+    /// Smallest active replica's predicted throughput (the scale-down
+    /// candidate), req/s.
+    pub weakest_active: f64,
+    /// Predicted throughputs of the non-active (draining or parked)
+    /// replicas, **descending** — the scale-up candidates in activation
+    /// order.
+    pub inactive_weights: Vec<f64>,
+}
+
+/// What the controller decided this epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// No change.
+    Hold,
+    /// Activate the first `activate` replicas of
+    /// [`TenantLoad::inactive_weights`] (highest predicted throughput
+    /// first).
+    Up {
+        /// How many replicas to activate (≥ 1, ≤ inactive count).
+        activate: usize,
+    },
+    /// Drain the weakest active replica.
+    Down,
+}
+
+/// Advance the hysteresis state by one epoch and decide.
+///
+/// Pure and deterministic: same state + options + load always yields the
+/// same decision. Pressure/slack runs keep accumulating through a
+/// cooldown, so a sustained condition acts the moment the cooldown
+/// expires.
+pub fn decide(
+    st: &mut AutoscaleState,
+    opts: &AutoscaleOptions,
+    load: &TenantLoad,
+) -> ScaleDecision {
+    let pressure = load.shed > 0
+        || load.offered_rate > load.active_capacity
+        || (load.queue_slots > 0
+            && load.queued as f64 > opts.backlog_frac * load.queue_slots as f64);
+    let can_shrink = load.active > opts.min_shards.max(1);
+    let slack = !pressure
+        && load.shed == 0
+        && load.queued == 0
+        && can_shrink
+        && load.offered_rate
+            <= opts.scale_down_util * (load.active_capacity - load.weakest_active);
+    if pressure {
+        st.pressure_run += 1;
+        st.slack_run = 0;
+    } else if slack {
+        st.slack_run += 1;
+        st.pressure_run = 0;
+    } else {
+        st.pressure_run = 0;
+        st.slack_run = 0;
+    }
+    if st.cooldown > 0 {
+        st.cooldown -= 1;
+        return ScaleDecision::Hold;
+    }
+    if pressure && st.pressure_run >= opts.up_epochs && !load.inactive_weights.is_empty() {
+        // activate until the offered rate fits under target utilisation
+        let mut cap = load.active_capacity;
+        let mut n = 0usize;
+        for &w in &load.inactive_weights {
+            if load.offered_rate <= opts.target_util * cap {
+                break;
+            }
+            cap += w;
+            n += 1;
+        }
+        let activate = n.clamp(1, load.inactive_weights.len());
+        st.cooldown = opts.cooldown_epochs;
+        st.pressure_run = 0;
+        st.slack_run = 0;
+        return ScaleDecision::Up { activate };
+    }
+    if slack && st.slack_run >= opts.down_epochs {
+        st.cooldown = opts.cooldown_epochs;
+        st.pressure_run = 0;
+        st.slack_run = 0;
+        return ScaleDecision::Down;
+    }
+    ScaleDecision::Hold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> AutoscaleOptions {
+        AutoscaleOptions::enabled()
+    }
+
+    fn load(rate: f64, active: usize, per_replica: f64, inactive: usize) -> TenantLoad {
+        TenantLoad {
+            offered_rate: rate,
+            shed: 0,
+            queued: 0,
+            queue_slots: active as u64 * 64,
+            active,
+            active_capacity: active as f64 * per_replica,
+            weakest_active: per_replica,
+            inactive_weights: vec![per_replica; inactive],
+        }
+    }
+
+    #[test]
+    fn options_validate() {
+        assert!(opts().validate().is_ok());
+        assert!(AutoscaleOptions { min_shards: 0, ..opts() }.validate().is_err());
+        assert!(AutoscaleOptions { target_util: 0.0, ..opts() }.validate().is_err());
+        assert!(AutoscaleOptions { scale_down_util: 0.9, ..opts() }.validate().is_err());
+        assert!(AutoscaleOptions { up_epochs: 0, ..opts() }.validate().is_err());
+        assert!(AutoscaleOptions { backlog_frac: f64::NAN, ..opts() }.validate().is_err());
+    }
+
+    #[test]
+    fn overload_scales_up_to_fit_target() {
+        let o = opts();
+        let mut st = AutoscaleState::default();
+        // 1 active replica of capacity 10, rate 38: needs ≥ 51 capacity at
+        // target 0.75 → activate all 4 remaining? 38/0.75 = 50.7 → cap
+        // reaches 50 after 4 adds; the loop adds until ≤ target×cap
+        let l = load(38.0, 1, 10.0, 4);
+        match decide(&mut st, &o, &l) {
+            ScaleDecision::Up { activate } => assert_eq!(activate, 4),
+            other => panic!("expected Up, got {other:?}"),
+        }
+        assert_eq!(st.cooldown, o.cooldown_epochs);
+    }
+
+    #[test]
+    fn mild_pressure_activates_at_least_one() {
+        let o = opts();
+        let mut st = AutoscaleState::default();
+        let mut l = load(5.0, 2, 10.0, 2);
+        l.shed = 3; // transient burst shed something but rate is low
+        match decide(&mut st, &o, &l) {
+            ScaleDecision::Up { activate } => assert_eq!(activate, 1),
+            other => panic!("expected Up, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn steady_moderate_load_holds_forever() {
+        let o = opts();
+        let mut st = AutoscaleState::default();
+        // 2 active × 10: rate 12 sits in the deadband (pressure needs
+        // > 20, slack needs ≤ 0.6 × 10 = 6)
+        for _ in 0..200 {
+            assert_eq!(decide(&mut st, &o, &load(12.0, 2, 10.0, 2)), ScaleDecision::Hold);
+        }
+        assert_eq!(st.pressure_run, 0);
+        assert_eq!(st.slack_run, 0);
+    }
+
+    #[test]
+    fn slack_needs_consecutive_epochs_and_respects_floor() {
+        let o = AutoscaleOptions { down_epochs: 3, cooldown_epochs: 0, ..opts() };
+        let mut st = AutoscaleState::default();
+        let quiet = load(2.0, 3, 10.0, 1); // 2 ≤ 0.6 × 20: slack
+        assert_eq!(decide(&mut st, &o, &quiet), ScaleDecision::Hold);
+        assert_eq!(decide(&mut st, &o, &quiet), ScaleDecision::Hold);
+        assert_eq!(decide(&mut st, &o, &quiet), ScaleDecision::Down);
+        // a pressure epoch resets the slack run
+        let mut st = AutoscaleState::default();
+        assert_eq!(decide(&mut st, &o, &quiet), ScaleDecision::Hold);
+        let mut burst = quiet.clone();
+        burst.shed = 1;
+        assert!(matches!(decide(&mut st, &o, &burst), ScaleDecision::Up { .. }));
+        // at the floor, slack never fires
+        let mut st = AutoscaleState::default();
+        let floor = load(0.1, 1, 10.0, 2);
+        for _ in 0..10 {
+            assert_eq!(decide(&mut st, &o, &floor), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn cooldown_defers_but_runs_accumulate() {
+        let o = AutoscaleOptions { cooldown_epochs: 2, down_epochs: 2, ..opts() };
+        let mut st = AutoscaleState::default();
+        let over = load(35.0, 1, 10.0, 3);
+        assert!(matches!(decide(&mut st, &o, &over), ScaleDecision::Up { .. }));
+        // overload persists but cooldown holds two epochs
+        assert_eq!(decide(&mut st, &o, &over), ScaleDecision::Hold);
+        assert_eq!(decide(&mut st, &o, &over), ScaleDecision::Hold);
+        // cooldown expired, the accumulated pressure run fires immediately
+        assert!(matches!(decide(&mut st, &o, &over), ScaleDecision::Up { .. }));
+    }
+
+    #[test]
+    fn queued_backlog_counts_as_pressure() {
+        let o = opts();
+        let mut st = AutoscaleState::default();
+        let mut l = load(5.0, 2, 10.0, 1);
+        l.queued = 40; // > 0.25 × 128 slots
+        assert!(matches!(decide(&mut st, &o, &l), ScaleDecision::Up { .. }));
+    }
+
+    #[test]
+    fn no_inactive_replicas_means_no_up() {
+        let o = opts();
+        let mut st = AutoscaleState::default();
+        let l = load(35.0, 2, 10.0, 0);
+        assert_eq!(decide(&mut st, &o, &l), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn replica_state_names_and_codes() {
+        for (s, n, c) in [
+            (ReplicaState::Active, "active", 0),
+            (ReplicaState::Draining, "draining", 1),
+            (ReplicaState::Parked, "parked", 2),
+        ] {
+            assert_eq!(s.name(), n);
+            assert_eq!(s.code(), c);
+        }
+        assert_eq!(ReplicaState::default(), ReplicaState::Active);
+    }
+}

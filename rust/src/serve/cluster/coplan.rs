@@ -1,0 +1,383 @@
+//! Cross-tenant co-planning: jointly allocate **disjoint** EP budgets to
+//! every tenant of a serving deployment.
+//!
+//! Without co-planning each tenant plans against the *full* platform
+//! (greedy per-tenant placement) and the engine's time-slicing contention
+//! model arbitrates the overlap at run time. On shared heterogeneous
+//! chiplets that leaves throughput on the table: inter-model planners that
+//! partition the hardware up front avoid contention entirely (Odema et
+//! al., 2312.09401; Scope, 2602.14393). This module is that planner:
+//!
+//! * [`greedy_plan`] — the baseline: tenants grab ranked EPs
+//!   first-come-first-served in fair-count chunks;
+//! * [`water_fill_plan`] — marginal-throughput water-filling: every tenant
+//!   starts with one ranked EP, then each remaining EP (best first) goes
+//!   to the tenant whose **weighted predicted throughput** gains the most
+//!   from it, re-planning the tenant's shard placement on the grown
+//!   budget each time ([`crate::serve::shard::plan_shards`] on the
+//!   [`crate::platform::Platform::subset`] sub-platform — exhaustive on
+//!   small restricted spaces via [`crate::explore::partition`], Shisha
+//!   otherwise);
+//! * [`coplan`] — the entry point, with a **proof obligation by
+//!   construction**: it evaluates both plans above under the joint
+//!   objective `Σ weight_i × predicted_throughput_i` and returns the
+//!   better one, so a co-planned deployment is never worse than the
+//!   greedy first-come allocation on total weighted predicted throughput
+//!   (`tests/cluster_autoscale.rs` asserts this on a 3-tenant C5
+//!   scenario).
+//!
+//! Everything is deterministic: EP ranking, tie-breaks and the
+//! partition-then-tune driver are all RNG-free or fixed-seed, so a
+//! co-planned serving run keeps the engine's one-seed-one-event-log
+//! guarantee. The serving engine consumes a [`ClusterPlan`] through
+//! [`crate::serve::ServeOptions::coplan`].
+
+use anyhow::{bail, Result};
+
+use crate::model::Network;
+use crate::pipeline::PipelineConfig;
+use crate::platform::{EpId, Platform};
+
+use super::super::shard::plan_shards;
+use super::super::tenant::TenantSpec;
+
+/// One tenant's share of a [`ClusterPlan`].
+#[derive(Debug, Clone)]
+pub struct TenantAllocation {
+    /// The tenant's disjoint EP budget (global ids, ascending).
+    pub eps: Vec<EpId>,
+    /// Replica placements within the budget: each entry is the replica's
+    /// global EP subset plus its tuned configuration in the **local** ids
+    /// of that subset's sub-platform — exactly the shape the serving
+    /// engine materialises replicas from.
+    pub placements: Vec<(Vec<EpId>, PipelineConfig)>,
+    /// Total predicted throughput of the placements, img/s.
+    pub predicted: f64,
+    /// The tenant's priority weight (copied from
+    /// [`TenantSpec::weight`]).
+    pub weight: f64,
+}
+
+/// A joint allocation of the platform across all tenants.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    /// Per-tenant allocations, in input order. Budgets are pairwise
+    /// disjoint; EPs no tenant benefits from may stay unallocated.
+    pub allocations: Vec<TenantAllocation>,
+    /// Which strategy produced the plan (`"water-fill"` or `"greedy"`).
+    pub strategy: &'static str,
+}
+
+impl ClusterPlan {
+    /// The joint objective: total weighted predicted throughput.
+    pub fn objective(&self) -> f64 {
+        self.allocations.iter().map(|a| a.weight * a.predicted).sum()
+    }
+}
+
+/// Plan a tenant's shard placement inside an EP budget: tune on the
+/// budget's sub-platform and translate the chosen partition back to
+/// global ids. The returned configurations stay in the local ids of each
+/// replica's own sub-platform ([`Platform::subset`] composes: restricting
+/// the budget view to a partition entry yields the same sub-platform as
+/// restricting the full platform to the translated global ids).
+pub fn plan_budget(
+    net: &Network,
+    plat: &Platform,
+    budget: &[EpId],
+    max_shards: usize,
+) -> Result<(Vec<(Vec<EpId>, PipelineConfig)>, f64)> {
+    let sub = plat.subset(budget);
+    let plan = plan_shards(net, &sub, max_shards.max(1))?;
+    let total = plan.total_predicted();
+    let placements = plan
+        .partitions
+        .into_iter()
+        .zip(plan.configs)
+        .map(|(part, cfg)| {
+            let global: Vec<EpId> = part.iter().map(|&e| budget[e]).collect();
+            (global, cfg)
+        })
+        .collect();
+    Ok((placements, total))
+}
+
+fn check_specs(plat: &Platform, specs: &[TenantSpec]) -> Result<()> {
+    if specs.is_empty() {
+        bail!("coplan: at least one tenant required");
+    }
+    if specs.len() > plat.n_eps() {
+        bail!(
+            "coplan: {} tenants need at least as many EPs (platform {} has {})",
+            specs.len(),
+            plat.name,
+            plat.n_eps()
+        );
+    }
+    for s in specs {
+        if s.net.is_empty() {
+            bail!("coplan: tenant {} has an empty network", s.name);
+        }
+        if !(s.weight.is_finite() && s.weight > 0.0) {
+            bail!("coplan: tenant {} weight must be positive and finite", s.name);
+        }
+    }
+    Ok(())
+}
+
+fn build_plan(
+    plat: &Platform,
+    specs: &[TenantSpec],
+    budgets: Vec<Vec<EpId>>,
+    strategy: &'static str,
+) -> Result<ClusterPlan> {
+    let mut allocations = Vec::with_capacity(specs.len());
+    for (spec, mut eps) in specs.iter().zip(budgets) {
+        eps.sort_unstable();
+        let (placements, predicted) = plan_budget(&spec.net, plat, &eps, spec.shards)?;
+        allocations.push(TenantAllocation { eps, placements, predicted, weight: spec.weight });
+    }
+    Ok(ClusterPlan { allocations, strategy })
+}
+
+/// The first-come baseline: tenants in **input order** each grab a
+/// fair-count chunk of the best remaining ranked EPs (tenant `i` of `r`
+/// remaining takes `ceil(remaining_eps / r)`). This mirrors what
+/// sequential per-tenant onboarding would do on a shared cluster, made
+/// disjoint — the allocation the co-planner must never lose to.
+pub fn greedy_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
+    check_specs(plat, specs)?;
+    let ranked = plat.eps_by_rank();
+    let mut budgets: Vec<Vec<EpId>> = Vec::with_capacity(specs.len());
+    let mut next = 0usize;
+    for i in 0..specs.len() {
+        let remaining_eps = ranked.len() - next;
+        let remaining_tenants = specs.len() - i;
+        let take = remaining_eps.div_euclid(remaining_tenants)
+            + usize::from(remaining_eps % remaining_tenants != 0);
+        budgets.push(ranked[next..next + take].to_vec());
+        next += take;
+    }
+    build_plan(plat, specs, budgets, "greedy")
+}
+
+/// Water-filling on predicted marginal throughput: seed every tenant with
+/// one ranked EP (heaviest weight gets the best EP; ties keep input
+/// order), then hand each remaining EP — best first — to the tenant whose
+/// weighted predicted throughput grows the most when its shard placement
+/// is re-planned on the enlarged budget. An EP nobody gains from
+/// (`weighted marginal gain ≤ 0` for every tenant) stays unallocated
+/// rather than being parked on an arbitrary tenant.
+pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
+    check_specs(plat, specs)?;
+    let ranked = plat.eps_by_rank();
+
+    // seeding order: descending weight, ties by input order
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by(|&a, &b| {
+        specs[b].weight.total_cmp(&specs[a].weight).then(a.cmp(&b))
+    });
+    let mut budgets: Vec<Vec<EpId>> = vec![Vec::new(); specs.len()];
+    for (rank_ix, &t) in order.iter().enumerate() {
+        budgets[t].push(ranked[rank_ix]);
+    }
+    let mut predicted: Vec<f64> = Vec::with_capacity(specs.len());
+    for (spec, budget) in specs.iter().zip(&budgets) {
+        let (_, p) = plan_budget(&spec.net, plat, budget, spec.shards)?;
+        predicted.push(p);
+    }
+
+    for &ep in &ranked[specs.len()..] {
+        // offer this EP to every tenant; the best weighted marginal gain
+        // wins (ties: fewer EPs so far, then lower tenant index)
+        let mut best: Option<(usize, f64, f64)> = None; // (tenant, gain, new predicted)
+        for (t, spec) in specs.iter().enumerate() {
+            let mut cand = budgets[t].clone();
+            cand.push(ep);
+            cand.sort_unstable();
+            let (_, p) = plan_budget(&spec.net, plat, &cand, spec.shards)?;
+            let gain = spec.weight * (p - predicted[t]);
+            let better = match best {
+                None => true,
+                Some((bt, bg, _)) => {
+                    gain > bg
+                        || (gain == bg
+                            && (budgets[t].len() < budgets[bt].len()
+                                || (budgets[t].len() == budgets[bt].len() && t < bt)))
+                }
+            };
+            if better {
+                best = Some((t, gain, p));
+            }
+        }
+        if let Some((t, gain, p)) = best {
+            if gain > 0.0 {
+                budgets[t].push(ep);
+                budgets[t].sort_unstable();
+                predicted[t] = p;
+            }
+        }
+    }
+    build_plan(plat, specs, budgets, "water-fill")
+}
+
+/// Co-plan the platform across all tenants.
+///
+/// Evaluates the water-filling plan and the greedy first-come baseline
+/// under the joint objective (total weighted predicted throughput) and
+/// returns whichever scores higher — water-filling on ties. The returned
+/// plan is therefore **never worse than greedy first-come allocation** by
+/// construction; [`ClusterPlan::strategy`] records which side won.
+pub fn coplan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
+    let wf = water_fill_plan(plat, specs)?;
+    let gd = greedy_plan(plat, specs)?;
+    Ok(if wf.objective() >= gd.objective() { wf } else { gd })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+    use crate::serve::arrivals::ArrivalProcess;
+
+    fn spec(name: &str, net: crate::model::Network, weight: f64, shards: usize) -> TenantSpec {
+        TenantSpec::new(name, net, ArrivalProcess::Poisson { rate: 1.0 })
+            .with_weight(weight)
+            .with_shards(shards)
+    }
+
+    fn assert_disjoint(plan: &ClusterPlan, n_eps: usize) {
+        let mut seen = vec![false; n_eps];
+        for a in &plan.allocations {
+            assert!(!a.eps.is_empty(), "every tenant gets at least one EP");
+            for &e in &a.eps {
+                assert!(e < n_eps, "EP {e} out of range");
+                assert!(!seen[e], "EP {e} allocated twice");
+                seen[e] = true;
+            }
+            // placements partition the budget
+            let mut in_budget = vec![false; n_eps];
+            for &e in &a.eps {
+                in_budget[e] = true;
+            }
+            let mut covered = 0usize;
+            for (eps, _) in &a.placements {
+                for &e in eps {
+                    assert!(in_budget[e], "placement EP {e} escaped its budget");
+                    covered += 1;
+                }
+            }
+            assert_eq!(covered, a.eps.len(), "placements must cover the budget exactly");
+        }
+    }
+
+    #[test]
+    fn greedy_chunks_ranked_eps_in_input_order() {
+        let plat = configs::c5();
+        let specs = vec![
+            spec("a", networks::synthnet_small(), 1.0, 1),
+            spec("b", networks::synthnet_small(), 1.0, 1),
+            spec("c", networks::synthnet_small(), 1.0, 1),
+        ];
+        let plan = greedy_plan(&plat, &specs).unwrap();
+        assert_eq!(plan.strategy, "greedy");
+        assert_disjoint(&plan, plat.n_eps());
+        // fair-count chunks of 8 EPs over 3 tenants: 3 + 3 + 2
+        assert_eq!(plan.allocations[0].eps.len(), 3);
+        assert_eq!(plan.allocations[1].eps.len(), 3);
+        assert_eq!(plan.allocations[2].eps.len(), 2);
+        // first-come: tenant 0 holds the top-ranked EP
+        let top = plat.eps_by_rank()[0];
+        assert!(plan.allocations[0].eps.contains(&top));
+    }
+
+    #[test]
+    fn water_fill_allocates_disjoint_budgets() {
+        let plat = configs::c2();
+        let specs = vec![
+            spec("heavy", networks::synthnet(), 2.0, 2),
+            spec("light", networks::synthnet_small(), 1.0, 1),
+        ];
+        let plan = water_fill_plan(&plat, &specs).unwrap();
+        assert_eq!(plan.strategy, "water-fill");
+        assert_disjoint(&plan, plat.n_eps());
+        assert!(plan.objective() > 0.0);
+        // placements carry valid configs on their sub-platforms
+        for a in &plan.allocations {
+            assert!(!a.placements.is_empty());
+        }
+        for (a, s) in plan.allocations.iter().zip(&specs) {
+            for (eps, cfg) in &a.placements {
+                let sub = plat.subset(eps);
+                assert!(cfg.validate(s.net.len(), &sub).is_ok(), "{}", cfg.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn coplan_never_below_greedy() {
+        let plat = configs::c2();
+        let specs = vec![
+            spec("a", networks::synthnet(), 2.0, 2),
+            spec("b", networks::alexnet(), 1.0, 1),
+        ];
+        let joint = coplan(&plat, &specs).unwrap();
+        let greedy = greedy_plan(&plat, &specs).unwrap();
+        assert!(
+            joint.objective() >= greedy.objective(),
+            "proof obligation: joint {} < greedy {}",
+            joint.objective(),
+            greedy.objective()
+        );
+        assert_disjoint(&joint, plat.n_eps());
+    }
+
+    #[test]
+    fn coplan_is_deterministic() {
+        let plat = configs::c2();
+        let specs = vec![
+            spec("a", networks::synthnet(), 1.5, 2),
+            spec("b", networks::synthnet_small(), 1.0, 1),
+        ];
+        let p1 = coplan(&plat, &specs).unwrap();
+        let p2 = coplan(&plat, &specs).unwrap();
+        assert_eq!(p1.strategy, p2.strategy);
+        assert_eq!(p1.objective().to_bits(), p2.objective().to_bits());
+        for (a, b) in p1.allocations.iter().zip(&p2.allocations) {
+            assert_eq!(a.eps, b.eps);
+            assert_eq!(a.placements.len(), b.placements.len());
+            for ((ea, ca), (eb, cb)) in a.placements.iter().zip(&b.placements) {
+                assert_eq!(ea, eb);
+                assert_eq!(ca, cb);
+            }
+        }
+    }
+
+    #[test]
+    fn coplan_rejects_bad_inputs() {
+        let plat = configs::c1(); // 2 EPs
+        assert!(coplan(&plat, &[]).is_err());
+        let three = vec![
+            spec("a", networks::synthnet_small(), 1.0, 1),
+            spec("b", networks::synthnet_small(), 1.0, 1),
+            spec("c", networks::synthnet_small(), 1.0, 1),
+        ];
+        assert!(coplan(&plat, &three).is_err(), "3 tenants cannot split 2 EPs");
+        let bad_weight =
+            vec![spec("a", networks::synthnet_small(), 1.0, 1).with_weight(0.0)];
+        assert!(coplan(&plat, &bad_weight).is_err());
+    }
+
+    #[test]
+    fn single_tenant_gets_whole_platform_value() {
+        // with one tenant, water-filling degenerates to plan_shards on a
+        // budget that absorbs every EP it benefits from
+        let plat = configs::c1();
+        let specs = vec![spec("solo", networks::synthnet_small(), 1.0, 2)];
+        let plan = coplan(&plat, &specs).unwrap();
+        assert_eq!(plan.allocations.len(), 1);
+        assert!(!plan.allocations[0].eps.is_empty());
+        assert!(plan.objective() > 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cluster-level planning and control: the two cooperating pieces that
+//! lift serving from per-tenant decisions to whole-platform ones.
+//!
+//! * [`coplan`] — the **cross-tenant co-planner**: jointly allocates
+//!   disjoint EP budgets across every tenant (water-filling on predicted
+//!   marginal throughput, with per-tenant priority weights), provably
+//!   never worse than greedy first-come allocation on total weighted
+//!   predicted throughput. Enabled per run via
+//!   [`crate::serve::ServeOptions::coplan`].
+//! * [`autoscale`] — the **runtime shard autoscaler**: an epoch-driven,
+//!   deterministic controller that activates, drains and parks a tenant's
+//!   planned replicas as the observed load moves, with hysteresis so
+//!   oscillating traffic cannot thrash. Enabled via
+//!   [`crate::serve::ServeOptions::autoscale`].
+//!
+//! Planning happens once at serve start; scaling happens at every control
+//! epoch. Both are pure functions of their inputs, so co-planned and
+//! autoscaled runs keep the serving engine's one-seed-one-event-log
+//! determinism guarantee (pinned by `tests/serve_golden.rs`).
+
+pub mod autoscale;
+pub mod coplan;
+
+pub use autoscale::{AutoscaleOptions, ReplicaState, ScaleEvent};
+pub use coplan::{coplan, greedy_plan, water_fill_plan, ClusterPlan, TenantAllocation};

@@ -75,6 +75,24 @@
 //! warm re-tunes run per replica against its own sub-platform, so a
 //! re-tuned replica can never migrate onto a sibling's EPs.
 //!
+//! ## Cluster control
+//!
+//! Two opt-in layers sit above per-tenant sharding
+//! ([`crate::serve::cluster`]):
+//!
+//! * [`ServeOptions::coplan`] replaces the per-tenant placement with one
+//!   **joint, disjoint** EP allocation across all tenants
+//!   (water-filling on weighted predicted marginal throughput, never
+//!   worse than greedy first-come allocation on the joint objective);
+//! * [`ServeOptions::autoscale`] turns the replica set dynamic: at every
+//!   control epoch a deterministic controller activates, drains or parks
+//!   replicas within the planned budget. Draining replicas stop
+//!   receiving arrivals but serve out their backlog before parking, so
+//!   request conservation holds across every scale transition; parked
+//!   replicas stop accruing [`EpochStats::active_eps`] (the EP-epoch
+//!   meter). Scale transitions are hashed into the event log (tag 6) and
+//!   recorded per replica in [`ShardReport::scale_events`].
+//!
 //! `benches/serve_scale.rs` tracks simulated events/second per scenario in
 //! `BENCH_serve.json` at the repository root.
 
@@ -90,6 +108,10 @@ use crate::platform::{EpId, Platform};
 use crate::rng::Xoshiro256;
 
 use super::arrivals::ArrivalSampler;
+use super::cluster::autoscale::{
+    self, AutoscaleOptions, AutoscaleState, ReplicaState, ScaleDecision, ScaleEvent, TenantLoad,
+};
+use super::cluster::coplan;
 use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
@@ -141,6 +163,19 @@ pub struct ServeOptions {
     pub max_events: u64,
     /// Settling strategy; see [`PumpMode`].
     pub pump: PumpMode,
+    /// Cross-tenant co-planning: jointly allocate **disjoint** EP budgets
+    /// across all tenants at serve start
+    /// ([`crate::serve::cluster::coplan`]) instead of letting every
+    /// tenant plan against the full platform. Tenants then never contend
+    /// on compute (the inter-chiplet link stays shared), and the joint
+    /// plan is never worse than greedy first-come allocation on total
+    /// weighted predicted throughput.
+    pub coplan: bool,
+    /// Runtime shard autoscaler: at every control epoch, grow or shrink
+    /// each tenant's live replica count within its planned budget
+    /// ([`crate::serve::cluster::autoscale`]). Requires
+    /// `control_epoch_s > 0`.
+    pub autoscale: AutoscaleOptions,
 }
 
 impl Default for ServeOptions {
@@ -157,6 +192,8 @@ impl Default for ServeOptions {
             record_log: false,
             max_events: 20_000_000,
             pump: PumpMode::EventDriven,
+            coplan: false,
+            autoscale: AutoscaleOptions::default(),
         }
     }
 }
@@ -226,6 +263,12 @@ pub struct EpochStats {
     pub retuned: bool,
     /// Evaluator trials the re-tune consumed.
     pub retune_trials: u64,
+    /// EPs held (active or draining) during the epoch — the autoscaler's
+    /// resource meter. For a replica this is its subset size or 0 when
+    /// parked; tenant-level series sum across replicas. `Σ active_eps`
+    /// over a run's epochs is its EP-epoch cost
+    /// ([`TenantReport::ep_epochs`]).
+    pub active_eps: u64,
 }
 
 /// Final report for one pipeline replica of a tenant (tenants without
@@ -266,6 +309,12 @@ pub struct ShardReport {
     pub latency: QuantileSketch,
     /// Per-epoch time series of this replica.
     pub epochs: Vec<EpochStats>,
+    /// Scale transitions the autoscaler put this replica through (empty
+    /// without autoscaling); each records the epoch-tick time and the
+    /// state entered.
+    pub scale_events: Vec<ScaleEvent>,
+    /// Replica state at the horizon.
+    pub final_state: ReplicaState,
 }
 
 /// Final per-tenant report. All counters aggregate over the tenant's
@@ -339,6 +388,21 @@ impl TenantReport {
         self.offered == self.rejected + self.dropped + self.completed + self.in_flight
     }
 
+    /// EP-epochs consumed: Σ over the epoch series of the EPs held active
+    /// (or draining) that epoch. A statically sharded tenant pays
+    /// `n_epochs × Σ replica EPs`; the autoscaler's win is the same
+    /// goodput at a smaller meter.
+    pub fn ep_epochs(&self) -> u64 {
+        self.epochs.iter().map(|e| e.active_eps).sum()
+    }
+
+    /// What the EP-epoch meter would read had every replica stayed
+    /// active all run: `n_epochs × Σ replica EPs` — the static-deployment
+    /// baseline [`TenantReport::ep_epochs`] is compared against.
+    pub fn always_on_ep_epochs(&self) -> u64 {
+        self.epochs.len() as u64 * self.shards.iter().map(|s| s.eps.len() as u64).sum::<u64>()
+    }
+
     /// Row for [`crate::metrics::table::latency_table`] — the one mapping
     /// from a tenant report to the shared percentile renderer.
     pub fn latency_row(&self, duration_s: f64) -> crate::metrics::table::LatencyRow {
@@ -375,6 +439,11 @@ impl ServeReport {
     /// Per-tenant SLO goodputs, requests/second.
     pub fn goodputs(&self) -> Vec<f64> {
         self.tenants.iter().map(|t| t.goodput(self.duration_s)).collect()
+    }
+
+    /// Total EP-epochs across tenants (see [`TenantReport::ep_epochs`]).
+    pub fn ep_epochs(&self) -> u64 {
+        self.tenants.iter().map(|t| t.ep_epochs()).sum()
     }
 
     /// Jain fairness index over per-tenant goodputs.
@@ -513,6 +582,12 @@ struct ShardRt {
     weight: f64,
     /// Smooth-WRR credit accumulator (deterministic, RNG-free).
     credit: f64,
+    /// Autoscaler state: Active replicas receive traffic, Draining ones
+    /// serve out their backlog, Parked ones idle (EPs free). Always
+    /// Active when autoscaling is disabled.
+    state: ReplicaState,
+    /// Scale transitions (time + state entered), for the report.
+    scale_log: Vec<ScaleEvent>,
     // cumulative counters (per replica)
     offered: u64,
     rejected: u64,
@@ -582,23 +657,57 @@ struct TenantRt {
     offered: u64,
     /// Round-robin cursor.
     rr: u64,
+    /// Autoscaler hysteresis state.
+    auto: AutoscaleState,
+    /// Cached count of Active replicas, maintained by the autoscaler on
+    /// every transition — keeps the per-arrival balancer free of state
+    /// scans (round-robin stays O(1) while all replicas are active, the
+    /// static-sharding hot path PR 2 optimised).
+    n_active: usize,
     shards: Vec<ShardRt>,
 }
 
 impl TenantRt {
     /// Route one arrival at simulated time `now`: pick the replica per
-    /// the tenant's balancer. Deterministic — every policy is a pure
+    /// the tenant's balancer, considering only **Active** replicas
+    /// (draining and parked ones receive no new arrivals; without
+    /// autoscaling every replica is Active and this reduces exactly to
+    /// the original policies). Deterministic — every policy is a pure
     /// function of engine state.
     fn pick_shard(&mut self, now: f64) -> usize {
-        let k = self.shards.len();
-        if k == 1 {
+        if self.shards.len() == 1 {
             return 0;
         }
+        let n_active = self.n_active;
+        debug_assert!(n_active >= 1, "the autoscaler never drains the last active replica");
+        debug_assert_eq!(
+            n_active,
+            self.shards.iter().filter(|s| s.state == ReplicaState::Active).count(),
+            "cached active-replica count out of sync"
+        );
         match self.spec.balancer {
             BalancerPolicy::RoundRobin => {
-                let s = (self.rr % k as u64) as usize;
+                let mut pos = (self.rr % n_active.max(1) as u64) as usize;
                 self.rr += 1;
-                s
+                if n_active == self.shards.len() {
+                    // all replicas active (always true without
+                    // autoscaling): the pos-th active replica IS index
+                    // pos — the original O(1) path
+                    return pos;
+                }
+                // cycle through the active replicas in index order
+                let mut fallback = 0;
+                for (i, srt) in self.shards.iter().enumerate() {
+                    if srt.state != ReplicaState::Active {
+                        continue;
+                    }
+                    fallback = i;
+                    if pos == 0 {
+                        return i;
+                    }
+                    pos -= 1;
+                }
+                fallback
             }
             BalancerPolicy::JoinShortestQueue => {
                 // least-loaded by *total* backlog, not just the entry
@@ -607,32 +716,42 @@ impl TenantRt {
                 // entry-queue-only rule would flood exactly the replica
                 // that cannot serve. Frozen replicas are deprioritized
                 // outright; ties break on the lowest index.
-                let mut best = 0;
+                let mut best: Option<usize> = None;
                 let mut best_key = (true, u64::MAX);
                 for (i, srt) in self.shards.iter().enumerate() {
+                    if srt.state != ReplicaState::Active {
+                        continue;
+                    }
                     let key = (now < srt.frozen_until, srt.backlog());
-                    if key < best_key {
+                    if best.is_none() || key < best_key {
                         best_key = key;
-                        best = i;
+                        best = Some(i);
                     }
                 }
-                best
+                best.unwrap_or(0)
             }
             BalancerPolicy::WeightedThroughput => {
-                // smooth weighted round-robin: every replica accrues its
-                // weight, the highest credit serves and pays the total —
-                // over time replica `i` receives weight_i/Σweights of the
-                // arrivals with no bursts towards any single replica
-                let total: f64 = self.shards.iter().map(|s| s.weight).sum();
-                let mut best = 0;
+                // smooth weighted round-robin: every active replica
+                // accrues its weight, the highest credit serves and pays
+                // the total — over time replica `i` receives
+                // weight_i/Σweights of the arrivals with no bursts
+                // towards any single replica. Credits reset on scale
+                // events so a re-activated replica starts neutral.
+                let mut total = 0.0;
+                let mut best: Option<usize> = None;
                 let mut best_credit = f64::NEG_INFINITY;
                 for (i, srt) in self.shards.iter_mut().enumerate() {
+                    if srt.state != ReplicaState::Active {
+                        continue;
+                    }
+                    total += srt.weight;
                     srt.credit += srt.weight;
-                    if srt.credit > best_credit {
+                    if best.is_none() || srt.credit > best_credit {
                         best_credit = srt.credit;
-                        best = i;
+                        best = Some(i);
                     }
                 }
+                let best = best.unwrap_or(0);
                 self.shards[best].credit -= total;
                 best
             }
@@ -1029,6 +1148,11 @@ fn epoch_tick(
         backlog,
         retuned,
         retune_trials: trials,
+        // the EP meter: a parked replica's EPs are free; active and
+        // draining replicas hold theirs (recorded before this tick's
+        // scale decisions, so the epoch that *ends* now is charged for
+        // the state it ran under)
+        active_eps: if t.state == ReplicaState::Parked { 0 } else { t.ep_map.len() as u64 },
     });
     t.ep_offered = 0;
     t.ep_completed = 0;
@@ -1040,6 +1164,123 @@ fn epoch_tick(
     // produce completions to update the EWMA — become eligible again
     for f in &mut t.ep_slow {
         *f = 1.0 + (*f - 1.0) * EWMA_EPOCH_RELAX;
+    }
+}
+
+/// Run one autoscaler step for a tenant at an epoch tick: finish pending
+/// drains, assemble the load observation from the epoch that just
+/// closed, and apply the (pure, deterministic) [`autoscale::decide`]
+/// verdict — activating parked/draining replicas highest-predicted-first
+/// on scale-up, or draining the weakest active replica on scale-down.
+/// Every transition is hashed into the event log (tag 6) and recorded in
+/// the replica's scale log. Balancer credits reset on any transition so
+/// routing restarts neutral over the new active set.
+fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: &ServeOptions) {
+    // 1. a draining replica with an empty backlog parks (its EPs go idle)
+    for si in 0..t.shards.len() {
+        if t.shards[si].state == ReplicaState::Draining && t.shards[si].backlog() == 0 {
+            t.shards[si].state = ReplicaState::Parked;
+            t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Parked });
+            sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
+                format!("{now:.6} scale {} r{si} parked", t.spec.name)
+            });
+        }
+    }
+    // 2. observe the epoch that just closed
+    let mut offered = 0u64;
+    let mut shed = 0u64;
+    for srt in &t.shards {
+        if let Some(e) = srt.epochs.last() {
+            offered += e.offered;
+            shed += e.rejected + e.dropped;
+        }
+    }
+    let mut queued = 0u64;
+    let mut active = 0usize;
+    let mut active_capacity = 0.0f64;
+    let mut weakest_active = f64::INFINITY;
+    for srt in &t.shards {
+        if srt.state == ReplicaState::Active {
+            active += 1;
+            queued += srt.queued();
+            active_capacity += srt.weight;
+            if srt.weight < weakest_active {
+                weakest_active = srt.weight;
+            }
+        }
+    }
+    // scale-up candidates: highest predicted throughput first, ties on
+    // the lower replica index
+    let mut inactive: Vec<(usize, f64)> = t
+        .shards
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.state != ReplicaState::Active)
+        .map(|(i, s)| (i, s.weight))
+        .collect();
+    inactive.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    let epoch_s = opts.control_epoch_s;
+    let load = TenantLoad {
+        offered_rate: if epoch_s > 0.0 { offered as f64 / epoch_s } else { 0.0 },
+        shed,
+        queued,
+        queue_slots: active as u64 * t.spec.queue_capacity as u64,
+        active,
+        active_capacity,
+        weakest_active: if weakest_active.is_finite() { weakest_active } else { 0.0 },
+        inactive_weights: inactive.iter().map(|&(_, w)| w).collect(),
+    };
+    match autoscale::decide(&mut t.auto, &opts.autoscale, &load) {
+        ScaleDecision::Hold => {}
+        ScaleDecision::Up { activate } => {
+            for &(si, _) in inactive.iter().take(activate) {
+                t.shards[si].state = ReplicaState::Active;
+                t.n_active += 1;
+                t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Active });
+                sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
+                    format!("{now:.6} scale {} r{si} active", t.spec.name)
+                });
+            }
+            for srt in &mut t.shards {
+                srt.credit = 0.0;
+            }
+        }
+        ScaleDecision::Down => {
+            // retire the weakest active replica; ties drain the highest
+            // index (later replicas go first, replica 0 is the keeper)
+            let mut pick: Option<(usize, f64)> = None;
+            for (si, srt) in t.shards.iter().enumerate() {
+                if srt.state != ReplicaState::Active {
+                    continue;
+                }
+                let better = match pick {
+                    None => true,
+                    Some((_, pw)) => srt.weight <= pw,
+                };
+                if better {
+                    pick = Some((si, srt.weight));
+                }
+            }
+            if let Some((si, _)) = pick {
+                // an empty replica has nothing to serve out: it parks in
+                // one transition; otherwise it drains first and parks at
+                // a later tick once its backlog is gone
+                let to = if t.shards[si].backlog() == 0 {
+                    ReplicaState::Parked
+                } else {
+                    ReplicaState::Draining
+                };
+                t.shards[si].state = to;
+                t.n_active -= 1;
+                t.shards[si].scale_log.push(ScaleEvent { t_s: now, to });
+                sh.note(now, 6, pack_ts(ti, si), to.code(), || {
+                    format!("{now:.6} scale {} r{si} {}", t.spec.name, to.name())
+                });
+                for srt in &mut t.shards {
+                    srt.credit = 0.0;
+                }
+            }
+        }
     }
 }
 
@@ -1068,20 +1309,41 @@ pub fn serve(
     if opts.duration_s <= 0.0 {
         bail!("serve: duration must be positive");
     }
+    if opts.autoscale.enabled {
+        opts.autoscale.validate()?;
+        if opts.control_epoch_s <= 0.0 {
+            bail!("serve: the autoscaler is epoch-driven — set control_epoch_s > 0");
+        }
+    }
     let model = CostModel::default();
     let mut master = Xoshiro256::seed_from(opts.seed);
+    // Cross-tenant co-planning: one joint, disjoint EP allocation over
+    // all tenants, computed up front (deterministic), replacing the
+    // per-tenant placement logic below.
+    let cluster_plan = if opts.coplan {
+        let specs: Vec<TenantSpec> = tenants.iter().map(|(s, _)| s.clone()).collect();
+        Some(coplan::coplan(plat, &specs)?)
+    } else {
+        None
+    };
     let mut rts: Vec<TenantRt> = Vec::with_capacity(tenants.len());
-    for (spec, config) in tenants {
+    for (ti, (spec, config)) in tenants.into_iter().enumerate() {
         spec.validate(plat, &config)?;
-        // shard placement: identity for unsharded tenants, planned
-        // otherwise. The caller's configuration is always the baseline
-        // candidate — a plan that does not predict strictly above it
-        // (e.g. the caller pre-tuned harder than the planner's budget)
-        // falls back to serving the provided config unsharded, so opting
-        // into sharding can never plan a slower deployment than the
-        // configuration that was passed in.
+        // shard placement: the tenant's slice of the cluster plan under
+        // co-planning; otherwise identity for unsharded tenants, planned
+        // per tenant for sharded ones. In the per-tenant case the
+        // caller's configuration is always the baseline candidate — a
+        // plan that does not predict strictly above it (e.g. the caller
+        // pre-tuned harder than the planner's budget) falls back to
+        // serving the provided config unsharded, so opting into sharding
+        // can never plan a slower deployment than the configuration that
+        // was passed in. (Under co-planning the budgets are disjoint by
+        // construction, so the full-platform caller config is not a
+        // candidate.)
         let identity: Vec<EpId> = (0..plat.n_eps()).collect();
-        let placements: Vec<(Vec<EpId>, PipelineConfig)> = if spec.shards > 1 {
+        let placements: Vec<(Vec<EpId>, PipelineConfig)> = if let Some(plan) = &cluster_plan {
+            plan.allocations[ti].placements.clone()
+        } else if spec.shards > 1 {
             let plan = shard::plan_shards(&spec.net, plat, spec.shards)?;
             let provided_tp = {
                 let db = PerfDb::build(&spec.net, plat, &model);
@@ -1137,6 +1399,8 @@ pub fn serve(
                 scale_buf: vec![1.0; n_sub_eps],
                 weight,
                 credit: 0.0,
+                state: ReplicaState::Active,
+                scale_log: Vec::new(),
                 offered: 0,
                 rejected: 0,
                 dropped: 0,
@@ -1159,7 +1423,16 @@ pub fn serve(
             });
         }
         let sampler = spec.arrivals.sampler(master.fork());
-        rts.push(TenantRt { sampler, next_id: 0, offered: 0, rr: 0, shards, spec });
+        rts.push(TenantRt {
+            sampler,
+            next_id: 0,
+            offered: 0,
+            rr: 0,
+            auto: AutoscaleState::default(),
+            n_active: shards.len(),
+            shards,
+            spec,
+        });
     }
 
     let mut sh = Shared {
@@ -1326,6 +1599,13 @@ pub fn serve(
                             full_rescan,
                         );
                     }
+                    // scale decisions run after every replica ticked, so
+                    // they see the full epoch observation; transitions
+                    // only change routing (and the EP meter), never queue
+                    // contents, so no re-settle is needed here
+                    if opts.autoscale.enabled && t.shards.len() > 1 {
+                        autoscale_tick(t, &mut sh, ti, now, opts);
+                    }
                 }
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
@@ -1373,6 +1653,8 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             retune_trials: s.retune_trials,
             latency: s.latency,
             epochs: s.epochs,
+            scale_events: s.scale_log,
+            final_state: s.state,
             eps: s.ep_map,
         });
     }
@@ -1395,6 +1677,7 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             backlog: 0,
             retuned: false,
             retune_trials: 0,
+            active_eps: 0,
         };
         for sr in &shard_reports {
             let ep = &sr.epochs[e];
@@ -1408,6 +1691,7 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             agg.backlog += ep.backlog;
             agg.retuned |= ep.retuned;
             agg.retune_trials += ep.retune_trials;
+            agg.active_eps += ep.active_eps;
         }
         epochs.push(agg);
     }
@@ -1840,6 +2124,131 @@ mod tests {
             "deployment predicts {total}, below the provided config's {cap}"
         );
         assert!(t.conserved());
+    }
+
+    // --- cluster: co-planning + autoscaling -------------------------------
+
+    #[test]
+    fn autoscale_requires_epochs() {
+        let plat = crate::platform::configs::c1();
+        let (spec, cfg) = small_tenant("t0", 1.0);
+        let mut opts = base_opts(1.0); // control_epoch_s == 0
+        opts.autoscale.enabled = true;
+        assert!(serve(&plat, vec![(spec, cfg)], &opts).is_err());
+    }
+
+    #[test]
+    fn autoscale_disabled_keeps_all_replicas_active() {
+        let (plat, spec, cfg, cap) = sharded_tenant(1.5, 2, BalancerPolicy::RoundRobin);
+        let mut opts = base_opts(100.0 / cap);
+        opts.control_epoch_s = 10.0 / cap;
+        let report = serve(&plat, vec![(spec, cfg)], &opts).unwrap();
+        let t = &report.tenants[0];
+        assert_eq!(t.shards.len(), 2);
+        for s in &t.shards {
+            assert!(s.scale_events.is_empty(), "no scale events without autoscaling");
+            assert_eq!(s.final_state, ReplicaState::Active);
+            assert!(
+                s.epochs.iter().all(|e| e.active_eps == s.eps.len() as u64),
+                "static replicas hold their EPs every epoch"
+            );
+        }
+        assert_eq!(
+            t.ep_epochs(),
+            t.epochs.len() as u64 * plat.n_eps() as u64,
+            "static deployment pays the full EP-epoch meter"
+        );
+    }
+
+    #[test]
+    fn autoscale_parks_idle_replicas_and_conserves() {
+        // tidal MMPP on the C5 fixture: the low phase (well under one
+        // replica's capacity) lets the autoscaler drain + park replicas,
+        // the burst re-activates them; requests are conserved throughout
+        let plat = crate::platform::configs::c5();
+        let net = networks::synthnet();
+        let cfg = crate::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let spec = TenantSpec::new(
+            "tidal",
+            net,
+            ArrivalProcess::Mmpp {
+                low_rate: 0.2 * cap,
+                high_rate: 1.3 * cap,
+                mean_low_s: 100.0 / cap,
+                mean_high_s: 100.0 / cap,
+            },
+        )
+        .with_shards(4)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(32)
+        .with_admission(AdmissionPolicy::DropOldest)
+        .with_slo(500.0 / cap);
+        let mut opts = base_opts(400.0 / cap);
+        opts.control_epoch_s = 4.0 / cap;
+        opts.autoscale.enabled = true;
+        let report = serve(&plat, vec![(spec, cfg)], &opts).unwrap();
+        let t = &report.tenants[0];
+        assert!(t.conserved(), "conservation across scale transitions: {t:?}");
+        assert!(t.shards.len() > 1, "fixture must replicate");
+        let events: usize = t.shards.iter().map(|s| s.scale_events.len()).sum();
+        assert!(events > 0, "the tidal load must trigger scale events");
+        assert!(
+            t.epochs.iter().any(|e| e.active_eps < plat.n_eps() as u64),
+            "some epoch must run with parked replicas: {:?}",
+            t.epochs.iter().map(|e| e.active_eps).collect::<Vec<_>>()
+        );
+        assert!(
+            t.ep_epochs() < t.epochs.len() as u64 * plat.n_eps() as u64,
+            "autoscaling must save EP-epochs over always-on"
+        );
+        // replica counters still sum to the tenant aggregates
+        assert_eq!(t.offered, t.shards.iter().map(|s| s.offered).sum::<u64>());
+        assert_eq!(t.completed, t.shards.iter().map(|s| s.completed).sum::<u64>());
+    }
+
+    #[test]
+    fn coplan_serves_tenants_on_disjoint_eps() {
+        let plat = crate::platform::configs::c2();
+        let net_a = networks::synthnet();
+        let net_b = networks::synthnet_small();
+        let cfg_a = crate::serve::shisha_config(&net_a, &plat);
+        let cfg_b = crate::serve::shisha_config(&net_b, &plat);
+        let db = PerfDb::build(&net_a, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net_a, &plat, &db, &cfg_a);
+        let a = TenantSpec::new("a", net_a, ArrivalProcess::Poisson { rate: 0.4 * cap })
+            .with_weight(2.0)
+            .with_shards(2);
+        let b = TenantSpec::new("b", net_b, ArrivalProcess::Poisson { rate: 0.4 * cap });
+        let mut opts = base_opts(60.0 / cap);
+        opts.coplan = true;
+        let report = serve(&plat, vec![(a, cfg_a), (b, cfg_b)], &opts).unwrap();
+        // all replica EP sets, across *both* tenants, are pairwise disjoint
+        let mut seen = vec![false; plat.n_eps()];
+        for t in &report.tenants {
+            assert!(t.conserved(), "{}: conservation", t.name);
+            assert!(t.completed > 0, "{}: starved by its budget", t.name);
+            for s in &t.shards {
+                for &e in &s.eps {
+                    assert!(!seen[e], "EP {e} shared across the co-planned cluster");
+                    seen[e] = true;
+                }
+                for ep in &s.final_config.assignment {
+                    assert!(s.eps.contains(ep), "config escaped its budget");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coplan_rejects_more_tenants_than_eps() {
+        let plat = crate::platform::configs::c1(); // 2 EPs
+        let mk = |n: &str| small_tenant(n, 1.0);
+        let mut opts = base_opts(1.0);
+        opts.coplan = true;
+        let tenants = vec![mk("a"), mk("b"), mk("c")];
+        assert!(serve(&plat, tenants, &opts).is_err());
     }
 
     #[test]

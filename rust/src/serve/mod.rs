@@ -25,6 +25,12 @@
 //!   partitions the platform's EPs into disjoint subsets, tunes one
 //!   replica pipeline per subset, and the front-end [`BalancerPolicy`]
 //!   the engine routes arrivals with (`TenantSpec::with_shards`);
+//! * [`cluster`] — cluster-level control: the cross-tenant **co-planner**
+//!   ([`cluster::coplan`] — joint disjoint EP budgets, weighted
+//!   water-filling, provably never worse than greedy first-come
+//!   allocation) and the epoch-driven **shard autoscaler**
+//!   ([`cluster::autoscale`] — replicas activate, drain and park with the
+//!   load, with hysteresis), both enabled per run via [`ServeOptions`];
 //! * [`sweep`] — parallel scenario sweeps: independent serving scenarios
 //!   fanned out across CPU cores with order- and thread-count-invariant
 //!   results (`shisha serve --sweep`), including side-by-side shard-count
@@ -36,6 +42,7 @@
 //! model and the contention assumptions.
 
 pub mod arrivals;
+pub mod cluster;
 pub mod engine;
 pub mod shard;
 pub mod slo;
@@ -43,6 +50,7 @@ pub mod sweep;
 pub mod tenant;
 
 pub use arrivals::{ArrivalProcess, ArrivalSampler};
+pub use cluster::{AutoscaleOptions, ClusterPlan, ReplicaState, ScaleEvent};
 pub use engine::{
     serve, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport, TenantReport,
 };

@@ -94,6 +94,11 @@ pub struct ScenarioStats {
     pub goodput_rps: f64,
     /// Jain fairness across the scenario's tenants.
     pub fairness: f64,
+    /// EP-epochs consumed across tenants (the autoscaler's resource
+    /// meter; see [`crate::serve::TenantReport::ep_epochs`]).
+    pub ep_epochs: u64,
+    /// Autoscaler transitions across all replicas of all tenants.
+    pub scale_events: u64,
 }
 
 impl ScenarioStats {
@@ -104,18 +109,23 @@ impl ScenarioStats {
         let mut shed = 0u64;
         let mut slo_ok = 0u64;
         let mut retunes = 0u32;
+        let mut scale_events = 0u64;
         for t in &r.tenants {
             sketch.merge(&t.latency);
             offered += t.offered;
             shed += t.rejected + t.dropped;
             slo_ok += t.slo_ok;
             retunes += t.retunes;
+            scale_events +=
+                t.shards.iter().map(|s| s.scale_events.len() as u64).sum::<u64>();
         }
         Self {
             offered,
             shed,
             slo_ok,
             retunes,
+            ep_epochs: r.ep_epochs(),
+            scale_events,
             p50_s: sketch.p50(),
             p95_s: sketch.p95(),
             p99_s: sketch.p99(),
@@ -259,6 +269,86 @@ pub fn shard_grid(
                     opts,
                 });
             }
+        }
+    }
+    out
+}
+
+/// Build the static-vs-autoscaled comparison grid on an **MMPP tidal
+/// workload**: a long lull well under one replica's capacity alternating
+/// with a burst that saturates the largest static deployment (mean dwell
+/// = a quarter of the horizon, so a run sees about two full tides).
+///
+/// For every `(rho, seed)` the grid emits one **static** cell per entry
+/// of `shard_counts` (shard budget fixed, autoscaler off) plus one
+/// **autoscaled** cell at the maximum budget (autoscaler on, defaults of
+/// [`crate::serve::AutoscaleOptions`]). All cells of a `(rho, seed)` pair
+/// share the identical arrival stream, so their goodput and
+/// [`ScenarioStats::ep_epochs`] isolate exactly what the autoscaler
+/// changes: the acceptance bar (asserted in `tests/cluster_autoscale.rs`
+/// and tracked by `benches/serve_scale.rs`) is goodput within 2% of the
+/// best static cell at strictly fewer EP-epochs than static max-k.
+///
+/// `capacity` is the analytic throughput of `config`; the SLO is set wide
+/// (500 bottleneck periods) and queues deep (32, drop-oldest) so
+/// bounded-queue completions count as goodput for every cell — the
+/// comparison measures capacity adaptation, not SLO tuning. Callers pick
+/// `base.control_epoch_s` well under the dwell time (the sweep CLI uses
+/// horizon/40) so the controller gets enough epochs per phase.
+#[allow(clippy::too_many_arguments)]
+pub fn autoscale_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    shard_counts: &[usize],
+    balancer: BalancerPolicy,
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let kmax = shard_counts.iter().copied().max().unwrap_or(1);
+    let dwell_s = (base.duration_s / 4.0).max(1e-6);
+    let mut out = Vec::with_capacity(rhos.len() * seeds.len() * (shard_counts.len() + 1));
+    for &rho in rhos {
+        for &seed in seeds {
+            let arrivals = ArrivalProcess::Mmpp {
+                low_rate: 0.25 * rho * cap,
+                high_rate: 1.3 * rho * cap,
+                mean_low_s: dwell_s,
+                mean_high_s: dwell_s,
+            };
+            let mk_spec = |name: String, k: usize| {
+                TenantSpec::new(name, net.clone(), arrivals.clone())
+                    .with_shards(k)
+                    .with_balancer(balancer)
+                    .with_queue_capacity(32)
+                    .with_admission(super::tenant::AdmissionPolicy::DropOldest)
+                    .with_slo(500.0 / cap)
+            };
+            for &k in shard_counts {
+                let name = format!("{} static-k{k} rho={rho} seed={seed}", net.name);
+                let mut opts = base.clone();
+                opts.seed = seed;
+                opts.autoscale.enabled = false;
+                out.push(Scenario {
+                    name: name.clone(),
+                    plat: plat.clone(),
+                    tenants: vec![(mk_spec(name, k), config.clone())],
+                    opts,
+                });
+            }
+            let name = format!("{} autoscale-k{kmax} rho={rho} seed={seed}", net.name);
+            let mut opts = base.clone();
+            opts.seed = seed;
+            opts.autoscale.enabled = true;
+            out.push(Scenario {
+                name: name.clone(),
+                plat: plat.clone(),
+                tenants: vec![(mk_spec(name, kmax), config.clone())],
+                opts,
+            });
         }
     }
     out
@@ -457,6 +547,40 @@ mod tests {
             goodputs[2] > 1.01 * goodputs[0],
             "replication must add real capacity: {goodputs:?}"
         );
+    }
+
+    #[test]
+    fn autoscale_grid_cells_share_arrivals() {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let base = ServeOptions {
+            duration_s: 2.0,
+            control: false,
+            control_epoch_s: 0.1,
+            ..Default::default()
+        };
+        let sc = autoscale_grid(
+            &plat,
+            &net,
+            &cfg,
+            &[1, 2],
+            crate::serve::BalancerPolicy::JoinShortestQueue,
+            &[1.0],
+            &[3],
+            &base,
+        );
+        assert_eq!(sc.len(), 3, "static k1, static k2, autoscaled kmax");
+        assert!(sc[0].name.contains("static-k1"), "{}", sc[0].name);
+        assert!(sc[1].name.contains("static-k2"), "{}", sc[1].name);
+        assert!(sc[2].name.contains("autoscale-k2"), "{}", sc[2].name);
+        assert!(!sc[0].opts.autoscale.enabled);
+        assert!(!sc[1].opts.autoscale.enabled);
+        assert!(sc[2].opts.autoscale.enabled);
+        // every cell of one (rho, seed) pair sees the same arrival stream
+        assert_eq!(sc[0].tenants[0].0.arrivals, sc[2].tenants[0].0.arrivals);
+        assert_eq!(sc[0].opts.seed, sc[2].opts.seed);
+        assert_eq!(sc[2].tenants[0].0.shards, 2, "autoscaled cell plans the max budget");
     }
 
     #[test]

@@ -55,6 +55,13 @@ pub struct TenantSpec {
     /// Front-end arrival routing across replicas (ignored when the plan
     /// ends up with a single replica).
     pub balancer: BalancerPolicy,
+    /// Priority weight for cross-tenant co-planning
+    /// ([`crate::serve::cluster::coplan`]): the joint objective maximised
+    /// across tenants is `Σ weight × predicted throughput`, so a tenant
+    /// with twice the weight is worth twice as much per unit of predicted
+    /// throughput when EP budgets are allocated. Must be positive and
+    /// finite; ignored unless co-planning is enabled.
+    pub weight: f64,
 }
 
 impl TenantSpec {
@@ -71,6 +78,7 @@ impl TenantSpec {
             admission: AdmissionPolicy::Reject,
             shards: 1,
             balancer: BalancerPolicy::RoundRobin,
+            weight: 1.0,
         }
     }
 
@@ -111,6 +119,13 @@ impl TenantSpec {
         self
     }
 
+    /// Builder-style co-planning weight override (see
+    /// [`TenantSpec::weight`]).
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
     /// Validate the spec against the platform it will be served on.
     pub fn validate(&self, plat: &Platform, config: &PipelineConfig) -> Result<()> {
         if self.queue_capacity == 0 {
@@ -124,6 +139,9 @@ impl TenantSpec {
         }
         if self.shards == 0 {
             bail!("tenant {}: shards must be ≥ 1", self.name);
+        }
+        if !(self.weight.is_finite() && self.weight > 0.0) {
+            bail!("tenant {}: weight must be positive and finite", self.name);
         }
         if let Err(e) = config.validate(self.net.len(), plat) {
             bail!("tenant {}: invalid pipeline config: {e}", self.name);
@@ -150,6 +168,7 @@ mod tests {
         assert_eq!(s.admission, AdmissionPolicy::Reject);
         assert_eq!(s.shards, 1, "unsharded by default");
         assert_eq!(s.balancer, BalancerPolicy::RoundRobin);
+        assert_eq!(s.weight, 1.0, "unit co-planning weight by default");
         assert!(s.slo_latency_s > 0.0);
     }
 
@@ -161,13 +180,15 @@ mod tests {
             .with_batch(4)
             .with_admission(AdmissionPolicy::DropOldest)
             .with_shards(3)
-            .with_balancer(BalancerPolicy::JoinShortestQueue);
+            .with_balancer(BalancerPolicy::JoinShortestQueue)
+            .with_weight(2.5);
         assert_eq!(s.slo_latency_s, 1.5);
         assert_eq!(s.queue_capacity, 8);
         assert_eq!(s.batch, 4);
         assert_eq!(s.admission, AdmissionPolicy::DropOldest);
         assert_eq!(s.shards, 3);
         assert_eq!(s.balancer, BalancerPolicy::JoinShortestQueue);
+        assert_eq!(s.weight, 2.5);
     }
 
     #[test]
@@ -180,6 +201,8 @@ mod tests {
         assert!(spec().with_slo(0.0).validate(&plat, &cfg).is_err());
         assert!(spec().with_shards(0).validate(&plat, &cfg).is_err());
         assert!(spec().with_shards(9).validate(&plat, &cfg).is_ok(), "counts above n_eps cap");
+        assert!(spec().with_weight(0.0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_weight(f64::NAN).validate(&plat, &cfg).is_err());
         let bad_cfg = PipelineConfig::new(vec![5], vec![0]);
         assert!(spec().validate(&plat, &bad_cfg).is_err());
     }

@@ -330,4 +330,106 @@ fn usage_lists_shard_flags() {
     assert!(out.contains("--shards"), "{out}");
     assert!(out.contains("--balancer"), "{out}");
     assert!(out.contains("--shard-grid"), "{out}");
+    assert!(out.contains("--coplan"), "{out}");
+    assert!(out.contains("--autoscale"), "{out}");
+    assert!(out.contains("--autoscale-grid"), "{out}");
+}
+
+#[test]
+fn serve_coplan_autoscale_runs_deterministically() {
+    // two tenants co-planned onto disjoint budgets of C2, autoscaler live
+    let args = [
+        "serve",
+        "--tenants",
+        "2",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--arrivals",
+        "poisson:80",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.25",
+        "--shards",
+        "2",
+        "--coplan",
+        "--autoscale",
+        "--seed",
+        "13",
+    ];
+    let a = shisha(&args);
+    assert!(a.status.success(), "{}", stderr(&a));
+    let out = stdout(&a);
+    assert!(out.contains("co-planning"), "{out}");
+    assert!(out.contains("autoscaling"), "{out}");
+    assert!(out.contains("EP-epochs"), "{out}");
+    let b = shisha(&args);
+    assert_eq!(stdout(&a), stdout(&b), "coplan+autoscale must be deterministic");
+}
+
+#[test]
+fn serve_coplan_rejects_more_tenants_than_eps() {
+    let o = shisha(&[
+        "serve",
+        "--tenants",
+        "3",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--arrivals",
+        "poisson:10",
+        "--duration",
+        "1",
+        "--coplan",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("coplan"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_sweep_autoscale_grid_compares_static_and_auto() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--autoscale-grid",
+        "1,2",
+        "--rho-grid",
+        "1.0",
+        "--seeds",
+        "7",
+        "--duration",
+        "4",
+        "--threads",
+        "2",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("sweeping 3 scenario(s)"), "{out}");
+    assert!(out.contains("static-k1"), "{out}");
+    assert!(out.contains("static-k2"), "{out}");
+    assert!(out.contains("autoscale-k2"), "{out}");
+    assert!(out.contains("EP-epochs"), "{out}");
+}
+
+#[test]
+fn serve_sweep_rejects_conflicting_grids() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--shard-grid",
+        "1,2",
+        "--autoscale-grid",
+        "1,2",
+        "--duration",
+        "1",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("mutually exclusive"), "{}", stderr(&o));
 }

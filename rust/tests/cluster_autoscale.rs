@@ -1,0 +1,304 @@
+//! Cluster co-planner + runtime autoscaler acceptance tests.
+//!
+//! The two headline obligations of the `serve/cluster` subsystem:
+//!
+//! * **Co-planner** — on a weighted 3-tenant C5 mix, the joint plan's
+//!   total weighted predicted throughput is at least the greedy
+//!   first-come allocation's (the planner returns the better of
+//!   water-filling and greedy by construction; this pins that the
+//!   construction holds end-to-end, with budgets disjoint and every
+//!   placement valid on its sub-platform).
+//! * **Autoscaler** — on the MMPP tidal sweep
+//!   ([`shisha::serve::sweep::autoscale_grid`]), the autoscaled
+//!   deployment's goodput is within 2% of the best static shard count
+//!   while consuming strictly fewer EP-epochs than static max-k.
+//!
+//! Plus the safety properties: request conservation across scale
+//! transitions (no arrival lost or double-served over a replica drain),
+//! hysteresis (a constant-rate workload never scales), and two-run
+//! determinism of `serve --coplan --autoscale`.
+
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::cluster::coplan::{coplan, greedy_plan};
+use shisha::serve::sweep::{self, autoscale_grid};
+use shisha::serve::{
+    serve, ArrivalProcess, AutoscaleOptions, BalancerPolicy, ReplicaState, ScenarioStats,
+    ServeOptions, TenantSpec,
+};
+
+/// The weighted 3-tenant C5 mix used across the acceptance tests.
+fn c5_three_tenant_specs() -> (shisha::platform::Platform, Vec<TenantSpec>) {
+    let plat = configs::c5();
+    let mk = |name: &str, net: shisha::model::Network, weight: f64, shards: usize| {
+        TenantSpec::new(name, net, ArrivalProcess::Poisson { rate: 5.0 })
+            .with_weight(weight)
+            .with_shards(shards)
+    };
+    let specs = vec![
+        mk("hot", networks::synthnet(), 2.0, 2),
+        mk("warm", networks::alexnet(), 1.0, 2),
+        mk("cold", networks::synthnet_small(), 1.0, 1),
+    ];
+    (plat, specs)
+}
+
+#[test]
+fn coplan_beats_greedy_on_three_tenant_c5() {
+    let (plat, specs) = c5_three_tenant_specs();
+    let joint = coplan(&plat, &specs).expect("coplan");
+    let greedy = greedy_plan(&plat, &specs).expect("greedy plan");
+    assert!(
+        joint.objective() >= greedy.objective(),
+        "acceptance: joint weighted predicted throughput {} below greedy {}",
+        joint.objective(),
+        greedy.objective()
+    );
+    assert!(joint.objective() > 0.0);
+    // budgets disjoint, every tenant provisioned, placements valid
+    let mut seen = vec![false; plat.n_eps()];
+    for (alloc, spec) in joint.allocations.iter().zip(&specs) {
+        assert!(!alloc.eps.is_empty(), "{}: empty budget", spec.name);
+        for &e in &alloc.eps {
+            assert!(!seen[e], "EP {e} in two budgets");
+            seen[e] = true;
+        }
+        assert!(
+            alloc.placements.len() <= spec.shards.max(1),
+            "{}: more replicas than the shard budget",
+            spec.name
+        );
+        for (eps, cfg) in &alloc.placements {
+            let sub = plat.subset(eps);
+            assert!(
+                cfg.validate(spec.net.len(), &sub).is_ok(),
+                "{}: invalid placement {}",
+                spec.name,
+                cfg.describe()
+            );
+        }
+    }
+}
+
+#[test]
+fn coplan_is_deterministic_across_calls() {
+    let (plat, specs) = c5_three_tenant_specs();
+    let a = coplan(&plat, &specs).expect("coplan");
+    let b = coplan(&plat, &specs).expect("coplan");
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.objective().to_bits(), b.objective().to_bits());
+    for (x, y) in a.allocations.iter().zip(&b.allocations) {
+        assert_eq!(x.eps, y.eps);
+    }
+}
+
+/// Tidal sweep on the C5/SynthNet sharding fixture: static shard budgets
+/// {1, 2, 4} against the autoscaler at budget 4, identical arrivals.
+fn tidal_outcomes() -> (Vec<usize>, Vec<ScenarioStats>) {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let base = ServeOptions {
+        duration_s: 400.0 / cap,
+        control: false,
+        control_epoch_s: 4.0 / cap,
+        ..Default::default()
+    };
+    let counts = vec![1usize, 2, 4];
+    let scenarios = autoscale_grid(
+        &plat,
+        &net,
+        &cfg,
+        &counts,
+        BalancerPolicy::JoinShortestQueue,
+        &[1.0],
+        &[61],
+        &base,
+    );
+    assert_eq!(scenarios.len(), counts.len() + 1);
+    let outcomes = sweep::run_sweep(scenarios, sweep::available_threads());
+    let stats: Vec<ScenarioStats> = outcomes
+        .iter()
+        .map(|o| ScenarioStats::from_report(o.report.as_ref().expect("tidal serve run")))
+        .collect();
+    (counts, stats)
+}
+
+#[test]
+fn autoscaled_matches_best_static_goodput_with_fewer_ep_epochs() {
+    let (counts, stats) = tidal_outcomes();
+    let static_stats = &stats[..counts.len()];
+    let auto = &stats[counts.len()];
+    let best_static = static_stats.iter().map(|s| s.goodput_rps).fold(0.0, f64::max);
+    let static_kmax_ep = static_stats.last().expect("static cells").ep_epochs;
+    assert!(best_static > 0.0, "static cells must serve traffic");
+    assert!(
+        auto.goodput_rps >= 0.98 * best_static,
+        "acceptance: autoscaled goodput {} below 98% of best static {}",
+        auto.goodput_rps,
+        best_static
+    );
+    assert!(
+        auto.ep_epochs < static_kmax_ep,
+        "acceptance: autoscaled EP-epochs {} not below static max-k {}",
+        auto.ep_epochs,
+        static_kmax_ep
+    );
+    assert!(auto.scale_events > 0, "the tide must move the autoscaler");
+    // static cells never scale
+    for s in static_stats {
+        assert_eq!(s.scale_events, 0, "static cells must not scale");
+    }
+}
+
+#[test]
+fn scale_transitions_conserve_requests() {
+    // run the autoscaled tidal cell directly and check conservation at
+    // replica granularity: every offered request is rejected, dropped,
+    // completed or still in flight — across multiple drain/re-activate
+    // cycles, nothing is lost and nothing double-served
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    for seed in [5u64, 29, 71] {
+        let tenant = TenantSpec::new(
+            "tidal",
+            net.clone(),
+            ArrivalProcess::Mmpp {
+                low_rate: 0.25 * cap,
+                high_rate: 1.3 * cap,
+                mean_low_s: 100.0 / cap,
+                mean_high_s: 100.0 / cap,
+            },
+        )
+        .with_shards(4)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(32)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(500.0 / cap);
+        let opts = ServeOptions {
+            duration_s: 400.0 / cap,
+            seed,
+            control: false,
+            control_epoch_s: 4.0 / cap,
+            autoscale: AutoscaleOptions::enabled(),
+            ..Default::default()
+        };
+        let report = serve(&plat, vec![(tenant, cfg.clone())], &opts).expect("serve");
+        let t = &report.tenants[0];
+        assert!(t.conserved(), "seed {seed}: conservation violated: {t:?}");
+        assert_eq!(
+            t.offered,
+            t.shards.iter().map(|s| s.offered).sum::<u64>(),
+            "seed {seed}: balancer lost or duplicated arrivals"
+        );
+        assert_eq!(
+            t.completed,
+            t.shards.iter().map(|s| s.completed).sum::<u64>(),
+            "seed {seed}: replica completions disagree with the tenant"
+        );
+        // every replica that was drained ended with an empty backlog
+        for (i, s) in t.shards.iter().enumerate() {
+            if s.final_state == ReplicaState::Parked {
+                assert_eq!(s.in_flight, 0, "seed {seed}: parked replica {i} holds requests");
+            }
+        }
+    }
+}
+
+#[test]
+fn constant_rate_never_triggers_scale_events() {
+    // hysteresis: a steady load inside the deadband (well under active
+    // capacity, above the scale-down gate) must never scale in either
+    // direction, no matter how long it runs
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    // 0.7 × single-pipeline capacity sits squarely in the deadband: far
+    // under the 2-replica plan's capacity (no pressure; and with every
+    // replica active there is nothing to scale up anyway) yet far above
+    // the scale-down gate. The long epoch (~28 arrivals each) keeps the
+    // per-epoch observed rate concentrated, so Poisson noise cannot fake
+    // a slack epoch.
+    let tenant = TenantSpec::new(
+        "steady",
+        net,
+        ArrivalProcess::Poisson { rate: 0.7 * cap },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(64)
+    .with_slo(500.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 400.0 / cap,
+        seed: 11,
+        control: false,
+        control_epoch_s: 40.0 / cap,
+        autoscale: AutoscaleOptions::enabled(),
+        ..Default::default()
+    };
+    let report = serve(&plat, vec![(tenant, cfg)], &opts).expect("serve");
+    let t = &report.tenants[0];
+    assert!(t.shards.len() > 1, "fixture must replicate for the test to bite");
+    for (i, s) in t.shards.iter().enumerate() {
+        assert!(
+            s.scale_events.is_empty(),
+            "replica {i} scaled under constant load: {:?}",
+            s.scale_events
+        );
+        assert_eq!(s.final_state, ReplicaState::Active);
+    }
+    assert_eq!(
+        t.ep_epochs(),
+        t.epochs.len() as u64 * plat.n_eps() as u64,
+        "no epoch may run below full capacity under steady load"
+    );
+    assert!(t.conserved());
+}
+
+#[test]
+fn coplan_autoscale_serve_is_deterministic() {
+    let run = || {
+        let (plat, specs) = c5_three_tenant_specs();
+        let tenants: Vec<(TenantSpec, shisha::pipeline::PipelineConfig)> = specs
+            .into_iter()
+            .map(|s| {
+                let cfg = shisha::serve::shisha_config(&s.net, &plat);
+                (s, cfg)
+            })
+            .collect();
+        let opts = ServeOptions {
+            duration_s: 1.2,
+            seed: 97,
+            control: false,
+            control_epoch_s: 0.1,
+            record_log: true,
+            coplan: true,
+            autoscale: AutoscaleOptions::enabled(),
+            ..Default::default()
+        };
+        serve(&plat, tenants, &opts).expect("serve")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.log_hash, b.log_hash, "event streams must be identical");
+    assert_eq!(a.event_log, b.event_log);
+    assert_eq!(a.n_events, b.n_events);
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.offered, y.offered);
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.ep_epochs(), y.ep_epochs());
+        for (sx, sy) in x.shards.iter().zip(&y.shards) {
+            assert_eq!(sx.scale_events, sy.scale_events);
+            assert_eq!(sx.final_state, sy.final_state);
+        }
+    }
+}

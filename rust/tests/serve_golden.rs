@@ -83,6 +83,8 @@ fn assert_identical(a: &ServeReport, b: &ServeReport, what: &str) {
             assert_eq!(sx.final_config, sy.final_config, "{what}/{name}: replica config");
             assert_eq!(sx.retunes, sy.retunes, "{what}/{name}: replica retunes");
             assert_eq!(sx.epochs, sy.epochs, "{what}/{name}: replica epochs");
+            assert_eq!(sx.scale_events, sy.scale_events, "{what}/{name}: scale events");
+            assert_eq!(sx.final_state, sy.final_state, "{what}/{name}: replica state");
         }
     }
 }
@@ -358,4 +360,98 @@ fn golden_sharded_weighted_with_control() {
     assert!(t.completed > 0);
     // weighted routing: every replica receives traffic
     assert!(t.shards.iter().all(|s| s.offered > 0));
+}
+
+#[test]
+fn golden_autoscale_tidal() {
+    // the cluster autoscaler on a tidal MMPP load: replicas park through
+    // the lulls and re-activate for the bursts; the scale transitions are
+    // part of the hashed event stream, so this pin covers the whole
+    // controller (decision rule, drain protocol, balancer refresh)
+    let report = check_golden("autoscale-tidal", || {
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let tenant = TenantSpec::new(
+            "tidal",
+            net,
+            ArrivalProcess::Mmpp {
+                low_rate: 0.2 * cap,
+                high_rate: 1.3 * cap,
+                mean_low_s: 100.0 / cap,
+                mean_high_s: 100.0 / cap,
+            },
+        )
+        .with_shards(4)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(32)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(500.0 / cap);
+        let opts = ServeOptions {
+            duration_s: 400.0 / cap,
+            seed: 47,
+            control: false,
+            control_epoch_s: 4.0 / cap,
+            autoscale: shisha::serve::AutoscaleOptions::enabled(),
+            ..Default::default()
+        };
+        (plat, vec![(tenant, cfg)], opts)
+    });
+    let t = &report.tenants[0];
+    assert!(t.conserved(), "conservation across scale transitions");
+    let events: usize = t.shards.iter().map(|s| s.scale_events.len()).sum();
+    assert!(events > 0, "the tide must move the autoscaler");
+    assert!(
+        t.ep_epochs() < t.epochs.len() as u64 * 8,
+        "parked replicas must shrink the EP-epoch meter"
+    );
+}
+
+#[test]
+fn golden_coplan_three_tenants() {
+    // cross-tenant co-planning: three weighted tenants serve on jointly
+    // allocated disjoint EP budgets of C5
+    let report = check_golden("coplan3", || {
+        let plat = configs::c5();
+        let mk = |name: &str, net: shisha::model::Network, weight: f64, shards: usize| {
+            let cfg = shisha::serve::shisha_config(&net, &plat);
+            let db = PerfDb::build(&net, &plat, &CostModel::default());
+            let cap = simulator::throughput(&net, &plat, &db, &cfg);
+            (
+                TenantSpec::new(name, net, ArrivalProcess::Poisson { rate: 0.4 * cap })
+                    .with_weight(weight)
+                    .with_shards(shards)
+                    .with_slo(200.0 / cap),
+                cfg,
+            )
+        };
+        let tenants = vec![
+            mk("hot", networks::synthnet(), 2.0, 2),
+            mk("warm", networks::alexnet(), 1.0, 2),
+            mk("cold", networks::synthnet_small(), 1.0, 1),
+        ];
+        let opts = ServeOptions {
+            duration_s: 1.5,
+            seed: 53,
+            control: false,
+            control_epoch_s: 0.25,
+            coplan: true,
+            ..Default::default()
+        };
+        (plat, tenants, opts)
+    });
+    // budgets are disjoint across the whole cluster
+    let mut seen = vec![false; 8];
+    for t in &report.tenants {
+        assert!(t.conserved(), "{}: conservation", t.name);
+        assert!(t.completed > 0, "{}: budget starved the tenant", t.name);
+        for s in &t.shards {
+            for &e in &s.eps {
+                assert!(!seen[e], "EP {e} allocated to two tenants");
+                seen[e] = true;
+            }
+        }
+    }
 }
