@@ -1,0 +1,167 @@
+//! Planner fast-path benchmark: how cheap is repeated plan construction?
+//!
+//! Shisha's headline is convergence *speed*, so the planner that wraps it
+//! (shard placement search, cross-tenant co-planning) must itself be
+//! near-free — periodic demand-driven re-planning needs plans cheap
+//! enough to compute every control epoch. This bench tracks exactly that:
+//!
+//! * `plan_shards_c5_synthnet_k4[ _warm | _parallel]` — the single-tenant
+//!   placement search, cold (fresh [`PlanCache`] per run), warm (shared
+//!   memo: pure hits), and cold-but-parallel (worklist across cores);
+//! * `coplan_c5_3t_[cold|warm]` — the 3-tenant weighted C5 co-plan of
+//!   `tests/cluster_autoscale.rs` / `benches/serve_scale.rs`, cold vs
+//!   warm;
+//! * `aggregate` — the in-run **`plan_speedup`** ratio (cold ÷ warm on
+//!   the co-plan case; the ISSUE-5 acceptance bar requires > 1), the
+//!   shard-planner equivalent, the parallel speedup, the warm cache's hit
+//!   rate/entry count, and warm plans per second.
+//!
+//! Warm, parallel and cold plans are asserted **bit-identical** before
+//! anything is written — the fast path must never change a chosen plan.
+//!
+//! Results go to `results/plan_speed.csv` and `BENCH_plan.json` at the
+//! repository root. Pass `--quick` for the CI profile.
+
+use shisha::explore::PlanCache;
+use shisha::metrics::bench::{Bencher, JsonReport};
+use shisha::metrics::table::Table;
+use shisha::model::networks;
+use shisha::platform::configs;
+use shisha::serve::cluster::coplan::{coplan_with, ClusterPlan};
+use shisha::serve::shard::{plan_shards_with, ShardPlan};
+use shisha::serve::sweep;
+use shisha::serve::{ArrivalProcess, TenantSpec};
+use shisha::testutil::{same_cluster_plan, same_shard_plan};
+
+fn assert_same_shard_plan(a: &ShardPlan, b: &ShardPlan, what: &str) {
+    same_shard_plan(a, b).unwrap_or_else(|e| panic!("{what}: {e}"));
+}
+
+fn assert_same_cluster_plan(a: &ClusterPlan, b: &ClusterPlan, what: &str) {
+    same_cluster_plan(a, b).unwrap_or_else(|e| panic!("{what}: {e}"));
+}
+
+/// The weighted 3-tenant C5 mix shared with `tests/cluster_autoscale.rs`.
+fn c5_three_tenant_specs() -> Vec<TenantSpec> {
+    let mk = |name: &str, net: shisha::model::Network, weight: f64, shards: usize| {
+        TenantSpec::new(name, net, ArrivalProcess::Poisson { rate: 5.0 })
+            .with_weight(weight)
+            .with_shards(shards)
+    };
+    vec![
+        mk("hot", networks::synthnet(), 2.0, 2),
+        mk("warm", networks::alexnet(), 1.0, 2),
+        mk("cold", networks::synthnet_small(), 1.0, 1),
+    ]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let threads = sweep::available_threads();
+
+    let mut json = JsonReport::new();
+    json.note(
+        "plan_speed: planner fast-path trajectory. plan_shards_* cases plan \
+         SynthNet shards (<=4) on C5 — cold = fresh PlanCache per run, warm = \
+         shared memo (pure hits), parallel = cold worklist across all cores. \
+         coplan_c5_3t_* co-plans the weighted 3-tenant C5 mix of \
+         tests/cluster_autoscale.rs. aggregate.plan_speedup is the in-run \
+         cold/warm ratio on the coplan case (acceptance bar: > 1); \
+         cache_hit_rate/cache_entries describe the warm memo. Warm, parallel \
+         and cold plans are asserted bit-identical before this file is \
+         written.",
+    );
+    let mut results = Vec::new();
+
+    // --- single-tenant shard placement search ----------------------------
+    let shard_reference =
+        plan_shards_with(&net, &plat, 4, 1, &PlanCache::new()).expect("shard plan");
+    let shard_cold = b.run("plan_shards_c5_synthnet_k4", || {
+        plan_shards_with(&net, &plat, 4, 1, &PlanCache::new()).expect("shard plan")
+    });
+    let shard_cache = PlanCache::new();
+    let warmed = plan_shards_with(&net, &plat, 4, 1, &shard_cache).expect("shard plan");
+    assert_same_shard_plan(&shard_reference, &warmed, "cache-populating run");
+    let shard_warm = b.run("plan_shards_c5_synthnet_k4_warm", || {
+        plan_shards_with(&net, &plat, 4, 1, &shard_cache).expect("shard plan")
+    });
+    let warm_again = plan_shards_with(&net, &plat, 4, 1, &shard_cache).expect("shard plan");
+    assert_same_shard_plan(&shard_reference, &warm_again, "warm shard plan");
+    let shard_par = b.run("plan_shards_c5_synthnet_k4_parallel", || {
+        plan_shards_with(&net, &plat, 4, threads, &PlanCache::new()).expect("shard plan")
+    });
+    let par_plan = plan_shards_with(&net, &plat, 4, threads, &PlanCache::new()).expect("plan");
+    assert_same_shard_plan(&shard_reference, &par_plan, "parallel shard plan");
+    results.push(shard_cold.clone());
+    results.push(shard_warm.clone());
+    results.push(shard_par.clone());
+
+    // --- 3-tenant C5 co-plan ---------------------------------------------
+    let specs = c5_three_tenant_specs();
+    let co_reference = coplan_with(&plat, &specs, 1, &PlanCache::new()).expect("coplan");
+    let co_cold = b.run("coplan_c5_3t_cold", || {
+        coplan_with(&plat, &specs, 1, &PlanCache::new()).expect("coplan")
+    });
+    let co_cache = PlanCache::new();
+    let co_warmed = coplan_with(&plat, &specs, 1, &co_cache).expect("coplan");
+    assert_same_cluster_plan(&co_reference, &co_warmed, "cache-populating co-plan");
+    let co_warm = b.run("coplan_c5_3t_warm", || {
+        coplan_with(&plat, &specs, 1, &co_cache).expect("coplan")
+    });
+    let co_warm_plan = coplan_with(&plat, &specs, 1, &co_cache).expect("coplan");
+    assert_same_cluster_plan(&co_reference, &co_warm_plan, "warm co-plan");
+    let cache_stats = co_cache.stats();
+    results.push(co_cold.clone());
+    results.push(co_warm.clone());
+
+    // --- aggregates -------------------------------------------------------
+    let plan_speedup = co_cold.median_s / co_warm.median_s;
+    let shard_plan_speedup = shard_cold.median_s / shard_warm.median_s;
+    let parallel_speedup = shard_cold.median_s / shard_par.median_s;
+    println!(
+        "\ncoplan C5 3t: cold {:.3e}s vs warm {:.3e}s per plan -> plan_speedup {:.1}x \
+         (shard planner {:.1}x warm, {:.2}x parallel on {} threads; \
+         warm cache: {} entries, {:.1}% hit rate)",
+        co_cold.median_s,
+        co_warm.median_s,
+        plan_speedup,
+        shard_plan_speedup,
+        parallel_speedup,
+        threads,
+        cache_stats.entries,
+        100.0 * cache_stats.hit_rate(),
+    );
+    assert!(
+        plan_speedup > 1.0,
+        "acceptance bar: warm co-planning must beat cold ({plan_speedup:.3}x)"
+    );
+    json.metric("aggregate", "plan_speedup", plan_speedup);
+    json.metric("aggregate", "shard_plan_speedup", shard_plan_speedup);
+    json.metric("aggregate", "parallel_speedup", parallel_speedup);
+    json.metric("aggregate", "cache_hit_rate", cache_stats.hit_rate());
+    json.metric("aggregate", "cache_entries", cache_stats.entries as f64);
+    json.metric("aggregate", "threads", threads as f64);
+    json.metric("aggregate", "warm_plans_per_s", co_warm.throughput());
+
+    let mut table = Table::new(["bench", "median_s", "mad_s", "throughput_per_s"]);
+    for r in &results {
+        table.row([
+            r.name.clone(),
+            format!("{:.3e}", r.median_s),
+            format!("{:.1e}", r.mad_s),
+            format!("{:.3e}", r.throughput()),
+        ]);
+        json.result(r);
+    }
+    table.write_csv("results/plan_speed.csv").unwrap();
+    println!("wrote results/plan_speed.csv");
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_plan.json");
+    json.write(&bench_path).expect("write BENCH_plan.json");
+    println!("wrote {}", bench_path.display());
+}

@@ -4,6 +4,7 @@
 
 use super::simulated_annealing::Start;
 use super::{neighbors, random_config, Evaluator, Explorer, Solution};
+use crate::pipeline::simulator::StageTimes;
 use crate::pipeline::PipelineConfig;
 use crate::rng::Xoshiro256;
 
@@ -46,9 +47,18 @@ impl HillClimbing {
     }
 
     /// One climb to a local optimum; returns when no neighbour improves.
+    ///
+    /// Every neighbour differs from the current configuration by a single
+    /// move, so candidates are evaluated through an incremental
+    /// [`StageTimes`] scratch (clone_from the current times, diff-refresh
+    /// only the touched stages) — bit-identical to the full per-candidate
+    /// recompute, so the climb path and result are unchanged.
     fn climb(&self, eval: &mut Evaluator<'_>, mut current: PipelineConfig) {
         let plat = eval.platform().clone();
-        let mut current_tp = eval.evaluate(&current);
+        let mut cur_st = StageTimes::new();
+        cur_st.rebuild(eval.network(), eval.platform(), eval.db(), &current);
+        let mut cand_st = StageTimes::new();
+        let mut current_tp = eval.evaluate_timed(&current, &cur_st);
         loop {
             if eval.exhausted() {
                 return;
@@ -58,7 +68,9 @@ impl HillClimbing {
                 if eval.exhausted() {
                     return;
                 }
-                let tp = eval.evaluate(&cand);
+                cand_st.clone_from(&cur_st);
+                cand_st.refresh(eval.network(), eval.platform(), eval.db(), &cand);
+                let tp = eval.evaluate_timed(&cand, &cand_st);
                 if tp > current_tp && best_next.as_ref().map_or(true, |(_, b)| tp > *b) {
                     best_next = Some((cand, tp));
                 }
@@ -66,6 +78,7 @@ impl HillClimbing {
             match best_next {
                 Some((c, tp)) => {
                     current = c;
+                    cur_st.refresh(eval.network(), eval.platform(), eval.db(), &current);
                     current_tp = tp;
                 }
                 None => return, // local optimum

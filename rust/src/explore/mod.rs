@@ -29,15 +29,19 @@ pub mod genetic;
 pub mod hill_climbing;
 pub mod partition;
 pub mod pipe_search;
+pub mod plancache;
 pub mod random_walk;
 pub mod shisha;
 pub mod simulated_annealing;
 
 use crate::model::Network;
 use crate::perfdb::PerfDb;
+use crate::pipeline::simulator::StageTimes;
 use crate::pipeline::{simulator, PipelineConfig};
 use crate::platform::{EpId, Platform};
 use crate::rng::Xoshiro256;
+
+pub use plancache::{CacheStats, PlanCache};
 
 /// One point of a convergence trace: best throughput after `time_s` of
 /// (virtual) online exploration.
@@ -91,6 +95,10 @@ pub struct Evaluator<'a> {
     n_evals: u64,
     best: Option<(PipelineConfig, f64)>,
     trace: Vec<TracePoint>,
+    /// True when the last trace entry is a budget-exhaustion end marker
+    /// (so repeated post-budget trials update it in place instead of
+    /// appending one marker each).
+    terminal_marked: bool,
 }
 
 impl<'a> Evaluator<'a> {
@@ -110,6 +118,7 @@ impl<'a> Evaluator<'a> {
             n_evals: 0,
             best: None,
             trace: Vec::new(),
+            terminal_marked: false,
         }
     }
 
@@ -136,6 +145,37 @@ impl<'a> Evaluator<'a> {
         let tp = simulator::throughput(self.net, self.plat, self.db, cfg);
         let cost = simulator::makespan(self.net, self.plat, self.db, cfg, self.opts.probe_inputs)
             + self.opts.trial_overhead_s;
+        self.record(cfg, tp, cost)
+    }
+
+    /// Evaluate a configuration whose per-stage times are already held in
+    /// an incrementally maintained [`StageTimes`] scratch (the explorers'
+    /// fast path): identical accounting to [`Evaluator::evaluate`] —
+    /// throughput, makespan-based cost and trace updates all read off the
+    /// scratch, whose aggregates are bit-identical to the full recompute —
+    /// without re-deriving every stage's service time per trial.
+    ///
+    /// `st` must correspond to `cfg` (checked in debug builds, along with
+    /// bit-identity of the throughput against the full recompute).
+    pub fn evaluate_timed(&mut self, cfg: &PipelineConfig, st: &StageTimes) -> f64 {
+        debug_assert!(cfg.validate(self.net.len(), self.plat).is_ok(), "invalid {}", cfg.describe());
+        debug_assert!(st.matches(cfg), "StageTimes out of sync with {}", cfg.describe());
+        debug_assert_eq!(
+            st.throughput().to_bits(),
+            simulator::throughput(self.net, self.plat, self.db, cfg).to_bits(),
+            "incremental stage times drifted from the full recompute for {}",
+            cfg.describe()
+        );
+        let tp = st.throughput();
+        // same terms, same order as simulator::makespan + trial overhead
+        let cost = st.latency_s()
+            + (self.opts.probe_inputs.saturating_sub(1)) as f64 * st.bottleneck_s()
+            + self.opts.trial_overhead_s;
+        self.record(cfg, tp, cost)
+    }
+
+    /// Shared accounting behind both evaluation paths.
+    fn record(&mut self, cfg: &PipelineConfig, tp: f64, cost: f64) -> f64 {
         self.virtual_time_s += cost;
         self.n_evals += 1;
         let improved = self.best.as_ref().map_or(true, |(_, b)| tp > *b);
@@ -155,6 +195,29 @@ impl<'a> Evaluator<'a> {
                 throughput: tp,
                 evals: self.n_evals,
             });
+            self.terminal_marked = false;
+        } else if self.exhausted() {
+            // Budget exhausted on a non-improving trial: pin the
+            // convergence curve's end at the true spent budget (fig4
+            // curves previously stopped at the last improvement, under-
+            // reporting the time a capped run actually consumed). The
+            // marker repeats the best throughput; repeated post-budget
+            // trials move the one marker instead of appending.
+            if let Some((_, best_tp)) = &self.best {
+                let point = TracePoint {
+                    time_s: self.virtual_time_s,
+                    throughput: *best_tp,
+                    evals: self.n_evals,
+                };
+                if self.terminal_marked {
+                    if let Some(last) = self.trace.last_mut() {
+                        *last = point;
+                    }
+                } else {
+                    self.trace.push(point);
+                    self.terminal_marked = true;
+                }
+            }
         }
         tp
     }
@@ -236,8 +299,43 @@ pub struct Solution {
 impl Solution {
     /// Virtual time at which the final best configuration was found
     /// (the paper's convergence time — later trials did not improve).
+    ///
+    /// Scans for the last point that strictly improved on its
+    /// predecessor, so the budget-exhaustion end marker the evaluator
+    /// appends to capped runs (which repeats the best throughput at the
+    /// full spent budget) does not inflate convergence times.
     pub fn convergence_time_s(&self) -> f64 {
+        let mut conv = 0.0;
+        let mut best = f64::NEG_INFINITY;
+        for p in &self.trace {
+            if p.throughput > best {
+                best = p.throughput;
+                conv = p.time_s;
+            }
+        }
+        conv
+    }
+
+    /// Virtual time the run actually spent: the trace's last point, which
+    /// for budget-capped runs is the exhaustion marker (fig4's curves end
+    /// here rather than at the last improvement).
+    pub fn trace_end_time_s(&self) -> f64 {
         self.trace.last().map_or(0.0, |p| p.time_s)
+    }
+
+    /// Evaluation index at which the final best configuration was found —
+    /// the eval-count counterpart of [`Solution::convergence_time_s`],
+    /// likewise skipping the budget-exhaustion end marker.
+    pub fn convergence_evals(&self) -> u64 {
+        let mut conv = 0;
+        let mut best = f64::NEG_INFINITY;
+        for p in &self.trace {
+            if p.throughput > best {
+                best = p.throughput;
+                conv = p.evals;
+            }
+        }
+        conv
     }
 
     /// Fraction of the given design-space size explored.
@@ -518,6 +616,83 @@ mod tests {
         let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
         eval.evaluate(&PipelineConfig::new(vec![9, 9], vec![0, 1]));
         assert!(eval.exhausted());
+    }
+
+    #[test]
+    fn exhaustion_pins_trace_end_without_improvement() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(3), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let good = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let bad = PipelineConfig::single_stage(18, 2);
+        eval.evaluate(&good); // improvement -> trace point 1
+        eval.evaluate(&bad); // worse, budget not yet exhausted -> nothing
+        eval.evaluate(&bad); // worse, hits max_evals -> terminal marker
+        let spent = eval.virtual_time_s();
+        let sol = eval.solution("t");
+        assert_eq!(sol.trace.len(), 2, "improvement + one terminal marker");
+        let last = sol.trace.last().unwrap();
+        assert_eq!(last.throughput.to_bits(), sol.best_throughput.to_bits());
+        assert_eq!(last.evals, 3);
+        assert_eq!(last.time_s.to_bits(), spent.to_bits());
+        assert_eq!(sol.trace_end_time_s().to_bits(), spent.to_bits());
+        // convergence metrics still report the last *improvement*
+        assert_eq!(
+            sol.convergence_time_s().to_bits(),
+            sol.trace[0].time_s.to_bits()
+        );
+        assert_eq!(sol.convergence_evals(), sol.trace[0].evals);
+    }
+
+    #[test]
+    fn repeated_post_budget_trials_move_one_marker() {
+        let (net, plat, db) = setup();
+        let opts = EvalOptions { max_evals: Some(1), ..Default::default() };
+        let mut eval = Evaluator::with_options(&net, &plat, &db, opts);
+        let good = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let bad = PipelineConfig::single_stage(18, 2);
+        eval.evaluate(&good);
+        eval.evaluate(&bad);
+        eval.evaluate(&bad);
+        eval.evaluate(&bad);
+        let spent = eval.virtual_time_s();
+        let sol = eval.solution("t");
+        assert_eq!(sol.trace.len(), 2, "marker updated in place, not appended");
+        assert_eq!(sol.trace[1].time_s.to_bits(), spent.to_bits());
+        assert_eq!(sol.trace[1].evals, 4);
+    }
+
+    #[test]
+    fn evaluate_timed_matches_evaluate_accounting() {
+        let (net, plat, db) = setup();
+        let cfgs = [
+            PipelineConfig::new(vec![9, 9], vec![0, 1]),
+            PipelineConfig::single_stage(18, 2),
+            PipelineConfig::new(vec![5, 6, 7], vec![1, 0, 3]),
+        ];
+        let mut plain = Evaluator::new(&net, &plat, &db);
+        let mut timed = Evaluator::new(&net, &plat, &db);
+        let mut st = crate::pipeline::simulator::StageTimes::new();
+        for cfg in &cfgs {
+            let a = plain.evaluate(cfg);
+            st.refresh(&net, &plat, &db, cfg);
+            let b = timed.evaluate_timed(cfg, &st);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(plain.n_evals(), timed.n_evals());
+        assert_eq!(
+            plain.virtual_time_s().to_bits(),
+            timed.virtual_time_s().to_bits(),
+            "virtual-clock accounting must be bit-identical across paths"
+        );
+        let sa = plain.solution("a");
+        let sb = timed.solution("b");
+        assert_eq!(sa.best_config, sb.best_config);
+        assert_eq!(sa.trace.len(), sb.trace.len());
+        for (x, y) in sa.trace.iter().zip(&sb.trace) {
+            assert_eq!(x.time_s.to_bits(), y.time_s.to_bits());
+            assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+        }
     }
 
     #[test]

@@ -29,9 +29,11 @@
 
 use crate::model::Network;
 use crate::perfdb::{CostModel, PerfDb};
-use crate::pipeline::{simulator, space, PipelineConfig};
+use crate::pipeline::simulator::StageTimes;
+use crate::pipeline::{space, PipelineConfig};
 use crate::platform::{EpId, Platform};
 
+use super::plancache::PlanCache;
 use super::shisha::{ShishaExplorer, ShishaOptions};
 use super::{EvalOptions, Evaluator, Explorer};
 
@@ -58,22 +60,61 @@ pub struct SubsetPlan {
 /// `max_evals` bounds the Shisha fallback only; the exhaustive path always
 /// scans its (bounded) space. Deterministic in all inputs.
 pub fn tune_subset(net: &Network, plat: &Platform, eps: &[EpId], max_evals: u64) -> SubsetPlan {
+    tune_subset_scaled(net, plat, eps, None, max_evals)
+}
+
+/// [`tune_subset`] against a **scaled** database: `scale[i]` multiplies
+/// the layer times of the subset's `i`-th EP (local order) before tuning,
+/// the shape the serving engine's observed per-EP slowdowns take. `None`
+/// (or all-unit factors) is the contention-free default database.
+///
+/// The exhaustive path visits the restricted space through the in-place
+/// enumerator ([`space::for_each_config`]) with an incremental
+/// [`StageTimes`] scratch — no per-configuration allocation, each visited
+/// configuration recomputing only the stage terms its predecessor did not
+/// share — and keeps the first strictly-best configuration, so the chosen
+/// plan is bit-identical to the owned-iterator full-recompute scan it
+/// replaces.
+pub fn tune_subset_scaled(
+    net: &Network,
+    plat: &Platform,
+    eps: &[EpId],
+    scale: Option<&[f64]>,
+    max_evals: u64,
+) -> SubsetPlan {
     let sub = plat.subset(eps);
-    let db = PerfDb::build(net, &sub, &CostModel::default());
+    let mut db = PerfDb::build(net, &sub, &CostModel::default());
+    if let Some(factors) = scale {
+        assert_eq!(factors.len(), eps.len(), "tune_subset_scaled: one factor per subset EP");
+        for (ep, &f) in factors.iter().enumerate() {
+            if f != 1.0 {
+                db.scale_ep(ep, f);
+            }
+        }
+    }
     let l = net.len();
     if space::subset_space_size(l, eps) <= EXHAUSTIVE_LIMIT {
         let local_ids: Vec<EpId> = (0..sub.n_eps()).collect();
+        let mut scratch = PipelineConfig::new(Vec::new(), Vec::new());
+        let mut st = StageTimes::new();
         let mut best: Option<(PipelineConfig, f64)> = None;
-        for cfg in space::enumerate_all(l, &local_ids, l.min(sub.n_eps())) {
-            let tp = simulator::throughput(net, &sub, &db, &cfg);
+        space::for_each_config(l, &local_ids, l.min(sub.n_eps()), &mut scratch, |cfg| {
+            st.refresh(net, &sub, &db, cfg);
+            let tp = st.throughput();
             // strict `>` keeps the first-enumerated optimum on ties, so
             // the plan is independent of enumeration internals changing
             // relative order among equals only if the values differ —
             // deterministic either way for a fixed enumerator
-            if best.as_ref().map_or(true, |(_, b)| tp > *b) {
-                best = Some((cfg, tp));
+            match &mut best {
+                Some((bc, bt)) => {
+                    if tp > *bt {
+                        bc.clone_from(cfg);
+                        *bt = tp;
+                    }
+                }
+                None => best = Some((cfg.clone(), tp)),
             }
-        }
+        });
         let (config, predicted_throughput) =
             best.expect("restricted space is non-empty for l >= 1");
         SubsetPlan { config, predicted_throughput, exhaustive: true }
@@ -100,10 +141,26 @@ pub fn tune_partition(
     parts.iter().map(|eps| tune_subset(net, plat, eps, max_evals)).collect()
 }
 
+/// [`tune_partition`] through a [`PlanCache`]: every subset consults the
+/// memo first, so re-tuning a partition the cache has (wholly or partly)
+/// seen — the co-planner's water-filling loop re-probes the same budgets
+/// dozens of times per run — costs hash lookups instead of tuning runs.
+/// Results are bit-identical to the uncached driver.
+pub fn tune_partition_cached(
+    net: &Network,
+    plat: &Platform,
+    parts: &[Vec<EpId>],
+    max_evals: u64,
+    cache: &PlanCache,
+) -> Vec<SubsetPlan> {
+    parts.iter().map(|eps| cache.tune_subset(net, plat, eps, None, max_evals)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::networks;
+    use crate::pipeline::simulator;
     use crate::platform::configs;
 
     #[test]
@@ -152,6 +209,26 @@ mod tests {
                 "subset {eps:?}"
             );
         }
+    }
+
+    #[test]
+    fn scaled_tuning_shifts_predictions_unit_scale_does_not() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let eps = vec![0usize, 4];
+        let base = tune_subset(&net, &plat, &eps, 300);
+        // explicit unit factors are the identity, bit-for-bit
+        let unit = tune_subset_scaled(&net, &plat, &eps, Some(&[1.0, 1.0]), 300);
+        assert_eq!(base.config, unit.config);
+        assert_eq!(
+            base.predicted_throughput.to_bits(),
+            unit.predicted_throughput.to_bits()
+        );
+        // crippling the FEP 4x must cost predicted throughput
+        let slowed = tune_subset_scaled(&net, &plat, &eps, Some(&[4.0, 1.0]), 300);
+        let sub = plat.subset(&eps);
+        assert!(slowed.config.validate(net.len(), &sub).is_ok());
+        assert!(slowed.predicted_throughput < base.predicted_throughput);
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! Memoized subset tuning — the planning fast path.
+//!
+//! Repeated plan construction is the slowest loop in the repo: the
+//! cross-tenant co-planner ([`crate::serve::cluster::coplan`]) re-runs
+//! [`crate::serve::shard::plan_shards`] once per offered EP per tenant per
+//! water-filling step, and every run re-tunes each candidate partition
+//! from scratch even when the identical subset was tuned moments earlier.
+//! This module memoizes [`tune_subset_scaled`] results so those repeated
+//! probes cost a hash lookup instead of an exhaustive enumeration or a
+//! 500-evaluation Shisha run — the same memoized-cost-evaluation trick
+//! that keeps the mapping searches of Inter-Layer Scheduling Space
+//! Exploration (Odema et al.) and Stream (Symons et al.) tractable.
+//!
+//! ## Keying — why results stay bit-identical
+//!
+//! A subset tuning run is a pure function of
+//!
+//! 1. the **network** (layer dimensions decide every database entry and
+//!    every Eq.-(1) seed weight),
+//! 2. the **ordered subset hardware** (core type/count, memory class and
+//!    chiplet of each EP in subset order, plus the inter-chiplet link and
+//!    optional mesh — [`crate::platform::Platform::subset`] renumbers ids
+//!    densely, so global ids themselves are irrelevant; order matters
+//!    because enumeration order and rank tie-breaks follow local ids),
+//! 3. the **database scale** (the per-EP slowdown factors applied before
+//!    tuning — a scaled database must never hit an unscaled entry), and
+//! 4. the Shisha fallback's evaluation budget.
+//!
+//! The key fingerprints exactly those four inputs (128-bit FNV-1a, two
+//! independent accumulators, collision odds negligible at cache sizes of
+//! thousands). Canonicalisations that cannot change results are applied so
+//! equivalent probes share entries: unit scale factors normalise to "no
+//! scale", and without a mesh topology chiplet ids are relabelled by first
+//! appearance (transfers then depend only on chiplet *equality*), so
+//! isomorphic subsets — e.g. any two single-FEP bins of C5's four
+//! identical FEPs — tune once.
+//!
+//! Callers pass subsets in their canonical construction order (the shard
+//! planner's rank-dealt partitions, the co-planner's ascending-sorted
+//! budgets), which the key preserves verbatim — a reordered subset is a
+//! different restricted problem (different local-id enumeration), not a
+//! cache variant of the same one.
+//!
+//! The cache is internally locked, so the parallel `plan_shards` worklist
+//! threads share one instance; values are deterministic, hence a racing
+//! duplicate computation inserts the same plan it would have read.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::model::Network;
+use crate::platform::{CoreType, EpId, MemoryClass, Platform};
+
+use super::partition::{tune_subset_scaled, SubsetPlan};
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// 128-bit FNV-1a fingerprint: two independently seeded 64-bit
+/// accumulators fed the same words.
+#[derive(Debug, Clone, Copy)]
+struct Fingerprint {
+    a: u64,
+    b: u64,
+}
+
+impl Fingerprint {
+    fn new(domain: u64) -> Self {
+        let mut fp = Self { a: FNV_OFFSET, b: FNV_OFFSET ^ 0x9E37_79B9_7F4A_7C15 };
+        fp.word(domain);
+        fp
+    }
+
+    fn word(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.a = (self.a ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ u64::from(byte ^ 0xA5)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.word(v.to_bits());
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        self.word(bytes.len() as u64);
+        for &byte in bytes {
+            self.a = (self.a ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ u64::from(byte ^ 0xA5)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(self) -> (u64, u64) {
+        (self.a, self.b)
+    }
+}
+
+/// Fingerprint of everything about `net` a tuning run can observe.
+fn network_fingerprint(net: &Network) -> (u64, u64) {
+    let mut fp = Fingerprint::new(0x4E45_5457_4F52_4B00); // "NETWORK"
+    fp.word(net.len() as u64);
+    fp.bytes(net.name.as_bytes());
+    for l in &net.layers {
+        for v in [l.h, l.w, l.c, l.r, l.s, l.k, l.stride, l.pad] {
+            fp.word(u64::from(v));
+        }
+        fp.word(match l.kind {
+            crate::model::LayerKind::Conv => 0,
+            crate::model::LayerKind::Dense => 1,
+        });
+        fp.bytes(l.name.as_bytes());
+    }
+    fp.finish()
+}
+
+/// Fingerprint of the ordered subset hardware `plat.subset(eps)` exposes:
+/// per-EP (core type, core count, memory class, chiplet), the link, and
+/// the optional mesh. Chiplet ids are relabelled by first appearance when
+/// no mesh is present (only equality matters then); with a mesh the raw
+/// ids feed the hop distance and are hashed verbatim.
+fn subset_fingerprint(plat: &Platform, eps: &[EpId]) -> (u64, u64) {
+    let mut fp = Fingerprint::new(0x5355_4253_4554_0000); // "SUBSET"
+    fp.word(eps.len() as u64);
+    let canonical_chiplets = plat.topology.is_none();
+    let mut seen: Vec<u32> = Vec::with_capacity(eps.len());
+    for &id in eps {
+        let ep = &plat.eps[id];
+        fp.word(match ep.core_type {
+            CoreType::Big => 0,
+            CoreType::Little => 1,
+        });
+        fp.word(u64::from(ep.n_cores));
+        fp.word(match ep.memory {
+            MemoryClass::Fast => 0,
+            MemoryClass::Slow => 1,
+        });
+        let chiplet = if canonical_chiplets {
+            match seen.iter().position(|&c| c == ep.chiplet) {
+                Some(ix) => ix as u32,
+                None => {
+                    seen.push(ep.chiplet);
+                    (seen.len() - 1) as u32
+                }
+            }
+        } else {
+            ep.chiplet
+        };
+        fp.word(u64::from(chiplet));
+    }
+    fp.f64(plat.link.latency_s);
+    fp.f64(plat.link.bandwidth_gbs);
+    match plat.topology {
+        None => fp.word(0),
+        Some(m) => {
+            fp.word(1);
+            fp.word(u64::from(m.width));
+            fp.word(u64::from(m.height));
+        }
+    }
+    fp.finish()
+}
+
+/// Unit factors are the identity — normalise them away so `None` and
+/// all-1.0 probes share one entry.
+fn canonical_scale(scale: Option<&[f64]>) -> Box<[u64]> {
+    match scale {
+        None => Box::default(),
+        Some(fs) if fs.iter().all(|&f| f == 1.0) => Box::default(),
+        Some(fs) => fs.iter().map(|f| f.to_bits()).collect(),
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    net_fp: (u64, u64),
+    sub_fp: (u64, u64),
+    scale: Box<[u64]>,
+    max_evals: u64,
+}
+
+fn make_key(
+    net: &Network,
+    plat: &Platform,
+    eps: &[EpId],
+    scale: Option<&[f64]>,
+    max_evals: u64,
+) -> PlanKey {
+    // enforce the uncached path's length contract *before* unit factors
+    // canonicalise away, so a wrong-length all-unit slice fails loudly on
+    // the cached path exactly like tune_subset_scaled's assert would
+    if let Some(fs) = scale {
+        assert_eq!(fs.len(), eps.len(), "plan cache: one scale factor per subset EP");
+    }
+    PlanKey {
+        net_fp: network_fingerprint(net),
+        sub_fp: subset_fingerprint(plat, eps),
+        scale: canonical_scale(scale),
+        max_evals,
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<PlanKey, SubsetPlan>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Hit/miss/occupancy counters of a [`PlanCache`].
+#[derive(Debug, Clone, Copy)]
+pub struct CacheStats {
+    /// Probes answered from the memo.
+    pub hits: u64,
+    /// Probes that ran a real tuning pass.
+    pub misses: u64,
+    /// Distinct entries stored.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of probes served from the memo (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A memo of subset tuning results; see the module docs for the key
+/// discipline. Shareable across threads (`&self` API, internal lock);
+/// tuning runs execute outside the lock so parallel misses do not
+/// serialise behind each other.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memoized [`tune_subset_scaled`]: bit-identical to the uncached
+    /// call, deterministic regardless of hit/miss history or thread
+    /// interleaving (values are pure functions of the key).
+    pub fn tune_subset(
+        &self,
+        net: &Network,
+        plat: &Platform,
+        eps: &[EpId],
+        scale: Option<&[f64]>,
+        max_evals: u64,
+    ) -> SubsetPlan {
+        let key = make_key(net, plat, eps, scale, max_evals);
+        {
+            let mut g = self.inner.lock().expect("plan cache poisoned");
+            // clone before touching the counter: both accesses go through
+            // the guard's Deref, so an outstanding map borrow would
+            // conflict with the counter update
+            if let Some(hit) = g.map.get(&key).cloned() {
+                g.hits += 1;
+                return hit;
+            }
+        }
+        let plan = tune_subset_scaled(net, plat, eps, scale, max_evals);
+        let mut g = self.inner.lock().expect("plan cache poisoned");
+        g.misses += 1;
+        // a racing thread may have inserted the (identical) value already
+        g.map.entry(key).or_insert_with(|| plan.clone());
+        plan
+    }
+
+    /// Whether this exact probe is already memoized (does not touch the
+    /// hit/miss counters). Callers use it to skip setup that only pays
+    /// for itself on misses — e.g. the shard planner stays inline instead
+    /// of spawning a worker pool when the whole worklist is warm.
+    pub fn contains(
+        &self,
+        net: &Network,
+        plat: &Platform,
+        eps: &[EpId],
+        scale: Option<&[f64]>,
+        max_evals: u64,
+    ) -> bool {
+        let key = make_key(net, plat, eps, scale, max_evals);
+        self.inner.lock().expect("plan cache poisoned").map.contains_key(&key)
+    }
+
+    /// Counters so benches and tests can report hit rates.
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("plan cache poisoned");
+        CacheStats { hits: g.hits, misses: g.misses, entries: g.map.len() }
+    }
+
+    /// Number of memoized subsets.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").map.len()
+    }
+
+    /// True when nothing is memoized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries and counters.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().expect("plan cache poisoned");
+        g.map.clear();
+        g.hits = 0;
+        g.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::partition::tune_subset;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn assert_plans_identical(a: &SubsetPlan, b: &SubsetPlan, what: &str) {
+        assert_eq!(a.config, b.config, "{what}: config");
+        assert_eq!(
+            a.predicted_throughput.to_bits(),
+            b.predicted_throughput.to_bits(),
+            "{what}: predicted throughput bits"
+        );
+        assert_eq!(a.exhaustive, b.exhaustive, "{what}: path");
+    }
+
+    #[test]
+    fn warm_hit_is_bit_identical_to_cold() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let cache = PlanCache::new();
+        for eps in [vec![0usize, 4], vec![1, 3, 5, 7], (0..8).collect::<Vec<_>>()] {
+            let cold = tune_subset(&net, &plat, &eps, 400);
+            let miss = cache.tune_subset(&net, &plat, &eps, None, 400);
+            let hit = cache.tune_subset(&net, &plat, &eps, None, 400);
+            assert_plans_identical(&cold, &miss, "miss vs uncached");
+            assert_plans_identical(&cold, &hit, "hit vs uncached");
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 3);
+        assert_eq!(stats.entries, 3);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_database_is_part_of_the_key() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let cache = PlanCache::new();
+        let eps = [0usize, 4];
+        let base = cache.tune_subset(&net, &plat, &eps, None, 300);
+        // a scaled database must miss (and produce a different prediction)
+        let scaled = cache.tune_subset(&net, &plat, &eps, Some(&[4.0, 1.0]), 300);
+        assert_eq!(cache.stats().misses, 2, "scaled probe must not hit the unscaled entry");
+        assert_ne!(
+            base.predicted_throughput.to_bits(),
+            scaled.predicted_throughput.to_bits()
+        );
+        // explicit unit factors canonicalise onto the unscaled entry
+        let unit = cache.tune_subset(&net, &plat, &eps, Some(&[1.0, 1.0]), 300);
+        assert_eq!(cache.stats().hits, 1, "unit scale must hit the unscaled entry");
+        assert_plans_identical(&base, &unit, "unit scale");
+        // and the scaled entry itself memoizes
+        let scaled_again = cache.tune_subset(&net, &plat, &eps, Some(&[4.0, 1.0]), 300);
+        assert_eq!(cache.stats().hits, 2);
+        assert_plans_identical(&scaled, &scaled_again, "scaled rehit");
+    }
+
+    #[test]
+    fn max_evals_is_part_of_the_key() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let cache = PlanCache::new();
+        let all: Vec<usize> = (0..8).collect(); // Shisha fallback territory
+        cache.tune_subset(&net, &plat, &all, None, 100);
+        cache.tune_subset(&net, &plat, &all, None, 500);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn isomorphic_subsets_share_an_entry_without_a_mesh() {
+        // C5's four FEPs are identical hardware on distinct chiplets; with
+        // the paper's single-hop model only chiplet *equality* matters, so
+        // [0, 4] and [1, 5] (FEP+SEP pairs on distinct chiplets) are the
+        // same restricted problem.
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let cache = PlanCache::new();
+        let a = cache.tune_subset(&net, &plat, &[0, 4], None, 300);
+        let b = cache.tune_subset(&net, &plat, &[1, 5], None, 300);
+        assert_eq!(cache.stats().hits, 1, "isomorphic subset must hit");
+        assert_plans_identical(&a, &b, "isomorphic subsets");
+        // sanity: the shared answer really is what cold tuning computes
+        let cold = tune_subset(&net, &plat, &[1, 5], 300);
+        assert_plans_identical(&cold, &b, "isomorphic hit vs cold");
+    }
+
+    #[test]
+    fn mesh_topology_disables_chiplet_canonicalisation() {
+        let net = networks::synthnet_small();
+        let mut plat = configs::c5();
+        plat.topology = Some(crate::platform::MeshTopology::for_chiplets(8));
+        let cache = PlanCache::new();
+        // chiplets 0 and 3 sit at different mesh distances from their
+        // partners, so these probes must not collapse onto one entry
+        cache.tune_subset(&net, &plat, &[0, 7], None, 300);
+        cache.tune_subset(&net, &plat, &[3, 7], None, 300);
+        assert_eq!(cache.stats().misses, 2, "mesh hop distances differ");
+    }
+
+    #[test]
+    fn different_networks_never_collide() {
+        let plat = configs::c2();
+        let cache = PlanCache::new();
+        let a = cache.tune_subset(&networks::synthnet(), &plat, &[0, 2], None, 300);
+        let b = cache.tune_subset(&networks::alexnet(), &plat, &[0, 2], None, 300);
+        assert_eq!(cache.stats().misses, 2);
+        assert_ne!(a.config.n_layers(), b.config.n_layers());
+    }
+
+    #[test]
+    fn subset_order_is_preserved_in_the_key() {
+        // [0, 4] and [4, 0] renumber local ids differently — distinct
+        // restricted problems, so distinct entries (callers pass canonical
+        // construction order; the cache must not guess at equivalence)
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let cache = PlanCache::new();
+        cache.tune_subset(&net, &plat, &[0, 4], None, 300);
+        cache.tune_subset(&net, &plat, &[4, 0], None, 300);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn contains_tracks_entries_without_counting() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        let cache = PlanCache::new();
+        assert!(!cache.contains(&net, &plat, &[0, 1], None, 300));
+        cache.tune_subset(&net, &plat, &[0, 1], None, 300);
+        assert!(cache.contains(&net, &plat, &[0, 1], None, 300));
+        assert!(!cache.contains(&net, &plat, &[0], None, 300));
+        // explicit unit factors probe the same canonical entry
+        assert!(cache.contains(&net, &plat, &[0, 1], Some(&[1.0, 1.0]), 300));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 1), "contains must not touch the counters");
+    }
+
+    #[test]
+    #[should_panic(expected = "one scale factor per subset EP")]
+    fn wrong_length_unit_scale_panics_like_the_uncached_path() {
+        // tune_subset_scaled asserts factors.len() == eps.len(); the
+        // cached path must not let all-unit canonicalisation swallow the
+        // same mistake
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        PlanCache::new().tune_subset(&net, &plat, &[0, 1], Some(&[1.0]), 300);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let net = networks::synthnet_small();
+        let plat = configs::c1();
+        let cache = PlanCache::new();
+        cache.tune_subset(&net, &plat, &[0, 1], None, 300);
+        assert!(!cache.is_empty());
+        cache.clear();
+        assert!(cache.is_empty());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+    }
+}

@@ -16,7 +16,9 @@
 //!   the faster EP on ties).
 
 use super::super::Evaluator;
-use crate::pipeline::{simulator, PipelineConfig};
+use crate::pipeline::simulator::StageTimes;
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
 
 /// Balancing target choice for Algorithm 2 line 6.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,24 +38,39 @@ pub fn pick_target(
     slowest: usize,
     balancing: BalancingChoice,
 ) -> Option<usize> {
-    if cfg.stages[slowest] <= 1 {
+    let mut st = StageTimes::new();
+    st.rebuild(eval.network(), eval.platform(), eval.db(), cfg);
+    pick_target_timed(eval.platform(), &st, slowest, balancing)
+}
+
+/// [`pick_target`] reading the stage loads off an incrementally maintained
+/// [`StageTimes`] (the tuning walk's fast path: no per-step `PipelineEval`
+/// allocation, no O(S) service-time re-derivation). Stage totals stored in
+/// the scratch are bit-identical to the full recompute, so both entry
+/// points choose the same target.
+pub fn pick_target_timed(
+    plat: &Platform,
+    st: &StageTimes,
+    slowest: usize,
+    balancing: BalancingChoice,
+) -> Option<usize> {
+    if st.stage_len(slowest) <= 1 {
         return None;
     }
     let mut candidates: Vec<usize> = Vec::with_capacity(2);
     if slowest > 0 {
         candidates.push(slowest - 1);
     }
-    if slowest + 1 < cfg.n_stages() {
+    if slowest + 1 < st.n_stages() {
         candidates.push(slowest + 1);
     }
     if candidates.is_empty() {
         return None;
     }
-    let plat = eval.platform();
     match balancing {
         BalancingChoice::NFep => candidates.into_iter().max_by(|&a, &b| {
-            let pa = plat.eps[cfg.assignment[a]].perf_score();
-            let pb = plat.eps[cfg.assignment[b]].perf_score();
+            let pa = plat.eps[st.stage_ep(a)].perf_score();
+            let pb = plat.eps[st.stage_ep(b)].perf_score();
             pa.partial_cmp(&pb).unwrap().then(b.cmp(&a))
         }),
         BalancingChoice::NlFep => {
@@ -62,23 +79,22 @@ pub fn pick_target(
             // (the move should offload towards *fast* EPs); among those,
             // pick the lightest by measured stage time. Fall back to the
             // lightest neighbour when no faster EP is adjacent.
-            let ev = simulator::evaluate(eval.network(), plat, eval.db(), cfg);
-            let own = plat.eps[cfg.assignment[slowest]].perf_score();
+            let own = plat.eps[st.stage_ep(slowest)].perf_score();
             let faster: Vec<usize> = candidates
                 .iter()
                 .copied()
-                .filter(|&c| plat.eps[cfg.assignment[c]].perf_score() >= own)
+                .filter(|&c| plat.eps[st.stage_ep(c)].perf_score() >= own)
                 .collect();
             let pool = if faster.is_empty() { candidates } else { faster };
             pool.into_iter().min_by(|&a, &b| {
-                let ta = ev.stages[a].total();
-                let tb = ev.stages[b].total();
+                let ta = st.total(a);
+                let tb = st.total(b);
                 ta.partial_cmp(&tb)
                     .unwrap()
                     .then_with(|| {
                         // tie: prefer the faster EP
-                        let pa = plat.eps[cfg.assignment[a]].perf_score();
-                        let pb = plat.eps[cfg.assignment[b]].perf_score();
+                        let pa = plat.eps[st.stage_ep(a)].perf_score();
+                        let pb = plat.eps[st.stage_ep(b)].perf_score();
                         pb.partial_cmp(&pa).unwrap()
                     })
                     .then(a.cmp(&b))
@@ -89,6 +105,13 @@ pub fn pick_target(
 
 /// Algorithm 2: online tuning from `seed`. Returns the final walked
 /// configuration; the best visited configuration lives in the evaluator.
+///
+/// The walk only ever moves one boundary layer at a time, so the per-stage
+/// times are maintained incrementally ([`StageTimes::apply_move`]: two
+/// compute terms and one transfer term per step instead of the full O(S)
+/// re-derivation) and the configuration mutates in place — the loop
+/// allocates nothing after the initial scratch. Results are bit-identical
+/// to evaluating each walked configuration from scratch.
 pub fn tune(
     eval: &mut Evaluator<'_>,
     seed: PipelineConfig,
@@ -96,25 +119,28 @@ pub fn tune(
     alpha: u32,
 ) -> PipelineConfig {
     let mut conf = seed;
-    let mut throughput = eval.evaluate(&conf); // line 2
+    let mut st = StageTimes::new();
+    st.rebuild(eval.network(), eval.platform(), eval.db(), &conf);
+    let mut throughput = eval.evaluate_timed(&conf, &st); // line 2
     let mut gamma = 0u32; // line 3
     while gamma < alpha && !eval.exhausted() {
         // line 5: the stage observed slowest in the last trial
-        let slowest = simulator::slowest_stage(eval.network(), eval.platform(), eval.db(), &conf);
+        let slowest = st.slowest_stage();
         // line 6: target per balancing choice
-        let Some(target) = pick_target(eval, &conf, slowest, balancing) else {
+        let Some(target) = pick_target_timed(eval.platform(), &st, slowest, balancing) else {
             // No legal layer move (stage already minimal): counts as a
             // non-improving attempt; the walk cannot progress further from
             // this state, so each pass increments gamma until alpha.
             gamma += 1;
             continue;
         };
-        // line 7: move one layer (unconditional walk)
-        conf = conf
-            .move_layer(slowest, target)
-            .expect("pick_target guarantees a legal move");
+        // line 7: move one layer (unconditional walk, in place —
+        // pick_target_timed guarantees legality)
+        conf.stages[slowest] -= 1;
+        conf.stages[target] += 1;
+        st.apply_move(eval.network(), eval.platform(), eval.db(), slowest, target);
         // line 8: measure online
-        let tp = eval.evaluate(&conf);
+        let tp = eval.evaluate_timed(&conf, &st);
         // lines 9-14
         if tp <= throughput {
             gamma += 1;

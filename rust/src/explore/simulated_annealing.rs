@@ -7,6 +7,7 @@
 //! [`SaOptions::start`].
 
 use super::{random_config, Evaluator, Explorer, Solution};
+use crate::pipeline::simulator::StageTimes;
 use crate::pipeline::PipelineConfig;
 use crate::rng::Xoshiro256;
 
@@ -81,7 +82,17 @@ impl Explorer for SimulatedAnnealing {
             Start::Random => random_config(l, &plat, &mut rng),
             Start::From(c) => c.clone(),
         };
-        let mut current_tp = eval.evaluate(&current);
+        // Incremental evaluation: the current configuration's per-stage
+        // times live in a scratch; each proposal re-seeds a candidate
+        // scratch via clone_from + diff refresh (single-boundary and
+        // single-assignment moves recompute only the touched terms) and an
+        // accepted proposal swaps the scratches. Bit-identical to the full
+        // per-trial recompute, so acceptance decisions and the RNG stream
+        // are unchanged.
+        let mut cur_st = StageTimes::new();
+        cur_st.rebuild(eval.network(), eval.platform(), eval.db(), &current);
+        let mut cand_st = StageTimes::new();
+        let mut current_tp = eval.evaluate_timed(&current, &cur_st);
         let mut temp = (self.opts.t0_frac * current_tp).max(1e-12);
 
         for _ in 0..self.opts.max_steps {
@@ -93,10 +104,13 @@ impl Explorer for SimulatedAnnealing {
             let Some(cand) = super::random_move(&current, &plat, &mut rng) else {
                 break;
             };
-            let tp = eval.evaluate(&cand);
+            cand_st.clone_from(&cur_st);
+            cand_st.refresh(eval.network(), eval.platform(), eval.db(), &cand);
+            let tp = eval.evaluate_timed(&cand, &cand_st);
             let accept = tp > current_tp || rng.gen_f64() < ((tp - current_tp) / temp).exp();
             if accept {
                 current = cand;
+                std::mem::swap(&mut cur_st, &mut cand_st);
                 current_tp = tp;
             }
             temp = (temp * self.opts.cooling).max(1e-12);

@@ -150,13 +150,48 @@
 //!   best-so-far configuration via `clone_from` (no allocation after the
 //!   first improvement).
 //!
+//! ### Planning fast path
+//!
+//! Repeated plan construction is near-free, so re-planning can run every
+//! control epoch instead of once at serve start:
+//!
+//! * **memoized subset tuning** ([`explore::PlanCache`]) — tuning an EP
+//!   subset is a pure function of the network, the ordered subset
+//!   hardware, the database scale and the evaluation budget, so results
+//!   are memoized under exactly that key (scaled databases always miss;
+//!   hardware-isomorphic subsets share entries). The co-planner's
+//!   water-filling loop, which re-probes the same (tenant, budget) pairs
+//!   dozens of times per run, degenerates to hash lookups on every
+//!   re-probe;
+//! * **allocation-free enumeration** ([`pipeline::space::for_each_config`])
+//!   — the exhaustive path of [`explore::partition::tune_subset`] visits
+//!   its restricted space through one reused configuration buffer instead
+//!   of allocating every candidate;
+//! * **incremental evaluation** ([`pipeline::simulator::StageTimes`]) —
+//!   Shisha's tuning walk, SA proposals and HC neighbourhood scans mutate
+//!   one stage boundary or one assignment at a time, so per-trial
+//!   evaluation recomputes only the touched stage terms
+//!   (`apply_move`/`undo`/diff-`refresh`), pinned **bit-identical** to the
+//!   full recompute by a property test — no chosen plan, trace or virtual
+//!   clock reading changes;
+//! * **parallel plan search** ([`serve::shard::plan_shards_with`],
+//!   [`serve::cluster::coplan::coplan_with`]) — candidate partitions tune
+//!   across a fixed thread pool with a deterministic input-order
+//!   reduction, so multi-tenant co-plan startup scales with cores while
+//!   staying a pure function of its inputs.
+//!
+//! `cargo bench --bench plan_speed` writes `BENCH_plan.json` (cold vs
+//! warm vs parallel plans/s, the in-run `plan_speedup` ratio — asserted
+//! > 1 — and cache hit rates); `tests/plan_cache.rs` pins warm plans
+//! bit-identical to cold ones across randomized platforms and networks.
+//!
 //! The perf trajectory is machine-readable: `cargo bench --bench
 //! serve_scale` writes `BENCH_serve.json` (simulated events/s per
 //! scenario, plus the full-rescan baseline and their ratio) and `cargo
 //! bench --bench perf_hotpath` writes `BENCH_hotpath.json` (ns/op and
-//! ops/s per hot-path case, evals/s for re-tunes) — both at the
-//! repository root; CI runs the `--quick` profiles and uploads them as
-//! artifacts.
+//! ops/s per hot-path case, evals/s for re-tunes) — plus `BENCH_plan.json`
+//! above, all at the repository root; CI runs the `--quick` profiles and
+//! uploads them as artifacts.
 //!
 //! ## Quick tour
 //!

@@ -298,6 +298,7 @@ mod tests {
             "BENCH_serve.json",
             "BENCH_fig4.json",
             "BENCH_fig5.json",
+            "BENCH_plan.json",
         ] {
             let path = root.join(name);
             let s = std::fs::read_to_string(&path)

@@ -152,6 +152,283 @@ pub fn makespan(net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfi
     eval.latency_s + (k.saturating_sub(1)) as f64 * eval.bottleneck_s
 }
 
+/// Incrementally maintained per-stage service times (batch 1) — the
+/// explorers' evaluation scratch.
+///
+/// Every entry is the value [`stage_service_time`] would compute for that
+/// stage, so any aggregate read off this struct is **bit-identical** to
+/// the full recompute ([`throughput`] / [`evaluate`] / [`makespan`]): a
+/// stage's service time is a pure function of `(lo, hi, ep, from_ep)`, and
+/// the struct only ever stores values produced by that function. The point
+/// is what is *not* recomputed — a single boundary move
+/// ([`StageTimes::apply_move`]) touches two compute terms and one transfer
+/// term instead of re-deriving all `S` stages, and a jump to an arbitrary
+/// nearby configuration ([`StageTimes::refresh`]) recomputes only the
+/// stages whose identifying tuple changed. Shisha's Algorithm-2 walk, SA
+/// proposals and HC neighbourhood scans all mutate one boundary or one
+/// assignment at a time, so their per-trial evaluation cost drops from
+/// O(S) service-time derivations to O(1) plus a trivial O(S) max/sum fold
+/// over stored floats. A property test pins all reads bit-identical to the
+/// full recompute across randomized move sequences.
+#[derive(Debug, Default)]
+pub struct StageTimes {
+    /// Stage `[lo, hi)` layer bounds.
+    lo: Vec<usize>,
+    hi: Vec<usize>,
+    /// Assigned EP per stage.
+    ep: Vec<EpId>,
+    /// Stage compute time, seconds.
+    compute: Vec<f64>,
+    /// Inbound transfer time, seconds (0 for the first stage).
+    transfer: Vec<f64>,
+}
+
+// Hand-written so `clone_from` reuses the destination's buffers: HC/SA
+// re-seed a candidate scratch from the current configuration's times once
+// per trial, and the derived impl would reallocate all five vectors.
+impl Clone for StageTimes {
+    fn clone(&self) -> Self {
+        Self {
+            lo: self.lo.clone(),
+            hi: self.hi.clone(),
+            ep: self.ep.clone(),
+            compute: self.compute.clone(),
+            transfer: self.transfer.clone(),
+        }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        self.lo.clone_from(&source.lo);
+        self.hi.clone_from(&source.hi);
+        self.ep.clone_from(&source.ep);
+        self.compute.clone_from(&source.compute);
+        self.transfer.clone_from(&source.transfer);
+    }
+}
+
+/// Undo record for one [`StageTimes::apply_move`]; restores the exact
+/// pre-move bits.
+#[derive(Debug, Clone, Copy)]
+pub struct StageMove {
+    from: usize,
+    to: usize,
+    compute_from: f64,
+    compute_to: f64,
+    transfer_b: f64,
+}
+
+impl StageTimes {
+    /// Empty scratch; populate with [`StageTimes::rebuild`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of tracked stages.
+    #[inline]
+    pub fn n_stages(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Layer count of stage `s`.
+    #[inline]
+    pub fn stage_len(&self, s: usize) -> usize {
+        self.hi[s] - self.lo[s]
+    }
+
+    /// EP assigned to stage `s`.
+    #[inline]
+    pub fn stage_ep(&self, s: usize) -> EpId {
+        self.ep[s]
+    }
+
+    /// Total service time of stage `s` (compute + inbound transfer).
+    #[inline]
+    pub fn total(&self, s: usize) -> f64 {
+        self.compute[s] + self.transfer[s]
+    }
+
+    /// Full recompute from `cfg` (also resizes; reuses buffers).
+    pub fn rebuild(&mut self, net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) {
+        self.lo.clear();
+        self.hi.clear();
+        self.ep.clear();
+        self.compute.clear();
+        self.transfer.clear();
+        let mut lo = 0usize;
+        for (si, &n) in cfg.stages.iter().enumerate() {
+            let hi = lo + n;
+            let ep = cfg.assignment[si];
+            let from_ep = if si == 0 { None } else { Some(cfg.assignment[si - 1]) };
+            let (c, x) = stage_service_time(net, plat, db, lo, hi, ep, from_ep, 1);
+            self.lo.push(lo);
+            self.hi.push(hi);
+            self.ep.push(ep);
+            self.compute.push(c);
+            self.transfer.push(x);
+            lo = hi;
+        }
+    }
+
+    /// Diff-based refresh towards `cfg`: recompute only the stages whose
+    /// `(lo, hi, ep)` changed and the transfer terms whose `(lo, ep,
+    /// predecessor ep)` changed; a stage-count change falls back to
+    /// [`StageTimes::rebuild`]. Handles every explorer move kind (boundary
+    /// moves, swaps, reassignments, merges, splits) without the caller
+    /// naming the move.
+    pub fn refresh(&mut self, net: &Network, plat: &Platform, db: &PerfDb, cfg: &PipelineConfig) {
+        if self.lo.len() != cfg.n_stages() {
+            self.rebuild(net, plat, db, cfg);
+            return;
+        }
+        let mut lo = 0usize;
+        let mut prev_new: Option<EpId> = None;
+        let mut prev_old: Option<EpId> = None;
+        for (si, &n) in cfg.stages.iter().enumerate() {
+            let hi = lo + n;
+            let ep = cfg.assignment[si];
+            let (old_lo, old_hi, old_ep) = (self.lo[si], self.hi[si], self.ep[si]);
+            if !(old_lo == lo && old_hi == hi && old_ep == ep) {
+                self.compute[si] = db.range_time(lo, hi, ep);
+            }
+            if !(old_lo == lo && old_ep == ep && prev_old == prev_new) {
+                self.transfer[si] = match prev_new {
+                    None => 0.0,
+                    Some(p) => crate::platform::topology::transfer_time(
+                        plat,
+                        p,
+                        ep,
+                        net.layers[lo - 1].output_bytes(),
+                    ),
+                };
+            }
+            self.lo[si] = lo;
+            self.hi[si] = hi;
+            self.ep[si] = ep;
+            prev_old = Some(old_ep);
+            prev_new = Some(ep);
+            lo = hi;
+        }
+    }
+
+    /// Apply a single boundary move (one layer from stage `from` to the
+    /// adjacent stage `to`, mirroring [`PipelineConfig::move_layer`]):
+    /// recomputes exactly the two touched compute terms and the right-hand
+    /// stage's transfer term. Returns an undo record restoring the exact
+    /// pre-move bits. `from` must keep at least one layer.
+    pub fn apply_move(
+        &mut self,
+        net: &Network,
+        plat: &Platform,
+        db: &PerfDb,
+        from: usize,
+        to: usize,
+    ) -> StageMove {
+        debug_assert_eq!(from.abs_diff(to), 1, "apply_move: stages must be adjacent");
+        debug_assert!(self.stage_len(from) >= 2, "apply_move: would empty stage {from}");
+        let b = from.max(to);
+        let undo = StageMove {
+            from,
+            to,
+            compute_from: self.compute[from],
+            compute_to: self.compute[to],
+            transfer_b: self.transfer[b],
+        };
+        if to < from {
+            self.hi[to] += 1;
+            self.lo[from] += 1;
+        } else {
+            self.hi[from] -= 1;
+            self.lo[to] -= 1;
+        }
+        self.compute[from] = db.range_time(self.lo[from], self.hi[from], self.ep[from]);
+        self.compute[to] = db.range_time(self.lo[to], self.hi[to], self.ep[to]);
+        // only the right stage's inbound boundary layer moved; b >= 1 by
+        // adjacency, and downstream transfers are untouched (their lo and
+        // both endpoint EPs are unchanged)
+        self.transfer[b] = crate::platform::topology::transfer_time(
+            plat,
+            self.ep[b - 1],
+            self.ep[b],
+            net.layers[self.lo[b] - 1].output_bytes(),
+        );
+        undo
+    }
+
+    /// Revert an [`StageTimes::apply_move`]; bit-exact (the undo record
+    /// carries the original floats).
+    pub fn undo(&mut self, m: StageMove) {
+        let b = m.from.max(m.to);
+        if m.to < m.from {
+            self.hi[m.to] -= 1;
+            self.lo[m.from] -= 1;
+        } else {
+            self.hi[m.from] += 1;
+            self.lo[m.to] += 1;
+        }
+        self.compute[m.from] = m.compute_from;
+        self.compute[m.to] = m.compute_to;
+        self.transfer[b] = m.transfer_b;
+    }
+
+    /// True when the tracked bounds/assignment correspond to `cfg`.
+    pub fn matches(&self, cfg: &PipelineConfig) -> bool {
+        if self.lo.len() != cfg.n_stages() {
+            return false;
+        }
+        let mut lo = 0usize;
+        for (si, &n) in cfg.stages.iter().enumerate() {
+            if self.lo[si] != lo || self.hi[si] != lo + n || self.ep[si] != cfg.assignment[si] {
+                return false;
+            }
+            lo += n;
+        }
+        true
+    }
+
+    /// Bottleneck stage service time — same fold as [`evaluate`]
+    /// (`fold(0.0, f64::max)` in stage order), so bits match.
+    pub fn bottleneck_s(&self) -> f64 {
+        self.compute
+            .iter()
+            .zip(&self.transfer)
+            .map(|(c, x)| c + x)
+            .fold(0.0, f64::max)
+    }
+
+    /// Fill latency — same sum order as [`evaluate`].
+    pub fn latency_s(&self) -> f64 {
+        self.compute.iter().zip(&self.transfer).map(|(c, x)| c + x).sum()
+    }
+
+    /// Steady-state throughput — bit-identical to [`throughput`] on the
+    /// matching configuration.
+    pub fn throughput(&self) -> f64 {
+        let b = self.bottleneck_s();
+        if b > 0.0 {
+            1.0 / b
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Index of the slowest stage — same last-maximum tie-break as
+    /// [`slowest_stage`] (`Iterator::max_by` keeps the last maximal
+    /// element).
+    pub fn slowest_stage(&self) -> usize {
+        debug_assert!(!self.lo.is_empty(), "slowest_stage on empty StageTimes");
+        let mut best = f64::NEG_INFINITY;
+        let mut ix = 0usize;
+        for s in 0..self.lo.len() {
+            let t = self.total(s);
+            if t >= best {
+                best = t;
+                ix = s;
+            }
+        }
+        ix
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,5 +554,145 @@ mod tests {
         let imb = throughput(&net, &plat, &db, &PipelineConfig::new(vec![1, 17], vec![0, 1]));
         let bal = throughput(&net, &plat, &db, &PipelineConfig::new(vec![9, 9], vec![0, 1]));
         assert!(bal > imb);
+    }
+
+    /// All StageTimes reads must match the full recompute bit-for-bit.
+    fn assert_times_pinned(
+        st: &StageTimes,
+        net: &Network,
+        plat: &Platform,
+        db: &PerfDb,
+        cfg: &PipelineConfig,
+    ) -> Result<(), String> {
+        if !st.matches(cfg) {
+            return Err(format!("desync at {}", cfg.describe()));
+        }
+        let full = evaluate(net, plat, db, cfg);
+        for (s, ev) in full.stages.iter().enumerate() {
+            if st.total(s).to_bits() != ev.total().to_bits() {
+                return Err(format!(
+                    "stage {s} total {} != {} at {}",
+                    st.total(s),
+                    ev.total(),
+                    cfg.describe()
+                ));
+            }
+        }
+        let checks = [
+            ("throughput", st.throughput(), throughput(net, plat, db, cfg)),
+            ("bottleneck", st.bottleneck_s(), full.bottleneck_s),
+            ("latency", st.latency_s(), full.latency_s),
+        ];
+        for (name, got, want) in checks {
+            if got.to_bits() != want.to_bits() {
+                return Err(format!("{name} {got} != {want} at {}", cfg.describe()));
+            }
+        }
+        if st.slowest_stage() != slowest_stage(net, plat, db, cfg) {
+            return Err(format!("slowest stage mismatch at {}", cfg.describe()));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn stage_times_rebuild_matches_full_eval() {
+        let (net, plat, db) = setup();
+        let mut st = StageTimes::new();
+        for cfg in [
+            PipelineConfig::new(vec![18], vec![0]),
+            PipelineConfig::new(vec![9, 9], vec![0, 2]),
+            PipelineConfig::new(vec![5, 6, 7], vec![1, 0, 3]),
+            PipelineConfig::new(vec![4, 4, 5, 5], vec![3, 2, 1, 0]),
+        ] {
+            st.rebuild(&net, &plat, &db, &cfg);
+            assert_times_pinned(&st, &net, &plat, &db, &cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn stage_times_apply_move_and_undo_are_exact() {
+        let (net, plat, db) = setup();
+        let cfg = PipelineConfig::new(vec![5, 6, 7], vec![1, 0, 3]);
+        let mut st = StageTimes::new();
+        st.rebuild(&net, &plat, &db, &cfg);
+        let before = st.clone();
+        for (from, to) in [(1usize, 0usize), (1, 2), (0, 1), (2, 1)] {
+            let undo = st.apply_move(&net, &plat, &db, from, to);
+            let moved = cfg.move_layer(from, to).unwrap();
+            assert_times_pinned(&st, &net, &plat, &db, &moved).unwrap();
+            st.undo(undo);
+            for s in 0..st.n_stages() {
+                assert_eq!(st.total(s).to_bits(), before.total(s).to_bits(), "undo stage {s}");
+            }
+            assert_times_pinned(&st, &net, &plat, &db, &cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn stage_times_pinned_bit_identical_property() {
+        // the acceptance pin: across randomized platforms/networks and
+        // random move sequences (incremental boundary moves via
+        // apply_move/undo, arbitrary neighbourhood jumps via refresh —
+        // including merges and splits that change the stage count), every
+        // StageTimes read stays bit-identical to the full recompute.
+        crate::testutil::check("stage times incremental", 0x57A6E7, 60, |g| {
+            let plat = g.platform(2, 7);
+            let net = g.network(3, 20);
+            let db = PerfDb::build(&net, &plat, &CostModel::default());
+            let mut cfg = g.config(net.len(), &plat);
+            let mut st = StageTimes::new();
+            st.rebuild(&net, &plat, &db, &cfg);
+            for _ in 0..25 {
+                if g.rng().gen_bool(0.5) && cfg.n_stages() >= 2 {
+                    // boundary move on a random movable stage pair
+                    let n = cfg.n_stages();
+                    let from = g.usize(0, n);
+                    let to = if from == 0 {
+                        1
+                    } else if from == n - 1 {
+                        n - 2
+                    } else if g.rng().gen_bool(0.5) {
+                        from - 1
+                    } else {
+                        from + 1
+                    };
+                    if cfg.stages[from] < 2 {
+                        continue;
+                    }
+                    let undo = st.apply_move(&net, &plat, &db, from, to);
+                    if g.rng().gen_bool(0.3) {
+                        // exercise undo: revert and re-apply
+                        st.undo(undo);
+                        assert_times_pinned(&st, &net, &plat, &db, &cfg)?;
+                        st.apply_move(&net, &plat, &db, from, to);
+                    }
+                    cfg.stages[from] -= 1;
+                    cfg.stages[to] += 1;
+                } else {
+                    // arbitrary neighbourhood jump (swap / reassign /
+                    // merge / split / move), applied via diff refresh
+                    let Some(next) = crate::explore::random_move(&cfg, &plat, g.rng()) else {
+                        continue;
+                    };
+                    st.refresh(&net, &plat, &db, &next);
+                    cfg = next;
+                }
+                assert_times_pinned(&st, &net, &plat, &db, &cfg)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stage_times_clone_from_reuses_state() {
+        let (net, plat, db) = setup();
+        let a_cfg = PipelineConfig::new(vec![9, 9], vec![0, 2]);
+        let b_cfg = PipelineConfig::new(vec![4, 4, 5, 5], vec![3, 2, 1, 0]);
+        let mut a = StageTimes::new();
+        a.rebuild(&net, &plat, &db, &a_cfg);
+        let mut b = StageTimes::new();
+        b.rebuild(&net, &plat, &db, &b_cfg);
+        b.clone_from(&a);
+        assert_times_pinned(&b, &net, &plat, &db, &a_cfg).unwrap();
     }
 }

@@ -34,11 +34,12 @@
 
 use anyhow::{bail, Result};
 
+use crate::explore::PlanCache;
 use crate::model::Network;
 use crate::pipeline::PipelineConfig;
 use crate::platform::{EpId, Platform};
 
-use super::super::shard::plan_shards;
+use super::super::shard::plan_shards_with;
 use super::super::tenant::TenantSpec;
 
 /// One tenant's share of a [`ClusterPlan`].
@@ -87,8 +88,26 @@ pub fn plan_budget(
     budget: &[EpId],
     max_shards: usize,
 ) -> Result<(Vec<(Vec<EpId>, PipelineConfig)>, f64)> {
+    plan_budget_with(net, plat, budget, max_shards, 1, &PlanCache::new())
+}
+
+/// [`plan_budget`] through a shared subset-tuning memo and worker budget —
+/// the co-planner's fast path. Budgets are canonically ascending-sorted by
+/// the callers, and candidate subsets of a budget's sub-platform
+/// fingerprint by their underlying hardware, so water-filling's repeated
+/// probes of the same (tenant, budget) pair — and of hardware-isomorphic
+/// budgets across tenants — hit the cache. Bit-identical to the uncached
+/// call.
+pub fn plan_budget_with(
+    net: &Network,
+    plat: &Platform,
+    budget: &[EpId],
+    max_shards: usize,
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<(Vec<(Vec<EpId>, PipelineConfig)>, f64)> {
     let sub = plat.subset(budget);
-    let plan = plan_shards(net, &sub, max_shards.max(1))?;
+    let plan = plan_shards_with(net, &sub, max_shards.max(1), threads, cache)?;
     let total = plan.total_predicted();
     let placements = plan
         .partitions
@@ -130,11 +149,14 @@ fn build_plan(
     specs: &[TenantSpec],
     budgets: Vec<Vec<EpId>>,
     strategy: &'static str,
+    threads: usize,
+    cache: &PlanCache,
 ) -> Result<ClusterPlan> {
     let mut allocations = Vec::with_capacity(specs.len());
     for (spec, mut eps) in specs.iter().zip(budgets) {
         eps.sort_unstable();
-        let (placements, predicted) = plan_budget(&spec.net, plat, &eps, spec.shards)?;
+        let (placements, predicted) =
+            plan_budget_with(&spec.net, plat, &eps, spec.shards, threads, cache)?;
         allocations.push(TenantAllocation { eps, placements, predicted, weight: spec.weight });
     }
     Ok(ClusterPlan { allocations, strategy })
@@ -146,6 +168,16 @@ fn build_plan(
 /// sequential per-tenant onboarding would do on a shared cluster, made
 /// disjoint — the allocation the co-planner must never lose to.
 pub fn greedy_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
+    greedy_plan_with(plat, specs, 1, &PlanCache::new())
+}
+
+/// [`greedy_plan`] with an explicit subset-tuning memo and worker budget.
+pub fn greedy_plan_with(
+    plat: &Platform,
+    specs: &[TenantSpec],
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<ClusterPlan> {
     check_specs(plat, specs)?;
     let ranked = plat.eps_by_rank();
     let mut budgets: Vec<Vec<EpId>> = Vec::with_capacity(specs.len());
@@ -158,7 +190,7 @@ pub fn greedy_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan>
         budgets.push(ranked[next..next + take].to_vec());
         next += take;
     }
-    build_plan(plat, specs, budgets, "greedy")
+    build_plan(plat, specs, budgets, "greedy", threads, cache)
 }
 
 /// Water-filling on predicted marginal throughput: seed every tenant with
@@ -169,6 +201,21 @@ pub fn greedy_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan>
 /// (`weighted marginal gain ≤ 0` for every tenant) stays unallocated
 /// rather than being parked on an arbitrary tenant.
 pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
+    water_fill_plan_with(plat, specs, 1, &PlanCache::new())
+}
+
+/// [`water_fill_plan`] with an explicit subset-tuning memo and worker
+/// budget. Every candidate-grant probe and the final plan-build pass
+/// share `cache`, so re-planning a budget the loop has already tuned —
+/// the common case: the winning probe's budget is re-planned verbatim at
+/// build time, and losing tenants are re-probed on unchanged budgets —
+/// costs lookups, not tuning runs. Bit-identical to the uncached planner.
+pub fn water_fill_plan_with(
+    plat: &Platform,
+    specs: &[TenantSpec],
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<ClusterPlan> {
     check_specs(plat, specs)?;
     let ranked = plat.eps_by_rank();
 
@@ -183,7 +230,7 @@ pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterP
     }
     let mut predicted: Vec<f64> = Vec::with_capacity(specs.len());
     for (spec, budget) in specs.iter().zip(&budgets) {
-        let (_, p) = plan_budget(&spec.net, plat, budget, spec.shards)?;
+        let (_, p) = plan_budget_with(&spec.net, plat, budget, spec.shards, threads, cache)?;
         predicted.push(p);
     }
 
@@ -195,7 +242,7 @@ pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterP
             let mut cand = budgets[t].clone();
             cand.push(ep);
             cand.sort_unstable();
-            let (_, p) = plan_budget(&spec.net, plat, &cand, spec.shards)?;
+            let (_, p) = plan_budget_with(&spec.net, plat, &cand, spec.shards, threads, cache)?;
             let gain = spec.weight * (p - predicted[t]);
             let better = match best {
                 None => true,
@@ -218,7 +265,7 @@ pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterP
             }
         }
     }
-    build_plan(plat, specs, budgets, "water-fill")
+    build_plan(plat, specs, budgets, "water-fill", threads, cache)
 }
 
 /// Co-plan the platform across all tenants.
@@ -228,9 +275,27 @@ pub fn water_fill_plan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterP
 /// returns whichever scores higher — water-filling on ties. The returned
 /// plan is therefore **never worse than greedy first-come allocation** by
 /// construction; [`ClusterPlan::strategy`] records which side won.
+///
+/// Runs through a run-local [`PlanCache`] shared by both strategies and a
+/// core-sized worker pool ([`plan_shards_with`] tunes candidate partitions
+/// in parallel with a deterministic reduction), so multi-tenant co-plan
+/// startup scales with cores while remaining a pure function of its
+/// inputs. Callers that co-plan repeatedly (periodic re-planning, plan
+/// sweeps) should hold their own cache and call [`coplan_with`].
 pub fn coplan(plat: &Platform, specs: &[TenantSpec]) -> Result<ClusterPlan> {
-    let wf = water_fill_plan(plat, specs)?;
-    let gd = greedy_plan(plat, specs)?;
+    coplan_with(plat, specs, crate::serve::sweep::available_threads(), &PlanCache::new())
+}
+
+/// [`coplan`] with an explicit subset-tuning memo and worker budget;
+/// results are bit-identical for any `threads`/cache state.
+pub fn coplan_with(
+    plat: &Platform,
+    specs: &[TenantSpec],
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<ClusterPlan> {
+    let wf = water_fill_plan_with(plat, specs, threads, cache)?;
+    let gd = greedy_plan_with(plat, specs, threads, cache)?;
     Ok(if wf.objective() >= gd.objective() { wf } else { gd })
 }
 
@@ -352,6 +417,49 @@ mod tests {
                 assert_eq!(ca, cb);
             }
         }
+    }
+
+    #[test]
+    fn cached_and_parallel_coplan_match_uncached_bitwise() {
+        let plat = configs::c2();
+        let specs = vec![
+            spec("heavy", networks::synthnet(), 2.0, 2),
+            spec("light", networks::synthnet_small(), 1.0, 1),
+        ];
+        let baseline = coplan_with(&plat, &specs, 1, &PlanCache::new()).unwrap();
+        let cache = PlanCache::new();
+        let cold = coplan_with(&plat, &specs, 4, &cache).unwrap();
+        let misses_after_cold = cache.stats().misses;
+        let warm = coplan_with(&plat, &specs, 4, &cache).unwrap();
+        assert!(
+            cache.stats().misses == misses_after_cold,
+            "warm co-plan must be pure cache hits"
+        );
+        assert!(cache.stats().hits > 0, "water-filling re-probes must hit the memo");
+        for (what, plan) in [("cold", &cold), ("warm", &warm)] {
+            crate::testutil::same_cluster_plan(plan, &baseline)
+                .unwrap_or_else(|e| panic!("{what}: {e}"));
+        }
+    }
+
+    #[test]
+    fn water_filling_reprobes_hit_the_cache() {
+        // the motivating pathology: one coplan() run used to re-tune the
+        // same (tenant, budget) subsets dozens of times; through the memo
+        // the duplicate probes must all be hits
+        let plat = configs::c5();
+        let specs = vec![
+            spec("a", networks::synthnet(), 2.0, 2),
+            spec("b", networks::alexnet(), 1.0, 2),
+            spec("c", networks::synthnet_small(), 1.0, 1),
+        ];
+        let cache = PlanCache::new();
+        coplan_with(&plat, &specs, 1, &cache).unwrap();
+        let s = cache.stats();
+        assert!(
+            s.hits > s.misses,
+            "a 3-tenant C5 co-plan must hit the memo more than it tunes: {s:?}"
+        );
     }
 
     #[test]

@@ -22,4 +22,6 @@ pub mod autoscale;
 pub mod coplan;
 
 pub use autoscale::{AutoscaleOptions, ReplicaState, ScaleEvent};
-pub use coplan::{coplan, greedy_plan, water_fill_plan, ClusterPlan, TenantAllocation};
+pub use coplan::{
+    coplan, coplan_with, greedy_plan, water_fill_plan, ClusterPlan, TenantAllocation,
+};

@@ -54,7 +54,7 @@ pub use cluster::{AutoscaleOptions, ClusterPlan, ReplicaState, ScaleEvent};
 pub use engine::{
     serve, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport, TenantReport,
 };
-pub use shard::{plan_shards, BalancerPolicy, ShardPlan};
+pub use shard::{plan_shards, plan_shards_with, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};
 pub use sweep::{run_sweep, Scenario, ScenarioStats, SweepOutcome};
 pub use tenant::{AdmissionPolicy, TenantSpec};

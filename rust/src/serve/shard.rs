@@ -31,7 +31,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::explore::partition::{tune_partition, SubsetPlan};
+use crate::explore::partition::{tune_partition_cached, SubsetPlan};
+use crate::explore::PlanCache;
 use crate::model::Network;
 use crate::pipeline::PipelineConfig;
 use crate::platform::{EpId, Platform};
@@ -197,11 +198,36 @@ pub fn candidate_partitions(plat: &Platform, k: usize) -> Vec<(&'static str, Vec
 /// `plat` and return the best plan by total predicted throughput.
 ///
 /// Every shard count `1..=min(max_shards, n_eps)` and every candidate
-/// partition is tuned via [`tune_partition`]; ties keep the earlier
-/// (fewer-shard, earlier-strategy) plan, so results are deterministic and
+/// partition is tuned; ties keep the earlier (fewer-shard,
+/// earlier-strategy) plan, so results are deterministic and
 /// `plan_shards(net, plat, k+1)` never predicts below
 /// `plan_shards(net, plat, k)` (the candidate sets nest).
+///
+/// Convenience wrapper over [`plan_shards_with`] with a fresh (single-use)
+/// plan cache and no worker threads — callers that plan repeatedly (the
+/// co-planner, sweeps over shard budgets, benches) should hold a shared
+/// [`PlanCache`] and call [`plan_shards_with`] instead.
 pub fn plan_shards(net: &Network, plat: &Platform, max_shards: usize) -> Result<ShardPlan> {
+    plan_shards_with(net, plat, max_shards, 1, &PlanCache::new())
+}
+
+/// [`plan_shards`] with an explicit subset-tuning memo and a worker-thread
+/// budget.
+///
+/// The `(shard count, candidate partition)` pairs form a worklist tuned
+/// across up to `threads` workers (the same fixed-pool/atomic-counter
+/// pattern as [`crate::serve::sweep`]; `threads <= 1` stays inline), all
+/// sharing `cache`. The reduction then scans results **in the sequential
+/// worklist order** with the same strict-improvement comparison, so the
+/// chosen plan is bit-identical to the single-threaded, uncached search
+/// regardless of thread count or cache history.
+pub fn plan_shards_with(
+    net: &Network,
+    plat: &Platform,
+    max_shards: usize,
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<ShardPlan> {
     if max_shards == 0 {
         bail!("plan_shards: at least one shard required");
     }
@@ -209,22 +235,75 @@ pub fn plan_shards(net: &Network, plat: &Platform, max_shards: usize) -> Result<
         bail!("plan_shards: empty network");
     }
     let kmax = max_shards.min(plat.n_eps());
-    let mut best: Option<ShardPlan> = None;
+    let mut jobs: Vec<(&'static str, Vec<Vec<EpId>>)> = Vec::new();
     for k in 1..=kmax {
-        for (strategy, parts) in candidate_partitions(plat, k) {
-            let plans: Vec<SubsetPlan> = tune_partition(net, plat, &parts, SHARD_TUNE_EVALS);
-            let plan = ShardPlan {
-                predicted: plans.iter().map(|p| p.predicted_throughput).collect(),
-                configs: plans.into_iter().map(|p| p.config).collect(),
-                partitions: parts,
-                strategy,
-            };
-            if best.as_ref().map_or(true, |b| plan.total_predicted() > b.total_predicted()) {
-                best = Some(plan);
-            }
+        jobs.extend(candidate_partitions(plat, k));
+    }
+    // a fully-warm worklist is pure hash lookups — spawning a pool for it
+    // would cost orders of magnitude more than the lookups themselves
+    // (the common case for the co-planner's water-filling re-probes and
+    // any periodic re-plan), so only fan out when real tuning remains
+    let any_cold = |jobs: &[(&'static str, Vec<Vec<EpId>>)]| {
+        jobs.iter().any(|(_, parts)| {
+            parts.iter().any(|eps| !cache.contains(net, plat, eps, None, SHARD_TUNE_EVALS))
+        })
+    };
+    let tuned: Vec<Vec<SubsetPlan>> = if threads <= 1 || jobs.len() <= 1 || !any_cold(&jobs) {
+        jobs.iter()
+            .map(|(_, parts)| tune_partition_cached(net, plat, parts, SHARD_TUNE_EVALS, cache))
+            .collect()
+    } else {
+        tune_jobs_parallel(net, plat, &jobs, threads, cache)
+    };
+    let mut best: Option<ShardPlan> = None;
+    for ((strategy, parts), plans) in jobs.into_iter().zip(tuned) {
+        let plan = ShardPlan {
+            predicted: plans.iter().map(|p| p.predicted_throughput).collect(),
+            configs: plans.into_iter().map(|p| p.config).collect(),
+            partitions: parts,
+            strategy,
+        };
+        if best.as_ref().map_or(true, |b| plan.total_predicted() > b.total_predicted()) {
+            best = Some(plan);
         }
     }
     Ok(best.expect("kmax >= 1 evaluates at least one candidate"))
+}
+
+/// Fan the candidate worklist over a fixed thread pool (results land in
+/// per-job slots, so the caller's reduction order is input order).
+fn tune_jobs_parallel(
+    net: &Network,
+    plat: &Platform,
+    jobs: &[(&'static str, Vec<Vec<EpId>>)],
+    threads: usize,
+    cache: &PlanCache,
+) -> Vec<Vec<SubsetPlan>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<Vec<SubsetPlan>>> = Vec::new();
+    slots.resize_with(jobs.len(), || None);
+    let results = Mutex::new(slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(jobs.len()) {
+            s.spawn(|| loop {
+                let ix = next.fetch_add(1, Ordering::Relaxed);
+                if ix >= jobs.len() {
+                    break;
+                }
+                let plans =
+                    tune_partition_cached(net, plat, &jobs[ix].1, SHARD_TUNE_EVALS, cache);
+                results.lock().expect("plan worklist mutex poisoned")[ix] = Some(plans);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .expect("plan worklist mutex poisoned")
+        .into_iter()
+        .map(|o| o.expect("every job index was claimed exactly once"))
+        .collect()
 }
 
 /// Shisha evaluation budget per subset when the restricted space is too
@@ -362,6 +441,36 @@ mod tests {
         assert_eq!(a.configs, b.configs);
         assert_eq!(a.strategy, b.strategy);
         assert_eq!(a.total_predicted().to_bits(), b.total_predicted().to_bits());
+    }
+
+    fn assert_same_plan(a: &ShardPlan, b: &ShardPlan, what: &str) {
+        crate::testutil::same_shard_plan(a, b).unwrap_or_else(|e| panic!("{what}: {e}"));
+    }
+
+    #[test]
+    fn parallel_and_cached_planning_match_sequential_bitwise() {
+        let net = networks::synthnet();
+        let plat = configs::c5();
+        let baseline = plan_shards(&net, &plat, 4).unwrap();
+        // parallel worklist, fresh cache
+        let par = plan_shards_with(&net, &plat, 4, 4, &PlanCache::new()).unwrap();
+        assert_same_plan(&baseline, &par, "parallel");
+        // warm cache: second run answers every subset from the memo
+        let cache = PlanCache::new();
+        let cold = plan_shards_with(&net, &plat, 4, 1, &cache).unwrap();
+        let misses_after_cold = cache.stats().misses;
+        let warm = plan_shards_with(&net, &plat, 4, 1, &cache).unwrap();
+        assert_same_plan(&baseline, &cold, "cold cached");
+        assert_same_plan(&baseline, &warm, "warm cached");
+        assert_eq!(
+            cache.stats().misses,
+            misses_after_cold,
+            "warm run must add no tuning work"
+        );
+        assert!(cache.stats().hits > 0);
+        // parallel + warm cache together
+        let both = plan_shards_with(&net, &plat, 4, 4, &cache).unwrap();
+        assert_same_plan(&baseline, &both, "parallel warm");
     }
 
     #[test]

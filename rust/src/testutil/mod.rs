@@ -10,6 +10,8 @@ use crate::model::{Layer, Network};
 use crate::pipeline::PipelineConfig;
 use crate::platform::{CoreType, EpId, ExecutionPlace, MemoryClass, Platform};
 use crate::rng::Xoshiro256;
+use crate::serve::cluster::coplan::ClusterPlan;
+use crate::serve::shard::ShardPlan;
 
 /// Random-input generator with domain-specific combinators.
 pub struct Gen {
@@ -121,6 +123,72 @@ where
             panic!("property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}");
         }
     }
+}
+
+/// Bit-identity check between two shard plans — the planner fast path's
+/// contract ("memoization/parallelism never changes a chosen plan"), used
+/// by `tests/plan_cache.rs`, `benches/plan_speed.rs` and the shard/coplan
+/// unit tests so the criteria cannot drift apart. `Err` names the first
+/// divergence.
+pub fn same_shard_plan(a: &ShardPlan, b: &ShardPlan) -> Result<(), String> {
+    if a.strategy != b.strategy {
+        return Err(format!("strategy {} != {}", a.strategy, b.strategy));
+    }
+    if a.partitions != b.partitions {
+        return Err(format!("partitions {:?} != {:?}", a.partitions, b.partitions));
+    }
+    if a.configs != b.configs {
+        return Err("replica configs diverged".into());
+    }
+    if a.predicted.len() != b.predicted.len() {
+        return Err(format!(
+            "replica count {} != {}",
+            a.predicted.len(),
+            b.predicted.len()
+        ));
+    }
+    for (i, (x, y)) in a.predicted.iter().zip(&b.predicted).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("replica {i} predicted {x} != {y} (bits)"));
+        }
+    }
+    Ok(())
+}
+
+/// Bit-identity check between two cluster plans (see [`same_shard_plan`]).
+pub fn same_cluster_plan(a: &ClusterPlan, b: &ClusterPlan) -> Result<(), String> {
+    if a.strategy != b.strategy {
+        return Err(format!("strategy {} != {}", a.strategy, b.strategy));
+    }
+    if a.objective().to_bits() != b.objective().to_bits() {
+        return Err(format!(
+            "objective {} != {} (bits)",
+            a.objective(),
+            b.objective()
+        ));
+    }
+    if a.allocations.len() != b.allocations.len() {
+        return Err(format!(
+            "tenant count {} != {}",
+            a.allocations.len(),
+            b.allocations.len()
+        ));
+    }
+    for (t, (x, y)) in a.allocations.iter().zip(&b.allocations).enumerate() {
+        if x.eps != y.eps {
+            return Err(format!("tenant {t} budget {:?} != {:?}", x.eps, y.eps));
+        }
+        if x.placements != y.placements {
+            return Err(format!("tenant {t} placements diverged"));
+        }
+        if x.predicted.to_bits() != y.predicted.to_bits() {
+            return Err(format!("tenant {t} predicted {} != {} (bits)", x.predicted, y.predicted));
+        }
+        if x.weight.to_bits() != y.weight.to_bits() {
+            return Err(format!("tenant {t} weight {} != {} (bits)", x.weight, y.weight));
+        }
+    }
+    Ok(())
 }
 
 /// Assert two floats are close (relative + absolute tolerance).

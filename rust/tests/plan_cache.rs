@@ -1,0 +1,209 @@
+//! Plan-cache correctness acceptance tests (ISSUE 5).
+//!
+//! The planner fast path — memoized subset tuning, parallel candidate
+//! tuning, incremental stage-time evaluation — must never change a chosen
+//! plan. These tests pin that end to end:
+//!
+//! * warm (cache-hit) `plan_shards` / `coplan` results are **bit-identical**
+//!   to cold runs across randomized platforms and networks, at any thread
+//!   count;
+//! * the database scale is part of the cache key: a scaled-database probe
+//!   must miss (and a unit scale must not);
+//! * the Shisha-tuning walk driven by the incremental
+//!   [`shisha::pipeline::simulator::StageTimes`] produces the same best
+//!   configuration and the same bit-exact virtual-time accounting as the
+//!   evaluator reports (the per-step bit-identity of `StageTimes` itself
+//!   is property-tested in `pipeline::simulator`).
+
+use shisha::explore::partition::{tune_subset, tune_subset_scaled};
+use shisha::explore::PlanCache;
+use shisha::model::networks;
+use shisha::platform::configs;
+use shisha::serve::cluster::coplan::{coplan, coplan_with};
+use shisha::serve::shard::{plan_shards, plan_shards_with};
+use shisha::serve::{ArrivalProcess, TenantSpec};
+use shisha::testutil::{self, same_cluster_plan, same_shard_plan};
+
+#[test]
+fn warm_plan_shards_bit_identical_to_cold_randomized() {
+    // randomized platforms (2–6 EPs) and networks (4–14 layers): the
+    // cached, warm and parallel searches must reproduce the plain search
+    // bit-for-bit
+    testutil::check("warm plan_shards == cold", 0x9A5C_AC4E, 12, |g| {
+        let plat = g.platform(2, 7);
+        let net = g.network(4, 15);
+        let k = g.usize(1, plat.n_eps() + 1);
+        let cold = plan_shards(&net, &plat, k).map_err(|e| e.to_string())?;
+        let cache = PlanCache::new();
+        let first = plan_shards_with(&net, &plat, k, 1, &cache).map_err(|e| e.to_string())?;
+        same_shard_plan(&cold, &first)?;
+        let misses = cache.stats().misses;
+        // warm: every subset answered from the memo
+        let warm = plan_shards_with(&net, &plat, k, 1, &cache).map_err(|e| e.to_string())?;
+        same_shard_plan(&cold, &warm)?;
+        if cache.stats().misses != misses {
+            return Err("warm run re-tuned a memoized subset".into());
+        }
+        // parallel worklist over the same warm cache
+        let par = plan_shards_with(&net, &plat, k, 4, &cache).map_err(|e| e.to_string())?;
+        same_shard_plan(&cold, &par)
+    });
+}
+
+#[test]
+fn warm_coplan_bit_identical_to_cold_randomized() {
+    testutil::check("warm coplan == cold", 0xC0_91A4, 6, |g| {
+        let plat = g.platform(2, 6);
+        let n_tenants = g.usize(1, plat.n_eps().min(3) + 1);
+        let specs: Vec<TenantSpec> = (0..n_tenants)
+            .map(|i| {
+                let net = g.network(3, 10);
+                TenantSpec::new(
+                    format!("t{i}"),
+                    net,
+                    ArrivalProcess::Poisson { rate: 1.0 },
+                )
+                .with_weight(g.f64(0.5, 3.0))
+                .with_shards(g.usize(1, 3))
+            })
+            .collect();
+        let cold = coplan_with(&plat, &specs, 1, &PlanCache::new()).map_err(|e| e.to_string())?;
+        let cache = PlanCache::new();
+        let first = coplan_with(&plat, &specs, 2, &cache).map_err(|e| e.to_string())?;
+        let misses = cache.stats().misses;
+        let warm = coplan_with(&plat, &specs, 2, &cache).map_err(|e| e.to_string())?;
+        same_cluster_plan(&cold, &first)?;
+        same_cluster_plan(&cold, &warm)?;
+        if cache.stats().misses != misses {
+            return Err("warm co-plan re-tuned a memoized subset".into());
+        }
+        // the default entry point (own cache, core-sized pool) agrees too
+        let default_run = coplan(&plat, &specs).map_err(|e| e.to_string())?;
+        same_cluster_plan(&cold, &default_run)
+    });
+}
+
+#[test]
+fn perfdb_scaling_is_part_of_the_cache_key() {
+    let net = networks::synthnet();
+    let plat = configs::c5();
+    let cache = PlanCache::new();
+    let eps = [0usize, 4];
+    let unscaled = cache.tune_subset(&net, &plat, &eps, None, 400);
+    assert_eq!(cache.stats().misses, 1);
+
+    // scaled database: must miss, must match the uncached scaled tuner
+    let scale = [3.0, 1.0];
+    let scaled = cache.tune_subset(&net, &plat, &eps, Some(&scale), 400);
+    assert_eq!(
+        cache.stats().misses,
+        2,
+        "a scaled database must never hit an unscaled entry"
+    );
+    let scaled_cold = tune_subset_scaled(&net, &plat, &eps, Some(&scale), 400);
+    assert_eq!(scaled.config, scaled_cold.config);
+    assert_eq!(
+        scaled.predicted_throughput.to_bits(),
+        scaled_cold.predicted_throughput.to_bits()
+    );
+    assert_ne!(
+        scaled.predicted_throughput.to_bits(),
+        unscaled.predicted_throughput.to_bits(),
+        "crippling the FEP must change the prediction"
+    );
+
+    // re-probing either key is a pure hit
+    cache.tune_subset(&net, &plat, &eps, None, 400);
+    cache.tune_subset(&net, &plat, &eps, Some(&scale), 400);
+    // and unit factors canonicalise onto the unscaled entry
+    let unit = cache.tune_subset(&net, &plat, &eps, Some(&[1.0, 1.0]), 400);
+    assert_eq!(cache.stats().hits, 3);
+    assert_eq!(cache.stats().misses, 2);
+    assert_eq!(unit.config, unscaled.config);
+    assert_eq!(
+        unit.predicted_throughput.to_bits(),
+        unscaled.predicted_throughput.to_bits()
+    );
+}
+
+#[test]
+fn cached_subset_tuning_bit_identical_randomized() {
+    // the cache's unit of work, across randomized platforms/networks and
+    // both tuning paths (exhaustive for small subsets, Shisha fallback
+    // for large ones)
+    testutil::check("cached tune_subset == cold", 0x7A5E_754E, 15, |g| {
+        let plat = g.platform(2, 8);
+        let net = g.network(3, 16);
+        let n = g.usize(1, plat.n_eps() + 1);
+        // a deterministic-but-arbitrary subset of n EPs
+        let mut eps: Vec<usize> = (0..plat.n_eps()).collect();
+        g.rng().shuffle(&mut eps);
+        eps.truncate(n);
+        let cold = tune_subset(&net, &plat, &eps, 350);
+        let cache = PlanCache::new();
+        let via_cache = cache.tune_subset(&net, &plat, &eps, None, 350);
+        let rehit = cache.tune_subset(&net, &plat, &eps, None, 350);
+        for (what, plan) in [("miss", &via_cache), ("hit", &rehit)] {
+            if plan.config != cold.config {
+                return Err(format!("{what}: config diverged for subset {eps:?}"));
+            }
+            if plan.predicted_throughput.to_bits() != cold.predicted_throughput.to_bits() {
+                return Err(format!("{what}: predicted bits diverged for subset {eps:?}"));
+            }
+            if plan.exhaustive != cold.exhaustive {
+                return Err(format!("{what}: tuning path diverged for subset {eps:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shisha_tuning_walk_unchanged_by_incremental_evaluation() {
+    // tune() now walks on incremental StageTimes; the evaluator's virtual
+    // clock, trial count and best configuration must be exactly what the
+    // pre-fast-path implementation produced. The C5/SynthNet numbers here
+    // double as a fixed reference: identical across the full-recompute
+    // and incremental paths because both feed the evaluator bit-identical
+    // throughput/latency/bottleneck values.
+    use shisha::explore::shisha::{generate_seed, AssignmentChoice, BalancingChoice};
+    use shisha::explore::Evaluator;
+    use shisha::perfdb::{CostModel, PerfDb};
+    use shisha::pipeline::simulator;
+
+    let net = networks::synthnet();
+    let plat = configs::c5();
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let seed = generate_seed(&net, &plat, AssignmentChoice::RankW, 0);
+
+    let mut eval = Evaluator::new(&net, &plat, &db);
+    let walked = shisha::explore::shisha::tune(
+        &mut eval,
+        seed.config.clone(),
+        BalancingChoice::NlFep,
+        10,
+    );
+    let (best_cfg, best_tp) = eval.best().expect("tuned").clone();
+
+    // the walked and best configurations are honest evaluations
+    assert!(walked.validate(net.len(), &plat).is_ok());
+    assert!(best_cfg.validate(net.len(), &plat).is_ok());
+    assert_eq!(
+        best_tp.to_bits(),
+        simulator::throughput(&net, &plat, &db, &best_cfg).to_bits(),
+        "reported best must be the full recompute of the best config"
+    );
+    let seed_tp = simulator::throughput(&net, &plat, &db, &seed.config);
+    assert!(best_tp >= seed_tp);
+
+    // two runs remain bit-deterministic
+    let mut eval2 = Evaluator::new(&net, &plat, &db);
+    let walked2 =
+        shisha::explore::shisha::tune(&mut eval2, seed.config, BalancingChoice::NlFep, 10);
+    assert_eq!(walked, walked2);
+    assert_eq!(eval.n_evals(), eval2.n_evals());
+    assert_eq!(
+        eval.virtual_time_s().to_bits(),
+        eval2.virtual_time_s().to_bits()
+    );
+}

@@ -15,7 +15,13 @@ against the copy committed at HEAD:
 * a committed copy with zero cases is a placeholder (authored without a
   Rust toolchain): that emits a loud GitHub warning annotation telling the
   next committer to refresh it from the `bench-json` artifact, but does not
-  fail — refusing would wedge CI on the very commit that adds the check.
+  fail — refusing would wedge CI on the very commit that adds the check;
+* `BENCH_plan.json` additionally gets an envelope check on the fresh run:
+  the `aggregate` case must carry the planner fast-path metrics, the
+  warm-vs-cold `plan_speedup` must exceed 1 (the ISSUE-5 acceptance bar —
+  the bench itself asserts this before writing, so a violation here means
+  the file was produced some other way), and the cache hit rate must be a
+  valid fraction.
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -26,6 +32,39 @@ import subprocess
 import sys
 
 SCHEMA = "shisha-bench-v1"
+
+# Fresh-run envelope for BENCH_plan.json: aggregate metrics the planner
+# fast-path trajectory is meaningless without.
+PLAN_AGGREGATE_KEYS = {
+    "plan_speedup",
+    "shard_plan_speedup",
+    "parallel_speedup",
+    "cache_hit_rate",
+    "cache_entries",
+    "threads",
+    "warm_plans_per_s",
+}
+
+
+def check_plan_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_plan.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = PLAN_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    speedup = aggregate.get("plan_speedup")
+    if isinstance(speedup, (int, float)) and speedup <= 1.0:
+        problems.append(
+            f"{path}: warm-vs-cold plan_speedup {speedup} must exceed 1 "
+            "(memoized planning regressed to cold-plan cost)"
+        )
+    hit_rate = aggregate.get("cache_hit_rate")
+    if isinstance(hit_rate, (int, float)) and not 0.0 <= hit_rate <= 1.0:
+        problems.append(f"{path}: cache_hit_rate {hit_rate} is not a fraction")
+    return problems
 
 
 def load_fresh(path: str) -> dict:
@@ -62,6 +101,8 @@ def main(paths: list[str]) -> int:
         if not isinstance(fresh_cases, dict) or not fresh_cases:
             failures.append(f"{path}: fresh bench output has no cases — writer regressed?")
             continue
+        if path.rsplit("/", 1)[-1] == "BENCH_plan.json":
+            failures.extend(check_plan_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:
