@@ -1,0 +1,176 @@
+//! Flight-recorder overhead and replay throughput.
+//!
+//! Three questions, answered on the sharded MMPP storm (SynthNet on the
+//! 8-EP C5 platform, the same fixture the serving benches use):
+//!
+//! 1. **What does recording cost?** The same scenario runs live
+//!    (`serve`) and recorded (`serve_traced`); `record_overhead_frac` is
+//!    the fractional events/s lost to the capture tap. The acceptance
+//!    envelope (scripts/check_bench_schema.py) requires it below 1 and
+//!    the PR bar is ≤ 5% — the tap is two vector pushes per event.
+//! 2. **How fast does a trace replay?** `replay_full` re-simulates the
+//!    recorded inputs *and* verifies bit-identity event by event;
+//!    `replay_events_per_s` is its simulated-events-per-wall-second.
+//! 3. **How heavy is the format?** Encoded size per event plus
+//!    encode/decode throughput for the binary `.trace` round trip.
+//!
+//! log_hash equality between the live and recorded runs is asserted
+//! before anything is written, so the numbers can never come from
+//! divergent simulations. Results go to `BENCH_replay.json` at the
+//! repository root.
+//!
+//! ```sh
+//! cargo bench --bench replay_speed            # full profile
+//! cargo bench --bench replay_speed -- --quick # CI profile
+//! ```
+
+use std::time::Instant;
+
+use shisha::metrics::bench::JsonReport;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{
+    replay_full, replay_whatif, serve, serve_traced, shisha_config, ArrivalProcess,
+    BalancerPolicy, ServeOptions, TenantSpec, Trace, WhatIf,
+};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = if quick { 8.0 } else { 30.0 };
+    let reps = if quick { 3 } else { 5 };
+    println!(
+        "C5 ({} EPs), synthnet capacity {:.1} req/s; storm horizon {duration_s}s, {reps} rep(s)\n",
+        plat.n_eps(),
+        cap
+    );
+
+    let tenant = TenantSpec::new(
+        "storm",
+        net.clone(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: duration_s / 6.0,
+            mean_high_s: duration_s / 6.0,
+        },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(16)
+    .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+    .with_slo(200.0 / cap);
+    let tenants = vec![(tenant, config.clone())];
+    let opts = ServeOptions { duration_s, seed: 42, control_epoch_s: 5.0, ..Default::default() };
+
+    // 1. Recording overhead: best-of-reps wall time, live vs recorded.
+    // Best (not mean) because the comparison wants the noise floor out of
+    // both sides; the overhead fraction is a ratio of the two optima.
+    let mut live_wall = f64::INFINITY;
+    let mut live_hash = 0u64;
+    let mut n_events = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let report = serve(&plat, tenants.clone(), &opts).expect("live serve");
+        live_wall = live_wall.min(t0.elapsed().as_secs_f64());
+        live_hash = report.log_hash;
+        n_events = report.n_events;
+    }
+    let mut rec_wall = f64::INFINITY;
+    let mut trace: Option<Trace> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (report, tr) = serve_traced(&plat, tenants.clone(), &opts).expect("recorded serve");
+        rec_wall = rec_wall.min(t0.elapsed().as_secs_f64());
+        assert_eq!(
+            report.log_hash, live_hash,
+            "recording must not perturb the simulation (capture sits beside the hash fold)"
+        );
+        trace = Some(tr);
+    }
+    let trace = trace.expect("at least one recorded rep");
+    let live_ev_s = n_events as f64 / live_wall;
+    let rec_ev_s = n_events as f64 / rec_wall;
+    let overhead = 1.0 - rec_ev_s / live_ev_s;
+    println!(
+        "record: {n_events} events; live {live_ev_s:.3e} events/s, recorded {rec_ev_s:.3e} \
+         events/s, overhead {:.2}%",
+        overhead * 1e2
+    );
+
+    // 2. Replay throughput: full replay re-simulates and verifies.
+    let mut replay_wall = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let report = replay_full(&trace).expect("full replay");
+        replay_wall = replay_wall.min(t0.elapsed().as_secs_f64());
+        assert_eq!(report.log_hash, live_hash);
+    }
+    let replay_ev_s = n_events as f64 / replay_wall;
+    println!("replay: {replay_ev_s:.3e} events/s (full replay incl. bit-identity verification)");
+
+    // What-if replay on the captured arrivals at a doubled shard budget.
+    let what_if = WhatIf { shards: Some(4), ..Default::default() };
+    let t0 = Instant::now();
+    let wi = replay_whatif(&trace, &what_if).expect("what-if replay");
+    let whatif_wall = t0.elapsed().as_secs_f64();
+    let whatif_ev_s = wi.n_events as f64 / whatif_wall;
+    println!("what-if (shards=4): {} events, {whatif_ev_s:.3e} events/s", wi.n_events);
+
+    // 3. Format throughput: encode/decode the binary trace.
+    let t0 = Instant::now();
+    let bytes = trace.to_bytes();
+    let encode_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let back = Trace::from_bytes(&bytes).expect("decode trace");
+    let decode_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(back.summary.log_hash, live_hash);
+    let mb = bytes.len() as f64 / 1e6;
+    let bytes_per_event = bytes.len() as f64 / trace.events.len().max(1) as f64;
+    println!(
+        "format: {} bytes ({bytes_per_event:.1} B/event), encode {:.1} MB/s, decode {:.1} MB/s",
+        bytes.len(),
+        mb / encode_wall.max(1e-9),
+        mb / decode_wall.max(1e-9)
+    );
+
+    let mut json = JsonReport::new();
+    json.note(
+        "replay_speed: flight-recorder cost and replay throughput on the C5/synthnet sharded \
+         MMPP storm. record_overhead_frac = 1 - recorded/live events-per-wall-second (best of \
+         N reps each; the capture tap budget is <= 0.05); replay_events_per_s = simulated \
+         events per wall second of replay_full, which re-simulates AND verifies bit-identity; \
+         whatif_events_per_s covers the arrivals-only counterfactual at shards=4; the format \
+         case sizes the binary encoding. log_hash equality live-vs-recorded is asserted before \
+         anything is written.",
+    );
+    json.metric("record", "events", n_events as f64);
+    json.metric("record", "live_events_per_s", live_ev_s);
+    json.metric("record", "recorded_events_per_s", rec_ev_s);
+    json.metric("record", "record_overhead_frac", overhead);
+    json.metric("replay", "replay_events_per_s", replay_ev_s);
+    json.metric("replay", "replay_wall_s", replay_wall);
+    json.metric("whatif", "whatif_events_per_s", whatif_ev_s);
+    json.metric("whatif", "events", wi.n_events as f64);
+    json.metric("format", "trace_bytes", bytes.len() as f64);
+    json.metric("format", "bytes_per_event", bytes_per_event);
+    json.metric("format", "encode_mb_per_s", mb / encode_wall.max(1e-9));
+    json.metric("format", "decode_mb_per_s", mb / decode_wall.max(1e-9));
+    json.metric("aggregate", "record_overhead_frac", overhead);
+    json.metric("aggregate", "live_events_per_s", live_ev_s);
+    json.metric("aggregate", "recorded_events_per_s", rec_ev_s);
+    json.metric("aggregate", "replay_events_per_s", replay_ev_s);
+    json.metric("aggregate", "reps", f64::from(reps));
+
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_replay.json");
+    json.write(&bench_path).expect("write BENCH_replay.json");
+    println!("\nwrote {}", bench_path.display());
+}

@@ -131,6 +131,44 @@
 //! [`serve::ShardReport::scale_events`], so co-planned + autoscaled runs
 //! stay bit-deterministic and golden-pinnable like everything else.
 //!
+//! ## Flight recorder & replay
+//!
+//! Every serving run is a pure function of its inputs; the
+//! [`serve::trace`] subsystem turns that determinism into a product
+//! surface — record a run once, then re-simulate it exactly or
+//! counterfactually:
+//!
+//! * **capture** — [`serve::serve_traced`] (CLI: `serve --record
+//!   FILE.trace`) taps the engine's hashed event stream (arrivals,
+//!   completions, epoch ticks, scale transitions) plus explicit
+//!   control-plane records (warm re-tunes, co-plan allocations,
+//!   autoscale transitions) into a preallocated [`serve::Capture`] — two
+//!   vector pushes per event on the hot path, zero change to the
+//!   simulation itself (live `log_hash`es and golden fingerprints are
+//!   unaffected, pinned by `tests/trace_replay.rs`). The binary `.trace`
+//!   format is versioned (`SHTR` magic), varint-packed, and CRC-framed
+//!   per section; truncation or corruption anywhere decodes to a precise
+//!   error, never a panic;
+//! * **full replay** — [`serve::replay_full`] (CLI: `serve --replay
+//!   FILE.trace`) re-simulates the recorded inputs and *asserts*
+//!   bit-identity: same event stream, same `log_hash`, same per-tenant
+//!   counters, with the first divergence named. CI records and replays a
+//!   tidal autoscale scenario on every run;
+//! * **what-if replay** — [`serve::replay_whatif`] (CLI: `--what-if
+//!   shards=K,balancer=P,autoscale=on,...`) keeps only the captured
+//!   arrival streams (replayed verbatim through
+//!   [`serve::ArrivalProcess::Trace`], RNG-free) and re-simulates them
+//!   under overridden policy — "would 4 shards have held p99 through
+//!   yesterday's storm?" — with request conservation checked on every
+//!   run. `serve --sweep --replay FILE.trace` fans one recording across a
+//!   shard-count × balancer grid ([`serve::sweep::whatif_grid`]), and
+//!   `trace inspect FILE.trace` prints a recording's census without
+//!   re-simulating anything.
+//!
+//! `cargo bench --bench replay_speed` writes `BENCH_replay.json`
+//! (recording overhead vs live serving — the capture-tap budget is ≤ 5% —
+//! plus full-replay and what-if events/s and the format's bytes/event).
+//!
 //! ## Performance
 //!
 //! The serving event loop is the hottest code in the crate; its steady

@@ -4,6 +4,8 @@
 //!
 //! * `explore`    — run explorers against the perf database (paper mode)
 //! * `serve`      — multi-tenant discrete-event serving with online re-tuning
+//!                  (`--record`/`--replay` drive the flight recorder)
+//! * `trace`      — inspect a recorded `.trace` file
 //! * `run`        — live pipeline + online tuning over PJRT artifacts
 //! * `platforms`  — print Table 1 EP kinds and Table 3 configs C1–C5
 //! * `designspace`— design-space sizes (the paper's "explored %" denominator)
@@ -30,7 +32,10 @@ use shisha::perfdb::{CostModel, PerfDb};
 use shisha::pipeline::space;
 use shisha::platform::configs;
 use shisha::runtime::Manifest;
-use shisha::serve::{AdmissionPolicy, ArrivalProcess, ServeOptions, TenantSpec};
+use shisha::serve::{
+    replay_full, replay_whatif, AdmissionPolicy, ArrivalProcess, ServeOptions, TenantSpec, Trace,
+    WhatIf,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +50,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     match args.command.as_deref() {
         Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("run") => cmd_run(&args),
         Some("platforms") => cmd_platforms(),
         Some("designspace") => cmd_designspace(&args),
@@ -54,7 +60,7 @@ fn run(argv: Vec<String>) -> Result<()> {
             println!("shisha {}", shisha::VERSION);
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?} (try: explore, serve, run, platforms, designspace, stream, seed, version)"),
+        Some(other) => bail!("unknown subcommand {other:?} (try: explore, serve, trace, run, platforms, designspace, stream, seed, version)"),
         None => {
             print_usage();
             Ok(())
@@ -75,6 +81,8 @@ fn print_usage() {
                        [--shards K] [--balancer rr|jsq|wtp]\n\
                        [--coplan] [--autoscale] [--min-shards K]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
+                       [--record FILE.trace]\n\
+                       [--replay FILE.trace [--what-if shards=K,balancer=P,..]]\n\
                        SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
                              | piecewise:R@T,R@T,.. | trace:FILE\n\
                        --shards K replicates each tenant's pipeline over up to K\n\
@@ -85,16 +93,27 @@ fn print_usage() {
                        (weighted water-filling, never worse than greedy first-come);\n\
                        --autoscale activates/drains/parks replicas with the load at\n\
                        every control epoch (floor --min-shards, default 1)\n\
+                       --record captures the run into a binary flight-recorder\n\
+                       trace; --replay re-simulates one: bit-identical full replay\n\
+                       by default (errors on any divergence), or an arrivals-only\n\
+                       counterfactual with --what-if overrides (keys: shards,\n\
+                       balancer, autoscale, min-shards, coplan)\n\
            serve --sweep  parallel scenario grid: [--nets synthnet] [--platform c5]\n\
                        [--tenant-grid 1,2,4] [--rho-grid 0.3,0.7,1.2] [--seeds 42]\n\
                        [--shard-grid 1,2,4 | --autoscale-grid 1,2,4] [--balancer rr|jsq|wtp]\n\
                        [--threads N] [--duration S] [--epoch S] [--full-rescan]\n\
                        [--no-control] [--no-contention] [--csv FILE]\n\
+                       [--replay FILE.trace]\n\
                        --shard-grid swaps the tenant-count grid for a side-by-side\n\
                        shard-count comparison on an MMPP drift workload;\n\
                        --autoscale-grid compares static shard counts against the\n\
                        runtime autoscaler on an MMPP tidal workload (goodput and\n\
-                       EP-epochs per cell)\n\
+                       EP-epochs per cell);\n\
+                       --replay fans one recorded trace across a what-if policy\n\
+                       grid (--shard-grid shard counts x balancers) instead of\n\
+                       synthesizing workloads\n\
+           trace       inspect FILE.trace — print a recorded trace's inputs,\n\
+                       event census, per-tenant counters and control decisions\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
@@ -234,7 +253,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "no-control",
         "no-contention",
         "csv",
+        "record",
+        "replay",
+        "what-if",
     ])?;
+    if let Some(path) = args.get("replay") {
+        if args.get("record").is_some() {
+            bail!("--record and --replay are mutually exclusive");
+        }
+        return cmd_serve_replay(args, path);
+    }
+    if args.get("what-if").is_some() {
+        bail!("--what-if requires --replay FILE.trace");
+    }
     let n_tenants: usize = args.parsed_or("tenants", 2)?;
     if n_tenants == 0 {
         bail!("--tenants must be ≥ 1");
@@ -311,7 +342,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             opts.autoscale.min_shards
         );
     }
-    let report = shisha::serve::serve(&plat, tenants, &opts)?;
+    let report = if let Some(path) = args.get("record") {
+        let (report, trace) = shisha::serve::serve_traced(&plat, tenants, &opts)?;
+        trace.save(std::path::Path::new(path))?;
+        println!(
+            "recorded {} event(s) + {} control record(s) to {path} (log_hash {:016x})",
+            trace.events.len(),
+            trace.controls.len(),
+            report.log_hash
+        );
+        report
+    } else {
+        shisha::serve::serve(&plat, tenants, &opts)?
+    };
     let table =
         latency_table(report.tenants.iter().map(|t| t.latency_row(report.duration_s)));
     println!("\n{}", table.to_markdown());
@@ -366,6 +409,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --replay FILE`: full bit-identical replay by default (any
+/// divergence is a hard error), or an arrivals-only counterfactual when
+/// `--what-if key=value,..` overrides are given.
+fn cmd_serve_replay(args: &Args, path: &str) -> Result<()> {
+    let trace = Trace::load(std::path::Path::new(path))?;
+    print!("{}", trace.describe());
+    match args.get("what-if") {
+        Some(spec) => {
+            let what_if = WhatIf::parse(spec)?;
+            println!("what-if replay: {}", what_if.describe());
+            let report = replay_whatif(&trace, &what_if)?;
+            let mut table = Table::new([
+                "tenant",
+                "goodput recorded (req/s)",
+                "goodput what-if (req/s)",
+                "delta",
+                "shed recorded",
+                "shed what-if",
+            ]);
+            for (rec, t) in trace.summary.tenants.iter().zip(&report.tenants) {
+                let live = rec.slo_ok as f64 / trace.opts.duration_s;
+                let counterfactual = t.goodput(report.duration_s);
+                table.row([
+                    t.name.clone(),
+                    fnum(live, 2),
+                    fnum(counterfactual, 2),
+                    format!("{:+.2}", counterfactual - live),
+                    (rec.rejected + rec.dropped).to_string(),
+                    (t.rejected + t.dropped).to_string(),
+                ]);
+            }
+            println!("{}", table.to_markdown());
+            println!(
+                "{} events, fairness (Jain) {:.4}{}",
+                report.n_events,
+                report.fairness(),
+                if report.truncated { " [TRUNCATED at event cap]" } else { "" }
+            );
+        }
+        None => {
+            let report = replay_full(&trace)?;
+            println!(
+                "full replay OK: log_hash {:016x}, {} event(s) — bit-identical to the recording",
+                report.log_hash, report.n_events
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `trace` subcommand: `trace inspect FILE.trace` prints a recorded
+/// trace's summary without re-simulating anything.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    match args.positionals.first().map(String::as_str) {
+        Some("inspect") => {
+            let path = args
+                .positionals
+                .get(1)
+                .context("usage: shisha trace inspect FILE.trace")?;
+            let trace = Trace::load(std::path::Path::new(path))?;
+            print!("{}", trace.describe());
+            Ok(())
+        }
+        Some(other) => bail!("unknown trace action {other:?} (try: inspect)"),
+        None => bail!("usage: shisha trace inspect FILE.trace"),
+    }
+}
+
 /// Parse a comma-separated list of values (`"1,2,4"`).
 fn parse_list<T: std::str::FromStr>(key: &str, s: &str) -> Result<Vec<T>>
 where
@@ -408,6 +520,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "no-control",
         "no-contention",
         "csv",
+        "replay",
     ])?;
     let plat = configs::by_name(args.get_or("platform", "c5")).context("unknown platform")?;
     let net_names: Vec<String> = args
@@ -461,31 +574,39 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
     }
     let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
-    for net_name in &net_names {
-        let net = networks::by_name(net_name)
-            .with_context(|| format!("unknown network {net_name:?}"))?;
-        let config = shisha::serve::shisha_config(&net, &plat);
-        println!("  {}: Shisha config {}", net.name, config.describe());
-        if let Some(counts) = &autoscale_grid {
-            // the tidal comparison wants many control epochs per dwell
-            // phase; default the epoch to horizon/40 unless set explicitly
-            let mut auto_base = base.clone();
-            if args.get("epoch").is_none() {
-                auto_base.control_epoch_s = auto_base.duration_s / 40.0;
-            }
-            scenarios.extend(sweep::autoscale_grid(
-                &plat,
-                &net,
-                &config,
-                counts,
-                balancer,
-                &rho_grid,
-                &seeds,
-                &auto_base,
-            ));
+    if let Some(path) = args.get("replay") {
+        // what-if grid over one captured trace: shard counts × balancers,
+        // every cell re-simulating the same recorded arrival streams
+        if autoscale_grid.is_some() {
+            bail!("--replay and --autoscale-grid are mutually exclusive");
+        }
+        let trace = Trace::load(std::path::Path::new(path))?;
+        print!("{}", trace.describe());
+        let counts = shard_grid.clone().unwrap_or_else(|| vec![1, 2, 4]);
+        let balancers: Vec<shisha::serve::BalancerPolicy> = if args.get("balancer").is_some() {
+            vec![balancer]
         } else {
-            match &shard_grid {
-                Some(counts) => scenarios.extend(sweep::shard_grid(
+            vec![
+                shisha::serve::BalancerPolicy::RoundRobin,
+                shisha::serve::BalancerPolicy::JoinShortestQueue,
+                shisha::serve::BalancerPolicy::WeightedThroughput,
+            ]
+        };
+        scenarios = sweep::whatif_grid(&trace, &counts, &balancers)?;
+    } else {
+        for net_name in &net_names {
+            let net = networks::by_name(net_name)
+                .with_context(|| format!("unknown network {net_name:?}"))?;
+            let config = shisha::serve::shisha_config(&net, &plat);
+            println!("  {}: Shisha config {}", net.name, config.describe());
+            if let Some(counts) = &autoscale_grid {
+                // the tidal comparison wants many control epochs per dwell
+                // phase; default the epoch to horizon/40 unless set explicitly
+                let mut auto_base = base.clone();
+                if args.get("epoch").is_none() {
+                    auto_base.control_epoch_s = auto_base.duration_s / 40.0;
+                }
+                scenarios.extend(sweep::autoscale_grid(
                     &plat,
                     &net,
                     &config,
@@ -493,17 +614,30 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     balancer,
                     &rho_grid,
                     &seeds,
-                    &base,
-                )),
-                None => scenarios.extend(sweep::load_grid(
-                    &plat,
-                    &net,
-                    &config,
-                    &tenant_grid,
-                    &rho_grid,
-                    &seeds,
-                    &base,
-                )),
+                    &auto_base,
+                ));
+            } else {
+                match &shard_grid {
+                    Some(counts) => scenarios.extend(sweep::shard_grid(
+                        &plat,
+                        &net,
+                        &config,
+                        counts,
+                        balancer,
+                        &rho_grid,
+                        &seeds,
+                        &base,
+                    )),
+                    None => scenarios.extend(sweep::load_grid(
+                        &plat,
+                        &net,
+                        &config,
+                        &tenant_grid,
+                        &rho_grid,
+                        &seeds,
+                        &base,
+                    )),
+                }
             }
         }
     }

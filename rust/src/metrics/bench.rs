@@ -299,6 +299,7 @@ mod tests {
             "BENCH_fig4.json",
             "BENCH_fig5.json",
             "BENCH_plan.json",
+            "BENCH_replay.json",
         ] {
             let path = root.join(name);
             let s = std::fs::read_to_string(&path)

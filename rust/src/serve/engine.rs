@@ -115,6 +115,7 @@ use super::cluster::coplan;
 use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
+use super::trace::{Capture, ControlKind, ControlRecord, Trace};
 
 /// How the engine settles a tenant's pipeline after each event.
 ///
@@ -508,6 +509,9 @@ struct Shared {
     log_hash: u64,
     log: Vec<String>,
     record_log: bool,
+    /// Flight-recorder sink ([`super::trace`]); `None` outside recorded
+    /// runs, so the unrecorded hot path pays one branch per event.
+    capture: Option<Capture>,
 }
 
 impl Shared {
@@ -523,9 +527,21 @@ impl Shared {
                 self.log_hash = self.log_hash.wrapping_mul(0x0000_0100_0000_01B3);
             }
         }
+        if let Some(cap) = &mut self.capture {
+            cap.event(t, tag, a, b);
+        }
         if self.record_log {
             let line = text();
             self.log.push(line);
+        }
+    }
+
+    /// Record a control-plane decision beside (not inside) the hashed
+    /// event stream: recorded runs keep the exact `log_hash` of
+    /// unrecorded ones.
+    fn control(&mut self, rec: ControlRecord) {
+        if let Some(cap) = &mut self.capture {
+            cap.control(rec);
         }
     }
 }
@@ -1119,7 +1135,16 @@ fn epoch_tick(
         t.retune_trials += n;
         t.epochs_since_retune = 0;
         retuned = true;
-        if best != t.config {
+        let changed = best != t.config;
+        sh.control(ControlRecord {
+            t_s: now,
+            kind: ControlKind::Retune,
+            tenant: ti as u32,
+            shard: shard_ix as u32,
+            a: trials,
+            b: u64::from(changed),
+        });
+        if changed {
             apply_reconfig(
                 spec,
                 t,
@@ -1184,6 +1209,14 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
             sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
                 format!("{now:.6} scale {} r{si} parked", t.spec.name)
             });
+            sh.control(ControlRecord {
+                t_s: now,
+                kind: ControlKind::Scale,
+                tenant: ti as u32,
+                shard: si as u32,
+                a: 0,
+                b: ReplicaState::Parked.code(),
+            });
         }
     }
     // 2. observe the epoch that just closed
@@ -1240,6 +1273,14 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
                     format!("{now:.6} scale {} r{si} active", t.spec.name)
                 });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: ReplicaState::Active.code(),
+                });
             }
             for srt in &mut t.shards {
                 srt.credit = 0.0;
@@ -1276,6 +1317,14 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
                 sh.note(now, 6, pack_ts(ti, si), to.code(), || {
                     format!("{now:.6} scale {} r{si} {}", t.spec.name, to.name())
                 });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: to.code(),
+                });
                 for srt in &mut t.shards {
                     srt.credit = 0.0;
                 }
@@ -1303,6 +1352,36 @@ pub fn serve(
     tenants: Vec<(TenantSpec, PipelineConfig)>,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
+    let (report, _) = serve_inner(plat, tenants, opts, None)?;
+    Ok(report)
+}
+
+/// [`serve`] with the flight recorder on: runs the identical simulation
+/// (same `log_hash` — capture taps the event funnel without adding hashed
+/// events) and returns the report together with the assembled
+/// [`Trace`], ready to [`Trace::save`] and later [`super::replay_full`]
+/// or [`super::replay_whatif`].
+pub fn serve_traced(
+    plat: &Platform,
+    tenants: Vec<(TenantSpec, PipelineConfig)>,
+    opts: &ServeOptions,
+) -> Result<(ServeReport, Trace)> {
+    let inputs = tenants.clone();
+    let (report, capture) = serve_inner(plat, tenants, opts, Some(Capture::new()))?;
+    let capture = capture.unwrap_or_default();
+    let trace = Trace::assemble(plat.clone(), inputs, opts.clone(), capture, &report);
+    Ok((report, trace))
+}
+
+/// The engine body behind [`serve`] and [`serve_traced`]: simulate, and
+/// when `capture` is `Some`, record every hashed event and control-plane
+/// decision into it.
+fn serve_inner(
+    plat: &Platform,
+    tenants: Vec<(TenantSpec, PipelineConfig)>,
+    opts: &ServeOptions,
+    mut capture: Option<Capture>,
+) -> Result<(ServeReport, Option<Capture>)> {
     if tenants.is_empty() {
         bail!("serve: at least one tenant required");
     }
@@ -1326,6 +1405,18 @@ pub fn serve(
     } else {
         None
     };
+    if let (Some(cap), Some(plan)) = (&mut capture, &cluster_plan) {
+        for (ti, alloc) in plan.allocations.iter().enumerate() {
+            cap.control(ControlRecord {
+                t_s: 0.0,
+                kind: ControlKind::Coplan,
+                tenant: ti as u32,
+                shard: alloc.placements.len() as u32,
+                a: alloc.eps.len() as u64,
+                b: alloc.predicted.to_bits(),
+            });
+        }
+    }
     let mut rts: Vec<TenantRt> = Vec::with_capacity(tenants.len());
     for (ti, (spec, config)) in tenants.into_iter().enumerate() {
         spec.validate(plat, &config)?;
@@ -1445,6 +1536,7 @@ pub fn serve(
         log_hash: 0xCBF2_9CE4_8422_2325,
         log: Vec::new(),
         record_log: opts.record_log,
+        capture,
     };
 
     for (ti, t) in rts.iter_mut().enumerate() {
@@ -1615,15 +1707,17 @@ pub fn serve(
         }
     }
 
+    let capture = sh.capture.take();
     let tenants = rts.into_iter().map(tenant_report).collect();
-    Ok(ServeReport {
+    let report = ServeReport {
         duration_s: opts.duration_s,
         tenants,
         n_events: sh.n_events,
         log_hash: sh.log_hash,
         event_log: sh.log,
         truncated,
-    })
+    };
+    Ok((report, capture))
 }
 
 /// Fold a tenant runtime into its report: per-replica reports (configs

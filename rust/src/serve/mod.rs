@@ -34,7 +34,13 @@
 //! * [`sweep`] — parallel scenario sweeps: independent serving scenarios
 //!   fanned out across CPU cores with order- and thread-count-invariant
 //!   results (`shisha serve --sweep`), including side-by-side shard-count
-//!   grids ([`sweep::shard_grid`], `shisha serve --sweep --shard-grid`);
+//!   grids ([`sweep::shard_grid`], `shisha serve --sweep --shard-grid`)
+//!   and what-if grids over one captured trace ([`sweep::whatif_grid`]);
+//! * [`trace`] — the flight recorder: compact binary trace capture
+//!   ([`serve_traced`], `serve --record`), bit-identical deterministic
+//!   replay ([`replay_full`], `serve --replay`) and arrivals-only what-if
+//!   re-simulation under a different policy ([`replay_whatif`],
+//!   `--what-if shards=K,balancer=P,...`);
 //! * [`slo`] — streaming latency-quantile sketch, goodput and Jain
 //!   fairness.
 //!
@@ -48,16 +54,21 @@ pub mod shard;
 pub mod slo;
 pub mod sweep;
 pub mod tenant;
+pub mod trace;
 
 pub use arrivals::{ArrivalProcess, ArrivalSampler};
 pub use cluster::{AutoscaleOptions, ClusterPlan, ReplicaState, ScaleEvent};
 pub use engine::{
-    serve, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport, TenantReport,
+    serve, serve_traced, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport,
+    TenantReport,
 };
 pub use shard::{plan_shards, plan_shards_with, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};
-pub use sweep::{run_sweep, Scenario, ScenarioStats, SweepOutcome};
+pub use sweep::{run_sweep, whatif_grid, Scenario, ScenarioStats, SweepOutcome};
 pub use tenant::{AdmissionPolicy, TenantSpec};
+pub use trace::{
+    replay_full, replay_whatif, Capture, ControlKind, ControlRecord, Trace, TraceEvent, WhatIf,
+};
 
 use crate::explore::shisha::{ShishaExplorer, ShishaOptions};
 use crate::explore::{EvalOptions, Evaluator, Explorer};

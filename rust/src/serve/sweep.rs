@@ -34,6 +34,7 @@ use super::engine::{serve, ServeOptions, ServeReport};
 use super::shard::BalancerPolicy;
 use super::slo::QuantileSketch;
 use super::tenant::TenantSpec;
+use super::trace::{whatif_inputs, Trace, WhatIf};
 
 /// One independent serving scenario: a platform, a tenant mix, and the
 /// engine options to run them under.
@@ -352,6 +353,35 @@ pub fn autoscale_grid(
         }
     }
     out
+}
+
+/// Fan one captured flight-recorder trace across a what-if policy grid:
+/// every `shard_counts` × `balancers` cell re-simulates the trace's
+/// captured arrival streams ([`whatif_inputs`]) under that policy. The
+/// returned scenarios plug straight into [`run_sweep`] — counterfactual
+/// cells run in parallel on the existing thread pool, so "would 3 shards
+/// have held p99 through yesterday's storm?" costs one pass over the
+/// grid.
+pub fn whatif_grid(
+    trace: &Trace,
+    shard_counts: &[usize],
+    balancers: &[BalancerPolicy],
+) -> Result<Vec<Scenario>> {
+    let mut out = Vec::with_capacity(shard_counts.len() * balancers.len());
+    for &k in shard_counts {
+        for &balancer in balancers {
+            let what_if =
+                WhatIf { shards: Some(k), balancer: Some(balancer), ..Default::default() };
+            let (plat, tenants, opts) = whatif_inputs(trace, &what_if)?;
+            out.push(Scenario {
+                name: format!("whatif shards={k} {}", balancer.name()),
+                plat,
+                tenants,
+                opts,
+            });
+        }
+    }
+    Ok(out)
 }
 
 fn run_one(sc: &Scenario) -> SweepOutcome {

@@ -1,0 +1,390 @@
+//! Binary trace format: varint primitives, CRC-framed sections, records.
+//!
+//! A `.trace` file is a magic/version header followed by sections in a
+//! fixed order:
+//!
+//! ```text
+//! "SHTR" [version u8]
+//! [section id u8] [payload len varint] [payload bytes] [crc32 u32 LE]
+//! ...
+//! ```
+//!
+//! Payload integers are LEB128 varints, floats are the raw 8 LE bytes of
+//! [`f64::to_bits`] (so replay inputs survive the round-trip bit-exactly),
+//! strings are a varint length followed by UTF-8. Each section's payload
+//! carries its own CRC-32 (IEEE), so truncation or corruption anywhere in
+//! the file is caught with a precise error instead of a garbage replay.
+//!
+//! Everything here is allocation-light and panic-free on malformed input:
+//! the [`Reader`] bounds-checks every access and returns `anyhow` errors.
+
+use anyhow::{bail, Context, Result};
+
+/// File magic: the first four bytes of every trace.
+pub const MAGIC: [u8; 4] = *b"SHTR";
+
+/// Current format version (bumped on any incompatible layout change).
+pub const VERSION: u8 = 1;
+
+/// Section id: serialized serve inputs (platform, tenants, options).
+pub const SEC_INPUTS: u8 = 1;
+/// Section id: the hashed engine event stream.
+pub const SEC_EVENTS: u8 = 2;
+/// Section id: control-plane decision records.
+pub const SEC_CONTROLS: u8 = 3;
+/// Section id: run summary (log hash, event count, per-tenant counters).
+pub const SEC_SUMMARY: u8 = 4;
+
+/// One hashed engine event, exactly the tuple folded into
+/// [`crate::serve::ServeReport::log_hash`]: `(tag, a, b, t)`.
+///
+/// The tag space mirrors the engine's `note()` calls:
+///
+/// | tag | meaning      | `a`                    | `b`            |
+/// |-----|--------------|------------------------|----------------|
+/// | 1   | arrival      | tenant « 8 \| shard    | request id     |
+/// | 2   | stale done   | tenant « 8 \| shard    | stage          |
+/// | 3   | stage done   | tenant « 8 \| shard    | stage          |
+/// | 4   | resume       | tenant « 8 \| shard    | 0              |
+/// | 5   | epoch tick   | 0                      | 0              |
+/// | 6   | scale change | tenant « 8 \| shard    | replica state  |
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Simulated time of the event, seconds.
+    pub t_s: f64,
+    /// Event tag (see the table above).
+    pub tag: u64,
+    /// First payload word.
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+}
+
+// Bit-exact equality: full replay asserts the recorded and re-simulated
+// streams match byte for byte, so `t_s` must compare via `to_bits` (the
+// derived f64 PartialEq would treat -0.0 == 0.0 and NaN != NaN).
+impl PartialEq for TraceEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_s.to_bits() == other.t_s.to_bits()
+            && self.tag == other.tag
+            && self.a == other.a
+            && self.b == other.b
+    }
+}
+
+impl TraceEvent {
+    /// Tenant index for tags that pack one (1, 2, 3, 4, 6).
+    pub fn tenant(&self) -> usize {
+        (self.a >> 8) as usize
+    }
+
+    /// Shard index for tags that pack one (1, 2, 3, 4, 6).
+    pub fn shard(&self) -> usize {
+        (self.a & 0xFF) as usize
+    }
+
+    /// Human-readable tag name (for `trace inspect`).
+    pub fn tag_name(tag: u64) -> &'static str {
+        match tag {
+            1 => "arrival",
+            2 => "stale-done",
+            3 => "stage-done",
+            4 => "resume",
+            5 => "epoch",
+            6 => "scale",
+            _ => "unknown",
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, poly `0xEDB88320`), bitwise — no table, called once
+/// per section so speed is irrelevant next to integrity.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &byte in bytes {
+        crc ^= u32::from(byte);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Append a LEB128 varint.
+pub fn put_varint(out: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let byte = (x & 0x7F) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append an `f64` as the raw LE bytes of its bit pattern.
+pub fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+/// Append a string as varint length + UTF-8 bytes.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Frame a section: id byte, varint payload length, payload, CRC-32.
+pub fn put_section(out: &mut Vec<u8>, id: u8, payload: &[u8]) {
+    out.push(id);
+    put_varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+/// Bounds-checked cursor over a byte buffer. Every accessor returns a
+/// descriptive error instead of panicking, so a truncated or corrupted
+/// trace is rejected cleanly.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when the cursor has consumed the whole buffer.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Next raw byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        let Some(&byte) = self.buf.get(self.pos) else {
+            bail!("trace truncated at byte {} (expected 1 more byte)", self.pos);
+        };
+        self.pos += 1;
+        Ok(byte)
+    }
+
+    /// Next `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(slice) = self.buf.get(self.pos..self.pos + n) else {
+            bail!(
+                "trace truncated at byte {} (expected {n} more bytes, have {})",
+                self.pos,
+                self.remaining()
+            );
+        };
+        self.pos += n;
+        Ok(slice)
+    }
+
+    /// Next LEB128 varint.
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut x: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.u8().context("reading varint")?;
+            x |= u64::from(byte & 0x7F) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(x);
+            }
+        }
+        bail!("varint longer than 10 bytes at offset {}", self.pos)
+    }
+
+    /// Next `f64` (8 LE bytes of the bit pattern).
+    pub fn f64(&mut self) -> Result<f64> {
+        let raw = self.bytes(8).context("reading f64")?;
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(raw);
+        Ok(f64::from_bits(u64::from_le_bytes(arr)))
+    }
+
+    /// Next `u32` (4 LE bytes).
+    pub fn u32(&mut self) -> Result<u32> {
+        let raw = self.bytes(4).context("reading u32")?;
+        let mut arr = [0u8; 4];
+        arr.copy_from_slice(raw);
+        Ok(u32::from_le_bytes(arr))
+    }
+
+    /// Next string (varint length + UTF-8).
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.varint().context("reading string length")?;
+        let raw = self.bytes(len as usize).context("reading string bytes")?;
+        String::from_utf8(raw.to_vec()).context("trace string is not UTF-8")
+    }
+
+    /// Consume a framed section, verifying id and CRC; returns a reader
+    /// over the payload.
+    pub fn take_section(&mut self, want_id: u8) -> Result<Reader<'a>> {
+        let id = self.u8().context("reading section id")?;
+        if id != want_id {
+            bail!("expected section id {want_id}, found {id}");
+        }
+        let len = self.varint().context("reading section length")? as usize;
+        let payload = self
+            .bytes(len)
+            .with_context(|| format!("reading section {want_id} payload ({len} bytes)"))?;
+        let stored = self
+            .u32()
+            .with_context(|| format!("reading section {want_id} checksum"))?;
+        let actual = crc32(payload);
+        if stored != actual {
+            bail!(
+                "section {want_id} checksum mismatch: stored {stored:#010x}, computed {actual:#010x} — trace is corrupted"
+            );
+        }
+        Ok(Reader::new(payload))
+    }
+}
+
+/// Serialize one event (varint tag/a/b, raw f64 time).
+pub fn put_event(out: &mut Vec<u8>, ev: &TraceEvent) {
+    put_varint(out, ev.tag);
+    put_varint(out, ev.a);
+    put_varint(out, ev.b);
+    put_f64(out, ev.t_s);
+}
+
+/// Deserialize one event.
+pub fn get_event(r: &mut Reader<'_>) -> Result<TraceEvent> {
+    let tag = r.varint().context("reading event tag")?;
+    let a = r.varint().context("reading event a")?;
+    let b = r.varint().context("reading event b")?;
+    let t_s = r.f64().context("reading event time")?;
+    Ok(TraceEvent { t_s, tag, a, b })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn varint_round_trips_boundaries() {
+        let cases = [0, 1, 127, 128, 255, 256, 16383, 16384, u64::MAX / 2, u64::MAX];
+        let mut buf = Vec::new();
+        for &x in &cases {
+            put_varint(&mut buf, x);
+        }
+        let mut r = Reader::new(&buf);
+        for &x in &cases {
+            assert_eq!(r.varint().unwrap(), x);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn varint_round_trips_randomized() {
+        let mut rng = Xoshiro256::seed_from(0xF0F0);
+        let xs: Vec<u64> = (0..500)
+            .map(|_| {
+                let shift = rng.gen_range(0, 64);
+                (rng.gen_f64() * 1e18) as u64 >> shift
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for &x in &xs {
+            put_varint(&mut buf, x);
+        }
+        let mut r = Reader::new(&buf);
+        for &x in &xs {
+            assert_eq!(r.varint().unwrap(), x);
+        }
+    }
+
+    #[test]
+    fn f64_round_trips_bit_exactly() {
+        let cases = [0.0, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NAN, f64::INFINITY];
+        let mut buf = Vec::new();
+        for &x in &cases {
+            put_f64(&mut buf, x);
+        }
+        let mut r = Reader::new(&buf);
+        for &x in &cases {
+            assert_eq!(r.f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn strings_round_trip() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "");
+        put_str(&mut buf, "synthnet");
+        put_str(&mut buf, "ünïcødé ✓");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.str().unwrap(), "");
+        assert_eq!(r.str().unwrap(), "synthnet");
+        assert_eq!(r.str().unwrap(), "ünïcødé ✓");
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn sections_verify_and_reject_corruption() {
+        let mut buf = Vec::new();
+        put_section(&mut buf, SEC_EVENTS, b"payload bytes");
+        let mut r = Reader::new(&buf);
+        let mut sec = r.take_section(SEC_EVENTS).unwrap();
+        assert_eq!(sec.bytes(13).unwrap(), b"payload bytes");
+        assert!(r.is_empty());
+
+        // Wrong expected id.
+        let mut r = Reader::new(&buf);
+        assert!(r.take_section(SEC_SUMMARY).is_err());
+
+        // Flip one payload byte: CRC must catch it.
+        let mut bad = buf.clone();
+        bad[4] ^= 0x40;
+        let mut r = Reader::new(&bad);
+        let err = r.take_section(SEC_EVENTS).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+
+        // Truncate at every prefix: error, never panic.
+        for cut in 0..buf.len() {
+            let mut r = Reader::new(&buf[..cut]);
+            assert!(r.take_section(SEC_EVENTS).is_err(), "prefix {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn events_round_trip_and_compare_bit_exactly() {
+        let evs = [
+            TraceEvent { t_s: 0.0, tag: 1, a: (3 << 8) | 2, b: 77 },
+            TraceEvent { t_s: 1.25e-3, tag: 5, a: 0, b: 0 },
+            TraceEvent { t_s: -0.0, tag: 6, a: 1 << 8, b: 2 },
+        ];
+        let mut buf = Vec::new();
+        for ev in &evs {
+            put_event(&mut buf, ev);
+        }
+        let mut r = Reader::new(&buf);
+        for ev in &evs {
+            assert_eq!(&get_event(&mut r).unwrap(), ev);
+        }
+        // -0.0 and 0.0 differ bit-wise, so the events must not compare equal.
+        let zero = TraceEvent { t_s: 0.0, tag: 6, a: 1 << 8, b: 2 };
+        assert_ne!(evs[2], zero);
+        assert_eq!(evs[0].tenant(), 3);
+        assert_eq!(evs[0].shard(), 2);
+        assert_eq!(TraceEvent::tag_name(1), "arrival");
+        assert_eq!(TraceEvent::tag_name(99), "unknown");
+    }
+}

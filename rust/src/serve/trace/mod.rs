@@ -1,0 +1,31 @@
+//! Flight recorder: binary trace capture + deterministic replay.
+//!
+//! The serving engine is a pure function of its inputs — that is what the
+//! golden fingerprint tests pin. This module turns that purity into a
+//! product surface:
+//!
+//! * [`format`] — the compact `.trace` binary format: a `SHTR` magic +
+//!   version header, then CRC-framed sections (inputs, hashed events,
+//!   control records, summary) of varint-encoded records. Corruption or
+//!   truncation anywhere yields a precise error, never a panic.
+//! * [`recorder`] — the engine-side [`Capture`] sink (preallocated, no
+//!   per-event allocation on the hot path) and the [`Trace`] container
+//!   assembling inputs + events + control-plane decisions (re-tunes,
+//!   co-plan allocations, autoscale transitions) + outcome summary.
+//! * [`replayer`] — [`replay_full`] (re-simulate and assert bit-identical
+//!   `log_hash`, event stream, and per-tenant counters) and
+//!   [`replay_whatif`] (re-simulate only the captured arrival streams
+//!   under a [`WhatIf`] policy override: shard count, balancer,
+//!   autoscale, co-planning — with request conservation checked).
+//!
+//! Record with [`crate::serve::serve_traced`] (or `serve --record` on the
+//! CLI), inspect with [`Trace::describe`] (`trace inspect`), fan a trace
+//! across a policy grid with [`crate::serve::sweep::whatif_grid`].
+
+pub mod format;
+pub mod recorder;
+pub mod replayer;
+
+pub use format::TraceEvent;
+pub use recorder::{Capture, ControlKind, ControlRecord, TenantSummary, Trace, TraceSummary};
+pub use replayer::{replay_full, replay_whatif, whatif_inputs, WhatIf};

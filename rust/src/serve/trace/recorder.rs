@@ -1,0 +1,969 @@
+//! Flight-recorder capture: the in-engine event sink and the serialized
+//! [`Trace`] container.
+//!
+//! [`Capture`] is what the engine writes into while serving: a pair of
+//! preallocated vectors the hot path appends to (no per-event allocation,
+//! no formatting — the human-readable log remains a separate, optional
+//! channel). After the run, [`Trace::assemble`] freezes the capture
+//! together with the run's *inputs* (platform, tenants, options — enough
+//! to re-simulate from scratch) and a summary of its *outputs* (log hash,
+//! per-tenant counters — enough to verify a replay without re-reading the
+//! live report).
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Layer, LayerKind, Network};
+use crate::pipeline::PipelineConfig;
+use crate::platform::{
+    CoreType, ExecutionPlace, InterChipletLink, MemoryClass, MeshTopology, Platform,
+};
+
+use super::super::arrivals::ArrivalProcess;
+use super::super::cluster::AutoscaleOptions;
+use super::super::engine::{PumpMode, ServeOptions, ServeReport};
+use super::super::shard::BalancerPolicy;
+use super::super::tenant::{AdmissionPolicy, TenantSpec};
+use super::format::{
+    get_event, put_event, put_f64, put_section, put_str, put_varint, Reader, TraceEvent, MAGIC,
+    SEC_CONTROLS, SEC_EVENTS, SEC_INPUTS, SEC_SUMMARY, VERSION,
+};
+
+/// Which control-plane mechanism produced a [`ControlRecord`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlKind {
+    /// A warm re-tune attempt at an epoch tick (`a` = evaluator trials,
+    /// `b` = 1 if the configuration actually changed).
+    Retune,
+    /// A co-plan allocation at serve start (`shard` = placement count,
+    /// `a` = EP budget size, `b` = predicted throughput bits).
+    Coplan,
+    /// An autoscaler replica transition (`b` = the
+    /// [`crate::serve::ReplicaState`] code entered).
+    Scale,
+}
+
+impl ControlKind {
+    /// Stable wire code.
+    pub fn code(self) -> u8 {
+        match self {
+            ControlKind::Retune => 1,
+            ControlKind::Coplan => 2,
+            ControlKind::Scale => 3,
+        }
+    }
+
+    /// Decode a wire code.
+    pub fn from_code(code: u8) -> Result<Self> {
+        match code {
+            1 => Ok(ControlKind::Retune),
+            2 => Ok(ControlKind::Coplan),
+            3 => Ok(ControlKind::Scale),
+            other => bail!("unknown control-record kind code {other}"),
+        }
+    }
+
+    /// Human-readable name (for `trace inspect`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ControlKind::Retune => "retune",
+            ControlKind::Coplan => "coplan",
+            ControlKind::Scale => "scale",
+        }
+    }
+}
+
+/// One control-plane decision, recorded beside (not inside) the hashed
+/// event stream so capture can annotate *why* the engine acted without
+/// perturbing the live run's `log_hash`.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlRecord {
+    /// Simulated time of the decision, seconds.
+    pub t_s: f64,
+    /// Which mechanism decided.
+    pub kind: ControlKind,
+    /// Tenant index.
+    pub tenant: u32,
+    /// Shard index (kind-specific meaning for [`ControlKind::Coplan`]).
+    pub shard: u32,
+    /// First kind-specific payload word.
+    pub a: u64,
+    /// Second kind-specific payload word.
+    pub b: u64,
+}
+
+impl PartialEq for ControlRecord {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_s.to_bits() == other.t_s.to_bits()
+            && self.kind == other.kind
+            && self.tenant == other.tenant
+            && self.shard == other.shard
+            && self.a == other.a
+            && self.b == other.b
+    }
+}
+
+/// The engine-side event sink: appended to on the hot path, drained into a
+/// [`Trace`] after the run.
+#[derive(Debug, Clone, Default)]
+pub struct Capture {
+    /// Every hashed engine event, in heap order.
+    pub events: Vec<TraceEvent>,
+    /// Control-plane decisions, in decision order.
+    pub controls: Vec<ControlRecord>,
+}
+
+impl Capture {
+    /// A capture with preallocated buffers (the hot path then amortizes
+    /// growth over thousands of pushes instead of paying per event).
+    pub fn new() -> Self {
+        Self { events: Vec::with_capacity(4096), controls: Vec::with_capacity(64) }
+    }
+
+    /// Record one hashed engine event.
+    #[inline]
+    pub fn event(&mut self, t_s: f64, tag: u64, a: u64, b: u64) {
+        self.events.push(TraceEvent { t_s, tag, a, b });
+    }
+
+    /// Record one control-plane decision.
+    pub fn control(&mut self, rec: ControlRecord) {
+        self.controls.push(rec);
+    }
+}
+
+/// Per-tenant outcome counters frozen into the trace summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSummary {
+    /// Tenant name.
+    pub name: String,
+    /// Total arrivals offered.
+    pub offered: u64,
+    /// Arrivals rejected at admission.
+    pub rejected: u64,
+    /// Admitted requests dropped later.
+    pub dropped: u64,
+    /// Requests fully completed.
+    pub completed: u64,
+    /// Completions within the SLO.
+    pub slo_ok: u64,
+    /// Requests still in flight at the horizon.
+    pub in_flight: u64,
+    /// Warm re-tunes triggered.
+    pub retunes: u64,
+    /// Autoscaler transitions across all replicas.
+    pub scale_events: u64,
+}
+
+/// Outcome summary of the recorded run: what full replay must reproduce.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// The live run's event-log hash.
+    pub log_hash: u64,
+    /// Events the live run processed.
+    pub n_events: u64,
+    /// Whether the live run hit the `max_events` safety valve.
+    pub truncated: bool,
+    /// Per-tenant counters.
+    pub tenants: Vec<TenantSummary>,
+}
+
+/// A complete flight-recorder trace: the inputs of a serving run, its
+/// hashed event stream, its control-plane decisions, and its outcome
+/// summary — everything needed to re-simulate it bit-identically
+/// ([`super::replay_full`]) or counterfactually
+/// ([`super::replay_whatif`]).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Platform the run was served on.
+    pub platform: Platform,
+    /// Tenant specs and their initial pipeline configurations.
+    pub tenants: Vec<(TenantSpec, PipelineConfig)>,
+    /// Engine options the run used.
+    pub opts: ServeOptions,
+    /// The hashed event stream.
+    pub events: Vec<TraceEvent>,
+    /// Control-plane decision records.
+    pub controls: Vec<ControlRecord>,
+    /// Outcome summary.
+    pub summary: TraceSummary,
+}
+
+impl Trace {
+    /// Freeze a finished capture into a trace.
+    pub fn assemble(
+        platform: Platform,
+        tenants: Vec<(TenantSpec, PipelineConfig)>,
+        opts: ServeOptions,
+        capture: Capture,
+        report: &ServeReport,
+    ) -> Self {
+        let tenant_summaries = report
+            .tenants
+            .iter()
+            .map(|t| TenantSummary {
+                name: t.name.clone(),
+                offered: t.offered,
+                rejected: t.rejected,
+                dropped: t.dropped,
+                completed: t.completed,
+                slo_ok: t.slo_ok,
+                in_flight: t.in_flight,
+                retunes: u64::from(t.retunes),
+                scale_events: t
+                    .shards
+                    .iter()
+                    .map(|s| s.scale_events.len() as u64)
+                    .sum(),
+            })
+            .collect();
+        Self {
+            platform,
+            tenants,
+            opts,
+            events: capture.events,
+            controls: capture.controls,
+            summary: TraceSummary {
+                log_hash: report.log_hash,
+                n_events: report.n_events,
+                truncated: report.truncated,
+                tenants: tenant_summaries,
+            },
+        }
+    }
+
+    /// The captured arrival timestamps of tenant `tenant`, in event order
+    /// (ascending — the heap pops in time order). This is the stream
+    /// what-if replay re-sources through [`ArrivalProcess::Trace`].
+    pub fn arrival_times(&self, tenant: usize) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter(|ev| ev.tag == 1 && ev.tenant() == tenant)
+            .map(|ev| ev.t_s)
+            .collect()
+    }
+
+    /// Serialize to the binary `.trace` format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut inputs = Vec::new();
+        put_platform(&mut inputs, &self.platform);
+        put_varint(&mut inputs, self.tenants.len() as u64);
+        for (spec, config) in &self.tenants {
+            put_tenant_spec(&mut inputs, spec);
+            put_config(&mut inputs, config);
+        }
+        put_opts(&mut inputs, &self.opts);
+
+        let mut events = Vec::with_capacity(self.events.len() * 12);
+        put_varint(&mut events, self.events.len() as u64);
+        for ev in &self.events {
+            put_event(&mut events, ev);
+        }
+
+        let mut controls = Vec::new();
+        put_varint(&mut controls, self.controls.len() as u64);
+        for rec in &self.controls {
+            controls.push(rec.kind.code());
+            put_varint(&mut controls, u64::from(rec.tenant));
+            put_varint(&mut controls, u64::from(rec.shard));
+            put_varint(&mut controls, rec.a);
+            put_varint(&mut controls, rec.b);
+            put_f64(&mut controls, rec.t_s);
+        }
+
+        let mut summary = Vec::new();
+        summary.extend_from_slice(&self.summary.log_hash.to_le_bytes());
+        put_varint(&mut summary, self.summary.n_events);
+        summary.push(u8::from(self.summary.truncated));
+        put_varint(&mut summary, self.summary.tenants.len() as u64);
+        for t in &self.summary.tenants {
+            put_str(&mut summary, &t.name);
+            for x in [
+                t.offered, t.rejected, t.dropped, t.completed, t.slo_ok, t.in_flight, t.retunes,
+                t.scale_events,
+            ] {
+                put_varint(&mut summary, x);
+            }
+        }
+
+        let mut out = Vec::with_capacity(
+            5 + inputs.len() + events.len() + controls.len() + summary.len() + 4 * 10,
+        );
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        put_section(&mut out, SEC_INPUTS, &inputs);
+        put_section(&mut out, SEC_EVENTS, &events);
+        put_section(&mut out, SEC_CONTROLS, &controls);
+        put_section(&mut out, SEC_SUMMARY, &summary);
+        out
+    }
+
+    /// Deserialize from the binary `.trace` format, verifying the magic,
+    /// version, and every section CRC. Never panics on malformed input.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let magic = r.bytes(4).context("reading trace magic")?;
+        if magic != MAGIC {
+            bail!("not a shisha trace (magic {magic:02x?}, expected {MAGIC:02x?})");
+        }
+        let version = r.u8().context("reading trace version")?;
+        if version != VERSION {
+            bail!("unsupported trace version {version} (this build reads version {VERSION})");
+        }
+
+        let mut inputs = r.take_section(SEC_INPUTS).context("inputs section")?;
+        let platform = get_platform(&mut inputs).context("decoding platform")?;
+        let n_tenants = inputs.varint().context("reading tenant count")? as usize;
+        let mut tenants = Vec::with_capacity(n_tenants.min(1024));
+        for ti in 0..n_tenants {
+            let spec = get_tenant_spec(&mut inputs)
+                .with_context(|| format!("decoding tenant {ti} spec"))?;
+            let config = get_config(&mut inputs)
+                .with_context(|| format!("decoding tenant {ti} config"))?;
+            tenants.push((spec, config));
+        }
+        let opts = get_opts(&mut inputs).context("decoding serve options")?;
+        if !inputs.is_empty() {
+            bail!("{} trailing bytes after serve options in inputs section", inputs.remaining());
+        }
+
+        let mut evr = r.take_section(SEC_EVENTS).context("events section")?;
+        let n_events = evr.varint().context("reading event count")? as usize;
+        let mut events = Vec::with_capacity(n_events.min(1 << 20));
+        for i in 0..n_events {
+            events.push(get_event(&mut evr).with_context(|| format!("decoding event {i}"))?);
+        }
+        if !evr.is_empty() {
+            bail!("{} trailing bytes in events section", evr.remaining());
+        }
+
+        let mut ctr = r.take_section(SEC_CONTROLS).context("controls section")?;
+        let n_controls = ctr.varint().context("reading control count")? as usize;
+        let mut controls = Vec::with_capacity(n_controls.min(1 << 16));
+        for i in 0..n_controls {
+            let kind = ControlKind::from_code(ctr.u8()?)
+                .with_context(|| format!("decoding control record {i}"))?;
+            let tenant = u32::try_from(ctr.varint()?)
+                .with_context(|| format!("control record {i} tenant out of range"))?;
+            let shard = u32::try_from(ctr.varint()?)
+                .with_context(|| format!("control record {i} shard out of range"))?;
+            let a = ctr.varint()?;
+            let b = ctr.varint()?;
+            let t_s = ctr.f64()?;
+            controls.push(ControlRecord { t_s, kind, tenant, shard, a, b });
+        }
+        if !ctr.is_empty() {
+            bail!("{} trailing bytes in controls section", ctr.remaining());
+        }
+
+        let mut smr = r.take_section(SEC_SUMMARY).context("summary section")?;
+        let hash_raw = smr.bytes(8).context("reading summary log hash")?;
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(hash_raw);
+        let log_hash = u64::from_le_bytes(arr);
+        let sum_events = smr.varint().context("reading summary event count")?;
+        let truncated = match smr.u8().context("reading truncated flag")? {
+            0 => false,
+            1 => true,
+            other => bail!("truncated flag must be 0 or 1, found {other}"),
+        };
+        let n_sum = smr.varint().context("reading summary tenant count")? as usize;
+        let mut tsums = Vec::with_capacity(n_sum.min(1024));
+        for i in 0..n_sum {
+            let name = smr.str().with_context(|| format!("summary tenant {i} name"))?;
+            let mut vals = [0u64; 8];
+            for v in &mut vals {
+                *v = smr.varint().with_context(|| format!("summary tenant {i} counters"))?;
+            }
+            tsums.push(TenantSummary {
+                name,
+                offered: vals[0],
+                rejected: vals[1],
+                dropped: vals[2],
+                completed: vals[3],
+                slo_ok: vals[4],
+                in_flight: vals[5],
+                retunes: vals[6],
+                scale_events: vals[7],
+            });
+        }
+        if !smr.is_empty() {
+            bail!("{} trailing bytes in summary section", smr.remaining());
+        }
+        if !r.is_empty() {
+            bail!("{} trailing bytes after summary section", r.remaining());
+        }
+
+        Ok(Self {
+            platform,
+            tenants,
+            opts,
+            events,
+            controls,
+            summary: TraceSummary { log_hash, n_events: sum_events, truncated, tenants: tsums },
+        })
+    }
+
+    /// Write the trace to `path`.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+
+    /// Read a trace from `path`.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading trace from {}", path.display()))?;
+        Self::from_bytes(&buf).with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    /// Multi-line human-readable summary (the `trace inspect` output).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: platform {} ({} EPs), {} tenant(s), horizon {:.3}s, seed {}",
+            self.platform.name,
+            self.platform.n_eps(),
+            self.tenants.len(),
+            self.opts.duration_s,
+            self.opts.seed,
+        );
+        let _ = writeln!(
+            out,
+            "  events {} (hash {:016x}{})  control records {}",
+            self.events.len(),
+            self.summary.log_hash,
+            if self.summary.truncated { ", TRUNCATED" } else { "" },
+            self.controls.len(),
+        );
+        // Per-tag event census.
+        let mut tag_counts: Vec<(u64, u64)> = Vec::new();
+        for ev in &self.events {
+            match tag_counts.iter_mut().find(|(t, _)| *t == ev.tag) {
+                Some((_, n)) => *n += 1,
+                None => tag_counts.push((ev.tag, 1)),
+            }
+        }
+        tag_counts.sort_by_key(|&(t, _)| t);
+        let census: Vec<String> = tag_counts
+            .iter()
+            .map(|&(t, n)| format!("{} {n}", TraceEvent::tag_name(t)))
+            .collect();
+        let _ = writeln!(out, "  event census: {}", census.join(", "));
+        for (ti, ts) in self.summary.tenants.iter().enumerate() {
+            let arrivals = self.arrival_times(ti).len();
+            let _ = writeln!(
+                out,
+                "  tenant {ti} {:<12} offered {:<6} completed {:<6} slo_ok {:<6} shed {:<5} \
+                 in-flight {:<4} retunes {:<3} scale-events {:<3} (captured arrivals {arrivals})",
+                ts.name,
+                ts.offered,
+                ts.completed,
+                ts.slo_ok,
+                ts.rejected + ts.dropped,
+                ts.in_flight,
+                ts.retunes,
+                ts.scale_events,
+            );
+        }
+        for rec in &self.controls {
+            let _ = writeln!(
+                out,
+                "  control t={:>9.4}s {:<6} tenant {} shard {} a={} b={}",
+                rec.t_s,
+                rec.kind.name(),
+                rec.tenant,
+                rec.shard,
+                rec.a,
+                rec.b,
+            );
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Input (de)serializers. Wire codes are part of the format: decode bails on
+// any code this build does not know.
+// ---------------------------------------------------------------------------
+
+fn core_type_code(ct: CoreType) -> u8 {
+    match ct {
+        CoreType::Big => 0,
+        CoreType::Little => 1,
+    }
+}
+
+fn core_type_from(code: u8) -> Result<CoreType> {
+    match code {
+        0 => Ok(CoreType::Big),
+        1 => Ok(CoreType::Little),
+        other => bail!("unknown core-type code {other}"),
+    }
+}
+
+fn memory_code(m: MemoryClass) -> u8 {
+    match m {
+        MemoryClass::Fast => 0,
+        MemoryClass::Slow => 1,
+    }
+}
+
+fn memory_from(code: u8) -> Result<MemoryClass> {
+    match code {
+        0 => Ok(MemoryClass::Fast),
+        1 => Ok(MemoryClass::Slow),
+        other => bail!("unknown memory-class code {other}"),
+    }
+}
+
+fn put_platform(out: &mut Vec<u8>, plat: &Platform) {
+    put_str(out, &plat.name);
+    put_varint(out, plat.eps.len() as u64);
+    for ep in &plat.eps {
+        put_varint(out, ep.id as u64);
+        out.push(core_type_code(ep.core_type));
+        put_varint(out, u64::from(ep.n_cores));
+        out.push(memory_code(ep.memory));
+        put_varint(out, u64::from(ep.chiplet));
+    }
+    put_f64(out, plat.link.latency_s);
+    put_f64(out, plat.link.bandwidth_gbs);
+    match plat.topology {
+        Some(topo) => {
+            out.push(1);
+            put_varint(out, u64::from(topo.width));
+            put_varint(out, u64::from(topo.height));
+        }
+        None => out.push(0),
+    }
+}
+
+fn get_platform(r: &mut Reader<'_>) -> Result<Platform> {
+    let name = r.str().context("platform name")?;
+    let n_eps = r.varint().context("platform EP count")? as usize;
+    let mut eps = Vec::with_capacity(n_eps.min(1024));
+    for i in 0..n_eps {
+        let id = r.varint().with_context(|| format!("EP {i} id"))? as usize;
+        let core_type = core_type_from(r.u8()?)?;
+        let n_cores = u32::try_from(r.varint()?).with_context(|| format!("EP {i} cores"))?;
+        let memory = memory_from(r.u8()?)?;
+        let chiplet = u32::try_from(r.varint()?).with_context(|| format!("EP {i} chiplet"))?;
+        eps.push(ExecutionPlace::new(id, core_type, n_cores, memory, chiplet));
+    }
+    // Platform::new renumbers ids densely (matching the serialized order),
+    // then link and topology are restored verbatim.
+    let mut plat = Platform::new(name, eps);
+    plat.link = InterChipletLink {
+        latency_s: r.f64().context("link latency")?,
+        bandwidth_gbs: r.f64().context("link bandwidth")?,
+    };
+    plat.topology = match r.u8().context("topology flag")? {
+        0 => None,
+        1 => {
+            let width = u32::try_from(r.varint()?).context("topology width")?;
+            let height = u32::try_from(r.varint()?).context("topology height")?;
+            Some(MeshTopology { width, height })
+        }
+        other => bail!("topology flag must be 0 or 1, found {other}"),
+    };
+    Ok(plat)
+}
+
+fn put_network(out: &mut Vec<u8>, net: &Network) {
+    put_str(out, &net.name);
+    put_varint(out, net.layers.len() as u64);
+    for layer in &net.layers {
+        put_str(out, &layer.name);
+        for x in [layer.h, layer.w, layer.c, layer.r, layer.s, layer.k, layer.stride, layer.pad] {
+            put_varint(out, u64::from(x));
+        }
+        out.push(match layer.kind {
+            LayerKind::Conv => 0,
+            LayerKind::Dense => 1,
+        });
+    }
+}
+
+fn get_network(r: &mut Reader<'_>) -> Result<Network> {
+    let name = r.str().context("network name")?;
+    let n_layers = r.varint().context("layer count")? as usize;
+    let mut layers = Vec::with_capacity(n_layers.min(4096));
+    for i in 0..n_layers {
+        let lname = r.str().with_context(|| format!("layer {i} name"))?;
+        let mut dims = [0u32; 8];
+        for d in &mut dims {
+            *d = u32::try_from(r.varint()?).with_context(|| format!("layer {i} dims"))?;
+        }
+        let kind = match r.u8().with_context(|| format!("layer {i} kind"))? {
+            0 => LayerKind::Conv,
+            1 => LayerKind::Dense,
+            other => bail!("unknown layer-kind code {other}"),
+        };
+        layers.push(Layer {
+            name: lname,
+            h: dims[0],
+            w: dims[1],
+            c: dims[2],
+            r: dims[3],
+            s: dims[4],
+            k: dims[5],
+            stride: dims[6],
+            pad: dims[7],
+            kind,
+        });
+    }
+    Ok(Network::new(name, layers))
+}
+
+fn put_arrivals(out: &mut Vec<u8>, arr: &ArrivalProcess) {
+    match arr {
+        ArrivalProcess::Poisson { rate } => {
+            out.push(0);
+            put_f64(out, *rate);
+        }
+        ArrivalProcess::Mmpp { low_rate, high_rate, mean_low_s, mean_high_s } => {
+            out.push(1);
+            for &x in [low_rate, high_rate, mean_low_s, mean_high_s] {
+                put_f64(out, x);
+            }
+        }
+        ArrivalProcess::Diurnal { base_rate, amplitude, period_s } => {
+            out.push(2);
+            for &x in [base_rate, amplitude, period_s] {
+                put_f64(out, x);
+            }
+        }
+        ArrivalProcess::Piecewise { segments } => {
+            out.push(3);
+            put_varint(out, segments.len() as u64);
+            for &(t, rate) in segments {
+                put_f64(out, t);
+                put_f64(out, rate);
+            }
+        }
+        ArrivalProcess::Trace { times } => {
+            out.push(4);
+            put_varint(out, times.len() as u64);
+            for &t in times {
+                put_f64(out, t);
+            }
+        }
+    }
+}
+
+fn get_arrivals(r: &mut Reader<'_>) -> Result<ArrivalProcess> {
+    match r.u8().context("arrival-process code")? {
+        0 => Ok(ArrivalProcess::Poisson { rate: r.f64()? }),
+        1 => Ok(ArrivalProcess::Mmpp {
+            low_rate: r.f64()?,
+            high_rate: r.f64()?,
+            mean_low_s: r.f64()?,
+            mean_high_s: r.f64()?,
+        }),
+        2 => Ok(ArrivalProcess::Diurnal {
+            base_rate: r.f64()?,
+            amplitude: r.f64()?,
+            period_s: r.f64()?,
+        }),
+        3 => {
+            let n = r.varint()? as usize;
+            let mut segments = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                segments.push((r.f64()?, r.f64()?));
+            }
+            Ok(ArrivalProcess::Piecewise { segments })
+        }
+        4 => {
+            let n = r.varint()? as usize;
+            let mut times = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                times.push(r.f64()?);
+            }
+            Ok(ArrivalProcess::Trace { times })
+        }
+        other => bail!("unknown arrival-process code {other}"),
+    }
+}
+
+fn put_tenant_spec(out: &mut Vec<u8>, spec: &TenantSpec) {
+    put_str(out, &spec.name);
+    put_network(out, &spec.net);
+    put_arrivals(out, &spec.arrivals);
+    put_f64(out, spec.slo_latency_s);
+    put_varint(out, spec.queue_capacity as u64);
+    put_varint(out, spec.batch as u64);
+    out.push(match spec.admission {
+        AdmissionPolicy::Reject => 0,
+        AdmissionPolicy::DropOldest => 1,
+    });
+    put_varint(out, spec.shards as u64);
+    out.push(match spec.balancer {
+        BalancerPolicy::RoundRobin => 0,
+        BalancerPolicy::JoinShortestQueue => 1,
+        BalancerPolicy::WeightedThroughput => 2,
+    });
+    put_f64(out, spec.weight);
+}
+
+fn get_tenant_spec(r: &mut Reader<'_>) -> Result<TenantSpec> {
+    let name = r.str().context("tenant name")?;
+    let net = get_network(r).context("tenant network")?;
+    let arrivals = get_arrivals(r).context("tenant arrivals")?;
+    let slo_latency_s = r.f64()?;
+    let queue_capacity = r.varint()? as usize;
+    let batch = r.varint()? as usize;
+    let admission = match r.u8().context("admission code")? {
+        0 => AdmissionPolicy::Reject,
+        1 => AdmissionPolicy::DropOldest,
+        other => bail!("unknown admission-policy code {other}"),
+    };
+    let shards = r.varint()? as usize;
+    let balancer = match r.u8().context("balancer code")? {
+        0 => BalancerPolicy::RoundRobin,
+        1 => BalancerPolicy::JoinShortestQueue,
+        2 => BalancerPolicy::WeightedThroughput,
+        other => bail!("unknown balancer code {other}"),
+    };
+    let weight = r.f64()?;
+    Ok(TenantSpec {
+        name,
+        net,
+        arrivals,
+        slo_latency_s,
+        queue_capacity,
+        batch,
+        admission,
+        shards,
+        balancer,
+        weight,
+    })
+}
+
+fn put_config(out: &mut Vec<u8>, cfg: &PipelineConfig) {
+    put_varint(out, cfg.stages.len() as u64);
+    for &n in &cfg.stages {
+        put_varint(out, n as u64);
+    }
+    for &ep in &cfg.assignment {
+        put_varint(out, ep as u64);
+    }
+}
+
+fn get_config(r: &mut Reader<'_>) -> Result<PipelineConfig> {
+    let n = r.varint().context("stage count")? as usize;
+    let mut stages = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        stages.push(r.varint()? as usize);
+    }
+    let mut assignment = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        assignment.push(r.varint()? as usize);
+    }
+    Ok(PipelineConfig::new(stages, assignment))
+}
+
+fn put_opts(out: &mut Vec<u8>, opts: &ServeOptions) {
+    put_f64(out, opts.duration_s);
+    put_varint(out, opts.seed);
+    out.push(u8::from(opts.control));
+    put_f64(out, opts.control_epoch_s);
+    put_f64(out, opts.retune_threshold);
+    put_varint(out, u64::from(opts.retune_cooldown_epochs));
+    put_f64(out, opts.reconfig_penalty_s);
+    out.push(u8::from(opts.contention));
+    out.push(u8::from(opts.record_log));
+    put_varint(out, opts.max_events);
+    out.push(match opts.pump {
+        PumpMode::EventDriven => 0,
+        PumpMode::FullRescan => 1,
+    });
+    out.push(u8::from(opts.coplan));
+    let auto = &opts.autoscale;
+    out.push(u8::from(auto.enabled));
+    put_varint(out, auto.min_shards as u64);
+    put_f64(out, auto.target_util);
+    put_f64(out, auto.scale_down_util);
+    put_f64(out, auto.backlog_frac);
+    put_varint(out, u64::from(auto.up_epochs));
+    put_varint(out, u64::from(auto.down_epochs));
+    put_varint(out, u64::from(auto.cooldown_epochs));
+}
+
+fn get_bool(r: &mut Reader<'_>, what: &str) -> Result<bool> {
+    match r.u8().with_context(|| format!("reading {what}"))? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("{what} must be 0 or 1, found {other}"),
+    }
+}
+
+fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
+    let duration_s = r.f64()?;
+    let seed = r.varint()?;
+    let control = get_bool(r, "control flag")?;
+    let control_epoch_s = r.f64()?;
+    let retune_threshold = r.f64()?;
+    let retune_cooldown_epochs = u32::try_from(r.varint()?).context("retune cooldown")?;
+    let reconfig_penalty_s = r.f64()?;
+    let contention = get_bool(r, "contention flag")?;
+    let record_log = get_bool(r, "record-log flag")?;
+    let max_events = r.varint()?;
+    let pump = match r.u8().context("pump-mode code")? {
+        0 => PumpMode::EventDriven,
+        1 => PumpMode::FullRescan,
+        other => bail!("unknown pump-mode code {other}"),
+    };
+    let coplan = get_bool(r, "coplan flag")?;
+    let autoscale = AutoscaleOptions {
+        enabled: get_bool(r, "autoscale enabled flag")?,
+        min_shards: r.varint()? as usize,
+        target_util: r.f64()?,
+        scale_down_util: r.f64()?,
+        backlog_frac: r.f64()?,
+        up_epochs: u32::try_from(r.varint()?).context("autoscale up_epochs")?,
+        down_epochs: u32::try_from(r.varint()?).context("autoscale down_epochs")?,
+        cooldown_epochs: u32::try_from(r.varint()?).context("autoscale cooldown")?,
+    };
+    Ok(ServeOptions {
+        duration_s,
+        seed,
+        control,
+        control_epoch_s,
+        retune_threshold,
+        retune_cooldown_epochs,
+        reconfig_penalty_s,
+        contention,
+        record_log,
+        max_events,
+        pump,
+        coplan,
+        autoscale,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+    use crate::platform::configs;
+
+    fn sample_trace() -> Trace {
+        let plat = configs::c2();
+        let spec = TenantSpec::new(
+            "t0",
+            networks::synthnet_small(),
+            ArrivalProcess::Mmpp { low_rate: 1.0, high_rate: 5.0, mean_low_s: 3.0, mean_high_s: 2.0 },
+        )
+        .with_batch(2)
+        .with_admission(AdmissionPolicy::DropOldest)
+        .with_shards(2)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_weight(1.5);
+        let config = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let opts = ServeOptions { duration_s: 10.0, seed: 9, ..Default::default() };
+        Trace {
+            platform: plat,
+            tenants: vec![(spec, config)],
+            opts,
+            events: vec![
+                TraceEvent { t_s: 0.5, tag: 1, a: 0, b: 0 },
+                TraceEvent { t_s: 0.75, tag: 3, a: 0, b: 1 },
+                TraceEvent { t_s: 1.5, tag: 1, a: 0, b: 1 },
+            ],
+            controls: vec![ControlRecord {
+                t_s: 5.0,
+                kind: ControlKind::Retune,
+                tenant: 0,
+                shard: 0,
+                a: 120,
+                b: 1,
+            }],
+            summary: TraceSummary {
+                log_hash: 0xDEAD_BEEF_0BAD_F00D,
+                n_events: 3,
+                truncated: false,
+                tenants: vec![TenantSummary {
+                    name: "t0".into(),
+                    offered: 2,
+                    rejected: 0,
+                    dropped: 0,
+                    completed: 1,
+                    slo_ok: 1,
+                    in_flight: 1,
+                    retunes: 1,
+                    scale_events: 0,
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_byte_identically() {
+        let tr = sample_trace();
+        let bytes = tr.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        // Re-serializing the decoded trace must reproduce the exact bytes:
+        // the format has one canonical encoding.
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.events, tr.events);
+        assert_eq!(back.controls, tr.controls);
+        assert_eq!(back.summary, tr.summary);
+        assert_eq!(back.tenants.len(), 1);
+        assert_eq!(back.tenants[0].0.name, "t0");
+        assert_eq!(back.tenants[0].0.batch, 2);
+        assert_eq!(back.tenants[0].0.balancer, BalancerPolicy::JoinShortestQueue);
+        assert_eq!(back.tenants[0].1, tr.tenants[0].1);
+        assert_eq!(back.platform.n_eps(), tr.platform.n_eps());
+        assert_eq!(back.platform.link, tr.platform.link);
+        assert_eq!(back.opts.seed, 9);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected_without_panic() {
+        let bytes = sample_trace().to_bytes();
+        for cut in 0..bytes.len() {
+            let err = Trace::from_bytes(&bytes[..cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes should be rejected");
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_checksum_error() {
+        let bytes = sample_trace().to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(Trace::from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[4] = 200;
+        assert!(Trace::from_bytes(&bad).unwrap_err().to_string().contains("version"));
+        // Flip a byte inside the first section payload: CRC must trip.
+        let mut bad = bytes.clone();
+        bad[10] ^= 0x10;
+        let msg = Trace::from_bytes(&bad).unwrap_err().root_cause().to_string();
+        assert!(
+            msg.contains("checksum") || msg.contains("truncated") || msg.contains("unknown"),
+            "unexpected error: {msg}"
+        );
+    }
+
+    #[test]
+    fn arrival_times_filters_by_tenant() {
+        let mut tr = sample_trace();
+        tr.events.push(TraceEvent { t_s: 2.0, tag: 1, a: 1 << 8, b: 0 });
+        assert_eq!(tr.arrival_times(0), vec![0.5, 1.5]);
+        assert_eq!(tr.arrival_times(1), vec![2.0]);
+        assert!(tr.arrival_times(2).is_empty());
+    }
+
+    #[test]
+    fn describe_mentions_tenants_and_controls() {
+        let text = sample_trace().describe();
+        assert!(text.contains("t0"), "{text}");
+        assert!(text.contains("retune"), "{text}");
+        assert!(text.contains("event census"), "{text}");
+    }
+}

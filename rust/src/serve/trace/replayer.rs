@@ -1,0 +1,284 @@
+//! Replay: re-drive the engine from a captured [`Trace`].
+//!
+//! Two modes, per the flight-recorder contract:
+//!
+//! * **Full replay** ([`replay_full`]) re-simulates the recorded inputs
+//!   and *asserts* the outcome is bit-identical to the live run — same
+//!   event stream, same `log_hash`, same event count, same per-tenant
+//!   counters. Any divergence is an error naming the first mismatch;
+//!   success certifies the engine is still a pure function of the trace's
+//!   inputs (the determinism property every golden test relies on).
+//! * **What-if replay** ([`replay_whatif`]) keeps only the captured
+//!   *arrival streams* — the workload — and re-simulates them under
+//!   overridden policy ([`WhatIf`]: shard count, balancer, autoscale,
+//!   co-planning): "would 3 shards have held p99 through yesterday's
+//!   storm?". Request conservation (offered = captured arrivals, per
+//!   tenant) is checked on every run.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::pipeline::PipelineConfig;
+use crate::platform::Platform;
+
+use super::super::arrivals::ArrivalProcess;
+use super::super::cluster::AutoscaleOptions;
+use super::super::engine::{serve, serve_traced, ServeOptions, ServeReport};
+use super::super::shard::BalancerPolicy;
+use super::super::tenant::TenantSpec;
+use super::recorder::Trace;
+
+/// Full replay: re-simulate the trace's inputs and verify the outcome is
+/// byte-identical to the recorded run.
+///
+/// Returns the replayed report (which equals the live one) on success;
+/// errors with the first point of divergence otherwise.
+pub fn replay_full(trace: &Trace) -> Result<ServeReport> {
+    let (report, replayed) =
+        serve_traced(&trace.platform, trace.tenants.clone(), &trace.opts)
+            .context("re-simulating recorded inputs")?;
+
+    if replayed.events.len() != trace.events.len() {
+        bail!(
+            "full replay diverged: recorded {} events, replay produced {}",
+            trace.events.len(),
+            replayed.events.len()
+        );
+    }
+    for (i, (want, got)) in trace.events.iter().zip(&replayed.events).enumerate() {
+        if want != got {
+            bail!(
+                "full replay diverged at event {i}: recorded tag {} a {} b {} t {:.9}, \
+                 replay tag {} a {} b {} t {:.9}",
+                want.tag,
+                want.a,
+                want.b,
+                want.t_s,
+                got.tag,
+                got.a,
+                got.b,
+                got.t_s
+            );
+        }
+    }
+    ensure!(
+        report.log_hash == trace.summary.log_hash,
+        "full replay diverged: recorded log_hash {:016x}, replay {:016x}",
+        trace.summary.log_hash,
+        report.log_hash
+    );
+    ensure!(
+        report.n_events == trace.summary.n_events,
+        "full replay diverged: recorded {} engine events, replay {}",
+        trace.summary.n_events,
+        report.n_events
+    );
+    ensure!(
+        report.truncated == trace.summary.truncated,
+        "full replay diverged on the truncation flag"
+    );
+    ensure!(
+        replayed.summary.tenants == trace.summary.tenants,
+        "full replay diverged in per-tenant counters: recorded {:?}, replay {:?}",
+        trace.summary.tenants,
+        replayed.summary.tenants
+    );
+    Ok(report)
+}
+
+/// Policy overrides for arrivals-only what-if replay. Every field is
+/// optional; unset fields keep the recorded run's value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WhatIf {
+    /// Override every tenant's maximum replica count.
+    pub shards: Option<usize>,
+    /// Override every tenant's load balancer.
+    pub balancer: Option<BalancerPolicy>,
+    /// Force the runtime autoscaler on or off.
+    pub autoscale: Option<bool>,
+    /// Override the autoscaler's active-replica floor.
+    pub min_shards: Option<usize>,
+    /// Force cross-tenant co-planning on or off.
+    pub coplan: Option<bool>,
+}
+
+impl WhatIf {
+    /// Parse a CLI override list: comma-separated `key=value` pairs with
+    /// keys `shards`, `balancer`, `autoscale`, `min-shards`, `coplan`
+    /// (e.g. `shards=4,balancer=jsq,autoscale=on`). Unknown keys error by
+    /// name.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut w = WhatIf::default();
+        for pair in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, value)) = pair.split_once('=') else {
+                bail!("what-if override {pair:?} is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "shards" => {
+                    let k: usize = value
+                        .parse()
+                        .with_context(|| format!("what-if shards value {value:?}"))?;
+                    ensure!(k >= 1, "what-if shards must be ≥ 1");
+                    w.shards = Some(k);
+                }
+                "balancer" => w.balancer = Some(BalancerPolicy::parse(value)?),
+                "autoscale" => w.autoscale = Some(parse_switch(key, value)?),
+                "min-shards" | "min_shards" => {
+                    let k: usize = value
+                        .parse()
+                        .with_context(|| format!("what-if min-shards value {value:?}"))?;
+                    ensure!(k >= 1, "what-if min-shards must be ≥ 1");
+                    w.min_shards = Some(k);
+                }
+                "coplan" => w.coplan = Some(parse_switch(key, value)?),
+                other => bail!(
+                    "unknown what-if key {other:?} (allowed: shards, balancer, autoscale, \
+                     min-shards, coplan)"
+                ),
+            }
+        }
+        Ok(w)
+    }
+
+    /// True when no override is set (what-if degenerates to re-serving the
+    /// captured arrivals under the recorded policy).
+    pub fn is_empty(&self) -> bool {
+        *self == WhatIf::default()
+    }
+
+    /// Short display form, e.g. `shards=4 balancer=jsq`.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(k) = self.shards {
+            parts.push(format!("shards={k}"));
+        }
+        if let Some(b) = self.balancer {
+            parts.push(format!("balancer={}", b.name()));
+        }
+        if let Some(on) = self.autoscale {
+            parts.push(format!("autoscale={}", if on { "on" } else { "off" }));
+        }
+        if let Some(k) = self.min_shards {
+            parts.push(format!("min-shards={k}"));
+        }
+        if let Some(on) = self.coplan {
+            parts.push(format!("coplan={}", if on { "on" } else { "off" }));
+        }
+        if parts.is_empty() {
+            "(no overrides)".into()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+fn parse_switch(key: &str, value: &str) -> Result<bool> {
+    match value.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => bail!("what-if {key} value {other:?} is not on/off"),
+    }
+}
+
+/// Build the serve inputs for an arrivals-only what-if run: every tenant's
+/// arrival process is replaced by its *captured* arrival timestamps
+/// ([`ArrivalProcess::Trace`], replayed verbatim and RNG-free), then the
+/// [`WhatIf`] overrides are applied on top of the recorded spec/options.
+///
+/// The returned inputs plug straight into [`serve`] or into a
+/// [`crate::serve::sweep::Scenario`] (see
+/// [`crate::serve::sweep::whatif_grid`]).
+pub fn whatif_inputs(
+    trace: &Trace,
+    what_if: &WhatIf,
+) -> Result<(Platform, Vec<(TenantSpec, PipelineConfig)>, ServeOptions)> {
+    ensure!(!trace.tenants.is_empty(), "trace has no tenants");
+    let mut tenants = Vec::with_capacity(trace.tenants.len());
+    for (ti, (spec, config)) in trace.tenants.iter().enumerate() {
+        let mut spec = spec.clone();
+        spec.arrivals = ArrivalProcess::Trace { times: trace.arrival_times(ti) };
+        if let Some(k) = what_if.shards {
+            spec.shards = k;
+        }
+        if let Some(b) = what_if.balancer {
+            spec.balancer = b;
+        }
+        tenants.push((spec, config.clone()));
+    }
+    let mut opts = trace.opts.clone();
+    // The captured arrival stream is the workload; the replay needs no
+    // human-readable log.
+    opts.record_log = false;
+    if let Some(on) = what_if.coplan {
+        opts.coplan = on;
+    }
+    if let Some(on) = what_if.autoscale {
+        if on && !opts.autoscale.enabled {
+            opts.autoscale = AutoscaleOptions::enabled();
+        }
+        opts.autoscale.enabled = on;
+    }
+    if let Some(k) = what_if.min_shards {
+        opts.autoscale.min_shards = k;
+    }
+    Ok((trace.platform.clone(), tenants, opts))
+}
+
+/// Arrivals-only what-if replay: re-simulate the captured workload under
+/// the overridden policy and verify request conservation — every captured
+/// arrival is offered exactly once in the counterfactual run.
+pub fn replay_whatif(trace: &Trace, what_if: &WhatIf) -> Result<ServeReport> {
+    let (plat, tenants, opts) = whatif_inputs(trace, what_if)?;
+    let report = serve(&plat, tenants, &opts)
+        .with_context(|| format!("what-if replay ({})", what_if.describe()))?;
+    if !report.truncated {
+        for (ti, t) in report.tenants.iter().enumerate() {
+            let captured = trace.arrival_times(ti).len() as u64;
+            ensure!(
+                t.offered == captured,
+                "what-if replay lost requests: tenant {ti} ({}) captured {captured} arrivals \
+                 but the replay offered {}",
+                t.name,
+                t.offered
+            );
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whatif_parse_round_trips() {
+        let w = WhatIf::parse("shards=4,balancer=jsq,autoscale=on,min-shards=2,coplan=off")
+            .unwrap();
+        assert_eq!(w.shards, Some(4));
+        assert_eq!(w.balancer, Some(BalancerPolicy::JoinShortestQueue));
+        assert_eq!(w.autoscale, Some(true));
+        assert_eq!(w.min_shards, Some(2));
+        assert_eq!(w.coplan, Some(false));
+        assert_eq!(w.describe(), "shards=4 balancer=jsq autoscale=on min-shards=2 coplan=off");
+    }
+
+    #[test]
+    fn whatif_parse_accepts_empty_and_whitespace() {
+        assert!(WhatIf::parse("").unwrap().is_empty());
+        assert!(WhatIf::parse(" , ").unwrap().is_empty());
+        let w = WhatIf::parse(" shards = 2 ").unwrap();
+        assert_eq!(w.shards, Some(2));
+    }
+
+    #[test]
+    fn whatif_parse_names_the_offending_key() {
+        let err = WhatIf::parse("shard=4").unwrap_err().to_string();
+        assert!(err.contains("shard"), "{err}");
+        assert!(err.contains("allowed"), "{err}");
+        assert!(WhatIf::parse("shards=zero").is_err());
+        assert!(WhatIf::parse("shards=0").is_err());
+        assert!(WhatIf::parse("autoscale=maybe").is_err());
+        assert!(WhatIf::parse("balancer=xyz").is_err());
+        assert!(WhatIf::parse("justaword").is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! Flight-recorder integration tests: capture → serialize → replay.
+//!
+//! Four contracts, strongest first:
+//!
+//! 1. **Recording is free of observable side effects** — `serve_traced`
+//!    must produce the *same* `log_hash` / counters as a plain `serve` of
+//!    the same inputs (the capture tap sits beside the hash fold, never
+//!    inside it), so every committed golden fingerprint stays valid.
+//! 2. **Full replay is bit-identical** — for every golden scenario family
+//!    (steady Poisson, MMPP + drift re-tune, trace-driven, sharded with
+//!    control, autoscale tidal, three-tenant co-plan) a recorded trace
+//!    replays to the same event stream, hash, and per-tenant counters —
+//!    including after a round trip through the binary format and disk.
+//! 3. **Malformed traces are rejected, never trusted** — truncation at
+//!    every byte boundary and single-byte corruption anywhere in the file
+//!    yield errors, not panics and not silently-wrong traces.
+//! 4. **What-if replay conserves the workload** — arrivals-only re-runs
+//!    under different shard counts / balancers / autoscaling offer exactly
+//!    the captured arrival stream, per tenant, across the whole
+//!    [`whatif_grid`] (conservation is how we know the counterfactual
+//!    answers are about the *same* storm).
+
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::{simulator, PipelineConfig};
+use shisha::platform::configs;
+use shisha::serve::{
+    replay_full, replay_whatif, serve, serve_traced, sweep, ArrivalProcess, BalancerPolicy,
+    ControlKind, ControlRecord, ServeOptions, TenantSpec, Trace, WhatIf,
+};
+
+fn controls_of(trace: &Trace, kind: ControlKind) -> Vec<ControlRecord> {
+    trace.controls.iter().copied().filter(|r| r.kind == kind).collect()
+}
+
+type Inputs = (shisha::platform::Platform, Vec<(TenantSpec, PipelineConfig)>, ServeOptions);
+
+// ---------------------------------------------------------------------------
+// Scenario builders — the same families the golden fingerprint tests pin
+// (tests/serve_golden.rs); kept in sync by construction, not by import,
+// so a drift there cannot silently weaken the replay coverage here.
+// ---------------------------------------------------------------------------
+
+fn poisson_scenario() -> Inputs {
+    let plat = configs::c1();
+    let net = networks::synthnet_small();
+    let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let heavy = TenantSpec::new("heavy", net.clone(), ArrivalProcess::Poisson { rate: 2.5 * cap })
+        .with_batch(4)
+        .with_queue_capacity(12)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(20.0 / cap);
+    let light = TenantSpec::new("light", net.clone(), ArrivalProcess::Poisson { rate: 0.4 * cap })
+        .with_slo(20.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 300.0 / cap,
+        seed: 11,
+        control: false,
+        control_epoch_s: 40.0 / cap,
+        ..Default::default()
+    };
+    (plat, vec![(heavy, cfg.clone()), (light, cfg)], opts)
+}
+
+fn drift_scenario() -> Inputs {
+    let plat = configs::c2();
+    let net = networks::synthnet();
+    let bad = PipelineConfig::new(vec![5, 5, 4, 4], vec![2, 3, 0, 1]);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &bad);
+    let lat = simulator::evaluate(&net, &plat, &db, &bad).latency_s;
+    let drifter = TenantSpec::new(
+        "drifter",
+        net.clone(),
+        ArrivalProcess::Piecewise { segments: vec![(0.0, 0.5 * cap), (126.0 / cap, 1.3 * cap)] },
+    )
+    .with_slo(8.0 * lat)
+    .with_queue_capacity(32);
+    let small = networks::synthnet_small();
+    let cfg_b = PipelineConfig::single_stage(small.len(), 3);
+    let db_b = PerfDb::build(&small, &plat, &CostModel::default());
+    let cap_b = simulator::throughput(&small, &plat, &db_b, &cfg_b);
+    let bursty = TenantSpec::new(
+        "bursty",
+        small,
+        ArrivalProcess::Mmpp {
+            low_rate: 0.05 * cap_b,
+            high_rate: 0.3 * cap_b,
+            mean_low_s: 40.0 / cap,
+            mean_high_s: 15.0 / cap,
+        },
+    )
+    .with_slo(60.0 / cap_b);
+    let opts = ServeOptions {
+        duration_s: 420.0 / cap,
+        seed: 17,
+        control: true,
+        control_epoch_s: 30.0 / cap,
+        retune_threshold: 0.6,
+        retune_cooldown_epochs: 1,
+        reconfig_penalty_s: 2.0 / cap,
+        ..Default::default()
+    };
+    (plat, vec![(drifter, bad), (bursty, cfg_b)], opts)
+}
+
+fn trace_driven_scenario() -> Inputs {
+    let plat = configs::c1();
+    let net = networks::synthnet_small();
+    let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let mut times = Vec::new();
+    for burst in 0..8u32 {
+        for k in 0..10u32 {
+            times.push((f64::from(burst) * 30.0 + f64::from(k) * 0.25) / cap);
+        }
+    }
+    let tenant = TenantSpec::new("replay", net, ArrivalProcess::Trace { times })
+        .with_batch(2)
+        .with_queue_capacity(6)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(15.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 300.0 / cap,
+        seed: 23,
+        control: false,
+        control_epoch_s: 0.0,
+        ..Default::default()
+    };
+    (plat, vec![(tenant, cfg)], opts)
+}
+
+fn sharded_scenario(shards: usize, balancer: BalancerPolicy, control: bool, seed: u64) -> Inputs {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let tenant = TenantSpec::new(
+        "sharded",
+        net,
+        ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: 50.0 / cap,
+            mean_high_s: 50.0 / cap,
+        },
+    )
+    .with_shards(shards)
+    .with_balancer(balancer)
+    .with_queue_capacity(16)
+    .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+    .with_slo(200.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 300.0 / cap,
+        seed,
+        control,
+        control_epoch_s: if control { 30.0 / cap } else { 0.0 },
+        retune_cooldown_epochs: 1,
+        ..Default::default()
+    };
+    (plat, vec![(tenant, cfg)], opts)
+}
+
+fn autoscale_scenario() -> Inputs {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let tenant = TenantSpec::new(
+        "tidal",
+        net,
+        ArrivalProcess::Mmpp {
+            low_rate: 0.2 * cap,
+            high_rate: 1.3 * cap,
+            mean_low_s: 100.0 / cap,
+            mean_high_s: 100.0 / cap,
+        },
+    )
+    .with_shards(4)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(32)
+    .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+    .with_slo(500.0 / cap);
+    let opts = ServeOptions {
+        duration_s: 400.0 / cap,
+        seed: 47,
+        control: false,
+        control_epoch_s: 4.0 / cap,
+        autoscale: shisha::serve::AutoscaleOptions::enabled(),
+        ..Default::default()
+    };
+    (plat, vec![(tenant, cfg)], opts)
+}
+
+fn coplan_scenario() -> Inputs {
+    let plat = configs::c5();
+    let mk = |name: &str, net: shisha::model::Network, weight: f64, shards: usize| {
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        (
+            TenantSpec::new(name, net, ArrivalProcess::Poisson { rate: 0.4 * cap })
+                .with_weight(weight)
+                .with_shards(shards)
+                .with_slo(200.0 / cap),
+            cfg,
+        )
+    };
+    let tenants = vec![
+        mk("hot", networks::synthnet(), 2.0, 2),
+        mk("warm", networks::alexnet(), 1.0, 2),
+        mk("cold", networks::synthnet_small(), 1.0, 1),
+    ];
+    let opts = ServeOptions {
+        duration_s: 1.5,
+        seed: 53,
+        control: false,
+        control_epoch_s: 0.25,
+        coplan: true,
+        ..Default::default()
+    };
+    (plat, tenants, opts)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Recording has no observable side effect on the run itself.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recording_does_not_perturb_the_run() {
+    let wtp: fn() -> Inputs = || sharded_scenario(4, BalancerPolicy::WeightedThroughput, true, 43);
+    for (what, build) in [
+        ("poisson", poisson_scenario as fn() -> Inputs),
+        ("shard4-wtp-control", wtp),
+        ("autoscale-tidal", autoscale_scenario),
+    ] {
+        let (plat, tenants, opts) = build();
+        let plain = serve(&plat, tenants.clone(), &opts).expect("plain serve");
+        let (recorded, trace) = serve_traced(&plat, tenants, &opts).expect("traced serve");
+        assert_eq!(plain.log_hash, recorded.log_hash, "{what}: log_hash must not move");
+        assert_eq!(plain.n_events, recorded.n_events, "{what}: n_events must not move");
+        assert_eq!(plain.truncated, recorded.truncated, "{what}: truncation must not move");
+        for (a, b) in plain.tenants.iter().zip(&recorded.tenants) {
+            assert_eq!(a.offered, b.offered, "{what}/{}: offered", a.name);
+            assert_eq!(a.completed, b.completed, "{what}/{}: completed", a.name);
+            assert_eq!(a.slo_ok, b.slo_ok, "{what}/{}: slo_ok", a.name);
+            assert_eq!(a.retunes, b.retunes, "{what}/{}: retunes", a.name);
+        }
+        assert!(!trace.events.is_empty(), "{what}: the capture must see the event stream");
+        assert_eq!(trace.summary.log_hash, plain.log_hash, "{what}: summary hash");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Full replay is bit-identical, for every golden scenario family —
+//    including after a round trip through bytes and disk.
+// ---------------------------------------------------------------------------
+
+fn check_full_replay(what: &str, build: impl Fn() -> Inputs) -> Trace {
+    let (plat, tenants, opts) = build();
+    let (live, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    // Round-trip through the binary format first: replay certifies the
+    // *serialized* trace, the thing a user actually has on disk.
+    let bytes = trace.to_bytes();
+    let back = Trace::from_bytes(&bytes).expect("decode recorded trace");
+    assert_eq!(back.to_bytes(), bytes, "{what}: canonical re-encoding");
+    let replayed = replay_full(&back).unwrap_or_else(|e| panic!("{what}: full replay: {e:#}"));
+    assert_eq!(replayed.log_hash, live.log_hash, "{what}: replay hash");
+    assert_eq!(replayed.n_events, live.n_events, "{what}: replay event count");
+    back
+}
+
+#[test]
+fn full_replay_poisson() {
+    check_full_replay("poisson", poisson_scenario);
+}
+
+#[test]
+fn full_replay_mmpp_drift_retune() {
+    let trace = check_full_replay("mmpp+drift", drift_scenario);
+    // The warm re-tune decisions must land in the control-record channel.
+    let retunes = controls_of(&trace, ControlKind::Retune);
+    assert!(!retunes.is_empty(), "the drift scenario re-tunes; capture must see it");
+    assert!(
+        retunes.iter().any(|r| r.b == 1),
+        "at least one re-tune changes the configuration (b=1): {retunes:?}"
+    );
+    assert!(
+        trace.summary.tenants.iter().any(|t| t.retunes > 0),
+        "summary counters must agree with the control records on re-tuning"
+    );
+}
+
+#[test]
+fn full_replay_trace_driven() {
+    let trace = check_full_replay("trace", trace_driven_scenario);
+    assert_eq!(trace.summary.tenants[0].offered, 80);
+    assert_eq!(trace.arrival_times(0).len(), 80, "every burst arrival is captured");
+}
+
+#[test]
+fn full_replay_sharded_with_control() {
+    check_full_replay("shard4-wtp-control", || {
+        sharded_scenario(4, BalancerPolicy::WeightedThroughput, true, 43)
+    });
+}
+
+#[test]
+fn full_replay_autoscale_tidal() {
+    let trace = check_full_replay("autoscale-tidal", autoscale_scenario);
+    // Every autoscaler transition is mirrored as a control record, and the
+    // counts must agree with the per-replica report summary.
+    let scales = controls_of(&trace, ControlKind::Scale).len() as u64;
+    let summary: u64 = trace.summary.tenants.iter().map(|t| t.scale_events).sum();
+    assert!(scales > 0, "the tide must move the autoscaler");
+    assert_eq!(scales, summary, "control records mirror the scale-event log 1:1");
+}
+
+#[test]
+fn full_replay_coplan_three_tenants() {
+    let trace = check_full_replay("coplan3", coplan_scenario);
+    let coplans = controls_of(&trace, ControlKind::Coplan);
+    assert_eq!(coplans.len(), 3, "one co-plan allocation record per tenant");
+    for (ti, rec) in coplans.iter().enumerate() {
+        assert_eq!(rec.tenant as usize, ti);
+        assert!(rec.a > 0, "tenant {ti} got a non-empty EP budget");
+    }
+}
+
+#[test]
+fn full_replay_survives_disk_round_trip() {
+    let (plat, tenants, opts) = trace_driven_scenario();
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let path =
+        std::env::temp_dir().join(format!("shisha_trace_replay_{}.trace", std::process::id()));
+    trace.save(&path).expect("save trace");
+    let loaded = Trace::load(&path).expect("load trace");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.to_bytes(), trace.to_bytes(), "disk round trip is byte-identical");
+    replay_full(&loaded).expect("full replay of the loaded trace");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Malformed traces are rejected, never trusted.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_traces_are_rejected() {
+    let (plat, tenants, opts) = trace_driven_scenario();
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let bytes = trace.to_bytes();
+    // Truncation at every byte boundary.
+    for cut in 0..bytes.len() {
+        assert!(
+            Trace::from_bytes(&bytes[..cut]).is_err(),
+            "a {cut}-byte prefix of a {}-byte trace must be rejected",
+            bytes.len()
+        );
+    }
+    // Single-byte corruption: every byte of the file is covered by the
+    // magic, the version check, or a section CRC, so any flip must error.
+    // (Stride 3 keeps the test fast; the offset sweeps all residues.)
+    for start in 0..3 {
+        for i in (start..bytes.len()).step_by(3) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(Trace::from_bytes(&bad).is_err(), "flip at byte {i} must be rejected");
+        }
+    }
+    // Garbage that is not a trace at all.
+    assert!(Trace::from_bytes(&[]).is_err());
+    assert!(Trace::from_bytes(b"not a trace file").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// 4. What-if replay conserves the captured workload under policy overrides.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn whatif_conserves_requests_across_policies() {
+    let (plat, tenants, opts) = sharded_scenario(2, BalancerPolicy::RoundRobin, false, 41);
+    let (live, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    assert!(!live.truncated);
+    let captured = trace.arrival_times(0).len() as u64;
+    assert_eq!(captured, live.tenants[0].offered, "capture sees every offered arrival");
+
+    let overrides = [
+        WhatIf::default(),
+        WhatIf { shards: Some(1), ..Default::default() },
+        WhatIf {
+            shards: Some(4),
+            balancer: Some(BalancerPolicy::WeightedThroughput),
+            ..Default::default()
+        },
+        WhatIf { balancer: Some(BalancerPolicy::JoinShortestQueue), ..Default::default() },
+        WhatIf {
+            shards: Some(4),
+            autoscale: Some(true),
+            min_shards: Some(1),
+            ..Default::default()
+        },
+    ];
+    for what_if in &overrides {
+        let report = replay_whatif(&trace, what_if)
+            .unwrap_or_else(|e| panic!("what-if {}: {e:#}", what_if.describe()));
+        // replay_whatif checks conservation internally; re-assert here so
+        // the contract is pinned by the test, not just by the library.
+        assert_eq!(
+            report.tenants[0].offered,
+            captured,
+            "what-if {} must offer exactly the captured workload",
+            what_if.describe()
+        );
+        assert!(
+            report.tenants[0].completed > 0,
+            "what-if {} completed nothing",
+            what_if.describe()
+        );
+    }
+}
+
+#[test]
+fn whatif_replay_is_deterministic() {
+    let (plat, tenants, opts) = sharded_scenario(2, BalancerPolicy::RoundRobin, false, 41);
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let what_if = WhatIf { shards: Some(4), ..Default::default() };
+    let a = replay_whatif(&trace, &what_if).expect("first what-if");
+    let b = replay_whatif(&trace, &what_if).expect("second what-if");
+    assert_eq!(a.log_hash, b.log_hash, "what-if replay must be reproducible");
+    assert_eq!(a.n_events, b.n_events);
+}
+
+#[test]
+fn whatif_grid_runs_and_conserves() {
+    let (plat, tenants, opts) = sharded_scenario(2, BalancerPolicy::RoundRobin, false, 41);
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let captured = trace.arrival_times(0).len() as u64;
+
+    let counts = [1usize, 2];
+    let balancers = [BalancerPolicy::RoundRobin, BalancerPolicy::JoinShortestQueue];
+    let scenarios = sweep::whatif_grid(&trace, &counts, &balancers).expect("build grid");
+    assert_eq!(scenarios.len(), counts.len() * balancers.len());
+    let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), scenarios.len(), "scenario names must be unique");
+
+    let outcomes = sweep::run_sweep(scenarios, 2);
+    for outcome in &outcomes {
+        let report = outcome.report.as_ref().unwrap_or_else(|e| panic!("{}: {e:#}", outcome.name));
+        assert_eq!(
+            report.tenants[0].offered,
+            captured,
+            "{}: the grid replays the same captured storm everywhere",
+            outcome.name
+        );
+    }
+}
+
+#[test]
+fn inspect_output_names_the_scenario() {
+    let (plat, tenants, opts) = coplan_scenario();
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let text = trace.describe();
+    for needle in ["hot", "warm", "cold", "coplan", "event census", "hash"] {
+        assert!(text.contains(needle), "describe() must mention {needle:?}:\n{text}");
+    }
+}

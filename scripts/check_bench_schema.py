@@ -21,7 +21,13 @@ against the copy committed at HEAD:
   warm-vs-cold `plan_speedup` must exceed 1 (the ISSUE-5 acceptance bar —
   the bench itself asserts this before writing, so a violation here means
   the file was produced some other way), and the cache hit rate must be a
-  valid fraction.
+  valid fraction;
+* `BENCH_replay.json` gets the flight-recorder envelope on the fresh run:
+  the `aggregate` case must carry the recorder metrics, the recording
+  overhead fraction must be below 1 (a capture tap that halves the engine
+  is a regression whatever the trajectory says), and the full-replay
+  throughput must be positive (replay_full verified at least one event
+  per wall-second — zero means replay never ran).
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -67,6 +73,41 @@ def check_plan_envelope(path: str, fresh_cases: dict) -> list[str]:
     return problems
 
 
+# Fresh-run envelope for BENCH_replay.json: the flight-recorder cost and
+# replay-throughput metrics the trace subsystem is tracked by.
+REPLAY_AGGREGATE_KEYS = {
+    "record_overhead_frac",
+    "live_events_per_s",
+    "recorded_events_per_s",
+    "replay_events_per_s",
+    "reps",
+}
+
+
+def check_replay_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_replay.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = REPLAY_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    overhead = aggregate.get("record_overhead_frac")
+    if isinstance(overhead, (int, float)) and overhead >= 1.0:
+        problems.append(
+            f"{path}: record_overhead_frac {overhead} must stay below 1 "
+            "(the capture tap ate the whole engine throughput)"
+        )
+    replay_eps = aggregate.get("replay_events_per_s")
+    if not isinstance(replay_eps, (int, float)) or replay_eps <= 0.0:
+        problems.append(
+            f"{path}: replay_events_per_s {replay_eps!r} must be a positive number "
+            "(full replay never re-simulated anything)"
+        )
+    return problems
+
+
 def load_fresh(path: str) -> dict:
     with open(path, encoding="utf-8") as f:
         return json.load(f)
@@ -103,6 +144,8 @@ def main(paths: list[str]) -> int:
             continue
         if path.rsplit("/", 1)[-1] == "BENCH_plan.json":
             failures.extend(check_plan_envelope(path, fresh_cases))
+        if path.rsplit("/", 1)[-1] == "BENCH_replay.json":
+            failures.extend(check_replay_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:

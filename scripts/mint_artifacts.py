@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Copy CI-measured artifacts over committed placeholders — and only over
+placeholders.
+
+The repository is grown from environments that do not always have a Rust
+toolchain, so two kinds of measured artifact start life as committed
+placeholders:
+
+* `rust/tests/golden/serve_fingerprints.txt` — header-only until a test
+  run mints the absolute `log_hash` pins;
+* `BENCH_*.json` at the repository root — full metric-key schema with
+  `null` for every value until a bench run records real numbers.
+
+CI regenerates both with real measurements on every run (uploaded as the
+`golden-fingerprints` and `bench-json` artifacts). This script, run by the
+gated `mint-artifacts` job on pushes to main, copies a fresh artifact over
+its committed counterpart **iff the committed copy is still a
+placeholder**. Committed real measurements are never overwritten, so the
+perf trajectory stays a deliberate, reviewed signal rather than CI churn.
+
+Usage:
+    mint_artifacts.py --fingerprints FRESH_PINS.txt --bench-dir FRESH_DIR
+
+Run from the repository root. Exits 0 whether or not anything was minted;
+the workflow decides whether to commit based on `git diff`.
+"""
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+REPO_FINGERPRINTS = pathlib.Path("rust/tests/golden/serve_fingerprints.txt")
+
+
+def has_pins(path: pathlib.Path) -> bool:
+    """True when the fingerprint file carries at least one pin line."""
+    if not path.is_file():
+        return False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        s = line.strip()
+        if s and not s.startswith("#"):
+            return True
+    return False
+
+
+def bench_is_placeholder(path: pathlib.Path) -> bool:
+    """True when every metric value in the committed bench file is null
+    (or the file has no cases at all)."""
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError):
+        return False  # unreadable committed copy: leave it for the schema check
+    cases = doc.get("cases")
+    if not isinstance(cases, dict) or not cases:
+        return True
+    for metrics in cases.values():
+        if isinstance(metrics, dict) and any(v is not None for v in metrics.values()):
+            return False
+    return True
+
+
+def bench_has_measurements(path: pathlib.Path) -> bool:
+    """True when the fresh bench file parses and carries a real number."""
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError):
+        return False
+    cases = doc.get("cases")
+    if not isinstance(cases, dict) or not cases:
+        return False
+    return any(
+        isinstance(metrics, dict) and any(v is not None for v in metrics.values())
+        for metrics in cases.values()
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fingerprints", type=pathlib.Path, required=True,
+                    help="freshly minted serve_fingerprints.txt from the CI artifact")
+    ap.add_argument("--bench-dir", type=pathlib.Path, required=True,
+                    help="directory of freshly measured BENCH_*.json files")
+    args = ap.parse_args()
+
+    minted = []
+
+    if has_pins(REPO_FINGERPRINTS):
+        print(f"{REPO_FINGERPRINTS}: already carries pins, leaving committed copy alone")
+    elif has_pins(args.fingerprints):
+        shutil.copyfile(args.fingerprints, REPO_FINGERPRINTS)
+        minted.append(str(REPO_FINGERPRINTS))
+    else:
+        print(f"{args.fingerprints}: fresh artifact has no pins either, nothing to mint")
+
+    for fresh in sorted(args.bench_dir.glob("BENCH_*.json")):
+        committed = pathlib.Path(fresh.name)
+        if not committed.is_file():
+            print(f"{committed}: not committed at the repo root, skipping")
+            continue
+        if not bench_is_placeholder(committed):
+            print(f"{committed}: committed copy carries measurements, leaving it alone")
+            continue
+        if not bench_has_measurements(fresh):
+            print(f"{fresh}: fresh artifact carries no measurements, nothing to mint")
+            continue
+        shutil.copyfile(fresh, committed)
+        minted.append(str(committed))
+
+    if minted:
+        print("minted over placeholders:")
+        for path in minted:
+            print(f"  {path}")
+    else:
+        print("nothing minted")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
