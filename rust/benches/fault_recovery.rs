@@ -1,0 +1,224 @@
+//! Fault-plane recovery: time-to-recover, goodput retained, re-plan cost.
+//!
+//! One scripted disaster on the serving fixture (SynthNet on the 8-EP C5
+//! platform, the tidal MMPP storm the other serve benches use): the
+//! *strongest* EP fail-stops a third of the way into the horizon. Three
+//! questions:
+//!
+//! 1. **How fast does the control loop recover?** From the recorded trace:
+//!    the tag-7 fault event marks detection, the failover control records
+//!    mark the drain + re-plan; `recovery_epochs` is the distance in
+//!    control epochs between the two. The acceptance envelope
+//!    (scripts/check_bench_schema.py) requires ≤ 2 epochs; detection is
+//!    event-driven, so the expected value is 0.
+//! 2. **How much goodput survives?** `goodput_retained_frac` is the
+//!    faulted run's SLO goodput over the fault-free run's, side by side
+//!    with `surviving_capacity_frac` (the analytic throughput of the
+//!    platform minus the dead EP over the full platform) so the retained
+//!    fraction can be judged against what the hardware still offers.
+//! 3. **What does the re-plan cost?** `plan_shards_with` on the surviving
+//!    subset, cold cache vs warm cache — the warm path is what the
+//!    failover actually pays mid-run.
+//!
+//! Request conservation (offered == completed + rejected + dropped +
+//! in-flight) is asserted for both runs before anything is written, so a
+//! failover that loses requests can never mint numbers. Results go to
+//! `BENCH_fault.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench fault_recovery            # full profile
+//! cargo bench --bench fault_recovery -- --quick # CI profile
+//! ```
+
+use std::time::Instant;
+
+use shisha::explore::PlanCache;
+use shisha::metrics::bench::JsonReport;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{
+    plan_shards_with, serve_traced, shisha_config, AdmissionPolicy, ArrivalProcess,
+    BalancerPolicy, ControlKind, FaultEvent, FaultKind, FaultScript, ServeOptions, TenantReport,
+    TenantSpec,
+};
+
+fn assert_conserved(t: &TenantReport, label: &str) {
+    assert_eq!(
+        t.offered,
+        t.completed + t.rejected + t.dropped + t.in_flight,
+        "{label}: requests must be conserved across the fault plane"
+    );
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = if quick { 10.0 } else { 30.0 };
+    let reps = if quick { 3 } else { 7 };
+    let epoch_s = duration_s / 20.0;
+    let failed = plat.eps_by_rank()[0];
+    let fault_t = duration_s / 3.0;
+    println!(
+        "C5 ({} EPs), synthnet capacity {:.1} req/s; horizon {duration_s}s, epoch {epoch_s}s; \
+         fail-stop of EP {failed} (strongest) at t={fault_t:.2}s\n",
+        plat.n_eps(),
+        cap
+    );
+
+    let tenant = TenantSpec::new(
+        "storm",
+        net.clone(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: duration_s / 6.0,
+            mean_high_s: duration_s / 6.0,
+        },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(16)
+    .with_admission(AdmissionPolicy::DropOldest)
+    .with_slo(200.0 / cap);
+    let tenants = vec![(tenant, config.clone())];
+    let base = ServeOptions {
+        duration_s,
+        seed: 42,
+        control_epoch_s: epoch_s,
+        ..Default::default()
+    };
+
+    // Fault-free baseline and the faulted run share arrivals (same seed,
+    // same tenants); the only delta is the scripted fail-stop.
+    let (free, _) = serve_traced(&plat, tenants.clone(), &base).expect("fault-free serve");
+    assert_conserved(&free.tenants[0], "fault-free");
+    let goodput_free = free.goodputs()[0];
+
+    let faulted_opts = ServeOptions {
+        faults: FaultScript {
+            events: vec![FaultEvent { t_s: fault_t, kind: FaultKind::EpFail { ep: failed } }],
+        },
+        ..base.clone()
+    };
+    let (rep, trace) = serve_traced(&plat, tenants.clone(), &faulted_opts).expect("faulted serve");
+    assert_conserved(&rep.tenants[0], "faulted");
+    let goodput_faulted = rep.goodputs()[0];
+    let retained = goodput_faulted / goodput_free;
+
+    // Recovery, read off the recorded trace: the tag-7 begin event is the
+    // injection instant, the fault control record the detection, and the
+    // last failover record the completed drain + re-plan.
+    let t_inject = trace
+        .events
+        .iter()
+        .find(|e| e.tag == 7 && e.b == 1)
+        .expect("fault event recorded in the trace")
+        .t_s;
+    let t_detect = trace
+        .controls
+        .iter()
+        .find(|c| c.kind == ControlKind::Fault)
+        .expect("fault control record")
+        .t_s;
+    let t_replanned = trace
+        .controls
+        .iter()
+        .filter(|c| c.kind == ControlKind::Failover)
+        .map(|c| c.t_s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(t_replanned.is_finite(), "failover control record(s) must exist");
+    let detect_lag_s = t_detect - t_inject;
+    let recovery_s = t_replanned - t_inject;
+    let recovery_epochs = (recovery_s / epoch_s).ceil().max(0.0);
+    assert!(
+        recovery_epochs <= 2.0,
+        "failover must settle within 2 control epochs, took {recovery_epochs}"
+    );
+    println!(
+        "recovery: inject t={t_inject:.3}s, detect lag {detect_lag_s:.3}s, re-plan done \
+         {recovery_s:.3}s after injection ({recovery_epochs:.0} epoch(s))"
+    );
+
+    // Surviving capacity: the analytic throughput of the platform minus
+    // the dead EP, re-planned from scratch, over the full platform's.
+    let surviving: Vec<usize> = (0..plat.n_eps()).filter(|&e| e != failed).collect();
+    let sub = plat.subset(&surviving);
+    let sub_config = shisha_config(&net, &sub);
+    let sub_db = PerfDb::build(&net, &sub, &CostModel::default());
+    let cap_surv = simulator::throughput(&net, &sub, &sub_db, &sub_config);
+    let capacity_frac = cap_surv / cap;
+    assert!(retained.is_finite() && retained > 0.0, "retained goodput fraction {retained}");
+    println!(
+        "goodput: fault-free {goodput_free:.1} req/s, faulted {goodput_faulted:.1} req/s \
+         (retained {:.1}%); surviving capacity {:.1}% of full",
+        retained * 1e2,
+        capacity_frac * 1e2
+    );
+
+    // Re-plan latency on the surviving subset: cold cache (first disaster)
+    // vs warm cache (what the running failover pays). Best-of-reps on both
+    // sides so the ratio compares optima, not noise.
+    let max_shards = 2;
+    let mut cold_wall = f64::INFINITY;
+    for _ in 0..reps {
+        let cache = PlanCache::new();
+        let t0 = Instant::now();
+        plan_shards_with(&net, &sub, max_shards, 1, &cache).expect("cold re-plan");
+        cold_wall = cold_wall.min(t0.elapsed().as_secs_f64());
+    }
+    let warm_cache = PlanCache::new();
+    plan_shards_with(&net, &sub, max_shards, 1, &warm_cache).expect("warm-up plan");
+    let mut warm_wall = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        plan_shards_with(&net, &sub, max_shards, 1, &warm_cache).expect("warm re-plan");
+        warm_wall = warm_wall.min(t0.elapsed().as_secs_f64());
+    }
+    let speedup = cold_wall / warm_wall.max(1e-12);
+    println!(
+        "re-plan: cold {:.3} ms, warm {:.3} ms ({speedup:.1}x)",
+        cold_wall * 1e3,
+        warm_wall * 1e3
+    );
+
+    let mut json = JsonReport::new();
+    json.note(
+        "fault_recovery: fail-stop of the strongest C5 EP a third into the synthnet tidal MMPP \
+         storm. recovery_epochs = control epochs from the tag-7 injection event to the last \
+         failover control record (detection is event-driven, so 0 is expected; the envelope is \
+         <= 2); goodput_retained_frac = faulted/fault-free SLO goodput on shared arrivals, \
+         beside surviving_capacity_frac (analytic subset-over-full throughput) for judging it; \
+         replan_cold_ms/replan_warm_ms time plan_shards_with on the surviving subset with an \
+         empty vs primed PlanCache (best of N reps). Request conservation is asserted for both \
+         runs before anything is written.",
+    );
+    json.metric("recovery", "inject_t_s", t_inject);
+    json.metric("recovery", "detect_lag_s", detect_lag_s);
+    json.metric("recovery", "recovery_s", recovery_s);
+    json.metric("recovery", "recovery_epochs", recovery_epochs);
+    json.metric("goodput", "fault_free_rps", goodput_free);
+    json.metric("goodput", "faulted_rps", goodput_faulted);
+    json.metric("goodput", "retained_frac", retained);
+    json.metric("goodput", "surviving_capacity_frac", capacity_frac);
+    json.metric("replan", "cold_ms", cold_wall * 1e3);
+    json.metric("replan", "warm_ms", warm_wall * 1e3);
+    json.metric("replan", "speedup", speedup);
+    json.metric("aggregate", "recovery_epochs", recovery_epochs);
+    json.metric("aggregate", "goodput_retained_frac", retained);
+    json.metric("aggregate", "surviving_capacity_frac", capacity_frac);
+    json.metric("aggregate", "replan_warm_ms", warm_wall * 1e3);
+    json.metric("aggregate", "replan_speedup", speedup);
+    json.metric("aggregate", "reps", f64::from(reps));
+
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_fault.json");
+    json.write(&bench_path).expect("write BENCH_fault.json");
+    println!("\nwrote {}", bench_path.display());
+}

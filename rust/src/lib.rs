@@ -169,6 +169,49 @@
 //! (recording overhead vs live serving — the capture-tap budget is ≤ 5% —
 //! plus full-replay and what-if events/s and the format's bytes/event).
 //!
+//! ## Fault tolerance & graceful degradation
+//!
+//! The fault plane ([`serve::fault`]) makes failure a first-class,
+//! *deterministic* input to the simulation — a scripted disaster is as
+//! reproducible and golden-pinnable as a scripted workload:
+//!
+//! * **injection** — a validated [`serve::FaultScript`] (CLI: `serve
+//!   --faults "epfail:0@5; epslow:3x2.5@10+20; linkcut@30+5"`, or
+//!   `--chaos SEED` for a generated-but-valid script) schedules EP
+//!   fail-stops, transient stalls, slowdowns, chiplet failures and
+//!   inter-chiplet link degradation/cuts as ordinary heap events in the
+//!   engine. Fault events are hashed into the event log (trace tag 7),
+//!   so an empty script leaves every hash byte-identical and a faulted
+//!   run records, replays (`serve --replay`) and counterfactualizes
+//!   (`--what-if faults=SCRIPT`, `faults=none`) bit-identically like any
+//!   other run. [`serve::FaultScript::validate`] rejects out-of-range
+//!   ids, non-positive windows, per-EP overlapping windows and scripts
+//!   that fail-stop every EP, each with an actionable error;
+//! * **detect → drain → re-plan failover** — detection is event-driven
+//!   (the control loop reacts in the same simulated instant, no polling
+//!   epoch): in-flight work on a downed replica is drained and requeued
+//!   with **zero request loss** (offered == completed + rejected +
+//!   dropped + in-flight holds through every disaster —
+//!   property-tested across chaos seeds in `tests/fault_plane.rs`), and
+//!   the tenant re-plans onto the surviving EP subset through the same
+//!   [`serve::plan_shards`] partition-then-tune driver (a warm
+//!   [`explore::PlanCache`] hit on repeat disasters). No post-failover
+//!   placement ever touches a dead EP; transient faults hand the EPs
+//!   back on expiry and the plan re-adopts the full home set;
+//! * **graceful degradation** — when surviving capacity cannot carry
+//!   demand, admission sheds whole tenants by ascending
+//!   [`serve::TenantSpec::weight`] (the co-planner's priority knob, so
+//!   the cheapest tenants brown out first) and re-admits them
+//!   automatically once faults clear — every shed/re-admit decision is a
+//!   control record ([`serve::ControlKind::Shed`]) in the trace;
+//! * **measurement** — `serve --sweep --fault-grid 2,4` grids fault
+//!   severity × load × seed against a fault-free baseline
+//!   ([`serve::sweep::fault_grid`]), and `cargo bench --bench
+//!   fault_recovery` writes `BENCH_fault.json`: time-to-recover in
+//!   control epochs (envelope: ≤ 2), goodput retained under a
+//!   strongest-EP fail-stop beside the analytic surviving-capacity
+//!   fraction, and cold- vs warm-cache re-plan latency.
+//!
 //! ## Performance
 //!
 //! The serving event loop is the hottest code in the crate; its steady

@@ -4,7 +4,8 @@
 //!
 //! * `explore`    — run explorers against the perf database (paper mode)
 //! * `serve`      — multi-tenant discrete-event serving with online re-tuning
-//!                  (`--record`/`--replay` drive the flight recorder)
+//!                  (`--record`/`--replay` drive the flight recorder,
+//!                  `--faults`/`--chaos` the deterministic fault plane)
 //! * `trace`      — inspect a recorded `.trace` file
 //! * `run`        — live pipeline + online tuning over PJRT artifacts
 //! * `platforms`  — print Table 1 EP kinds and Table 3 configs C1–C5
@@ -33,8 +34,8 @@ use shisha::pipeline::space;
 use shisha::platform::configs;
 use shisha::runtime::Manifest;
 use shisha::serve::{
-    replay_full, replay_whatif, AdmissionPolicy, ArrivalProcess, ServeOptions, TenantSpec, Trace,
-    WhatIf,
+    replay_full, replay_whatif, AdmissionPolicy, ArrivalProcess, FaultScript, ServeOptions,
+    TenantSpec, Trace, WhatIf,
 };
 
 fn main() {
@@ -68,6 +69,259 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
+/// One CLI flag of a subcommand surface. The same table feeds both the
+/// rendered usage text and `Args::expect_known`, so the help can never
+/// drift from what the parser actually accepts.
+struct FlagSpec {
+    /// Flag name without the leading `--`.
+    name: &'static str,
+    /// Value placeholder (empty for boolean flags).
+    value: &'static str,
+    /// One-line help text.
+    help: &'static str,
+}
+
+const SERVE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "tenants",
+        value: "N",
+        help: "number of tenants (default 2)",
+    },
+    FlagSpec {
+        name: "nets",
+        value: "A,B,..",
+        help: "networks dealt round-robin (default synthnet)",
+    },
+    FlagSpec {
+        name: "platform",
+        value: "c1..c5",
+        help: "platform configuration (default c3)",
+    },
+    FlagSpec {
+        name: "duration",
+        value: "S",
+        help: "simulated horizon in seconds (default 60)",
+    },
+    FlagSpec {
+        name: "arrivals",
+        value: "SPEC[;..]",
+        help: "per-tenant arrivals (SPEC grammar below)",
+    },
+    FlagSpec {
+        name: "slo-ms",
+        value: "MS",
+        help: "per-request latency SLO (default 250)",
+    },
+    FlagSpec {
+        name: "queue",
+        value: "N",
+        help: "admission queue capacity (default 64)",
+    },
+    FlagSpec {
+        name: "batch",
+        value: "N",
+        help: "service batch size (default 1)",
+    },
+    FlagSpec {
+        name: "epoch",
+        value: "S",
+        help: "control-loop epoch in seconds (default 5)",
+    },
+    FlagSpec {
+        name: "policy",
+        value: "P",
+        help: "admission policy: reject | drop-oldest",
+    },
+    FlagSpec {
+        name: "seed",
+        value: "N",
+        help: "master RNG seed (default 42)",
+    },
+    FlagSpec {
+        name: "shards",
+        value: "K",
+        help: "replicate tenants on up to K disjoint EP subsets",
+    },
+    FlagSpec {
+        name: "balancer",
+        value: "B",
+        help: "front-end routing: rr | jsq | wtp",
+    },
+    FlagSpec {
+        name: "coplan",
+        value: "",
+        help: "water-fill disjoint EP budgets across tenants",
+    },
+    FlagSpec {
+        name: "autoscale",
+        value: "",
+        help: "activate/drain/park replicas with the load",
+    },
+    FlagSpec {
+        name: "min-shards",
+        value: "K",
+        help: "autoscaler active-replica floor, default 1",
+    },
+    FlagSpec {
+        name: "faults",
+        value: "SCRIPT",
+        help: "scripted fault plane (SCRIPT grammar below)",
+    },
+    FlagSpec {
+        name: "chaos",
+        value: "SEED",
+        help: "generate a valid 4-fault script from SEED",
+    },
+    FlagSpec {
+        name: "no-control",
+        value: "",
+        help: "disable the online re-tuning loop",
+    },
+    FlagSpec {
+        name: "no-contention",
+        value: "",
+        help: "disable EP/link time-slicing",
+    },
+    FlagSpec {
+        name: "csv",
+        value: "FILE",
+        help: "write the latency table as CSV",
+    },
+    FlagSpec {
+        name: "record",
+        value: "FILE.trace",
+        help: "capture the run with the flight recorder",
+    },
+    FlagSpec {
+        name: "replay",
+        value: "FILE.trace",
+        help: "re-simulate a trace, bit-identical",
+    },
+    FlagSpec {
+        name: "what-if",
+        value: "K=V,..",
+        help: "with --replay: counterfactual overrides (incl. faults)",
+    },
+];
+
+const SERVE_SWEEP_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "sweep",
+        value: "",
+        help: "select the parallel scenario-grid mode",
+    },
+    FlagSpec {
+        name: "nets",
+        value: "A,B,..",
+        help: "one grid per network (default synthnet)",
+    },
+    FlagSpec {
+        name: "platform",
+        value: "c1..c5",
+        help: "platform configuration (default c5)",
+    },
+    FlagSpec {
+        name: "tenant-grid",
+        value: "1,2,4",
+        help: "tenant counts of the load grid",
+    },
+    FlagSpec {
+        name: "rho-grid",
+        value: "0.3,..",
+        help: "offered-load factors (default 0.3,0.7,1.2)",
+    },
+    FlagSpec {
+        name: "seeds",
+        value: "A,B,..",
+        help: "RNG seeds, one column per seed (default 42)",
+    },
+    FlagSpec {
+        name: "shard-grid",
+        value: "1,2,4",
+        help: "side-by-side shard counts on MMPP drift",
+    },
+    FlagSpec {
+        name: "autoscale-grid",
+        value: "1,2,4",
+        help: "static shard counts vs autoscaler, tidal load",
+    },
+    FlagSpec {
+        name: "fault-grid",
+        value: "2,4",
+        help: "severity grid: baseline/throttle/fail-stop",
+    },
+    FlagSpec {
+        name: "balancer",
+        value: "B",
+        help: "front-end routing: rr | jsq | wtp, default jsq",
+    },
+    FlagSpec {
+        name: "threads",
+        value: "N",
+        help: "worker threads (default: all cores)",
+    },
+    FlagSpec {
+        name: "duration",
+        value: "S",
+        help: "horizon per scenario in seconds (default 20)",
+    },
+    FlagSpec {
+        name: "epoch",
+        value: "S",
+        help: "control epoch (grids default to horizon/40)",
+    },
+    FlagSpec {
+        name: "full-rescan",
+        value: "",
+        help: "use the full-rescan pump instead of event-driven",
+    },
+    FlagSpec {
+        name: "no-control",
+        value: "",
+        help: "disable the online re-tuning loop",
+    },
+    FlagSpec {
+        name: "no-contention",
+        value: "",
+        help: "disable EP/link time-slicing",
+    },
+    FlagSpec {
+        name: "csv",
+        value: "FILE",
+        help: "write the outcome table as CSV",
+    },
+    FlagSpec {
+        name: "replay",
+        value: "FILE.trace",
+        help: "what-if grid over one recorded trace",
+    },
+];
+
+/// The flag names of a table, in `Args::expect_known` form.
+fn flag_names(flags: &[FlagSpec]) -> Vec<&'static str> {
+    flags.iter().map(|f| f.name).collect()
+}
+
+/// Render one aligned `--flag VALUE  help` line per table entry.
+fn render_flags(flags: &[FlagSpec], indent: &str) -> String {
+    let lhs: Vec<String> = flags
+        .iter()
+        .map(|f| {
+            if f.value.is_empty() {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} {}", f.name, f.value)
+            }
+        })
+        .collect();
+    let width = lhs.iter().map(String::len).max().unwrap_or(0);
+    let mut out = String::new();
+    for (l, f) in lhs.iter().zip(flags) {
+        out.push_str(&format!("{indent}{l:<width$}  {}\n", f.help));
+    }
+    out
+}
+
 fn print_usage() {
     println!(
         "shisha {} — online scheduling of CNN pipelines on heterogeneous architectures\n\n\
@@ -75,52 +329,27 @@ fn print_usage() {
          SUBCOMMANDS:\n\
            explore     --net <name> --platform <c1..c5> [--algo all|shisha|sa|hc|rw|es|ps]\n\
                        [--alpha N] [--heuristic h1..h6] [--config file.toml]\n\
-           serve       [--tenants N] [--nets a,b,..] [--platform c3] [--duration S]\n\
-                       [--arrivals SPEC[;SPEC..]] [--slo-ms MS] [--queue N] [--batch N]\n\
-                       [--epoch S] [--policy reject|drop-oldest] [--seed N]\n\
-                       [--shards K] [--balancer rr|jsq|wtp]\n\
-                       [--coplan] [--autoscale] [--min-shards K]\n\
-                       [--no-control] [--no-contention] [--csv FILE]\n\
-                       [--record FILE.trace]\n\
-                       [--replay FILE.trace [--what-if shards=K,balancer=P,..]]\n\
-                       SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
-                             | piecewise:R@T,R@T,.. | trace:FILE\n\
-                       --shards K replicates each tenant's pipeline over up to K\n\
-                       disjoint EP subsets (placement search); --balancer picks the\n\
-                       front-end routing: rr = round-robin, jsq = join-shortest-queue,\n\
-                       wtp = throughput-weighted round-robin\n\
-                       --coplan allocates disjoint EP budgets across tenants jointly\n\
-                       (weighted water-filling, never worse than greedy first-come);\n\
-                       --autoscale activates/drains/parks replicas with the load at\n\
-                       every control epoch (floor --min-shards, default 1)\n\
-                       --record captures the run into a binary flight-recorder\n\
-                       trace; --replay re-simulates one: bit-identical full replay\n\
-                       by default (errors on any divergence), or an arrivals-only\n\
-                       counterfactual with --what-if overrides (keys: shards,\n\
-                       balancer, autoscale, min-shards, coplan)\n\
-           serve --sweep  parallel scenario grid: [--nets synthnet] [--platform c5]\n\
-                       [--tenant-grid 1,2,4] [--rho-grid 0.3,0.7,1.2] [--seeds 42]\n\
-                       [--shard-grid 1,2,4 | --autoscale-grid 1,2,4] [--balancer rr|jsq|wtp]\n\
-                       [--threads N] [--duration S] [--epoch S] [--full-rescan]\n\
-                       [--no-control] [--no-contention] [--csv FILE]\n\
-                       [--replay FILE.trace]\n\
-                       --shard-grid swaps the tenant-count grid for a side-by-side\n\
-                       shard-count comparison on an MMPP drift workload;\n\
-                       --autoscale-grid compares static shard counts against the\n\
-                       runtime autoscaler on an MMPP tidal workload (goodput and\n\
-                       EP-epochs per cell);\n\
-                       --replay fans one recorded trace across a what-if policy\n\
-                       grid (--shard-grid shard counts x balancers) instead of\n\
-                       synthesizing workloads\n\
-           trace       inspect FILE.trace — print a recorded trace's inputs,\n\
-                       event census, per-tenant counters and control decisions\n\
+           serve       multi-tenant discrete-event serving with online re-tuning:",
+        shisha::VERSION
+    );
+    print!("{}", render_flags(SERVE_FLAGS, "                 "));
+    println!(
+        "                 SPEC: poisson:R | mmpp:lo,hi,tl,th | diurnal:R,amp,period\n\
+         \x20                      | piecewise:R@T,R@T,.. | trace:FILE\n\
+         \x20                SCRIPT: epfail:EP@T | epstall:EP@T+D | epslow:EPxF@T+D\n\
+         \x20                      | chipfail:C@T | linkslow:F@T+D | linkcut@T+D\n\
+           serve --sweep  parallel scenario grid (grids are mutually exclusive):"
+    );
+    print!("{}", render_flags(SERVE_SWEEP_FLAGS, "                 "));
+    println!(
+        "           trace       inspect FILE.trace — print a recorded trace's inputs,\n\
+         \x20                      event census, per-tenant counters and control decisions\n\
            run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
            stream      [--size GB] [--hbm GB]\n\
            seed        --net <name> --platform <name> [--choice rankl|rankw|random]\n\
-           version",
-        shisha::VERSION
+           version"
     );
 }
 
@@ -233,38 +462,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has_flag("sweep") {
         return cmd_serve_sweep(args);
     }
-    args.expect_known(&[
-        "tenants",
-        "nets",
-        "platform",
-        "duration",
-        "arrivals",
-        "slo-ms",
-        "queue",
-        "batch",
-        "epoch",
-        "policy",
-        "seed",
-        "shards",
-        "balancer",
-        "coplan",
-        "autoscale",
-        "min-shards",
-        "no-control",
-        "no-contention",
-        "csv",
-        "record",
-        "replay",
-        "what-if",
-    ])?;
+    args.expect_known(&flag_names(SERVE_FLAGS))?;
     if let Some(path) = args.get("replay") {
         if args.get("record").is_some() {
             bail!("--record and --replay are mutually exclusive");
+        }
+        if args.get("faults").is_some() {
+            bail!(
+                "--faults conflicts with --replay: a full replay re-simulates the recorded \
+                 fault script bit-identically — use --what-if faults=SCRIPT (or faults=none) \
+                 to re-simulate the captured arrivals under a different script"
+            );
+        }
+        if args.get("chaos").is_some() {
+            bail!(
+                "--chaos conflicts with --replay: use --what-if faults=SCRIPT to re-simulate \
+                 the captured arrivals under a different fault script"
+            );
         }
         return cmd_serve_replay(args, path);
     }
     if args.get("what-if").is_some() {
         bail!("--what-if requires --replay FILE.trace");
+    }
+    if args.get("faults").is_some() && args.get("chaos").is_some() {
+        bail!("--faults and --chaos are mutually exclusive (scripted vs generated fault plane)");
     }
     let n_tenants: usize = args.parsed_or("tenants", 2)?;
     if n_tenants == 0 {
@@ -286,8 +508,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "drop-oldest" | "dropoldest" => AdmissionPolicy::DropOldest,
         other => bail!("unknown --policy {other:?} (reject, drop-oldest)"),
     };
+    let duration_s: f64 = args.parsed_or("duration", 60.0)?;
+    let faults = if let Some(script) = args.get("faults") {
+        FaultScript::parse(script)?
+    } else if let Some(seed) = args.get_parsed::<u64>("chaos")? {
+        FaultScript::chaos(seed, &plat, duration_s, 4)
+    } else {
+        FaultScript::default()
+    };
     let opts = ServeOptions {
-        duration_s: args.parsed_or("duration", 60.0)?,
+        duration_s,
         seed: args.parsed_or("seed", 42)?,
         control: !args.has_flag("no-control"),
         control_epoch_s: args.parsed_or("epoch", 5.0)?,
@@ -298,6 +528,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             min_shards: args.parsed_or("min-shards", 1)?,
             ..Default::default()
         },
+        faults,
         ..Default::default()
     };
 
@@ -341,6 +572,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "autoscaling: replicas activate/drain/park per control epoch (floor {})",
             opts.autoscale.min_shards
         );
+    }
+    if !opts.faults.is_empty() {
+        println!("fault plane: {}", opts.faults.describe());
     }
     let report = if let Some(path) = args.get("record") {
         let (report, trace) = shisha::serve::serve_traced(&plat, tenants, &opts)?;
@@ -503,25 +737,7 @@ where
 /// wall-clock event rates.
 fn cmd_serve_sweep(args: &Args) -> Result<()> {
     use shisha::serve::sweep;
-    args.expect_known(&[
-        "sweep",
-        "nets",
-        "platform",
-        "duration",
-        "epoch",
-        "seeds",
-        "tenant-grid",
-        "rho-grid",
-        "shard-grid",
-        "autoscale-grid",
-        "balancer",
-        "threads",
-        "full-rescan",
-        "no-control",
-        "no-contention",
-        "csv",
-        "replay",
-    ])?;
+    args.expect_known(&flag_names(SERVE_SWEEP_FLAGS))?;
     let plat = configs::by_name(args.get_or("platform", "c5")).context("unknown platform")?;
     let net_names: Vec<String> = args
         .get_or("nets", "synthnet")
@@ -572,6 +788,21 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             bail!("--shard-grid and --autoscale-grid are mutually exclusive");
         }
     }
+    let fault_grid: Option<Vec<f64>> = match args.get("fault-grid") {
+        Some(s) => Some(parse_list("fault-grid", s)?),
+        None => None,
+    };
+    if let Some(severities) = &fault_grid {
+        if severities.iter().any(|&f| !(f > 1.0) || !f.is_finite()) {
+            bail!("--fault-grid severities must be finite slowdown factors > 1");
+        }
+        if shard_grid.is_some() {
+            bail!("--shard-grid and --fault-grid are mutually exclusive");
+        }
+        if autoscale_grid.is_some() {
+            bail!("--autoscale-grid and --fault-grid are mutually exclusive");
+        }
+    }
     let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
     if let Some(path) = args.get("replay") {
@@ -579,6 +810,12 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         // every cell re-simulating the same recorded arrival streams
         if autoscale_grid.is_some() {
             bail!("--replay and --autoscale-grid are mutually exclusive");
+        }
+        if fault_grid.is_some() {
+            bail!(
+                "--replay and --fault-grid are mutually exclusive (use \
+                 serve --replay FILE --what-if faults=SCRIPT for fault counterfactuals)"
+            );
         }
         let trace = Trace::load(std::path::Path::new(path))?;
         print!("{}", trace.describe());
@@ -599,7 +836,24 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                 .with_context(|| format!("unknown network {net_name:?}"))?;
             let config = shisha::serve::shisha_config(&net, &plat);
             println!("  {}: Shisha config {}", net.name, config.describe());
-            if let Some(counts) = &autoscale_grid {
+            if let Some(severities) = &fault_grid {
+                // degradation decisions are epoch-driven; give the control
+                // loop many epochs per tide unless set explicitly
+                let mut fault_base = base.clone();
+                if args.get("epoch").is_none() {
+                    fault_base.control_epoch_s = fault_base.duration_s / 40.0;
+                }
+                scenarios.extend(sweep::fault_grid(
+                    &plat,
+                    &net,
+                    &config,
+                    severities,
+                    balancer,
+                    &rho_grid,
+                    &seeds,
+                    &fault_base,
+                ));
+            } else if let Some(counts) = &autoscale_grid {
                 // the tidal comparison wants many control epochs per dwell
                 // phase; default the epoch to horizon/40 unless set explicitly
                 let mut auto_base = base.clone();

@@ -102,6 +102,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use anyhow::{bail, Result};
 
 use crate::coordinator::AdaptiveController;
+use crate::explore::PlanCache;
 use crate::perfdb::{batch, CostModel, PerfDb};
 use crate::pipeline::{simulator, PipelineConfig};
 use crate::platform::{EpId, Platform};
@@ -112,6 +113,7 @@ use super::cluster::autoscale::{
     self, AutoscaleOptions, AutoscaleState, ReplicaState, ScaleDecision, ScaleEvent, TenantLoad,
 };
 use super::cluster::coplan;
+use super::fault::{FaultKind, FaultScript};
 use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
@@ -177,6 +179,35 @@ pub struct ServeOptions {
     /// ([`crate::serve::cluster::autoscale`]). Requires
     /// `control_epoch_s > 0`.
     pub autoscale: AutoscaleOptions,
+    /// Deterministic fault plane: scripted EP fail-stop/stall/slowdown and
+    /// inter-chiplet link degradation/cut, injected as heap events and
+    /// hashed into the event log (tag 7). An empty script schedules
+    /// nothing — fault-free runs keep their exact event stream. See
+    /// [`FaultScript`] and the crate docs §Fault tolerance & graceful
+    /// degradation.
+    pub faults: FaultScript,
+}
+
+impl ServeOptions {
+    /// Validate the options against the platform they will serve on:
+    /// positive horizon, a coherent autoscaler setup, and a fault script
+    /// whose every event references in-range resources with well-formed,
+    /// non-overlapping windows ([`FaultScript::validate`]). Called by
+    /// [`serve`] before any state is built, so a bad script is rejected
+    /// at construction time, not mid-run.
+    pub fn validate(&self, plat: &Platform) -> Result<()> {
+        if self.duration_s <= 0.0 {
+            bail!("serve: duration must be positive");
+        }
+        if self.autoscale.enabled {
+            self.autoscale.validate()?;
+            if self.control_epoch_s <= 0.0 {
+                bail!("serve: the autoscaler is epoch-driven — set control_epoch_s > 0");
+            }
+        }
+        self.faults.validate(plat)?;
+        Ok(())
+    }
 }
 
 impl Default for ServeOptions {
@@ -195,6 +226,7 @@ impl Default for ServeOptions {
             pump: PumpMode::EventDriven,
             coplan: false,
             autoscale: AutoscaleOptions::default(),
+            faults: FaultScript::default(),
         }
     }
 }
@@ -462,6 +494,10 @@ enum EvKind {
     StageDone { tenant: usize, shard: usize, stage: usize, gen: u64 },
     Epoch,
     Resume { tenant: usize, shard: usize },
+    /// A scripted fault boundary: `ix` indexes [`ServeOptions::faults`],
+    /// `begin` distinguishes the window start from its end (fail-stops
+    /// have no end event).
+    Fault { ix: usize, begin: bool },
 }
 
 /// Pack a (tenant, shard) pair into one hash/log word. Shard counts are
@@ -512,6 +548,22 @@ struct Shared {
     /// Flight-recorder sink ([`super::trace`]); `None` outside recorded
     /// runs, so the unrecorded hot path pays one branch per event.
     capture: Option<Capture>,
+    // Fault-plane state. Transient windows are stored as "until"
+    // timestamps, so resource health is a pure function of `now` — window
+    // ends never have to *clear* anything, they only trigger recovery.
+    /// Permanently fail-stopped EPs (global ids).
+    ep_failed: Vec<bool>,
+    /// Per-EP transient-stall window end (0.0 = none active).
+    ep_stall_until: Vec<f64>,
+    /// Per-EP thermal-throttle factor, in force while `now` is before the
+    /// matching `ep_throttle_until` entry (1.0 otherwise).
+    ep_throttle: Vec<f64>,
+    ep_throttle_until: Vec<f64>,
+    /// Inter-chiplet link cut window end.
+    link_cut_until: f64,
+    /// Link degradation factor + window end, same shape as EP throttle.
+    link_throttle: f64,
+    link_throttle_until: f64,
 }
 
 impl Shared {
@@ -543,6 +595,46 @@ impl Shared {
         if let Some(cap) = &mut self.capture {
             cap.control(rec);
         }
+    }
+
+    /// Is global EP `gep` unable to serve at `now` (failed or stalled)?
+    fn ep_down(&self, gep: usize, now: f64) -> bool {
+        self.ep_failed[gep] || now < self.ep_stall_until[gep]
+    }
+
+    /// Thermal-throttle slowdown of global EP `gep` at `now` (1.0 when
+    /// healthy; multiplying by it is bit-exact identity for fault-free
+    /// runs).
+    fn ep_fault_factor(&self, gep: usize, now: f64) -> f64 {
+        if now < self.ep_throttle_until[gep] {
+            self.ep_throttle[gep]
+        } else {
+            1.0
+        }
+    }
+
+    /// Is the inter-chiplet link cut at `now`?
+    fn link_cut(&self, now: f64) -> bool {
+        now < self.link_cut_until
+    }
+
+    /// Link degradation factor at `now` (1.0 when healthy).
+    fn link_fault_factor(&self, now: f64) -> f64 {
+        if now < self.link_throttle_until {
+            self.link_throttle
+        } else {
+            1.0
+        }
+    }
+
+    /// Any fault in force at `now`? Gates graceful degradation: with no
+    /// active fault every shed tenant is re-admitted.
+    fn any_fault_active(&self, now: f64) -> bool {
+        self.link_cut(now)
+            || now < self.link_throttle_until
+            || self.ep_failed.iter().any(|&f| f)
+            || self.ep_stall_until.iter().any(|&u| now < u)
+            || self.ep_throttle_until.iter().any(|&u| now < u)
     }
 }
 
@@ -604,6 +696,14 @@ struct ShardRt {
     state: ReplicaState,
     /// Scale transitions (time + state entered), for the report.
     scale_log: Vec<ScaleEvent>,
+    /// The EP subset this replica was planned onto at serve start (global
+    /// ids). Failover re-plans onto `home_eps` minus currently-faulted
+    /// EPs; recovery re-adopts back toward the full home set.
+    home_eps: Vec<EpId>,
+    /// Health flag: true while the replica's entire home set is faulted
+    /// (no surviving subset to re-plan onto). A dead replica serves
+    /// nothing and is invisible to the autoscaler until recovery.
+    dead: bool,
     // cumulative counters (per replica)
     offered: u64,
     rejected: u64,
@@ -680,6 +780,12 @@ struct TenantRt {
     /// scans (round-robin stays O(1) while all replicas are active, the
     /// static-sharding hot path PR 2 optimised).
     n_active: usize,
+    /// Graceful degradation: while set, every arrival to this tenant is
+    /// counted and rejected at admission (capacity under faults no longer
+    /// covers demand and this tenant lost the weighted-priority cover).
+    /// Toggled by `degrade_tick`; conservation is untouched — shed
+    /// arrivals are ordinary rejections.
+    load_shed: bool,
     shards: Vec<ShardRt>,
 }
 
@@ -877,9 +983,19 @@ fn dispatch_stage(
     );
     let gep = t.ep_map[ep];
     let uses_link = transfer > 0.0;
-    let ep_factor = if sh.contention { (sh.ep_busy[gep] + 1) as f64 } else { 1.0 };
-    let link_factor =
+    if sh.ep_down(gep, now) || (uses_link && sh.link_cut(now)) {
+        // the EP (or the link this batch needs) is faulted: hold the
+        // queue — failover re-plans replicas off failed EPs, and
+        // transient windows end with a settle that re-dispatches
+        return false;
+    }
+    let contended_ep = if sh.contention { (sh.ep_busy[gep] + 1) as f64 } else { 1.0 };
+    let contended_link =
         if sh.contention && uses_link { (sh.link_busy + 1) as f64 } else { 1.0 };
+    // fault throttles stack on contention; both are exactly 1.0 on a
+    // healthy platform, keeping fault-free service times bit-identical
+    let ep_factor = contended_ep * sh.ep_fault_factor(gep, now);
+    let link_factor = contended_link * sh.link_fault_factor(now);
     let base = compute + transfer;
     let actual = compute * ep_factor + transfer * link_factor;
     let mut reqs = t.buf_pool.pop().unwrap_or_default();
@@ -926,7 +1042,7 @@ fn all_mask(n_stages: usize) -> u64 {
 /// asserts it is false everywhere on exit, so a missed enablement channel
 /// fails loudly under `cargo test` instead of silently stalling a queue.
 #[cfg(debug_assertions)]
-fn can_progress(spec: &TenantSpec, t: &ShardRt, si: usize, now: f64) -> bool {
+fn can_progress(spec: &TenantSpec, t: &ShardRt, sh: &Shared, si: usize, now: f64) -> bool {
     let n_layers = spec.net.len();
     if let Some(inf) = &t.stages[si].busy {
         if inf.completed {
@@ -942,7 +1058,28 @@ fn can_progress(spec: &TenantSpec, t: &ShardRt, si: usize, now: f64) -> bool {
         }
         false
     } else {
-        now >= t.frozen_until && !t.stages[si].queue.is_empty()
+        if now < t.frozen_until || t.stages[si].queue.is_empty() {
+            return false;
+        }
+        // mirror dispatch_stage's fault blockers: a queued batch whose EP
+        // is down (or whose transfer needs a cut link) is legitimately
+        // stuck, not a missed enablement
+        let b = spec.batch.min(t.stages[si].queue.len());
+        let (lo, hi) = t.bounds[si];
+        let ep = t.config.assignment[si];
+        let from_ep = if si == 0 { None } else { Some(t.config.assignment[si - 1]) };
+        let (_compute, transfer) = simulator::stage_service_time(
+            &spec.net,
+            &t.subplat,
+            &t.dbs[b - 1],
+            lo,
+            hi,
+            ep,
+            from_ep,
+            b as u64,
+        );
+        let gep = t.ep_map[ep];
+        !(sh.ep_down(gep, now) || (transfer > 0.0 && sh.link_cut(now)))
     }
 }
 
@@ -1022,26 +1159,19 @@ fn settle(
     }
     #[cfg(debug_assertions)]
     for si in 0..n {
-        debug_assert!(!can_progress(spec, t, si, now), "settle fixpoint missed stage {si}");
+        debug_assert!(!can_progress(spec, t, sh, si, now), "settle fixpoint missed stage {si}");
     }
 }
 
-/// Apply a new configuration to one replica: interrupt in-flight work
-/// (requests are re-queued at their completed-layer position; partial
-/// stage work is lost), rebuild the stage array, and freeze dispatch for
-/// the penalty.
-#[allow(clippy::too_many_arguments)]
-fn apply_reconfig(
-    spec: &TenantSpec,
-    t: &mut ShardRt,
-    sh: &mut Shared,
-    ti: usize,
-    shard_ix: usize,
-    now: f64,
-    new_config: PipelineConfig,
-    penalty_s: f64,
-    duration_s: f64,
-) {
+/// Interrupt one replica's in-flight work and drain its queues: bump the
+/// generation (pending StageDone events go stale), release the shared
+/// contention counters for batches still computing — through the **old**
+/// `ep_map`, before any caller swaps it — and return every undelivered
+/// request's arena index, oldest first. Partial batch work is lost;
+/// requests never are. The caller re-queues them ([`requeue_orphans`])
+/// after swapping whatever it is swapping: a configuration, or on
+/// failover the whole sub-platform.
+fn detach_replica(t: &mut ShardRt, sh: &mut Shared) -> Vec<u32> {
     t.gen += 1;
     let mut orphans: Vec<u32> = Vec::new();
     let mut spare_bufs: Vec<Vec<u32>> = Vec::new();
@@ -1064,12 +1194,11 @@ fn apply_reconfig(
     }
     // oldest requests re-queue first (deterministic, arrival-order fair)
     orphans.sort_by_key(|&ix| t.arena[ix as usize].id);
-    t.config = new_config;
-    t.bounds = t.config.stage_bounds();
-    // the WTP balancer weight tracks current capacity: a re-tuned replica
-    // immediately receives its new proportional share of arrivals
-    t.weight = simulator::throughput(&spec.net, &t.subplat, &t.dbs[0], &t.config);
-    t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
+    orphans
+}
+
+/// Re-queue detached requests at the stage owning each one's next layer.
+fn requeue_orphans(spec: &TenantSpec, t: &mut ShardRt, orphans: Vec<u32>) {
     let n_layers = spec.net.len();
     for ix in orphans {
         // completed-but-undelivered batches sit at a stage boundary; resume
@@ -1082,10 +1211,387 @@ fn apply_reconfig(
         };
         t.stages[si].queue.push_back(ix);
     }
+}
+
+/// Freeze the replica's dispatch for the reconfiguration penalty and
+/// schedule the thaw.
+fn freeze_replica(
+    t: &mut ShardRt,
+    sh: &mut Shared,
+    ti: usize,
+    shard_ix: usize,
+    now: f64,
+    penalty_s: f64,
+    duration_s: f64,
+) {
     t.frozen_until = now + penalty_s;
     t.thaw_pending = true;
     if t.frozen_until <= duration_s {
         sh.schedule(t.frozen_until, EvKind::Resume { tenant: ti, shard: shard_ix });
+    }
+}
+
+/// Apply a new configuration to one replica: interrupt in-flight work
+/// (requests are re-queued at their completed-layer position; partial
+/// stage work is lost), rebuild the stage array, and freeze dispatch for
+/// the penalty.
+#[allow(clippy::too_many_arguments)]
+fn apply_reconfig(
+    spec: &TenantSpec,
+    t: &mut ShardRt,
+    sh: &mut Shared,
+    ti: usize,
+    shard_ix: usize,
+    now: f64,
+    new_config: PipelineConfig,
+    penalty_s: f64,
+    duration_s: f64,
+) {
+    let orphans = detach_replica(t, sh);
+    t.config = new_config;
+    t.bounds = t.config.stage_bounds();
+    // the WTP balancer weight tracks current capacity: a re-tuned replica
+    // immediately receives its new proportional share of arrivals
+    t.weight = simulator::throughput(&spec.net, &t.subplat, &t.dbs[0], &t.config);
+    t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
+    requeue_orphans(spec, t, orphans);
+    freeze_replica(t, sh, ti, shard_ix, now, penalty_s, duration_s);
+}
+
+/// Re-plan one replica onto a different EP subset — failover off faulted
+/// EPs, or re-adoption when a transient fault clears. Detaches all work,
+/// rebuilds every platform-derived artifact (sub-platform view, batch
+/// databases, scratch re-tune database, adaptive controller) against the
+/// subset, plans a fresh configuration through the shared memoized subset
+/// tuner (a warm [`PlanCache`] hit when this subset was planned before),
+/// re-queues the detached requests on the new stage structure and freezes
+/// for the reconfiguration penalty. Returns the plan's predicted
+/// throughput.
+#[allow(clippy::too_many_arguments)]
+fn rebuild_replica(
+    spec: &TenantSpec,
+    t: &mut ShardRt,
+    sh: &mut Shared,
+    ti: usize,
+    shard_ix: usize,
+    now: f64,
+    plat: &Platform,
+    eps: Vec<EpId>,
+    cache: &PlanCache,
+    opts: &ServeOptions,
+) -> Result<f64> {
+    debug_assert!(!eps.is_empty(), "rebuild needs at least one EP");
+    let model = CostModel::default();
+    let orphans = detach_replica(t, sh);
+    let subplat = plat.subset(&eps);
+    let plan = shard::plan_shards_with(&spec.net, &subplat, 1, 1, cache)?;
+    let config = plan.configs.into_iter().next().expect("plan_shards returns >= 1 replica");
+    let predicted = plan.predicted.first().copied().unwrap_or(0.0);
+    let mut dbs = Vec::with_capacity(spec.batch);
+    for b in 1..=spec.batch {
+        dbs.push(if b == 1 {
+            PerfDb::build(&spec.net, &subplat, &model)
+        } else {
+            batch::build_batched(&spec.net, &subplat, &model, b as u32)
+        });
+    }
+    t.scratch_db = dbs[spec.batch - 1].clone();
+    t.controller = AdaptiveController::new(spec.net.clone(), subplat.clone(), model);
+    t.ep_slow = vec![1.0; subplat.n_eps()];
+    t.scale_buf = vec![1.0; subplat.n_eps()];
+    t.dbs = dbs;
+    t.config = config;
+    t.bounds = t.config.stage_bounds();
+    t.weight = simulator::throughput(&spec.net, &subplat, &t.dbs[0], &t.config);
+    t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
+    t.subplat = subplat;
+    t.ep_map = eps;
+    requeue_orphans(spec, t, orphans);
+    freeze_replica(t, sh, ti, shard_ix, now, opts.reconfig_penalty_s, opts.duration_s);
+    Ok(predicted)
+}
+
+/// Detect → drain → re-plan: walk every replica whose current EP set
+/// touches a downed EP and fail it over onto the surviving part of its
+/// home set via [`rebuild_replica`]. A replica with no surviving home EP
+/// is marked dead: its detached backlog migrates into the strongest
+/// healthy sibling's arena (zero request loss — conservation is pinned by
+/// tests) and it parks, activating the sibling if necessary. With no
+/// healthy sibling anywhere the replica stays put holding its re-queued
+/// backlog: dispatch is blocked by the fault state, so requests pool and
+/// count in-flight until recovery.
+fn fault_failover(
+    rts: &mut [TenantRt],
+    sh: &mut Shared,
+    plat: &Platform,
+    cache: &PlanCache,
+    opts: &ServeOptions,
+    now: f64,
+    full_rescan: bool,
+) -> Result<()> {
+    for (ti, t) in rts.iter_mut().enumerate() {
+        for si in 0..t.shards.len() {
+            if !t.shards[si].ep_map.iter().any(|&e| sh.ep_down(e, now)) {
+                continue;
+            }
+            let surviving: Vec<EpId> = t.shards[si]
+                .home_eps
+                .iter()
+                .copied()
+                .filter(|&e| !sh.ep_down(e, now))
+                .collect();
+            if !surviving.is_empty() {
+                let predicted = rebuild_replica(
+                    &t.spec,
+                    &mut t.shards[si],
+                    sh,
+                    ti,
+                    si,
+                    now,
+                    plat,
+                    surviving,
+                    cache,
+                    opts,
+                )?;
+                t.shards[si].dead = false;
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Failover,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: t.shards[si].ep_map.len() as u64,
+                    b: predicted.to_bits(),
+                });
+                continue;
+            }
+            // the whole home set is down: the replica is dead
+            let orphans = detach_replica(&mut t.shards[si], sh);
+            t.shards[si].dead = true;
+            // strongest sibling with a live home EP, preferring Active
+            // ones (a parked/draining sibling is activated to take over)
+            let mut target: Option<(usize, f64, bool)> = None;
+            for (sj, s) in t.shards.iter().enumerate() {
+                if sj == si || !s.home_eps.iter().any(|&e| !sh.ep_down(e, now)) {
+                    continue;
+                }
+                let act = s.state == ReplicaState::Active;
+                let better = match target {
+                    None => true,
+                    Some((_, tw, tact)) => (act && !tact) || (act == tact && s.weight > tw),
+                };
+                if better {
+                    target = Some((sj, s.weight, act));
+                }
+            }
+            match target {
+                Some((sj, _, act)) => {
+                    // cross-replica migration: re-admit every orphan into
+                    // the sibling's arena at its completed-layer position
+                    let n_layers = t.spec.net.len();
+                    for ix in orphans {
+                        let (id, arr, ld) = {
+                            let r = &t.shards[si].arena[ix as usize];
+                            (r.id, r.arrival_s, r.layers_done)
+                        };
+                        t.shards[si].free_slots.push(ix);
+                        let dst = &mut t.shards[sj];
+                        let jx = dst.alloc(id, arr);
+                        dst.arena[jx as usize].layers_done = ld;
+                        let stage = if ld >= n_layers {
+                            dst.stages.len() - 1
+                        } else {
+                            dst.config.stage_of_layer(ld).expect("layer in range")
+                        };
+                        dst.stages[stage].queue.push_back(jx);
+                        let l = dst.stages[stage].queue.len();
+                        if l > dst.max_queue_len {
+                            dst.max_queue_len = l;
+                        }
+                    }
+                    if !act {
+                        t.shards[sj].state = ReplicaState::Active;
+                        t.n_active += 1;
+                        t.shards[sj]
+                            .scale_log
+                            .push(ScaleEvent { t_s: now, to: ReplicaState::Active });
+                        sh.note(now, 6, pack_ts(ti, sj), ReplicaState::Active.code(), || {
+                            format!("{now:.6} scale {} r{sj} active", t.spec.name)
+                        });
+                        sh.control(ControlRecord {
+                            t_s: now,
+                            kind: ControlKind::Scale,
+                            tenant: ti as u32,
+                            shard: sj as u32,
+                            a: 0,
+                            b: ReplicaState::Active.code(),
+                        });
+                    }
+                    // the dead replica parks (not drains: its backlog just
+                    // moved), freeing its EP meter
+                    if t.shards[si].state == ReplicaState::Active {
+                        t.n_active -= 1;
+                    }
+                    if t.shards[si].state != ReplicaState::Parked {
+                        t.shards[si].state = ReplicaState::Parked;
+                        t.shards[si]
+                            .scale_log
+                            .push(ScaleEvent { t_s: now, to: ReplicaState::Parked });
+                        sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
+                            format!("{now:.6} scale {} r{si} parked", t.spec.name)
+                        });
+                        sh.control(ControlRecord {
+                            t_s: now,
+                            kind: ControlKind::Scale,
+                            tenant: ti as u32,
+                            shard: si as u32,
+                            a: 0,
+                            b: ReplicaState::Parked.code(),
+                        });
+                    }
+                    for srt in &mut t.shards {
+                        srt.credit = 0.0;
+                    }
+                    // the sibling's queues grew: settle it now
+                    settle(
+                        &t.spec,
+                        &mut t.shards[sj],
+                        sh,
+                        ti,
+                        sj,
+                        now,
+                        opts.duration_s,
+                        u64::MAX,
+                        full_rescan,
+                    );
+                }
+                None => {
+                    requeue_orphans(&t.spec, &mut t.shards[si], orphans);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A transient stall window closed: re-adopt the recovered EPs. Every
+/// replica whose home set contains one rebuilds onto home-minus-still-
+/// faulted (a warm [`PlanCache`] hit for the common full-home case), dead
+/// replicas come back to life, and a dead-parked one re-activates
+/// immediately — re-admission does not wait for the autoscaler.
+fn fault_recover(
+    rts: &mut [TenantRt],
+    sh: &mut Shared,
+    plat: &Platform,
+    cache: &PlanCache,
+    opts: &ServeOptions,
+    now: f64,
+    recovered: &[EpId],
+) -> Result<()> {
+    for (ti, t) in rts.iter_mut().enumerate() {
+        for si in 0..t.shards.len() {
+            if !t.shards[si].home_eps.iter().any(|e| recovered.contains(e)) {
+                continue;
+            }
+            let desired: Vec<EpId> = t.shards[si]
+                .home_eps
+                .iter()
+                .copied()
+                .filter(|&e| !sh.ep_down(e, now))
+                .collect();
+            if desired.is_empty() || desired == t.shards[si].ep_map {
+                continue;
+            }
+            let was_dead = t.shards[si].dead;
+            let predicted = rebuild_replica(
+                &t.spec, &mut t.shards[si], sh, ti, si, now, plat, desired, cache, opts,
+            )?;
+            t.shards[si].dead = false;
+            sh.control(ControlRecord {
+                t_s: now,
+                kind: ControlKind::Failover,
+                tenant: ti as u32,
+                shard: si as u32,
+                a: t.shards[si].ep_map.len() as u64,
+                b: predicted.to_bits(),
+            });
+            if was_dead && t.shards[si].state != ReplicaState::Active {
+                t.shards[si].state = ReplicaState::Active;
+                t.n_active += 1;
+                t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Active });
+                sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
+                    format!("{now:.6} scale {} r{si} active", t.spec.name)
+                });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: ReplicaState::Active.code(),
+                });
+                for srt in &mut t.shards {
+                    srt.credit = 0.0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Graceful degradation, run at every epoch tick of a faulted run: when
+/// live serving capacity no longer covers observed demand, shed whole
+/// tenants — lowest [`TenantSpec::weight`] first — by rejecting their
+/// arrivals at admission, and re-admit them automatically once the faults
+/// clear or capacity returns. The cover is greedy by descending weight;
+/// the first demanding tenant always admits (degraded service beats
+/// none), and with no fault in force everything admits — overload on a
+/// healthy platform stays the admission policies' job. Transitions emit
+/// [`ControlKind::Shed`] records.
+fn degrade_tick(rts: &mut [TenantRt], sh: &mut Shared, now: f64, opts: &ServeOptions) {
+    let epoch_s = opts.control_epoch_s;
+    if epoch_s <= 0.0 {
+        return;
+    }
+    let fault_active = sh.any_fault_active(now);
+    let mut demand: Vec<f64> = Vec::with_capacity(rts.len());
+    let mut capacity = 0.0f64;
+    for t in rts.iter() {
+        let offered: u64 =
+            t.shards.iter().filter_map(|s| s.epochs.last()).map(|e| e.offered).sum();
+        demand.push(offered as f64 / epoch_s);
+        for s in &t.shards {
+            if s.state == ReplicaState::Active && !s.dead {
+                capacity += s.weight;
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..rts.len()).collect();
+    order.sort_by(|&a, &b| rts[b].spec.weight.total_cmp(&rts[a].spec.weight).then(a.cmp(&b)));
+    let mut used = 0.0f64;
+    let mut admitted_any = false;
+    for ti in order {
+        let admit = !fault_active
+            || demand[ti] == 0.0
+            || (capacity > 0.0 && (!admitted_any || used + demand[ti] <= capacity));
+        if admit {
+            used += demand[ti];
+            if demand[ti] > 0.0 {
+                admitted_any = true;
+            }
+        }
+        let t = &mut rts[ti];
+        let shed = !admit;
+        if t.load_shed != shed {
+            t.load_shed = shed;
+            sh.control(ControlRecord {
+                t_s: now,
+                kind: ControlKind::Shed,
+                tenant: ti as u32,
+                shard: 0,
+                a: 0,
+                b: u64::from(shed),
+            });
+        }
     }
 }
 
@@ -1125,7 +1631,10 @@ fn epoch_tick(
         // preallocated scratch database, so a warm re-tune epoch allocates
         // nothing for its observed-cost model
         for ep in 0..t.subplat.n_eps() {
-            let f = t.ep_slow[ep].max(1.0);
+            // observed contention EWMA × any thermal throttle in force on
+            // the EP, so a warm re-tune plans against the machine as it
+            // is; the fault factor is exactly 1.0 on a healthy platform
+            let f = t.ep_slow[ep].max(1.0) * sh.ep_fault_factor(t.ep_map[ep], now);
             t.scale_buf[ep] = if f > 1.001 { f } else { 1.0 };
         }
         t.scratch_db.copy_scaled_from(&t.dbs[spec.batch - 1], &t.scale_buf);
@@ -1236,19 +1745,23 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
         if srt.state == ReplicaState::Active {
             active += 1;
             queued += srt.queued();
-            active_capacity += srt.weight;
-            if srt.weight < weakest_active {
-                weakest_active = srt.weight;
+            // a dead replica (whole home EP set faulted) serves nothing:
+            // it contributes no capacity, so the autoscaler sees the real
+            // post-fault headroom
+            let w = if srt.dead { 0.0 } else { srt.weight };
+            active_capacity += w;
+            if w < weakest_active {
+                weakest_active = w;
             }
         }
     }
     // scale-up candidates: highest predicted throughput first, ties on
-    // the lower replica index
+    // the lower replica index; dead replicas cannot be activated
     let mut inactive: Vec<(usize, f64)> = t
         .shards
         .iter()
         .enumerate()
-        .filter(|(_, s)| s.state != ReplicaState::Active)
+        .filter(|(_, s)| s.state != ReplicaState::Active && !s.dead)
         .map(|(i, s)| (i, s.weight))
         .collect();
     inactive.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -1385,15 +1898,7 @@ fn serve_inner(
     if tenants.is_empty() {
         bail!("serve: at least one tenant required");
     }
-    if opts.duration_s <= 0.0 {
-        bail!("serve: duration must be positive");
-    }
-    if opts.autoscale.enabled {
-        opts.autoscale.validate()?;
-        if opts.control_epoch_s <= 0.0 {
-            bail!("serve: the autoscaler is epoch-driven — set control_epoch_s > 0");
-        }
-    }
+    opts.validate(plat)?;
     let model = CostModel::default();
     let mut master = Xoshiro256::seed_from(opts.seed);
     // Cross-tenant co-planning: one joint, disjoint EP allocation over
@@ -1492,6 +1997,8 @@ fn serve_inner(
                 credit: 0.0,
                 state: ReplicaState::Active,
                 scale_log: Vec::new(),
+                home_eps: ep_map.clone(),
+                dead: false,
                 offered: 0,
                 rejected: 0,
                 dropped: 0,
@@ -1521,6 +2028,7 @@ fn serve_inner(
             rr: 0,
             auto: AutoscaleState::default(),
             n_active: shards.len(),
+            load_shed: false,
             shards,
             spec,
         });
@@ -1537,7 +2045,33 @@ fn serve_inner(
         log: Vec::new(),
         record_log: opts.record_log,
         capture,
+        ep_failed: vec![false; plat.n_eps()],
+        ep_stall_until: vec![0.0; plat.n_eps()],
+        ep_throttle: vec![1.0; plat.n_eps()],
+        ep_throttle_until: vec![0.0; plat.n_eps()],
+        link_cut_until: 0.0,
+        link_throttle: 1.0,
+        link_throttle_until: 0.0,
     };
+
+    // Failover re-planning shares one subset-tuning memo across faults:
+    // the second failover onto the same surviving subset is a cache hit.
+    let plan_cache = PlanCache::new();
+    // Fault plane: pre-schedule every scripted begin (and, for windowed
+    // kinds, end) before the first arrival. An empty script schedules
+    // nothing, so fault-free runs keep their exact event sequence numbers
+    // and hashes.
+    for (ix, fe) in opts.faults.events.iter().enumerate() {
+        if fe.t_s <= opts.duration_s {
+            sh.schedule(fe.t_s, EvKind::Fault { ix, begin: true });
+            if let Some(d) = fe.kind.window_s() {
+                let end = fe.t_s + d;
+                if end <= opts.duration_s {
+                    sh.schedule(end, EvKind::Fault { ix, begin: false });
+                }
+            }
+        }
+    }
 
     for (ti, t) in rts.iter_mut().enumerate() {
         if let Some(first) = t.sampler.next_after(0.0) {
@@ -1571,10 +2105,18 @@ fn serve_inner(
                 t.next_id += 1;
                 let cap = t.spec.queue_capacity;
                 let admission = t.spec.admission;
+                let load_shed = t.load_shed;
                 let srt = &mut t.shards[s];
                 srt.offered += 1;
                 srt.ep_offered += 1;
-                if srt.stages[0].queue.len() >= cap {
+                if load_shed {
+                    // gracefully degraded: the tenant is shed this epoch —
+                    // the arrival is counted and rejected at admission
+                    // regardless of queue room (offered == rejected for
+                    // shed arrivals, so conservation holds untouched)
+                    srt.rejected += 1;
+                    srt.ep_rejected += 1;
+                } else if srt.stages[0].queue.len() >= cap {
                     match admission {
                         AdmissionPolicy::Reject => {
                             srt.rejected += 1;
@@ -1699,9 +2241,103 @@ fn serve_inner(
                         autoscale_tick(t, &mut sh, ti, now, opts);
                     }
                 }
+                // graceful degradation runs after every tenant ticked so
+                // it sees the full epoch's demand picture; it only flips
+                // admission flags, never queue contents
+                if !opts.faults.is_empty() {
+                    degrade_tick(&mut rts, &mut sh, now, opts);
+                }
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
                     sh.schedule(next, EvKind::Epoch);
+                }
+            }
+            EvKind::Fault { ix, begin } => {
+                let fe = opts.faults.events[ix];
+                let code = u64::from(fe.kind.code());
+                sh.note(now, 7, ((ix as u64) << 8) | code, u64::from(begin), || {
+                    format!(
+                        "{now:.6} fault {} #{ix} {}",
+                        if begin { "begin" } else { "end" },
+                        fe.kind.name()
+                    )
+                });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Fault,
+                    tenant: 0,
+                    shard: ix as u32,
+                    a: code,
+                    b: u64::from(begin),
+                });
+                if begin {
+                    // apply the fault state, then fail affected replicas
+                    // over when the fault takes EPs down
+                    let mut downed = false;
+                    match fe.kind {
+                        FaultKind::EpFail { ep } => {
+                            sh.ep_failed[ep] = true;
+                            downed = true;
+                        }
+                        FaultKind::ChipFail { chiplet } => {
+                            for (e, place) in plat.eps.iter().enumerate() {
+                                if place.chiplet == chiplet {
+                                    sh.ep_failed[e] = true;
+                                }
+                            }
+                            downed = true;
+                        }
+                        FaultKind::EpStall { ep, down_s } => {
+                            sh.ep_stall_until[ep] = now + down_s;
+                            downed = true;
+                        }
+                        FaultKind::EpSlow { ep, factor, down_s } => {
+                            sh.ep_throttle[ep] = factor;
+                            sh.ep_throttle_until[ep] = now + down_s;
+                        }
+                        FaultKind::LinkSlow { factor, down_s } => {
+                            sh.link_throttle = factor;
+                            sh.link_throttle_until = now + down_s;
+                        }
+                        FaultKind::LinkCut { down_s } => {
+                            sh.link_cut_until = now + down_s;
+                        }
+                    }
+                    if downed {
+                        fault_failover(
+                            &mut rts, &mut sh, plat, &plan_cache, opts, now, full_rescan,
+                        )?;
+                    }
+                } else {
+                    match fe.kind {
+                        FaultKind::EpStall { ep, .. } => {
+                            // the stalled EP is back: re-adopt it
+                            fault_recover(
+                                &mut rts, &mut sh, plat, &plan_cache, opts, now, &[ep],
+                            )?;
+                        }
+                        FaultKind::LinkCut { .. } => {
+                            // transfers blocked during the cut can go again
+                            for (ti, t) in rts.iter_mut().enumerate() {
+                                for si in 0..t.shards.len() {
+                                    settle(
+                                        &t.spec,
+                                        &mut t.shards[si],
+                                        &mut sh,
+                                        ti,
+                                        si,
+                                        now,
+                                        opts.duration_s,
+                                        u64::MAX,
+                                        full_rescan,
+                                    );
+                                }
+                            }
+                        }
+                        // slowdown windows never blocked dispatch, so
+                        // their ends need no settling
+                        _ => {}
+                    }
                 }
             }
         }
@@ -1732,7 +2368,10 @@ fn tenant_report(t: TenantRt) -> TenantReport {
         let in_flight = s.backlog();
         latency.merge(&s.latency);
         shard_reports.push(ShardReport {
-            initial_config: shard::to_global(&s.initial_config, &s.ep_map),
+            // the initial config is local to the *planned* subset; after a
+            // failover re-plan `ep_map` may differ, so translate through
+            // the immutable home set it was planned against
+            initial_config: shard::to_global(&s.initial_config, &s.home_eps),
             final_config: shard::to_global(&s.config, &s.ep_map),
             predicted_throughput: s.weight,
             offered: s.offered,
@@ -2363,5 +3002,244 @@ mod tests {
             c4 > 1.02 * c1,
             "4-way sharding must add capacity: {c4} vs {c1}"
         );
+    }
+
+    // --- fault plane ------------------------------------------------------
+
+    use crate::serve::fault::FaultEvent;
+
+    #[test]
+    fn post_horizon_faults_change_nothing() {
+        // Events past the horizon schedule nothing, and an armed-but-idle
+        // fault plane must not perturb the hashed stream.
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let run = |faults: FaultScript| {
+            let (spec, cfg) = small_tenant("t0", 0.5 * cap);
+            let mut opts = base_opts(100.0 / cap);
+            opts.record_log = true;
+            opts.control_epoch_s = 20.0 / cap;
+            opts.faults = faults;
+            serve(&plat, vec![(spec, cfg)], &opts).unwrap()
+        };
+        let clean = run(FaultScript::default());
+        let post = run(FaultScript {
+            events: vec![FaultEvent { t_s: 200.0 / cap, kind: FaultKind::EpFail { ep: 0 } }],
+        });
+        assert_eq!(clean.log_hash, post.log_hash, "idle fault plane must be invisible");
+        assert_eq!(clean.event_log, post.event_log);
+        assert_eq!(clean.n_events, post.n_events);
+        assert_eq!(clean.tenants[0].completed, post.tenants[0].completed);
+    }
+
+    #[test]
+    fn serve_rejects_invalid_fault_scripts() {
+        let plat = crate::platform::configs::c1(); // 2 EPs, chiplets 0/1
+        let try_script = |events: Vec<FaultEvent>| {
+            let (spec, cfg) = small_tenant("t0", 1.0);
+            let opts =
+                ServeOptions { faults: FaultScript { events }, ..base_opts(1.0) };
+            serve(&plat, vec![(spec, cfg)], &opts)
+        };
+        let ev = |t_s, kind| FaultEvent { t_s, kind };
+        // out-of-range ids
+        assert!(try_script(vec![ev(0.5, FaultKind::EpFail { ep: 9 })]).is_err());
+        assert!(try_script(vec![ev(0.5, FaultKind::ChipFail { chiplet: 99 })]).is_err());
+        // non-finite / negative time, non-positive window, senseless factor
+        assert!(try_script(vec![ev(f64::NAN, FaultKind::EpFail { ep: 0 })]).is_err());
+        assert!(try_script(vec![ev(-1.0, FaultKind::EpFail { ep: 0 })]).is_err());
+        assert!(
+            try_script(vec![ev(0.5, FaultKind::EpStall { ep: 0, down_s: 0.0 })]).is_err()
+        );
+        assert!(try_script(vec![
+            ev(0.5, FaultKind::EpSlow { ep: 0, factor: 0.5, down_s: 1.0 })
+        ])
+        .is_err());
+        // overlapping windows on one EP
+        assert!(try_script(vec![
+            ev(0.1, FaultKind::EpSlow { ep: 0, factor: 2.0, down_s: 0.5 }),
+            ev(0.3, FaultKind::EpSlow { ep: 0, factor: 3.0, down_s: 0.2 }),
+        ])
+        .is_err());
+        // fail-stop of the whole platform
+        assert!(try_script(vec![
+            ev(0.1, FaultKind::EpFail { ep: 0 }),
+            ev(0.2, FaultKind::EpFail { ep: 1 }),
+        ])
+        .is_err());
+        // a well-formed script passes the same gate
+        assert!(try_script(vec![ev(0.5, FaultKind::EpFail { ep: 0 })]).is_ok());
+    }
+
+    #[test]
+    fn epfail_fails_over_conserves_and_avoids_the_failed_ep() {
+        let (plat, spec, cfg, cap) = sharded_tenant(1.0, 2, BalancerPolicy::JoinShortestQueue);
+        let failed = plat.eps_by_rank()[0]; // the strongest EP dies mid-run
+        let mut opts = base_opts(300.0 / cap);
+        opts.control_epoch_s = 4.0 / cap;
+        opts.record_log = true;
+        opts.faults = FaultScript {
+            events: vec![FaultEvent { t_s: 100.0 / cap, kind: FaultKind::EpFail { ep: failed } }],
+        };
+        let run = || serve_traced(&plat, vec![(spec.clone(), cfg.clone())], &opts).unwrap();
+        let (report, trace) = run();
+        let t = &report.tenants[0];
+        assert!(t.conserved(), "zero request loss across failover: {t:?}");
+        assert!(t.completed > 0);
+        for s in &t.shards {
+            if s.final_state == ReplicaState::Active {
+                assert!(
+                    !s.eps.contains(&failed),
+                    "active replica still owns the failed EP: {:?}",
+                    s.eps
+                );
+                for ep in &s.final_config.assignment {
+                    assert_ne!(*ep, failed, "final config places a stage on the failed EP");
+                }
+            }
+        }
+        assert!(trace.controls.iter().any(|c| c.kind == ControlKind::Fault));
+        assert!(
+            trace.controls.iter().any(|c| c.kind == ControlKind::Failover),
+            "the fail-stop must trigger a failover re-plan"
+        );
+        // the faulted run is as deterministic as a clean one
+        let (again, _) = run();
+        assert_eq!(report.log_hash, again.log_hash, "faulted runs must be deterministic");
+        assert_eq!(report.event_log, again.event_log);
+    }
+
+    #[test]
+    fn epstall_recovery_readopts_the_full_home_set() {
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let (spec, cfg) = small_tenant("t0", 0.5 * cap);
+        let mut opts = base_opts(200.0 / cap);
+        opts.control_epoch_s = 10.0 / cap;
+        opts.faults = FaultScript {
+            events: vec![FaultEvent {
+                t_s: 50.0 / cap,
+                kind: FaultKind::EpStall { ep: 1, down_s: 30.0 / cap },
+            }],
+        };
+        let report = serve(&plat, vec![(spec, cfg)], &opts).unwrap();
+        let t = &report.tenants[0];
+        assert!(t.conserved(), "conservation across stall + recovery: {t:?}");
+        assert!(t.completed > 0);
+        let s = &t.shards[0];
+        assert_eq!(s.eps, vec![0, 1], "recovery must re-adopt the stalled EP");
+        assert_eq!(s.final_state, ReplicaState::Active);
+    }
+
+    #[test]
+    fn epslow_throttles_completions_deterministically() {
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let run = |script: &str| {
+            let (spec, cfg) = small_tenant("t0", 2.0 * cap);
+            let spec =
+                spec.with_queue_capacity(16).with_admission(AdmissionPolicy::DropOldest);
+            let mut opts = base_opts(200.0 / cap);
+            opts.record_log = true;
+            opts.faults = FaultScript::parse(script).unwrap();
+            serve(&plat, vec![(spec, cfg)], &opts).unwrap()
+        };
+        let t0 = 50.0 / cap;
+        let w = 100.0 / cap;
+        let script = format!("epslow:0x4@{t0}+{w}; epslow:1x4@{t0}+{w}");
+        let slow = run(&script);
+        let again = run(&script);
+        assert_eq!(slow.log_hash, again.log_hash, "throttled runs must be deterministic");
+        assert_eq!(slow.event_log, again.event_log);
+        let clean = run("");
+        let ts = &slow.tenants[0];
+        assert!(ts.conserved(), "conservation under throttle: {ts:?}");
+        assert!(
+            (ts.completed as f64) < 0.85 * clean.tenants[0].completed as f64,
+            "a 4x throttle over half the run must cost completions: {} vs {}",
+            ts.completed,
+            clean.tenants[0].completed
+        );
+    }
+
+    #[test]
+    fn linkcut_blocks_transfers_then_recovers_and_conserves() {
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let run = |faults: FaultScript| {
+            // cfg [3,3]/[0,1] moves every request across the link
+            let (spec, cfg) = small_tenant("t0", 0.6 * cap);
+            let spec = spec.with_queue_capacity(64);
+            let mut opts = base_opts(200.0 / cap);
+            opts.faults = faults;
+            serve(&plat, vec![(spec, cfg)], &opts).unwrap()
+        };
+        let faulted = run(FaultScript {
+            events: vec![FaultEvent {
+                t_s: 80.0 / cap,
+                kind: FaultKind::LinkCut { down_s: 40.0 / cap },
+            }],
+        });
+        let clean = run(FaultScript::default());
+        let t = &faulted.tenants[0];
+        assert!(t.conserved(), "conservation across the link cut: {t:?}");
+        assert!(t.completed > 0, "the pipeline must resume after the cut");
+        assert_eq!(t.rejected + t.dropped, 0, "pooled work must not be shed");
+        assert!(
+            t.latency.p99() > clean.tenants[0].latency.p99(),
+            "requests pooled behind the cut must show up in the tail: {} vs {}",
+            t.latency.p99(),
+            clean.tenants[0].latency.p99()
+        );
+    }
+
+    #[test]
+    fn degradation_sheds_the_lowest_weight_tenant_and_readmits() {
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let mk = |name: &str, weight: f64| {
+            let (spec, cfg) = small_tenant(name, 2.0 * cap);
+            let spec = spec
+                .with_weight(weight)
+                .with_queue_capacity(16)
+                .with_admission(AdmissionPolicy::DropOldest);
+            (spec, cfg)
+        };
+        let mut opts = base_opts(300.0 / cap);
+        opts.control_epoch_s = 10.0 / cap;
+        opts.faults = FaultScript {
+            events: vec![FaultEvent {
+                t_s: 50.0 / cap,
+                kind: FaultKind::EpStall { ep: 1, down_s: 150.0 / cap },
+            }],
+        };
+        let (report, trace) =
+            serve_traced(&plat, vec![mk("hi", 4.0), mk("lo", 1.0)], &opts).unwrap();
+        for t in &report.tenants {
+            assert!(t.conserved(), "{}: conservation under shedding: {t:?}", t.name);
+        }
+        let shed_on = |ti: u32| {
+            trace
+                .controls
+                .iter()
+                .any(|c| c.kind == ControlKind::Shed && c.tenant == ti && c.b == 1)
+        };
+        let shed_off = |ti: u32| {
+            trace
+                .controls
+                .iter()
+                .any(|c| c.kind == ControlKind::Shed && c.tenant == ti && c.b == 0)
+        };
+        assert!(shed_on(1), "the light tenant must be shed during the stall");
+        assert!(!shed_on(0), "the heavy tenant must keep serving (degraded beats none)");
+        assert!(shed_off(1), "recovery must re-admit the shed tenant");
+        assert!(report.tenants[1].rejected > 0, "shed arrivals count as rejected");
+        assert!(report.tenants[0].completed > 0);
+        assert!(report.tenants[1].completed > 0, "service resumes after re-admission");
     }
 }

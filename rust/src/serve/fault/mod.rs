@@ -1,0 +1,547 @@
+//! Deterministic fault plane for the serving engine: scripted EP and
+//! inter-chiplet-link faults injected as heap events.
+//!
+//! A [`FaultScript`] is a validated list of timed [`FaultEvent`]s against
+//! platform resources:
+//!
+//! * **EP fail-stop** ([`FaultKind::EpFail`]) — the EP dies at `t` and
+//!   never returns; in-flight batches on it are interrupted and requeued.
+//! * **EP transient stall** ([`FaultKind::EpStall`]) — the EP stops
+//!   serving for a window `[t, t + down_s)`, then comes back; the engine
+//!   re-plans away from it and re-adopts it on recovery.
+//! * **EP slowdown** ([`FaultKind::EpSlow`]) — a thermal-throttle style
+//!   degradation: every batch on the EP runs `factor`× slower for the
+//!   window, and the control loop folds the factor into its scratch
+//!   re-tune database (`PerfDb::copy_scaled_from`) so warm re-tunes see
+//!   the throttled machine.
+//! * **Chiplet fail-stop** ([`FaultKind::ChipFail`]) — every EP on the
+//!   chiplet fail-stops at once (partial-good die, power-domain loss).
+//! * **Link degradation / cut** ([`FaultKind::LinkSlow`],
+//!   [`FaultKind::LinkCut`]) — inter-chiplet transfers run `factor`×
+//!   slower, or are blocked outright, for the window.
+//!
+//! Scripts are **deterministic by construction**: either hand-written
+//! (CLI grammar below, `serve --faults`) or generated from a seed through
+//! the repo's own [`crate::rng::Xoshiro256`] ([`FaultScript::chaos`],
+//! `serve --chaos SEED`). The engine hashes every fault begin/end into
+//! the event log (tag 7), so golden fingerprints pin faulted runs and the
+//! flight recorder replays them bit-identically.
+//!
+//! # CLI grammar
+//!
+//! Events are `;`-separated (comma-free on purpose — the what-if override
+//! parser splits its spec on commas, and `--what-if faults=...` embeds a
+//! whole script as one value):
+//!
+//! ```text
+//! epfail:EP@T            EP fail-stop at T seconds
+//! epstall:EP@T+D         EP down for [T, T+D)
+//! epslow:EPxF@T+D        EP runs F× slower for [T, T+D)
+//! chipfail:C@T           chiplet C fail-stop at T
+//! linkslow:F@T+D         inter-chiplet link F× slower for [T, T+D)
+//! linkcut@T+D            inter-chiplet link blocked for [T, T+D)
+//! ```
+//!
+//! e.g. `epslow:0x2.5@3+4; epfail:1@10; linkcut@12+1`.
+//!
+//! [`FaultScript::validate`] rejects out-of-range EP/chiplet ids,
+//! non-finite or negative times, empty windows, factors ≤ 1, overlapping
+//! windows on the same resource, and scripts that fail-stop every EP on
+//! the platform (nothing could ever be served again — reject loudly at
+//! construction instead of wedging the run).
+
+use anyhow::{bail, Context, Result};
+
+use crate::platform::{EpId, Platform};
+use crate::rng::Xoshiro256;
+
+/// One kind of resource fault. Windowed kinds carry their duration; the
+/// fail-stop kinds are permanent (`[t, ∞)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// EP fail-stop: dead from the event time onward.
+    EpFail {
+        /// Global EP id on the serving platform.
+        ep: EpId,
+    },
+    /// EP transient stall: down for `[t, t + down_s)`, then healthy.
+    EpStall {
+        /// Global EP id on the serving platform.
+        ep: EpId,
+        /// Stall window length, seconds (> 0).
+        down_s: f64,
+    },
+    /// EP slowdown: batches run `factor`× slower for the window.
+    EpSlow {
+        /// Global EP id on the serving platform.
+        ep: EpId,
+        /// Service-time multiplier (> 1).
+        factor: f64,
+        /// Throttle window length, seconds (> 0).
+        down_s: f64,
+    },
+    /// Chiplet fail-stop: every EP on the chiplet dies at once.
+    ChipFail {
+        /// Chiplet id (must match at least one EP's `chiplet`).
+        chiplet: u32,
+    },
+    /// Inter-chiplet link degradation: transfers run `factor`× slower.
+    LinkSlow {
+        /// Transfer-time multiplier (> 1).
+        factor: f64,
+        /// Degradation window length, seconds (> 0).
+        down_s: f64,
+    },
+    /// Inter-chiplet link cut: cross-chiplet transfers blocked outright.
+    LinkCut {
+        /// Cut window length, seconds (> 0).
+        down_s: f64,
+    },
+}
+
+impl FaultKind {
+    /// Stable wire/trace code (also the low byte of the hashed tag-7
+    /// `a` word).
+    pub fn code(self) -> u8 {
+        match self {
+            FaultKind::EpFail { .. } => 1,
+            FaultKind::EpStall { .. } => 2,
+            FaultKind::EpSlow { .. } => 3,
+            FaultKind::ChipFail { .. } => 4,
+            FaultKind::LinkSlow { .. } => 5,
+            FaultKind::LinkCut { .. } => 6,
+        }
+    }
+
+    /// CLI spelling (also used by `describe`/`trace inspect`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::EpFail { .. } => "epfail",
+            FaultKind::EpStall { .. } => "epstall",
+            FaultKind::EpSlow { .. } => "epslow",
+            FaultKind::ChipFail { .. } => "chipfail",
+            FaultKind::LinkSlow { .. } => "linkslow",
+            FaultKind::LinkCut { .. } => "linkcut",
+        }
+    }
+
+    /// Window length for transient kinds; `None` for the permanent
+    /// fail-stops.
+    pub fn window_s(self) -> Option<f64> {
+        match self {
+            FaultKind::EpFail { .. } | FaultKind::ChipFail { .. } => None,
+            FaultKind::EpStall { down_s, .. }
+            | FaultKind::EpSlow { down_s, .. }
+            | FaultKind::LinkSlow { down_s, .. }
+            | FaultKind::LinkCut { down_s } => Some(down_s),
+        }
+    }
+}
+
+/// One scripted fault: a kind and the simulated time it begins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated begin time, seconds from serve start.
+    pub t_s: f64,
+    /// What breaks.
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Render in the CLI grammar (`parse(describe())` round-trips).
+    fn describe(&self) -> String {
+        let t = self.t_s;
+        match self.kind {
+            FaultKind::EpFail { ep } => format!("epfail:{ep}@{t}"),
+            FaultKind::EpStall { ep, down_s } => format!("epstall:{ep}@{t}+{down_s}"),
+            FaultKind::EpSlow { ep, factor, down_s } => {
+                format!("epslow:{ep}x{factor}@{t}+{down_s}")
+            }
+            FaultKind::ChipFail { chiplet } => format!("chipfail:{chiplet}@{t}"),
+            FaultKind::LinkSlow { factor, down_s } => format!("linkslow:{factor}@{t}+{down_s}"),
+            FaultKind::LinkCut { down_s } => format!("linkcut@{t}+{down_s}"),
+        }
+    }
+}
+
+/// A validated, ordered list of scripted faults — the whole fault plane
+/// of one serving run. The empty script (the default) injects nothing
+/// and leaves every engine hash byte-identical to a fault-free build.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultScript {
+    /// Scripted faults, in script order (times need not be sorted; the
+    /// engine's event heap orders them).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultScript {
+    /// True when the script injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the `;`-separated CLI grammar (see the module docs).
+    pub fn parse(s: &str) -> Result<FaultScript> {
+        let mut events = Vec::new();
+        for item in s.split(';') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            events.push(parse_event(item).with_context(|| format!("fault spec {item:?}"))?);
+        }
+        Ok(FaultScript { events })
+    }
+
+    /// Render the whole script in the CLI grammar; `parse` round-trips
+    /// it. The empty script renders as `"none"`.
+    pub fn describe(&self) -> String {
+        if self.events.is_empty() {
+            return "none".to_string();
+        }
+        let parts: Vec<String> = self.events.iter().map(FaultEvent::describe).collect();
+        parts.join("; ")
+    }
+
+    /// Check the script against the serving platform. Rejects (with one
+    /// actionable error each):
+    ///
+    /// * EP ids ≥ `plat.n_eps()` and chiplet ids no EP lives on;
+    /// * non-finite or negative begin times;
+    /// * windows with `down_s` ≤ 0 or non-finite, factors ≤ 1 or
+    ///   non-finite;
+    /// * overlapping windows on the same EP (a fail-stop counts as
+    ///   `[t, ∞)`, a chiplet fail covers all its EPs) or on the link —
+    ///   overlap would make "which fault owns this resource now"
+    ///   ambiguous;
+    /// * fail-stopping every EP on the platform.
+    pub fn validate(&self, plat: &Platform) -> Result<()> {
+        let n_eps = plat.n_eps();
+        // (start, end) windows per EP and for the link, for overlap checks.
+        let mut ep_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_eps];
+        let mut link_windows: Vec<(f64, f64)> = Vec::new();
+        let mut failed = vec![false; n_eps];
+        for ev in &self.events {
+            let t = ev.t_s;
+            if !t.is_finite() || t < 0.0 {
+                bail!("fault {}: begin time {t} must be finite and ≥ 0", ev.describe());
+            }
+            if let Some(d) = ev.kind.window_s() {
+                if !d.is_finite() || d <= 0.0 {
+                    bail!("fault {}: window {d} must be finite and > 0", ev.describe());
+                }
+            }
+            match ev.kind {
+                FaultKind::EpFail { ep } => {
+                    check_ep(ep, n_eps, ev)?;
+                    ep_windows[ep].push((t, f64::INFINITY));
+                    failed[ep] = true;
+                }
+                FaultKind::EpStall { ep, down_s } => {
+                    check_ep(ep, n_eps, ev)?;
+                    ep_windows[ep].push((t, t + down_s));
+                }
+                FaultKind::EpSlow { ep, factor, down_s } => {
+                    check_ep(ep, n_eps, ev)?;
+                    check_factor(factor, ev)?;
+                    ep_windows[ep].push((t, t + down_s));
+                }
+                FaultKind::ChipFail { chiplet } => {
+                    let mut any = false;
+                    for (ep, place) in plat.eps.iter().enumerate() {
+                        if place.chiplet == chiplet {
+                            ep_windows[ep].push((t, f64::INFINITY));
+                            failed[ep] = true;
+                            any = true;
+                        }
+                    }
+                    if !any {
+                        bail!(
+                            "fault {}: no EP on platform {} lives on chiplet {chiplet}",
+                            ev.describe(),
+                            plat.name
+                        );
+                    }
+                }
+                FaultKind::LinkSlow { factor, down_s } => {
+                    check_factor(factor, ev)?;
+                    link_windows.push((t, t + down_s));
+                }
+                FaultKind::LinkCut { down_s } => {
+                    link_windows.push((t, t + down_s));
+                }
+            }
+        }
+        if !failed.is_empty() && failed.iter().all(|&f| f) {
+            bail!(
+                "fault script fail-stops all {n_eps} EPs of platform {} — nothing could ever \
+                 be served again (keep at least one EP alive)",
+                plat.name
+            );
+        }
+        for (ep, windows) in ep_windows.iter_mut().enumerate() {
+            if let Some((a, b)) = overlapping(windows) {
+                bail!(
+                    "fault script has overlapping windows on EP {ep}: [{}, {}) and [{}, {}) — \
+                     one fault per resource at a time",
+                    a.0,
+                    a.1,
+                    b.0,
+                    b.1
+                );
+            }
+        }
+        if let Some((a, b)) = overlapping(&mut link_windows) {
+            bail!(
+                "fault script has overlapping inter-chiplet link windows: [{}, {}) and \
+                 [{}, {}) — one fault per resource at a time",
+                a.0,
+                a.1,
+                b.0,
+                b.1
+            );
+        }
+        Ok(())
+    }
+
+    /// Generate a valid-by-construction chaos script: `n` faults dealt
+    /// into disjoint time slots across the middle 80% of the horizon,
+    /// each window confined to its slot (so windows never overlap),
+    /// permanently failed EPs never re-targeted, and never failing the
+    /// last healthy EP. Deterministic in `(seed, plat, duration_s, n)`.
+    pub fn chaos(seed: u64, plat: &Platform, duration_s: f64, n: usize) -> FaultScript {
+        let n_eps = plat.n_eps();
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut failed = vec![false; n_eps];
+        let mut events = Vec::with_capacity(n);
+        if n == 0 || duration_s <= 0.0 || n_eps == 0 {
+            return FaultScript { events };
+        }
+        let t0 = 0.1 * duration_s;
+        let slot = 0.8 * duration_s / n as f64;
+        for i in 0..n {
+            let start = t0 + i as f64 * slot;
+            let down = 0.5 * slot;
+            let alive: Vec<EpId> = (0..n_eps).filter(|&e| !failed[e]).collect();
+            let factor = 1.5 + 2.0 * rng.gen_f64();
+            let kind = match rng.gen_range(0, 6) {
+                0 if alive.len() > 1 => {
+                    let ep = *rng.choose(&alive);
+                    failed[ep] = true;
+                    FaultKind::EpFail { ep }
+                }
+                0 | 1 => FaultKind::EpStall { ep: *rng.choose(&alive), down_s: down },
+                2 | 3 => FaultKind::EpSlow { ep: *rng.choose(&alive), factor, down_s: down },
+                4 => FaultKind::LinkSlow { factor, down_s: down },
+                _ => FaultKind::LinkCut { down_s: down },
+            };
+            events.push(FaultEvent { t_s: start, kind });
+        }
+        let script = FaultScript { events };
+        debug_assert!(script.validate(plat).is_ok(), "chaos generated an invalid script");
+        script
+    }
+}
+
+fn check_ep(ep: EpId, n_eps: usize, ev: &FaultEvent) -> Result<()> {
+    if ep >= n_eps {
+        bail!(
+            "fault {}: EP {ep} is out of range (platform has {n_eps} EPs, ids 0..{n_eps})",
+            ev.describe()
+        );
+    }
+    Ok(())
+}
+
+fn check_factor(factor: f64, ev: &FaultEvent) -> Result<()> {
+    if !factor.is_finite() || factor <= 1.0 {
+        bail!(
+            "fault {}: slowdown factor {factor} must be finite and > 1 (it multiplies \
+             service time)",
+            ev.describe()
+        );
+    }
+    Ok(())
+}
+
+/// Find one overlapping pair among `[start, end)` windows, if any. Sorts
+/// in place; touching endpoints (`end == next start`) are allowed.
+fn overlapping(windows: &mut [(f64, f64)]) -> Option<((f64, f64), (f64, f64))> {
+    windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    windows.windows(2).find(|w| w[1].0 < w[0].1).map(|w| (w[0], w[1]))
+}
+
+/// Parse one event in the CLI grammar.
+fn parse_event(item: &str) -> Result<FaultEvent> {
+    let (head, when) = item
+        .split_once('@')
+        .context("expected KIND[:ARGS]@T or KIND[:ARGS]@T+D (no '@' found)")?;
+    let (t_s, down_s) = match when.split_once('+') {
+        Some((t, d)) => (parse_f64(t, "begin time")?, Some(parse_f64(d, "window length")?)),
+        None => (parse_f64(when, "begin time")?, None),
+    };
+    let (kind_name, args) = match head.split_once(':') {
+        Some((k, a)) => (k.trim(), Some(a.trim())),
+        None => (head.trim(), None),
+    };
+    let need_window = |kind: &str| {
+        down_s.with_context(|| {
+            format!("{kind} is transient: expected a window, e.g. {kind}...@T+D")
+        })
+    };
+    let no_window = |kind: &str| -> Result<()> {
+        if down_s.is_some() {
+            bail!("{kind} is permanent: use {kind}:ID@T (no +D window)");
+        }
+        Ok(())
+    };
+    let kind = match kind_name.to_ascii_lowercase().as_str() {
+        "epfail" => {
+            no_window("epfail")?;
+            FaultKind::EpFail { ep: parse_id(args.context("epfail needs an EP id")?, "EP id")? }
+        }
+        "epstall" => FaultKind::EpStall {
+            ep: parse_id(args.context("epstall needs an EP id")?, "EP id")?,
+            down_s: need_window("epstall")?,
+        },
+        "epslow" => {
+            let args = args.context("epslow needs EPxFACTOR, e.g. epslow:0x2.5@3+4")?;
+            let (ep, factor) = args
+                .split_once(|c| c == 'x' || c == 'X')
+                .context("epslow needs EPxFACTOR (no 'x' found)")?;
+            FaultKind::EpSlow {
+                ep: parse_id(ep, "EP id")?,
+                factor: parse_f64(factor, "slowdown factor")?,
+                down_s: need_window("epslow")?,
+            }
+        }
+        "chipfail" => {
+            no_window("chipfail")?;
+            FaultKind::ChipFail {
+                chiplet: parse_id(args.context("chipfail needs a chiplet id")?, "chiplet id")?
+                    as u32,
+            }
+        }
+        "linkslow" => FaultKind::LinkSlow {
+            factor: parse_f64(args.context("linkslow needs a factor")?, "slowdown factor")?,
+            down_s: need_window("linkslow")?,
+        },
+        "linkcut" => {
+            if args.is_some() {
+                bail!("linkcut takes no arguments: linkcut@T+D");
+            }
+            FaultKind::LinkCut { down_s: need_window("linkcut")? }
+        }
+        other => bail!(
+            "unknown fault kind {other:?} (epfail, epstall, epslow, chipfail, linkslow, linkcut)"
+        ),
+    };
+    Ok(FaultEvent { t_s, kind })
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64> {
+    s.trim().parse::<f64>().with_context(|| format!("bad {what} {:?}", s.trim()))
+}
+
+fn parse_id(s: &str, what: &str) -> Result<usize> {
+    s.trim().parse::<usize>().with_context(|| format!("bad {what} {:?}", s.trim()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::configs;
+
+    #[test]
+    fn parse_round_trips_every_kind() {
+        let s = "epfail:1@5; epstall:0@2+1.5; epslow:2x2.5@3+4; chipfail:1@8; \
+                 linkslow:3@1+2; linkcut@10+0.5";
+        let script = FaultScript::parse(s).unwrap();
+        assert_eq!(script.events.len(), 6);
+        assert_eq!(script.events[0].kind, FaultKind::EpFail { ep: 1 });
+        assert_eq!(script.events[2].kind, FaultKind::EpSlow { ep: 2, factor: 2.5, down_s: 4.0 });
+        assert_eq!(script.events[3].kind, FaultKind::ChipFail { chiplet: 1 });
+        let reparsed = FaultScript::parse(&script.describe()).unwrap();
+        assert_eq!(script, reparsed);
+        assert_eq!(FaultScript::default().describe(), "none");
+        assert_eq!(FaultScript::parse("").unwrap(), FaultScript::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "epfail:1",        // no time
+            "epfail:1@5+2",    // permanent kind with a window
+            "epstall:1@5",     // transient kind without a window
+            "epslow:1@3+4",    // missing factor
+            "linkcut:3@1+2",   // linkcut takes no args
+            "explode:1@5",     // unknown kind
+            "epfail:xyz@5",    // bad id
+            "epfail:1@lots",   // bad time
+        ] {
+            assert!(FaultScript::parse(bad).is_err(), "{bad:?} should fail to parse");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_each_audit_case() {
+        let plat = configs::c2(); // 4 EPs, chiplets 0 and 1
+        let n = plat.n_eps();
+        let ok = |s: &str| FaultScript::parse(s).unwrap().validate(&plat);
+        // Out-of-range EP id.
+        let err = ok(&format!("epfail:{n}@1")).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Unknown chiplet id.
+        let err = ok("chipfail:99@1").unwrap_err();
+        assert!(err.to_string().contains("chiplet 99"), "{err}");
+        // Negative / non-finite times and empty windows.
+        assert!(ok("epfail:0@-1").is_err());
+        assert!(ok("epfail:0@nan").is_err());
+        assert!(ok("epstall:0@1+0").is_err());
+        assert!(ok("epstall:0@1+-2").is_err());
+        // Factors must exceed 1.
+        assert!(ok("epslow:0x1.0@1+2").is_err());
+        assert!(ok("linkslow:0.5@1+2").is_err());
+        // Overlapping windows on one EP (stall/slow mix counts).
+        let err = ok("epstall:0@1+3; epslow:0x2@2+5").unwrap_err();
+        assert!(err.to_string().contains("overlapping windows on EP 0"), "{err}");
+        // A fail-stop owns [t, ∞): later windows on the same EP overlap.
+        assert!(ok("epfail:0@1; epstall:0@5+1").is_err());
+        // Chiplet fail covers its member EPs.
+        assert!(ok("chipfail:0@1; epstall:0@5+1").is_err());
+        // Overlapping link windows.
+        let err = ok("linkcut@1+3; linkslow:2@2+1").unwrap_err();
+        assert!(err.to_string().contains("link windows"), "{err}");
+        // Failing every EP is rejected.
+        let all: Vec<String> = (0..n).map(|e| format!("epfail:{e}@1")).collect();
+        let err = ok(&all.join("; ")).unwrap_err();
+        assert!(err.to_string().contains("fail-stops all"), "{err}");
+        // Touching windows and disjoint windows pass.
+        assert!(ok("epstall:0@1+2; epstall:0@3+2").is_ok());
+        assert!(ok("epfail:0@1; epstall:1@5+1; linkcut@1+1; linkslow:2@2+1").is_ok());
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_valid() {
+        let plat = configs::c5();
+        let a = FaultScript::chaos(7, &plat, 60.0, 12);
+        let b = FaultScript::chaos(7, &plat, 60.0, 12);
+        assert_eq!(a, b, "same seed must generate the same script");
+        assert_eq!(a.events.len(), 12);
+        a.validate(&plat).expect("chaos scripts are valid by construction");
+        let c = FaultScript::chaos(8, &plat, 60.0, 12);
+        assert_ne!(a, c, "different seeds should differ");
+        // Round-trips through the CLI grammar too.
+        assert_eq!(FaultScript::parse(&a.describe()).unwrap(), a);
+        // Never fails the last EP: at least one survives any chaos script.
+        let many = FaultScript::chaos(3, &plat, 1000.0, 200);
+        many.validate(&plat).unwrap();
+        let mut failed = vec![false; plat.n_eps()];
+        for ev in &many.events {
+            if let FaultKind::EpFail { ep } = ev.kind {
+                failed[ep] = true;
+            }
+        }
+        assert!(failed.iter().any(|&f| !f));
+    }
+}

@@ -25,6 +25,12 @@
 //!   partitions the platform's EPs into disjoint subsets, tunes one
 //!   replica pipeline per subset, and the front-end [`BalancerPolicy`]
 //!   the engine routes arrivals with (`TenantSpec::with_shards`);
+//! * [`fault`] — the deterministic fault plane: scripted EP
+//!   fail-stop/stall/slowdown and inter-chiplet link degradation/cut
+//!   ([`FaultScript`], `serve --faults` / `--chaos`), injected as heap
+//!   events, hashed into the event log and driving the engine's
+//!   detect → drain → re-plan failover (see the crate docs §Fault
+//!   tolerance & graceful degradation);
 //! * [`cluster`] — cluster-level control: the cross-tenant **co-planner**
 //!   ([`cluster::coplan`] — joint disjoint EP budgets, weighted
 //!   water-filling, provably never worse than greedy first-come
@@ -50,6 +56,7 @@
 pub mod arrivals;
 pub mod cluster;
 pub mod engine;
+pub mod fault;
 pub mod shard;
 pub mod slo;
 pub mod sweep;
@@ -62,6 +69,7 @@ pub use engine::{
     serve, serve_traced, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport,
     TenantReport,
 };
+pub use fault::{FaultEvent, FaultKind, FaultScript};
 pub use shard::{plan_shards, plan_shards_with, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};
 pub use sweep::{run_sweep, whatif_grid, Scenario, ScenarioStats, SweepOutcome};

@@ -31,6 +31,7 @@ use crate::platform::Platform;
 
 use super::arrivals::ArrivalProcess;
 use super::engine::{serve, ServeOptions, ServeReport};
+use super::fault::{FaultEvent, FaultKind, FaultScript};
 use super::shard::BalancerPolicy;
 use super::slo::QuantileSketch;
 use super::tenant::TenantSpec;
@@ -355,6 +356,97 @@ pub fn autoscale_grid(
     out
 }
 
+/// Build the fault-plane degradation grid on the same **MMPP tidal
+/// workload** as [`autoscale_grid`]: for every `(rho, seed)` one
+/// fault-free baseline cell, one **throttle** cell per entry of
+/// `severities` (the strongest EP runs `severity`× slower for the middle
+/// third of the horizon), and one **fail-stop** cell (the strongest EP
+/// dies for good at a third of the horizon). All cells of a `(rho, seed)`
+/// pair share the identical arrival stream, so goodput deltas against the
+/// baseline isolate exactly what the fault costs after detect → drain →
+/// re-plan failover (`benches/fault_recovery.rs` reports the same cells
+/// as recovery envelopes).
+///
+/// Every cell serves a 2-replica JSQ deployment, queues deep (32,
+/// drop-oldest) and the SLO wide (500 bottleneck periods), so
+/// bounded-queue completions count as goodput — the comparison measures
+/// surviving capacity, not SLO tuning. `severities` entries must be > 1
+/// (they become [`FaultKind::EpSlow`] factors).
+#[allow(clippy::too_many_arguments)]
+pub fn fault_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    severities: &[f64],
+    balancer: BalancerPolicy,
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let dwell_s = (base.duration_s / 4.0).max(1e-6);
+    let target = plat.eps_by_rank()[0]; // faults hit the strongest EP
+    let fault_t = base.duration_s / 3.0;
+    let mut out = Vec::with_capacity(rhos.len() * seeds.len() * (severities.len() + 2));
+    for &rho in rhos {
+        for &seed in seeds {
+            let arrivals = ArrivalProcess::Mmpp {
+                low_rate: 0.25 * rho * cap,
+                high_rate: 1.3 * rho * cap,
+                mean_low_s: dwell_s,
+                mean_high_s: dwell_s,
+            };
+            let mk_spec = |name: String| {
+                TenantSpec::new(name, net.clone(), arrivals.clone())
+                    .with_shards(2)
+                    .with_balancer(balancer)
+                    .with_queue_capacity(32)
+                    .with_admission(super::tenant::AdmissionPolicy::DropOldest)
+                    .with_slo(500.0 / cap)
+            };
+            let mut push = |label: String, faults: FaultScript| {
+                let name = format!("{} {label} rho={rho} seed={seed}", net.name);
+                let mut opts = base.clone();
+                opts.seed = seed;
+                opts.faults = faults;
+                out.push(Scenario {
+                    name: name.clone(),
+                    plat: plat.clone(),
+                    tenants: vec![(mk_spec(name), config.clone())],
+                    opts,
+                });
+            };
+            push("fault-free".to_string(), FaultScript::default());
+            for &severity in severities {
+                push(
+                    format!("epslow-x{severity}"),
+                    FaultScript {
+                        events: vec![FaultEvent {
+                            t_s: fault_t,
+                            kind: FaultKind::EpSlow {
+                                ep: target,
+                                factor: severity,
+                                down_s: fault_t,
+                            },
+                        }],
+                    },
+                );
+            }
+            push(
+                "epfail".to_string(),
+                FaultScript {
+                    events: vec![FaultEvent {
+                        t_s: fault_t,
+                        kind: FaultKind::EpFail { ep: target },
+                    }],
+                },
+            );
+        }
+    }
+    out
+}
+
 /// Fan one captured flight-recorder trace across a what-if policy grid:
 /// every `shard_counts` × `balancers` cell re-simulates the trace's
 /// captured arrival streams ([`whatif_inputs`]) under that policy. The
@@ -611,6 +703,50 @@ mod tests {
         assert_eq!(sc[0].tenants[0].0.arrivals, sc[2].tenants[0].0.arrivals);
         assert_eq!(sc[0].opts.seed, sc[2].opts.seed);
         assert_eq!(sc[2].tenants[0].0.shards, 2, "autoscaled cell plans the max budget");
+    }
+
+    #[test]
+    fn fault_grid_covers_cells_and_shares_arrivals() {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let base = ServeOptions {
+            duration_s: 2.0,
+            control: false,
+            control_epoch_s: 0.1,
+            ..Default::default()
+        };
+        let sc = fault_grid(
+            &plat,
+            &net,
+            &cfg,
+            &[2.0, 4.0],
+            crate::serve::BalancerPolicy::JoinShortestQueue,
+            &[1.0],
+            &[5],
+            &base,
+        );
+        assert_eq!(sc.len(), 4, "baseline, two throttle severities, fail-stop");
+        assert!(sc[0].name.contains("fault-free"), "{}", sc[0].name);
+        assert!(sc[1].name.contains("epslow-x2"), "{}", sc[1].name);
+        assert!(sc[2].name.contains("epslow-x4"), "{}", sc[2].name);
+        assert!(sc[3].name.contains("epfail"), "{}", sc[3].name);
+        assert!(sc[0].opts.faults.is_empty());
+        for s in &sc[1..] {
+            assert_eq!(s.opts.faults.events.len(), 1, "{}", s.name);
+            assert!(s.opts.faults.validate(&plat).is_ok(), "{}", s.name);
+        }
+        // every cell of one (rho, seed) pair sees the same arrival stream
+        for s in &sc[1..] {
+            assert_eq!(sc[0].tenants[0].0.arrivals, s.tenants[0].0.arrivals);
+            assert_eq!(sc[0].opts.seed, s.opts.seed);
+        }
+        // the grid runs end to end and every cell conserves requests
+        let out = run_sweep(sc, available_threads());
+        for o in &out {
+            let r = o.report.as_ref().expect("serve run");
+            assert!(r.tenants.iter().all(|t| t.conserved()), "{}", o.name);
+        }
     }
 
     #[test]

@@ -1,19 +1,69 @@
 //! Binary trace format: varint primitives, CRC-framed sections, records.
 //!
-//! A `.trace` file is a magic/version header followed by sections in a
-//! fixed order:
+//! # File layout
+//!
+//! A `.trace` file is a magic/version header followed by four sections in
+//! a fixed order:
 //!
 //! ```text
 //! "SHTR" [version u8]
-//! [section id u8] [payload len varint] [payload bytes] [crc32 u32 LE]
-//! ...
+//! [section id u8] [payload len varint] [payload bytes] [crc32 u32 LE]   × 4
 //! ```
 //!
-//! Payload integers are LEB128 varints, floats are the raw 8 LE bytes of
-//! [`f64::to_bits`] (so replay inputs survive the round-trip bit-exactly),
-//! strings are a varint length followed by UTF-8. Each section's payload
-//! carries its own CRC-32 (IEEE), so truncation or corruption anywhere in
-//! the file is caught with a precise error instead of a garbage replay.
+//! Primitive encodings, used throughout every section:
+//!
+//! * **integers** — LEB128 varints;
+//! * **floats** — the raw 8 LE bytes of [`f64::to_bits`], so replay
+//!   inputs survive the round-trip bit-exactly (including `-0.0`/NaN);
+//! * **strings** — varint length + UTF-8 bytes;
+//! * **bools/enums** — one byte with a stable wire code; decoders bail
+//!   on codes they do not know.
+//!
+//! Each section's payload carries its own CRC-32 (IEEE), so truncation or
+//! corruption anywhere in the file is caught with a precise error instead
+//! of a garbage replay. The encoding is canonical: decode → re-encode
+//! reproduces the input bytes exactly.
+//!
+//! ## Section 1 — inputs ([`SEC_INPUTS`])
+//!
+//! Everything needed to re-simulate the run from scratch, in order:
+//!
+//! 1. **platform** — name, EP table (id, core type, core count, memory
+//!    class, chiplet), inter-chiplet link (latency, bandwidth), optional
+//!    mesh topology;
+//! 2. **tenants** — count, then per tenant its spec (name, network
+//!    layers, arrival process, SLO, queueing/batching/admission, shard
+//!    count, balancer, weight) and initial pipeline configuration
+//!    (stage sizes + EP assignment);
+//! 3. **serve options** — horizon, seed, control-loop knobs, contention
+//!    flag, pump mode, coplan flag, autoscale options, and (since
+//!    version 2) the **fault script**: an event count followed by, per
+//!    event, the [`crate::serve::FaultKind`] wire code (1 = epfail,
+//!    2 = epstall, 3 = epslow, 4 = chipfail, 5 = linkslow, 6 = linkcut),
+//!    its kind-specific fields (EP/chiplet ids as varints, factors and
+//!    window lengths as f64), and the event time as f64.
+//!
+//! ## Section 2 — events ([`SEC_EVENTS`])
+//!
+//! The hashed engine event stream: a count, then per event varint
+//! `tag`/`a`/`b` and the f64 time — exactly the words folded into
+//! [`crate::serve::ServeReport::log_hash`], in heap order. See
+//! [`TraceEvent`] for the tag table (fault boundaries are tag 7).
+//!
+//! ## Section 3 — controls ([`SEC_CONTROLS`])
+//!
+//! Control-plane decisions recorded *beside* the hashed stream (capture
+//! never perturbs the live hash): a count, then per record the
+//! [`super::ControlKind`] wire code (1 = retune, 2 = coplan, 3 = scale,
+//! 4 = fault, 5 = failover, 6 = shed), tenant, shard, two payload words
+//! and the decision time.
+//!
+//! ## Section 4 — summary ([`SEC_SUMMARY`])
+//!
+//! What a full replay must reproduce: the run's log hash (8 raw LE
+//! bytes), event count, truncation flag, and per-tenant outcome counters
+//! (offered/rejected/dropped/completed/slo_ok/in_flight/retunes/
+//! scale_events).
 //!
 //! Everything here is allocation-light and panic-free on malformed input:
 //! the [`Reader`] bounds-checks every access and returns `anyhow` errors.
@@ -24,7 +74,9 @@ use anyhow::{bail, Context, Result};
 pub const MAGIC: [u8; 4] = *b"SHTR";
 
 /// Current format version (bumped on any incompatible layout change).
-pub const VERSION: u8 = 1;
+/// Version 2 added the fault script to the serialized serve options and
+/// the tag-7 fault records to the event stream.
+pub const VERSION: u8 = 2;
 
 /// Section id: serialized serve inputs (platform, tenants, options).
 pub const SEC_INPUTS: u8 = 1;
@@ -48,6 +100,7 @@ pub const SEC_SUMMARY: u8 = 4;
 /// | 4   | resume       | tenant « 8 \| shard    | 0              |
 /// | 5   | epoch tick   | 0                      | 0              |
 /// | 6   | scale change | tenant « 8 \| shard    | replica state  |
+/// | 7   | fault        | event ix « 8 \| kind   | begin (1/0)    |
 #[derive(Debug, Clone, Copy)]
 pub struct TraceEvent {
     /// Simulated time of the event, seconds.
@@ -92,6 +145,7 @@ impl TraceEvent {
             4 => "resume",
             5 => "epoch",
             6 => "scale",
+            7 => "fault",
             _ => "unknown",
         }
     }

@@ -21,6 +21,7 @@ use crate::platform::{
 use super::super::arrivals::ArrivalProcess;
 use super::super::cluster::AutoscaleOptions;
 use super::super::engine::{PumpMode, ServeOptions, ServeReport};
+use super::super::fault::{FaultEvent, FaultKind, FaultScript};
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::{AdmissionPolicy, TenantSpec};
 use super::format::{
@@ -40,6 +41,16 @@ pub enum ControlKind {
     /// An autoscaler replica transition (`b` = the
     /// [`crate::serve::ReplicaState`] code entered).
     Scale,
+    /// A scripted fault boundary fired (`shard` = script event index,
+    /// `a` = the [`crate::serve::FaultKind`] wire code, `b` = 1 for the
+    /// window begin / 0 for its end).
+    Fault,
+    /// A replica failed over (or recovered) onto a re-planned EP subset
+    /// (`a` = surviving subset size, `b` = predicted throughput bits).
+    Failover,
+    /// Graceful degradation toggled a tenant's admission (`b` = 1 when
+    /// the tenant is shed, 0 when re-admitted).
+    Shed,
 }
 
 impl ControlKind {
@@ -49,6 +60,9 @@ impl ControlKind {
             ControlKind::Retune => 1,
             ControlKind::Coplan => 2,
             ControlKind::Scale => 3,
+            ControlKind::Fault => 4,
+            ControlKind::Failover => 5,
+            ControlKind::Shed => 6,
         }
     }
 
@@ -58,6 +72,9 @@ impl ControlKind {
             1 => Ok(ControlKind::Retune),
             2 => Ok(ControlKind::Coplan),
             3 => Ok(ControlKind::Scale),
+            4 => Ok(ControlKind::Fault),
+            5 => Ok(ControlKind::Failover),
+            6 => Ok(ControlKind::Shed),
             other => bail!("unknown control-record kind code {other}"),
         }
     }
@@ -68,6 +85,9 @@ impl ControlKind {
             ControlKind::Retune => "retune",
             ControlKind::Coplan => "coplan",
             ControlKind::Scale => "scale",
+            ControlKind::Fault => "fault",
+            ControlKind::Failover => "failover",
+            ControlKind::Shed => "shed",
         }
     }
 }
@@ -789,6 +809,60 @@ fn put_opts(out: &mut Vec<u8>, opts: &ServeOptions) {
     put_varint(out, u64::from(auto.up_epochs));
     put_varint(out, u64::from(auto.down_epochs));
     put_varint(out, u64::from(auto.cooldown_epochs));
+    put_faults(out, &opts.faults);
+}
+
+fn put_faults(out: &mut Vec<u8>, faults: &FaultScript) {
+    put_varint(out, faults.events.len() as u64);
+    for fe in &faults.events {
+        out.push(fe.kind.code());
+        match fe.kind {
+            FaultKind::EpFail { ep } => put_varint(out, ep as u64),
+            FaultKind::EpStall { ep, down_s } => {
+                put_varint(out, ep as u64);
+                put_f64(out, down_s);
+            }
+            FaultKind::EpSlow { ep, factor, down_s } => {
+                put_varint(out, ep as u64);
+                put_f64(out, factor);
+                put_f64(out, down_s);
+            }
+            FaultKind::ChipFail { chiplet } => put_varint(out, u64::from(chiplet)),
+            FaultKind::LinkSlow { factor, down_s } => {
+                put_f64(out, factor);
+                put_f64(out, down_s);
+            }
+            FaultKind::LinkCut { down_s } => put_f64(out, down_s),
+        }
+        put_f64(out, fe.t_s);
+    }
+}
+
+fn get_faults(r: &mut Reader<'_>) -> Result<FaultScript> {
+    let n = r.varint().context("fault-event count")? as usize;
+    let mut events = Vec::with_capacity(n.min(1 << 16));
+    for i in 0..n {
+        let code = r.u8().with_context(|| format!("fault event {i} kind code"))?;
+        let kind = match code {
+            1 => FaultKind::EpFail { ep: r.varint()? as usize },
+            2 => FaultKind::EpStall { ep: r.varint()? as usize, down_s: r.f64()? },
+            3 => FaultKind::EpSlow {
+                ep: r.varint()? as usize,
+                factor: r.f64()?,
+                down_s: r.f64()?,
+            },
+            4 => FaultKind::ChipFail {
+                chiplet: u32::try_from(r.varint()?)
+                    .with_context(|| format!("fault event {i} chiplet"))?,
+            },
+            5 => FaultKind::LinkSlow { factor: r.f64()?, down_s: r.f64()? },
+            6 => FaultKind::LinkCut { down_s: r.f64()? },
+            other => bail!("unknown fault-kind code {other}"),
+        };
+        let t_s = r.f64().with_context(|| format!("fault event {i} time"))?;
+        events.push(FaultEvent { t_s, kind });
+    }
+    Ok(FaultScript { events })
 }
 
 fn get_bool(r: &mut Reader<'_>, what: &str) -> Result<bool> {
@@ -826,6 +900,7 @@ fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
         down_epochs: u32::try_from(r.varint()?).context("autoscale down_epochs")?,
         cooldown_epochs: u32::try_from(r.varint()?).context("autoscale cooldown")?,
     };
+    let faults = get_faults(r).context("decoding fault script")?;
     Ok(ServeOptions {
         duration_s,
         seed,
@@ -840,6 +915,7 @@ fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
         pump,
         coplan,
         autoscale,
+        faults,
     })
 }
 
@@ -862,7 +938,8 @@ mod tests {
         .with_balancer(BalancerPolicy::JoinShortestQueue)
         .with_weight(1.5);
         let config = PipelineConfig::new(vec![3, 3], vec![0, 1]);
-        let opts = ServeOptions { duration_s: 10.0, seed: 9, ..Default::default() };
+        let faults = FaultScript::parse("epstall:1@2+1.5; linkslow:2.0@5+2").unwrap();
+        let opts = ServeOptions { duration_s: 10.0, seed: 9, faults, ..Default::default() };
         Trace {
             platform: plat,
             tenants: vec![(spec, config)],
@@ -871,15 +948,42 @@ mod tests {
                 TraceEvent { t_s: 0.5, tag: 1, a: 0, b: 0 },
                 TraceEvent { t_s: 0.75, tag: 3, a: 0, b: 1 },
                 TraceEvent { t_s: 1.5, tag: 1, a: 0, b: 1 },
+                TraceEvent { t_s: 2.0, tag: 7, a: 2, b: 1 },
             ],
-            controls: vec![ControlRecord {
-                t_s: 5.0,
-                kind: ControlKind::Retune,
-                tenant: 0,
-                shard: 0,
-                a: 120,
-                b: 1,
-            }],
+            controls: vec![
+                ControlRecord {
+                    t_s: 5.0,
+                    kind: ControlKind::Retune,
+                    tenant: 0,
+                    shard: 0,
+                    a: 120,
+                    b: 1,
+                },
+                ControlRecord {
+                    t_s: 2.0,
+                    kind: ControlKind::Fault,
+                    tenant: 0,
+                    shard: 0,
+                    a: 2,
+                    b: 1,
+                },
+                ControlRecord {
+                    t_s: 2.0,
+                    kind: ControlKind::Failover,
+                    tenant: 0,
+                    shard: 0,
+                    a: 1,
+                    b: 0,
+                },
+                ControlRecord {
+                    t_s: 5.0,
+                    kind: ControlKind::Shed,
+                    tenant: 0,
+                    shard: 0,
+                    a: 0,
+                    b: 1,
+                },
+            ],
             summary: TraceSummary {
                 log_hash: 0xDEAD_BEEF_0BAD_F00D,
                 n_events: 3,
@@ -918,6 +1022,8 @@ mod tests {
         assert_eq!(back.platform.n_eps(), tr.platform.n_eps());
         assert_eq!(back.platform.link, tr.platform.link);
         assert_eq!(back.opts.seed, 9);
+        assert_eq!(back.opts.faults, tr.opts.faults);
+        assert_eq!(back.opts.faults.events.len(), 2);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::platform::Platform;
 use super::super::arrivals::ArrivalProcess;
 use super::super::cluster::AutoscaleOptions;
 use super::super::engine::{serve, serve_traced, ServeOptions, ServeReport};
+use super::super::fault::FaultScript;
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::TenantSpec;
 use super::recorder::Trace;
@@ -99,13 +100,21 @@ pub struct WhatIf {
     pub min_shards: Option<usize>,
     /// Force cross-tenant co-planning on or off.
     pub coplan: Option<bool>,
+    /// Replace the recorded fault script: `faults=none` strips the
+    /// recorded faults ("how would the run have gone without the
+    /// outage?"), `faults=<script>` injects a different one (the
+    /// [`FaultScript`] grammar is `;`-separated and comma-free, so it
+    /// nests inside the comma-separated override list).
+    pub faults: Option<FaultScript>,
 }
 
 impl WhatIf {
     /// Parse a CLI override list: comma-separated `key=value` pairs with
-    /// keys `shards`, `balancer`, `autoscale`, `min-shards`, `coplan`
-    /// (e.g. `shards=4,balancer=jsq,autoscale=on`). Unknown keys error by
-    /// name.
+    /// keys `shards`, `balancer`, `autoscale`, `min-shards`, `coplan`,
+    /// `faults` (e.g. `shards=4,balancer=jsq,faults=none`). The `faults`
+    /// value is either `none`/`off` (strip the recorded script) or a
+    /// [`FaultScript`] spec — `;`-separated, so it fits in one pair.
+    /// Unknown keys error by name.
     pub fn parse(s: &str) -> Result<Self> {
         let mut w = WhatIf::default();
         for pair in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -131,9 +140,16 @@ impl WhatIf {
                     w.min_shards = Some(k);
                 }
                 "coplan" => w.coplan = Some(parse_switch(key, value)?),
+                "faults" => {
+                    w.faults = Some(match value.to_ascii_lowercase().as_str() {
+                        "none" | "off" => FaultScript::default(),
+                        _ => FaultScript::parse(value)
+                            .with_context(|| format!("what-if faults value {value:?}"))?,
+                    });
+                }
                 other => bail!(
                     "unknown what-if key {other:?} (allowed: shards, balancer, autoscale, \
-                     min-shards, coplan)"
+                     min-shards, coplan, faults)"
                 ),
             }
         }
@@ -163,6 +179,13 @@ impl WhatIf {
         }
         if let Some(on) = self.coplan {
             parts.push(format!("coplan={}", if on { "on" } else { "off" }));
+        }
+        if let Some(f) = &self.faults {
+            if f.is_empty() {
+                parts.push("faults=none".into());
+            } else {
+                parts.push(format!("faults=[{}]", f.describe()));
+            }
         }
         if parts.is_empty() {
             "(no overrides)".into()
@@ -221,6 +244,10 @@ pub fn whatif_inputs(
     if let Some(k) = what_if.min_shards {
         opts.autoscale.min_shards = k;
     }
+    if let Some(f) = &what_if.faults {
+        f.validate(&trace.platform).context("what-if fault script")?;
+        opts.faults = f.clone();
+    }
     Ok((trace.platform.clone(), tenants, opts))
 }
 
@@ -268,6 +295,26 @@ mod tests {
         assert!(WhatIf::parse(" , ").unwrap().is_empty());
         let w = WhatIf::parse(" shards = 2 ").unwrap();
         assert_eq!(w.shards, Some(2));
+    }
+
+    #[test]
+    fn whatif_parse_faults_override() {
+        // `none` strips the recorded script: the override is Some but empty.
+        let w = WhatIf::parse("faults=none").unwrap();
+        assert_eq!(w.faults, Some(FaultScript::default()));
+        assert!(!w.is_empty());
+        assert_eq!(w.describe(), "faults=none");
+
+        // A `;`-separated script nests inside the comma-separated list.
+        let w = WhatIf::parse("shards=2,faults=epfail:1@5; linkcut@8+2").unwrap();
+        assert_eq!(w.shards, Some(2));
+        let f = w.faults.as_ref().unwrap();
+        assert_eq!(f.events.len(), 2);
+        assert!(w.describe().starts_with("shards=2 faults=["), "{}", w.describe());
+
+        // Malformed scripts error through the what-if parser.
+        let err = WhatIf::parse("faults=epfail:bogus@5").unwrap_err().to_string();
+        assert!(err.contains("faults"), "{err}");
     }
 
     #[test]

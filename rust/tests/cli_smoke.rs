@@ -433,3 +433,162 @@ fn serve_sweep_rejects_conflicting_grids() {
     assert!(!o.status.success());
     assert!(stderr(&o).contains("mutually exclusive"), "{}", stderr(&o));
 }
+
+#[test]
+fn usage_lists_fault_flags() {
+    let o = shisha(&[]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("--faults"), "{out}");
+    assert!(out.contains("--chaos"), "{out}");
+    assert!(out.contains("--fault-grid"), "{out}");
+    assert!(out.contains("epfail"), "{out}");
+    assert!(out.contains("linkcut"), "{out}");
+}
+
+#[test]
+fn serve_with_faults_runs_deterministically() {
+    let args = [
+        "serve",
+        "--tenants",
+        "1",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--arrivals",
+        "poisson:80",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.25",
+        "--faults",
+        "epstall:1@0.5+0.5",
+        "--seed",
+        "9",
+    ];
+    let a = shisha(&args);
+    assert!(a.status.success(), "{}", stderr(&a));
+    let out = stdout(&a);
+    assert!(out.contains("fault plane:"), "{out}");
+    assert!(out.contains("epstall"), "{out}");
+    let b = shisha(&args);
+    assert_eq!(stdout(&a), stdout(&b), "faulted serve must be deterministic");
+}
+
+#[test]
+fn serve_chaos_generates_a_valid_script() {
+    let args = [
+        "serve",
+        "--tenants",
+        "1",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--arrivals",
+        "poisson:40",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.25",
+        "--chaos",
+        "3",
+        "--seed",
+        "9",
+    ];
+    let a = shisha(&args);
+    assert!(a.status.success(), "{}", stderr(&a));
+    assert!(stdout(&a).contains("fault plane:"), "{}", stdout(&a));
+    let b = shisha(&args);
+    assert_eq!(stdout(&a), stdout(&b), "chaos script must be seed-deterministic");
+}
+
+#[test]
+fn serve_rejects_bad_fault_script() {
+    let o = shisha(&["serve", "--faults", "warpcore:0@1", "--duration", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("fault"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_rejects_faults_with_chaos() {
+    let o = shisha(&[
+        "serve",
+        "--faults",
+        "epfail:0@1",
+        "--chaos",
+        "7",
+        "--duration",
+        "1",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("mutually exclusive"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_rejects_faults_with_replay() {
+    // the conflict is rejected before the trace file is ever opened
+    let o = shisha(&[
+        "serve",
+        "--replay",
+        "/nonexistent/t.trace",
+        "--faults",
+        "epfail:0@1",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("what-if faults="), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_sweep_fault_grid_compares_severities() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c1",
+        "--fault-grid",
+        "4",
+        "--rho-grid",
+        "0.8",
+        "--seeds",
+        "7",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.5",
+        "--threads",
+        "2",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("sweeping 3 scenario(s)"), "{out}");
+    assert!(out.contains("fault-free"), "{out}");
+    assert!(out.contains("epslow-x4"), "{out}");
+    assert!(out.contains("epfail"), "{out}");
+}
+
+#[test]
+fn serve_sweep_rejects_bad_fault_grid() {
+    let o = shisha(&["serve", "--sweep", "--fault-grid", "0.5", "--duration", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("fault-grid"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_sweep_rejects_fault_grid_with_shard_grid() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--fault-grid",
+        "2",
+        "--shard-grid",
+        "1,2",
+        "--duration",
+        "1",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("mutually exclusive"), "{}", stderr(&o));
+}

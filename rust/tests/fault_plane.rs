@@ -1,0 +1,366 @@
+//! Fault-plane integration tests: scripted disasters end to end.
+//!
+//! Four contracts, strongest first:
+//!
+//! 1. **Failover never places work on a dead EP** — across a family of
+//!    chaos-generated scripts (property-style, many seeds), every replica
+//!    still active at the horizon runs on EPs that are healthy at the
+//!    horizon, both in its EP set and in its stage assignment.
+//! 2. **Requests are conserved through fail → recover cycles** — offered
+//!    always equals completed + rejected + dropped + in-flight, across
+//!    seeds and across scripts that take EPs down and bring them back.
+//! 3. **The acceptance disaster** — the tidal MMPP storm on C5 with a
+//!    mid-run fail-stop of the *strongest* EP: zero requests lost,
+//!    goodput within 15% of the fault-free run scaled by the surviving
+//!    capacity, the failover re-plan settled within two control epochs,
+//!    and the whole thing deterministic across invocations.
+//! 4. **Faulted runs record and replay bit-identically** — the flight
+//!    recorder captures the script inside the trace, a binary round trip
+//!    survives, `replay_full` re-simulates to the same hash, and a
+//!    `faults=none` what-if strips the script while conserving the
+//!    captured workload.
+
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::{configs, Platform};
+use shisha::serve::{
+    replay_full, replay_whatif, serve, serve_traced, shisha_config, AdmissionPolicy,
+    ArrivalProcess, BalancerPolicy, ControlKind, FaultEvent, FaultKind, FaultScript, ReplicaState,
+    ServeOptions, TenantReport, TenantSpec, Trace, WhatIf,
+};
+
+fn assert_conserved(t: &TenantReport, label: &str) {
+    assert_eq!(
+        t.offered,
+        t.completed + t.rejected + t.dropped + t.in_flight,
+        "{label}/{}: offered must equal completed + rejected + dropped + in-flight",
+        t.name
+    );
+}
+
+/// EPs that are down at time `at_s` under `script`: fail-stops and
+/// chiplet failures forever after their begin time, stalls only while
+/// their window covers `at_s`.
+fn downed_at(script: &FaultScript, plat: &Platform, at_s: f64) -> Vec<usize> {
+    let mut down = vec![false; plat.n_eps()];
+    for ev in &script.events {
+        match ev.kind {
+            FaultKind::EpFail { ep } if ev.t_s <= at_s => down[ep] = true,
+            FaultKind::ChipFail { chiplet } if ev.t_s <= at_s => {
+                for ep in &plat.eps {
+                    if ep.chiplet == chiplet {
+                        down[ep.id] = true;
+                    }
+                }
+            }
+            FaultKind::EpStall { ep, down_s } if ev.t_s <= at_s && at_s < ev.t_s + down_s => {
+                down[ep] = true;
+            }
+            _ => {}
+        }
+    }
+    (0..plat.n_eps()).filter(|&e| down[e]).collect()
+}
+
+fn storm_tenant(net_cap: f64, shards: usize) -> TenantSpec {
+    TenantSpec::new(
+        "storm",
+        networks::synthnet(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.25 * net_cap,
+            high_rate: 1.3 * net_cap,
+            mean_low_s: 100.0 / net_cap,
+            mean_high_s: 100.0 / net_cap,
+        },
+    )
+    .with_shards(shards)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(32)
+    .with_admission(AdmissionPolicy::DropOldest)
+    .with_slo(500.0 / net_cap)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Property: no post-failover placement touches a dead EP.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_failover_never_places_work_on_a_dead_ep() {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = 400.0 / cap;
+    for seed in 1..=6u64 {
+        let script = FaultScript::chaos(seed, &plat, duration_s, 5);
+        script.validate(&plat).expect("chaos scripts are valid by construction");
+        let opts = ServeOptions {
+            duration_s,
+            seed,
+            control_epoch_s: 20.0 / cap,
+            faults: script.clone(),
+            ..Default::default()
+        };
+        let report = serve(&plat, vec![(storm_tenant(cap, 2), config.clone())], &opts)
+            .unwrap_or_else(|e| panic!("chaos seed {seed}: {e:#}"));
+        let dead = downed_at(&script, &plat, duration_s);
+        for t in &report.tenants {
+            assert_conserved(t, &format!("chaos seed {seed}"));
+            for (si, s) in t.shards.iter().enumerate() {
+                if s.final_state != ReplicaState::Active {
+                    continue;
+                }
+                for ep in &dead {
+                    assert!(
+                        !s.eps.contains(ep),
+                        "seed {seed} shard {si}: EP set {:?} contains dead EP {ep} \
+                         (script: {})",
+                        s.eps,
+                        script.describe()
+                    );
+                    assert!(
+                        !s.final_config.assignment.contains(ep),
+                        "seed {seed} shard {si}: assignment {:?} places a stage on dead \
+                         EP {ep} (script: {})",
+                        s.final_config.assignment,
+                        script.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Conservation through fail → recover cycles, across seeds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fail_recover_cycles_conserve_requests_across_seeds() {
+    let plat = configs::c1();
+    let net = networks::synthnet_small();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let d = |x: f64| x / cap;
+    // Two stall cycles on alternating EPs, a throttle, and a link cut:
+    // the platform goes down and comes back twice within the horizon.
+    let script = FaultScript {
+        events: vec![
+            FaultEvent { t_s: d(50.0), kind: FaultKind::EpStall { ep: 0, down_s: d(40.0) } },
+            FaultEvent { t_s: d(150.0), kind: FaultKind::EpStall { ep: 1, down_s: d(40.0) } },
+            FaultEvent {
+                t_s: d(250.0),
+                kind: FaultKind::EpSlow { ep: 0, factor: 3.0, down_s: d(50.0) },
+            },
+            FaultEvent { t_s: d(320.0), kind: FaultKind::LinkCut { down_s: d(30.0) } },
+        ],
+    };
+    script.validate(&plat).expect("cycle script is valid");
+    for seed in [3u64, 5, 9] {
+        let tenant = TenantSpec::new(
+            "cycles",
+            net.clone(),
+            ArrivalProcess::Poisson { rate: 0.8 * cap },
+        )
+        .with_queue_capacity(24)
+        .with_admission(AdmissionPolicy::DropOldest)
+        .with_slo(100.0 / cap);
+        let opts = ServeOptions {
+            duration_s: d(400.0),
+            seed,
+            control_epoch_s: d(20.0),
+            faults: script.clone(),
+            ..Default::default()
+        };
+        let report = serve(&plat, vec![(tenant, config.clone())], &opts)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        let t = &report.tenants[0];
+        assert_conserved(t, &format!("seed {seed}"));
+        assert!(t.completed > 0, "seed {seed}: the tenant must keep serving through cycles");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. The acceptance disaster: strongest-EP fail-stop mid-storm.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn strongest_ep_failstop_recovers_fast_and_keeps_scaled_goodput() {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = 400.0 / cap;
+    let epoch_s = 10.0 / cap;
+    let failed = plat.eps_by_rank()[0];
+    let fault_t = duration_s / 3.0;
+    let base = ServeOptions {
+        duration_s,
+        seed: 47,
+        control_epoch_s: epoch_s,
+        ..Default::default()
+    };
+    let tenants = || vec![(storm_tenant(cap, 2), config.clone())];
+
+    let free = serve(&plat, tenants(), &base).expect("fault-free storm");
+    assert_conserved(&free.tenants[0], "fault-free");
+    let goodput_free = free.goodputs()[0];
+    assert!(goodput_free > 0.0);
+
+    let faulted_opts = ServeOptions {
+        faults: FaultScript {
+            events: vec![FaultEvent { t_s: fault_t, kind: FaultKind::EpFail { ep: failed } }],
+        },
+        ..base.clone()
+    };
+    let (rep, trace) = serve_traced(&plat, tenants(), &faulted_opts).expect("faulted storm");
+    assert_conserved(&rep.tenants[0], "faulted");
+    let goodput_faulted = rep.goodputs()[0];
+
+    // Determinism: a second invocation reproduces the stream bit for bit.
+    let (rep2, _) = serve_traced(&plat, tenants(), &faulted_opts).expect("second faulted storm");
+    assert_eq!(rep.log_hash, rep2.log_hash, "faulted runs must be deterministic");
+    assert_eq!(rep.n_events, rep2.n_events);
+
+    // Goodput envelope: within 15% of the fault-free run scaled by the
+    // surviving capacity (the analytic throughput of the platform minus
+    // the dead EP over the full platform's — conservative, because the
+    // first third of the horizon ran at full capacity).
+    let surviving: Vec<usize> = (0..plat.n_eps()).filter(|&e| e != failed).collect();
+    let sub = plat.subset(&surviving);
+    let sub_db = PerfDb::build(&net, &sub, &CostModel::default());
+    let cap_surv = simulator::throughput(&net, &sub, &sub_db, &shisha_config(&net, &sub));
+    let frac = cap_surv / cap;
+    assert!(frac > 0.0 && frac < 1.0, "losing the strongest EP must cost capacity ({frac})");
+    assert!(
+        goodput_faulted >= 0.85 * frac * goodput_free,
+        "goodput {goodput_faulted:.2} req/s fell below 85% of the surviving-capacity-scaled \
+         fault-free goodput ({:.2} of {goodput_free:.2} req/s, capacity frac {frac:.3})",
+        0.85 * frac * goodput_free
+    );
+
+    // Recovery: detection is the tag-7 event, and every failover re-plan
+    // record lands within two control epochs of it.
+    let t_inject = trace
+        .events
+        .iter()
+        .find(|e| e.tag == 7 && e.b == 1)
+        .expect("the injection is a hashed trace event")
+        .t_s;
+    assert!((t_inject - fault_t).abs() < 1e-9, "injection at the scripted time");
+    assert!(
+        trace.controls.iter().any(|c| c.kind == ControlKind::Fault),
+        "detection must be recorded as a fault control record"
+    );
+    let failovers: Vec<f64> = trace
+        .controls
+        .iter()
+        .filter(|c| c.kind == ControlKind::Failover)
+        .map(|c| c.t_s)
+        .collect();
+    assert!(!failovers.is_empty(), "the fail-stop must trigger a failover re-plan");
+    for t in &failovers {
+        assert!(
+            *t >= t_inject && *t <= t_inject + 2.0 * epoch_s,
+            "failover at t={t:.4}s is outside two control epochs of the injection \
+             (t={t_inject:.4}s, epoch {epoch_s:.4}s)"
+        );
+    }
+
+    // No active replica still references the dead EP at the horizon.
+    for s in &rep.tenants[0].shards {
+        if s.final_state == ReplicaState::Active {
+            assert!(!s.eps.contains(&failed), "active replica on dead EP {failed}: {:?}", s.eps);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Faulted runs record, round-trip, and replay bit-identically.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_trace_replays_bit_identically_and_whatif_strips_faults() {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = 300.0 / cap;
+    let failed = plat.eps_by_rank()[0];
+    let opts = ServeOptions {
+        duration_s,
+        seed: 47,
+        control_epoch_s: 10.0 / cap,
+        faults: FaultScript {
+            events: vec![
+                FaultEvent { t_s: duration_s / 3.0, kind: FaultKind::EpFail { ep: failed } },
+                FaultEvent {
+                    t_s: duration_s / 2.0,
+                    kind: FaultKind::LinkSlow { factor: 2.0, down_s: duration_s / 10.0 },
+                },
+            ],
+        },
+        ..Default::default()
+    };
+    let (live, trace) = serve_traced(
+        &plat,
+        vec![(storm_tenant(cap, 2), config.clone())],
+        &opts,
+    )
+    .expect("faulted record run");
+    assert_conserved(&live.tenants[0], "recorded");
+    assert!(
+        trace.events.iter().any(|e| e.tag == 7),
+        "fault events must be part of the hashed, captured stream"
+    );
+
+    // Binary + disk round trip, then bit-identical re-simulation.
+    let bytes = trace.to_bytes();
+    let back = Trace::from_bytes(&bytes).expect("decode faulted trace");
+    assert_eq!(back.to_bytes(), bytes, "canonical re-encoding");
+    assert_eq!(
+        back.opts.faults.describe(),
+        opts.faults.describe(),
+        "the script rides inside the serialized serve options"
+    );
+    let file_name = format!("shisha_fault_plane_{}.trace", std::process::id());
+    let path = std::env::temp_dir().join(file_name);
+    trace.save(&path).expect("save faulted trace");
+    let loaded = Trace::load(&path).expect("load faulted trace");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.to_bytes(), bytes, "disk round trip is byte-identical");
+    let replayed = replay_full(&loaded).expect("full replay under faults");
+    assert_eq!(replayed.log_hash, live.log_hash, "faulted replay must be bit-identical");
+    assert_eq!(replayed.n_events, live.n_events);
+
+    // What-if faults=none: same captured storm, healthy platform.
+    let captured = trace.arrival_times(0).len() as u64;
+    assert_eq!(captured, live.tenants[0].offered);
+    let stripped = replay_whatif(
+        &trace,
+        &WhatIf { faults: Some(FaultScript::default()), ..Default::default() },
+    )
+    .expect("faults=none what-if");
+    assert_eq!(
+        stripped.tenants[0].offered, captured,
+        "the counterfactual must replay exactly the captured workload"
+    );
+    assert_conserved(&stripped.tenants[0], "faults=none what-if");
+    // And a *different* script over the same arrivals also conserves.
+    let stall_spec = format!("epstall:0@{}+{}", duration_s / 4.0, duration_s / 8.0);
+    let harsher = replay_whatif(
+        &trace,
+        &WhatIf {
+            faults: Some(FaultScript::parse(&stall_spec).expect("parse")),
+            ..Default::default()
+        },
+    )
+    .expect("harsher what-if");
+    assert_eq!(harsher.tenants[0].offered, captured);
+    assert_conserved(&harsher.tenants[0], "harsher what-if");
+}

@@ -27,7 +27,13 @@ against the copy committed at HEAD:
   overhead fraction must be below 1 (a capture tap that halves the engine
   is a regression whatever the trajectory says), and the full-replay
   throughput must be positive (replay_full verified at least one event
-  per wall-second — zero means replay never ran).
+  per wall-second — zero means replay never ran);
+* `BENCH_fault.json` gets the fault-plane recovery envelope on the fresh
+  run: the `aggregate` case must carry the recovery metrics, failover
+  must settle within 2 control epochs (the PR-7 acceptance bar — the
+  bench asserts this before writing, so a violation here means the file
+  was produced some other way), and the goodput retained under the
+  strongest-EP fail-stop must be a valid positive fraction.
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -108,6 +114,43 @@ def check_replay_envelope(path: str, fresh_cases: dict) -> list[str]:
     return problems
 
 
+# Fresh-run envelope for BENCH_fault.json: the fault-plane recovery
+# metrics the failover path is tracked by.
+FAULT_AGGREGATE_KEYS = {
+    "recovery_epochs",
+    "goodput_retained_frac",
+    "surviving_capacity_frac",
+    "replan_warm_ms",
+    "replan_speedup",
+    "reps",
+}
+
+
+def check_fault_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_fault.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = FAULT_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    epochs = aggregate.get("recovery_epochs")
+    if not isinstance(epochs, (int, float)) or epochs > 2.0:
+        problems.append(
+            f"{path}: recovery_epochs {epochs!r} must be a number <= 2 "
+            "(failover is required to settle within two control epochs)"
+        )
+    retained = aggregate.get("goodput_retained_frac")
+    if not isinstance(retained, (int, float)) or not 0.0 < retained <= 1.1:
+        problems.append(
+            f"{path}: goodput_retained_frac {retained!r} is not a valid positive "
+            "fraction (the faulted run lost its goodput entirely, or the ratio "
+            "was computed against the wrong baseline)"
+        )
+    return problems
+
+
 def load_fresh(path: str) -> dict:
     with open(path, encoding="utf-8") as f:
         return json.load(f)
@@ -146,6 +189,8 @@ def main(paths: list[str]) -> int:
             failures.extend(check_plan_envelope(path, fresh_cases))
         if path.rsplit("/", 1)[-1] == "BENCH_replay.json":
             failures.extend(check_replay_envelope(path, fresh_cases))
+        if path.rsplit("/", 1)[-1] == "BENCH_fault.json":
+            failures.extend(check_fault_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:
