@@ -1,0 +1,159 @@
+//! Elastic re-planning: live demand-driven co-plan vs the static co-plan.
+//!
+//! The anti-phase tidal grid ([`shisha::serve::sweep::elastic_grid`],
+//! SynthNet-small on the 8-EP C5 platform): tenant `ebb` is hot for the
+//! first half of the horizon while `flow` idles, then the tide flips.
+//! For every seed the grid runs one **static** cell (co-plan fixed at
+//! serve start) and one **live** cell (co-plan plus the elastic loop) on
+//! identical arrivals, and this bench reports what re-planning on
+//! observed demand buys:
+//!
+//! 1. **Weighted goodput** — both tenants carry equal weight, so
+//!    aggregate SLO goodput is the weighted objective.
+//!    `weighted_goodput_ratio` is live over static, summed across seeds;
+//!    the acceptance envelope (scripts/check_bench_schema.py) requires
+//!    ≥ 1 — the live loop must never lose to the plan it started from.
+//! 2. **Resource meter** — `ep_epoch_ratio` is live EP-epochs over
+//!    static; the envelope requires ≤ 1 (the win cannot come from
+//!    holding extra EPs active).
+//! 3. **Control activity** — `repartitions` counts the adopted re-plans
+//!    across the live cells (zero would mean the loop never moved and
+//!    the comparison is vacuous; the envelope requires ≥ 1).
+//!
+//! Request conservation (run-total and per-epoch flow identity) is
+//! asserted for every tenant of every cell before anything is written,
+//! so a migration that loses requests can never mint numbers. Results go
+//! to `BENCH_elastic.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench elastic_replan            # full profile
+//! cargo bench --bench elastic_replan -- --quick # CI profile
+//! ```
+
+use shisha::metrics::bench::JsonReport;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::sweep::{self, elastic_grid};
+use shisha::serve::{shisha_config, ScenarioStats, ServeOptions, ServeReport};
+
+fn assert_conserved(r: &ServeReport, label: &str) {
+    for t in &r.tenants {
+        assert!(
+            t.conserved(),
+            "{label}/{}: requests must be conserved across elastic migrations",
+            t.name
+        );
+        assert!(
+            t.epoch_conserved(),
+            "{label}/{}: per-epoch flow identity must hold across re-partitions",
+            t.name
+        );
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet_small();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let horizon = if quick { 150.0 / cap } else { 300.0 / cap };
+    let seeds: Vec<u64> = if quick { vec![13] } else { vec![13, 37, 61] };
+    let epoch_s = horizon / 40.0;
+    println!(
+        "C5 ({} EPs), synthnet-small capacity {:.1} req/s; horizon {horizon:.2}s, epoch \
+         {epoch_s:.3}s; anti-phase tidal mix, {} seed(s)\n",
+        plat.n_eps(),
+        cap,
+        seeds.len()
+    );
+
+    let base = ServeOptions {
+        duration_s: horizon,
+        control: false,
+        control_epoch_s: epoch_s,
+        ..Default::default()
+    };
+    let cells = elastic_grid(&plat, &net, &config, &[1.0], &seeds, &base);
+    let outcomes = sweep::run_sweep(cells, sweep::available_threads());
+
+    let mut static_goodput = 0.0f64;
+    let mut live_goodput = 0.0f64;
+    let mut static_ep_epochs = 0u64;
+    let mut live_ep_epochs = 0u64;
+    let mut repartitions = 0u64;
+    for pair in outcomes.chunks(2) {
+        let st_rep = pair[0].report.as_ref().expect("static cell");
+        let live_rep = pair[1].report.as_ref().expect("live cell");
+        assert_conserved(st_rep, &pair[0].name);
+        assert_conserved(live_rep, &pair[1].name);
+        let st = ScenarioStats::from_report(st_rep);
+        let live = ScenarioStats::from_report(live_rep);
+        println!(
+            "{}: static {:.1} req/s @ {} EP-epochs | live {:.1} req/s @ {} EP-epochs, {} \
+             re-partition(s)",
+            pair[1].name,
+            st.goodput_rps,
+            st.ep_epochs,
+            live.goodput_rps,
+            live.ep_epochs,
+            live.repartitions
+        );
+        static_goodput += st.goodput_rps;
+        live_goodput += live.goodput_rps;
+        static_ep_epochs += st.ep_epochs;
+        live_ep_epochs += live.ep_epochs;
+        repartitions += live.repartitions;
+    }
+    assert!(static_goodput > 0.0, "static cells must serve traffic");
+    let goodput_ratio = live_goodput / static_goodput;
+    let ep_epoch_ratio = live_ep_epochs as f64 / static_ep_epochs.max(1) as f64;
+    assert!(
+        goodput_ratio >= 1.0,
+        "envelope: live weighted goodput must hold the static co-plan's \
+         (ratio {goodput_ratio})"
+    );
+    assert!(
+        ep_epoch_ratio <= 1.0,
+        "envelope: live re-planning must not consume extra EP-epochs \
+         (ratio {ep_epoch_ratio})"
+    );
+    assert!(repartitions >= 1, "the tide must move the elastic loop at least once");
+    println!(
+        "\naggregate: weighted goodput ratio {goodput_ratio:.3} (live {live_goodput:.1} / \
+         static {static_goodput:.1} req/s), EP-epoch ratio {ep_epoch_ratio:.3}, \
+         {repartitions} re-partition(s) over {} seed(s)",
+        seeds.len()
+    );
+
+    let mut json = JsonReport::new();
+    json.note(
+        "elastic_replan: static vs live co-planning on the anti-phase tidal two-tenant mix \
+         (synthnet-small on C5, sweep::elastic_grid, identical arrivals per seed). \
+         weighted_goodput_ratio = live/static aggregate SLO goodput summed across seeds (equal \
+         tenant weights make aggregate goodput the weighted objective; envelope >= 1); \
+         ep_epoch_ratio = live/static EP-epochs (envelope <= 1, the win may not come from extra \
+         active EPs); repartitions = adopted re-plans across the live cells (envelope >= 1, \
+         zero would make the comparison vacuous). Run-total and per-epoch request conservation \
+         is asserted for every tenant of every cell before anything is written.",
+    );
+    json.metric("goodput", "static_rps", static_goodput);
+    json.metric("goodput", "live_rps", live_goodput);
+    json.metric("goodput", "ratio", goodput_ratio);
+    json.metric("ep_epochs", "static", static_ep_epochs as f64);
+    json.metric("ep_epochs", "live", live_ep_epochs as f64);
+    json.metric("ep_epochs", "ratio", ep_epoch_ratio);
+    json.metric("aggregate", "weighted_goodput_ratio", goodput_ratio);
+    json.metric("aggregate", "ep_epoch_ratio", ep_epoch_ratio);
+    json.metric("aggregate", "repartitions", repartitions as f64);
+    json.metric("aggregate", "reps", seeds.len() as f64);
+
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_elastic.json");
+    json.write(&bench_path).expect("write BENCH_elastic.json");
+    println!("\nwrote {}", bench_path.display());
+}

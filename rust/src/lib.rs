@@ -131,6 +131,40 @@
 //! [`serve::ShardReport::scale_events`], so co-planned + autoscaled runs
 //! stay bit-deterministic and golden-pinnable like everything else.
 //!
+//! ## Elastic control loop
+//!
+//! The static co-plan divides the cluster once, from *spec* rates; the
+//! elastic loop ([`serve::ElasticOptions`], `serve --coplan --elastic`)
+//! re-runs it every control epoch from *observed* demand:
+//!
+//! * each epoch the engine folds every tenant's offered rate, shed flow
+//!   (flow-derived: `offered + backlog_prev − completed − backlog`, so
+//!   rejected and dropped requests are never double-counted) and queued
+//!   backlog into a [`serve::cluster::TenantDemand`], scales each
+//!   tenant's weight by its demand factor
+//!   ([`serve::cluster::coplan::demand_factors`]) and re-solves the
+//!   co-plan off the shared warm [`explore::PlanCache`]
+//!   ([`serve::cluster::coplan::coplan_observed_with`]);
+//! * the new plan is adopted only when its demand-weighted predicted
+//!   throughput beats the live allocation's by
+//!   [`serve::ElasticOptions::min_gain_frac`] (both sides scored under
+//!   the *same* effective weights) and the cooldown has elapsed — a
+//!   uniform-demand cluster never re-partitions, and the loop holds
+//!   entirely while any fault is active so failover keeps one owner;
+//! * adopting a plan **migrates queued requests across replica slab
+//!   arenas with zero loss** (the fault plane's drain → requeue
+//!   machinery): replicas whose EP budget moved re-home in place,
+//!   surplus replicas drain into survivors, and a tenant squeezed to one
+//!   replica collapses onto its full budget. Every re-partition is
+//!   hashed (trace tag 8), recorded as a
+//!   [`serve::ControlKind::Repartition`] control and counted in
+//!   [`serve::TenantReport::repartitions`], so elastic runs record,
+//!   replay and what-if (`--what-if elastic=on`) bit-identically;
+//! * `serve --sweep --elastic-grid` grids static vs live co-planning on
+//!   an anti-phase tidal mix ([`serve::sweep::elastic_grid`]), and
+//!   `cargo bench --bench elastic_replan` writes `BENCH_elastic.json`
+//!   (envelope: live weighted goodput ≥ static at no more EP-epochs).
+//!
 //! ## Flight recorder & replay
 //!
 //! Every serving run is a pure function of its inputs; the

@@ -163,6 +163,11 @@ const SERVE_FLAGS: &[FlagSpec] = &[
         help: "autoscaler active-replica floor, default 1",
     },
     FlagSpec {
+        name: "elastic",
+        value: "",
+        help: "re-run the co-plan each epoch on observed demand",
+    },
+    FlagSpec {
         name: "faults",
         value: "SCRIPT",
         help: "scripted fault plane (SCRIPT grammar below)",
@@ -249,6 +254,11 @@ const SERVE_SWEEP_FLAGS: &[FlagSpec] = &[
         name: "fault-grid",
         value: "2,4",
         help: "severity grid: baseline/throttle/fail-stop",
+    },
+    FlagSpec {
+        name: "elastic-grid",
+        value: "",
+        help: "static vs live co-plan on anti-phase tidal load",
     },
     FlagSpec {
         name: "balancer",
@@ -528,6 +538,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             min_shards: args.parsed_or("min-shards", 1)?,
             ..Default::default()
         },
+        elastic: shisha::serve::ElasticOptions {
+            enabled: args.has_flag("elastic"),
+            ..Default::default()
+        },
         faults,
         ..Default::default()
     };
@@ -573,6 +587,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             opts.autoscale.min_shards
         );
     }
+    if opts.elastic.enabled {
+        println!(
+            "elastic: re-planning the EP co-plan each epoch on observed demand \
+             (gain bar {:.0}%, cooldown {} epoch(s))",
+            opts.elastic.min_gain_frac * 100.0,
+            opts.elastic.cooldown_epochs
+        );
+    }
     if !opts.faults.is_empty() {
         println!("fault plane: {}", opts.faults.describe());
     }
@@ -606,6 +628,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             t.retune_trials,
             t.final_config.describe()
         );
+        if t.repartitions > 0 {
+            println!("  elastic: {} re-partition(s)", t.repartitions);
+        }
         if t.shards.len() > 1 {
             for (i, s) in t.shards.iter().enumerate() {
                 println!(
@@ -803,6 +828,18 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             bail!("--autoscale-grid and --fault-grid are mutually exclusive");
         }
     }
+    let elastic_grid = args.has_flag("elastic-grid");
+    if elastic_grid {
+        for (other, set) in [
+            ("--shard-grid", shard_grid.is_some()),
+            ("--autoscale-grid", autoscale_grid.is_some()),
+            ("--fault-grid", fault_grid.is_some()),
+        ] {
+            if set {
+                bail!("{other} and --elastic-grid are mutually exclusive");
+            }
+        }
+    }
     let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
     if let Some(path) = args.get("replay") {
@@ -810,6 +847,12 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         // every cell re-simulating the same recorded arrival streams
         if autoscale_grid.is_some() {
             bail!("--replay and --autoscale-grid are mutually exclusive");
+        }
+        if elastic_grid {
+            bail!(
+                "--replay and --elastic-grid are mutually exclusive (use \
+                 serve --replay FILE --what-if elastic=on for elastic counterfactuals)"
+            );
         }
         if fault_grid.is_some() {
             bail!(
@@ -852,6 +895,21 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     &rho_grid,
                     &seeds,
                     &fault_base,
+                ));
+            } else if elastic_grid {
+                // the anti-phase comparison wants many control epochs per
+                // tide; default the epoch to horizon/40 unless set explicitly
+                let mut el_base = base.clone();
+                if args.get("epoch").is_none() {
+                    el_base.control_epoch_s = el_base.duration_s / 40.0;
+                }
+                scenarios.extend(sweep::elastic_grid(
+                    &plat,
+                    &net,
+                    &config,
+                    &rho_grid,
+                    &seeds,
+                    &el_base,
                 ));
             } else if let Some(counts) = &autoscale_grid {
                 // the tidal comparison wants many control epochs per dwell
@@ -918,6 +976,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "re-tunes",
         "EP-epochs",
         "scale events",
+        "repartitions",
     ]);
     let mut total_events = 0u64;
     let mut serve_wall = 0.0f64;
@@ -939,6 +998,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     stats.retunes.to_string(),
                     stats.ep_epochs.to_string(),
                     stats.scale_events.to_string(),
+                    stats.repartitions.to_string(),
                 ]);
             }
             Err(e) => {
@@ -950,6 +1010,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     "-".into(),
                     "-".into(),
                     "ERROR".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),

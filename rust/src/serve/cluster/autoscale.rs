@@ -147,6 +147,81 @@ impl AutoscaleOptions {
     }
 }
 
+/// Elastic re-partition configuration (engine-wide; carried on
+/// [`crate::serve::ServeOptions::elastic`]).
+///
+/// Where [`AutoscaleOptions`] moves replicas *within* a tenant's planned
+/// EP budget, the elastic loop re-runs the cluster co-planner every
+/// control epoch on the **observed** per-tenant demand and, when the
+/// re-derived allocation is enough better than the one being served,
+/// migrates queued requests onto the new EP partition. Both knobs below
+/// exist to keep that loop from thrashing: a re-partition is a real
+/// reconfiguration (arena migration + warm re-tune), so it must clear a
+/// relative-gain bar and then hold through a cooldown.
+#[derive(Debug, Clone)]
+pub struct ElasticOptions {
+    /// Master switch; when false the serve-start co-plan is final.
+    pub enabled: bool,
+    /// Minimum relative objective gain (fraction) the demand-driven plan
+    /// must show over the live allocation before a re-partition fires.
+    pub min_gain_frac: f64,
+    /// Hold epochs after a re-partition before the next one may fire.
+    pub cooldown_epochs: u32,
+}
+
+impl Default for ElasticOptions {
+    fn default() -> Self {
+        Self { enabled: false, min_gain_frac: 0.02, cooldown_epochs: 2 }
+    }
+}
+
+impl ElasticOptions {
+    /// Enabled with defaults.
+    pub fn enabled() -> Self {
+        Self { enabled: true, ..Default::default() }
+    }
+
+    /// Validate the knobs (called by the engine when enabled).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.min_gain_frac >= 0.0 && self.min_gain_frac.is_finite()) {
+            bail!("elastic: min_gain_frac must be finite and ≥ 0");
+        }
+        Ok(())
+    }
+}
+
+/// Cooldown state for the elastic loop, one per run (engine-internal).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ElasticState {
+    /// Epochs remaining before another re-partition may fire.
+    pub cooldown: u32,
+}
+
+/// Decide whether a freshly derived demand-driven plan should replace
+/// the live allocation this epoch.
+///
+/// Pure and deterministic, mirroring [`decide`]: the candidate plan's
+/// objective must beat the live objective by at least
+/// [`ElasticOptions::min_gain_frac`] (relative), and the loop must be
+/// out of cooldown. A firing re-partition re-arms the cooldown.
+pub fn decide_repartition(
+    st: &mut ElasticState,
+    opts: &ElasticOptions,
+    live_objective: f64,
+    plan_objective: f64,
+) -> bool {
+    if st.cooldown > 0 {
+        st.cooldown -= 1;
+        return false;
+    }
+    let bar = live_objective * (1.0 + opts.min_gain_frac);
+    if plan_objective.is_finite() && plan_objective > bar {
+        st.cooldown = opts.cooldown_epochs;
+        return true;
+    }
+    false
+}
+
 /// Hysteresis state, one per tenant (engine-internal).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AutoscaleState {
@@ -384,6 +459,45 @@ mod tests {
         let mut st = AutoscaleState::default();
         let l = load(35.0, 2, 10.0, 0);
         assert_eq!(decide(&mut st, &o, &l), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn elastic_options_validate() {
+        assert!(ElasticOptions::enabled().validate().is_ok());
+        assert!(ElasticOptions { min_gain_frac: f64::NAN, ..ElasticOptions::enabled() }
+            .validate()
+            .is_err());
+        assert!(ElasticOptions { min_gain_frac: -0.1, ..ElasticOptions::enabled() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn repartition_needs_relative_gain() {
+        let o =
+            ElasticOptions { min_gain_frac: 0.05, cooldown_epochs: 0, ..ElasticOptions::enabled() };
+        let mut st = ElasticState::default();
+        // 4% better: under the 5% bar
+        assert!(!decide_repartition(&mut st, &o, 100.0, 104.0));
+        // 6% better: fires
+        assert!(decide_repartition(&mut st, &o, 100.0, 106.0));
+        // non-finite candidate never fires
+        assert!(!decide_repartition(&mut st, &o, 100.0, f64::INFINITY));
+        assert!(!decide_repartition(&mut st, &o, 100.0, f64::NAN));
+    }
+
+    #[test]
+    fn repartition_cooldown_defers() {
+        let o =
+            ElasticOptions { min_gain_frac: 0.0, cooldown_epochs: 2, ..ElasticOptions::enabled() };
+        let mut st = ElasticState::default();
+        assert!(decide_repartition(&mut st, &o, 10.0, 11.0));
+        assert_eq!(st.cooldown, 2);
+        // the next two epochs hold even though the gain persists
+        assert!(!decide_repartition(&mut st, &o, 10.0, 11.0));
+        assert!(!decide_repartition(&mut st, &o, 10.0, 11.0));
+        // cooldown expired: fires again
+        assert!(decide_repartition(&mut st, &o, 10.0, 11.0));
     }
 
     #[test]

@@ -268,6 +268,95 @@ pub fn water_fill_plan_with(
     build_plan(plat, specs, budgets, "water-fill", threads, cache)
 }
 
+/// One tenant's **observed** demand over the last control epoch, as the
+/// elastic loop sees it — the same serving signals the autoscaler
+/// watches, aggregated across the tenant's replicas.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantDemand {
+    /// Arrivals offered during the last epoch, per second.
+    pub offered_rate: f64,
+    /// Requests shed (rejected or dropped) during the last epoch, per
+    /// second.
+    pub shed_rate: f64,
+    /// Requests waiting in the tenant's queues right now.
+    pub backlog: u64,
+}
+
+impl TenantDemand {
+    /// Scalar demand pressure: the offered rate plus the unmet part
+    /// (shed requests and standing backlog both mean the allocation is
+    /// too small, so they push the tenant's effective weight up).
+    pub fn pressure(&self) -> f64 {
+        self.offered_rate + self.shed_rate + self.backlog as f64
+    }
+}
+
+/// Demand-weight smoothing floor: keeps an idle tenant's effective weight
+/// positive (so `check_specs` holds and the tenant keeps at least one EP)
+/// and damps the swing when every tenant is near-idle.
+const DEMAND_EPSILON: f64 = 1.0;
+
+/// Per-tenant demand-pressure scale factors: `(ε + pressure_i) / (ε +
+/// mean pressure)`. Multiplying each tenant's spec weight by its factor
+/// yields the **effective** weights the demand-driven plan is derived
+/// and scored under; the elastic gain bar must score the *live*
+/// allocation under the same factors, so they are exposed rather than
+/// buried in [`coplan_observed_with`]. Under uniform (or uniformly zero)
+/// pressure every factor is exactly `1.0`.
+pub fn demand_factors(demands: &[TenantDemand]) -> Vec<f64> {
+    if demands.is_empty() {
+        return Vec::new();
+    }
+    let mean = demands.iter().map(|d| d.pressure()).sum::<f64>() / demands.len() as f64;
+    demands
+        .iter()
+        .map(|d| (DEMAND_EPSILON + d.pressure()) / (DEMAND_EPSILON + mean))
+        .collect()
+}
+
+/// Re-derive a cluster plan from **observed** per-tenant demand.
+///
+/// Each tenant's spec weight is scaled by its [`demand_factors`] entry,
+/// then the ordinary [`coplan_with`] runs on the re-weighted specs, so
+/// EPs flow toward tenants whose observed pressure (offered + shed +
+/// backlog) outruns their share. Under uniform pressure every factor is
+/// exactly `1.0` and the demand-driven plan degenerates to the static
+/// co-plan bit-for-bit — the elastic loop sees no spurious gain.
+/// `shard_caps` pins each tenant's `max_shards` to its live replica
+/// count so the re-derived placements always fit the engine's
+/// materialised replica arrays.
+///
+/// The returned plan's allocations carry the **effective** weights, so
+/// [`ClusterPlan::objective`] scores demand-weighted predicted
+/// throughput; compare it against the live allocation scored under the
+/// same factors.
+pub fn coplan_observed_with(
+    plat: &Platform,
+    specs: &[TenantSpec],
+    demands: &[TenantDemand],
+    shard_caps: &[usize],
+    threads: usize,
+    cache: &PlanCache,
+) -> Result<ClusterPlan> {
+    if demands.len() != specs.len() || shard_caps.len() != specs.len() {
+        bail!(
+            "coplan_observed: {} tenants but {} demands / {} shard caps",
+            specs.len(),
+            demands.len(),
+            shard_caps.len()
+        );
+    }
+    let factors = demand_factors(demands);
+    let mut scaled: Vec<TenantSpec> = Vec::with_capacity(specs.len());
+    for ((spec, &factor), &cap) in specs.iter().zip(&factors).zip(shard_caps) {
+        let mut s = spec.clone();
+        s.weight = spec.weight * factor;
+        s.shards = cap.max(1);
+        scaled.push(s);
+    }
+    coplan_with(plat, &scaled, threads, cache)
+}
+
 /// Co-plan the platform across all tenants.
 ///
 /// Evaluates the water-filling plan and the greedy first-come baseline
@@ -460,6 +549,88 @@ mod tests {
             s.hits > s.misses,
             "a 3-tenant C5 co-plan must hit the memo more than it tunes: {s:?}"
         );
+    }
+
+    #[test]
+    fn uniform_demand_reproduces_the_static_coplan() {
+        // equal pressure on every tenant scales all weights by exactly 1,
+        // so the demand-driven plan must match the static plan bit-wise —
+        // the elastic loop's no-spurious-repartition guarantee
+        let plat = configs::c2();
+        let specs = vec![
+            spec("a", networks::synthnet(), 2.0, 2),
+            spec("b", networks::synthnet_small(), 1.0, 1),
+        ];
+        let cache = PlanCache::new();
+        let baseline = coplan_with(&plat, &specs, 1, &cache).unwrap();
+        for demands in [
+            vec![
+                TenantDemand { offered_rate: 0.0, shed_rate: 0.0, backlog: 0 },
+                TenantDemand { offered_rate: 0.0, shed_rate: 0.0, backlog: 0 },
+            ],
+            vec![
+                TenantDemand { offered_rate: 5.0, shed_rate: 0.0, backlog: 0 },
+                TenantDemand { offered_rate: 5.0, shed_rate: 0.0, backlog: 0 },
+            ],
+        ] {
+            let observed =
+                coplan_observed_with(&plat, &specs, &demands, &[2, 1], 1, &cache).unwrap();
+            crate::testutil::same_cluster_plan(&observed, &baseline)
+                .unwrap_or_else(|e| panic!("uniform demand diverged: {e}"));
+        }
+    }
+
+    #[test]
+    fn skewed_demand_shifts_budget_toward_the_pressured_tenant() {
+        let plat = configs::c5();
+        let specs = vec![
+            spec("hot", networks::synthnet_small(), 1.0, 1),
+            spec("cold", networks::synthnet_small(), 1.0, 1),
+        ];
+        let cache = PlanCache::new();
+        let baseline = coplan_with(&plat, &specs, 1, &cache).unwrap();
+        let demands = vec![
+            TenantDemand { offered_rate: 50.0, shed_rate: 20.0, backlog: 32 },
+            TenantDemand { offered_rate: 0.5, shed_rate: 0.0, backlog: 0 },
+        ];
+        let observed =
+            coplan_observed_with(&plat, &specs, &demands, &[1, 1], 1, &cache).unwrap();
+        assert!(
+            observed.allocations[0].eps.len() >= baseline.allocations[0].eps.len(),
+            "pressure must not shrink the hot tenant's budget: {} < {}",
+            observed.allocations[0].eps.len(),
+            baseline.allocations[0].eps.len()
+        );
+        assert!(!observed.allocations[1].eps.is_empty(), "idle tenant keeps ≥ 1 EP");
+        // the plan is scored under the effective (demand-scaled) weights
+        let factors = demand_factors(&demands);
+        assert!(factors[0] > 1.0 && factors[1] < 1.0, "skew must split the factors");
+        let by_hand: f64 = observed
+            .allocations
+            .iter()
+            .zip(&specs)
+            .zip(&factors)
+            .map(|((a, s), f)| s.weight * f * a.predicted)
+            .sum();
+        assert_eq!(observed.objective().to_bits(), by_hand.to_bits());
+    }
+
+    #[test]
+    fn observed_coplan_respects_shard_caps_and_arity() {
+        let plat = configs::c2();
+        let specs = vec![
+            spec("a", networks::synthnet(), 2.0, 2),
+            spec("b", networks::synthnet_small(), 1.0, 1),
+        ];
+        let d = TenantDemand { offered_rate: 1.0, shed_rate: 0.0, backlog: 0 };
+        let cache = PlanCache::new();
+        // capping tenant 0 to one replica keeps its placements ≤ 1
+        let capped =
+            coplan_observed_with(&plat, &specs, &[d, d], &[1, 1], 1, &cache).unwrap();
+        assert!(capped.allocations[0].placements.len() <= 1);
+        // arity mismatches are rejected
+        assert!(coplan_observed_with(&plat, &specs, &[d], &[1, 1], 1, &cache).is_err());
+        assert!(coplan_observed_with(&plat, &specs, &[d, d], &[1], 1, &cache).is_err());
     }
 
     #[test]

@@ -13,15 +13,20 @@
 //!   oscillating traffic cannot thrash. Enabled via
 //!   [`crate::serve::ServeOptions::autoscale`].
 //!
-//! Planning happens once at serve start; scaling happens at every control
-//! epoch. Both are pure functions of their inputs, so co-planned and
-//! autoscaled runs keep the serving engine's one-seed-one-event-log
-//! determinism guarantee (pinned by `tests/serve_golden.rs`).
+//! Planning runs at serve start and — when the **elastic control loop**
+//! ([`crate::serve::ServeOptions::elastic`]) is on — again at every
+//! control epoch on the *observed* per-tenant demand
+//! ([`coplan::coplan_observed_with`]); scaling happens at every control
+//! epoch. All of it is a pure function of its inputs, so co-planned,
+//! autoscaled and elastically re-partitioned runs keep the serving
+//! engine's one-seed-one-event-log determinism guarantee (pinned by
+//! `tests/serve_golden.rs`).
 
 pub mod autoscale;
 pub mod coplan;
 
-pub use autoscale::{AutoscaleOptions, ReplicaState, ScaleEvent};
+pub use autoscale::{AutoscaleOptions, ElasticOptions, ReplicaState, ScaleEvent};
 pub use coplan::{
     coplan, coplan_with, greedy_plan, water_fill_plan, ClusterPlan, TenantAllocation,
+    TenantDemand,
 };

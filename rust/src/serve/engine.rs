@@ -92,6 +92,14 @@
 //!   replicas stop accruing [`EpochStats::active_eps`] (the EP-epoch
 //!   meter). Scale transitions are hashed into the event log (tag 6) and
 //!   recorded per replica in [`ShardReport::scale_events`].
+//! * [`ServeOptions::elastic`] closes the demand loop on the plan itself:
+//!   every control epoch the co-planner re-runs on the **observed**
+//!   per-tenant demand (offered rate, shed flow, backlog) off a shared
+//!   [`PlanCache`], and when the re-derived allocation beats the live one
+//!   by the configured gain bar the deployment migrates onto it — queued
+//!   requests move across replica slab arenas with zero loss, and
+//!   scale-to-1 collapses a tenant onto one replica holding its full
+//!   budget. Re-partitions are hashed into the event log (tag 8).
 //!
 //! `benches/serve_scale.rs` tracks simulated events/second per scenario in
 //! `BENCH_serve.json` at the repository root.
@@ -110,9 +118,10 @@ use crate::rng::Xoshiro256;
 
 use super::arrivals::ArrivalSampler;
 use super::cluster::autoscale::{
-    self, AutoscaleOptions, AutoscaleState, ReplicaState, ScaleDecision, ScaleEvent, TenantLoad,
+    self, AutoscaleOptions, AutoscaleState, ElasticOptions, ElasticState, ReplicaState,
+    ScaleDecision, ScaleEvent, TenantLoad,
 };
-use super::cluster::coplan;
+use super::cluster::coplan::{self, TenantDemand};
 use super::fault::{FaultKind, FaultScript};
 use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
@@ -186,6 +195,15 @@ pub struct ServeOptions {
     /// [`FaultScript`] and the crate docs §Fault tolerance & graceful
     /// degradation.
     pub faults: FaultScript,
+    /// Elastic control loop: re-run the cross-tenant co-planner every
+    /// control epoch on the **observed** per-tenant demand (offered rate,
+    /// shed, backlog) and, when the re-derived allocation clears the gain
+    /// bar, live-migrate queued requests onto the new EP partition
+    /// ([`crate::serve::cluster::autoscale::ElasticOptions`]). Requires
+    /// `coplan` and `control_epoch_s > 0`. Re-partitions are hashed into
+    /// the event log (tag 8) and recorded as
+    /// [`ControlKind::Repartition`] control records.
+    pub elastic: ElasticOptions,
 }
 
 impl ServeOptions {
@@ -203,6 +221,15 @@ impl ServeOptions {
             self.autoscale.validate()?;
             if self.control_epoch_s <= 0.0 {
                 bail!("serve: the autoscaler is epoch-driven — set control_epoch_s > 0");
+            }
+        }
+        if self.elastic.enabled {
+            self.elastic.validate()?;
+            if !self.coplan {
+                bail!("serve: the elastic loop re-partitions the co-plan — enable coplan");
+            }
+            if self.control_epoch_s <= 0.0 {
+                bail!("serve: the elastic loop is epoch-driven — set control_epoch_s > 0");
             }
         }
         self.faults.validate(plat)?;
@@ -227,6 +254,7 @@ impl Default for ServeOptions {
             coplan: false,
             autoscale: AutoscaleOptions::default(),
             faults: FaultScript::default(),
+            elastic: ElasticOptions::default(),
         }
     }
 }
@@ -388,6 +416,9 @@ pub struct TenantReport {
     pub retunes: u32,
     /// Total evaluator trials across re-tunes.
     pub retune_trials: u64,
+    /// Elastic EP-budget re-partitions applied to this tenant (0 without
+    /// `--elastic`).
+    pub repartitions: u32,
     /// Per-replica reports (length 1 for unsharded tenants).
     pub shards: Vec<ShardReport>,
 }
@@ -419,6 +450,25 @@ impl TenantReport {
     /// Request conservation: every offered request is accounted for.
     pub fn conserved(&self) -> bool {
         self.offered == self.rejected + self.dropped + self.completed + self.in_flight
+    }
+
+    /// Per-epoch request conservation: for every epoch of the aggregated
+    /// series, `offered + backlog_prev == completed + rejected + dropped
+    /// + backlog` (the first epoch starts from an empty system). This is
+    /// the flow identity the epoch shed meter is derived from — a request
+    /// admitted and later dropped in the same epoch counts once, as a
+    /// drop, never as both an admission and a shed. Trivially true for an
+    /// empty series; runs truncated by the `max_events` valve may close
+    /// their last epoch early and are the caller's business to exclude.
+    pub fn epoch_conserved(&self) -> bool {
+        let mut backlog_prev = 0u64;
+        for e in &self.epochs {
+            if e.offered + backlog_prev != e.completed + e.rejected + e.dropped + e.backlog {
+                return false;
+            }
+            backlog_prev = e.backlog;
+        }
+        true
     }
 
     /// EP-epochs consumed: Σ over the epoch series of the EPs held active
@@ -697,8 +747,13 @@ struct ShardRt {
     /// Scale transitions (time + state entered), for the report.
     scale_log: Vec<ScaleEvent>,
     /// The EP subset this replica was planned onto at serve start (global
-    /// ids). Failover re-plans onto `home_eps` minus currently-faulted
-    /// EPs; recovery re-adopts back toward the full home set.
+    /// ids), frozen for the report: `initial_config` translates through
+    /// it. Elastic re-partitions move `home_eps`, never this.
+    natal_eps: Vec<EpId>,
+    /// The replica's current *planned* EP subset (global ids). Failover
+    /// re-plans onto `home_eps` minus currently-faulted EPs; recovery
+    /// re-adopts back toward the full home set. An elastic re-partition
+    /// re-homes the replica onto its slice of the new budget.
     home_eps: Vec<EpId>,
     /// Health flag: true while the replica's entire home set is faulted
     /// (no surviving subset to re-plan onto). A dead replica serves
@@ -761,6 +816,20 @@ impl ShardRt {
         buf.clear();
         self.buf_pool.push(buf);
     }
+
+    /// Bring the replica back into service. A parked (or draining)
+    /// replica's slowdown EWMA is stale history: it produced no
+    /// completions while out of rotation (the EWMA only updates on
+    /// completions), so without this reset a Draining → Parked → Active
+    /// cycle would warm-re-tune against ghost contention from before the
+    /// park. Every activation path funnels through here so none can skip
+    /// the relax (pinned by `reactivation_relaxes_the_slowdown_ewma`).
+    fn reactivate(&mut self) {
+        self.state = ReplicaState::Active;
+        for f in &mut self.ep_slow {
+            *f = 1.0;
+        }
+    }
 }
 
 /// One logical tenant: the arrival stream, the front-end balancer state,
@@ -786,6 +855,8 @@ struct TenantRt {
     /// Toggled by `degrade_tick`; conservation is untouched — shed
     /// arrivals are ordinary rejections.
     load_shed: bool,
+    /// Elastic EP-budget re-partitions applied to this tenant.
+    repartitions: u32,
     shards: Vec<ShardRt>,
 }
 
@@ -1409,7 +1480,7 @@ fn fault_failover(
                         }
                     }
                     if !act {
-                        t.shards[sj].state = ReplicaState::Active;
+                        t.shards[sj].reactivate();
                         t.n_active += 1;
                         t.shards[sj]
                             .scale_log
@@ -1565,6 +1636,13 @@ fn degrade_tick(rts: &mut [TenantRt], sh: &mut Shared, now: f64, opts: &ServeOpt
             }
         }
     }
+    // Cover order: descending weight, ties broken by **ascending tenant
+    // index** — the tie-break is part of the engine's determinism
+    // contract (equal-weight tenants must shed/re-admit identically on
+    // every run and on replay, never by incidental iteration order), so
+    // among equal weights the lower-index tenant is covered first and
+    // the higher-index one sheds first. Pinned by the equal-weight shed
+    // test.
     let mut order: Vec<usize> = (0..rts.len()).collect();
     order.sort_by(|&a, &b| rts[b].spec.weight.total_cmp(&rts[a].spec.weight).then(a.cmp(&b)));
     let mut used = 0.0f64;
@@ -1728,15 +1806,36 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
             });
         }
     }
-    // 2. observe the epoch that just closed
+    // 2. observe the epoch that just closed. The shed meter is the
+    // epoch's unmet flow, derived from the per-epoch conservation
+    // identity `offered + backlog_prev == completed + rejected + dropped
+    // + backlog` (asserted by [`TenantReport::epoch_conserved`]) instead
+    // of summing the rejected and dropped meters: the flow form counts a
+    // request exactly once however it leaves the system, so an arrival
+    // admitted under DropOldest (which evicts the oldest queued request
+    // in the same epoch) can never be charged both as an admission and
+    // as a shed. The identity is a **tenant-level** invariant — failover
+    // and elastic re-partitions migrate requests across replica arenas,
+    // which cancels in the aggregate but not per replica — so the terms
+    // are summed across replicas before the subtraction. When the meters
+    // are consistent the two forms agree bit-for-bit, so existing event
+    // logs and replays are unchanged.
     let mut offered = 0u64;
-    let mut shed = 0u64;
+    let mut flow_in = 0u64;
+    let mut flow_out = 0u64;
     for srt in &t.shards {
         if let Some(e) = srt.epochs.last() {
             offered += e.offered;
-            shed += e.rejected + e.dropped;
+            let backlog_prev = if srt.epochs.len() >= 2 {
+                srt.epochs[srt.epochs.len() - 2].backlog
+            } else {
+                0
+            };
+            flow_in += e.offered + backlog_prev;
+            flow_out += e.completed + e.backlog;
         }
     }
+    let shed = flow_in.saturating_sub(flow_out);
     let mut queued = 0u64;
     let mut active = 0usize;
     let mut active_capacity = 0.0f64;
@@ -1780,7 +1879,7 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
         ScaleDecision::Hold => {}
         ScaleDecision::Up { activate } => {
             for &(si, _) in inactive.iter().take(activate) {
-                t.shards[si].state = ReplicaState::Active;
+                t.shards[si].reactivate();
                 t.n_active += 1;
                 t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Active });
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
@@ -1844,6 +1943,285 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
             }
         }
     }
+}
+
+/// Re-home one replica onto a planner-chosen EP subset **with** its
+/// planner-chosen configuration — the elastic loop's plan-application
+/// primitive. Same artifact rebuild as [`rebuild_replica`] (sub-platform
+/// view, batch databases, scratch re-tune database, controller, EWMA
+/// reset, orphan re-queue, reconfiguration freeze), but the configuration
+/// comes from the cluster plan instead of a fresh per-subset search: the
+/// co-planner already tuned every placement, so applying it verbatim is
+/// both cheaper and exactly the allocation the gain bar scored.
+/// `home_eps` moves with the replica — subsequent failover re-plans
+/// within the *new* budget.
+#[allow(clippy::too_many_arguments)]
+fn rehome_replica(
+    spec: &TenantSpec,
+    t: &mut ShardRt,
+    sh: &mut Shared,
+    ti: usize,
+    shard_ix: usize,
+    now: f64,
+    plat: &Platform,
+    eps: Vec<EpId>,
+    config: PipelineConfig,
+    opts: &ServeOptions,
+) {
+    debug_assert!(!eps.is_empty(), "rehome needs at least one EP");
+    let model = CostModel::default();
+    let orphans = detach_replica(t, sh);
+    let subplat = plat.subset(&eps);
+    let mut dbs = Vec::with_capacity(spec.batch);
+    for b in 1..=spec.batch {
+        dbs.push(if b == 1 {
+            PerfDb::build(&spec.net, &subplat, &model)
+        } else {
+            batch::build_batched(&spec.net, &subplat, &model, b as u32)
+        });
+    }
+    t.scratch_db = dbs[spec.batch - 1].clone();
+    t.controller = AdaptiveController::new(spec.net.clone(), subplat.clone(), model);
+    t.ep_slow = vec![1.0; subplat.n_eps()];
+    t.scale_buf = vec![1.0; subplat.n_eps()];
+    t.dbs = dbs;
+    t.config = config;
+    t.bounds = t.config.stage_bounds();
+    t.weight = simulator::throughput(&spec.net, &subplat, &t.dbs[0], &t.config);
+    t.stages = (0..t.config.n_stages()).map(|_| StageRt::default()).collect();
+    t.subplat = subplat;
+    t.home_eps = eps.clone();
+    t.ep_map = eps;
+    requeue_orphans(spec, t, orphans);
+    freeze_replica(t, sh, ti, shard_ix, now, opts.reconfig_penalty_s, opts.duration_s);
+}
+
+/// The elastic control loop, run at every epoch tick when
+/// [`ServeOptions::elastic`] is enabled: re-derive the cluster plan from
+/// the **observed** per-tenant demand of the epoch that just closed
+/// ([`coplan::coplan_observed_with`], off the shared [`PlanCache`] so a
+/// repeat of a previously scored allocation costs lookups, not tuning
+/// runs), and when the candidate clears the gain bar
+/// ([`autoscale::decide_repartition`]) migrate the live deployment onto
+/// it:
+///
+/// * every replica whose planned EP slice changed is re-homed onto it
+///   with the plan's tuned configuration ([`rehome_replica`]) — its
+///   queued requests re-queue on the new stage structure, none are lost;
+/// * when the plan collapses a tenant onto fewer replicas (scale-to-1
+///   gives one replica the full budget), the surplus replicas' backlogs
+///   migrate across slab arenas into the surviving replicas — the fault
+///   plane's drain → re-admit machinery — and the surplus replicas park
+///   dead (invisible to the autoscaler, EP meter free) until a later
+///   re-partition grows the tenant again, which revives and re-activates
+///   them.
+///
+/// Each re-partitioned tenant hashes one tag-8 event into the log and
+/// emits a [`ControlKind::Repartition`] record, so elastic runs replay
+/// bit-identically. The loop holds while any fault is in force —
+/// failover owns the EP map then, and a demand-driven plan knows nothing
+/// about downed EPs.
+#[allow(clippy::too_many_arguments)]
+fn elastic_tick(
+    rts: &mut [TenantRt],
+    sh: &mut Shared,
+    plat: &Platform,
+    est: &mut ElasticState,
+    cache: &PlanCache,
+    opts: &ServeOptions,
+    now: f64,
+    full_rescan: bool,
+) -> Result<()> {
+    if sh.any_fault_active(now) {
+        return Ok(());
+    }
+    let epoch_s = opts.control_epoch_s;
+    // observed demand, aggregated per tenant from the epoch that just
+    // closed (same tenant-level flow derivation as the autoscaler's shed
+    // meter) plus the standing backlog right now
+    let mut specs: Vec<TenantSpec> = Vec::with_capacity(rts.len());
+    let mut demands: Vec<TenantDemand> = Vec::with_capacity(rts.len());
+    let mut caps: Vec<usize> = Vec::with_capacity(rts.len());
+    for t in rts.iter() {
+        let mut offered = 0u64;
+        let mut flow_in = 0u64;
+        let mut flow_out = 0u64;
+        let mut backlog = 0u64;
+        for srt in &t.shards {
+            if let Some(e) = srt.epochs.last() {
+                offered += e.offered;
+                let backlog_prev = if srt.epochs.len() >= 2 {
+                    srt.epochs[srt.epochs.len() - 2].backlog
+                } else {
+                    0
+                };
+                flow_in += e.offered + backlog_prev;
+                flow_out += e.completed + e.backlog;
+            }
+            backlog += srt.backlog();
+        }
+        let shed = flow_in.saturating_sub(flow_out);
+        specs.push(t.spec.clone());
+        demands.push(TenantDemand {
+            offered_rate: offered as f64 / epoch_s,
+            shed_rate: shed as f64 / epoch_s,
+            backlog,
+        });
+        caps.push(t.shards.len());
+    }
+    let plan = coplan::coplan_observed_with(plat, &specs, &demands, &caps, 1, cache)?;
+    // live objective in the same units as the plan's: Σ effective weight ×
+    // analytic capacity of the replicas that can actually serve. Both
+    // sides are scored under the same demand factors — capacity parked on
+    // an idle tenant counts for little on either side, so the bar only
+    // clears when moving EPs toward the pressure genuinely helps.
+    let factors = coplan::demand_factors(&demands);
+    let live: f64 = rts
+        .iter()
+        .zip(&factors)
+        .map(|(t, f)| {
+            t.spec.weight
+                * f
+                * t.shards.iter().filter(|s| !s.dead).map(|s| s.weight).sum::<f64>()
+        })
+        .sum();
+    if !autoscale::decide_repartition(est, &opts.elastic, live, plan.objective()) {
+        return Ok(());
+    }
+    for (ti, alloc) in plan.allocations.iter().enumerate() {
+        let t = &mut rts[ti];
+        let m = alloc.placements.len().min(t.shards.len());
+        let changed = t
+            .shards
+            .iter()
+            .take(m)
+            .zip(&alloc.placements)
+            .any(|(s, (eps, _))| s.home_eps != *eps || s.dead)
+            || t.shards.iter().skip(m).any(|s| !s.dead);
+        if !changed {
+            continue;
+        }
+        // 1. re-home the replicas the plan keeps; a dead one revives
+        for (si, (eps, cfg)) in alloc.placements.iter().take(m).enumerate() {
+            let was_dead = t.shards[si].dead;
+            if t.shards[si].home_eps != *eps {
+                rehome_replica(
+                    &t.spec,
+                    &mut t.shards[si],
+                    sh,
+                    ti,
+                    si,
+                    now,
+                    plat,
+                    eps.clone(),
+                    cfg.clone(),
+                    opts,
+                );
+            }
+            t.shards[si].dead = false;
+            if was_dead && t.shards[si].state != ReplicaState::Active {
+                t.shards[si].reactivate();
+                t.n_active += 1;
+                t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Active });
+                sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
+                    format!("{now:.6} scale {} r{si} active", t.spec.name)
+                });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: ReplicaState::Active.code(),
+                });
+            }
+        }
+        // 2. surplus replicas: migrate their backlog into the surviving
+        // replicas (cross-arena, zero loss) and park them dead
+        let n_layers = t.spec.net.len();
+        for si in m..t.shards.len() {
+            let orphans = detach_replica(&mut t.shards[si], sh);
+            for (k, ix) in orphans.into_iter().enumerate() {
+                let (id, arr, ld) = {
+                    let r = &t.shards[si].arena[ix as usize];
+                    (r.id, r.arrival_s, r.layers_done)
+                };
+                t.shards[si].free_slots.push(ix);
+                // deterministic spread over the survivors, oldest first
+                let sj = k % m;
+                let dst = &mut t.shards[sj];
+                let jx = dst.alloc(id, arr);
+                dst.arena[jx as usize].layers_done = ld;
+                let stage = if ld >= n_layers {
+                    dst.stages.len() - 1
+                } else {
+                    dst.config.stage_of_layer(ld).expect("layer in range")
+                };
+                dst.stages[stage].queue.push_back(jx);
+                let l = dst.stages[stage].queue.len();
+                if l > dst.max_queue_len {
+                    dst.max_queue_len = l;
+                }
+            }
+            if t.shards[si].state == ReplicaState::Active {
+                t.n_active -= 1;
+            }
+            t.shards[si].dead = true;
+            if t.shards[si].state != ReplicaState::Parked {
+                t.shards[si].state = ReplicaState::Parked;
+                t.shards[si].scale_log.push(ScaleEvent { t_s: now, to: ReplicaState::Parked });
+                sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
+                    format!("{now:.6} scale {} r{si} parked", t.spec.name)
+                });
+                sh.control(ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: ReplicaState::Parked.code(),
+                });
+            }
+        }
+        debug_assert!(t.n_active >= 1, "a re-partition never leaves a tenant unservable");
+        // routing restarts neutral over the new replica set
+        for srt in &mut t.shards {
+            srt.credit = 0.0;
+        }
+        t.repartitions += 1;
+        sh.note(now, 8, pack_ts(ti, m), alloc.eps.len() as u64, || {
+            format!(
+                "{now:.6} repartition {} -> {} eps over {} replicas",
+                t.spec.name,
+                alloc.eps.len(),
+                m
+            )
+        });
+        sh.control(ControlRecord {
+            t_s: now,
+            kind: ControlKind::Repartition,
+            tenant: ti as u32,
+            shard: m as u32,
+            a: alloc.eps.len() as u64,
+            b: alloc.predicted.to_bits(),
+        });
+        // queues moved across arenas and stage structures changed:
+        // settle every replica of the tenant
+        for si in 0..t.shards.len() {
+            settle(
+                &t.spec,
+                &mut t.shards[si],
+                sh,
+                ti,
+                si,
+                now,
+                opts.duration_s,
+                u64::MAX,
+                full_rescan,
+            );
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -1997,6 +2375,7 @@ fn serve_inner(
                 credit: 0.0,
                 state: ReplicaState::Active,
                 scale_log: Vec::new(),
+                natal_eps: ep_map.clone(),
                 home_eps: ep_map.clone(),
                 dead: false,
                 offered: 0,
@@ -2029,6 +2408,7 @@ fn serve_inner(
             auto: AutoscaleState::default(),
             n_active: shards.len(),
             load_shed: false,
+            repartitions: 0,
             shards,
             spec,
         });
@@ -2054,8 +2434,9 @@ fn serve_inner(
         link_throttle_until: 0.0,
     };
 
-    // Failover re-planning shares one subset-tuning memo across faults:
-    // the second failover onto the same surviving subset is a cache hit.
+    // Failover and elastic re-planning share one subset-tuning memo: the
+    // second failover onto the same surviving subset — and every elastic
+    // re-probe of a budget the loop has already scored — is a cache hit.
     let plan_cache = PlanCache::new();
     // Fault plane: pre-schedule every scripted begin (and, for windowed
     // kinds, end) before the first arrival. An empty script schedules
@@ -2085,6 +2466,7 @@ fn serve_inner(
     }
 
     let full_rescan = opts.pump == PumpMode::FullRescan;
+    let mut elastic_state = ElasticState::default();
     let mut truncated = false;
     while let Some(Reverse(ev)) = sh.heap.pop() {
         sh.n_events += 1;
@@ -2247,6 +2629,21 @@ fn serve_inner(
                 if !opts.faults.is_empty() {
                     degrade_tick(&mut rts, &mut sh, now, opts);
                 }
+                // the elastic loop runs last: it sees the epoch's full
+                // demand picture and the autoscaler's state decisions,
+                // and its migrations settle the replicas they touch
+                if opts.elastic.enabled {
+                    elastic_tick(
+                        &mut rts,
+                        &mut sh,
+                        plat,
+                        &mut elastic_state,
+                        &plan_cache,
+                        opts,
+                        now,
+                        full_rescan,
+                    )?;
+                }
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
                     sh.schedule(next, EvKind::Epoch);
@@ -2361,17 +2758,18 @@ fn serve_inner(
 /// merged latency sketch and a per-epoch series summed across replicas
 /// (every replica ticks at every epoch, so the series zip exactly).
 fn tenant_report(t: TenantRt) -> TenantReport {
-    let TenantRt { spec, shards, offered, .. } = t;
+    let TenantRt { spec, shards, offered, repartitions, .. } = t;
     let mut shard_reports: Vec<ShardReport> = Vec::with_capacity(shards.len());
     let mut latency = QuantileSketch::new();
     for s in shards {
         let in_flight = s.backlog();
         latency.merge(&s.latency);
         shard_reports.push(ShardReport {
-            // the initial config is local to the *planned* subset; after a
-            // failover re-plan `ep_map` may differ, so translate through
-            // the immutable home set it was planned against
-            initial_config: shard::to_global(&s.initial_config, &s.home_eps),
+            // the initial config is local to the *planned-at-start*
+            // subset; failover re-plans move `ep_map` and elastic
+            // re-partitions move `home_eps` too, so translate through the
+            // immutable natal set it was planned against
+            initial_config: shard::to_global(&s.initial_config, &s.natal_eps),
             final_config: shard::to_global(&s.config, &s.ep_map),
             predicted_throughput: s.weight,
             offered: s.offered,
@@ -2444,6 +2842,7 @@ fn tenant_report(t: TenantRt) -> TenantReport {
         epochs,
         retunes: shard_reports.iter().map(|s| s.retunes).sum(),
         retune_trials: shard_reports.iter().map(|s| s.retune_trials).sum(),
+        repartitions,
         shards: shard_reports,
     }
 }
@@ -2924,6 +3323,11 @@ mod tests {
         let report = serve(&plat, vec![(spec, cfg)], &opts).unwrap();
         let t = &report.tenants[0];
         assert!(t.conserved(), "conservation across scale transitions: {t:?}");
+        assert!(
+            t.epoch_conserved(),
+            "per-epoch flow identity across scale transitions: {:?}",
+            t.epochs
+        );
         assert!(t.shards.len() > 1, "fixture must replicate");
         let events: usize = t.shards.iter().map(|s| s.scale_events.len()).sum();
         assert!(events > 0, "the tidal load must trigger scale events");
@@ -3222,6 +3626,12 @@ mod tests {
             serve_traced(&plat, vec![mk("hi", 4.0), mk("lo", 1.0)], &opts).unwrap();
         for t in &report.tenants {
             assert!(t.conserved(), "{}: conservation under shedding: {t:?}", t.name);
+            assert!(
+                t.epoch_conserved(),
+                "{}: shed arrivals must meter once per epoch: {:?}",
+                t.name,
+                t.epochs
+            );
         }
         let shed_on = |ti: u32| {
             trace
@@ -3241,5 +3651,254 @@ mod tests {
         assert!(report.tenants[1].rejected > 0, "shed arrivals count as rejected");
         assert!(report.tenants[0].completed > 0);
         assert!(report.tenants[1].completed > 0, "service resumes after re-admission");
+    }
+
+    #[test]
+    fn equal_weight_degradation_sheds_the_higher_index_tenant() {
+        // same stall as above but with *equal* weights: the documented
+        // tie-break (equal weights sort by ascending tenant index, so the
+        // lower index is covered first and the higher index sheds first)
+        // must pick deterministically — and bit-identically across runs
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        let mk = |name: &str| {
+            let (spec, cfg) = small_tenant(name, 2.0 * cap);
+            let spec = spec
+                .with_weight(1.0)
+                .with_queue_capacity(16)
+                .with_admission(AdmissionPolicy::DropOldest);
+            (spec, cfg)
+        };
+        let mut opts = base_opts(300.0 / cap);
+        opts.control_epoch_s = 10.0 / cap;
+        opts.record_log = true;
+        opts.faults = FaultScript {
+            events: vec![FaultEvent {
+                t_s: 50.0 / cap,
+                kind: FaultKind::EpStall { ep: 1, down_s: 150.0 / cap },
+            }],
+        };
+        let run = || serve_traced(&plat, vec![mk("eq0"), mk("eq1")], &opts).unwrap();
+        let (report, trace) = run();
+        let shed_on = |ti: u32| {
+            trace
+                .controls
+                .iter()
+                .any(|c| c.kind == ControlKind::Shed && c.tenant == ti && c.b == 1)
+        };
+        assert!(shed_on(1), "on a weight tie the higher index must shed first");
+        assert!(!shed_on(0), "the lower index wins the tie and keeps serving");
+        for t in &report.tenants {
+            assert!(t.conserved(), "{}: conservation under tied shedding", t.name);
+        }
+        let (again, _) = run();
+        assert_eq!(report.log_hash, again.log_hash, "tie-break must be bit-stable");
+        assert_eq!(report.event_log, again.event_log);
+    }
+
+    // --- elastic control loop ---------------------------------------------
+
+    /// A minimal single-replica runtime on C1, built exactly like
+    /// `serve_inner` builds one — for white-box tests of replica state
+    /// transitions that a full serve run cannot reach into.
+    fn mk_replica() -> ShardRt {
+        let plat = crate::platform::configs::c1();
+        let net = networks::synthnet_small();
+        let model = CostModel::default();
+        let ep_map: Vec<_> = (0..plat.n_eps()).collect();
+        let subplat = plat.subset(&ep_map);
+        let cfg = PipelineConfig::single_stage(net.len(), 0);
+        let dbs = vec![PerfDb::build(&net, &subplat, &model)];
+        let scratch_db = dbs[0].clone();
+        let weight = simulator::throughput(&net, &subplat, &dbs[0], &cfg);
+        let controller = AdaptiveController::new(net.clone(), subplat.clone(), model);
+        let bounds = cfg.stage_bounds();
+        let n_stages = cfg.n_stages();
+        let n_sub_eps = subplat.n_eps();
+        ShardRt {
+            initial_config: cfg.clone(),
+            config: cfg,
+            bounds,
+            dbs,
+            stages: (0..n_stages).map(|_| StageRt::default()).collect(),
+            controller,
+            gen: 0,
+            frozen_until: 0.0,
+            thaw_pending: false,
+            ep_slow: vec![1.0; n_sub_eps],
+            arena: Vec::new(),
+            free_slots: Vec::new(),
+            buf_pool: Vec::new(),
+            scratch_db,
+            scale_buf: vec![1.0; n_sub_eps],
+            weight,
+            credit: 0.0,
+            state: ReplicaState::Active,
+            scale_log: Vec::new(),
+            natal_eps: ep_map.clone(),
+            home_eps: ep_map.clone(),
+            dead: false,
+            offered: 0,
+            rejected: 0,
+            dropped: 0,
+            completed: 0,
+            slo_ok: 0,
+            max_queue_len: 0,
+            latency: QuantileSketch::new(),
+            ep_offered: 0,
+            ep_completed: 0,
+            ep_slo_ok: 0,
+            ep_rejected: 0,
+            ep_dropped: 0,
+            baseline_goodput: 0.0,
+            epochs_since_retune: 0,
+            retunes: 0,
+            retune_trials: 0,
+            epochs: Vec::new(),
+            subplat,
+            ep_map,
+        }
+    }
+
+    #[test]
+    fn reactivation_relaxes_the_slowdown_ewma() {
+        // the EWMA only updates on completions, so a parked replica's
+        // slowdown history is frozen ghost contention; re-activation must
+        // fully relax it (the park/re-activate staleness bug)
+        let mut s = mk_replica();
+        s.state = ReplicaState::Parked;
+        for f in &mut s.ep_slow {
+            *f = 4.0;
+        }
+        s.reactivate();
+        assert_eq!(s.state, ReplicaState::Active);
+        assert!(
+            s.ep_slow.iter().all(|&f| f == 1.0),
+            "stale EWMA must fully relax on re-activation: {:?}",
+            s.ep_slow
+        );
+    }
+
+    #[test]
+    fn elastic_requires_coplan_and_epochs() {
+        let plat = crate::platform::configs::c1();
+        let mk = || small_tenant("t0", 1.0);
+        let mut opts = base_opts(1.0);
+        opts.elastic.enabled = true;
+        assert!(serve(&plat, vec![mk()], &opts).is_err(), "elastic needs the co-planner");
+        opts.coplan = true;
+        assert!(serve(&plat, vec![mk()], &opts).is_err(), "elastic needs control epochs");
+        opts.control_epoch_s = 0.25;
+        assert!(serve(&plat, vec![mk()], &opts).is_ok());
+    }
+
+    #[test]
+    fn elastic_repartitions_follow_the_tide_and_conserve() {
+        // two equal-weight tenants on C5 with anti-phase piecewise load:
+        // "ebb" is hot first, "flow" takes over halfway. The elastic loop
+        // must move EP budget toward the pressure at least once, lose no
+        // request across the live migrations, keep the per-epoch flow
+        // identity, and stay bit-deterministic.
+        let plat = crate::platform::configs::c5();
+        let net = networks::synthnet_small();
+        let cfg = crate::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let flip = 100.0 / cap;
+        let mk = |name: &str, early: f64, late: f64| {
+            let spec = TenantSpec::new(
+                name,
+                net.clone(),
+                ArrivalProcess::Piecewise { segments: vec![(0.0, early), (flip, late)] },
+            )
+            .with_queue_capacity(32)
+            .with_admission(AdmissionPolicy::DropOldest)
+            .with_slo(500.0 / cap);
+            (spec, cfg.clone())
+        };
+        let hot = 0.9 * cap;
+        let idle = 0.02 * cap;
+        let mut opts = base_opts(200.0 / cap);
+        opts.control_epoch_s = 4.0 / cap;
+        opts.coplan = true;
+        opts.elastic.enabled = true;
+        opts.record_log = true;
+        let run = || {
+            serve_traced(&plat, vec![mk("ebb", hot, idle), mk("flow", idle, hot)], &opts)
+                .unwrap()
+        };
+        let (report, trace) = run();
+        let mut repartitions = 0;
+        for t in &report.tenants {
+            assert!(t.conserved(), "{}: conservation across re-partitions: {t:?}", t.name);
+            assert!(
+                t.epoch_conserved(),
+                "{}: per-epoch flow identity: {:?}",
+                t.name,
+                t.epochs
+            );
+            assert!(t.completed > 0, "{}: starved", t.name);
+            repartitions += t.repartitions;
+        }
+        assert!(repartitions >= 1, "the anti-phase tide must trigger a re-partition");
+        assert!(
+            trace.controls.iter().any(|c| c.kind == ControlKind::Repartition),
+            "re-partitions must leave hashed control records"
+        );
+        // after any number of re-homings, live replicas still own
+        // pairwise-disjoint EP subsets across the cluster
+        let mut seen = vec![false; plat.n_eps()];
+        for t in &report.tenants {
+            for s in &t.shards {
+                if s.final_state == ReplicaState::Active {
+                    for &e in &s.eps {
+                        assert!(!seen[e], "EP {e} owned twice after re-partitioning");
+                        seen[e] = true;
+                    }
+                }
+            }
+        }
+        let (again, _) = run();
+        assert_eq!(report.log_hash, again.log_hash, "elastic runs must be deterministic");
+        assert_eq!(report.event_log, again.event_log);
+    }
+
+    #[test]
+    fn elastic_holds_under_uniform_demand() {
+        // two identical tenants fed the *same* explicit arrival trace:
+        // their observed pressures match, every demand factor is 1.0, the
+        // observed plan reproduces the static co-plan, and the gain bar
+        // never clears — an elastic run must not thrash re-partitions
+        let plat = crate::platform::configs::c1();
+        let (probe, cfg) = small_tenant("x", 0.0);
+        let cap = capacity(&probe, &plat, &cfg);
+        // each tenant gets one of C1's two EPs, so pace arrivals well
+        // under a single EP's service rate
+        let times: Vec<f64> = (1..=25).map(|i| i as f64 * 8.0 / cap).collect();
+        let mk = |name: &str| {
+            let spec = TenantSpec::new(
+                name,
+                networks::synthnet_small(),
+                ArrivalProcess::Trace { times: times.clone() },
+            )
+            .with_queue_capacity(32)
+            .with_slo(500.0 / cap);
+            (spec, cfg.clone())
+        };
+        let mut opts = base_opts(250.0 / cap);
+        opts.control_epoch_s = 10.0 / cap;
+        opts.coplan = true;
+        opts.elastic.enabled = true;
+        let report = serve(&plat, vec![mk("a"), mk("b")], &opts).unwrap();
+        for t in &report.tenants {
+            assert!(t.conserved());
+            assert!(t.completed > 0);
+            assert_eq!(
+                t.repartitions, 0,
+                "{}: uniform demand must never clear the gain bar",
+                t.name
+            );
+        }
     }
 }

@@ -36,7 +36,10 @@
 //!   water-filling, provably never worse than greedy first-come
 //!   allocation) and the epoch-driven **shard autoscaler**
 //!   ([`cluster::autoscale`] — replicas activate, drain and park with the
-//!   load, with hysteresis), both enabled per run via [`ServeOptions`];
+//!   load, with hysteresis), plus the **elastic control loop**
+//!   (`serve --elastic`) that re-runs the co-planner every control epoch
+//!   on observed demand and live-migrates queued requests onto the new
+//!   EP partition, all enabled per run via [`ServeOptions`];
 //! * [`sweep`] — parallel scenario sweeps: independent serving scenarios
 //!   fanned out across CPU cores with order- and thread-count-invariant
 //!   results (`shisha serve --sweep`), including side-by-side shard-count
@@ -64,7 +67,9 @@ pub mod tenant;
 pub mod trace;
 
 pub use arrivals::{ArrivalProcess, ArrivalSampler};
-pub use cluster::{AutoscaleOptions, ClusterPlan, ReplicaState, ScaleEvent};
+pub use cluster::{
+    AutoscaleOptions, ClusterPlan, ElasticOptions, ReplicaState, ScaleEvent, TenantDemand,
+};
 pub use engine::{
     serve, serve_traced, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport,
     TenantReport,

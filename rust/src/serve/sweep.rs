@@ -101,6 +101,9 @@ pub struct ScenarioStats {
     pub ep_epochs: u64,
     /// Autoscaler transitions across all replicas of all tenants.
     pub scale_events: u64,
+    /// Elastic re-partitions across all tenants (see
+    /// [`crate::serve::TenantReport::repartitions`]).
+    pub repartitions: u64,
 }
 
 impl ScenarioStats {
@@ -112,6 +115,7 @@ impl ScenarioStats {
         let mut slo_ok = 0u64;
         let mut retunes = 0u32;
         let mut scale_events = 0u64;
+        let mut repartitions = 0u64;
         for t in &r.tenants {
             sketch.merge(&t.latency);
             offered += t.offered;
@@ -120,6 +124,7 @@ impl ScenarioStats {
             retunes += t.retunes;
             scale_events +=
                 t.shards.iter().map(|s| s.scale_events.len() as u64).sum::<u64>();
+            repartitions += u64::from(t.repartitions);
         }
         Self {
             offered,
@@ -128,6 +133,7 @@ impl ScenarioStats {
             retunes,
             ep_epochs: r.ep_epochs(),
             scale_events,
+            repartitions,
             p50_s: sketch.p50(),
             p95_s: sketch.p95(),
             p99_s: sketch.p99(),
@@ -349,6 +355,82 @@ pub fn autoscale_grid(
                 name: name.clone(),
                 plat: plat.clone(),
                 tenants: vec![(mk_spec(name, kmax), config.clone())],
+                opts,
+            });
+        }
+    }
+    out
+}
+
+/// Build the elastic re-planning grid on an **anti-phase tidal
+/// two-tenant workload**: tenant `ebb` is hot for the first half of the
+/// horizon while tenant `flow` idles, then the tide flips (piecewise
+/// Poisson with one exact change point at half the horizon). Both tenants
+/// carry equal weight, so aggregate goodput doubles as the weighted
+/// goodput of the cluster.
+///
+/// For every `(rho, seed)` the grid emits one **static** cell (co-plan
+/// fixed at serve start) and one **live** cell (co-plan plus the elastic
+/// loop, defaults of [`crate::serve::ElasticOptions`]). Both cells share
+/// the identical arrival streams, so their goodput and
+/// [`ScenarioStats::ep_epochs`] isolate exactly what demand-driven
+/// re-partitioning changes: the acceptance bar (asserted in
+/// `tests/cluster_autoscale.rs` and tracked by `benches/elastic_replan.rs`)
+/// is live goodput ≥ static goodput at no more EP-epochs.
+///
+/// Queues are deep (32, drop-oldest) and the SLO wide (500 bottleneck
+/// periods), so bounded-queue completions count as goodput — the
+/// comparison measures budget adaptation, not SLO tuning. Callers pick
+/// `base.control_epoch_s` well under half the horizon (the sweep CLI uses
+/// horizon/40) so the elastic loop gets epochs on both sides of the flip.
+pub fn elastic_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let flip_s = base.duration_s / 2.0;
+    let mut out = Vec::with_capacity(rhos.len() * seeds.len() * 2);
+    for &rho in rhos {
+        for &seed in seeds {
+            let hot = rho * cap;
+            let idle = 0.05 * rho * cap;
+            let mk_spec = |name: String, early: f64, late: f64| {
+                TenantSpec::new(name, net.clone(), ArrivalProcess::Piecewise {
+                    segments: vec![(0.0, early), (flip_s, late)],
+                })
+                .with_queue_capacity(32)
+                .with_admission(super::tenant::AdmissionPolicy::DropOldest)
+                .with_slo(500.0 / cap)
+            };
+            let tenants = |prefix: &str| {
+                vec![
+                    (mk_spec(format!("{prefix}-ebb"), hot, idle), config.clone()),
+                    (mk_spec(format!("{prefix}-flow"), idle, hot), config.clone()),
+                ]
+            };
+            let mut opts = base.clone();
+            opts.seed = seed;
+            opts.coplan = true;
+            opts.elastic.enabled = false;
+            out.push(Scenario {
+                name: format!("{} static rho={rho} seed={seed}", net.name),
+                plat: plat.clone(),
+                tenants: tenants("static"),
+                opts,
+            });
+            let mut opts = base.clone();
+            opts.seed = seed;
+            opts.coplan = true;
+            opts.elastic.enabled = true;
+            out.push(Scenario {
+                name: format!("{} elastic rho={rho} seed={seed}", net.name),
+                plat: plat.clone(),
+                tenants: tenants("elastic"),
                 opts,
             });
         }
@@ -703,6 +785,46 @@ mod tests {
         assert_eq!(sc[0].tenants[0].0.arrivals, sc[2].tenants[0].0.arrivals);
         assert_eq!(sc[0].opts.seed, sc[2].opts.seed);
         assert_eq!(sc[2].tenants[0].0.shards, 2, "autoscaled cell plans the max budget");
+    }
+
+    #[test]
+    fn elastic_grid_pairs_static_and_live_cells() {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let base = ServeOptions {
+            duration_s: 2.0,
+            control: false,
+            control_epoch_s: 0.1,
+            ..Default::default()
+        };
+        let sc = elastic_grid(&plat, &net, &cfg, &[1.0], &[3, 4], &base);
+        assert_eq!(sc.len(), 4, "one static + one elastic cell per seed");
+        for pair in sc.chunks(2) {
+            let (st, el) = (&pair[0], &pair[1]);
+            assert!(st.name.contains("static"), "{}", st.name);
+            assert!(el.name.contains("elastic"), "{}", el.name);
+            assert!(st.opts.coplan && el.opts.coplan, "both cells co-plan");
+            assert!(!st.opts.elastic.enabled);
+            assert!(el.opts.elastic.enabled);
+            assert_eq!(st.opts.seed, el.opts.seed);
+            // the two cells of a seed share the identical workload
+            assert_eq!(st.tenants.len(), 2);
+            for (a, b) in st.tenants.iter().zip(&el.tenants) {
+                assert_eq!(a.0.arrivals, b.0.arrivals);
+            }
+            // anti-phase: ebb and flow swap their piecewise segments
+            let ArrivalProcess::Piecewise { segments: ebb } = &st.tenants[0].0.arrivals
+            else {
+                panic!("elastic grid must build piecewise arrivals");
+            };
+            let ArrivalProcess::Piecewise { segments: flow } = &st.tenants[1].0.arrivals
+            else {
+                panic!("elastic grid must build piecewise arrivals");
+            };
+            assert_eq!(ebb[0].1.to_bits(), flow[1].1.to_bits());
+            assert_eq!(ebb[1].1.to_bits(), flow[0].1.to_bits());
+        }
     }
 
     #[test]

@@ -36,12 +36,13 @@
 //!    count, balancer, weight) and initial pipeline configuration
 //!    (stage sizes + EP assignment);
 //! 3. **serve options** — horizon, seed, control-loop knobs, contention
-//!    flag, pump mode, coplan flag, autoscale options, and (since
-//!    version 2) the **fault script**: an event count followed by, per
-//!    event, the [`crate::serve::FaultKind`] wire code (1 = epfail,
-//!    2 = epstall, 3 = epslow, 4 = chipfail, 5 = linkslow, 6 = linkcut),
-//!    its kind-specific fields (EP/chiplet ids as varints, factors and
-//!    window lengths as f64), and the event time as f64.
+//!    flag, pump mode, coplan flag, autoscale options, (since version 3)
+//!    the **elastic options** (enabled flag, gain bar as f64, cooldown as
+//!    varint), and (since version 2) the **fault script**: an event count
+//!    followed by, per event, the [`crate::serve::FaultKind`] wire code
+//!    (1 = epfail, 2 = epstall, 3 = epslow, 4 = chipfail, 5 = linkslow,
+//!    6 = linkcut), its kind-specific fields (EP/chiplet ids as varints,
+//!    factors and window lengths as f64), and the event time as f64.
 //!
 //! ## Section 2 — events ([`SEC_EVENTS`])
 //!
@@ -75,8 +76,9 @@ pub const MAGIC: [u8; 4] = *b"SHTR";
 
 /// Current format version (bumped on any incompatible layout change).
 /// Version 2 added the fault script to the serialized serve options and
-/// the tag-7 fault records to the event stream.
-pub const VERSION: u8 = 2;
+/// the tag-7 fault records to the event stream. Version 3 added the
+/// elastic-loop options and the tag-8 re-partition records.
+pub const VERSION: u8 = 3;
 
 /// Section id: serialized serve inputs (platform, tenants, options).
 pub const SEC_INPUTS: u8 = 1;
@@ -101,6 +103,7 @@ pub const SEC_SUMMARY: u8 = 4;
 /// | 5   | epoch tick   | 0                      | 0              |
 /// | 6   | scale change | tenant « 8 \| shard    | replica state  |
 /// | 7   | fault        | event ix « 8 \| kind   | begin (1/0)    |
+/// | 8   | repartition  | tenant « 8 \| replicas | EP budget size |
 #[derive(Debug, Clone, Copy)]
 pub struct TraceEvent {
     /// Simulated time of the event, seconds.
@@ -146,6 +149,7 @@ impl TraceEvent {
             5 => "epoch",
             6 => "scale",
             7 => "fault",
+            8 => "repartition",
             _ => "unknown",
         }
     }

@@ -19,7 +19,7 @@ use crate::platform::{
 };
 
 use super::super::arrivals::ArrivalProcess;
-use super::super::cluster::AutoscaleOptions;
+use super::super::cluster::{AutoscaleOptions, ElasticOptions};
 use super::super::engine::{PumpMode, ServeOptions, ServeReport};
 use super::super::fault::{FaultEvent, FaultKind, FaultScript};
 use super::super::shard::BalancerPolicy;
@@ -51,6 +51,10 @@ pub enum ControlKind {
     /// Graceful degradation toggled a tenant's admission (`b` = 1 when
     /// the tenant is shed, 0 when re-admitted).
     Shed,
+    /// The elastic loop re-partitioned a tenant's EP budget from observed
+    /// demand (`shard` = surviving replica count, `a` = new EP budget
+    /// size, `b` = predicted throughput bits).
+    Repartition,
 }
 
 impl ControlKind {
@@ -63,6 +67,7 @@ impl ControlKind {
             ControlKind::Fault => 4,
             ControlKind::Failover => 5,
             ControlKind::Shed => 6,
+            ControlKind::Repartition => 7,
         }
     }
 
@@ -75,6 +80,7 @@ impl ControlKind {
             4 => Ok(ControlKind::Fault),
             5 => Ok(ControlKind::Failover),
             6 => Ok(ControlKind::Shed),
+            7 => Ok(ControlKind::Repartition),
             other => bail!("unknown control-record kind code {other}"),
         }
     }
@@ -88,6 +94,7 @@ impl ControlKind {
             ControlKind::Fault => "fault",
             ControlKind::Failover => "failover",
             ControlKind::Shed => "shed",
+            ControlKind::Repartition => "repartition",
         }
     }
 }
@@ -809,6 +816,10 @@ fn put_opts(out: &mut Vec<u8>, opts: &ServeOptions) {
     put_varint(out, u64::from(auto.up_epochs));
     put_varint(out, u64::from(auto.down_epochs));
     put_varint(out, u64::from(auto.cooldown_epochs));
+    let elastic = &opts.elastic;
+    out.push(u8::from(elastic.enabled));
+    put_f64(out, elastic.min_gain_frac);
+    put_varint(out, u64::from(elastic.cooldown_epochs));
     put_faults(out, &opts.faults);
 }
 
@@ -900,6 +911,11 @@ fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
         down_epochs: u32::try_from(r.varint()?).context("autoscale down_epochs")?,
         cooldown_epochs: u32::try_from(r.varint()?).context("autoscale cooldown")?,
     };
+    let elastic = ElasticOptions {
+        enabled: get_bool(r, "elastic enabled flag")?,
+        min_gain_frac: r.f64()?,
+        cooldown_epochs: u32::try_from(r.varint()?).context("elastic cooldown")?,
+    };
     let faults = get_faults(r).context("decoding fault script")?;
     Ok(ServeOptions {
         duration_s,
@@ -915,6 +931,7 @@ fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
         pump,
         coplan,
         autoscale,
+        elastic,
         faults,
     })
 }
@@ -939,7 +956,10 @@ mod tests {
         .with_weight(1.5);
         let config = PipelineConfig::new(vec![3, 3], vec![0, 1]);
         let faults = FaultScript::parse("epstall:1@2+1.5; linkslow:2.0@5+2").unwrap();
-        let opts = ServeOptions { duration_s: 10.0, seed: 9, faults, ..Default::default() };
+        let elastic =
+            ElasticOptions { enabled: true, min_gain_frac: 0.05, cooldown_epochs: 3 };
+        let opts =
+            ServeOptions { duration_s: 10.0, seed: 9, faults, elastic, ..Default::default() };
         Trace {
             platform: plat,
             tenants: vec![(spec, config)],
@@ -983,6 +1003,14 @@ mod tests {
                     a: 0,
                     b: 1,
                 },
+                ControlRecord {
+                    t_s: 6.0,
+                    kind: ControlKind::Repartition,
+                    tenant: 0,
+                    shard: 2,
+                    a: 3,
+                    b: 4_618_441_417_868_443_648, // 6.0f64.to_bits()
+                },
             ],
             summary: TraceSummary {
                 log_hash: 0xDEAD_BEEF_0BAD_F00D,
@@ -1024,6 +1052,9 @@ mod tests {
         assert_eq!(back.opts.seed, 9);
         assert_eq!(back.opts.faults, tr.opts.faults);
         assert_eq!(back.opts.faults.events.len(), 2);
+        assert!(back.opts.elastic.enabled);
+        assert_eq!(back.opts.elastic.min_gain_frac.to_bits(), 0.05f64.to_bits());
+        assert_eq!(back.opts.elastic.cooldown_epochs, 3);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::pipeline::PipelineConfig;
 use crate::platform::Platform;
 
 use super::super::arrivals::ArrivalProcess;
-use super::super::cluster::AutoscaleOptions;
+use super::super::cluster::{AutoscaleOptions, ElasticOptions};
 use super::super::engine::{serve, serve_traced, ServeOptions, ServeReport};
 use super::super::fault::FaultScript;
 use super::super::shard::BalancerPolicy;
@@ -100,6 +100,9 @@ pub struct WhatIf {
     pub min_shards: Option<usize>,
     /// Force cross-tenant co-planning on or off.
     pub coplan: Option<bool>,
+    /// Force the elastic re-planning loop on or off (turning it on also
+    /// forces co-planning on — the loop re-partitions the co-plan).
+    pub elastic: Option<bool>,
     /// Replace the recorded fault script: `faults=none` strips the
     /// recorded faults ("how would the run have gone without the
     /// outage?"), `faults=<script>` injects a different one (the
@@ -111,7 +114,8 @@ pub struct WhatIf {
 impl WhatIf {
     /// Parse a CLI override list: comma-separated `key=value` pairs with
     /// keys `shards`, `balancer`, `autoscale`, `min-shards`, `coplan`,
-    /// `faults` (e.g. `shards=4,balancer=jsq,faults=none`). The `faults`
+    /// `elastic`, `faults` (e.g. `shards=4,balancer=jsq,faults=none`).
+    /// The `faults`
     /// value is either `none`/`off` (strip the recorded script) or a
     /// [`FaultScript`] spec — `;`-separated, so it fits in one pair.
     /// Unknown keys error by name.
@@ -140,6 +144,7 @@ impl WhatIf {
                     w.min_shards = Some(k);
                 }
                 "coplan" => w.coplan = Some(parse_switch(key, value)?),
+                "elastic" => w.elastic = Some(parse_switch(key, value)?),
                 "faults" => {
                     w.faults = Some(match value.to_ascii_lowercase().as_str() {
                         "none" | "off" => FaultScript::default(),
@@ -149,7 +154,7 @@ impl WhatIf {
                 }
                 other => bail!(
                     "unknown what-if key {other:?} (allowed: shards, balancer, autoscale, \
-                     min-shards, coplan, faults)"
+                     min-shards, coplan, elastic, faults)"
                 ),
             }
         }
@@ -179,6 +184,9 @@ impl WhatIf {
         }
         if let Some(on) = self.coplan {
             parts.push(format!("coplan={}", if on { "on" } else { "off" }));
+        }
+        if let Some(on) = self.elastic {
+            parts.push(format!("elastic={}", if on { "on" } else { "off" }));
         }
         if let Some(f) = &self.faults {
             if f.is_empty() {
@@ -244,6 +252,20 @@ pub fn whatif_inputs(
     if let Some(k) = what_if.min_shards {
         opts.autoscale.min_shards = k;
     }
+    if let Some(on) = what_if.elastic {
+        if on && !opts.elastic.enabled {
+            opts.elastic = ElasticOptions::enabled();
+        }
+        opts.elastic.enabled = on;
+        // the elastic loop re-partitions the co-plan, so forcing it on
+        // pulls the co-planner (and a control epoch) in with it
+        if on {
+            opts.coplan = true;
+            if opts.control_epoch_s <= 0.0 {
+                opts.control_epoch_s = opts.duration_s / 20.0;
+            }
+        }
+    }
     if let Some(f) = &what_if.faults {
         f.validate(&trace.platform).context("what-if fault script")?;
         opts.faults = f.clone();
@@ -279,14 +301,20 @@ mod tests {
 
     #[test]
     fn whatif_parse_round_trips() {
-        let w = WhatIf::parse("shards=4,balancer=jsq,autoscale=on,min-shards=2,coplan=off")
-            .unwrap();
+        let w = WhatIf::parse(
+            "shards=4,balancer=jsq,autoscale=on,min-shards=2,coplan=off,elastic=on",
+        )
+        .unwrap();
         assert_eq!(w.shards, Some(4));
+        assert_eq!(w.elastic, Some(true));
         assert_eq!(w.balancer, Some(BalancerPolicy::JoinShortestQueue));
         assert_eq!(w.autoscale, Some(true));
         assert_eq!(w.min_shards, Some(2));
         assert_eq!(w.coplan, Some(false));
-        assert_eq!(w.describe(), "shards=4 balancer=jsq autoscale=on min-shards=2 coplan=off");
+        assert_eq!(
+            w.describe(),
+            "shards=4 balancer=jsq autoscale=on min-shards=2 coplan=off elastic=on"
+        );
     }
 
     #[test]

@@ -419,6 +419,91 @@ fn serve_sweep_autoscale_grid_compares_static_and_auto() {
 }
 
 #[test]
+fn usage_lists_elastic_flags() {
+    let o = shisha(&[]);
+    assert!(o.status.success());
+    let out = stdout(&o);
+    assert!(out.contains("--elastic"), "{out}");
+    assert!(out.contains("--elastic-grid"), "{out}");
+}
+
+#[test]
+fn serve_elastic_requires_coplan() {
+    let o = shisha(&[
+        "serve",
+        "--tenants",
+        "2",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--arrivals",
+        "poisson:40",
+        "--duration",
+        "1",
+        "--elastic",
+    ]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("coplan"), "{}", stderr(&o));
+}
+
+#[test]
+fn serve_elastic_runs_deterministically() {
+    let args = [
+        "serve",
+        "--tenants",
+        "2",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--arrivals",
+        "poisson:120;poisson:5",
+        "--duration",
+        "2",
+        "--epoch",
+        "0.2",
+        "--coplan",
+        "--elastic",
+        "--seed",
+        "17",
+    ];
+    let a = shisha(&args);
+    assert!(a.status.success(), "{}", stderr(&a));
+    let out = stdout(&a);
+    assert!(out.contains("elastic: re-planning"), "{out}");
+    let b = shisha(&args);
+    assert_eq!(stdout(&a), stdout(&b), "elastic serving must be deterministic");
+}
+
+#[test]
+fn serve_sweep_elastic_grid_compares_static_and_live() {
+    let o = shisha(&[
+        "serve",
+        "--sweep",
+        "--nets",
+        "synthnet_small",
+        "--platform",
+        "c2",
+        "--elastic-grid",
+        "--rho-grid",
+        "1.0",
+        "--seeds",
+        "7",
+        "--duration",
+        "4",
+        "--threads",
+        "2",
+    ]);
+    assert!(o.status.success(), "{}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("sweeping 2 scenario(s)"), "{out}");
+    assert!(out.contains("static rho=1"), "{out}");
+    assert!(out.contains("elastic rho=1"), "{out}");
+    assert!(out.contains("repartitions"), "{out}");
+}
+
+#[test]
 fn serve_sweep_rejects_conflicting_grids() {
     let o = shisha(&[
         "serve",

@@ -13,10 +13,17 @@
 //!   deployment's goodput is within 2% of the best static shard count
 //!   while consuming strictly fewer EP-epochs than static max-k.
 //!
+//! * **Elastic loop** — on the anti-phase tidal mix
+//!   ([`shisha::serve::sweep::elastic_grid`]), live re-planning on
+//!   observed demand holds at least the static co-plan's weighted
+//!   goodput at no more EP-epochs, and strictly beats it on the grid.
+//!
 //! Plus the safety properties: request conservation across scale
 //! transitions (no arrival lost or double-served over a replica drain),
-//! hysteresis (a constant-rate workload never scales), and two-run
-//! determinism of `serve --coplan --autoscale`.
+//! hysteresis (a constant-rate workload never scales), two-run
+//! determinism of `serve --coplan --autoscale`, and per-tenant
+//! conservation under arbitrary interleavings of autoscale drains,
+//! elastic re-partitions and chaos faults.
 
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
@@ -25,8 +32,8 @@ use shisha::platform::configs;
 use shisha::serve::cluster::coplan::{coplan, greedy_plan};
 use shisha::serve::sweep::{self, autoscale_grid};
 use shisha::serve::{
-    serve, ArrivalProcess, AutoscaleOptions, BalancerPolicy, ReplicaState, ScenarioStats,
-    ServeOptions, TenantSpec,
+    serve, ArrivalProcess, AutoscaleOptions, BalancerPolicy, ElasticOptions, FaultScript,
+    ReplicaState, ScenarioStats, ServeOptions, TenantSpec,
 };
 
 /// The weighted 3-tenant C5 mix used across the acceptance tests.
@@ -262,6 +269,137 @@ fn constant_rate_never_triggers_scale_events() {
         "no epoch may run below full capacity under steady load"
     );
     assert!(t.conserved());
+}
+
+#[test]
+fn elastic_replan_beats_static_coplan_on_the_tidal_mix() {
+    // acceptance: on the anti-phase tidal mix, equal tenant weights make
+    // aggregate goodput the weighted objective — the live cells must hold
+    // at least the static cells' goodput at no more EP-epochs on every
+    // (rho, seed), and strictly beat them somewhere on the grid
+    let plat = configs::c5();
+    let net = networks::synthnet_small();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    let base = ServeOptions {
+        duration_s: 300.0 / cap,
+        control: false,
+        // 40 epochs: 20 on each side of the tide flip
+        control_epoch_s: 7.5 / cap,
+        ..Default::default()
+    };
+    let cells = sweep::elastic_grid(&plat, &net, &cfg, &[1.0], &[13, 37], &base);
+    assert_eq!(cells.len(), 4, "one static + one live cell per seed");
+    let out = sweep::run_sweep(cells, sweep::available_threads());
+    let stats: Vec<ScenarioStats> = out
+        .iter()
+        .map(|o| ScenarioStats::from_report(o.report.as_ref().expect("elastic grid cell")))
+        .collect();
+    let mut static_total = 0.0f64;
+    let mut live_total = 0.0f64;
+    for pair in stats.chunks(2) {
+        let (st, live) = (&pair[0], &pair[1]);
+        assert!(st.goodput_rps > 0.0, "static cells must serve traffic");
+        assert_eq!(st.repartitions, 0, "static cells must never re-partition");
+        assert!(live.repartitions >= 1, "the tide must move the elastic loop");
+        assert!(
+            live.goodput_rps >= st.goodput_rps,
+            "acceptance: live goodput {} below static {}",
+            live.goodput_rps,
+            st.goodput_rps
+        );
+        assert!(
+            live.ep_epochs <= st.ep_epochs,
+            "acceptance: live EP-epochs {} above static {}",
+            live.ep_epochs,
+            st.ep_epochs
+        );
+        static_total += st.goodput_rps;
+        live_total += live.goodput_rps;
+    }
+    assert!(
+        live_total > static_total,
+        "acceptance: live re-planning must strictly beat the static co-plan \
+         somewhere on the grid (live {live_total}, static {static_total})"
+    );
+}
+
+#[test]
+fn chaotic_scale_fault_repartition_interleavings_conserve_requests() {
+    // property: whatever interleaving of autoscale drains, elastic
+    // cross-arena migrations and chaos faults a seed produces, every
+    // tenant conserves requests — over the whole run and epoch by epoch —
+    // and the interleaving is a pure function of the seed (two runs agree
+    // bit for bit)
+    let plat = configs::c5();
+    let net = networks::synthnet_small();
+    let cfg = shisha::serve::shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &cfg);
+    for seed in [3u64, 41, 89] {
+        let run = || {
+            let mk = |name: &str, weight: f64, shards: usize| {
+                TenantSpec::new(
+                    name,
+                    net.clone(),
+                    ArrivalProcess::Mmpp {
+                        low_rate: 0.1 * cap,
+                        high_rate: 0.8 * cap,
+                        mean_low_s: 40.0 / cap,
+                        mean_high_s: 40.0 / cap,
+                    },
+                )
+                .with_weight(weight)
+                .with_shards(shards)
+                .with_balancer(BalancerPolicy::JoinShortestQueue)
+                .with_queue_capacity(32)
+                .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+                .with_slo(500.0 / cap)
+            };
+            let tenants = vec![
+                (mk("chaos-hot", 2.0, 2), cfg.clone()),
+                (mk("chaos-warm", 1.0, 2), cfg.clone()),
+                (mk("chaos-cold", 1.0, 1), cfg.clone()),
+            ];
+            let opts = ServeOptions {
+                duration_s: 300.0 / cap,
+                seed,
+                control: false,
+                control_epoch_s: 6.0 / cap,
+                record_log: true,
+                coplan: true,
+                autoscale: AutoscaleOptions::enabled(),
+                elastic: ElasticOptions::enabled(),
+                faults: FaultScript::chaos(seed, &plat, 300.0 / cap, 3),
+                ..Default::default()
+            };
+            serve(&plat, tenants, &opts).expect("chaos serve")
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.log_hash, b.log_hash, "seed {seed}: interleaving must replay identically");
+        assert_eq!(a.event_log, b.event_log, "seed {seed}: event streams diverged");
+        for t in &a.tenants {
+            assert!(t.offered > 0, "seed {seed}/{}: fixture must offer traffic", t.name);
+            assert!(
+                t.conserved(),
+                "seed {seed}/{}: run-total conservation violated \
+                 (offered {} != rejected {} + dropped {} + completed {} + in-flight {})",
+                t.name,
+                t.offered,
+                t.rejected,
+                t.dropped,
+                t.completed,
+                t.in_flight
+            );
+            assert!(
+                t.epoch_conserved(),
+                "seed {seed}/{}: per-epoch flow identity violated across the interleaving",
+                t.name
+            );
+        }
+    }
 }
 
 #[test]

@@ -33,7 +33,14 @@ against the copy committed at HEAD:
   must settle within 2 control epochs (the PR-7 acceptance bar — the
   bench asserts this before writing, so a violation here means the file
   was produced some other way), and the goodput retained under the
-  strongest-EP fail-stop must be a valid positive fraction.
+  strongest-EP fail-stop must be a valid positive fraction;
+* `BENCH_elastic.json` gets the elastic-loop envelope on the fresh run:
+  the `aggregate` case must carry the re-planning metrics, the live
+  weighted goodput must hold the static co-plan's
+  (`weighted_goodput_ratio` >= 1, the PR-8 acceptance bar — the bench
+  asserts this before writing), the live cells may not consume extra
+  EP-epochs (`ep_epoch_ratio` <= 1), and at least one re-partition must
+  have been adopted (zero would make the comparison vacuous).
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -151,6 +158,46 @@ def check_fault_envelope(path: str, fresh_cases: dict) -> list[str]:
     return problems
 
 
+# Fresh-run envelope for BENCH_elastic.json: the demand-driven
+# re-planning metrics the elastic control loop is tracked by.
+ELASTIC_AGGREGATE_KEYS = {
+    "weighted_goodput_ratio",
+    "ep_epoch_ratio",
+    "repartitions",
+    "reps",
+}
+
+
+def check_elastic_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_elastic.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = ELASTIC_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    ratio = aggregate.get("weighted_goodput_ratio")
+    if not isinstance(ratio, (int, float)) or ratio < 1.0:
+        problems.append(
+            f"{path}: weighted_goodput_ratio {ratio!r} must be a number >= 1 "
+            "(live re-planning lost to the static co-plan it started from)"
+        )
+    ep_ratio = aggregate.get("ep_epoch_ratio")
+    if not isinstance(ep_ratio, (int, float)) or ep_ratio > 1.0:
+        problems.append(
+            f"{path}: ep_epoch_ratio {ep_ratio!r} must be a number <= 1 "
+            "(the elastic win may not come from holding extra EPs active)"
+        )
+    repartitions = aggregate.get("repartitions")
+    if not isinstance(repartitions, (int, float)) or repartitions < 1:
+        problems.append(
+            f"{path}: repartitions {repartitions!r} must be >= 1 "
+            "(the elastic loop never moved, so the comparison is vacuous)"
+        )
+    return problems
+
+
 def load_fresh(path: str) -> dict:
     with open(path, encoding="utf-8") as f:
         return json.load(f)
@@ -191,6 +238,8 @@ def main(paths: list[str]) -> int:
             failures.extend(check_replay_envelope(path, fresh_cases))
         if path.rsplit("/", 1)[-1] == "BENCH_fault.json":
             failures.extend(check_fault_envelope(path, fresh_cases))
+        if path.rsplit("/", 1)[-1] == "BENCH_elastic.json":
+            failures.extend(check_elastic_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:
