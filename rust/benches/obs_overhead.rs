@@ -1,0 +1,142 @@
+//! Telemetry-plane overhead: what does observing a run cost?
+//!
+//! The same sharded MMPP storm (SynthNet on the 8-EP C5 platform, the
+//! fixture every serving bench uses) runs blind (`serve`) and observed
+//! (`serve_observed`, the `serve --metrics` engine path);
+//! `sampling_overhead_frac` is the fractional events/s lost to the
+//! telemetry tap — hot-path counter bumps, utilization-meter touches,
+//! and one full epoch sample per control tick. The acceptance envelope
+//! (scripts/check_bench_schema.py) requires it below 5%, and log_hash
+//! equality blind-vs-observed is asserted before anything is written, so
+//! the numbers can never come from divergent simulations (the
+//! zero-perturbation invariant, property-tested in
+//! `tests/obs_invariance.rs`).
+//!
+//! Results go to `BENCH_obs.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench obs_overhead            # full profile
+//! cargo bench --bench obs_overhead -- --quick # CI profile
+//! ```
+
+use std::time::Instant;
+
+use shisha::metrics::bench::JsonReport;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{
+    serve, serve_observed, shisha_config, ArrivalProcess, BalancerPolicy, ObsReport,
+    ServeOptions, TenantSpec,
+};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let duration_s = if quick { 8.0 } else { 30.0 };
+    let reps = if quick { 3 } else { 5 };
+    println!(
+        "C5 ({} EPs), synthnet capacity {:.1} req/s; storm horizon {duration_s}s, {reps} rep(s)\n",
+        plat.n_eps(),
+        cap
+    );
+
+    let tenant = TenantSpec::new(
+        "storm",
+        net.clone(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: duration_s / 6.0,
+            mean_high_s: duration_s / 6.0,
+        },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(16)
+    .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+    .with_slo(200.0 / cap);
+    let tenants = vec![(tenant, config.clone())];
+    let opts = ServeOptions { duration_s, seed: 42, control_epoch_s: 5.0, ..Default::default() };
+
+    // Best-of-reps wall time, blind vs observed. Best (not mean) because
+    // the comparison wants the noise floor out of both sides; the
+    // overhead fraction is a ratio of the two optima.
+    let mut blind_wall = f64::INFINITY;
+    let mut blind_hash = 0u64;
+    let mut n_events = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let report = serve(&plat, tenants.clone(), &opts).expect("blind serve");
+        blind_wall = blind_wall.min(t0.elapsed().as_secs_f64());
+        blind_hash = report.log_hash;
+        n_events = report.n_events;
+    }
+    let mut obs_wall = f64::INFINITY;
+    let mut obs: Option<ObsReport> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (report, o) = serve_observed(&plat, tenants.clone(), &opts).expect("observed serve");
+        obs_wall = obs_wall.min(t0.elapsed().as_secs_f64());
+        assert_eq!(
+            report.log_hash, blind_hash,
+            "telemetry must not perturb the simulation (the tap sits beside the hash fold)"
+        );
+        obs = Some(o);
+    }
+    let obs = obs.expect("at least one observed rep");
+    let blind_ev_s = n_events as f64 / blind_wall;
+    let obs_ev_s = n_events as f64 / obs_wall;
+    let overhead = 1.0 - obs_ev_s / blind_ev_s;
+    let samples_per_s = obs.samples.len() as f64 / obs_wall;
+    println!(
+        "observe: {n_events} events, {} epoch sample(s); blind {blind_ev_s:.3e} events/s, \
+         observed {obs_ev_s:.3e} events/s, overhead {:.2}%",
+        obs.samples.len(),
+        overhead * 1e2
+    );
+    println!("{}", obs.prof.table());
+
+    // Export surfaces: size and render throughput (not part of the
+    // overhead — both render after the horizon, off the hot path).
+    let t0 = Instant::now();
+    let jsonl = obs.to_jsonl();
+    let jsonl_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "exports: {} JSONL bytes over {} row(s) ({:.1} MB/s), {} Prometheus bytes",
+        jsonl.len(),
+        jsonl.lines().count(),
+        jsonl.len() as f64 / 1e6 / jsonl_wall.max(1e-9),
+        obs.prom.len()
+    );
+
+    let mut json = JsonReport::new();
+    json.note(
+        "obs_overhead: telemetry-plane cost on the C5/synthnet sharded MMPP storm. \
+         sampling_overhead_frac = 1 - observed/blind events-per-wall-second (best of N reps \
+         each; the telemetry tap budget is < 0.05); samples_per_s = epoch samples frozen per \
+         wall second of the observed run. log_hash equality blind-vs-observed is asserted \
+         before anything is written, so the numbers cannot come from divergent simulations.",
+    );
+    json.metric("observe", "events", n_events as f64);
+    json.metric("observe", "epoch_samples", obs.samples.len() as f64);
+    json.metric("observe", "journal_entries", obs.journal.entries.len() as f64);
+    json.metric("exports", "jsonl_bytes", jsonl.len() as f64);
+    json.metric("exports", "prom_bytes", obs.prom.len() as f64);
+    json.metric("aggregate", "sampling_overhead_frac", overhead);
+    json.metric("aggregate", "samples_per_s", samples_per_s);
+    json.metric("aggregate", "live_events_per_s", blind_ev_s);
+    json.metric("aggregate", "observed_events_per_s", obs_ev_s);
+    json.metric("aggregate", "reps", f64::from(reps));
+
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_obs.json");
+    json.write(&bench_path).expect("write BENCH_obs.json");
+    println!("\nwrote {}", bench_path.display());
+}

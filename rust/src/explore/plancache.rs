@@ -206,8 +206,10 @@ struct Inner {
     misses: u64,
 }
 
-/// Hit/miss/occupancy counters of a [`PlanCache`].
-#[derive(Debug, Clone, Copy)]
+/// Hit/miss/occupancy counters of a [`PlanCache`]. Surfaced through
+/// [`crate::serve::ServeReport::plan_cache`], the sweep table and the
+/// telemetry epoch samples ([`crate::serve::obs::EpochSample::cache`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Probes answered from the memo.
     pub hits: u64,

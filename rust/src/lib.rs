@@ -246,6 +246,46 @@
 //!   strongest-EP fail-stop beside the analytic surviving-capacity
 //!   fraction, and cold- vs warm-cache re-plan latency.
 //!
+//! ## Observability & telemetry
+//!
+//! The telemetry plane ([`serve::obs`], `serve --metrics FILE.jsonl`
+//! `--prom FILE`, `trace analyze FILE.trace`) answers "what was the
+//! cluster doing, and why did the control plane act?" without perturbing
+//! the simulation it observes:
+//!
+//! * **zero perturbation** — all instrumentation lives *beside* the
+//!   event-hash funnel, never inside it: pre-registered index-addressed
+//!   counters/gauges/log₂-histograms ([`serve::obs::Registry`], no
+//!   allocation on the hot path), utilization meters integrating EP
+//!   busy-fractions and link occupancy between epoch ticks, and
+//!   monotonic-clock self-profiling spans ([`serve::obs::prof`]) that are
+//!   excluded from every deterministic export. A run with telemetry on
+//!   produces byte-identical `log_hash`es, reports and golden
+//!   fingerprints to one with it off (property-tested across all six
+//!   golden scenario families in `tests/obs_invariance.rs`);
+//! * **epoch time series** — at every control-epoch tick the engine
+//!   freezes one [`serve::EpochSample`]: per-EP busy fraction and average
+//!   in-flight, link occupancy, per-tenant goodput/backlog/shed flows,
+//!   per-replica state, stage-queue high-waters and slab occupancy, plus
+//!   plan-cache counters — exported as schema-versioned JSONL
+//!   (`shisha-obs-v1`, one line per sample; schema documented in
+//!   [`serve::obs`]) and as a Prometheus text snapshot;
+//! * **causality journal** — every control decision (re-tune, co-plan,
+//!   scale, fault, failover, shed, re-partition) is journaled with the
+//!   *signals that triggered it* (observed rates, backlogs, objective
+//!   deltas, gain bars) beside the hashed control record
+//!   ([`serve::obs::Journal`]), so "why did the cluster re-partition at
+//!   t=42s?" has a recorded answer;
+//! * **retroactive derivation** — `trace analyze FILE.trace`
+//!   ([`serve::replay_observed`]) re-simulates any recorded trace (format
+//!   versions v1 through v3) with the telemetry plane on and derives the
+//!   identical epoch series + journal a live `--metrics` run would have
+//!   written — byte-for-byte, asserted in CI — so every historical
+//!   recording is a full telemetry source after the fact.
+//!
+//! `cargo bench --bench obs_overhead` writes `BENCH_obs.json` (sampling
+//! overhead vs a blind run — envelope: < 5% — and samples/s).
+//!
 //! ## Performance
 //!
 //! The serving event loop is the hottest code in the crate; its steady

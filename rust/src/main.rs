@@ -5,8 +5,9 @@
 //! * `explore`    — run explorers against the perf database (paper mode)
 //! * `serve`      — multi-tenant discrete-event serving with online re-tuning
 //!                  (`--record`/`--replay` drive the flight recorder,
-//!                  `--faults`/`--chaos` the deterministic fault plane)
-//! * `trace`      — inspect a recorded `.trace` file
+//!                  `--faults`/`--chaos` the deterministic fault plane,
+//!                  `--metrics`/`--prom` the zero-perturbation telemetry plane)
+//! * `trace`      — inspect or analyze a recorded `.trace` file
 //! * `run`        — live pipeline + online tuning over PJRT artifacts
 //! * `platforms`  — print Table 1 EP kinds and Table 3 configs C1–C5
 //! * `designspace`— design-space sizes (the paper's "explored %" denominator)
@@ -34,8 +35,8 @@ use shisha::pipeline::space;
 use shisha::platform::configs;
 use shisha::runtime::Manifest;
 use shisha::serve::{
-    replay_full, replay_whatif, AdmissionPolicy, ArrivalProcess, FaultScript, ServeOptions,
-    TenantSpec, Trace, WhatIf,
+    replay_full, replay_observed, replay_whatif, AdmissionPolicy, ArrivalProcess, FaultScript,
+    ObsReport, ServeOptions, TenantSpec, Trace, WhatIf,
 };
 
 fn main() {
@@ -207,6 +208,31 @@ const SERVE_FLAGS: &[FlagSpec] = &[
         value: "K=V,..",
         help: "with --replay: counterfactual overrides (incl. faults)",
     },
+    FlagSpec {
+        name: "metrics",
+        value: "FILE.jsonl",
+        help: "telemetry plane on: one JSONL epoch sample per line",
+    },
+    FlagSpec {
+        name: "prom",
+        value: "FILE",
+        help: "telemetry plane on: Prometheus text snapshot at exit",
+    },
+];
+
+/// Flags of `trace analyze` (shared by the usage text and the parser, so
+/// the help cannot drift from what `expect_known` accepts).
+const TRACE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "metrics",
+        value: "FILE.jsonl",
+        help: "with analyze: write the derived epoch series as JSONL",
+    },
+    FlagSpec {
+        name: "prom",
+        value: "FILE",
+        help: "with analyze: write the derived Prometheus snapshot",
+    },
 ];
 
 const SERVE_SWEEP_FLAGS: &[FlagSpec] = &[
@@ -354,7 +380,12 @@ fn print_usage() {
     println!(
         "           trace       inspect FILE.trace — print a recorded trace's inputs,\n\
          \x20                      event census, per-tenant counters and control decisions\n\
-           run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
+         \x20               analyze FILE.trace — re-simulate with the telemetry plane on\n\
+         \x20                      and derive the epoch series + causality journal:"
+    );
+    print!("{}", render_flags(TRACE_FLAGS, "                 "));
+    println!(
+        "           run         [--artifacts DIR] [--platform c2] [--probes N] [--alpha N]\n\
            platforms   print Table 1 / Table 3 configurations\n\
            designspace --net <name> --eps N [--depth D]\n\
            stream      [--size GB] [--hbm GB]\n\
@@ -598,8 +629,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !opts.faults.is_empty() {
         println!("fault plane: {}", opts.faults.describe());
     }
-    let report = if let Some(path) = args.get("record") {
-        let (report, trace) = shisha::serve::serve_traced(&plat, tenants, &opts)?;
+    let want_obs = args.get("metrics").is_some() || args.get("prom").is_some();
+    let (report, obs) = if let Some(path) = args.get("record") {
+        let (report, trace, obs) = if want_obs {
+            let (report, trace, obs) = shisha::serve::serve_traced_observed(&plat, tenants, &opts)?;
+            (report, trace, Some(obs))
+        } else {
+            let (report, trace) = shisha::serve::serve_traced(&plat, tenants, &opts)?;
+            (report, trace, None)
+        };
         trace.save(std::path::Path::new(path))?;
         println!(
             "recorded {} event(s) + {} control record(s) to {path} (log_hash {:016x})",
@@ -607,9 +645,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             trace.controls.len(),
             report.log_hash
         );
-        report
+        (report, obs)
+    } else if want_obs {
+        let (report, obs) = shisha::serve::serve_observed(&plat, tenants, &opts)?;
+        (report, Some(obs))
     } else {
-        shisha::serve::serve(&plat, tenants, &opts)?
+        (shisha::serve::serve(&plat, tenants, &opts)?, None)
     };
     let table =
         latency_table(report.tenants.iter().map(|t| t.latency_row(report.duration_s)));
@@ -661,10 +702,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.fairness(),
         if report.truncated { " [TRUNCATED at event cap]" } else { "" }
     );
+    if report.plan_cache.hits + report.plan_cache.misses > 0 {
+        println!(
+            "plan cache: {} hits / {} misses ({} entries)",
+            report.plan_cache.hits, report.plan_cache.misses, report.plan_cache.entries
+        );
+    }
+    if let Some(obs) = &obs {
+        write_obs_outputs(args, obs)?;
+    }
     if let Some(path) = args.get("csv") {
         table.write_csv(path).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Write the `--metrics` / `--prom` export surfaces of one telemetry
+/// report and print its analysis digest plus the self-profiling table —
+/// shared by live `serve`, `serve --replay`, and `trace analyze`.
+fn write_obs_outputs(args: &Args, obs: &ObsReport) -> Result<()> {
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, obs.to_jsonl()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {} epoch sample(s) to {path}", obs.samples.len());
+    }
+    if let Some(path) = args.get("prom") {
+        std::fs::write(path, &obs.prom).with_context(|| format!("writing {path}"))?;
+        println!("wrote Prometheus snapshot to {path}");
+    }
+    print!("{}", obs.analysis());
+    print!("{}", obs.prof.table());
     Ok(())
 }
 
@@ -674,8 +741,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_replay(args: &Args, path: &str) -> Result<()> {
     let trace = Trace::load(std::path::Path::new(path))?;
     print!("{}", trace.describe());
+    let want_obs = args.get("metrics").is_some() || args.get("prom").is_some();
     match args.get("what-if") {
         Some(spec) => {
+            if want_obs {
+                bail!(
+                    "--metrics/--prom conflict with --what-if: telemetry derived from a \
+                     counterfactual would not match the recording — use trace analyze \
+                     FILE.trace for the recorded run's series"
+                );
+            }
             let what_if = WhatIf::parse(spec)?;
             println!("what-if replay: {}", what_if.describe());
             let report = replay_whatif(&trace, &what_if)?;
@@ -707,6 +782,14 @@ fn cmd_serve_replay(args: &Args, path: &str) -> Result<()> {
                 if report.truncated { " [TRUNCATED at event cap]" } else { "" }
             );
         }
+        None if want_obs => {
+            let (report, obs) = replay_observed(&trace)?;
+            println!(
+                "full replay OK: log_hash {:016x}, {} event(s) — bit-identical to the recording",
+                report.log_hash, report.n_events
+            );
+            write_obs_outputs(args, &obs)?;
+        }
         None => {
             let report = replay_full(&trace)?;
             println!(
@@ -719,11 +802,14 @@ fn cmd_serve_replay(args: &Args, path: &str) -> Result<()> {
 }
 
 /// `trace` subcommand: `trace inspect FILE.trace` prints a recorded
-/// trace's summary without re-simulating anything.
+/// trace's summary without re-simulating anything; `trace analyze
+/// FILE.trace` re-simulates with the telemetry plane on and derives the
+/// epoch time series + causality journal retroactively (byte-identical
+/// JSONL to what a live `serve --metrics` run would have written).
 fn cmd_trace(args: &Args) -> Result<()> {
-    args.expect_known(&[])?;
     match args.positionals.first().map(String::as_str) {
         Some("inspect") => {
+            args.expect_known(&[])?;
             let path = args
                 .positionals
                 .get(1)
@@ -732,8 +818,24 @@ fn cmd_trace(args: &Args) -> Result<()> {
             print!("{}", trace.describe());
             Ok(())
         }
-        Some(other) => bail!("unknown trace action {other:?} (try: inspect)"),
-        None => bail!("usage: shisha trace inspect FILE.trace"),
+        Some("analyze") => {
+            args.expect_known(&flag_names(TRACE_FLAGS))?;
+            let path = args
+                .positionals
+                .get(1)
+                .context("usage: shisha trace analyze FILE.trace [--metrics F] [--prom F]")?;
+            let trace = Trace::load(std::path::Path::new(path))?;
+            print!("{}", trace.describe());
+            let (report, obs) = replay_observed(&trace)?;
+            println!(
+                "analyze OK: log_hash {:016x}, {} event(s) — derived telemetry verified \
+                 against the recording",
+                report.log_hash, report.n_events
+            );
+            write_obs_outputs(args, &obs)
+        }
+        Some(other) => bail!("unknown trace action {other:?} (try: inspect, analyze)"),
+        None => bail!("usage: shisha trace inspect|analyze FILE.trace"),
     }
 }
 
@@ -977,6 +1079,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "EP-epochs",
         "scale events",
         "repartitions",
+        "cache h/m",
     ]);
     let mut total_events = 0u64;
     let mut serve_wall = 0.0f64;
@@ -999,6 +1102,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     stats.ep_epochs.to_string(),
                     stats.scale_events.to_string(),
                     stats.repartitions.to_string(),
+                    format!("{}/{}", stats.cache_hits, stats.cache_misses),
                 ]);
             }
             Err(e) => {
@@ -1010,6 +1114,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     "-".into(),
                     "-".into(),
                     "ERROR".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),

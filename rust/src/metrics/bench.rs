@@ -7,6 +7,7 @@
 //! files at the repository root that track the perf trajectory across PRs
 //! (CI runs the quick bench profiles and uploads them as artifacts).
 
+use super::emit::{num as json_num, str_lit as json_str};
 use super::{fmt_duration, Stats, Timer};
 use std::hint::black_box;
 use std::time::Instant;
@@ -194,35 +195,6 @@ impl JsonReport {
     }
 }
 
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32));
-            }
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-fn json_num(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:e}")
-    } else {
-        // JSON has no NaN/Infinity; null keeps downstream parsers alive
-        "null".to_string()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +272,9 @@ mod tests {
             "BENCH_fig5.json",
             "BENCH_plan.json",
             "BENCH_replay.json",
+            "BENCH_fault.json",
+            "BENCH_elastic.json",
+            "BENCH_obs.json",
         ] {
             let path = root.join(name);
             let s = std::fs::read_to_string(&path)

@@ -1,0 +1,56 @@
+//! Shared machine-readable emitters: hand-rolled JSON fragments.
+//!
+//! No serde in the offline environment, so both the bench trajectory
+//! writer ([`super::bench::JsonReport`]) and the telemetry exports
+//! ([`crate::serve::obs`]) build JSON by hand. The primitives live here
+//! so the two surfaces cannot drift in escaping or number formatting —
+//! the telemetry invariant (live `--metrics` JSONL equals `trace analyze`
+//! output byte-for-byte) leans on [`num`] being a pure deterministic
+//! function of the `f64` bits.
+
+/// JSON string literal with the standard escapes.
+pub fn str_lit(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: exponent form for finite values, `null` otherwise
+/// (JSON has no NaN/Infinity; null keeps downstream parsers alive).
+pub fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_and_nulls() {
+        assert_eq!(str_lit("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(str_lit("\u{1}"), "\"\\u0001\"");
+        assert_eq!(num(1.5), "1.5e0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        // Bit-determinism: same bits, same text.
+        assert_eq!(num(0.1 + 0.2), num(0.30000000000000004));
+    }
+}

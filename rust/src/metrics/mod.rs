@@ -4,9 +4,12 @@
 //! * [`Timer`] — wall-clock scope timing;
 //! * [`table`] — markdown/CSV table writers used by every bench harness;
 //! * [`bench`] — a small criterion-substitute micro-benchmark harness
-//!   (the offline environment has no criterion; see DESIGN.md §5).
+//!   (the offline environment has no criterion; see DESIGN.md §5);
+//! * [`emit`] — hand-rolled JSON primitives shared by the bench writer
+//!   and the telemetry exports, so their formatting cannot drift.
 
 pub mod bench;
+pub mod emit;
 pub mod table;
 
 use std::time::Instant;

@@ -110,7 +110,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use anyhow::{bail, Result};
 
 use crate::coordinator::AdaptiveController;
-use crate::explore::PlanCache;
+use crate::explore::{CacheStats, PlanCache};
 use crate::perfdb::{batch, CostModel, PerfDb};
 use crate::pipeline::{simulator, PipelineConfig};
 use crate::platform::{EpId, Platform};
@@ -123,6 +123,9 @@ use super::cluster::autoscale::{
 };
 use super::cluster::coplan::{self, TenantDemand};
 use super::fault::{FaultKind, FaultScript};
+use super::obs::{
+    self, EpochSample, Obs, ObsReport, Prof, ReplicaSample, Span, TenantSample,
+};
 use super::shard::{self, BalancerPolicy};
 use super::slo::{jain_fairness, QuantileSketch};
 use super::tenant::{AdmissionPolicy, TenantSpec};
@@ -516,6 +519,9 @@ pub struct ServeReport {
     pub event_log: Vec<String>,
     /// True when the `max_events` safety valve fired.
     pub truncated: bool,
+    /// Planner-memo counters of the run's shared [`PlanCache`] (failover
+    /// and elastic re-plans probe it; all-zero when neither ran).
+    pub plan_cache: CacheStats,
 }
 
 impl ServeReport {
@@ -598,6 +604,17 @@ struct Shared {
     /// Flight-recorder sink ([`super::trace`]); `None` outside recorded
     /// runs, so the unrecorded hot path pays one branch per event.
     capture: Option<Capture>,
+    /// Telemetry sink ([`super::obs`]); `None` outside observed runs, so
+    /// the unobserved hot path pays one branch per touch. Boxed: the
+    /// registry is fat and the engine only chases the pointer when
+    /// telemetry is on.
+    obs: Option<Box<Obs>>,
+    /// Simulated time of the event being pumped (0.0 before the first).
+    /// Telemetry-only convenience so deep callees (e.g. replica
+    /// detachment) can timestamp utilization transitions without
+    /// threading `now` through every signature; **never** read by
+    /// simulation logic.
+    now: f64,
     // Fault-plane state. Transient windows are stored as "until"
     // timestamps, so resource health is a pure function of `now` — window
     // ends never have to *clear* anything, they only trigger recovery.
@@ -632,6 +649,9 @@ impl Shared {
         if let Some(cap) = &mut self.capture {
             cap.event(t, tag, a, b);
         }
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_event(tag);
+        }
         if self.record_log {
             let line = text();
             self.log.push(line);
@@ -640,10 +660,84 @@ impl Shared {
 
     /// Record a control-plane decision beside (not inside) the hashed
     /// event stream: recorded runs keep the exact `log_hash` of
-    /// unrecorded ones.
-    fn control(&mut self, rec: ControlRecord) {
+    /// unrecorded ones. `signals` are the observations the decision was
+    /// made on; they go to the causality journal only (never hashed, never
+    /// captured), so every call site documents *why* the mechanism fired.
+    fn control(&mut self, rec: ControlRecord, signals: &[(&'static str, f64)]) {
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.journal.push(&rec, signals);
+        }
         if let Some(cap) = &mut self.capture {
             cap.control(rec);
+        }
+    }
+
+    /// Acquire one in-flight unit on global EP `gep` (and the link when
+    /// `uses_link`), integrating the utilization meters up to `self.now`
+    /// at the pre-transition counts first.
+    #[inline]
+    fn ep_acquire(&mut self, gep: usize, uses_link: bool) {
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.util.ep_touch(gep, self.ep_busy[gep], self.now);
+            if uses_link {
+                o.util.link_touch(self.link_busy, self.now);
+            }
+        }
+        self.ep_busy[gep] += 1;
+        if uses_link {
+            self.link_busy += 1;
+        }
+    }
+
+    /// Release one in-flight unit on global EP `gep` (and the link when
+    /// `uses_link`); the saturating arithmetic mirrors the original
+    /// release sites (detach may race a completion during reconfig).
+    #[inline]
+    fn ep_release(&mut self, gep: usize, uses_link: bool) {
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.util.ep_touch(gep, self.ep_busy[gep], self.now);
+            if uses_link {
+                o.util.link_touch(self.link_busy, self.now);
+            }
+        }
+        self.ep_busy[gep] = self.ep_busy[gep].saturating_sub(1);
+        if uses_link {
+            self.link_busy = self.link_busy.saturating_sub(1);
+        }
+    }
+
+    /// Telemetry tap: a batch of `b` requests entered service.
+    #[inline]
+    fn obs_batch(&mut self, b: u64) {
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_batch(b);
+        }
+    }
+
+    /// Telemetry tap: one admission decision (`obs::ADM_*` outcome).
+    #[inline]
+    fn obs_admit(&mut self, ti: usize, outcome: usize) {
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_admission(ti, outcome);
+        }
+    }
+
+    /// Open a self-profiling span (None when telemetry is off — the
+    /// unobserved run never reads the clock).
+    #[inline]
+    fn prof_start(&self) -> Option<std::time::Instant> {
+        if self.obs.is_some() {
+            Some(Prof::start())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened with [`Shared::prof_start`].
+    #[inline]
+    fn prof_end(&mut self, span: Span, t0: Option<std::time::Instant>) {
+        if let (Some(o), Some(t0)) = (self.obs.as_deref_mut(), t0) {
+            o.prof.add(span, t0);
         }
     }
 
@@ -1074,10 +1168,8 @@ fn dispatch_stage(
     for _ in 0..b {
         reqs.push(t.stages[si].queue.pop_front().expect("len checked"));
     }
-    sh.ep_busy[gep] += 1;
-    if uses_link {
-        sh.link_busy += 1;
-    }
+    sh.ep_acquire(gep, uses_link);
+    sh.obs_batch(b as u64);
     let done = now + actual;
     let factor = if base > 0.0 { actual / base } else { 1.0 };
     t.stages[si].busy = Some(InFlight {
@@ -1178,6 +1270,7 @@ fn settle(
     dirty: u64,
     full_rescan: bool,
 ) {
+    let prof_t0 = sh.prof_start();
     let n = t.stages.len();
     let all = all_mask(n);
     let mut cur = if full_rescan { all } else { dirty & all };
@@ -1232,6 +1325,19 @@ fn settle(
     for si in 0..n {
         debug_assert!(!can_progress(spec, t, sh, si, now), "settle fixpoint missed stage {si}");
     }
+    if let Some(o) = sh.obs.as_deref_mut() {
+        // Post-fixpoint queue scan: per-stage high-water for the epoch
+        // samples plus one depth observation for the queue histogram.
+        // O(n_stages) per settle, pure reads — never perturbs the sim.
+        let mut total = 0u64;
+        for (si, st) in t.stages.iter().enumerate() {
+            let l = st.queue.len() as u64;
+            total += l;
+            o.queue_mark(ti, shard_ix, si, l as u32);
+        }
+        o.queue_total(total);
+    }
+    sh.prof_end(Span::Settle, prof_t0);
 }
 
 /// Interrupt one replica's in-flight work and drain its queues: bump the
@@ -1250,10 +1356,7 @@ fn detach_replica(t: &mut ShardRt, sh: &mut Shared) -> Vec<u32> {
         if let Some(inf) = st.busy.take() {
             if !inf.completed {
                 let gep = t.ep_map[inf.ep];
-                sh.ep_busy[gep] = sh.ep_busy[gep].saturating_sub(1);
-                if inf.uses_link {
-                    sh.link_busy = sh.link_busy.saturating_sub(1);
-                }
+                sh.ep_release(gep, inf.uses_link);
             }
             orphans.extend_from_slice(&inf.reqs[inf.taken..]);
             spare_bufs.push(inf.reqs);
@@ -1352,6 +1455,7 @@ fn rebuild_replica(
     opts: &ServeOptions,
 ) -> Result<f64> {
     debug_assert!(!eps.is_empty(), "rebuild needs at least one EP");
+    let prof_t0 = sh.prof_start();
     let model = CostModel::default();
     let orphans = detach_replica(t, sh);
     let subplat = plat.subset(&eps);
@@ -1379,6 +1483,7 @@ fn rebuild_replica(
     t.ep_map = eps;
     requeue_orphans(spec, t, orphans);
     freeze_replica(t, sh, ti, shard_ix, now, opts.reconfig_penalty_s, opts.duration_s);
+    sh.prof_end(Span::DrainMigrate, prof_t0);
     Ok(predicted)
 }
 
@@ -1405,6 +1510,9 @@ fn fault_failover(
             if !t.shards[si].ep_map.iter().any(|&e| sh.ep_down(e, now)) {
                 continue;
             }
+            let lost =
+                t.shards[si].ep_map.iter().filter(|&&e| sh.ep_down(e, now)).count();
+            let home = t.shards[si].home_eps.len();
             let surviving: Vec<EpId> = t.shards[si]
                 .home_eps
                 .iter()
@@ -1425,14 +1533,22 @@ fn fault_failover(
                     opts,
                 )?;
                 t.shards[si].dead = false;
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Failover,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: t.shards[si].ep_map.len() as u64,
-                    b: predicted.to_bits(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Failover,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: t.shards[si].ep_map.len() as u64,
+                        b: predicted.to_bits(),
+                    },
+                    &[
+                        ("eps_lost", lost as f64),
+                        ("eps_surviving", t.shards[si].ep_map.len() as f64),
+                        ("home_eps", home as f64),
+                        ("predicted_throughput", predicted),
+                    ],
+                );
                 continue;
             }
             // the whole home set is down: the replica is dead
@@ -1458,6 +1574,8 @@ fn fault_failover(
                 Some((sj, _, act)) => {
                     // cross-replica migration: re-admit every orphan into
                     // the sibling's arena at its completed-layer position
+                    let n_orphans = orphans.len();
+                    let sibling_weight = t.shards[sj].weight;
                     let n_layers = t.spec.net.len();
                     for ix in orphans {
                         let (id, arr, ld) = {
@@ -1488,14 +1606,20 @@ fn fault_failover(
                         sh.note(now, 6, pack_ts(ti, sj), ReplicaState::Active.code(), || {
                             format!("{now:.6} scale {} r{sj} active", t.spec.name)
                         });
-                        sh.control(ControlRecord {
-                            t_s: now,
-                            kind: ControlKind::Scale,
-                            tenant: ti as u32,
-                            shard: sj as u32,
-                            a: 0,
-                            b: ReplicaState::Active.code(),
-                        });
+                        sh.control(
+                            ControlRecord {
+                                t_s: now,
+                                kind: ControlKind::Scale,
+                                tenant: ti as u32,
+                                shard: sj as u32,
+                                a: 0,
+                                b: ReplicaState::Active.code(),
+                            },
+                            &[
+                                ("migrated_backlog", n_orphans as f64),
+                                ("sibling_weight", sibling_weight),
+                            ],
+                        );
                     }
                     // the dead replica parks (not drains: its backlog just
                     // moved), freeing its EP meter
@@ -1510,14 +1634,20 @@ fn fault_failover(
                         sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
                             format!("{now:.6} scale {} r{si} parked", t.spec.name)
                         });
-                        sh.control(ControlRecord {
-                            t_s: now,
-                            kind: ControlKind::Scale,
-                            tenant: ti as u32,
-                            shard: si as u32,
-                            a: 0,
-                            b: ReplicaState::Parked.code(),
-                        });
+                        sh.control(
+                            ControlRecord {
+                                t_s: now,
+                                kind: ControlKind::Scale,
+                                tenant: ti as u32,
+                                shard: si as u32,
+                                a: 0,
+                                b: ReplicaState::Parked.code(),
+                            },
+                            &[
+                                ("replica_dead", 1.0),
+                                ("migrated_backlog", n_orphans as f64),
+                            ],
+                        );
                     }
                     for srt in &mut t.shards {
                         srt.credit = 0.0;
@@ -1577,14 +1707,22 @@ fn fault_recover(
                 &t.spec, &mut t.shards[si], sh, ti, si, now, plat, desired, cache, opts,
             )?;
             t.shards[si].dead = false;
-            sh.control(ControlRecord {
-                t_s: now,
-                kind: ControlKind::Failover,
-                tenant: ti as u32,
-                shard: si as u32,
-                a: t.shards[si].ep_map.len() as u64,
-                b: predicted.to_bits(),
-            });
+            sh.control(
+                ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Failover,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: t.shards[si].ep_map.len() as u64,
+                    b: predicted.to_bits(),
+                },
+                &[
+                    ("eps_recovered", recovered.len() as f64),
+                    ("eps_adopted", t.shards[si].ep_map.len() as f64),
+                    ("was_dead", f64::from(u8::from(was_dead))),
+                    ("predicted_throughput", predicted),
+                ],
+            );
             if was_dead && t.shards[si].state != ReplicaState::Active {
                 t.shards[si].state = ReplicaState::Active;
                 t.n_active += 1;
@@ -1592,14 +1730,17 @@ fn fault_recover(
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
                     format!("{now:.6} scale {} r{si} active", t.spec.name)
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Scale,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: 0,
-                    b: ReplicaState::Active.code(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Scale,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: 0,
+                        b: ReplicaState::Active.code(),
+                    },
+                    &[("was_dead", 1.0)],
+                );
                 for srt in &mut t.shards {
                     srt.credit = 0.0;
                 }
@@ -1661,14 +1802,22 @@ fn degrade_tick(rts: &mut [TenantRt], sh: &mut Shared, now: f64, opts: &ServeOpt
         let shed = !admit;
         if t.load_shed != shed {
             t.load_shed = shed;
-            sh.control(ControlRecord {
-                t_s: now,
-                kind: ControlKind::Shed,
-                tenant: ti as u32,
-                shard: 0,
-                a: 0,
-                b: u64::from(shed),
-            });
+            sh.control(
+                ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Shed,
+                    tenant: ti as u32,
+                    shard: 0,
+                    a: 0,
+                    b: u64::from(shed),
+                },
+                &[
+                    ("demand_rps", demand[ti]),
+                    ("capacity_rps", capacity),
+                    ("covered_rps", used),
+                    ("fault_active", f64::from(u8::from(fault_active))),
+                ],
+            );
         }
     }
 }
@@ -1703,6 +1852,7 @@ fn epoch_tick(
         && t.baseline_goodput > 0.0
         && goodput < opts.retune_threshold * t.baseline_goodput
     {
+        let prof_t0 = sh.prof_start();
         // observed database: contention-free costs at the tenant's service
         // batch size (what dispatch actually charges), rescaled by the
         // per-EP slowdown the replica experienced — written into the
@@ -1723,14 +1873,25 @@ fn epoch_tick(
         t.epochs_since_retune = 0;
         retuned = true;
         let changed = best != t.config;
-        sh.control(ControlRecord {
-            t_s: now,
-            kind: ControlKind::Retune,
-            tenant: ti as u32,
-            shard: shard_ix as u32,
-            a: trials,
-            b: u64::from(changed),
-        });
+        sh.control(
+            ControlRecord {
+                t_s: now,
+                kind: ControlKind::Retune,
+                tenant: ti as u32,
+                shard: shard_ix as u32,
+                a: trials,
+                b: u64::from(changed),
+            },
+            &[
+                ("goodput_rps", goodput),
+                ("baseline_rps", t.baseline_goodput),
+                ("threshold_rps", opts.retune_threshold * t.baseline_goodput),
+                ("queued", t.queued() as f64),
+                ("epoch_rejected", t.ep_rejected as f64),
+                ("epoch_dropped", t.ep_dropped as f64),
+                ("backlog", backlog as f64),
+            ],
+        );
         if changed {
             apply_reconfig(
                 spec,
@@ -1744,6 +1905,7 @@ fn epoch_tick(
                 opts.duration_s,
             );
         }
+        sh.prof_end(Span::Retune, prof_t0);
     }
     if !retuned {
         t.epochs_since_retune = t.epochs_since_retune.saturating_add(1);
@@ -1796,14 +1958,17 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
             sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
                 format!("{now:.6} scale {} r{si} parked", t.spec.name)
             });
-            sh.control(ControlRecord {
-                t_s: now,
-                kind: ControlKind::Scale,
-                tenant: ti as u32,
-                shard: si as u32,
-                a: 0,
-                b: ReplicaState::Parked.code(),
-            });
+            sh.control(
+                ControlRecord {
+                    t_s: now,
+                    kind: ControlKind::Scale,
+                    tenant: ti as u32,
+                    shard: si as u32,
+                    a: 0,
+                    b: ReplicaState::Parked.code(),
+                },
+                &[("drained_backlog", 0.0)],
+            );
         }
     }
     // 2. observe the epoch that just closed. The shed meter is the
@@ -1885,14 +2050,23 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
                     format!("{now:.6} scale {} r{si} active", t.spec.name)
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Scale,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: 0,
-                    b: ReplicaState::Active.code(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Scale,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: 0,
+                        b: ReplicaState::Active.code(),
+                    },
+                    &[
+                        ("offered_rps", load.offered_rate),
+                        ("shed", load.shed as f64),
+                        ("queued", load.queued as f64),
+                        ("active", load.active as f64),
+                        ("active_capacity_rps", load.active_capacity),
+                    ],
+                );
             }
             for srt in &mut t.shards {
                 srt.credit = 0.0;
@@ -1929,14 +2103,24 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
                 sh.note(now, 6, pack_ts(ti, si), to.code(), || {
                     format!("{now:.6} scale {} r{si} {}", t.spec.name, to.name())
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Scale,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: 0,
-                    b: to.code(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Scale,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: 0,
+                        b: to.code(),
+                    },
+                    &[
+                        ("offered_rps", load.offered_rate),
+                        ("shed", load.shed as f64),
+                        ("queued", load.queued as f64),
+                        ("active", load.active as f64),
+                        ("active_capacity_rps", load.active_capacity),
+                        ("weakest_active_rps", load.weakest_active),
+                    ],
+                );
                 for srt in &mut t.shards {
                     srt.credit = 0.0;
                 }
@@ -1969,6 +2153,7 @@ fn rehome_replica(
     opts: &ServeOptions,
 ) {
     debug_assert!(!eps.is_empty(), "rehome needs at least one EP");
+    let prof_t0 = sh.prof_start();
     let model = CostModel::default();
     let orphans = detach_replica(t, sh);
     let subplat = plat.subset(&eps);
@@ -1994,6 +2179,7 @@ fn rehome_replica(
     t.ep_map = eps;
     requeue_orphans(spec, t, orphans);
     freeze_replica(t, sh, ti, shard_ix, now, opts.reconfig_penalty_s, opts.duration_s);
+    sh.prof_end(Span::DrainMigrate, prof_t0);
 }
 
 /// The elastic control loop, run at every epoch tick when
@@ -2069,7 +2255,9 @@ fn elastic_tick(
         });
         caps.push(t.shards.len());
     }
+    let prof_t0 = sh.prof_start();
     let plan = coplan::coplan_observed_with(plat, &specs, &demands, &caps, 1, cache)?;
+    sh.prof_end(Span::Coplan, prof_t0);
     // live objective in the same units as the plan's: Σ effective weight ×
     // analytic capacity of the replicas that can actually serve. Both
     // sides are scored under the same demand factors — capacity parked on
@@ -2126,14 +2314,17 @@ fn elastic_tick(
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Active.code(), || {
                     format!("{now:.6} scale {} r{si} active", t.spec.name)
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Scale,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: 0,
-                    b: ReplicaState::Active.code(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Scale,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: 0,
+                        b: ReplicaState::Active.code(),
+                    },
+                    &[("revived", 1.0)],
+                );
             }
         }
         // 2. surplus replicas: migrate their backlog into the surviving
@@ -2141,6 +2332,7 @@ fn elastic_tick(
         let n_layers = t.spec.net.len();
         for si in m..t.shards.len() {
             let orphans = detach_replica(&mut t.shards[si], sh);
+            let n_orphans = orphans.len();
             for (k, ix) in orphans.into_iter().enumerate() {
                 let (id, arr, ld) = {
                     let r = &t.shards[si].arena[ix as usize];
@@ -2173,14 +2365,17 @@ fn elastic_tick(
                 sh.note(now, 6, pack_ts(ti, si), ReplicaState::Parked.code(), || {
                     format!("{now:.6} scale {} r{si} parked", t.spec.name)
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Scale,
-                    tenant: ti as u32,
-                    shard: si as u32,
-                    a: 0,
-                    b: ReplicaState::Parked.code(),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Scale,
+                        tenant: ti as u32,
+                        shard: si as u32,
+                        a: 0,
+                        b: ReplicaState::Parked.code(),
+                    },
+                    &[("surplus", 1.0), ("migrated_backlog", n_orphans as f64)],
+                );
             }
         }
         debug_assert!(t.n_active >= 1, "a re-partition never leaves a tenant unservable");
@@ -2197,14 +2392,24 @@ fn elastic_tick(
                 m
             )
         });
-        sh.control(ControlRecord {
-            t_s: now,
-            kind: ControlKind::Repartition,
-            tenant: ti as u32,
-            shard: m as u32,
-            a: alloc.eps.len() as u64,
-            b: alloc.predicted.to_bits(),
-        });
+        sh.control(
+            ControlRecord {
+                t_s: now,
+                kind: ControlKind::Repartition,
+                tenant: ti as u32,
+                shard: m as u32,
+                a: alloc.eps.len() as u64,
+                b: alloc.predicted.to_bits(),
+            },
+            &[
+                ("live_objective", live),
+                ("plan_objective", plan.objective()),
+                ("min_gain_frac", opts.elastic.min_gain_frac),
+                ("offered_rps", demands[ti].offered_rate),
+                ("shed_rps", demands[ti].shed_rate),
+                ("backlog", demands[ti].backlog as f64),
+            ],
+        );
         // queues moved across arenas and stage structures changed:
         // settle every replica of the tenant
         for si in 0..t.shards.len() {
@@ -2243,8 +2448,22 @@ pub fn serve(
     tenants: Vec<(TenantSpec, PipelineConfig)>,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
-    let (report, _) = serve_inner(plat, tenants, opts, None)?;
+    let (report, _, _) = serve_inner(plat, tenants, opts, None, false)?;
     Ok(report)
+}
+
+/// [`serve`] with the telemetry plane on: runs the identical simulation
+/// (same `log_hash` — the observer taps the event funnel *beside* the
+/// hash fold, never through it) and additionally returns the
+/// [`ObsReport`]: per-epoch utilization samples, the control-plane
+/// causality journal, the Prometheus snapshot and the self-profile.
+pub fn serve_observed(
+    plat: &Platform,
+    tenants: Vec<(TenantSpec, PipelineConfig)>,
+    opts: &ServeOptions,
+) -> Result<(ServeReport, ObsReport)> {
+    let (report, _, obs) = serve_inner(plat, tenants, opts, None, true)?;
+    Ok((report, obs.expect("requested observer present")))
 }
 
 /// [`serve`] with the flight recorder on: runs the identical simulation
@@ -2258,21 +2477,39 @@ pub fn serve_traced(
     opts: &ServeOptions,
 ) -> Result<(ServeReport, Trace)> {
     let inputs = tenants.clone();
-    let (report, capture) = serve_inner(plat, tenants, opts, Some(Capture::new()))?;
+    let (report, capture, _) = serve_inner(plat, tenants, opts, Some(Capture::new()), false)?;
     let capture = capture.unwrap_or_default();
     let trace = Trace::assemble(plat.clone(), inputs, opts.clone(), capture, &report);
     Ok((report, trace))
 }
 
-/// The engine body behind [`serve`] and [`serve_traced`]: simulate, and
-/// when `capture` is `Some`, record every hashed event and control-plane
-/// decision into it.
+/// [`serve_traced`] and [`serve_observed`] in one run: record the trace
+/// *and* sample telemetry. Used by `serve --record ... --metrics ...`,
+/// and by the invariance tests proving the three planes never interfere.
+pub fn serve_traced_observed(
+    plat: &Platform,
+    tenants: Vec<(TenantSpec, PipelineConfig)>,
+    opts: &ServeOptions,
+) -> Result<(ServeReport, Trace, ObsReport)> {
+    let inputs = tenants.clone();
+    let (report, capture, obs) =
+        serve_inner(plat, tenants, opts, Some(Capture::new()), true)?;
+    let capture = capture.unwrap_or_default();
+    let trace = Trace::assemble(plat.clone(), inputs, opts.clone(), capture, &report);
+    Ok((report, trace, obs.expect("requested observer present")))
+}
+
+/// The engine body behind [`serve`], [`serve_observed`] and
+/// [`serve_traced`]: simulate; when `capture` is `Some`, record every
+/// hashed event and control-plane decision into it; when `want_obs`,
+/// sample telemetry beside the funnel and return the [`ObsReport`].
 fn serve_inner(
     plat: &Platform,
     tenants: Vec<(TenantSpec, PipelineConfig)>,
     opts: &ServeOptions,
     mut capture: Option<Capture>,
-) -> Result<(ServeReport, Option<Capture>)> {
+    want_obs: bool,
+) -> Result<(ServeReport, Option<Capture>, Option<ObsReport>)> {
     if tenants.is_empty() {
         bail!("serve: at least one tenant required");
     }
@@ -2425,6 +2662,8 @@ fn serve_inner(
         log: Vec::new(),
         record_log: opts.record_log,
         capture,
+        obs: None,
+        now: 0.0,
         ep_failed: vec![false; plat.n_eps()],
         ep_stall_until: vec![0.0; plat.n_eps()],
         ep_throttle: vec![1.0; plat.n_eps()],
@@ -2433,6 +2672,33 @@ fn serve_inner(
         link_throttle: 1.0,
         link_throttle_until: 0.0,
     };
+    if want_obs {
+        let roster: Vec<(String, usize)> =
+            rts.iter().map(|t| (t.spec.name.clone(), t.shards.len())).collect();
+        let mut o = Obs::new(plat.n_eps(), &roster);
+        // the co-plan decisions pre-date the first event; journal them at
+        // t = 0 so the causality timeline starts with the initial
+        // allocation (mirrors the Coplan seeds the capture records)
+        if let Some(plan) = &cluster_plan {
+            for (ti, alloc) in plan.allocations.iter().enumerate() {
+                o.journal.push(
+                    &ControlRecord {
+                        t_s: 0.0,
+                        kind: ControlKind::Coplan,
+                        tenant: ti as u32,
+                        shard: alloc.placements.len() as u32,
+                        a: alloc.eps.len() as u64,
+                        b: alloc.predicted.to_bits(),
+                    },
+                    &[
+                        ("predicted_throughput", alloc.predicted),
+                        ("weight", rts[ti].spec.weight),
+                    ],
+                );
+            }
+        }
+        sh.obs = Some(Box::new(o));
+    }
 
     // Failover and elastic re-planning share one subset-tuning memo: the
     // second failover onto the same surviving subset — and every elastic
@@ -2468,6 +2734,7 @@ fn serve_inner(
     let full_rescan = opts.pump == PumpMode::FullRescan;
     let mut elastic_state = ElasticState::default();
     let mut truncated = false;
+    let pump_t0 = sh.prof_start();
     while let Some(Reverse(ev)) = sh.heap.pop() {
         sh.n_events += 1;
         if sh.n_events > opts.max_events {
@@ -2475,6 +2742,7 @@ fn serve_inner(
             break;
         }
         let now = ev.t;
+        sh.now = now;
         match ev.kind {
             EvKind::Arrival { tenant } => {
                 let t = &mut rts[tenant];
@@ -2498,11 +2766,13 @@ fn serve_inner(
                     // shed arrivals, so conservation holds untouched)
                     srt.rejected += 1;
                     srt.ep_rejected += 1;
+                    sh.obs_admit(tenant, obs::ADM_SHED);
                 } else if srt.stages[0].queue.len() >= cap {
                     match admission {
                         AdmissionPolicy::Reject => {
                             srt.rejected += 1;
                             srt.ep_rejected += 1;
+                            sh.obs_admit(tenant, obs::ADM_REJECT);
                         }
                         AdmissionPolicy::DropOldest => {
                             if let Some(old) = srt.stages[0].queue.pop_front() {
@@ -2510,11 +2780,13 @@ fn serve_inner(
                             }
                             srt.dropped += 1;
                             srt.ep_dropped += 1;
+                            sh.obs_admit(tenant, obs::ADM_DROP);
                             let ix = srt.alloc(id, now);
                             srt.stages[0].queue.push_back(ix);
                         }
                     }
                 } else {
+                    sh.obs_admit(tenant, obs::ADM_ADMIT);
                     let ix = srt.alloc(id, now);
                     srt.stages[0].queue.push_back(ix);
                     let l = srt.stages[0].queue.len();
@@ -2561,10 +2833,7 @@ fn serve_inner(
                             srt.arena[ix as usize].layers_done = la;
                         }
                         let gep = srt.ep_map[ep];
-                        sh.ep_busy[gep] = sh.ep_busy[gep].saturating_sub(1);
-                        if uses_link {
-                            sh.link_busy = sh.link_busy.saturating_sub(1);
-                        }
+                        sh.ep_release(gep, uses_link);
                         srt.ep_slow[ep] =
                             (1.0 - EWMA_GAIN) * srt.ep_slow[ep] + EWMA_GAIN * factor;
                     }
@@ -2644,6 +2913,10 @@ fn serve_inner(
                         full_rescan,
                     )?;
                 }
+                // telemetry sampling runs dead last, after every control
+                // loop mutated what it will observe — pure reads, so the
+                // simulation cannot see whether it ran
+                obs_epoch_sample(&rts, &mut sh, now, plan_cache.stats());
                 let next = now + opts.control_epoch_s;
                 if next <= opts.duration_s {
                     sh.schedule(next, EvKind::Epoch);
@@ -2659,14 +2932,20 @@ fn serve_inner(
                         fe.kind.name()
                     )
                 });
-                sh.control(ControlRecord {
-                    t_s: now,
-                    kind: ControlKind::Fault,
-                    tenant: 0,
-                    shard: ix as u32,
-                    a: code,
-                    b: u64::from(begin),
-                });
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Fault,
+                        tenant: 0,
+                        shard: ix as u32,
+                        a: code,
+                        b: u64::from(begin),
+                    },
+                    &[
+                        ("begin", f64::from(u8::from(begin))),
+                        ("window_s", fe.kind.window_s().unwrap_or(f64::INFINITY)),
+                    ],
+                );
                 if begin {
                     // apply the fault state, then fail affected replicas
                     // over when the fault takes EPs down
@@ -2740,7 +3019,10 @@ fn serve_inner(
         }
     }
 
+    sh.prof_end(Span::Pump, pump_t0);
+
     let capture = sh.capture.take();
+    let obs_report = sh.obs.take().map(|o| o.finish(plan_cache.stats()));
     let tenants = rts.into_iter().map(tenant_report).collect();
     let report = ServeReport {
         duration_s: opts.duration_s,
@@ -2749,8 +3031,60 @@ fn serve_inner(
         log_hash: sh.log_hash,
         event_log: sh.log,
         truncated,
+        plan_cache: plan_cache.stats(),
     };
-    Ok((report, capture))
+    Ok((report, capture, obs_report))
+}
+
+/// Sample the telemetry registry into one [`EpochSample`]: flush the
+/// utilization meters over the window that just closed and snapshot every
+/// tenant and replica. Pure reads of the runtime state — a no-op when the
+/// observer is off, and invisible to the simulation either way.
+fn obs_epoch_sample(rts: &[TenantRt], sh: &mut Shared, now: f64, cache: CacheStats) {
+    let Some(mut o) = sh.obs.take() else { return };
+    let t0 = Prof::start();
+    let (eps, link) = o.util.flush(now, &sh.ep_busy, sh.link_busy);
+    let mut tenants = Vec::with_capacity(rts.len());
+    for (ti, t) in rts.iter().enumerate() {
+        let mut ts = TenantSample {
+            offered: 0,
+            completed: 0,
+            slo_ok: 0,
+            rejected: 0,
+            dropped: 0,
+            goodput: 0.0,
+            throughput: 0.0,
+            backlog: 0,
+            load_shed: t.load_shed,
+            replicas: Vec::with_capacity(t.shards.len()),
+        };
+        for (si, srt) in t.shards.iter().enumerate() {
+            if let Some(e) = srt.epochs.last() {
+                ts.offered += e.offered;
+                ts.completed += e.completed;
+                ts.slo_ok += e.slo_ok;
+                ts.rejected += e.rejected;
+                ts.dropped += e.dropped;
+                ts.goodput += e.goodput;
+                ts.throughput += e.throughput;
+                ts.backlog += e.backlog;
+            }
+            ts.replicas.push(ReplicaSample {
+                state: srt.state.name(),
+                dead: srt.dead,
+                eps: srt.ep_map.len() as u64,
+                queued: srt.queued(),
+                stage_queue_hw: o.take_queue_hw(ti, si),
+                slab_live: (srt.arena.len() - srt.free_slots.len()) as u64,
+                slab_cap: srt.arena.len() as u64,
+                retuned: srt.epochs.last().is_some_and(|e| e.retuned),
+            });
+        }
+        tenants.push(ts);
+    }
+    o.push_sample(EpochSample { t_s: now, n_events: sh.n_events, cache, eps, link, tenants });
+    o.prof.add(Span::Sample, t0);
+    sh.obs = Some(o);
 }
 
 /// Fold a tenant runtime into its report: per-replica reports (configs

@@ -50,6 +50,12 @@
 //!   replay ([`replay_full`], `serve --replay`) and arrivals-only what-if
 //!   re-simulation under a different policy ([`replay_whatif`],
 //!   `--what-if shards=K,balancer=P,...`);
+//! * [`obs`] — the telemetry plane: allocation-free metrics registry,
+//!   per-epoch utilization time series, control-plane causality journal
+//!   and engine self-profiling ([`serve_observed`], `serve --metrics` /
+//!   `--prom`), plus retroactive trace analytics ([`replay_observed`],
+//!   `trace analyze`) — all derived **beside** the event-hash funnel, so
+//!   `log_hash` is byte-identical with telemetry on or off;
 //! * [`slo`] — streaming latency-quantile sketch, goodput and Jain
 //!   fairness.
 //!
@@ -60,6 +66,7 @@ pub mod arrivals;
 pub mod cluster;
 pub mod engine;
 pub mod fault;
+pub mod obs;
 pub mod shard;
 pub mod slo;
 pub mod sweep;
@@ -71,16 +78,18 @@ pub use cluster::{
     AutoscaleOptions, ClusterPlan, ElasticOptions, ReplicaState, ScaleEvent, TenantDemand,
 };
 pub use engine::{
-    serve, serve_traced, EpochStats, PumpMode, ServeOptions, ServeReport, ShardReport,
-    TenantReport,
+    serve, serve_observed, serve_traced, serve_traced_observed, EpochStats, PumpMode,
+    ServeOptions, ServeReport, ShardReport, TenantReport,
 };
 pub use fault::{FaultEvent, FaultKind, FaultScript};
+pub use obs::{EpochSample, Journal, JournalEntry, ObsReport, ProfReport, Registry};
 pub use shard::{plan_shards, plan_shards_with, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};
 pub use sweep::{run_sweep, whatif_grid, Scenario, ScenarioStats, SweepOutcome};
 pub use tenant::{AdmissionPolicy, TenantSpec};
 pub use trace::{
-    replay_full, replay_whatif, Capture, ControlKind, ControlRecord, Trace, TraceEvent, WhatIf,
+    replay_full, replay_observed, replay_whatif, Capture, ControlKind, ControlRecord, Trace,
+    TraceEvent, WhatIf,
 };
 
 use crate::explore::shisha::{ShishaExplorer, ShishaOptions};

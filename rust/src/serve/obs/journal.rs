@@ -1,0 +1,90 @@
+//! Control-plane causality journal.
+//!
+//! Every control decision the engine hashes into the flight-recorder
+//! control section ([`ControlRecord`]) answers *what* happened; the
+//! journal records *why* — the triggering signals the control loop read
+//! immediately before deciding (slowdown EWMAs, demand factors, pressure
+//! and slack counters, plan-objective gaps vs `min_gain_frac`). Entries
+//! live **beside** the hashed records: the journal is capture-style
+//! telemetry and never feeds `log_hash`, so journaled runs stay
+//! byte-identical to bare ones.
+//!
+//! Signal names are `&'static str` supplied at the decision site, so a
+//! journal push costs one `Vec` of `(name, f64)` pairs per *decision* —
+//! decisions fire at control-epoch cadence, not per event, so this is off
+//! the hot path by construction.
+
+use crate::serve::trace::{ControlKind, ControlRecord};
+
+/// One journaled decision: the hashed control record plus the signals
+/// that triggered it.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    /// Simulated decision time, seconds.
+    pub t_s: f64,
+    /// Which control mechanism fired.
+    pub kind: ControlKind,
+    /// Tenant index.
+    pub tenant: u32,
+    /// Replica index (mechanism-specific; see [`ControlKind`] docs).
+    pub shard: u32,
+    /// Mechanism-specific payload `a` (matches the hashed record).
+    pub a: u64,
+    /// Mechanism-specific payload `b` (matches the hashed record).
+    pub b: u64,
+    /// Named triggering signals, in the order the decision site read them.
+    pub signals: Vec<(&'static str, f64)>,
+}
+
+/// Append-only decision journal for one serve run.
+#[derive(Debug, Clone, Default)]
+pub struct Journal {
+    /// Entries in decision order (simulated time is non-decreasing).
+    pub entries: Vec<JournalEntry>,
+}
+
+impl Journal {
+    /// Journal a control decision beside its hashed record.
+    pub fn push(&mut self, rec: &ControlRecord, signals: &[(&'static str, f64)]) {
+        self.entries.push(JournalEntry {
+            t_s: rec.t_s,
+            kind: rec.kind,
+            tenant: rec.tenant,
+            shard: rec.shard,
+            a: rec.a,
+            b: rec.b,
+            signals: signals.to_vec(),
+        });
+    }
+
+    /// Entries with `prev < t_s <= upto` — the decisions belonging to the
+    /// epoch sample closing at `upto` (serve-start decisions at `t = 0`
+    /// belong to the first sample via `prev = -inf`).
+    pub fn in_window(&self, prev: f64, upto: f64) -> impl Iterator<Item = &JournalEntry> {
+        self.entries.iter().filter(move |e| e.t_s > prev && e.t_s <= upto)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t_s: f64, kind: ControlKind) -> ControlRecord {
+        ControlRecord { t_s, kind, tenant: 0, shard: 0, a: 1, b: 2 }
+    }
+
+    #[test]
+    fn windows_partition_the_timeline() {
+        let mut j = Journal::default();
+        j.push(&rec(0.0, ControlKind::Coplan), &[("eps", 4.0)]);
+        j.push(&rec(5.0, ControlKind::Retune), &[("goodput", 10.0), ("baseline", 12.0)]);
+        j.push(&rec(10.0, ControlKind::Repartition), &[]);
+        let first: Vec<_> = j.in_window(f64::NEG_INFINITY, 5.0).collect();
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].kind, ControlKind::Coplan);
+        assert_eq!(first[1].signals[1], ("baseline", 12.0));
+        let second: Vec<_> = j.in_window(5.0, 10.0).collect();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].kind, ControlKind::Repartition);
+    }
+}

@@ -1,0 +1,758 @@
+//! `serve/obs` — the telemetry plane: zero-perturbation observability for
+//! the serving engine.
+//!
+//! Three cooperating pieces, all derived **beside** the event-hash funnel
+//! (the same discipline as the flight recorder): a run with telemetry on
+//! produces the byte-identical `log_hash`, event log, report and golden
+//! fingerprints as one with telemetry off — pinned by
+//! `tests/obs_invariance.rs`.
+//!
+//! * [`registry`] — allocation-free metrics registry: counters, gauges and
+//!   log₂ histograms pre-registered at serve start, updated by index on
+//!   the hot path;
+//! * [`journal`] — control-plane causality journal: every hashed
+//!   Retune/Coplan/Scale/Fault/Failover/Shed/Repartition decision is
+//!   journaled with the signals that triggered it;
+//! * [`prof`] — monotonic-clock self-profiling spans (event pump, settle,
+//!   re-tune, coplan, drain/migrate, sampling), excluded from all hashes
+//!   *and* from the deterministic exports.
+//!
+//! At every control-epoch tick the engine snapshots the registry and
+//! utilization meters into an [`EpochSample`]; the horizon yields an
+//! [`ObsReport`] with the sample series, the journal, a Prometheus text
+//! snapshot and the self-profile. `trace analyze FILE.trace` re-derives
+//! the same report retroactively from any recorded trace (v1–v3) by
+//! re-simulating through the same sink, so live `--metrics` JSONL and
+//! trace-derived JSONL are byte-for-byte equal.
+//!
+//! # JSONL schema (`serve --metrics FILE.jsonl`)
+//!
+//! One JSON object per line, schema-versioned. Per epoch sample:
+//!
+//! ```json
+//! {
+//!   "schema": "shisha-obs-v1",
+//!   "t_s": 5e0,              // epoch tick, simulated seconds
+//!   "n_events": 1234,        // events processed so far
+//!   "cache": {"hits": 3, "misses": 1, "entries": 1},   // PlanCache
+//!   "eps": [{"busy_frac": 4.2e-1, "avg_inflight": 6e-1}, ...],
+//!   "link": {"busy_frac": 1e-1, "avg_inflight": 2e-1},
+//!   "tenants": [
+//!     {"name": "a", "offered": 10, "completed": 9, "slo_ok": 9,
+//!      "rejected": 0, "dropped": 1, "goodput": 1.8e0,
+//!      "throughput": 1.8e0, "backlog": 0, "load_shed": false,
+//!      "replicas": [
+//!        {"state": "active", "dead": false, "eps": 2, "queued": 0,
+//!         "stage_queue_hw": [3, 1], "slab_live": 1, "slab_cap": 8,
+//!         "retuned": false}, ...]}
+//!   ],
+//!   "decisions": [ ... ]     // journal entries in (prev, t_s]
+//! }
+//! ```
+//!
+//! `busy_frac` is the fraction of the epoch window the resource had at
+//! least one service in flight; `avg_inflight` the time-average of its
+//! in-flight count. `stage_queue_hw` is the per-stage queue-depth
+//! high-water since the previous sample; `slab_live`/`slab_cap` the
+//! request-arena occupancy at the tick. Each journal decision renders as
+//!
+//! ```json
+//! {"t_s": 5e0, "kind": "retune", "tenant": 0, "shard": 1,
+//!  "a": 24, "b": 1, "signals": {"goodput": 1.8e0, "baseline": 2e0}}
+//! ```
+//!
+//! Decisions after the last epoch tick (e.g. a fault at the horizon) are
+//! appended as one trailing `{"schema": "shisha-obs-v1", "record":
+//! "tail", "decisions": [...]}` line. Wall-clock self-profiling is
+//! deliberately **absent** from the JSONL and the Prometheus snapshot —
+//! both surfaces must be bit-reproducible from a trace.
+
+pub mod journal;
+pub mod prof;
+pub mod registry;
+
+pub use journal::{Journal, JournalEntry};
+pub use prof::{Prof, ProfReport, ProfRow, Span};
+pub use registry::{CounterId, GaugeId, HistId, Registry, HIST_BUCKETS};
+
+use crate::explore::CacheStats;
+use crate::metrics::emit;
+use crate::serve::trace::TraceEvent;
+
+/// Admission outcome codes for [`Obs::on_admission`].
+pub const ADM_ADMIT: usize = 0;
+/// Rejected at the entry queue (bounded queue full, policy Reject).
+pub const ADM_REJECT: usize = 1;
+/// Admitted then displaced (policy DropOldest).
+pub const ADM_DROP: usize = 2;
+/// Rejected by graceful-degradation load shedding.
+pub const ADM_SHED: usize = 3;
+const ADM_NAMES: [&str; 4] = ["admit", "reject", "drop", "shed"];
+
+/// Time-integrating utilization meter for the EPs and the inter-chiplet
+/// link. Fed from the engine's busy-counter transitions (exact event
+/// times), flushed at every epoch tick — a pure function of the event
+/// stream, so live and trace-derived series agree bit-for-bit.
+#[derive(Debug, Default)]
+pub struct UtilMeter {
+    win_start: f64,
+    ep_last: Vec<f64>,
+    ep_busy_s: Vec<f64>,
+    ep_units_s: Vec<f64>,
+    link_last: f64,
+    link_busy_s: f64,
+    link_units_s: f64,
+}
+
+impl UtilMeter {
+    fn new(n_eps: usize) -> Self {
+        Self {
+            win_start: 0.0,
+            ep_last: vec![0.0; n_eps],
+            ep_busy_s: vec![0.0; n_eps],
+            ep_units_s: vec![0.0; n_eps],
+            link_last: 0.0,
+            link_busy_s: 0.0,
+            link_units_s: 0.0,
+        }
+    }
+
+    /// Integrate EP `gep` up to `now` at its *pre-transition* in-flight
+    /// count `old_units`. Call immediately before mutating the counter.
+    #[inline]
+    pub fn ep_touch(&mut self, gep: usize, old_units: u32, now: f64) {
+        let dt = now - self.ep_last[gep];
+        if dt > 0.0 {
+            if old_units > 0 {
+                self.ep_busy_s[gep] += dt;
+            }
+            self.ep_units_s[gep] += dt * old_units as f64;
+        }
+        self.ep_last[gep] = now;
+    }
+
+    /// Same for the inter-chiplet link.
+    #[inline]
+    pub fn link_touch(&mut self, old_units: u32, now: f64) {
+        let dt = now - self.link_last;
+        if dt > 0.0 {
+            if old_units > 0 {
+                self.link_busy_s += dt;
+            }
+            self.link_units_s += dt * old_units as f64;
+        }
+        self.link_last = now;
+    }
+
+    /// Close the window at `now` using the *current* counter values, emit
+    /// per-EP + link utilization, and start the next window.
+    pub fn flush(&mut self, now: f64, ep_busy: &[u32], link_busy: u32) -> (Vec<EpSample>, EpSample) {
+        let win = now - self.win_start;
+        let mut eps = Vec::with_capacity(ep_busy.len());
+        for (gep, &units) in ep_busy.iter().enumerate() {
+            self.ep_touch(gep, units, now);
+            let (busy_frac, avg_inflight) = if win > 0.0 {
+                (self.ep_busy_s[gep] / win, self.ep_units_s[gep] / win)
+            } else {
+                (0.0, 0.0)
+            };
+            eps.push(EpSample { busy_frac, avg_inflight });
+            self.ep_busy_s[gep] = 0.0;
+            self.ep_units_s[gep] = 0.0;
+        }
+        self.link_touch(link_busy, now);
+        let link = if win > 0.0 {
+            EpSample {
+                busy_frac: self.link_busy_s / win,
+                avg_inflight: self.link_units_s / win,
+            }
+        } else {
+            EpSample { busy_frac: 0.0, avg_inflight: 0.0 }
+        };
+        self.link_busy_s = 0.0;
+        self.link_units_s = 0.0;
+        self.win_start = now;
+        (eps, link)
+    }
+}
+
+/// Utilization of one EP (or the link) over one epoch window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpSample {
+    /// Fraction of the window with at least one service in flight.
+    pub busy_frac: f64,
+    /// Time-average in-flight count over the window.
+    pub avg_inflight: f64,
+}
+
+/// One replica's slice of an epoch sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaSample {
+    /// Autoscaler state name at the tick (`active`/`draining`/`parked`).
+    pub state: &'static str,
+    /// True when the replica's whole home EP set is faulted.
+    pub dead: bool,
+    /// EPs the replica currently runs on.
+    pub eps: u64,
+    /// Requests waiting in its stage queues at the tick.
+    pub queued: u64,
+    /// Per-stage queue-depth high-water since the previous sample.
+    pub stage_queue_hw: Vec<u32>,
+    /// Live requests in the slab arena at the tick.
+    pub slab_live: u64,
+    /// Slab arena capacity (high-water of allocated slots).
+    pub slab_cap: u64,
+    /// Whether a warm re-tune ran this epoch.
+    pub retuned: bool,
+}
+
+/// One tenant's slice of an epoch sample (epoch-delta counters summed
+/// across its replicas).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSample {
+    /// Arrivals offered during the epoch.
+    pub offered: u64,
+    /// Completions during the epoch.
+    pub completed: u64,
+    /// SLO-conform completions during the epoch.
+    pub slo_ok: u64,
+    /// Rejections during the epoch.
+    pub rejected: u64,
+    /// DropOldest drops during the epoch.
+    pub dropped: u64,
+    /// SLO goodput over the epoch, requests/second.
+    pub goodput: f64,
+    /// Raw completion throughput over the epoch, requests/second.
+    pub throughput: f64,
+    /// Backlog at the tick.
+    pub backlog: u64,
+    /// Whether graceful degradation is shedding this tenant.
+    pub load_shed: bool,
+    /// Per-replica samples.
+    pub replicas: Vec<ReplicaSample>,
+}
+
+/// One control-epoch telemetry snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochSample {
+    /// Epoch tick, simulated seconds.
+    pub t_s: f64,
+    /// Events processed up to the tick.
+    pub n_events: u64,
+    /// Planner memo counters at the tick.
+    pub cache: CacheStats,
+    /// Per-EP utilization over the closed window (global EP ids).
+    pub eps: Vec<EpSample>,
+    /// Inter-chiplet link utilization over the closed window.
+    pub link: EpSample,
+    /// Per-tenant samples, in input order.
+    pub tenants: Vec<TenantSample>,
+}
+
+/// The live telemetry sink: owned by the engine (boxed inside its shared
+/// state) only when telemetry was requested, so unobserved runs pay one
+/// `Option` branch per touch.
+#[derive(Debug)]
+pub struct Obs {
+    /// The flat metrics registry.
+    pub reg: Registry,
+    /// The decision journal.
+    pub journal: Journal,
+    /// Self-profiling accumulators.
+    pub prof: Prof,
+    /// EP/link utilization integrator.
+    pub util: UtilMeter,
+    samples: Vec<EpochSample>,
+    tenant_names: Vec<String>,
+    /// Per-[tenant][replica][stage] queue-depth high-water since the last
+    /// sample; inner vecs sized lazily (stage counts differ per replica).
+    queue_hw: Vec<Vec<Vec<u32>>>,
+    // Pre-registered ids (hot path updates by index only).
+    tag_ids: [CounterId; 9],
+    adm_ids: Vec<[CounterId; 4]>,
+    batch_hist: HistId,
+    queue_hist: HistId,
+    samples_c: CounterId,
+    ep_busy_g: Vec<GaugeId>,
+    link_busy_g: GaugeId,
+    tenant_backlog_g: Vec<GaugeId>,
+    tenant_goodput_g: Vec<GaugeId>,
+    cache_hits_c: CounterId,
+    cache_misses_c: CounterId,
+    cache_entries_g: GaugeId,
+}
+
+impl Obs {
+    /// Pre-register every series: `n_eps` global EPs, one `(name,
+    /// n_replicas)` pair per tenant. This is the only allocating phase.
+    pub fn new(n_eps: usize, tenants: &[(String, usize)]) -> Self {
+        let mut reg = Registry::new();
+        let tag_ids = std::array::from_fn(|tag| {
+            let name = if tag == 0 { "other" } else { TraceEvent::tag_name(tag as u64) };
+            reg.counter("shisha_events_total", format!("tag=\"{name}\""))
+        });
+        let mut adm_ids = Vec::with_capacity(tenants.len());
+        for (name, _) in tenants {
+            adm_ids.push(std::array::from_fn(|o| {
+                reg.counter(
+                    "shisha_admissions_total",
+                    format!("tenant=\"{name}\",outcome=\"{}\"", ADM_NAMES[o]),
+                )
+            }));
+        }
+        let batch_hist = reg.hist("shisha_batch_fill", "");
+        let queue_hist = reg.hist("shisha_queue_depth", "");
+        let samples_c = reg.counter("shisha_epoch_samples_total", "");
+        let ep_busy_g = (0..n_eps)
+            .map(|gep| reg.gauge("shisha_ep_busy_frac", format!("ep=\"{gep}\"")))
+            .collect();
+        let link_busy_g = reg.gauge("shisha_link_busy_frac", "");
+        let tenant_backlog_g = tenants
+            .iter()
+            .map(|(name, _)| reg.gauge("shisha_tenant_backlog", format!("tenant=\"{name}\"")))
+            .collect();
+        let tenant_goodput_g = tenants
+            .iter()
+            .map(|(name, _)| reg.gauge("shisha_tenant_goodput_rps", format!("tenant=\"{name}\"")))
+            .collect();
+        let cache_hits_c = reg.counter("shisha_plan_cache_hits_total", "");
+        let cache_misses_c = reg.counter("shisha_plan_cache_misses_total", "");
+        let cache_entries_g = reg.gauge("shisha_plan_cache_entries", "");
+        Self {
+            reg,
+            journal: Journal::default(),
+            prof: Prof::default(),
+            util: UtilMeter::new(n_eps),
+            samples: Vec::new(),
+            tenant_names: tenants.iter().map(|(n, _)| n.clone()).collect(),
+            queue_hw: tenants.iter().map(|&(_, shards)| vec![Vec::new(); shards]).collect(),
+            tag_ids,
+            adm_ids,
+            batch_hist,
+            queue_hist,
+            samples_c,
+            ep_busy_g,
+            link_busy_g,
+            tenant_backlog_g,
+            tenant_goodput_g,
+            cache_hits_c,
+            cache_misses_c,
+            cache_entries_g,
+        }
+    }
+
+    /// Hot path: one hashed event of tag `tag` went through the funnel.
+    #[inline]
+    pub fn on_event(&mut self, tag: u64) {
+        let ix = if tag <= 8 { tag as usize } else { 0 };
+        self.reg.inc(self.tag_ids[ix]);
+    }
+
+    /// Hot path: one admission decision for tenant `ti` (`ADM_*` code).
+    #[inline]
+    pub fn on_admission(&mut self, ti: usize, outcome: usize) {
+        self.reg.inc(self.adm_ids[ti][outcome]);
+    }
+
+    /// Hot path: a batch of `b` requests entered service.
+    #[inline]
+    pub fn on_batch(&mut self, b: u64) {
+        self.reg.observe(self.batch_hist, b);
+    }
+
+    /// Track the per-stage queue high-water of one replica (settle
+    /// epilogue).
+    #[inline]
+    pub fn queue_mark(&mut self, ti: usize, shard: usize, stage: usize, len: u32) {
+        let hw = &mut self.queue_hw[ti][shard];
+        if hw.len() <= stage {
+            hw.resize(stage + 1, 0);
+        }
+        if len > hw[stage] {
+            hw[stage] = len;
+        }
+    }
+
+    /// Observe a replica's total waiting-queue depth (settle epilogue).
+    #[inline]
+    pub fn queue_total(&mut self, total: u64) {
+        self.reg.observe(self.queue_hist, total);
+    }
+
+    /// Take (and reset) the queue high-water of one replica for a sample.
+    pub fn take_queue_hw(&mut self, ti: usize, shard: usize) -> Vec<u32> {
+        let hw = &mut self.queue_hw[ti][shard];
+        let out = hw.clone();
+        for x in hw.iter_mut() {
+            *x = 0;
+        }
+        out
+    }
+
+    /// Append an epoch sample and mirror its headline series into the
+    /// registry gauges (so the Prometheus snapshot carries the last tick).
+    pub fn push_sample(&mut self, sample: EpochSample) {
+        self.reg.inc(self.samples_c);
+        for (gep, ep) in sample.eps.iter().enumerate() {
+            self.reg.set(self.ep_busy_g[gep], ep.busy_frac);
+        }
+        self.reg.set(self.link_busy_g, sample.link.busy_frac);
+        for (ti, t) in sample.tenants.iter().enumerate() {
+            self.reg.set(self.tenant_backlog_g[ti], t.backlog as f64);
+            self.reg.set(self.tenant_goodput_g[ti], t.goodput);
+        }
+        self.samples.push(sample);
+    }
+
+    /// Number of epoch samples taken so far.
+    pub fn n_samples(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Close the run: fold the final plan-cache counters into the
+    /// registry and freeze everything into an [`ObsReport`].
+    pub fn finish(mut self, cache: CacheStats) -> ObsReport {
+        self.reg.add(self.cache_hits_c, cache.hits);
+        self.reg.add(self.cache_misses_c, cache.misses);
+        self.reg.set(self.cache_entries_g, cache.entries as f64);
+        ObsReport {
+            prom: self.reg.prom(),
+            samples: self.samples,
+            journal: self.journal,
+            prof: self.prof.report(),
+            cache,
+            tenant_names: self.tenant_names,
+        }
+    }
+}
+
+/// The frozen telemetry of one serve run (live or trace-derived).
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    /// Epoch sample series, in tick order.
+    pub samples: Vec<EpochSample>,
+    /// The causality journal.
+    pub journal: Journal,
+    /// Self-profiling breakdown (wall clock; excluded from the
+    /// deterministic exports).
+    pub prof: ProfReport,
+    /// Prometheus text-exposition snapshot at the horizon.
+    pub prom: String,
+    /// Final planner memo counters.
+    pub cache: CacheStats,
+    /// Tenant names, in input order (JSONL row labels).
+    pub tenant_names: Vec<String>,
+}
+
+impl ObsReport {
+    /// Render the epoch series + journal as schema-versioned JSONL —
+    /// the `serve --metrics` surface. Deterministic: byte-identical
+    /// between a live run and `trace analyze` of its recording.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut prev = f64::NEG_INFINITY;
+        for s in &self.samples {
+            out.push_str(&self.sample_json(s, prev));
+            out.push('\n');
+            prev = s.t_s;
+        }
+        let tail: Vec<&JournalEntry> =
+            self.journal.entries.iter().filter(|e| e.t_s > prev).collect();
+        if !tail.is_empty() {
+            out.push_str("{\"schema\":\"shisha-obs-v1\",\"record\":\"tail\",\"decisions\":[");
+            for (i, e) in tail.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&decision_json(e));
+            }
+            out.push_str("]}\n");
+        }
+        out
+    }
+
+    fn sample_json(&self, s: &EpochSample, prev: f64) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::with_capacity(256);
+        let _ = write!(
+            o,
+            "{{\"schema\":\"shisha-obs-v1\",\"t_s\":{},\"n_events\":{}",
+            emit::num(s.t_s),
+            s.n_events
+        );
+        let _ = write!(
+            o,
+            ",\"cache\":{{\"hits\":{},\"misses\":{},\"entries\":{}}}",
+            s.cache.hits, s.cache.misses, s.cache.entries
+        );
+        o.push_str(",\"eps\":[");
+        for (i, ep) in s.eps.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(
+                o,
+                "{{\"busy_frac\":{},\"avg_inflight\":{}}}",
+                emit::num(ep.busy_frac),
+                emit::num(ep.avg_inflight)
+            );
+        }
+        let _ = write!(
+            o,
+            "],\"link\":{{\"busy_frac\":{},\"avg_inflight\":{}}}",
+            emit::num(s.link.busy_frac),
+            emit::num(s.link.avg_inflight)
+        );
+        o.push_str(",\"tenants\":[");
+        for (ti, t) in s.tenants.iter().enumerate() {
+            if ti > 0 {
+                o.push(',');
+            }
+            let name = self.tenant_names.get(ti).map(String::as_str).unwrap_or("");
+            let _ = write!(
+                o,
+                "{{\"name\":{},\"offered\":{},\"completed\":{},\"slo_ok\":{},\
+                 \"rejected\":{},\"dropped\":{},\"goodput\":{},\"throughput\":{},\
+                 \"backlog\":{},\"load_shed\":{}",
+                emit::str_lit(name),
+                t.offered,
+                t.completed,
+                t.slo_ok,
+                t.rejected,
+                t.dropped,
+                emit::num(t.goodput),
+                emit::num(t.throughput),
+                t.backlog,
+                t.load_shed
+            );
+            o.push_str(",\"replicas\":[");
+            for (si, r) in t.replicas.iter().enumerate() {
+                if si > 0 {
+                    o.push(',');
+                }
+                let _ = write!(
+                    o,
+                    "{{\"state\":{},\"dead\":{},\"eps\":{},\"queued\":{},\"stage_queue_hw\":[",
+                    emit::str_lit(r.state),
+                    r.dead,
+                    r.eps,
+                    r.queued
+                );
+                for (qi, q) in r.stage_queue_hw.iter().enumerate() {
+                    if qi > 0 {
+                        o.push(',');
+                    }
+                    let _ = write!(o, "{q}");
+                }
+                let _ = write!(
+                    o,
+                    "],\"slab_live\":{},\"slab_cap\":{},\"retuned\":{}}}",
+                    r.slab_live, r.slab_cap, r.retuned
+                );
+            }
+            o.push_str("]}");
+        }
+        o.push_str("],\"decisions\":[");
+        for (i, e) in self.journal.in_window(prev, s.t_s).enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&decision_json(e));
+        }
+        o.push_str("]}");
+        o
+    }
+
+    /// Human-readable analysis: per-tenant epoch counts and the decision
+    /// timeline with triggering signals — the shared body of `trace
+    /// inspect` and `trace analyze`, also printed after live `--metrics`
+    /// runs.
+    pub fn analysis(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "  epoch samples: {}", self.samples.len());
+        for (ti, name) in self.tenant_names.iter().enumerate() {
+            let epochs = self
+                .samples
+                .iter()
+                .filter(|s| s.tenants.get(ti).is_some_and(|t| !t.replicas.is_empty()))
+                .count();
+            let (mut offered, mut slo_ok) = (0u64, 0u64);
+            for s in &self.samples {
+                if let Some(t) = s.tenants.get(ti) {
+                    offered += t.offered;
+                    slo_ok += t.slo_ok;
+                }
+            }
+            let _ = writeln!(
+                out,
+                "  tenant {name}: {epochs} epochs, offered {offered}, slo_ok {slo_ok}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  plan cache: {} hits / {} misses ({} entries)",
+            self.cache.hits, self.cache.misses, self.cache.entries
+        );
+        if self.journal.entries.is_empty() {
+            let _ = writeln!(out, "  control decisions: none");
+        } else {
+            let _ = writeln!(out, "  control decisions ({}):", self.journal.entries.len());
+            for e in &self.journal.entries {
+                let _ = writeln!(
+                    out,
+                    "    {}",
+                    decision_line(e.t_s, e.kind.name(), e.tenant, e.shard, e.a, e.b, &e.signals)
+                );
+            }
+        }
+        out
+    }
+}
+
+/// One line of the control-decision timeline: decision time in seconds,
+/// mechanism, addressing and payload words, then any triggering signals.
+/// `trace inspect` ([`crate::serve::Trace::describe`], without signals)
+/// and `trace analyze` / live `--metrics` ([`ObsReport::analysis`], with
+/// them) both render through this, so the two commands cannot drift.
+pub fn decision_line(
+    t_s: f64,
+    kind: &str,
+    tenant: u32,
+    shard: u32,
+    a: u64,
+    b: u64,
+    signals: &[(&'static str, f64)],
+) -> String {
+    let sig =
+        signals.iter().map(|(k, v)| format!("{k}={v:.4}")).collect::<Vec<_>>().join(", ");
+    format!(
+        "t={t_s:>9.4}s {kind:<11} tenant={tenant} shard={shard} a={a} b={b}{}{sig}",
+        if sig.is_empty() { "" } else { " | " },
+    )
+}
+
+fn decision_json(e: &JournalEntry) -> String {
+    use std::fmt::Write as _;
+    let mut o = String::with_capacity(96);
+    let _ = write!(
+        o,
+        "{{\"t_s\":{},\"kind\":{},\"tenant\":{},\"shard\":{},\"a\":{},\"b\":{},\"signals\":{{",
+        emit::num(e.t_s),
+        emit::str_lit(e.kind.name()),
+        e.tenant,
+        e.shard,
+        e.a,
+        e.b
+    );
+    for (i, (k, v)) in e.signals.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        let _ = write!(o, "{}:{}", emit::str_lit(k), emit::num(*v));
+    }
+    o.push_str("}}");
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::trace::{ControlKind, ControlRecord};
+
+    fn sample(t_s: f64) -> EpochSample {
+        EpochSample {
+            t_s,
+            n_events: 10,
+            cache: CacheStats::default(),
+            eps: vec![EpSample { busy_frac: 0.5, avg_inflight: 0.75 }],
+            link: EpSample { busy_frac: 0.0, avg_inflight: 0.0 },
+            tenants: vec![TenantSample {
+                offered: 4,
+                completed: 3,
+                slo_ok: 3,
+                rejected: 1,
+                dropped: 0,
+                goodput: 0.6,
+                throughput: 0.6,
+                backlog: 1,
+                load_shed: false,
+                replicas: vec![ReplicaSample {
+                    state: "active",
+                    dead: false,
+                    eps: 2,
+                    queued: 1,
+                    stage_queue_hw: vec![2, 0],
+                    slab_live: 1,
+                    slab_cap: 4,
+                    retuned: true,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn util_meter_integrates_exactly() {
+        let mut m = UtilMeter::new(1);
+        // One unit in flight over [1, 3) of a [0, 4) window.
+        m.ep_touch(0, 0, 1.0);
+        m.ep_touch(0, 1, 3.0);
+        m.link_touch(0, 2.0);
+        let (eps, link) = m.flush(4.0, &[0], 1);
+        assert!((eps[0].busy_frac - 0.5).abs() < 1e-12);
+        assert!((eps[0].avg_inflight - 0.5).abs() < 1e-12);
+        // Link held 1 unit over [2, 4).
+        assert!((link.busy_frac - 0.5).abs() < 1e-12);
+        // Next window starts clean.
+        let (eps, _) = m.flush(8.0, &[0], 0);
+        assert_eq!(eps[0].busy_frac, 0.0);
+    }
+
+    #[test]
+    fn obs_counts_and_exports() {
+        let mut o = Obs::new(2, &[("a".to_string(), 1)]);
+        o.on_event(1);
+        o.on_event(1);
+        o.on_event(3);
+        o.on_admission(0, ADM_ADMIT);
+        o.on_admission(0, ADM_REJECT);
+        o.on_batch(4);
+        o.queue_mark(0, 0, 1, 7);
+        o.queue_total(7);
+        assert_eq!(o.take_queue_hw(0, 0), vec![0, 7]);
+        assert_eq!(o.take_queue_hw(0, 0), vec![0, 0], "high-water resets on take");
+        o.journal.push(
+            &ControlRecord { t_s: 0.0, kind: ControlKind::Coplan, tenant: 0, shard: 1, a: 2, b: 0 },
+            &[("eps", 2.0)],
+        );
+        o.push_sample(sample(5.0));
+        o.journal.push(
+            &ControlRecord {
+                t_s: 7.0,
+                kind: ControlKind::Fault,
+                tenant: 0,
+                shard: 0,
+                a: 1,
+                b: 0,
+            },
+            &[],
+        );
+        let rep = o.finish(CacheStats { hits: 3, misses: 1, entries: 1 });
+        assert!(rep.prom.contains("shisha_events_total{tag=\"arrival\"} 2"));
+        assert!(rep.prom.contains("shisha_admissions_total{tenant=\"a\",outcome=\"reject\"} 1"));
+        assert!(rep.prom.contains("shisha_plan_cache_hits_total 3"));
+        assert!(rep.prom.contains("shisha_epoch_samples_total 1"));
+        let jsonl = rep.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2, "one sample line + one tail line: {jsonl}");
+        assert!(lines[0].contains("\"schema\":\"shisha-obs-v1\""));
+        assert!(lines[0].contains("\"kind\":\"coplan\""), "t=0 decision in first sample");
+        assert!(lines[0].contains("\"stage_queue_hw\":[2,0]"));
+        assert!(lines[1].contains("\"record\":\"tail\""));
+        assert!(lines[1].contains("\"kind\":\"fault\""));
+        let text = rep.analysis();
+        assert!(text.contains("tenant a"));
+        assert!(text.contains("coplan"));
+        assert!(text.contains("eps=2.0000"));
+    }
+}

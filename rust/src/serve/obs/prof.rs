@@ -1,0 +1,166 @@
+//! Engine self-profiling: monotonic-clock section timers.
+//!
+//! Wall-clock spans around the engine's major sections (event pump,
+//! settle, warm re-tune, co-plan, drain/migrate, telemetry sampling),
+//! reported as a time-breakdown table. Spans use [`std::time::Instant`]
+//! and are therefore **non-deterministic across runs**; they are excluded
+//! from every hash, from the JSONL epoch series, and from the Prometheus
+//! snapshot — profiling is printed separately so the deterministic
+//! surfaces stay byte-identical between live and replayed runs.
+
+use std::time::Instant;
+
+/// Number of profiled sections.
+pub const N_SPANS: usize = 6;
+
+/// A profiled engine section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Span {
+    /// The whole event pump (all other spans nest inside it).
+    Pump,
+    /// Dirty-stage settling after each event.
+    Settle,
+    /// Warm re-tune at an epoch tick (scratch PerfDb + controller).
+    Retune,
+    /// Elastic co-plan evaluation (`coplan_observed_with`).
+    Coplan,
+    /// Replica drain/migrate/rehome during failover or re-partition.
+    DrainMigrate,
+    /// Telemetry epoch sampling itself (the observer observing itself).
+    Sample,
+}
+
+impl Span {
+    /// Table row label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::Pump => "event pump",
+            Span::Settle => "settle",
+            Span::Retune => "re-tune",
+            Span::Coplan => "coplan",
+            Span::DrainMigrate => "drain/migrate",
+            Span::Sample => "obs sample",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Span::Pump => 0,
+            Span::Settle => 1,
+            Span::Retune => 2,
+            Span::Coplan => 3,
+            Span::DrainMigrate => 4,
+            Span::Sample => 5,
+        }
+    }
+
+    /// All spans in table order.
+    pub fn all() -> [Span; N_SPANS] {
+        [Span::Pump, Span::Settle, Span::Retune, Span::Coplan, Span::DrainMigrate, Span::Sample]
+    }
+}
+
+/// Accumulated wall-clock per section.
+#[derive(Debug, Clone, Default)]
+pub struct Prof {
+    calls: [u64; N_SPANS],
+    total_s: [f64; N_SPANS],
+}
+
+impl Prof {
+    /// Start a span (just a monotonic clock read; pair with [`Prof::add`]).
+    #[inline]
+    pub fn start() -> Instant {
+        Instant::now()
+    }
+
+    /// Close a span opened with [`Prof::start`].
+    #[inline]
+    pub fn add(&mut self, span: Span, since: Instant) {
+        let i = span.index();
+        self.calls[i] += 1;
+        self.total_s[i] += since.elapsed().as_secs_f64();
+    }
+
+    /// Freeze into the report rows.
+    pub fn report(&self) -> ProfReport {
+        ProfReport {
+            rows: Span::all()
+                .iter()
+                .map(|&s| ProfRow {
+                    name: s.name(),
+                    calls: self.calls[s.index()],
+                    total_s: self.total_s[s.index()],
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One row of the self-profiling breakdown.
+#[derive(Debug, Clone)]
+pub struct ProfRow {
+    /// Section label.
+    pub name: &'static str,
+    /// Times the section ran.
+    pub calls: u64,
+    /// Total wall-clock spent inside it, seconds.
+    pub total_s: f64,
+}
+
+/// The self-profiling time breakdown of one serve run.
+#[derive(Debug, Clone, Default)]
+pub struct ProfReport {
+    /// Rows in [`Span::all`] order; `rows[0]` is the whole event pump.
+    pub rows: Vec<ProfRow>,
+}
+
+impl ProfReport {
+    /// Wall-clock of the whole event pump (0 when profiling never ran).
+    pub fn pump_s(&self) -> f64 {
+        self.rows.first().map_or(0.0, |r| r.total_s)
+    }
+
+    /// Render the time-breakdown table (section, calls, total, % of pump).
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let pump = self.pump_s();
+        let mut out = String::new();
+        let _ = writeln!(out, "self-profile (wall clock, excluded from all hashes):");
+        let _ = writeln!(out, "  {:<14} {:>9} {:>12} {:>8}", "section", "calls", "total", "pump%");
+        for r in &self.rows {
+            let frac = if pump > 0.0 { 100.0 * r.total_s / pump } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>9} {:>9.3} ms {:>7.1}%",
+                r.name,
+                r.calls,
+                r.total_s * 1e3,
+                frac
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate() {
+        let mut p = Prof::default();
+        let t0 = Prof::start();
+        p.add(Span::Settle, t0);
+        p.add(Span::Settle, t0);
+        p.add(Span::Pump, t0);
+        let rep = p.report();
+        assert_eq!(rep.rows.len(), N_SPANS);
+        let settle = rep.rows.iter().find(|r| r.name == "settle").unwrap();
+        assert_eq!(settle.calls, 2);
+        assert!(settle.total_s >= 0.0);
+        let table = rep.table();
+        assert!(table.contains("settle"));
+        assert!(table.contains("event pump"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Allocation-free metrics registry.
+//!
+//! Every series is **pre-registered** at serve start, which hands back a
+//! typed index (`CounterId` / `GaugeId` / `HistId`). Hot-path updates are
+//! plain indexed stores — no hashing, no string formatting, no allocation
+//! after warmup — so telemetry costs one branch plus one array write per
+//! touch. Rendering (the Prometheus text exposition) walks the same flat
+//! vectors at end of run.
+//!
+//! Histograms use fixed log₂ buckets: bucket `k` covers values `≤ 2^k`
+//! (bucket 0 covers 0 and 1, the last bucket is `+Inf`). Queue depths and
+//! batch fills span decades; power-of-two edges keep resolution where the
+//! distribution lives without per-registry bucket configuration.
+
+/// Log₂ histogram bucket count: bucket 17 covers values up to 2^17 =
+/// 131072, the 18th (index [`HIST_BUCKETS`]-1) is the `+Inf` overflow.
+pub const HIST_BUCKETS: usize = 18;
+
+/// Index of a pre-registered u64 counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Index of a pre-registered f64 gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Index of a pre-registered log₂ histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+#[derive(Debug)]
+struct Counter {
+    family: &'static str,
+    /// Rendered label set (the text inside `{}`), e.g. `tag="arrival"`.
+    labels: String,
+    value: u64,
+}
+
+#[derive(Debug)]
+struct Gauge {
+    family: &'static str,
+    labels: String,
+    value: f64,
+}
+
+#[derive(Debug)]
+struct Hist {
+    family: &'static str,
+    labels: String,
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+}
+
+/// The flat registry. All series live in registration order, which is also
+/// the (deterministic) exposition order.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Vec<Counter>,
+    gauges: Vec<Gauge>,
+    hists: Vec<Hist>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a counter; `labels` is the rendered label set (empty for
+    /// none). Called only during serve-start warmup.
+    pub fn counter(&mut self, family: &'static str, labels: impl Into<String>) -> CounterId {
+        self.counters.push(Counter { family, labels: labels.into(), value: 0 });
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register a gauge.
+    pub fn gauge(&mut self, family: &'static str, labels: impl Into<String>) -> GaugeId {
+        self.gauges.push(Gauge { family, labels: labels.into(), value: 0.0 });
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register a log₂ histogram.
+    pub fn hist(&mut self, family: &'static str, labels: impl Into<String>) -> HistId {
+        self.hists.push(Hist {
+            family,
+            labels: labels.into(),
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+        });
+        HistId(self.hists.len() - 1)
+    }
+
+    /// Hot path: bump a counter by one.
+    #[inline]
+    pub fn inc(&mut self, id: CounterId) {
+        self.counters[id.0].value += 1;
+    }
+
+    /// Hot path: bump a counter by `n`.
+    #[inline]
+    pub fn add(&mut self, id: CounterId, n: u64) {
+        self.counters[id.0].value += n;
+    }
+
+    /// Current value of a counter.
+    #[inline]
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].value
+    }
+
+    /// Hot path: overwrite a gauge.
+    #[inline]
+    pub fn set(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0].value = v;
+    }
+
+    /// Hot path: record one observation into a histogram.
+    #[inline]
+    pub fn observe(&mut self, id: HistId, v: u64) {
+        let h = &mut self.hists[id.0];
+        h.buckets[Self::bucket(v)] += 1;
+        h.count += 1;
+        h.sum += v as f64;
+    }
+
+    /// Log₂ bucket index of `v`: the smallest `k` with `v <= 2^k`, clamped
+    /// to the overflow bucket.
+    #[inline]
+    pub fn bucket(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            let k = (64 - (v - 1).leading_zeros()) as usize;
+            k.min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Upper bound of bucket `k` as exposition text (`+Inf` for the last).
+    pub fn bucket_le(k: usize) -> String {
+        if k >= HIST_BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            (1u64 << k).to_string()
+        }
+    }
+
+    /// Render the whole registry in Prometheus text-exposition format.
+    /// Deterministic: registration order, `{}` float formatting.
+    pub fn prom(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_family = "";
+        for c in &self.counters {
+            if c.family != last_family {
+                let _ = writeln!(out, "# TYPE {} counter", c.family);
+                last_family = c.family;
+            }
+            let _ = writeln!(out, "{}{} {}", c.family, braced(&c.labels), c.value);
+        }
+        last_family = "";
+        for g in &self.gauges {
+            if g.family != last_family {
+                let _ = writeln!(out, "# TYPE {} gauge", g.family);
+                last_family = g.family;
+            }
+            let _ = writeln!(out, "{}{} {}", g.family, braced(&g.labels), g.value);
+        }
+        last_family = "";
+        for h in &self.hists {
+            if h.family != last_family {
+                let _ = writeln!(out, "# TYPE {} histogram", h.family);
+                last_family = h.family;
+            }
+            let mut cum = 0u64;
+            for (k, &n) in h.buckets.iter().enumerate() {
+                cum += n;
+                let le = Self::bucket_le(k);
+                let labels = if h.labels.is_empty() {
+                    format!("le=\"{le}\"")
+                } else {
+                    format!("{},le=\"{le}\"", h.labels)
+                };
+                let _ = writeln!(out, "{}_bucket{{{labels}}} {cum}", h.family);
+            }
+            let _ = writeln!(out, "{}_sum{} {}", h.family, braced(&h.labels), h.sum);
+            let _ = writeln!(out, "{}_count{} {}", h.family, braced(&h.labels), h.count);
+        }
+        out
+    }
+}
+
+/// Wrap a rendered label set in braces, or nothing when it is empty.
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Registry::bucket(0), 0);
+        assert_eq!(Registry::bucket(1), 0);
+        assert_eq!(Registry::bucket(2), 1);
+        assert_eq!(Registry::bucket(3), 2);
+        assert_eq!(Registry::bucket(4), 2);
+        assert_eq!(Registry::bucket(5), 3);
+        assert_eq!(Registry::bucket(1 << 16), 16);
+        assert_eq!(Registry::bucket((1 << 17) + 1), HIST_BUCKETS - 1);
+        assert_eq!(Registry::bucket(u64::MAX), HIST_BUCKETS - 1);
+        // Every bucket's upper bound actually admits its values.
+        for v in [0u64, 1, 2, 3, 7, 8, 9, 100, 1000, 131072] {
+            let k = Registry::bucket(v);
+            if k < HIST_BUCKETS - 1 {
+                assert!(v <= (1u64 << k), "v={v} overflows bucket {k}");
+            }
+            if k > 0 {
+                assert!(v > (1u64 << (k - 1)), "v={v} belongs below bucket {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn prom_exposition_shape() {
+        let mut r = Registry::new();
+        let c = r.counter("shisha_events_total", "tag=\"arrival\"");
+        let g = r.gauge("shisha_link_busy_frac", "");
+        let h = r.hist("shisha_batch_fill", "");
+        r.add(c, 3);
+        r.set(g, 0.5);
+        r.observe(h, 4);
+        r.observe(h, 5);
+        let text = r.prom();
+        assert!(text.contains("# TYPE shisha_events_total counter"));
+        assert!(text.contains("shisha_events_total{tag=\"arrival\"} 3"));
+        assert!(text.contains("shisha_link_busy_frac 0.5"));
+        assert!(text.contains("# TYPE shisha_batch_fill histogram"));
+        // 4 lands in le="4", 5 in le="8"; cumulative counts.
+        assert!(text.contains("shisha_batch_fill_bucket{le=\"4\"} 1"));
+        assert!(text.contains("shisha_batch_fill_bucket{le=\"8\"} 2"));
+        assert!(text.contains("shisha_batch_fill_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("shisha_batch_fill_sum 9"));
+        assert!(text.contains("shisha_batch_fill_count 2"));
+    }
+
+    #[test]
+    fn updates_by_index() {
+        let mut r = Registry::new();
+        let a = r.counter("f", "x=\"1\"");
+        let b = r.counter("f", "x=\"2\"");
+        r.inc(a);
+        r.inc(b);
+        r.inc(b);
+        assert_eq!(r.counter_value(a), 1);
+        assert_eq!(r.counter_value(b), 2);
+    }
+}

@@ -104,6 +104,11 @@ pub struct ScenarioStats {
     /// Elastic re-partitions across all tenants (see
     /// [`crate::serve::TenantReport::repartitions`]).
     pub repartitions: u64,
+    /// Plan-cache hits across the run's control planes (failover +
+    /// elastic re-plans; see [`crate::serve::ServeReport::plan_cache`]).
+    pub cache_hits: u64,
+    /// Plan-cache misses (each one paid a full placement search).
+    pub cache_misses: u64,
 }
 
 impl ScenarioStats {
@@ -134,6 +139,8 @@ impl ScenarioStats {
             ep_epochs: r.ep_epochs(),
             scale_events,
             repartitions,
+            cache_hits: r.plan_cache.hits,
+            cache_misses: r.plan_cache.misses,
             p50_s: sketch.p50(),
             p95_s: sketch.p95(),
             p99_s: sketch.p99(),

@@ -80,6 +80,13 @@ pub const MAGIC: [u8; 4] = *b"SHTR";
 /// elastic-loop options and the tag-8 re-partition records.
 pub const VERSION: u8 = 3;
 
+/// Oldest version this build still reads. Decoding is version-gated on
+/// the serve-options layout (v1: no elastic, no faults; v2: faults but no
+/// elastic); omitted sections decode to their defaults, so `trace
+/// analyze` turns every trace ever recorded into an observability
+/// artifact. Re-encoding always writes [`VERSION`].
+pub const MIN_VERSION: u8 = 1;
+
 /// Section id: serialized serve inputs (platform, tenants, options).
 pub const SEC_INPUTS: u8 = 1;
 /// Section id: the hashed engine event stream.

@@ -13,10 +13,13 @@
 //!   assembling inputs + events + control-plane decisions (re-tunes,
 //!   co-plan allocations, autoscale transitions) + outcome summary.
 //! * [`replayer`] — [`replay_full`] (re-simulate and assert bit-identical
-//!   `log_hash`, event stream, and per-tenant counters) and
+//!   `log_hash`, event stream, and per-tenant counters),
 //!   [`replay_whatif`] (re-simulate only the captured arrival streams
 //!   under a [`WhatIf`] policy override: shard count, balancer,
-//!   autoscale, co-planning — with request conservation checked).
+//!   autoscale, co-planning — with request conservation checked), and
+//!   [`replay_observed`] (re-simulate with the telemetry plane on —
+//!   `trace analyze` — deriving the epoch time series and causality
+//!   journal retroactively from any v1–v3 trace).
 //!
 //! Record with [`crate::serve::serve_traced`] (or `serve --record` on the
 //! CLI), inspect with [`Trace::describe`] (`trace inspect`), fan a trace
@@ -28,4 +31,4 @@ pub mod replayer;
 
 pub use format::TraceEvent;
 pub use recorder::{Capture, ControlKind, ControlRecord, TenantSummary, Trace, TraceSummary};
-pub use replayer::{replay_full, replay_whatif, whatif_inputs, WhatIf};
+pub use replayer::{replay_full, replay_observed, replay_whatif, whatif_inputs, WhatIf};

@@ -20,13 +20,14 @@ use crate::platform::{
 
 use super::super::arrivals::ArrivalProcess;
 use super::super::cluster::{AutoscaleOptions, ElasticOptions};
+use super::super::obs;
 use super::super::engine::{PumpMode, ServeOptions, ServeReport};
 use super::super::fault::{FaultEvent, FaultKind, FaultScript};
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::{AdmissionPolicy, TenantSpec};
 use super::format::{
     get_event, put_event, put_f64, put_section, put_str, put_varint, Reader, TraceEvent, MAGIC,
-    SEC_CONTROLS, SEC_EVENTS, SEC_INPUTS, SEC_SUMMARY, VERSION,
+    MIN_VERSION, SEC_CONTROLS, SEC_EVENTS, SEC_INPUTS, SEC_SUMMARY, VERSION,
 };
 
 /// Which control-plane mechanism produced a [`ControlRecord`].
@@ -333,8 +334,11 @@ impl Trace {
             bail!("not a shisha trace (magic {magic:02x?}, expected {MAGIC:02x?})");
         }
         let version = r.u8().context("reading trace version")?;
-        if version != VERSION {
-            bail!("unsupported trace version {version} (this build reads version {VERSION})");
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            bail!(
+                "unsupported trace version {version} \
+                 (this build reads versions {MIN_VERSION} through {VERSION})"
+            );
         }
 
         let mut inputs = r.take_section(SEC_INPUTS).context("inputs section")?;
@@ -348,7 +352,7 @@ impl Trace {
                 .with_context(|| format!("decoding tenant {ti} config"))?;
             tenants.push((spec, config));
         }
-        let opts = get_opts(&mut inputs).context("decoding serve options")?;
+        let opts = get_opts(&mut inputs, version).context("decoding serve options")?;
         if !inputs.is_empty() {
             bail!("{} trailing bytes after serve options in inputs section", inputs.remaining());
         }
@@ -478,12 +482,16 @@ impl Trace {
             .map(|&(t, n)| format!("{} {n}", TraceEvent::tag_name(t)))
             .collect();
         let _ = writeln!(out, "  event census: {}", census.join(", "));
+        // Every replica ticks at every control epoch, so the tag-5 count
+        // is each tenant's epoch count.
+        let n_epochs = self.events.iter().filter(|ev| ev.tag == 5).count();
         for (ti, ts) in self.summary.tenants.iter().enumerate() {
             let arrivals = self.arrival_times(ti).len();
             let _ = writeln!(
                 out,
-                "  tenant {ti} {:<12} offered {:<6} completed {:<6} slo_ok {:<6} shed {:<5} \
-                 in-flight {:<4} retunes {:<3} scale-events {:<3} (captured arrivals {arrivals})",
+                "  tenant {ti} {:<12} epochs {n_epochs:<4} offered {:<6} completed {:<6} \
+                 slo_ok {:<6} shed {:<5} in-flight {:<4} retunes {:<3} scale-events {:<3} \
+                 (captured arrivals {arrivals})",
                 ts.name,
                 ts.offered,
                 ts.completed,
@@ -494,16 +502,14 @@ impl Trace {
                 ts.scale_events,
             );
         }
+        // The decision timeline renders through the same line formatter as
+        // `trace analyze` (`ObsReport::analysis`); inspect has no journal,
+        // so the signal column is empty here.
         for rec in &self.controls {
             let _ = writeln!(
                 out,
-                "  control t={:>9.4}s {:<6} tenant {} shard {} a={} b={}",
-                rec.t_s,
-                rec.kind.name(),
-                rec.tenant,
-                rec.shard,
-                rec.a,
-                rec.b,
+                "  control {}",
+                obs::decision_line(rec.t_s, rec.kind.name(), rec.tenant, rec.shard, rec.a, rec.b, &[])
             );
         }
         out
@@ -884,7 +890,7 @@ fn get_bool(r: &mut Reader<'_>, what: &str) -> Result<bool> {
     }
 }
 
-fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
+fn get_opts(r: &mut Reader<'_>, version: u8) -> Result<ServeOptions> {
     let duration_s = r.f64()?;
     let seed = r.varint()?;
     let control = get_bool(r, "control flag")?;
@@ -911,12 +917,22 @@ fn get_opts(r: &mut Reader<'_>) -> Result<ServeOptions> {
         down_epochs: u32::try_from(r.varint()?).context("autoscale down_epochs")?,
         cooldown_epochs: u32::try_from(r.varint()?).context("autoscale cooldown")?,
     };
-    let elastic = ElasticOptions {
-        enabled: get_bool(r, "elastic enabled flag")?,
-        min_gain_frac: r.f64()?,
-        cooldown_epochs: u32::try_from(r.varint()?).context("elastic cooldown")?,
+    // Version-gated tail: v1 traces end here (no elastic loop, no fault
+    // plane existed), v2 adds the fault script, v3 the elastic options.
+    let elastic = if version >= 3 {
+        ElasticOptions {
+            enabled: get_bool(r, "elastic enabled flag")?,
+            min_gain_frac: r.f64()?,
+            cooldown_epochs: u32::try_from(r.varint()?).context("elastic cooldown")?,
+        }
+    } else {
+        ElasticOptions::default()
     };
-    let faults = get_faults(r).context("decoding fault script")?;
+    let faults = if version >= 2 {
+        get_faults(r).context("decoding fault script")?
+    } else {
+        FaultScript::default()
+    };
     Ok(ServeOptions {
         duration_s,
         seed,
@@ -1055,6 +1071,78 @@ mod tests {
         assert!(back.opts.elastic.enabled);
         assert_eq!(back.opts.elastic.min_gain_frac.to_bits(), 0.05f64.to_bits());
         assert_eq!(back.opts.elastic.cooldown_epochs, 3);
+    }
+
+    #[test]
+    fn old_version_traces_still_decode() {
+        // Hand-encode a trace in the v1 and v2 layouts (options stop
+        // after the autoscale block; v2 appends the fault script) and
+        // check the version-gated decoder fills the missing tails with
+        // defaults — `trace analyze` must read every trace ever recorded.
+        let tr = sample_trace();
+        let mut opts_v1 = Vec::new();
+        let o = &tr.opts;
+        put_f64(&mut opts_v1, o.duration_s);
+        put_varint(&mut opts_v1, o.seed);
+        opts_v1.push(u8::from(o.control));
+        put_f64(&mut opts_v1, o.control_epoch_s);
+        put_f64(&mut opts_v1, o.retune_threshold);
+        put_varint(&mut opts_v1, u64::from(o.retune_cooldown_epochs));
+        put_f64(&mut opts_v1, o.reconfig_penalty_s);
+        opts_v1.push(u8::from(o.contention));
+        opts_v1.push(u8::from(o.record_log));
+        put_varint(&mut opts_v1, o.max_events);
+        opts_v1.push(0); // pump: event-driven
+        opts_v1.push(u8::from(o.coplan));
+        let auto = &o.autoscale;
+        opts_v1.push(u8::from(auto.enabled));
+        put_varint(&mut opts_v1, auto.min_shards as u64);
+        put_f64(&mut opts_v1, auto.target_util);
+        put_f64(&mut opts_v1, auto.scale_down_util);
+        put_f64(&mut opts_v1, auto.backlog_frac);
+        put_varint(&mut opts_v1, u64::from(auto.up_epochs));
+        put_varint(&mut opts_v1, u64::from(auto.down_epochs));
+        put_varint(&mut opts_v1, u64::from(auto.cooldown_epochs));
+        let mut opts_v2 = opts_v1.clone();
+        put_faults(&mut opts_v2, &o.faults);
+
+        for (version, opts_bytes, expect_faults) in
+            [(1u8, &opts_v1, false), (2u8, &opts_v2, true)]
+        {
+            let mut inputs = Vec::new();
+            put_platform(&mut inputs, &tr.platform);
+            put_varint(&mut inputs, tr.tenants.len() as u64);
+            for (spec, config) in &tr.tenants {
+                put_tenant_spec(&mut inputs, spec);
+                put_config(&mut inputs, config);
+            }
+            inputs.extend_from_slice(opts_bytes);
+            let mut events = Vec::new();
+            put_varint(&mut events, 1);
+            put_event(&mut events, &TraceEvent { t_s: 0.5, tag: 1, a: 0, b: 0 });
+            let mut controls = Vec::new();
+            put_varint(&mut controls, 0);
+            let mut summary = Vec::new();
+            summary.extend_from_slice(&0x1234u64.to_le_bytes());
+            put_varint(&mut summary, 1);
+            summary.push(0);
+            put_varint(&mut summary, 0);
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC);
+            bytes.push(version);
+            put_section(&mut bytes, SEC_INPUTS, &inputs);
+            put_section(&mut bytes, SEC_EVENTS, &events);
+            put_section(&mut bytes, SEC_CONTROLS, &controls);
+            put_section(&mut bytes, SEC_SUMMARY, &summary);
+
+            let back = Trace::from_bytes(&bytes)
+                .unwrap_or_else(|e| panic!("v{version} trace must decode: {e:#}"));
+            assert_eq!(back.opts.seed, tr.opts.seed, "v{version}");
+            assert_eq!(back.opts.faults.is_empty(), !expect_faults, "v{version}");
+            assert!(!back.opts.elastic.enabled, "v{version}: elastic defaults off");
+            assert_eq!(back.events.len(), 1, "v{version}");
+            assert_eq!(back.summary.log_hash, 0x1234, "v{version}");
+        }
     }
 
     #[test]

@@ -22,8 +22,9 @@ use crate::platform::Platform;
 
 use super::super::arrivals::ArrivalProcess;
 use super::super::cluster::{AutoscaleOptions, ElasticOptions};
-use super::super::engine::{serve, serve_traced, ServeOptions, ServeReport};
+use super::super::engine::{serve, serve_observed, serve_traced, ServeOptions, ServeReport};
 use super::super::fault::FaultScript;
+use super::super::obs::ObsReport;
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::TenantSpec;
 use super::recorder::Trace;
@@ -84,6 +85,64 @@ pub fn replay_full(trace: &Trace) -> Result<ServeReport> {
         replayed.summary.tenants
     );
     Ok(report)
+}
+
+/// Observed replay — the `trace analyze` engine: re-simulate the trace's
+/// inputs with the telemetry plane on, deriving the epoch time series and
+/// the causality journal retroactively from any recorded trace.
+///
+/// Telemetry lives beside the hash funnel, so the replay must reproduce
+/// the recording exactly: the `log_hash`, event count and truncation flag
+/// are checked against the summary, and the derived journal must match
+/// the recorded control section record-for-record (the journal adds the
+/// triggering signals the binary format does not carry). The resulting
+/// [`ObsReport::to_jsonl`] is byte-identical to what a live
+/// `serve --metrics` run of the same inputs would have written.
+pub fn replay_observed(trace: &Trace) -> Result<(ServeReport, ObsReport)> {
+    let (report, obs) = serve_observed(&trace.platform, trace.tenants.clone(), &trace.opts)
+        .context("re-simulating recorded inputs with telemetry")?;
+    ensure!(
+        report.log_hash == trace.summary.log_hash,
+        "observed replay diverged: recorded log_hash {:016x}, replay {:016x}",
+        trace.summary.log_hash,
+        report.log_hash
+    );
+    ensure!(
+        report.n_events == trace.summary.n_events,
+        "observed replay diverged: recorded {} engine events, replay {}",
+        trace.summary.n_events,
+        report.n_events
+    );
+    ensure!(
+        report.truncated == trace.summary.truncated,
+        "observed replay diverged on the truncation flag"
+    );
+    ensure!(
+        obs.journal.entries.len() == trace.controls.len(),
+        "observed replay diverged: recorded {} control records, derived journal has {}",
+        trace.controls.len(),
+        obs.journal.entries.len()
+    );
+    for (i, (want, got)) in trace.controls.iter().zip(&obs.journal.entries).enumerate() {
+        let same = want.t_s.to_bits() == got.t_s.to_bits()
+            && want.kind == got.kind
+            && want.tenant == got.tenant
+            && want.shard == got.shard
+            && want.a == got.a
+            && want.b == got.b;
+        ensure!(
+            same,
+            "observed replay diverged at control record {i}: recorded {want:?}, \
+             derived t={} kind={} tenant={} shard={} a={} b={}",
+            got.t_s,
+            got.kind.name(),
+            got.tenant,
+            got.shard,
+            got.a,
+            got.b
+        );
+    }
+    Ok((report, obs))
 }
 
 /// Policy overrides for arrivals-only what-if replay. Every field is

@@ -1,0 +1,376 @@
+//! Telemetry zero-perturbation invariance tests.
+//!
+//! The telemetry plane ([`shisha::serve::obs`]) is derived **beside** the
+//! engine's event-hash funnel, never inside it — so turning it on must
+//! not change a single observable bit of the simulation. Each golden
+//! scenario family asserts, with telemetry on vs off:
+//!
+//! 1. **blind vs observed** — [`serve`] and [`serve_observed`] produce
+//!    identical `log_hash`, event count and per-tenant counters;
+//! 2. **recording invariance** — [`serve_traced`] and
+//!    [`serve_traced_observed`] encode byte-identical `.trace` files;
+//! 3. **retroactive derivation** — [`replay_observed`] of the recording
+//!    (after a to/from-bytes round trip) yields an [`ObsReport`] whose
+//!    JSONL export and Prometheus snapshot are byte-identical to the
+//!    live observed run's — `trace analyze` can never drift from
+//!    `serve --metrics`;
+//! 4. **non-vacuity** — the epoch series is non-empty, and scenarios
+//!    with an active control plane journal at least one decision.
+//!
+//! The six families mirror `tests/serve_golden.rs`: steady Poisson,
+//! MMPP + piecewise drift (warm re-tune), sharded JSQ, autoscaled tidal,
+//! chaos-faulted, and elastic co-planned anti-phase tides.
+
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::{simulator, PipelineConfig};
+use shisha::platform::configs;
+use shisha::serve::{
+    replay_observed, serve, serve_observed, serve_traced, serve_traced_observed, ArrivalProcess,
+    BalancerPolicy, FaultScript, ObsReport, ServeOptions, ServeReport, TenantSpec, Trace,
+};
+
+type Scenario = (shisha::platform::Platform, Vec<(TenantSpec, PipelineConfig)>, ServeOptions);
+
+/// Every simulation observable of the two reports must match exactly —
+/// the telemetry tap is not allowed to perturb any of them.
+fn assert_same_simulation(a: &ServeReport, b: &ServeReport, what: &str) {
+    assert_eq!(a.log_hash, b.log_hash, "{what}: log_hash");
+    assert_eq!(a.n_events, b.n_events, "{what}: event count");
+    assert_eq!(a.truncated, b.truncated, "{what}: truncation");
+    assert_eq!(a.plan_cache, b.plan_cache, "{what}: plan-cache counters");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let name = &x.name;
+        assert_eq!(x.offered, y.offered, "{what}/{name}: offered");
+        assert_eq!(x.completed, y.completed, "{what}/{name}: completed");
+        assert_eq!(x.rejected, y.rejected, "{what}/{name}: rejected");
+        assert_eq!(x.dropped, y.dropped, "{what}/{name}: dropped");
+        assert_eq!(x.slo_ok, y.slo_ok, "{what}/{name}: slo_ok");
+        assert_eq!(x.in_flight, y.in_flight, "{what}/{name}: in_flight");
+        assert_eq!(x.retunes, y.retunes, "{what}/{name}: retunes");
+        assert_eq!(x.epochs, y.epochs, "{what}/{name}: epoch series");
+        assert_eq!(x.final_config, y.final_config, "{what}/{name}: final config");
+        assert_eq!(x.latency.p99().to_bits(), y.latency.p99().to_bits(), "{what}/{name}: p99");
+        assert_eq!(x.shards.len(), y.shards.len(), "{what}/{name}: replica count");
+        for (sx, sy) in x.shards.iter().zip(&y.shards) {
+            assert_eq!(sx.eps, sy.eps, "{what}/{name}: replica EPs");
+            assert_eq!(sx.completed, sy.completed, "{what}/{name}: replica completed");
+            assert_eq!(sx.scale_events, sy.scale_events, "{what}/{name}: scale events");
+        }
+    }
+}
+
+/// Run one scenario family through all three invariance layers and
+/// return the live observed telemetry for family-specific assertions.
+fn check_invariance(
+    what: &str,
+    expect_journal: bool,
+    build: impl Fn() -> Scenario,
+) -> (ServeReport, ObsReport) {
+    // 1. blind vs observed: bit-identical simulation
+    let blind = {
+        let (plat, tenants, opts) = build();
+        serve(&plat, tenants, &opts).expect("blind serve")
+    };
+    let (observed, obs_live) = {
+        let (plat, tenants, opts) = build();
+        serve_observed(&plat, tenants, &opts).expect("observed serve")
+    };
+    assert_same_simulation(&blind, &observed, what);
+
+    // 2. recording invariance: byte-identical .trace files
+    let (_, trace_blind) = {
+        let (plat, tenants, opts) = build();
+        serve_traced(&plat, tenants, &opts).expect("blind recording")
+    };
+    let (rep_obs, trace_obs, obs_rec) = {
+        let (plat, tenants, opts) = build();
+        serve_traced_observed(&plat, tenants, &opts).expect("observed recording")
+    };
+    let bytes = trace_blind.to_bytes();
+    assert_eq!(
+        bytes,
+        trace_obs.to_bytes(),
+        "{what}: telemetry must not change a recorded trace byte"
+    );
+    assert_same_simulation(&blind, &rep_obs, &format!("{what} (recorded)"));
+    assert_eq!(
+        obs_live.to_jsonl(),
+        obs_rec.to_jsonl(),
+        "{what}: recording must not change the telemetry either"
+    );
+
+    // 3. retroactive derivation: trace analyze == live --metrics
+    let back = Trace::from_bytes(&bytes).expect("trace round trip");
+    let (rep_replay, obs_replay) = replay_observed(&back).expect("replay_observed");
+    assert_eq!(rep_replay.log_hash, blind.log_hash, "{what}: replay log_hash");
+    let live_jsonl = obs_live.to_jsonl();
+    let derived_jsonl = obs_replay.to_jsonl();
+    assert_eq!(
+        live_jsonl.lines().count(),
+        derived_jsonl.lines().count(),
+        "{what}: derived JSONL row count"
+    );
+    for (i, (l, d)) in live_jsonl.lines().zip(derived_jsonl.lines()).enumerate() {
+        assert_eq!(l, d, "{what}: JSONL row {i} diverged between live and trace analyze");
+    }
+    assert_eq!(obs_live.prom, obs_replay.prom, "{what}: Prometheus snapshot");
+
+    // 4. non-vacuity
+    assert!(!obs_live.samples.is_empty(), "{what}: epoch series must be non-empty");
+    for line in live_jsonl.lines() {
+        assert!(line.starts_with("{\"schema\":\"shisha-obs-v1\""), "{what}: schema tag");
+    }
+    if expect_journal {
+        assert!(
+            !obs_live.journal.entries.is_empty(),
+            "{what}: an active control plane must journal decisions"
+        );
+    }
+    (observed, obs_live)
+}
+
+#[test]
+fn obs_invariant_poisson_multi_tenant() {
+    let (report, obs) = check_invariance("poisson", false, || {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let heavy = TenantSpec::new("heavy", net.clone(), ArrivalProcess::Poisson {
+            rate: 2.5 * cap,
+        })
+        .with_batch(4)
+        .with_queue_capacity(12)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(20.0 / cap);
+        let light =
+            TenantSpec::new("light", net.clone(), ArrivalProcess::Poisson { rate: 0.4 * cap })
+                .with_slo(20.0 / cap);
+        let opts = ServeOptions {
+            duration_s: 300.0 / cap,
+            seed: 11,
+            control: false,
+            control_epoch_s: 40.0 / cap,
+            ..Default::default()
+        };
+        (plat, vec![(heavy, cfg.clone()), (light, cfg)], opts)
+    });
+    assert!(report.tenants[0].dropped > 0, "backpressure path must be exercised");
+    // the admission census reaches the samples: the heavy tenant drops
+    let last = obs.samples.last().expect("samples");
+    assert!(last.tenants[0].dropped > 0);
+}
+
+#[test]
+fn obs_invariant_mmpp_drift_retune() {
+    let (report, obs) = check_invariance("mmpp+drift", true, || {
+        let plat = configs::c2();
+        let net = networks::synthnet();
+        let bad = PipelineConfig::new(vec![5, 5, 4, 4], vec![2, 3, 0, 1]);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &bad);
+        let lat = simulator::evaluate(&net, &plat, &db, &bad).latency_s;
+        let drifter = TenantSpec::new("drifter", net.clone(), ArrivalProcess::Piecewise {
+            segments: vec![(0.0, 0.5 * cap), (126.0 / cap, 1.3 * cap)],
+        })
+        .with_slo(8.0 * lat)
+        .with_queue_capacity(32);
+        let opts = ServeOptions {
+            duration_s: 420.0 / cap,
+            seed: 17,
+            control: true,
+            control_epoch_s: 30.0 / cap,
+            retune_threshold: 0.6,
+            retune_cooldown_epochs: 1,
+            reconfig_penalty_s: 2.0 / cap,
+            ..Default::default()
+        };
+        (plat, vec![(drifter, bad)], opts)
+    });
+    assert!(report.tenants[0].retunes >= 1, "drift must trigger the warm re-tune");
+    // the journal explains the re-tune with its triggering signals
+    let retunes: Vec<_> = obs
+        .journal
+        .entries
+        .iter()
+        .filter(|e| e.kind == shisha::serve::ControlKind::Retune)
+        .collect();
+    assert!(!retunes.is_empty(), "re-tunes must be journaled");
+    assert!(
+        retunes.iter().all(|e| !e.signals.is_empty()),
+        "journaled re-tunes carry triggering signals"
+    );
+}
+
+#[test]
+fn obs_invariant_sharded_jsq() {
+    let (report, obs) = check_invariance("shard2-jsq", false, || {
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let tenant = TenantSpec::new("sharded", net, ArrivalProcess::Mmpp {
+            low_rate: 0.5 * cap,
+            high_rate: 2.5 * cap,
+            mean_low_s: 50.0 / cap,
+            mean_high_s: 50.0 / cap,
+        })
+        .with_shards(2)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(16)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(200.0 / cap);
+        let opts = ServeOptions {
+            duration_s: 300.0 / cap,
+            seed: 41,
+            control: false,
+            control_epoch_s: 30.0 / cap,
+            ..Default::default()
+        };
+        (plat, vec![(tenant, cfg)], opts)
+    });
+    assert_eq!(report.tenants[0].shards.len(), 2, "C5/SynthNet replicates at budget 2");
+    // per-replica telemetry: both replicas appear in every sample
+    for s in &obs.samples {
+        assert_eq!(s.tenants[0].replicas.len(), 2);
+    }
+    // utilization integrates to something sane: busy fractions in [0, 1]
+    for s in &obs.samples {
+        for ep in &s.eps {
+            assert!((0.0..=1.0 + 1e-9).contains(&ep.busy_frac), "busy_frac {}", ep.busy_frac);
+        }
+    }
+}
+
+#[test]
+fn obs_invariant_autoscale_tidal() {
+    let (report, obs) = check_invariance("autoscale-tidal", true, || {
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let tenant = TenantSpec::new("tidal", net, ArrivalProcess::Mmpp {
+            low_rate: 0.2 * cap,
+            high_rate: 1.3 * cap,
+            mean_low_s: 100.0 / cap,
+            mean_high_s: 100.0 / cap,
+        })
+        .with_shards(4)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(32)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(500.0 / cap);
+        let opts = ServeOptions {
+            duration_s: 400.0 / cap,
+            seed: 47,
+            control: false,
+            control_epoch_s: 4.0 / cap,
+            autoscale: shisha::serve::AutoscaleOptions::enabled(),
+            ..Default::default()
+        };
+        (plat, vec![(tenant, cfg)], opts)
+    });
+    let scale_events: usize = report.tenants[0].shards.iter().map(|s| s.scale_events.len()).sum();
+    assert!(scale_events > 0, "the tide must move the autoscaler");
+    // every hashed scale transition has a journaled explanation
+    let journaled = obs
+        .journal
+        .entries
+        .iter()
+        .filter(|e| e.kind == shisha::serve::ControlKind::Scale)
+        .count();
+    assert!(journaled > 0, "scale decisions must be journaled");
+}
+
+#[test]
+fn obs_invariant_chaos_faulted() {
+    let (report, obs) = check_invariance("chaos-faulted", true, || {
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let duration_s = 300.0 / cap;
+        let tenant = TenantSpec::new("survivor", net, ArrivalProcess::Poisson {
+            rate: 0.8 * cap,
+        })
+        .with_shards(2)
+        .with_balancer(BalancerPolicy::JoinShortestQueue)
+        .with_queue_capacity(32)
+        .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+        .with_slo(500.0 / cap);
+        let opts = ServeOptions {
+            duration_s,
+            seed: 61,
+            control: false,
+            control_epoch_s: 15.0 / cap,
+            faults: FaultScript::chaos(9, &plat, duration_s, 4),
+            ..Default::default()
+        };
+        (plat, vec![(tenant, cfg)], opts)
+    });
+    assert!(report.tenants[0].conserved(), "conservation through the chaos script");
+    // fault onsets/clears are journaled alongside the hashed records
+    let faults = obs
+        .journal
+        .entries
+        .iter()
+        .filter(|e| e.kind == shisha::serve::ControlKind::Fault)
+        .count();
+    assert!(faults > 0, "chaos faults must be journaled");
+}
+
+#[test]
+fn obs_invariant_elastic_coplan() {
+    let (report, obs) = check_invariance("elastic-antiphase", true, || {
+        let plat = configs::c5();
+        let net = networks::synthnet();
+        let cfg = shisha::serve::shisha_config(&net, &plat);
+        let db = PerfDb::build(&net, &plat, &CostModel::default());
+        let cap = simulator::throughput(&net, &plat, &db, &cfg);
+        let duration_s = 400.0 / cap;
+        let flip_s = duration_s / 2.0;
+        let hot = 1.0 * cap;
+        let idle = 0.05 * cap;
+        let mk = |name: &str, early: f64, late: f64| {
+            TenantSpec::new(name, net.clone(), ArrivalProcess::Piecewise {
+                segments: vec![(0.0, early), (flip_s, late)],
+            })
+            .with_queue_capacity(32)
+            .with_admission(shisha::serve::AdmissionPolicy::DropOldest)
+            .with_slo(500.0 / cap)
+        };
+        let tenants = vec![(mk("ebb", hot, idle), cfg.clone()), (mk("flow", idle, hot), cfg)];
+        let opts = ServeOptions {
+            duration_s,
+            seed: 5,
+            control: false,
+            control_epoch_s: duration_s / 40.0,
+            coplan: true,
+            elastic: shisha::serve::ElasticOptions {
+                enabled: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        (plat, tenants, opts)
+    });
+    // the co-plan's t=0 allocations seed the journal for every tenant
+    let coplans = obs
+        .journal
+        .entries
+        .iter()
+        .filter(|e| e.kind == shisha::serve::ControlKind::Coplan)
+        .count();
+    assert!(coplans >= 2, "both tenants' co-plan allocations must be journaled");
+    // plan-cache counters reach both the report and the samples
+    let total = report.plan_cache.hits + report.plan_cache.misses;
+    assert!(total > 0, "co-planning must exercise the plan cache");
+    let last = obs.samples.last().expect("samples");
+    assert_eq!(last.cache.hits + last.cache.misses, total, "samples carry cache counters");
+}

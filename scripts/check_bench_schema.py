@@ -40,7 +40,13 @@ against the copy committed at HEAD:
   (`weighted_goodput_ratio` >= 1, the PR-8 acceptance bar — the bench
   asserts this before writing), the live cells may not consume extra
   EP-epochs (`ep_epoch_ratio` <= 1), and at least one re-partition must
-  have been adopted (zero would make the comparison vacuous).
+  have been adopted (zero would make the comparison vacuous);
+* `BENCH_obs.json` gets the telemetry-plane envelope on the fresh run:
+  the `aggregate` case must carry the observability metrics, the
+  sampling overhead fraction must stay below 0.05 (the PR-9 acceptance
+  bar — telemetry is derived beside the hash funnel and must cost the
+  engine essentially nothing), and the epoch-sample rate must be
+  positive (zero samples means the observed run never ticked).
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -198,6 +204,41 @@ def check_elastic_envelope(path: str, fresh_cases: dict) -> list[str]:
     return problems
 
 
+# Fresh-run envelope for BENCH_obs.json: the telemetry-plane overhead
+# metrics the observability tap is tracked by.
+OBS_AGGREGATE_KEYS = {
+    "sampling_overhead_frac",
+    "samples_per_s",
+    "live_events_per_s",
+    "observed_events_per_s",
+    "reps",
+}
+
+
+def check_obs_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_obs.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = OBS_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    overhead = aggregate.get("sampling_overhead_frac")
+    if not isinstance(overhead, (int, float)) or overhead >= 0.05:
+        problems.append(
+            f"{path}: sampling_overhead_frac {overhead!r} must be a number below 0.05 "
+            "(the telemetry tap is required to be near-free on the hot path)"
+        )
+    samples = aggregate.get("samples_per_s")
+    if not isinstance(samples, (int, float)) or samples <= 0.0:
+        problems.append(
+            f"{path}: samples_per_s {samples!r} must be a positive number "
+            "(the observed run never froze an epoch sample)"
+        )
+    return problems
+
+
 def load_fresh(path: str) -> dict:
     with open(path, encoding="utf-8") as f:
         return json.load(f)
@@ -240,6 +281,8 @@ def main(paths: list[str]) -> int:
             failures.extend(check_fault_envelope(path, fresh_cases))
         if path.rsplit("/", 1)[-1] == "BENCH_elastic.json":
             failures.extend(check_elastic_envelope(path, fresh_cases))
+        if path.rsplit("/", 1)[-1] == "BENCH_obs.json":
+            failures.extend(check_obs_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:
