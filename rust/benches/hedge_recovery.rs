@@ -1,0 +1,216 @@
+//! Lifecycle-layer recovery: goodput retained, hedge economics, tail latency.
+//!
+//! One faulted tidal storm on the serving fixture (SynthNet on the 8-EP C5
+//! platform): the *strongest* EP stalls transiently a quarter of the way in,
+//! and the inter-chiplet link degrades 2× at the midpoint. Three questions:
+//!
+//! 1. **How much goodput does the lifecycle layer keep?**
+//!    `goodput_retained_frac` is the faulted lifecycle-on run's SLO goodput
+//!    over the fault-free lifecycle-on run's (shared arrivals — same seed,
+//!    same tenants; the only delta is the scripted chaos). The acceptance
+//!    envelope (scripts/check_bench_schema.py) requires ≥ 0.95: deadlines
+//!    reap hopeless queue entries, retries re-offer shed work after the
+//!    stall clears, and hedges route stragglers around the slow replica.
+//! 2. **What do hedges cost and win?** Fire rate (`hedged/offered`), win
+//!    rate (`hedge_wins/hedged`, a fraction in [0, 1] — the envelope checks
+//!    the range) and cancel rate (`cancelled/hedged`): every fired hedge
+//!    either wins (primary cancelled) or loses (twin cancelled), so the
+//!    cancel rate of a drained run sits near 1 by construction.
+//! 3. **What happens to the tail?** p99 latency of the faulted storm with
+//!    the lifecycle on vs the identical storm served blind (no deadline, no
+//!    retry, no hedge) — the blind run is the counterfactual a
+//!    `--what-if hedge=off` replay reconstructs.
+//!
+//! Request conservation (offered == completed + rejected + dropped +
+//! expired + cancelled + in-flight) is asserted for every run before
+//! anything is written, so a lifecycle that loses or double-counts requests
+//! can never mint numbers. Results go to `BENCH_retry.json` at the
+//! repository root.
+//!
+//! ```sh
+//! cargo bench --bench hedge_recovery            # full profile
+//! cargo bench --bench hedge_recovery -- --quick # CI profile
+//! ```
+
+use shisha::metrics::bench::JsonReport;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{
+    serve, shisha_config, AdmissionPolicy, ArrivalProcess, BalancerPolicy, FaultEvent, FaultKind,
+    FaultScript, HedgePolicy, RetryPolicy, ServeOptions, TenantReport, TenantSpec,
+};
+
+fn assert_conserved(t: &TenantReport, label: &str) {
+    assert!(
+        t.conserved(),
+        "{label}: requests must be conserved across the lifecycle layer \
+         (offered {} vs {} + {} + {} + {} + {} + {})",
+        t.offered,
+        t.completed,
+        t.rejected,
+        t.dropped,
+        t.expired,
+        t.cancelled,
+        t.in_flight
+    );
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let plat = configs::c5();
+    let net = shisha::model::networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    // Everything is denominated in service-capacity time (1/cap) so the
+    // scenario is platform-independent; --quick matches the acceptance storm
+    // pinned in tests/lifecycle.rs, the full profile triples the horizon
+    // while the fault windows stay fixed-size.
+    let duration_s = if quick { 400.0 / cap } else { 1200.0 / cap };
+    let epoch_s = 10.0 / cap;
+    let strongest = plat.eps_by_rank()[0];
+    let stall_t = duration_s / 4.0;
+    let stall_down = 50.0 / cap;
+    let slow_t = duration_s / 2.0;
+    let slow_down = 40.0 / cap;
+    println!(
+        "C5 ({} EPs), synthnet capacity {:.1} req/s; horizon {duration_s:.2}s, epoch \
+         {epoch_s:.3}s; EP {strongest} (strongest) stalls {stall_down:.2}s at t={stall_t:.2}s, \
+         link 2.0x slower for {slow_down:.2}s at t={slow_t:.2}s\n",
+        plat.n_eps(),
+        cap
+    );
+
+    let blind = TenantSpec::new(
+        "storm",
+        net.clone(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.25 * cap,
+            high_rate: 1.1 * cap,
+            mean_low_s: 100.0 / cap,
+            mean_high_s: 100.0 / cap,
+        },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(32)
+    .with_admission(AdmissionPolicy::DropOldest)
+    .with_slo(500.0 / cap);
+    let hardened = blind
+        .clone()
+        .with_deadline(1000.0 / cap)
+        .with_retry(RetryPolicy { max_attempts: 3, base_s: 5.0 / cap, cap_s: 100.0 / cap })
+        .with_hedge(HedgePolicy { quantile: 0.95, min_delay_s: 20.0 / cap });
+
+    let base = ServeOptions {
+        duration_s,
+        seed: 47,
+        control_epoch_s: epoch_s,
+        ..Default::default()
+    };
+    let faults = FaultScript {
+        events: vec![
+            FaultEvent { t_s: stall_t, kind: FaultKind::EpStall { ep: strongest, down_s: stall_down } },
+            FaultEvent { t_s: slow_t, kind: FaultKind::LinkSlow { factor: 2.0, down_s: slow_down } },
+        ],
+    };
+    let faulted_opts = ServeOptions { faults: faults.clone(), ..base.clone() };
+
+    // Fault-free lifecycle-on baseline, the faulted lifecycle-on run, and
+    // the faulted blind counterfactual — all on shared arrivals.
+    let free = serve(&plat, vec![(hardened.clone(), config.clone())], &base)
+        .expect("fault-free lifecycle serve");
+    assert_conserved(&free.tenants[0], "fault-free lifecycle");
+    let faulted = serve(&plat, vec![(hardened.clone(), config.clone())], &faulted_opts)
+        .expect("faulted lifecycle serve");
+    assert_conserved(&faulted.tenants[0], "faulted lifecycle");
+    let blind_faulted = serve(&plat, vec![(blind.clone(), config.clone())], &faulted_opts)
+        .expect("faulted blind serve");
+    assert_conserved(&blind_faulted.tenants[0], "faulted blind");
+
+    let goodput_free = free.goodputs()[0];
+    let goodput_faulted = faulted.goodputs()[0];
+    let goodput_blind = blind_faulted.goodputs()[0];
+    let retained = goodput_faulted / goodput_free;
+    assert!(
+        retained.is_finite() && retained >= 0.95,
+        "lifecycle-on faulted storm must retain >= 95% of fault-free goodput, got {retained:.4}"
+    );
+    println!(
+        "goodput: fault-free {goodput_free:.1} req/s, faulted {goodput_faulted:.1} req/s \
+         (retained {:.1}%); blind faulted {goodput_blind:.1} req/s",
+        retained * 1e2
+    );
+
+    // Hedge economics off the faulted lifecycle run's counters.
+    let t = &faulted.tenants[0];
+    assert!(t.retried + t.hedged > 0, "the storm must exercise retry or hedging");
+    let fire_rate = t.hedged as f64 / t.offered.max(1) as f64;
+    let win_rate = t.hedge_wins as f64 / t.hedged.max(1) as f64;
+    let cancel_rate = t.cancelled as f64 / t.hedged.max(1) as f64;
+    assert!((0.0..=1.0).contains(&win_rate), "hedge win rate must be a fraction, got {win_rate}");
+    println!(
+        "hedges: {} fired / {} won / {} cancelled over {} offered \
+         (fire {:.2}%, win {:.1}%, cancel {:.1}%); {} retried, {} expired",
+        t.hedged,
+        t.hedge_wins,
+        t.cancelled,
+        t.offered,
+        fire_rate * 1e2,
+        win_rate * 1e2,
+        cancel_rate * 1e2,
+        t.retried,
+        t.expired
+    );
+
+    // Tail latency: the same faulted storm with vs without the lifecycle.
+    let p99_hedged = t.latency.quantile(0.99);
+    let p99_blind = blind_faulted.tenants[0].latency.quantile(0.99);
+    println!(
+        "p99: lifecycle {:.1} ms vs blind {:.1} ms (SLO {:.1} ms)",
+        p99_hedged * 1e3,
+        p99_blind * 1e3,
+        hardened.slo_latency_s * 1e3
+    );
+
+    let mut json = JsonReport::new();
+    json.note(
+        "hedge_recovery: transient stall of the strongest C5 EP plus a 2x link degradation on \
+         the synthnet tidal MMPP storm, served with the full lifecycle layer (deadline 2x SLO, \
+         retry 3 attempts with decorrelated-jitter backoff, p95 hedging onto the sibling \
+         replica). goodput_retained_frac = faulted/fault-free SLO goodput on shared arrivals \
+         with the lifecycle on (envelope >= 0.95); hedge fire/win/cancel rates come off the \
+         faulted run's counters (win rate is a fraction in [0, 1] — envelope-checked); \
+         p99_hedged_s vs p99_blind_s compare the identical faulted storm with and without the \
+         lifecycle. Request conservation (incl. expired + hedge-cancelled) is asserted for \
+         every run before anything is written.",
+    );
+    json.metric("goodput", "fault_free_rps", goodput_free);
+    json.metric("goodput", "faulted_rps", goodput_faulted);
+    json.metric("goodput", "blind_faulted_rps", goodput_blind);
+    json.metric("goodput", "retained_frac", retained);
+    json.metric("hedge", "fired", t.hedged as f64);
+    json.metric("hedge", "wins", t.hedge_wins as f64);
+    json.metric("hedge", "cancelled", t.cancelled as f64);
+    json.metric("hedge", "fire_rate", fire_rate);
+    json.metric("hedge", "win_rate", win_rate);
+    json.metric("hedge", "cancel_rate", cancel_rate);
+    json.metric("lifecycle", "retried", t.retried as f64);
+    json.metric("lifecycle", "expired", t.expired as f64);
+    json.metric("latency", "p99_hedged_s", p99_hedged);
+    json.metric("latency", "p99_blind_s", p99_blind);
+    json.metric("aggregate", "goodput_retained_frac", retained);
+    json.metric("aggregate", "hedge_fire_rate", fire_rate);
+    json.metric("aggregate", "hedge_win_rate", win_rate);
+    json.metric("aggregate", "hedge_cancel_rate", cancel_rate);
+    json.metric("aggregate", "p99_hedged_s", p99_hedged);
+    json.metric("aggregate", "p99_blind_s", p99_blind);
+
+    let bench_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join("BENCH_retry.json");
+    json.write(&bench_path).expect("write BENCH_retry.json");
+    println!("\nwrote {}", bench_path.display());
+}

@@ -246,6 +246,48 @@
 //!   strongest-EP fail-stop beside the analytic surviving-capacity
 //!   fraction, and cold- vs warm-cache re-plan latency.
 //!
+//! ## Request lifecycle & hedging
+//!
+//! The lifecycle layer ([`serve::RetryPolicy`], [`serve::HedgePolicy`],
+//! `serve --deadline S --retry MAX[:BASE_S[:CAP_S]]
+//! --hedge p50|p90|p95|p99|Q[:MIN_S]`) hardens individual requests
+//! against queueing delay and slow replicas — deterministically, so a
+//! hedged disaster run is as replayable as a blind one:
+//!
+//! * **deadlines** — [`serve::TenantSpec::with_deadline`] gives every
+//!   request a latency budget from arrival; a request still queued when
+//!   its budget expires is reaped by an ordinary heap event (trace tag
+//!   9), counted in [`serve::TenantReport::expired`] and folded into
+//!   flow conservation (`offered == rejected + dropped + expired +
+//!   cancelled + completed + in-flight`, per-run *and* per-epoch via
+//!   [`serve::TenantReport::epoch_conserved`]);
+//! * **retry with backoff** — rejected, dropped and expired requests
+//!   re-enter admission after exponential backoff with *decorrelated
+//!   jitter*, computed RNG-free as an FNV hash of
+//!   `(seed, tenant, request id, attempt)` — retries perturb no other
+//!   tenant's randomness and two runs schedule byte-identical retry
+//!   times (trace tag 10, [`serve::TenantReport::retried`]);
+//! * **hedged requests** — when a queued request's age crosses the
+//!   tenant's observed p9x latency (the hedge quantile reads the same
+//!   streaming sketch the SLO accounting uses), the engine duplicates it
+//!   onto the least-loaded *sibling* replica (trace tag 11); the first
+//!   completion wins and the loser is cancelled in place (tag 12) with
+//!   its slab slot recycled and any balancer credit reversed — one
+//!   logical request never double-counts
+//!   ([`serve::TenantReport::hedged`], `hedge_wins`, `cancelled`);
+//! * **off means off** — a tenant with no deadline, no retry policy and
+//!   no hedge policy schedules none of these events: runs, traces (which
+//!   stay on wire v3; lifecycle-active recordings negotiate v4) and
+//!   telemetry exports are byte-identical to a build without the layer,
+//!   pinned by `tests/lifecycle.rs`;
+//! * **measurement** — `serve --sweep --hedge-grid` grids blind vs
+//!   lifecycle-on serving under chaos faults
+//!   ([`serve::sweep::hedge_grid`]), `--what-if hedge=on|off` replays a
+//!   recorded storm with hedging counterfactually toggled, and `cargo
+//!   bench --bench hedge_recovery` writes `BENCH_retry.json` (goodput
+//!   retained under an EP stall with the lifecycle on — envelope:
+//!   ≥ 0.95 — hedge fire/win/cancel rates, and p99 with vs without).
+//!
 //! ## Observability & telemetry
 //!
 //! The telemetry plane ([`serve::obs`], `serve --metrics FILE.jsonl`
@@ -278,7 +320,7 @@
 //!   t=42s?" has a recorded answer;
 //! * **retroactive derivation** — `trace analyze FILE.trace`
 //!   ([`serve::replay_observed`]) re-simulates any recorded trace (format
-//!   versions v1 through v3) with the telemetry plane on and derives the
+//!   versions v1 through v4) with the telemetry plane on and derives the
 //!   identical epoch series + journal a live `--metrics` run would have
 //!   written — byte-for-byte, asserted in CI — so every historical
 //!   recording is a full telemetry source after the fact.

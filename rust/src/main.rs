@@ -134,6 +134,21 @@ const SERVE_FLAGS: &[FlagSpec] = &[
         help: "admission policy: reject | drop-oldest",
     },
     FlagSpec {
+        name: "deadline",
+        value: "S",
+        help: "per-request deadline budget in seconds",
+    },
+    FlagSpec {
+        name: "retry",
+        value: "SPEC",
+        help: "retry rejected/expired requests (RETRY grammar below)",
+    },
+    FlagSpec {
+        name: "hedge",
+        value: "SPEC",
+        help: "hedge queued stragglers (HEDGE grammar below)",
+    },
+    FlagSpec {
         name: "seed",
         value: "N",
         help: "master RNG seed (default 42)",
@@ -206,7 +221,7 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "what-if",
         value: "K=V,..",
-        help: "with --replay: counterfactual overrides (incl. faults)",
+        help: "with --replay: counterfactual overrides (incl. faults, hedge)",
     },
     FlagSpec {
         name: "metrics",
@@ -285,6 +300,11 @@ const SERVE_SWEEP_FLAGS: &[FlagSpec] = &[
         name: "elastic-grid",
         value: "",
         help: "static vs live co-plan on anti-phase tidal load",
+    },
+    FlagSpec {
+        name: "hedge-grid",
+        value: "",
+        help: "blind vs lifecycle (retry+hedge) under chaos faults",
     },
     FlagSpec {
         name: "balancer",
@@ -374,6 +394,7 @@ fn print_usage() {
          \x20                      | piecewise:R@T,R@T,.. | trace:FILE\n\
          \x20                SCRIPT: epfail:EP@T | epstall:EP@T+D | epslow:EPxF@T+D\n\
          \x20                      | chipfail:C@T | linkslow:F@T+D | linkcut@T+D\n\
+         \x20                RETRY: MAX[:BASE_S[:CAP_S]]   HEDGE: p50|p90|p95|p99|Q[:MIN_S]\n\
            serve --sweep  parallel scenario grid (grids are mutually exclusive):"
     );
     print!("{}", render_flags(SERVE_SWEEP_FLAGS, "                 "));
@@ -549,6 +570,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "drop-oldest" | "dropoldest" => AdmissionPolicy::DropOldest,
         other => bail!("unknown --policy {other:?} (reject, drop-oldest)"),
     };
+    let deadline_s: Option<f64> = args.get_parsed::<f64>("deadline")?;
+    if let Some(d) = deadline_s {
+        if !d.is_finite() || d <= 0.0 {
+            bail!("--deadline must be a finite number of seconds > 0");
+        }
+    }
+    let retry = match args.get("retry") {
+        Some(spec) => Some(shisha::serve::RetryPolicy::parse(spec)?),
+        None => None,
+    };
+    let hedge = match args.get("hedge") {
+        Some(spec) => Some(shisha::serve::HedgePolicy::parse(spec)?),
+        None => None,
+    };
+    if hedge.is_some() && shards < 2 {
+        bail!("--hedge needs --shards ≥ 2: a hedge duplicates onto a sibling replica");
+    }
     let duration_s: f64 = args.parsed_or("duration", 60.0)?;
     let faults = if let Some(script) = args.get("faults") {
         FaultScript::parse(script)?
@@ -599,13 +637,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .or_insert_with(|| shisha::serve::shisha_config(&net, &plat))
             .clone();
         println!("  tenant {i}: {net_name}, arrivals {spec_str}, config {}", config.describe());
-        let spec = TenantSpec::new(format!("{net_name}-{i}"), net, arrivals)
+        let mut spec = TenantSpec::new(format!("{net_name}-{i}"), net, arrivals)
             .with_slo(slo_ms * 1e-3)
             .with_queue_capacity(queue)
             .with_batch(batch)
             .with_admission(policy)
             .with_shards(shards)
             .with_balancer(balancer);
+        if let Some(d) = deadline_s {
+            spec = spec.with_deadline(d);
+        }
+        if let Some(r) = retry {
+            spec = spec.with_retry(r);
+        }
+        if let Some(h) = hedge {
+            spec = spec.with_hedge(h);
+        }
         tenants.push((spec, config));
     }
 
@@ -625,6 +672,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             opts.elastic.min_gain_frac * 100.0,
             opts.elastic.cooldown_epochs
         );
+    }
+    if let Some(d) = deadline_s {
+        println!("lifecycle: per-request deadline {d}s (queued requests reaped at expiry)");
+    }
+    if let Some(r) = retry {
+        println!("lifecycle: retry {} (max:base:cap, decorrelated jitter)", r.describe());
+    }
+    if let Some(h) = hedge {
+        println!("lifecycle: hedge {} (quantile:min-delay, first completion wins)", h.describe());
     }
     if !opts.faults.is_empty() {
         println!("fault plane: {}", opts.faults.describe());
@@ -671,6 +727,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         if t.repartitions > 0 {
             println!("  elastic: {} re-partition(s)", t.repartitions);
+        }
+        if t.expired + t.cancelled + t.retried + t.hedged > 0 {
+            println!(
+                "  lifecycle: {} expired / {} retried / {} hedged / {} hedge-cancelled",
+                t.expired, t.retried, t.hedged, t.cancelled
+            );
         }
         if t.shards.len() > 1 {
             for (i, s) in t.shards.iter().enumerate() {
@@ -942,6 +1004,19 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             }
         }
     }
+    let hedge_grid = args.has_flag("hedge-grid");
+    if hedge_grid {
+        for (other, set) in [
+            ("--shard-grid", shard_grid.is_some()),
+            ("--autoscale-grid", autoscale_grid.is_some()),
+            ("--fault-grid", fault_grid.is_some()),
+            ("--elastic-grid", elastic_grid),
+        ] {
+            if set {
+                bail!("{other} and --hedge-grid are mutually exclusive");
+            }
+        }
+    }
     let balancer = shisha::serve::BalancerPolicy::parse(args.get_or("balancer", "jsq"))?;
     let mut scenarios = Vec::new();
     if let Some(path) = args.get("replay") {
@@ -960,6 +1035,12 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
             bail!(
                 "--replay and --fault-grid are mutually exclusive (use \
                  serve --replay FILE --what-if faults=SCRIPT for fault counterfactuals)"
+            );
+        }
+        if hedge_grid {
+            bail!(
+                "--replay and --hedge-grid are mutually exclusive (use \
+                 serve --replay FILE --what-if hedge=on/off for hedge counterfactuals)"
             );
         }
         let trace = Trace::load(std::path::Path::new(path))?;
@@ -997,6 +1078,22 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     &rho_grid,
                     &seeds,
                     &fault_base,
+                ));
+            } else if hedge_grid {
+                // hedge delays and retry backoffs play out across control
+                // epochs; give the loop many epochs unless set explicitly
+                let mut hg_base = base.clone();
+                if args.get("epoch").is_none() {
+                    hg_base.control_epoch_s = hg_base.duration_s / 40.0;
+                }
+                scenarios.extend(sweep::hedge_grid(
+                    &plat,
+                    &net,
+                    &config,
+                    balancer,
+                    &rho_grid,
+                    &seeds,
+                    &hg_base,
                 ));
             } else if elastic_grid {
                 // the anti-phase comparison wants many control epochs per
@@ -1079,6 +1176,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
         "EP-epochs",
         "scale events",
         "repartitions",
+        "exp/ret/hed/can",
         "cache h/m",
     ]);
     let mut total_events = 0u64;
@@ -1102,6 +1200,10 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     stats.ep_epochs.to_string(),
                     stats.scale_events.to_string(),
                     stats.repartitions.to_string(),
+                    format!(
+                        "{}/{}/{}/{}",
+                        stats.expired, stats.retried, stats.hedged, stats.cancelled
+                    ),
                     format!("{}/{}", stats.cache_hits, stats.cache_misses),
                 ]);
             }
@@ -1114,6 +1216,7 @@ fn cmd_serve_sweep(args: &Args) -> Result<()> {
                     "-".into(),
                     "-".into(),
                     "ERROR".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),

@@ -123,6 +123,7 @@ use super::cluster::autoscale::{
 };
 use super::cluster::coplan::{self, TenantDemand};
 use super::fault::{FaultKind, FaultScript};
+use super::lifecycle::{self, RetryPolicy};
 use super::obs::{
     self, EpochSample, Obs, ObsReport, Prof, ReplicaSample, Span, TenantSample,
 };
@@ -263,13 +264,29 @@ impl Default for ServeOptions {
 }
 
 /// One request travelling through a tenant's pipeline. Lives in the
-/// tenant's slab arena; queues and batches refer to it by index.
+/// tenant's slab arena; queues and batches refer to it by index. A hedged
+/// logical request exists as **two** arena entries (possibly in different
+/// replicas' arenas) sharing one `id`; the lifecycle flags below resolve
+/// the race when both copies run.
 #[derive(Debug, Clone)]
 struct Request {
     id: u64,
     arrival_s: f64,
     /// Layers completed so far (used to re-bin across reconfigurations).
     layers_done: usize,
+    /// Admission attempt this entry arrived under (1 = the original
+    /// arrival; retries re-arrive with 2, 3, …) — read back when the
+    /// request is rejected/dropped/expired to compute the next backoff.
+    attempt: u32,
+    /// This id has (or had) a hedge twin; completion must consult the
+    /// tenant's hedge registry to decide winner vs late loser.
+    hedged: bool,
+    /// The other copy already won: discard at delivery, count `cancelled`,
+    /// never record a latency.
+    doomed: bool,
+    /// This entry is the duplicated copy (distinguishes hedge *wins* from
+    /// primaries finishing first; accounting only).
+    twin: bool,
 }
 
 /// A batch being serviced (or completed and awaiting downstream room).
@@ -317,6 +334,16 @@ pub struct EpochStats {
     pub rejected: u64,
     /// Dropped (DropOldest) requests during the epoch.
     pub dropped: u64,
+    /// Deadline-expired requests reaped from queues during the epoch.
+    pub expired: u64,
+    /// Hedge losers cancelled during the epoch (queued reaps plus doomed
+    /// in-service copies discarded at delivery).
+    pub cancelled: u64,
+    /// Re-arrivals (retry attempts ≥ 2) offered during the epoch — a
+    /// subset of `offered`.
+    pub retried: u64,
+    /// Hedge twins placed during the epoch — a subset of `offered`.
+    pub hedged: u64,
     /// SLO goodput, requests/second.
     pub goodput: f64,
     /// Raw completion throughput, requests/second.
@@ -355,6 +382,17 @@ pub struct ShardReport {
     pub rejected: u64,
     /// Admitted requests dropped later (DropOldest).
     pub dropped: u64,
+    /// Deadline-expired requests reaped from this replica's queues.
+    pub expired: u64,
+    /// Hedge-loser copies cancelled on this replica.
+    pub cancelled: u64,
+    /// Re-arrivals (retry attempts) routed to this replica — a subset of
+    /// `offered`.
+    pub retried: u64,
+    /// Hedge twins placed onto this replica — a subset of `offered`.
+    pub hedged: u64,
+    /// Hedged races won by a *twin* completing on this replica.
+    pub hedge_wins: u64,
     /// Requests completed by this replica.
     pub completed: u64,
     /// Completions within the SLO.
@@ -399,6 +437,20 @@ pub struct TenantReport {
     pub rejected: u64,
     /// Admitted requests dropped later (DropOldest).
     pub dropped: u64,
+    /// Deadline-expired requests reaped from queues (0 without a finite
+    /// [`TenantSpec::deadline_s`]).
+    pub expired: u64,
+    /// Hedge-loser copies cancelled after the sibling copy won the race
+    /// (0 without a hedge policy).
+    pub cancelled: u64,
+    /// Re-arrivals offered by the retry policy — a subset of `offered`
+    /// (0 without a retry policy).
+    pub retried: u64,
+    /// Hedge twins placed onto sibling replicas — a subset of `offered`
+    /// (0 without a hedge policy).
+    pub hedged: u64,
+    /// Hedged races won by the duplicated *twin* rather than the primary.
+    pub hedge_wins: u64,
     /// Requests fully completed.
     pub completed: u64,
     /// Completions within the SLO.
@@ -452,12 +504,19 @@ impl TenantReport {
 
     /// Request conservation: every offered request is accounted for.
     pub fn conserved(&self) -> bool {
-        self.offered == self.rejected + self.dropped + self.completed + self.in_flight
+        self.offered
+            == self.rejected
+                + self.dropped
+                + self.expired
+                + self.cancelled
+                + self.completed
+                + self.in_flight
     }
 
     /// Per-epoch request conservation: for every epoch of the aggregated
     /// series, `offered + backlog_prev == completed + rejected + dropped
-    /// + backlog` (the first epoch starts from an empty system). This is
+    /// + expired + cancelled + backlog` (the first epoch starts from an
+    /// empty system). This is
     /// the flow identity the epoch shed meter is derived from — a request
     /// admitted and later dropped in the same epoch counts once, as a
     /// drop, never as both an admission and a shed. Trivially true for an
@@ -466,7 +525,9 @@ impl TenantReport {
     pub fn epoch_conserved(&self) -> bool {
         let mut backlog_prev = 0u64;
         for e in &self.epochs {
-            if e.offered + backlog_prev != e.completed + e.rejected + e.dropped + e.backlog {
+            if e.offered + backlog_prev
+                != e.completed + e.rejected + e.dropped + e.expired + e.cancelled + e.backlog
+            {
                 return false;
             }
             backlog_prev = e.backlog;
@@ -550,6 +611,16 @@ enum EvKind {
     StageDone { tenant: usize, shard: usize, stage: usize, gen: u64 },
     Epoch,
     Resume { tenant: usize, shard: usize },
+    /// Deadline check for request `id`: any copy still **queued** at fire
+    /// time is reaped (`expired`); in-service copies are left to finish.
+    /// Scheduled only for tenants with a finite [`TenantSpec::deadline_s`].
+    Expire { tenant: usize, id: u64 },
+    /// A backed-off re-arrival (attempt ≥ 2); admitted through the normal
+    /// front door under a fresh request id.
+    Retry { tenant: usize, attempt: u32 },
+    /// Hedge check for request `id`: if it is still waiting in an entry
+    /// queue, duplicate it onto the least-loaded sibling replica.
+    Hedge { tenant: usize, id: u64 },
     /// A scripted fault boundary: `ix` indexes [`ServeOptions::faults`],
     /// `begin` distinguishes the window start from its end (fail-stops
     /// have no end event).
@@ -857,6 +928,11 @@ struct ShardRt {
     offered: u64,
     rejected: u64,
     dropped: u64,
+    expired: u64,
+    cancelled: u64,
+    retried: u64,
+    hedged: u64,
+    hedge_wins: u64,
     completed: u64,
     slo_ok: u64,
     max_queue_len: usize,
@@ -867,6 +943,10 @@ struct ShardRt {
     ep_slo_ok: u64,
     ep_rejected: u64,
     ep_dropped: u64,
+    ep_expired: u64,
+    ep_cancelled: u64,
+    ep_retried: u64,
+    ep_hedged: u64,
     baseline_goodput: f64,
     epochs_since_retune: u32,
     retunes: u32,
@@ -894,7 +974,15 @@ impl ShardRt {
     /// Place a new request in the arena, reusing a freed slot when one
     /// exists (steady state: no allocation).
     fn alloc(&mut self, id: u64, arrival_s: f64) -> u32 {
-        let req = Request { id, arrival_s, layers_done: 0 };
+        let req = Request {
+            id,
+            arrival_s,
+            layers_done: 0,
+            attempt: 1,
+            hedged: false,
+            doomed: false,
+            twin: false,
+        };
         if let Some(ix) = self.free_slots.pop() {
             self.arena[ix as usize] = req;
             ix
@@ -951,7 +1039,28 @@ struct TenantRt {
     load_shed: bool,
     /// Elastic EP-budget re-partitions applied to this tenant.
     repartitions: u32,
+    /// Request-lifecycle state (hedge registry, pending winner list, the
+    /// derived hedge delay). Inert unless the spec enables a policy.
+    lc: TenantLc,
     shards: Vec<ShardRt>,
+}
+
+/// Per-tenant request-lifecycle runtime state.
+#[derive(Debug, Default)]
+struct TenantLc {
+    /// Ids with a live hedged pair (both copies still racing). BTreeSet
+    /// for deterministic iteration; removed at the first completion,
+    /// expiry, or eviction of either copy.
+    hedges: std::collections::BTreeSet<u64>,
+    /// Ids whose winning copy just completed; the surviving loser copy is
+    /// reaped (queued) or doomed (in service) by [`reap_hedge_losers`]
+    /// right after the settle pass that delivered the winner.
+    won: Vec<u64>,
+    /// Current hedge-fire delay, seconds: the tenant's observed p9x
+    /// latency (merged across replicas) floored by the policy's
+    /// `min_delay_s`; falls back to the SLO budget while the latency
+    /// sketch is cold. Re-derived every control epoch.
+    hedge_delay_s: f64,
 }
 
 impl TenantRt {
@@ -1052,7 +1161,17 @@ impl TenantRt {
 /// Move a completed batch forward: finish requests on the last stage, or
 /// shift them into the downstream queue while it has room. Returns true on
 /// any progress.
-fn deliver_stage(spec: &TenantSpec, t: &mut ShardRt, si: usize) -> bool {
+#[allow(clippy::too_many_arguments)]
+fn deliver_stage(
+    spec: &TenantSpec,
+    t: &mut ShardRt,
+    lc: &mut TenantLc,
+    sh: &mut Shared,
+    ti: usize,
+    shard_ix: usize,
+    si: usize,
+    now: f64,
+) -> bool {
     let is_completed = matches!(&t.stages[si].busy, Some(inf) if inf.completed);
     if !is_completed {
         return false;
@@ -1063,7 +1182,31 @@ fn deliver_stage(spec: &TenantSpec, t: &mut ShardRt, si: usize) -> bool {
         let inf = t.stages[si].busy.take().expect("checked above");
         let slo = spec.slo_latency_s;
         for &ix in &inf.reqs[inf.taken..] {
-            let lat = inf.done_s - t.arena[ix as usize].arrival_s;
+            let req = t.arena[ix as usize].clone();
+            if req.doomed || (req.hedged && !lc.hedges.contains(&req.id)) {
+                // Hedge loser: the sibling copy already won this race.
+                // Discard the result — counted `cancelled`, never a
+                // completion, never a latency sample (quantiles stay over
+                // logical requests, not copies).
+                t.cancelled += 1;
+                t.ep_cancelled += 1;
+                sh.note(now, 12, pack_ts(ti, shard_ix), req.id, || {
+                    format!("{now:.6} cancel {}#{} r{shard_ix} lost-race", spec.name, req.id)
+                });
+                t.free_slots.push(ix);
+                continue;
+            }
+            if req.hedged {
+                // First completion of a live hedged pair: this copy wins;
+                // the surviving loser is reaped/doomed right after this
+                // settle pass (see `reap_hedge_losers`).
+                lc.hedges.remove(&req.id);
+                lc.won.push(req.id);
+                if req.twin {
+                    t.hedge_wins += 1;
+                }
+            }
+            let lat = inf.done_s - req.arrival_s;
             t.completed += 1;
             t.ep_completed += 1;
             if lat <= slo {
@@ -1262,6 +1405,7 @@ fn can_progress(spec: &TenantSpec, t: &ShardRt, sh: &Shared, si: usize, now: f64
 fn settle(
     spec: &TenantSpec,
     t: &mut ShardRt,
+    lc: &mut TenantLc,
     sh: &mut Shared,
     ti: usize,
     shard_ix: usize,
@@ -1285,7 +1429,7 @@ fn settle(
         while cur != 0 {
             let si = 63 - cur.leading_zeros() as usize;
             cur &= !(1u64 << si);
-            if deliver_stage(spec, t, si) {
+            if deliver_stage(spec, t, lc, sh, ti, shard_ix, si, now) {
                 // the downstream queue grew and this stage may deliver
                 // again / have been freed: both are at or above the scan
                 // position, so they belong to the next round
@@ -1384,6 +1528,232 @@ fn requeue_orphans(spec: &TenantSpec, t: &mut ShardRt, orphans: Vec<u32>) {
             t.config.stage_of_layer(layers_done).expect("layer in range")
         };
         t.stages[si].queue.push_back(ix);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request lifecycle: deadlines, retry/backoff, hedging
+
+/// Schedule a backed-off re-arrival for a refused request, if the tenant
+/// has a retry policy with budget left. `attempt` is the ordinal of the
+/// attempt that just failed (1 = the original arrival), so a policy with
+/// `max_attempts = k` produces at most `k` re-arrivals per logical
+/// request. The jitter is a pure hash of `(seed, tenant, id, attempt)` —
+/// RNG-free, so recorded traces replay bit-identically.
+fn schedule_retry(
+    sh: &mut Shared,
+    retry: Option<RetryPolicy>,
+    opts: &ServeOptions,
+    ti: usize,
+    id: u64,
+    attempt: u32,
+    now: f64,
+) {
+    let Some(rp) = retry else { return };
+    if rp.max_attempts == 0 || attempt > rp.max_attempts {
+        return;
+    }
+    let u = lifecycle::jitter_u01(opts.seed, ti as u64, id, attempt);
+    let at = now + rp.delay_s(attempt, u);
+    if at <= opts.duration_s {
+        sh.schedule(at, EvKind::Retry { tenant: ti, attempt: attempt + 1 });
+    }
+}
+
+/// One copy of a hedged pair left the system abnormally (evicted by
+/// DropOldest or reaped by a deadline): dissolve the hedge. The surviving
+/// copy — wherever it is queued, in service, or mid-migration — becomes an
+/// ordinary request again, so its eventual completion counts normally.
+fn unhedge(t: &mut TenantRt, id: u64) {
+    t.lc.hedges.remove(&id);
+    for srt in &mut t.shards {
+        // ids are never reused within a tenant, so scanning the arena is
+        // safe: stale freed slots with this id are unreachable and
+        // clearing their flags is harmless
+        for req in &mut srt.arena {
+            if req.id == id {
+                req.hedged = false;
+                req.twin = false;
+            }
+        }
+    }
+}
+
+/// Run one request through tenant `ti`'s admission front door at replica
+/// `s` — shared by first arrivals and retry re-arrivals. Counts it
+/// offered, applies load-shed / queue-capacity policy, and on admission
+/// arms the request's deadline and hedge events. With every lifecycle
+/// policy off this is byte-for-byte the pre-lifecycle admission path: no
+/// extra events are scheduled and no extra notes are hashed.
+#[allow(clippy::too_many_arguments)]
+fn admit_request(
+    t: &mut TenantRt,
+    sh: &mut Shared,
+    opts: &ServeOptions,
+    ti: usize,
+    s: usize,
+    now: f64,
+    id: u64,
+    attempt: u32,
+) {
+    t.offered += 1;
+    t.next_id += 1;
+    let cap = t.spec.queue_capacity;
+    let admission = t.spec.admission;
+    let load_shed = t.load_shed;
+    let retry = t.spec.retry;
+    let deadline_s = t.spec.deadline_s;
+    let hedge_armed = t.spec.hedge.is_some() && t.shards.len() > 1;
+    let hedge_delay_s = t.lc.hedge_delay_s;
+    let srt = &mut t.shards[s];
+    srt.offered += 1;
+    srt.ep_offered += 1;
+    let mut evicted: Option<Request> = None;
+    if load_shed {
+        // gracefully degraded: the tenant is shed this epoch — the
+        // arrival is counted and rejected at admission regardless of
+        // queue room (offered == rejected for shed arrivals, so
+        // conservation holds untouched). Sheds are *intentional*
+        // capacity decisions, so they are never retried: a retry would
+        // re-offer the exact demand the control plane just shed.
+        srt.rejected += 1;
+        srt.ep_rejected += 1;
+        sh.obs_admit(ti, obs::ADM_SHED);
+        return;
+    } else if srt.stages[0].queue.len() >= cap {
+        match admission {
+            AdmissionPolicy::Reject => {
+                srt.rejected += 1;
+                srt.ep_rejected += 1;
+                sh.obs_admit(ti, obs::ADM_REJECT);
+                schedule_retry(sh, retry, opts, ti, id, attempt, now);
+                return;
+            }
+            AdmissionPolicy::DropOldest => {
+                if let Some(old) = srt.stages[0].queue.pop_front() {
+                    evicted = Some(srt.arena[old as usize].clone());
+                    srt.free_slots.push(old);
+                }
+                srt.dropped += 1;
+                srt.ep_dropped += 1;
+                sh.obs_admit(ti, obs::ADM_DROP);
+                let ix = srt.alloc(id, now);
+                srt.arena[ix as usize].attempt = attempt;
+                srt.stages[0].queue.push_back(ix);
+            }
+        }
+    } else {
+        sh.obs_admit(ti, obs::ADM_ADMIT);
+        let ix = srt.alloc(id, now);
+        srt.arena[ix as usize].attempt = attempt;
+        srt.stages[0].queue.push_back(ix);
+        let l = srt.stages[0].queue.len();
+        if l > srt.max_queue_len {
+            srt.max_queue_len = l;
+        }
+    }
+    // the new request was admitted: arm its lifecycle events
+    if deadline_s.is_finite() {
+        let at = now + deadline_s;
+        if at <= opts.duration_s {
+            sh.schedule(at, EvKind::Expire { tenant: ti, id });
+        }
+    }
+    if hedge_armed {
+        let at = now + hedge_delay_s;
+        if at <= opts.duration_s {
+            sh.schedule(at, EvKind::Hedge { tenant: ti, id });
+        }
+    }
+    if let Some(victim) = evicted {
+        if victim.hedged {
+            // the evicted copy's sibling still carries the logical
+            // request: dissolve the hedge, never retry
+            unhedge(t, victim.id);
+        } else {
+            schedule_retry(sh, retry, opts, ti, victim.id, victim.attempt, now);
+        }
+    }
+}
+
+/// Resolve freshly-won hedge races: for every id whose winning copy just
+/// completed (`lc.won`), cancel the losing copy. A loser still queued is
+/// reaped on the spot — its slot freed, its queue position released
+/// (which can unblock an upstream stage stalled on the full queue, hence
+/// the re-settle) — while a loser already in service is doomed and
+/// discarded at delivery without a latency sample. Re-settling can
+/// complete further hedged winners; the loop drains until quiet.
+fn reap_hedge_losers(
+    t: &mut TenantRt,
+    sh: &mut Shared,
+    ti: usize,
+    now: f64,
+    opts: &ServeOptions,
+    full_rescan: bool,
+) {
+    while let Some(id) = t.lc.won.pop() {
+        let wtp = t.spec.balancer == BalancerPolicy::WeightedThroughput;
+        for si in 0..t.shards.len() {
+            let mut touched = false;
+            let mut found = false;
+            {
+                let srt = &mut t.shards[si];
+                for st_ix in 0..srt.stages.len() {
+                    let pos = srt.stages[st_ix]
+                        .queue
+                        .iter()
+                        .position(|&ix| srt.arena[ix as usize].id == id);
+                    if let Some(p) = pos {
+                        let ix = srt.stages[st_ix].queue.remove(p).expect("position just found");
+                        let was_twin = srt.arena[ix as usize].twin;
+                        srt.cancelled += 1;
+                        srt.ep_cancelled += 1;
+                        srt.free_slots.push(ix);
+                        sh.note(now, 12, pack_ts(ti, si), id, || {
+                            format!("{now:.6} cancel {}#{id} r{si} reaped", t.spec.name)
+                        });
+                        if was_twin && wtp {
+                            // the twin was charged one smooth-WRR credit
+                            // at placement but never served: refund it
+                            srt.credit += srt.weight;
+                        }
+                        touched = true;
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    'doom: for st in &mut srt.stages {
+                        if let Some(inf) = st.busy.as_mut() {
+                            for &ix in &inf.reqs[inf.taken..] {
+                                if srt.arena[ix as usize].id == id {
+                                    srt.arena[ix as usize].doomed = true;
+                                    found = true;
+                                    break 'doom;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if touched {
+                settle(
+                    &t.spec,
+                    &mut t.shards[si],
+                    &mut t.lc,
+                    sh,
+                    ti,
+                    si,
+                    now,
+                    opts.duration_s,
+                    u64::MAX,
+                    full_rescan,
+                );
+            }
+            if found {
+                break;
+            }
+        }
     }
 }
 
@@ -1578,14 +1948,15 @@ fn fault_failover(
                     let sibling_weight = t.shards[sj].weight;
                     let n_layers = t.spec.net.len();
                     for ix in orphans {
-                        let (id, arr, ld) = {
-                            let r = &t.shards[si].arena[ix as usize];
-                            (r.id, r.arrival_s, r.layers_done)
-                        };
+                        let r = t.shards[si].arena[ix as usize].clone();
                         t.shards[si].free_slots.push(ix);
+                        let ld = r.layers_done;
                         let dst = &mut t.shards[sj];
-                        let jx = dst.alloc(id, arr);
-                        dst.arena[jx as usize].layers_done = ld;
+                        let jx = dst.alloc(r.id, r.arrival_s);
+                        // migration preserves the full lifecycle state
+                        // (attempt / hedged / doomed / twin), not just
+                        // the layer position
+                        dst.arena[jx as usize] = r;
                         let stage = if ld >= n_layers {
                             dst.stages.len() - 1
                         } else {
@@ -1656,6 +2027,7 @@ fn fault_failover(
                     settle(
                         &t.spec,
                         &mut t.shards[sj],
+                        &mut t.lc,
                         sh,
                         ti,
                         sj,
@@ -1917,6 +2289,10 @@ fn epoch_tick(
         slo_ok: t.ep_slo_ok,
         rejected: t.ep_rejected,
         dropped: t.ep_dropped,
+        expired: t.ep_expired,
+        cancelled: t.ep_cancelled,
+        retried: t.ep_retried,
+        hedged: t.ep_hedged,
         goodput,
         throughput,
         backlog,
@@ -1933,6 +2309,10 @@ fn epoch_tick(
     t.ep_slo_ok = 0;
     t.ep_rejected = 0;
     t.ep_dropped = 0;
+    t.ep_expired = 0;
+    t.ep_cancelled = 0;
+    t.ep_retried = 0;
+    t.ep_hedged = 0;
     // stale contention estimates relax towards 1.0 (uncontended) between
     // epochs so EPs the tenant migrated away from — which no longer
     // produce completions to update the EWMA — become eligible again
@@ -1997,7 +2377,11 @@ fn autoscale_tick(t: &mut TenantRt, sh: &mut Shared, ti: usize, now: f64, opts: 
                 0
             };
             flow_in += e.offered + backlog_prev;
-            flow_out += e.completed + e.backlog;
+            // expired and hedge-cancelled requests left the system served
+            // by *policy*, not shed by capacity — they sit on the outflow
+            // side of the identity so the shed meter stays a pure
+            // unmet-demand signal
+            flow_out += e.completed + e.backlog + e.expired + e.cancelled;
         }
     }
     let shed = flow_in.saturating_sub(flow_out);
@@ -2242,7 +2626,9 @@ fn elastic_tick(
                     0
                 };
                 flow_in += e.offered + backlog_prev;
-                flow_out += e.completed + e.backlog;
+                // policy exits (expiry, hedge cancellation) are outflow,
+                // not shed — same identity as the autoscaler's meter
+                flow_out += e.completed + e.backlog + e.expired + e.cancelled;
             }
             backlog += srt.backlog();
         }
@@ -2334,16 +2720,15 @@ fn elastic_tick(
             let orphans = detach_replica(&mut t.shards[si], sh);
             let n_orphans = orphans.len();
             for (k, ix) in orphans.into_iter().enumerate() {
-                let (id, arr, ld) = {
-                    let r = &t.shards[si].arena[ix as usize];
-                    (r.id, r.arrival_s, r.layers_done)
-                };
+                let r = t.shards[si].arena[ix as usize].clone();
                 t.shards[si].free_slots.push(ix);
+                let ld = r.layers_done;
                 // deterministic spread over the survivors, oldest first
                 let sj = k % m;
                 let dst = &mut t.shards[sj];
-                let jx = dst.alloc(id, arr);
-                dst.arena[jx as usize].layers_done = ld;
+                let jx = dst.alloc(r.id, r.arrival_s);
+                // migration preserves the full lifecycle state too
+                dst.arena[jx as usize] = r;
                 let stage = if ld >= n_layers {
                     dst.stages.len() - 1
                 } else {
@@ -2416,6 +2801,7 @@ fn elastic_tick(
             settle(
                 &t.spec,
                 &mut t.shards[si],
+                &mut t.lc,
                 sh,
                 ti,
                 si,
@@ -2618,6 +3004,11 @@ fn serve_inner(
                 offered: 0,
                 rejected: 0,
                 dropped: 0,
+                expired: 0,
+                cancelled: 0,
+                retried: 0,
+                hedged: 0,
+                hedge_wins: 0,
                 completed: 0,
                 slo_ok: 0,
                 max_queue_len: 0,
@@ -2627,6 +3018,10 @@ fn serve_inner(
                 ep_slo_ok: 0,
                 ep_rejected: 0,
                 ep_dropped: 0,
+                ep_expired: 0,
+                ep_cancelled: 0,
+                ep_retried: 0,
+                ep_hedged: 0,
                 baseline_goodput: 0.0,
                 epochs_since_retune: opts.retune_cooldown_epochs,
                 retunes: 0,
@@ -2637,6 +3032,14 @@ fn serve_inner(
             });
         }
         let sampler = spec.arrivals.sampler(master.fork());
+        // the hedge delay starts at the policy minimum (at least the SLO
+        // budget): the latency sketch is cold until the first epoch
+        let lc = TenantLc {
+            hedge_delay_s: spec
+                .hedge
+                .map_or(f64::INFINITY, |h| spec.slo_latency_s.max(h.min_delay_s)),
+            ..TenantLc::default()
+        };
         rts.push(TenantRt {
             sampler,
             next_id: 0,
@@ -2646,6 +3049,7 @@ fn serve_inner(
             n_active: shards.len(),
             load_shed: false,
             repartitions: 0,
+            lc,
             shards,
             spec,
         });
@@ -2675,7 +3079,8 @@ fn serve_inner(
     if want_obs {
         let roster: Vec<(String, usize)> =
             rts.iter().map(|t| (t.spec.name.clone(), t.shards.len())).collect();
-        let mut o = Obs::new(plat.n_eps(), &roster);
+        let lifecycle = rts.iter().any(|t| t.spec.lifecycle_active());
+        let mut o = Obs::new(plat.n_eps(), &roster, lifecycle);
         // the co-plan decisions pre-date the first event; journal them at
         // t = 0 so the causality timeline starts with the initial
         // allocation (mirrors the Coplan seeds the capture records)
@@ -2751,49 +3156,7 @@ fn serve_inner(
                 sh.note(now, 1, pack_ts(tenant, s), id, || {
                     format!("{now:.6} arrival {}#{id}->r{s}", t.spec.name)
                 });
-                t.offered += 1;
-                t.next_id += 1;
-                let cap = t.spec.queue_capacity;
-                let admission = t.spec.admission;
-                let load_shed = t.load_shed;
-                let srt = &mut t.shards[s];
-                srt.offered += 1;
-                srt.ep_offered += 1;
-                if load_shed {
-                    // gracefully degraded: the tenant is shed this epoch —
-                    // the arrival is counted and rejected at admission
-                    // regardless of queue room (offered == rejected for
-                    // shed arrivals, so conservation holds untouched)
-                    srt.rejected += 1;
-                    srt.ep_rejected += 1;
-                    sh.obs_admit(tenant, obs::ADM_SHED);
-                } else if srt.stages[0].queue.len() >= cap {
-                    match admission {
-                        AdmissionPolicy::Reject => {
-                            srt.rejected += 1;
-                            srt.ep_rejected += 1;
-                            sh.obs_admit(tenant, obs::ADM_REJECT);
-                        }
-                        AdmissionPolicy::DropOldest => {
-                            if let Some(old) = srt.stages[0].queue.pop_front() {
-                                srt.free_slots.push(old);
-                            }
-                            srt.dropped += 1;
-                            srt.ep_dropped += 1;
-                            sh.obs_admit(tenant, obs::ADM_DROP);
-                            let ix = srt.alloc(id, now);
-                            srt.stages[0].queue.push_back(ix);
-                        }
-                    }
-                } else {
-                    sh.obs_admit(tenant, obs::ADM_ADMIT);
-                    let ix = srt.alloc(id, now);
-                    srt.stages[0].queue.push_back(ix);
-                    let l = srt.stages[0].queue.len();
-                    if l > srt.max_queue_len {
-                        srt.max_queue_len = l;
-                    }
-                }
+                admit_request(t, &mut sh, opts, tenant, s, now, id, 1);
                 if let Some(next) = t.sampler.next_after(now) {
                     if next <= opts.duration_s {
                         sh.schedule(next, EvKind::Arrival { tenant });
@@ -2802,6 +3165,7 @@ fn serve_inner(
                 settle(
                     &t.spec,
                     &mut t.shards[s],
+                    &mut t.lc,
                     &mut sh,
                     tenant,
                     s,
@@ -2810,6 +3174,7 @@ fn serve_inner(
                     1,
                     full_rescan,
                 );
+                reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
             }
             EvKind::StageDone { tenant, shard, stage, gen } => {
                 let t = &mut rts[tenant];
@@ -2841,6 +3206,7 @@ fn serve_inner(
                 settle(
                     &t.spec,
                     &mut t.shards[shard],
+                    &mut t.lc,
                     &mut sh,
                     tenant,
                     shard,
@@ -2849,6 +3215,7 @@ fn serve_inner(
                     1u64 << stage,
                     full_rescan,
                 );
+                reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
             }
             EvKind::Resume { tenant, shard } => {
                 let t = &mut rts[tenant];
@@ -2858,6 +3225,7 @@ fn serve_inner(
                 settle(
                     &t.spec,
                     &mut t.shards[shard],
+                    &mut t.lc,
                     &mut sh,
                     tenant,
                     shard,
@@ -2866,6 +3234,7 @@ fn serve_inner(
                     u64::MAX,
                     full_rescan,
                 );
+                reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
             }
             EvKind::Epoch => {
                 sh.note(now, 5, 0, 0, || format!("{now:.6} epoch"));
@@ -2875,6 +3244,7 @@ fn serve_inner(
                         settle(
                             &t.spec,
                             &mut t.shards[si],
+                            &mut t.lc,
                             &mut sh,
                             ti,
                             si,
@@ -2883,6 +3253,20 @@ fn serve_inner(
                             u64::MAX,
                             full_rescan,
                         );
+                    }
+                    reap_hedge_losers(t, &mut sh, ti, now, opts, full_rescan);
+                    // re-derive the hedge-fire delay from the latency the
+                    // tenant actually observed: merged across replicas,
+                    // read at the policy's quantile, floored by its
+                    // minimum, falling back to the SLO budget while cold
+                    if let Some(h) = t.spec.hedge {
+                        let mut merged = QuantileSketch::new();
+                        for srt in &t.shards {
+                            merged.merge(&srt.latency);
+                        }
+                        t.lc.hedge_delay_s = merged
+                            .quantile_or(h.quantile, t.spec.slo_latency_s)
+                            .max(h.min_delay_s);
                     }
                     // scale decisions run after every replica ticked, so
                     // they see the full epoch observation; transitions
@@ -2921,6 +3305,216 @@ fn serve_inner(
                 if next <= opts.duration_s {
                     sh.schedule(next, EvKind::Epoch);
                 }
+            }
+            EvKind::Expire { tenant, id } => {
+                // deadline check: reap every copy of `id` still waiting in
+                // a queue (expired, tag 9); copies already in service run
+                // on. A request that completed earlier simply isn't found
+                // — the event is a silent no-op, so stale expiries from
+                // freed ids never perturb the hash.
+                let t = &mut rts[tenant];
+                let retry = t.spec.retry;
+                let mut reaped: Option<u32> = None;
+                let mut dirty_shards = 0u64;
+                for si in 0..t.shards.len() {
+                    let srt = &mut t.shards[si];
+                    for st_ix in 0..srt.stages.len() {
+                        let pos = srt.stages[st_ix]
+                            .queue
+                            .iter()
+                            .position(|&ix| srt.arena[ix as usize].id == id);
+                        if let Some(p) = pos {
+                            let ix =
+                                srt.stages[st_ix].queue.remove(p).expect("position just found");
+                            reaped = Some(srt.arena[ix as usize].attempt);
+                            srt.expired += 1;
+                            srt.ep_expired += 1;
+                            srt.free_slots.push(ix);
+                            sh.note(now, 9, pack_ts(tenant, si), id, || {
+                                format!("{now:.6} expire {}#{id} r{si}", t.spec.name)
+                            });
+                            dirty_shards |= 1u64 << si;
+                            break;
+                        }
+                    }
+                }
+                if let Some(attempt) = reaped {
+                    // is any copy still being serviced? (hedged pair with
+                    // the sibling copy in flight)
+                    let mut live_left = false;
+                    for srt in &t.shards {
+                        for st in &srt.stages {
+                            if let Some(inf) = &st.busy {
+                                if inf.reqs[inf.taken..]
+                                    .iter()
+                                    .any(|&ix| srt.arena[ix as usize].id == id)
+                                {
+                                    live_left = true;
+                                }
+                            }
+                        }
+                    }
+                    if t.lc.hedges.contains(&id) {
+                        unhedge(t, id);
+                    }
+                    if !live_left {
+                        // the logical request is fully gone: give the
+                        // retry policy a chance to re-offer it
+                        schedule_retry(&mut sh, retry, opts, tenant, id, attempt, now);
+                    }
+                    // a reaped queue slot can unblock an upstream delivery
+                    for si in 0..t.shards.len() {
+                        if dirty_shards & (1u64 << si) != 0 {
+                            settle(
+                                &t.spec,
+                                &mut t.shards[si],
+                                &mut t.lc,
+                                &mut sh,
+                                tenant,
+                                si,
+                                now,
+                                opts.duration_s,
+                                u64::MAX,
+                                full_rescan,
+                            );
+                        }
+                    }
+                    reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
+                }
+            }
+            EvKind::Retry { tenant, attempt } => {
+                // a backed-off re-arrival: a fresh id through the normal
+                // front door (which may retry again, up to the budget)
+                let t = &mut rts[tenant];
+                let s = t.pick_shard(now);
+                let id = t.next_id;
+                sh.note(now, 10, pack_ts(tenant, s) | (u64::from(attempt) << 32), id, || {
+                    format!("{now:.6} retry#{attempt} {}#{id}->r{s}", t.spec.name)
+                });
+                t.shards[s].retried += 1;
+                t.shards[s].ep_retried += 1;
+                admit_request(t, &mut sh, opts, tenant, s, now, id, attempt);
+                settle(
+                    &t.spec,
+                    &mut t.shards[s],
+                    &mut t.lc,
+                    &mut sh,
+                    tenant,
+                    s,
+                    now,
+                    opts.duration_s,
+                    1,
+                    full_rescan,
+                );
+                reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
+            }
+            EvKind::Hedge { tenant, id } => {
+                // hedge check: fires once per admitted request, one hedge
+                // delay after admission. Only a request still waiting in
+                // an *entry* queue is a straggler worth duplicating —
+                // anything in service or further down the pipeline is
+                // making progress.
+                let t = &mut rts[tenant];
+                let mut primary: Option<(usize, usize)> = None;
+                for (si, srt) in t.shards.iter().enumerate() {
+                    if let Some(p) = srt.stages[0]
+                        .queue
+                        .iter()
+                        .position(|&ix| srt.arena[ix as usize].id == id)
+                    {
+                        primary = Some((si, p));
+                        break;
+                    }
+                }
+                let Some((ps, pp)) = primary else { continue };
+                if t.lc.hedges.contains(&id) {
+                    continue;
+                }
+                // least-loaded live sibling with entry-queue room — a
+                // hedge never evicts or displaces real work
+                let cap = t.spec.queue_capacity;
+                let candidates: Vec<(usize, u64)> = t
+                    .shards
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, srt)| {
+                        i != ps
+                            && srt.state == ReplicaState::Active
+                            && !srt.dead
+                            && now >= srt.frozen_until
+                            && srt.stages[0].queue.len() < cap
+                    })
+                    .map(|(i, srt)| (i, srt.backlog()))
+                    .collect();
+                let Some(sib) = shard::hedge_sibling(ps, &candidates) else { continue };
+                sh.note(now, 11, pack_ts(tenant, sib), id, || {
+                    format!("{now:.6} hedge {}#{id} r{ps}->r{sib}", t.spec.name)
+                });
+                let (arrival_s, attempt) = {
+                    let srt = &mut t.shards[ps];
+                    let ix = srt.stages[0].queue[pp];
+                    let r = &mut srt.arena[ix as usize];
+                    r.hedged = true;
+                    (r.arrival_s, r.attempt)
+                };
+                t.lc.hedges.insert(id);
+                // the twin is one more offered entry on the sibling; it
+                // keeps the primary's arrival time so whichever copy wins
+                // reports the request's true latency
+                t.offered += 1;
+                sh.obs_admit(tenant, obs::ADM_ADMIT);
+                let wtp = t.spec.balancer == BalancerPolicy::WeightedThroughput;
+                let dst = &mut t.shards[sib];
+                dst.offered += 1;
+                dst.ep_offered += 1;
+                dst.hedged += 1;
+                dst.ep_hedged += 1;
+                let jx = dst.alloc(id, arrival_s);
+                {
+                    let r = &mut dst.arena[jx as usize];
+                    r.attempt = attempt;
+                    r.hedged = true;
+                    r.twin = true;
+                }
+                dst.stages[0].queue.push_back(jx);
+                let l = dst.stages[0].queue.len();
+                if l > dst.max_queue_len {
+                    dst.max_queue_len = l;
+                }
+                if wtp {
+                    // the twin bypassed the balancer: charge the sibling
+                    // one smooth-WRR credit (refunded if the twin is
+                    // reaped unserved)
+                    dst.credit -= dst.weight;
+                }
+                let delay = t.lc.hedge_delay_s;
+                sh.control(
+                    ControlRecord {
+                        t_s: now,
+                        kind: ControlKind::Hedge,
+                        tenant: tenant as u32,
+                        shard: sib as u32,
+                        a: ps as u64,
+                        b: id,
+                    },
+                    &[
+                        ("hedge_delay_s", delay),
+                        ("sibling_backlog", t.shards[sib].backlog() as f64),
+                    ],
+                );
+                settle(
+                    &t.spec,
+                    &mut t.shards[sib],
+                    &mut t.lc,
+                    &mut sh,
+                    tenant,
+                    sib,
+                    now,
+                    opts.duration_s,
+                    1,
+                    full_rescan,
+                );
+                reap_hedge_losers(t, &mut sh, tenant, now, opts, full_rescan);
             }
             EvKind::Fault { ix, begin } => {
                 let fe = opts.faults.events[ix];
@@ -2999,6 +3593,7 @@ fn serve_inner(
                                     settle(
                                         &t.spec,
                                         &mut t.shards[si],
+                                        &mut t.lc,
                                         &mut sh,
                                         ti,
                                         si,
@@ -3008,6 +3603,7 @@ fn serve_inner(
                                         full_rescan,
                                     );
                                 }
+                                reap_hedge_losers(t, &mut sh, ti, now, opts, full_rescan);
                             }
                         }
                         // slowdown windows never blocked dispatch, so
@@ -3052,6 +3648,10 @@ fn obs_epoch_sample(rts: &[TenantRt], sh: &mut Shared, now: f64, cache: CacheSta
             slo_ok: 0,
             rejected: 0,
             dropped: 0,
+            expired: 0,
+            cancelled: 0,
+            retried: 0,
+            hedged: 0,
             goodput: 0.0,
             throughput: 0.0,
             backlog: 0,
@@ -3065,6 +3665,10 @@ fn obs_epoch_sample(rts: &[TenantRt], sh: &mut Shared, now: f64, cache: CacheSta
                 ts.slo_ok += e.slo_ok;
                 ts.rejected += e.rejected;
                 ts.dropped += e.dropped;
+                ts.expired += e.expired;
+                ts.cancelled += e.cancelled;
+                ts.retried += e.retried;
+                ts.hedged += e.hedged;
                 ts.goodput += e.goodput;
                 ts.throughput += e.throughput;
                 ts.backlog += e.backlog;
@@ -3109,6 +3713,11 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             offered: s.offered,
             rejected: s.rejected,
             dropped: s.dropped,
+            expired: s.expired,
+            cancelled: s.cancelled,
+            retried: s.retried,
+            hedged: s.hedged,
+            hedge_wins: s.hedge_wins,
             completed: s.completed,
             slo_ok: s.slo_ok,
             in_flight,
@@ -3137,6 +3746,10 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             slo_ok: 0,
             rejected: 0,
             dropped: 0,
+            expired: 0,
+            cancelled: 0,
+            retried: 0,
+            hedged: 0,
             goodput: 0.0,
             throughput: 0.0,
             backlog: 0,
@@ -3151,6 +3764,10 @@ fn tenant_report(t: TenantRt) -> TenantReport {
             agg.slo_ok += ep.slo_ok;
             agg.rejected += ep.rejected;
             agg.dropped += ep.dropped;
+            agg.expired += ep.expired;
+            agg.cancelled += ep.cancelled;
+            agg.retried += ep.retried;
+            agg.hedged += ep.hedged;
             agg.goodput += ep.goodput;
             agg.throughput += ep.throughput;
             agg.backlog += ep.backlog;
@@ -3167,6 +3784,11 @@ fn tenant_report(t: TenantRt) -> TenantReport {
         offered,
         rejected: shard_reports.iter().map(|s| s.rejected).sum(),
         dropped: shard_reports.iter().map(|s| s.dropped).sum(),
+        expired: shard_reports.iter().map(|s| s.expired).sum(),
+        cancelled: shard_reports.iter().map(|s| s.cancelled).sum(),
+        retried: shard_reports.iter().map(|s| s.retried).sum(),
+        hedged: shard_reports.iter().map(|s| s.hedged).sum(),
+        hedge_wins: shard_reports.iter().map(|s| s.hedge_wins).sum(),
         completed: shard_reports.iter().map(|s| s.completed).sum(),
         slo_ok: shard_reports.iter().map(|s| s.slo_ok).sum(),
         in_flight: shard_reports.iter().map(|s| s.in_flight).sum(),
@@ -4076,6 +4698,11 @@ mod tests {
             offered: 0,
             rejected: 0,
             dropped: 0,
+            expired: 0,
+            cancelled: 0,
+            retried: 0,
+            hedged: 0,
+            hedge_wins: 0,
             completed: 0,
             slo_ok: 0,
             max_queue_len: 0,
@@ -4085,6 +4712,10 @@ mod tests {
             ep_slo_ok: 0,
             ep_rejected: 0,
             ep_dropped: 0,
+            ep_expired: 0,
+            ep_cancelled: 0,
+            ep_retried: 0,
+            ep_hedged: 0,
             baseline_goodput: 0.0,
             epochs_since_retune: 0,
             retunes: 0,

@@ -1,0 +1,246 @@
+//! Request-lifecycle robustness policies: deadlines, deterministic
+//! retry/backoff, and hedged requests.
+//!
+//! Three per-tenant knobs, all **off by default** — a tenant without any
+//! of them schedules no lifecycle events and leaves every engine hash
+//! byte-identical to a pre-lifecycle build:
+//!
+//! * **Deadline** ([`crate::serve::TenantSpec::with_deadline`]) — each
+//!   admitted request carries a budget measured from its (re-)arrival;
+//!   when it expires while the request is still *queued* the engine reaps
+//!   it before it can waste a batch slot (tag-9 heap event, counted as
+//!   `expired`, never as a shed or a drop). Requests already in service
+//!   run to completion — interrupting silicon mid-batch buys nothing.
+//! * **Retry** ([`RetryPolicy`]) — a rejected, dropped, or expired
+//!   request re-arrives after an exponential backoff with decorrelated
+//!   jitter. The jitter derives from an FNV-1a hash of
+//!   `(seed, tenant, id, attempt)` — the same RNG-free trick the arrival
+//!   trace replay uses — so a recorded run replays its retry schedule bit
+//!   for bit. Attempt `k` (1-based) sleeps
+//!   `min(cap, base·2^(k-1)) · (0.5 + 0.5·u)` with `u ∈ [0, 1)`.
+//!   Graceful-degradation sheds do **not** retry: degradation exists to
+//!   shed load, and retries would fight it.
+//! * **Hedge** ([`HedgePolicy`]) — a request still waiting in its entry
+//!   queue after the tenant's p9x-derived hedge delay is duplicated onto
+//!   the least-loaded *sibling* replica; first completion wins and the
+//!   loser is cancelled (queued loser reaped immediately, in-service
+//!   loser doomed and discarded at delivery) with correct slab-arena
+//!   recycling and WTP credit reversal. The hedge delay re-derives every
+//!   control epoch from the tenant's merged latency sketch
+//!   ([`crate::serve::QuantileSketch::quantile_or`]), so it tracks the
+//!   observed tail, not a guess.
+//!
+//! All three fire as ordinary hashed heap events (trace tags 9–12), so
+//! faulted-plus-hedged runs record, replay and what-if exactly like any
+//! other run (trace format v4).
+
+use anyhow::{bail, Context, Result};
+
+/// Deterministic exponential-backoff retry policy for one tenant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum re-arrivals per original request (0 disables retry).
+    pub max_attempts: u32,
+    /// Backoff base, seconds: attempt `k` waits `base · 2^(k-1)` before
+    /// jitter.
+    pub base_s: f64,
+    /// Backoff ceiling, seconds: the un-jittered delay never exceeds it.
+    pub cap_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, base_s: 0.01, cap_s: 1.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Parse the CLI form `MAX[:BASE_S[:CAP_S]]`, e.g. `3`, `3:0.01`,
+    /// `5:0.02:2.0`. Unspecified fields keep the defaults.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut out = RetryPolicy::default();
+        let mut parts = s.split(':');
+        let max = parts.next().context("retry spec is empty")?.trim();
+        out.max_attempts =
+            max.parse().with_context(|| format!("bad retry max-attempts {max:?}"))?;
+        if let Some(base) = parts.next() {
+            out.base_s = base
+                .trim()
+                .parse()
+                .with_context(|| format!("bad retry base seconds {:?}", base.trim()))?;
+        }
+        if let Some(cap) = parts.next() {
+            out.cap_s = cap
+                .trim()
+                .parse()
+                .with_context(|| format!("bad retry cap seconds {:?}", cap.trim()))?;
+        }
+        if let Some(extra) = parts.next() {
+            bail!("retry spec has trailing field {extra:?} (want MAX[:BASE_S[:CAP_S]])");
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Render in the CLI grammar (`parse(describe())` round-trips).
+    pub fn describe(&self) -> String {
+        format!("{}:{}:{}", self.max_attempts, self.base_s, self.cap_s)
+    }
+
+    /// Reject non-finite or non-positive backoff parameters.
+    pub fn validate(&self) -> Result<()> {
+        if !self.base_s.is_finite() || self.base_s <= 0.0 {
+            bail!("retry base {} must be finite and > 0 seconds", self.base_s);
+        }
+        if !self.cap_s.is_finite() || self.cap_s < self.base_s {
+            bail!(
+                "retry cap {} must be finite and ≥ the base ({})",
+                self.cap_s,
+                self.base_s
+            );
+        }
+        Ok(())
+    }
+
+    /// Backoff before re-arrival attempt `k` (1-based), jittered by
+    /// `u ∈ [0, 1)`: `min(cap, base·2^(k-1)) · (0.5 + 0.5u)`.
+    pub fn delay_s(&self, attempt: u32, u: f64) -> f64 {
+        let exp = self.base_s * f64::powi(2.0, attempt.saturating_sub(1).min(62) as i32);
+        exp.min(self.cap_s) * (0.5 + 0.5 * u)
+    }
+}
+
+/// Hedged-request policy for one tenant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HedgePolicy {
+    /// Latency quantile the hedge delay tracks (strictly inside (0, 1);
+    /// e.g. 0.95 hedges requests older than the observed p95).
+    pub quantile: f64,
+    /// Hedge-delay floor, seconds — guards against a cold sketch deriving
+    /// a near-zero delay and hedging everything.
+    pub min_delay_s: f64,
+}
+
+impl Default for HedgePolicy {
+    fn default() -> Self {
+        Self { quantile: 0.95, min_delay_s: 0.0 }
+    }
+}
+
+impl HedgePolicy {
+    /// Parse the CLI form `Q[:MIN_S]` where `Q` is `p95`, `p99`, or a
+    /// bare quantile like `0.9`, e.g. `p95`, `0.99:0.002`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut out = HedgePolicy::default();
+        let (q, min) = match s.split_once(':') {
+            Some((q, m)) => (q.trim(), Some(m.trim())),
+            None => (s.trim(), None),
+        };
+        out.quantile = match q.to_ascii_lowercase().as_str() {
+            "p50" => 0.50,
+            "p90" => 0.90,
+            "p95" => 0.95,
+            "p99" => 0.99,
+            other => other
+                .parse()
+                .with_context(|| format!("bad hedge quantile {other:?} (p95, p99, or 0-1)"))?,
+        };
+        if let Some(min) = min {
+            out.min_delay_s = min
+                .parse()
+                .with_context(|| format!("bad hedge min-delay seconds {min:?}"))?;
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Render in the CLI grammar (`parse(describe())` round-trips).
+    pub fn describe(&self) -> String {
+        format!("{}:{}", self.quantile, self.min_delay_s)
+    }
+
+    /// Reject quantiles outside (0, 1) and negative floors.
+    pub fn validate(&self) -> Result<()> {
+        if !self.quantile.is_finite() || self.quantile <= 0.0 || self.quantile >= 1.0 {
+            bail!("hedge quantile {} must lie strictly inside (0, 1)", self.quantile);
+        }
+        if !self.min_delay_s.is_finite() || self.min_delay_s < 0.0 {
+            bail!("hedge min-delay {} must be finite and ≥ 0 seconds", self.min_delay_s);
+        }
+        Ok(())
+    }
+}
+
+/// Decorrelated-jitter source: a uniform in `[0, 1)` derived from an
+/// FNV-1a hash of `(seed, tenant, id, attempt)`. Pure — the same inputs
+/// always produce the same jitter, so a replayed run reconstructs the
+/// exact retry schedule without any RNG state (the same discipline as
+/// the hashed event stream itself).
+pub fn jitter_u01(seed: u64, tenant: u64, id: u64, attempt: u32) -> f64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for x in [seed, tenant, id, u64::from(attempt)] {
+        for byte in x.to_le_bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    // Top 53 bits → uniform f64 in [0, 1).
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_parse_round_trips_and_validates() {
+        let r = RetryPolicy::parse("3").unwrap();
+        assert_eq!(r.max_attempts, 3);
+        assert_eq!(r, RetryPolicy::parse(&r.describe()).unwrap());
+        let r = RetryPolicy::parse("5:0.02:2.5").unwrap();
+        assert_eq!(r, RetryPolicy { max_attempts: 5, base_s: 0.02, cap_s: 2.5 });
+        assert_eq!(r, RetryPolicy::parse(&r.describe()).unwrap());
+        for bad in ["", "x", "3:0", "3:-1", "3:0.5:0.1", "3:1:2:9", "3:nan"] {
+            assert!(RetryPolicy::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn hedge_parse_round_trips_and_validates() {
+        assert_eq!(HedgePolicy::parse("p95").unwrap().quantile, 0.95);
+        assert_eq!(HedgePolicy::parse("p99").unwrap().quantile, 0.99);
+        let h = HedgePolicy::parse("0.9:0.005").unwrap();
+        assert_eq!(h, HedgePolicy { quantile: 0.9, min_delay_s: 0.005 });
+        assert_eq!(h, HedgePolicy::parse(&h.describe()).unwrap());
+        for bad in ["", "p101", "0", "1", "1.5", "0.9:-1", "0.9:inf"] {
+            assert!(HedgePolicy::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn retry_delay_backs_off_exponentially_under_the_cap() {
+        let r = RetryPolicy { max_attempts: 10, base_s: 0.01, cap_s: 0.1 };
+        // u = 1 would give the full exponential; u = 0 halves it.
+        assert!((r.delay_s(1, 0.0) - 0.005).abs() < 1e-12);
+        assert!((r.delay_s(2, 0.0) - 0.01).abs() < 1e-12);
+        assert!((r.delay_s(3, 0.0) - 0.02).abs() < 1e-12);
+        // The cap bites at attempt 5 (0.16 → 0.1).
+        assert!((r.delay_s(5, 0.0) - 0.05).abs() < 1e-12);
+        assert!((r.delay_s(40, 0.999) - 0.1 * 0.9995).abs() < 1e-9, "huge attempts stay capped");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_uniform_and_decorrelated() {
+        let a = jitter_u01(42, 0, 7, 1);
+        assert_eq!(a.to_bits(), jitter_u01(42, 0, 7, 1).to_bits(), "pure function");
+        assert!((0.0..1.0).contains(&a));
+        // Neighbouring ids/attempts decorrelate (no lockstep retries).
+        assert_ne!(a.to_bits(), jitter_u01(42, 0, 8, 1).to_bits());
+        assert_ne!(a.to_bits(), jitter_u01(42, 0, 7, 2).to_bits());
+        assert_ne!(a.to_bits(), jitter_u01(43, 0, 7, 1).to_bits());
+        // Crude uniformity: the mean of a small sweep sits near 1/2.
+        let mean: f64 =
+            (0..1000).map(|i| jitter_u01(1, 2, i, 1)).sum::<f64>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+    }
+}

@@ -31,6 +31,13 @@
 //!   events, hashed into the event log and driving the engine's
 //!   detect → drain → re-plan failover (see the crate docs §Fault
 //!   tolerance & graceful degradation);
+//! * [`lifecycle`] — request-lifecycle robustness: per-request deadlines
+//!   (expired stragglers reaped from queues before they waste batch
+//!   slots), deterministic retry with exponential backoff + decorrelated
+//!   RNG-free jitter ([`RetryPolicy`]), and hedged requests duplicated
+//!   onto the least-loaded sibling replica with first-completion-wins
+//!   cancellation ([`HedgePolicy`]) — all hashed heap events (trace
+//!   format v4), byte-identical to a pre-lifecycle build when disabled;
 //! * [`cluster`] — cluster-level control: the cross-tenant **co-planner**
 //!   ([`cluster::coplan`] — joint disjoint EP budgets, weighted
 //!   water-filling, provably never worse than greedy first-come
@@ -66,6 +73,7 @@ pub mod arrivals;
 pub mod cluster;
 pub mod engine;
 pub mod fault;
+pub mod lifecycle;
 pub mod obs;
 pub mod shard;
 pub mod slo;
@@ -82,6 +90,7 @@ pub use engine::{
     ServeOptions, ServeReport, ShardReport, TenantReport,
 };
 pub use fault::{FaultEvent, FaultKind, FaultScript};
+pub use lifecycle::{HedgePolicy, RetryPolicy};
 pub use obs::{EpochSample, Journal, JournalEntry, ObsReport, ProfReport, Registry};
 pub use shard::{plan_shards, plan_shards_with, BalancerPolicy, ShardPlan};
 pub use slo::{jain_fairness, QuantileSketch};

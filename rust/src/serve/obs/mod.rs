@@ -41,6 +41,10 @@
 //!     {"name": "a", "offered": 10, "completed": 9, "slo_ok": 9,
 //!      "rejected": 0, "dropped": 1, "goodput": 1.8e0,
 //!      "throughput": 1.8e0, "backlog": 0, "load_shed": false,
+//!      // lifecycle-enabled runs only (any tenant with a deadline,
+//!      // retry or hedge policy) — absent otherwise so lifecycle-off
+//!      // JSONL is byte-identical to a pre-lifecycle build:
+//!      "expired": 0, "cancelled": 0, "retried": 0, "hedged": 0,
 //!      "replicas": [
 //!        {"state": "active", "dead": false, "eps": 2, "queued": 0,
 //!         "stage_queue_hw": [3, 1], "slab_live": 1, "slab_cap": 8,
@@ -220,6 +224,15 @@ pub struct TenantSample {
     pub rejected: u64,
     /// DropOldest drops during the epoch.
     pub dropped: u64,
+    /// Deadline expiries during the epoch (0 unless the tenant has a
+    /// finite deadline; emitted in JSONL only for lifecycle-enabled runs).
+    pub expired: u64,
+    /// Hedge-loser cancellations during the epoch (lifecycle runs only).
+    pub cancelled: u64,
+    /// Retry re-arrivals during the epoch (lifecycle runs only).
+    pub retried: u64,
+    /// Hedge twins placed during the epoch (lifecycle runs only).
+    pub hedged: u64,
     /// SLO goodput over the epoch, requests/second.
     pub goodput: f64,
     /// Raw completion throughput over the epoch, requests/second.
@@ -267,8 +280,14 @@ pub struct Obs {
     /// Per-[tenant][replica][stage] queue-depth high-water since the last
     /// sample; inner vecs sized lazily (stage counts differ per replica).
     queue_hw: Vec<Vec<Vec<u32>>>,
+    /// Whether any tenant runs with a lifecycle policy: gates the tag
+    /// 9–12 event counters and the per-tenant lifecycle JSONL fields, so
+    /// a lifecycle-off run's exports are byte-identical to a
+    /// pre-lifecycle build (every registered series renders in the
+    /// Prometheus snapshot, zero-valued or not).
+    lifecycle: bool,
     // Pre-registered ids (hot path updates by index only).
-    tag_ids: [CounterId; 9],
+    tag_ids: Vec<CounterId>,
     adm_ids: Vec<[CounterId; 4]>,
     batch_hist: HistId,
     queue_hist: HistId,
@@ -284,13 +303,19 @@ pub struct Obs {
 
 impl Obs {
     /// Pre-register every series: `n_eps` global EPs, one `(name,
-    /// n_replicas)` pair per tenant. This is the only allocating phase.
-    pub fn new(n_eps: usize, tenants: &[(String, usize)]) -> Self {
+    /// n_replicas)` pair per tenant. `lifecycle` additionally registers
+    /// the expire/retry/hedge/cancel event counters (tags 9–12) — gated
+    /// so a lifecycle-off run's Prometheus snapshot is byte-identical to
+    /// a pre-lifecycle build. This is the only allocating phase.
+    pub fn new(n_eps: usize, tenants: &[(String, usize)], lifecycle: bool) -> Self {
         let mut reg = Registry::new();
-        let tag_ids = std::array::from_fn(|tag| {
-            let name = if tag == 0 { "other" } else { TraceEvent::tag_name(tag as u64) };
-            reg.counter("shisha_events_total", format!("tag=\"{name}\""))
-        });
+        let n_tags = if lifecycle { 13 } else { 9 };
+        let tag_ids = (0..n_tags)
+            .map(|tag| {
+                let name = if tag == 0 { "other" } else { TraceEvent::tag_name(tag as u64) };
+                reg.counter("shisha_events_total", format!("tag=\"{name}\""))
+            })
+            .collect();
         let mut adm_ids = Vec::with_capacity(tenants.len());
         for (name, _) in tenants {
             adm_ids.push(std::array::from_fn(|o| {
@@ -326,6 +351,7 @@ impl Obs {
             samples: Vec::new(),
             tenant_names: tenants.iter().map(|(n, _)| n.clone()).collect(),
             queue_hw: tenants.iter().map(|&(_, shards)| vec![Vec::new(); shards]).collect(),
+            lifecycle,
             tag_ids,
             adm_ids,
             batch_hist,
@@ -344,7 +370,7 @@ impl Obs {
     /// Hot path: one hashed event of tag `tag` went through the funnel.
     #[inline]
     pub fn on_event(&mut self, tag: u64) {
-        let ix = if tag <= 8 { tag as usize } else { 0 };
+        let ix = if (tag as usize) < self.tag_ids.len() { tag as usize } else { 0 };
         self.reg.inc(self.tag_ids[ix]);
     }
 
@@ -422,6 +448,7 @@ impl Obs {
             prof: self.prof.report(),
             cache,
             tenant_names: self.tenant_names,
+            lifecycle: self.lifecycle,
         }
     }
 }
@@ -442,6 +469,11 @@ pub struct ObsReport {
     pub cache: CacheStats,
     /// Tenant names, in input order (JSONL row labels).
     pub tenant_names: Vec<String>,
+    /// Whether the run had any lifecycle-enabled tenant: mirrors the
+    /// extra per-tenant lifecycle fields into the JSONL rows. Kept off
+    /// for lifecycle-off runs so their JSONL stays byte-identical to a
+    /// pre-lifecycle build.
+    pub lifecycle: bool,
 }
 
 impl ObsReport {
@@ -525,6 +557,13 @@ impl ObsReport {
                 t.backlog,
                 t.load_shed
             );
+            if self.lifecycle {
+                let _ = write!(
+                    o,
+                    ",\"expired\":{},\"cancelled\":{},\"retried\":{},\"hedged\":{}",
+                    t.expired, t.cancelled, t.retried, t.hedged
+                );
+            }
             o.push_str(",\"replicas\":[");
             for (si, r) in t.replicas.iter().enumerate() {
                 if si > 0 {
@@ -673,6 +712,10 @@ mod tests {
                 slo_ok: 3,
                 rejected: 1,
                 dropped: 0,
+                expired: 0,
+                cancelled: 0,
+                retried: 0,
+                hedged: 0,
                 goodput: 0.6,
                 throughput: 0.6,
                 backlog: 1,
@@ -710,7 +753,7 @@ mod tests {
 
     #[test]
     fn obs_counts_and_exports() {
-        let mut o = Obs::new(2, &[("a".to_string(), 1)]);
+        let mut o = Obs::new(2, &[("a".to_string(), 1)], false);
         o.on_event(1);
         o.on_event(1);
         o.on_event(3);
@@ -754,5 +797,28 @@ mod tests {
         assert!(text.contains("tenant a"));
         assert!(text.contains("coplan"));
         assert!(text.contains("eps=2.0000"));
+        // Lifecycle-off: the tag 9–12 counters are not registered and the
+        // per-tenant lifecycle fields are absent from the JSONL.
+        assert!(!rep.prom.contains("tag=\"expire\""));
+        assert!(!lines[0].contains("\"expired\""));
+    }
+
+    #[test]
+    fn obs_lifecycle_gates_series_and_jsonl_fields() {
+        let mut o = Obs::new(1, &[("a".to_string(), 1)], true);
+        o.on_event(9);
+        o.on_event(11);
+        o.on_event(12);
+        let mut s = sample(5.0);
+        s.tenants[0].expired = 2;
+        s.tenants[0].hedged = 1;
+        o.push_sample(s);
+        let rep = o.finish(CacheStats::default());
+        assert!(rep.prom.contains("shisha_events_total{tag=\"expire\"} 1"));
+        assert!(rep.prom.contains("shisha_events_total{tag=\"hedge\"} 1"));
+        assert!(rep.prom.contains("shisha_events_total{tag=\"cancel\"} 1"));
+        assert!(rep.prom.contains("shisha_events_total{tag=\"retry\"} 0"));
+        let jsonl = rep.to_jsonl();
+        assert!(jsonl.contains("\"expired\":2,\"cancelled\":0,\"retried\":0,\"hedged\":1"));
     }
 }

@@ -78,6 +78,22 @@ impl BalancerPolicy {
     }
 }
 
+/// Pick the replica a queued straggler is hedged onto: the least-loaded
+/// eligible sibling — the same `(backlog, index)` key JSQ routes with —
+/// never the replica the straggler already waits on. `candidates` holds
+/// `(replica index, total backlog)` pairs the caller has already filtered
+/// to Active, un-frozen, alive replicas; ties break on the lowest index,
+/// so hedge placement is as deterministic as every other routing
+/// decision. Returns `None` when no sibling is eligible (hedging is then
+/// skipped for this request, never queued for later).
+pub fn hedge_sibling(primary: usize, candidates: &[(usize, u64)]) -> Option<usize> {
+    candidates
+        .iter()
+        .filter(|(ix, _)| *ix != primary)
+        .min_by_key(|(ix, backlog)| (*backlog, *ix))
+        .map(|(ix, _)| *ix)
+}
+
 /// A concrete shard placement: disjoint EP subsets with one tuned replica
 /// configuration per subset.
 #[derive(Debug, Clone)]
@@ -367,6 +383,17 @@ mod tests {
             assert_eq!(BalancerPolicy::parse(got.name()).unwrap(), got);
         }
         assert!(BalancerPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn hedge_sibling_is_least_loaded_and_never_primary() {
+        // lowest backlog wins; the primary is excluded even when emptiest
+        assert_eq!(hedge_sibling(0, &[(0, 0), (1, 5), (2, 3)]), Some(2));
+        // ties break on the lowest index
+        assert_eq!(hedge_sibling(1, &[(0, 2), (1, 0), (2, 2)]), Some(0));
+        // no eligible sibling → no hedge
+        assert_eq!(hedge_sibling(0, &[(0, 7)]), None);
+        assert_eq!(hedge_sibling(0, &[]), None);
     }
 
     #[test]

@@ -130,6 +130,22 @@ impl QuantileSketch {
         self.max_s
     }
 
+    /// Quantile with an explicit cold-sketch fallback: `default_s` when
+    /// nothing has been recorded yet, [`QuantileSketch::quantile`]
+    /// otherwise. The hedge controller derives its per-tenant hedge delay
+    /// through this, falling back to the SLO budget until the first
+    /// completions land. The sketch stays duplicate-completion-safe by
+    /// construction: the engine records a latency only for the *winning*
+    /// copy of a hedged pair (the loser is cancelled, never recorded), so
+    /// quantiles are over logical requests, not copies.
+    pub fn quantile_or(&self, q: f64, default_s: f64) -> f64 {
+        if self.n == 0 {
+            default_s
+        } else {
+            self.quantile(q)
+        }
+    }
+
     /// p50 shorthand (seconds).
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
@@ -279,6 +295,15 @@ mod tests {
         for q in [0.1, 0.5, 0.9, 0.99] {
             assert_eq!(a.quantile(q), b.quantile(q));
         }
+    }
+
+    #[test]
+    fn quantile_or_falls_back_only_when_cold() {
+        let mut s = QuantileSketch::new();
+        assert_eq!(s.quantile_or(0.95, 0.25), 0.25, "cold sketch yields the default");
+        s.record(0.010);
+        let v = s.quantile_or(0.95, 0.25);
+        assert!((v - 0.010).abs() / 0.010 < 0.05, "warm sketch ignores the default: {v}");
     }
 
     #[test]

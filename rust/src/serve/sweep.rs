@@ -109,6 +109,16 @@ pub struct ScenarioStats {
     pub cache_hits: u64,
     /// Plan-cache misses (each one paid a full placement search).
     pub cache_misses: u64,
+    /// Deadline expiries across all tenants (see
+    /// [`crate::serve::TenantReport::expired`]; 0 unless a lifecycle
+    /// policy is set).
+    pub expired: u64,
+    /// Hedge-loser cancellations across all tenants.
+    pub cancelled: u64,
+    /// Retry re-arrivals across all tenants.
+    pub retried: u64,
+    /// Hedge twins placed across all tenants.
+    pub hedged: u64,
 }
 
 impl ScenarioStats {
@@ -121,6 +131,7 @@ impl ScenarioStats {
         let mut retunes = 0u32;
         let mut scale_events = 0u64;
         let mut repartitions = 0u64;
+        let (mut expired, mut cancelled, mut retried, mut hedged) = (0u64, 0u64, 0u64, 0u64);
         for t in &r.tenants {
             sketch.merge(&t.latency);
             offered += t.offered;
@@ -130,6 +141,10 @@ impl ScenarioStats {
             scale_events +=
                 t.shards.iter().map(|s| s.scale_events.len() as u64).sum::<u64>();
             repartitions += u64::from(t.repartitions);
+            expired += t.expired;
+            cancelled += t.cancelled;
+            retried += t.retried;
+            hedged += t.hedged;
         }
         Self {
             offered,
@@ -141,6 +156,10 @@ impl ScenarioStats {
             repartitions,
             cache_hits: r.plan_cache.hits,
             cache_misses: r.plan_cache.misses,
+            expired,
+            cancelled,
+            retried,
+            hedged,
             p50_s: sketch.p50(),
             p95_s: sketch.p95(),
             p99_s: sketch.p99(),
@@ -536,6 +555,102 @@ pub fn fault_grid(
     out
 }
 
+/// Build the request-lifecycle robustness grid on the same **MMPP tidal
+/// workload** as [`fault_grid`]: for every `(rho, seed)` and every fault
+/// script in {fault-free, `epstall` on the strongest EP for the middle
+/// third, `linkslow` ×3 for the middle third} the grid emits one
+/// **blind** cell (no lifecycle policy — the pre-lifecycle engine,
+/// byte-identical to a build without the layer) and one **lifecycle**
+/// cell (deterministic retry with backoff + p95-tracking hedging on a
+/// 2-replica JSQ deployment). All cells of a `(rho, seed)` pair share
+/// the identical arrival stream, so goodput deltas isolate exactly what
+/// retry + hedging buy back under each transient fault
+/// (`benches/hedge_recovery.rs` reports the same cells as
+/// goodput-retained ratios; the acceptance bar in `tests/lifecycle.rs`
+/// is ≥ 95% of fault-free goodput at zero request loss).
+///
+/// Queues are deep (32, drop-oldest) and the SLO wide (500 bottleneck
+/// periods), matching the sibling grids — the comparison measures what
+/// the lifecycle layer recovers, not SLO tuning.
+pub fn hedge_grid(
+    plat: &Platform,
+    net: &Network,
+    config: &PipelineConfig,
+    balancer: BalancerPolicy,
+    rhos: &[f64],
+    seeds: &[u64],
+    base: &ServeOptions,
+) -> Vec<Scenario> {
+    use super::lifecycle::{HedgePolicy, RetryPolicy};
+    let db = PerfDb::build(net, plat, &CostModel::default());
+    let cap = simulator::throughput(net, plat, &db, config);
+    let dwell_s = (base.duration_s / 4.0).max(1e-6);
+    let target = plat.eps_by_rank()[0]; // transient faults hit the strongest EP
+    let fault_t = base.duration_s / 3.0;
+    let scripts = [
+        ("fault-free", FaultScript::default()),
+        (
+            "epstall",
+            FaultScript {
+                events: vec![FaultEvent {
+                    t_s: fault_t,
+                    kind: FaultKind::EpStall { ep: target, down_s: fault_t },
+                }],
+            },
+        ),
+        (
+            "linkslow-x3",
+            FaultScript {
+                events: vec![FaultEvent {
+                    t_s: fault_t,
+                    kind: FaultKind::LinkSlow { factor: 3.0, down_s: fault_t },
+                }],
+            },
+        ),
+    ];
+    let mut out = Vec::with_capacity(rhos.len() * seeds.len() * scripts.len() * 2);
+    for &rho in rhos {
+        for &seed in seeds {
+            let arrivals = ArrivalProcess::Mmpp {
+                low_rate: 0.25 * rho * cap,
+                high_rate: 1.3 * rho * cap,
+                mean_low_s: dwell_s,
+                mean_high_s: dwell_s,
+            };
+            let mk_spec = |name: String, lifecycle: bool| {
+                let spec = TenantSpec::new(name, net.clone(), arrivals.clone())
+                    .with_shards(2)
+                    .with_balancer(balancer)
+                    .with_queue_capacity(32)
+                    .with_admission(super::tenant::AdmissionPolicy::DropOldest)
+                    .with_slo(500.0 / cap);
+                if lifecycle {
+                    spec.with_retry(RetryPolicy::default())
+                        .with_hedge(HedgePolicy::default())
+                } else {
+                    spec
+                }
+            };
+            for (label, faults) in &scripts {
+                for (policy, lifecycle) in [("blind", false), ("lifecycle", true)] {
+                    let name =
+                        format!("{} {label} {policy} rho={rho} seed={seed}", net.name);
+                    let mut opts = base.clone();
+                    opts.seed = seed;
+                    opts.faults = faults.clone();
+                    out.push(Scenario {
+                        name: name.clone(),
+                        plat: plat.clone(),
+                        tenants: vec![(mk_spec(name, lifecycle), config.clone())],
+                        opts,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Fan one captured flight-recorder trace across a what-if policy grid:
 /// every `shard_counts` × `balancers` cell re-simulates the trace's
 /// captured arrival streams ([`whatif_inputs`]) under that policy. The
@@ -875,6 +990,62 @@ mod tests {
         for o in &out {
             let r = o.report.as_ref().expect("serve run");
             assert!(r.tenants.iter().all(|t| t.conserved()), "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn hedge_grid_pairs_blind_and_lifecycle_cells() {
+        let plat = configs::c1();
+        let net = networks::synthnet_small();
+        let cfg = PipelineConfig::new(vec![3, 3], vec![0, 1]);
+        let base = ServeOptions {
+            duration_s: 2.0,
+            control: false,
+            control_epoch_s: 0.1,
+            ..Default::default()
+        };
+        let sc = hedge_grid(
+            &plat,
+            &net,
+            &cfg,
+            crate::serve::BalancerPolicy::JoinShortestQueue,
+            &[1.0],
+            &[5],
+            &base,
+        );
+        assert_eq!(sc.len(), 6, "3 fault scripts × {{blind, lifecycle}}");
+        for pair in sc.chunks(2) {
+            let (blind, lc) = (&pair[0], &pair[1]);
+            assert!(blind.name.contains("blind"), "{}", blind.name);
+            assert!(lc.name.contains("lifecycle"), "{}", lc.name);
+            assert!(!blind.tenants[0].0.lifecycle_active());
+            assert!(lc.tenants[0].0.lifecycle_active());
+            assert!(lc.tenants[0].0.retry.is_some() && lc.tenants[0].0.hedge.is_some());
+            // the two cells of a script share workload and fault script
+            assert_eq!(blind.tenants[0].0.arrivals, lc.tenants[0].0.arrivals);
+            assert_eq!(blind.opts.faults, lc.opts.faults);
+            assert_eq!(blind.opts.seed, lc.opts.seed);
+        }
+        assert!(sc[0].opts.faults.is_empty());
+        assert_eq!(sc[2].opts.faults.events.len(), 1, "epstall cell");
+        assert_eq!(sc[4].opts.faults.events.len(), 1, "linkslow cell");
+        for s in &sc[2..] {
+            assert!(s.opts.faults.validate(&plat).is_ok(), "{}", s.name);
+        }
+        // the grid runs end to end and every cell conserves requests
+        let out = run_sweep(sc, available_threads());
+        for o in &out {
+            let r = o.report.as_ref().expect("serve run");
+            assert!(r.tenants.iter().all(|t| t.conserved()), "{}", o.name);
+            let stats = ScenarioStats::from_report(r);
+            if o.name.contains("blind") {
+                assert_eq!(
+                    stats.retried + stats.hedged + stats.expired + stats.cancelled,
+                    0,
+                    "{}: blind cells must not exercise the lifecycle layer",
+                    o.name
+                );
+            }
         }
     }
 

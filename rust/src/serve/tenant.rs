@@ -16,6 +16,7 @@ use crate::pipeline::PipelineConfig;
 use crate::platform::Platform;
 
 use super::arrivals::ArrivalProcess;
+use super::lifecycle::{HedgePolicy, RetryPolicy};
 use super::shard::BalancerPolicy;
 
 /// What to do when a request arrives and the tenant's entry queue is full.
@@ -62,6 +63,23 @@ pub struct TenantSpec {
     /// throughput when EP budgets are allocated. Must be positive and
     /// finite; ignored unless co-planning is enabled.
     pub weight: f64,
+    /// Per-request deadline budget, seconds, measured from each
+    /// (re-)arrival. A request still **queued** when its budget runs out
+    /// is reaped before it can waste a batch slot (counted as `expired`,
+    /// distinct from sheds and drops). `f64::INFINITY` (the default)
+    /// disables expiry entirely — no deadline events are ever scheduled.
+    pub deadline_s: f64,
+    /// Deterministic retry/backoff policy for rejected, dropped, and
+    /// expired requests (see [`RetryPolicy`]). `None` (the default) means
+    /// a refused request is simply lost, exactly as before this knob
+    /// existed.
+    pub retry: Option<RetryPolicy>,
+    /// Hedged-request policy (see [`HedgePolicy`]): duplicate a queued
+    /// straggler onto the least-loaded sibling replica once it has waited
+    /// longer than the tenant's observed p9x latency; first completion
+    /// wins. `None` (the default) disables hedging. Only meaningful with
+    /// more than one replica.
+    pub hedge: Option<HedgePolicy>,
 }
 
 impl TenantSpec {
@@ -79,7 +97,19 @@ impl TenantSpec {
             shards: 1,
             balancer: BalancerPolicy::RoundRobin,
             weight: 1.0,
+            deadline_s: f64::INFINITY,
+            retry: None,
+            hedge: None,
         }
+    }
+
+    /// Any lifecycle policy active? When false the engine schedules no
+    /// lifecycle events at all and every hash stays byte-identical to a
+    /// pre-lifecycle build.
+    pub fn lifecycle_active(&self) -> bool {
+        self.deadline_s.is_finite()
+            || self.retry.is_some_and(|r| r.max_attempts > 0)
+            || self.hedge.is_some()
     }
 
     /// Builder-style SLO override.
@@ -126,6 +156,25 @@ impl TenantSpec {
         self
     }
 
+    /// Builder-style per-request deadline override, seconds (see
+    /// [`TenantSpec::deadline_s`]).
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = deadline_s;
+        self
+    }
+
+    /// Builder-style retry-policy override (see [`TenantSpec::retry`]).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = Some(retry);
+        self
+    }
+
+    /// Builder-style hedge-policy override (see [`TenantSpec::hedge`]).
+    pub fn with_hedge(mut self, hedge: HedgePolicy) -> Self {
+        self.hedge = Some(hedge);
+        self
+    }
+
     /// Validate the spec against the platform it will be served on.
     pub fn validate(&self, plat: &Platform, config: &PipelineConfig) -> Result<()> {
         if self.queue_capacity == 0 {
@@ -142,6 +191,19 @@ impl TenantSpec {
         }
         if !(self.weight.is_finite() && self.weight > 0.0) {
             bail!("tenant {}: weight must be positive and finite", self.name);
+        }
+        if self.deadline_s.is_nan() || self.deadline_s <= 0.0 {
+            bail!("tenant {}: deadline must be positive (∞ disables)", self.name);
+        }
+        if let Some(r) = &self.retry {
+            if let Err(e) = r.validate() {
+                bail!("tenant {}: invalid retry policy: {e}", self.name);
+            }
+        }
+        if let Some(h) = &self.hedge {
+            if let Err(e) = h.validate() {
+                bail!("tenant {}: invalid hedge policy: {e}", self.name);
+            }
         }
         if let Err(e) = config.validate(self.net.len(), plat) {
             bail!("tenant {}: invalid pipeline config: {e}", self.name);
@@ -170,6 +232,8 @@ mod tests {
         assert_eq!(s.balancer, BalancerPolicy::RoundRobin);
         assert_eq!(s.weight, 1.0, "unit co-planning weight by default");
         assert!(s.slo_latency_s > 0.0);
+        assert!(s.deadline_s.is_infinite() && s.retry.is_none() && s.hedge.is_none());
+        assert!(!s.lifecycle_active(), "lifecycle must be fully off by default");
     }
 
     #[test]
@@ -205,5 +269,36 @@ mod tests {
         assert!(spec().with_weight(f64::NAN).validate(&plat, &cfg).is_err());
         let bad_cfg = PipelineConfig::new(vec![5], vec![0]);
         assert!(spec().validate(&plat, &bad_cfg).is_err());
+    }
+
+    #[test]
+    fn lifecycle_builders_activate_and_validate() {
+        let plat = configs::c2();
+        let cfg = PipelineConfig::new(vec![9, 9], vec![0, 1]);
+        let s = spec()
+            .with_deadline(0.4)
+            .with_retry(RetryPolicy::default())
+            .with_hedge(HedgePolicy::default());
+        assert_eq!(s.deadline_s, 0.4);
+        assert!(s.lifecycle_active());
+        assert!(s.validate(&plat, &cfg).is_ok());
+        assert!(spec().with_deadline(0.1).lifecycle_active(), "deadline alone activates");
+        assert!(
+            spec().with_retry(RetryPolicy::default()).lifecycle_active(),
+            "retry alone activates"
+        );
+        assert!(
+            !spec()
+                .with_retry(RetryPolicy { max_attempts: 0, ..Default::default() })
+                .lifecycle_active(),
+            "zero-attempt retry is inert"
+        );
+        assert!(spec().with_deadline(0.0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_deadline(-1.0).validate(&plat, &cfg).is_err());
+        assert!(spec().with_deadline(f64::NAN).validate(&plat, &cfg).is_err());
+        let bad_retry = RetryPolicy { max_attempts: 3, base_s: 0.0, cap_s: 1.0 };
+        assert!(spec().with_retry(bad_retry).validate(&plat, &cfg).is_err());
+        let bad_hedge = HedgePolicy { quantile: 1.5, min_delay_s: 0.0 };
+        assert!(spec().with_hedge(bad_hedge).validate(&plat, &cfg).is_err());
     }
 }

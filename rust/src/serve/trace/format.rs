@@ -56,8 +56,9 @@
 //! Control-plane decisions recorded *beside* the hashed stream (capture
 //! never perturbs the live hash): a count, then per record the
 //! [`super::ControlKind`] wire code (1 = retune, 2 = coplan, 3 = scale,
-//! 4 = fault, 5 = failover, 6 = shed), tenant, shard, two payload words
-//! and the decision time.
+//! 4 = fault, 5 = failover, 6 = shed, 7 = repartition, 8 = hedge —
+//! since version 4), tenant, shard, two payload words and the decision
+//! time.
 //!
 //! ## Section 4 — summary ([`SEC_SUMMARY`])
 //!
@@ -77,14 +78,20 @@ pub const MAGIC: [u8; 4] = *b"SHTR";
 /// Current format version (bumped on any incompatible layout change).
 /// Version 2 added the fault script to the serialized serve options and
 /// the tag-7 fault records to the event stream. Version 3 added the
-/// elastic-loop options and the tag-8 re-partition records.
-pub const VERSION: u8 = 3;
+/// elastic-loop options and the tag-8 re-partition records. Version 4
+/// added the per-tenant request-lifecycle policies (deadline, retry,
+/// hedge), the tag 9–12 lifecycle events, the `hedge` control kind, and
+/// the expired/cancelled/retried/hedged summary counters. The recorder
+/// negotiates the wire version down to 3 when no tenant has a lifecycle
+/// policy, so lifecycle-off captures stay byte-identical to a
+/// pre-lifecycle build.
+pub const VERSION: u8 = 4;
 
 /// Oldest version this build still reads. Decoding is version-gated on
 /// the serve-options layout (v1: no elastic, no faults; v2: faults but no
-/// elastic); omitted sections decode to their defaults, so `trace
-/// analyze` turns every trace ever recorded into an observability
-/// artifact. Re-encoding always writes [`VERSION`].
+/// elastic; v3: no lifecycle policies); omitted sections decode to their
+/// defaults, so `trace analyze` turns every trace ever recorded into an
+/// observability artifact. Re-encoding preserves the negotiated version.
 pub const MIN_VERSION: u8 = 1;
 
 /// Section id: serialized serve inputs (platform, tenants, options).
@@ -111,6 +118,10 @@ pub const SEC_SUMMARY: u8 = 4;
 /// | 6   | scale change | tenant « 8 \| shard    | replica state  |
 /// | 7   | fault        | event ix « 8 \| kind   | begin (1/0)    |
 /// | 8   | repartition  | tenant « 8 \| replicas | EP budget size |
+/// | 9   | expire       | tenant « 8 \| shard    | request id     |
+/// | 10  | retry        | attempt « 32 \| tenant « 8 \| shard | request id |
+/// | 11  | hedge        | tenant « 8 \| sibling  | request id     |
+/// | 12  | cancel       | tenant « 8 \| shard    | request id     |
 #[derive(Debug, Clone, Copy)]
 pub struct TraceEvent {
     /// Simulated time of the event, seconds.
@@ -157,6 +168,10 @@ impl TraceEvent {
             6 => "scale",
             7 => "fault",
             8 => "repartition",
+            9 => "expire",
+            10 => "retry",
+            11 => "hedge",
+            12 => "cancel",
             _ => "unknown",
         }
     }

@@ -23,6 +23,7 @@ use super::super::cluster::{AutoscaleOptions, ElasticOptions};
 use super::super::obs;
 use super::super::engine::{PumpMode, ServeOptions, ServeReport};
 use super::super::fault::{FaultEvent, FaultKind, FaultScript};
+use super::super::lifecycle::{HedgePolicy, RetryPolicy};
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::{AdmissionPolicy, TenantSpec};
 use super::format::{
@@ -56,6 +57,10 @@ pub enum ControlKind {
     /// demand (`shard` = surviving replica count, `a` = new EP budget
     /// size, `b` = predicted throughput bits).
     Repartition,
+    /// The lifecycle layer hedged a straggler onto a sibling replica
+    /// (`shard` = destination replica, `a` = source replica, `b` =
+    /// request id). Since trace version 4.
+    Hedge,
 }
 
 impl ControlKind {
@@ -69,6 +74,7 @@ impl ControlKind {
             ControlKind::Failover => 5,
             ControlKind::Shed => 6,
             ControlKind::Repartition => 7,
+            ControlKind::Hedge => 8,
         }
     }
 
@@ -82,6 +88,7 @@ impl ControlKind {
             5 => Ok(ControlKind::Failover),
             6 => Ok(ControlKind::Shed),
             7 => Ok(ControlKind::Repartition),
+            8 => Ok(ControlKind::Hedge),
             other => bail!("unknown control-record kind code {other}"),
         }
     }
@@ -96,6 +103,7 @@ impl ControlKind {
             ControlKind::Failover => "failover",
             ControlKind::Shed => "shed",
             ControlKind::Repartition => "repartition",
+            ControlKind::Hedge => "hedge",
         }
     }
 }
@@ -180,6 +188,14 @@ pub struct TenantSummary {
     pub retunes: u64,
     /// Autoscaler transitions across all replicas.
     pub scale_events: u64,
+    /// Requests reaped on deadline expiry (0 in pre-v4 traces).
+    pub expired: u64,
+    /// Hedge-loser copies cancelled (0 in pre-v4 traces).
+    pub cancelled: u64,
+    /// Retry re-arrivals offered (0 in pre-v4 traces).
+    pub retried: u64,
+    /// Hedge twins placed (0 in pre-v4 traces).
+    pub hedged: u64,
 }
 
 /// Outcome summary of the recorded run: what full replay must reproduce.
@@ -242,6 +258,10 @@ impl Trace {
                     .iter()
                     .map(|s| s.scale_events.len() as u64)
                     .sum(),
+                expired: t.expired,
+                cancelled: t.cancelled,
+                retried: t.retried,
+                hedged: t.hedged,
             })
             .collect();
         Self {
@@ -270,13 +290,26 @@ impl Trace {
             .collect()
     }
 
+    /// Wire version this trace encodes as: [`VERSION`] (4) when any
+    /// tenant carries a lifecycle policy, 3 otherwise — so a
+    /// lifecycle-off capture's bytes are identical to a pre-lifecycle
+    /// build's, and decode → re-encode stays canonical per version.
+    pub fn wire_version(&self) -> u8 {
+        if self.tenants.iter().any(|(spec, _)| spec.lifecycle_active()) {
+            VERSION
+        } else {
+            3
+        }
+    }
+
     /// Serialize to the binary `.trace` format.
     pub fn to_bytes(&self) -> Vec<u8> {
+        let version = self.wire_version();
         let mut inputs = Vec::new();
         put_platform(&mut inputs, &self.platform);
         put_varint(&mut inputs, self.tenants.len() as u64);
         for (spec, config) in &self.tenants {
-            put_tenant_spec(&mut inputs, spec);
+            put_tenant_spec(&mut inputs, spec, version);
             put_config(&mut inputs, config);
         }
         put_opts(&mut inputs, &self.opts);
@@ -311,13 +344,18 @@ impl Trace {
             ] {
                 put_varint(&mut summary, x);
             }
+            if version >= 4 {
+                for x in [t.expired, t.cancelled, t.retried, t.hedged] {
+                    put_varint(&mut summary, x);
+                }
+            }
         }
 
         let mut out = Vec::with_capacity(
             5 + inputs.len() + events.len() + controls.len() + summary.len() + 4 * 10,
         );
         out.extend_from_slice(&MAGIC);
-        out.push(VERSION);
+        out.push(version);
         put_section(&mut out, SEC_INPUTS, &inputs);
         put_section(&mut out, SEC_EVENTS, &events);
         put_section(&mut out, SEC_CONTROLS, &controls);
@@ -346,7 +384,7 @@ impl Trace {
         let n_tenants = inputs.varint().context("reading tenant count")? as usize;
         let mut tenants = Vec::with_capacity(n_tenants.min(1024));
         for ti in 0..n_tenants {
-            let spec = get_tenant_spec(&mut inputs)
+            let spec = get_tenant_spec(&mut inputs, version)
                 .with_context(|| format!("decoding tenant {ti} spec"))?;
             let config = get_config(&mut inputs)
                 .with_context(|| format!("decoding tenant {ti} config"))?;
@@ -401,8 +439,9 @@ impl Trace {
         let mut tsums = Vec::with_capacity(n_sum.min(1024));
         for i in 0..n_sum {
             let name = smr.str().with_context(|| format!("summary tenant {i} name"))?;
-            let mut vals = [0u64; 8];
-            for v in &mut vals {
+            let mut vals = [0u64; 12];
+            let n_counters = if version >= 4 { 12 } else { 8 };
+            for v in vals.iter_mut().take(n_counters) {
                 *v = smr.varint().with_context(|| format!("summary tenant {i} counters"))?;
             }
             tsums.push(TenantSummary {
@@ -415,6 +454,10 @@ impl Trace {
                 in_flight: vals[5],
                 retunes: vals[6],
                 scale_events: vals[7],
+                expired: vals[8],
+                cancelled: vals[9],
+                retried: vals[10],
+                hedged: vals[11],
             });
         }
         if !smr.is_empty() {
@@ -720,7 +763,7 @@ fn get_arrivals(r: &mut Reader<'_>) -> Result<ArrivalProcess> {
     }
 }
 
-fn put_tenant_spec(out: &mut Vec<u8>, spec: &TenantSpec) {
+fn put_tenant_spec(out: &mut Vec<u8>, spec: &TenantSpec, version: u8) {
     put_str(out, &spec.name);
     put_network(out, &spec.net);
     put_arrivals(out, &spec.arrivals);
@@ -738,9 +781,32 @@ fn put_tenant_spec(out: &mut Vec<u8>, spec: &TenantSpec) {
         BalancerPolicy::WeightedThroughput => 2,
     });
     put_f64(out, spec.weight);
+    // v4 lifecycle tail: the deadline bit pattern (∞ = none) and optional
+    // retry/hedge policies. The negotiated wire version omits this tail
+    // entirely on lifecycle-off traces.
+    if version >= 4 {
+        put_f64(out, spec.deadline_s);
+        match spec.retry {
+            Some(rp) => {
+                out.push(1);
+                put_varint(out, u64::from(rp.max_attempts));
+                put_f64(out, rp.base_s);
+                put_f64(out, rp.cap_s);
+            }
+            None => out.push(0),
+        }
+        match spec.hedge {
+            Some(h) => {
+                out.push(1);
+                put_f64(out, h.quantile);
+                put_f64(out, h.min_delay_s);
+            }
+            None => out.push(0),
+        }
+    }
 }
 
-fn get_tenant_spec(r: &mut Reader<'_>) -> Result<TenantSpec> {
+fn get_tenant_spec(r: &mut Reader<'_>, version: u8) -> Result<TenantSpec> {
     let name = r.str().context("tenant name")?;
     let net = get_network(r).context("tenant network")?;
     let arrivals = get_arrivals(r).context("tenant arrivals")?;
@@ -760,6 +826,26 @@ fn get_tenant_spec(r: &mut Reader<'_>) -> Result<TenantSpec> {
         other => bail!("unknown balancer code {other}"),
     };
     let weight = r.f64()?;
+    let (deadline_s, retry, hedge) = if version >= 4 {
+        let deadline_s = r.f64().context("deadline")?;
+        let retry = match r.u8().context("retry flag")? {
+            0 => None,
+            1 => Some(RetryPolicy {
+                max_attempts: u32::try_from(r.varint()?).context("retry max_attempts")?,
+                base_s: r.f64()?,
+                cap_s: r.f64()?,
+            }),
+            other => bail!("retry flag must be 0 or 1, found {other}"),
+        };
+        let hedge = match r.u8().context("hedge flag")? {
+            0 => None,
+            1 => Some(HedgePolicy { quantile: r.f64()?, min_delay_s: r.f64()? }),
+            other => bail!("hedge flag must be 0 or 1, found {other}"),
+        };
+        (deadline_s, retry, hedge)
+    } else {
+        (f64::INFINITY, None, None)
+    };
     Ok(TenantSpec {
         name,
         net,
@@ -771,6 +857,9 @@ fn get_tenant_spec(r: &mut Reader<'_>) -> Result<TenantSpec> {
         shards,
         balancer,
         weight,
+        deadline_s,
+        retry,
+        hedge,
     })
 }
 
@@ -1042,6 +1131,10 @@ mod tests {
                     in_flight: 1,
                     retunes: 1,
                     scale_events: 0,
+                    expired: 0,
+                    cancelled: 0,
+                    retried: 0,
+                    hedged: 0,
                 }],
             },
         }
@@ -1113,7 +1206,7 @@ mod tests {
             put_platform(&mut inputs, &tr.platform);
             put_varint(&mut inputs, tr.tenants.len() as u64);
             for (spec, config) in &tr.tenants {
-                put_tenant_spec(&mut inputs, spec);
+                put_tenant_spec(&mut inputs, spec, version);
                 put_config(&mut inputs, config);
             }
             inputs.extend_from_slice(opts_bytes);
@@ -1143,6 +1236,36 @@ mod tests {
             assert_eq!(back.events.len(), 1, "v{version}");
             assert_eq!(back.summary.log_hash, 0x1234, "v{version}");
         }
+    }
+
+    #[test]
+    fn lifecycle_traces_negotiate_v4_and_round_trip() {
+        use crate::serve::lifecycle::{HedgePolicy, RetryPolicy};
+        let mut tr = sample_trace();
+        assert_eq!(tr.wire_version(), 3, "no lifecycle policy → v3 wire format");
+        let v3_bytes = tr.to_bytes();
+        assert_eq!(v3_bytes[4], 3);
+
+        tr.tenants[0].0 = tr.tenants[0]
+            .0
+            .clone()
+            .with_deadline(0.75)
+            .with_retry(RetryPolicy { max_attempts: 2, base_s: 0.02, cap_s: 0.5 })
+            .with_hedge(HedgePolicy { quantile: 0.99, min_delay_s: 0.01 });
+        tr.summary.tenants[0].expired = 3;
+        tr.summary.tenants[0].cancelled = 1;
+        tr.summary.tenants[0].retried = 2;
+        tr.summary.tenants[0].hedged = 1;
+        assert_eq!(tr.wire_version(), 4);
+        let bytes = tr.to_bytes();
+        assert_eq!(bytes[4], 4);
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes, "v4 decode → re-encode is canonical");
+        let spec = &back.tenants[0].0;
+        assert_eq!(spec.deadline_s.to_bits(), 0.75f64.to_bits());
+        assert_eq!(spec.retry, Some(RetryPolicy { max_attempts: 2, base_s: 0.02, cap_s: 0.5 }));
+        assert_eq!(spec.hedge, Some(HedgePolicy { quantile: 0.99, min_delay_s: 0.01 }));
+        assert_eq!(back.summary, tr.summary);
     }
 
     #[test]

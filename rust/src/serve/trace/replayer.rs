@@ -24,6 +24,7 @@ use super::super::arrivals::ArrivalProcess;
 use super::super::cluster::{AutoscaleOptions, ElasticOptions};
 use super::super::engine::{serve, serve_observed, serve_traced, ServeOptions, ServeReport};
 use super::super::fault::FaultScript;
+use super::super::lifecycle::HedgePolicy;
 use super::super::obs::ObsReport;
 use super::super::shard::BalancerPolicy;
 use super::super::tenant::TenantSpec;
@@ -168,12 +169,18 @@ pub struct WhatIf {
     /// [`FaultScript`] grammar is `;`-separated and comma-free, so it
     /// nests inside the comma-separated override list).
     pub faults: Option<FaultScript>,
+    /// Force request hedging on or off: `hedge=off` strips every
+    /// tenant's hedge policy ("would the storm have been survivable
+    /// without hedging?"), `hedge=on` gives every multi-replica tenant
+    /// the default [`HedgePolicy`] unless it already carries one.
+    pub hedge: Option<bool>,
 }
 
 impl WhatIf {
     /// Parse a CLI override list: comma-separated `key=value` pairs with
     /// keys `shards`, `balancer`, `autoscale`, `min-shards`, `coplan`,
-    /// `elastic`, `faults` (e.g. `shards=4,balancer=jsq,faults=none`).
+    /// `elastic`, `faults`, `hedge`
+    /// (e.g. `shards=4,balancer=jsq,faults=none,hedge=off`).
     /// The `faults`
     /// value is either `none`/`off` (strip the recorded script) or a
     /// [`FaultScript`] spec — `;`-separated, so it fits in one pair.
@@ -204,6 +211,7 @@ impl WhatIf {
                 }
                 "coplan" => w.coplan = Some(parse_switch(key, value)?),
                 "elastic" => w.elastic = Some(parse_switch(key, value)?),
+                "hedge" => w.hedge = Some(parse_switch(key, value)?),
                 "faults" => {
                     w.faults = Some(match value.to_ascii_lowercase().as_str() {
                         "none" | "off" => FaultScript::default(),
@@ -213,7 +221,7 @@ impl WhatIf {
                 }
                 other => bail!(
                     "unknown what-if key {other:?} (allowed: shards, balancer, autoscale, \
-                     min-shards, coplan, elastic, faults)"
+                     min-shards, coplan, elastic, faults, hedge)"
                 ),
             }
         }
@@ -254,6 +262,9 @@ impl WhatIf {
                 parts.push(format!("faults=[{}]", f.describe()));
             }
         }
+        if let Some(on) = self.hedge {
+            parts.push(format!("hedge={}", if on { "on" } else { "off" }));
+        }
         if parts.is_empty() {
             "(no overrides)".into()
         } else {
@@ -292,6 +303,15 @@ pub fn whatif_inputs(
         }
         if let Some(b) = what_if.balancer {
             spec.balancer = b;
+        }
+        match what_if.hedge {
+            Some(false) => spec.hedge = None,
+            Some(true) => {
+                if spec.hedge.is_none() && spec.shards > 1 {
+                    spec.hedge = Some(HedgePolicy::default());
+                }
+            }
+            None => {}
         }
         tenants.push((spec, config.clone()));
     }
@@ -341,12 +361,18 @@ pub fn replay_whatif(trace: &Trace, what_if: &WhatIf) -> Result<ServeReport> {
         .with_context(|| format!("what-if replay ({})", what_if.describe()))?;
     if !report.truncated {
         for (ti, t) in report.tenants.iter().enumerate() {
+            // `arrival_times` filters tag-1 events, so lifecycle
+            // re-arrivals (retry, tag 10) and twins (hedge, tag 11) are
+            // excluded from `captured` — they inflate `offered` in the
+            // counterfactual run and must be added back to conserve.
             let captured = trace.arrival_times(ti).len() as u64;
             ensure!(
-                t.offered == captured,
+                t.offered == captured + t.retried + t.hedged,
                 "what-if replay lost requests: tenant {ti} ({}) captured {captured} arrivals \
-                 but the replay offered {}",
+                 (+{} retries, +{} hedges) but the replay offered {}",
                 t.name,
+                t.retried,
+                t.hedged,
                 t.offered
             );
         }
@@ -361,7 +387,7 @@ mod tests {
     #[test]
     fn whatif_parse_round_trips() {
         let w = WhatIf::parse(
-            "shards=4,balancer=jsq,autoscale=on,min-shards=2,coplan=off,elastic=on",
+            "shards=4,balancer=jsq,autoscale=on,min-shards=2,coplan=off,elastic=on,hedge=off",
         )
         .unwrap();
         assert_eq!(w.shards, Some(4));
@@ -370,9 +396,10 @@ mod tests {
         assert_eq!(w.autoscale, Some(true));
         assert_eq!(w.min_shards, Some(2));
         assert_eq!(w.coplan, Some(false));
+        assert_eq!(w.hedge, Some(false));
         assert_eq!(
             w.describe(),
-            "shards=4 balancer=jsq autoscale=on min-shards=2 coplan=off elastic=on"
+            "shards=4 balancer=jsq autoscale=on min-shards=2 coplan=off elastic=on hedge=off"
         );
     }
 

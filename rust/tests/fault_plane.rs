@@ -19,6 +19,12 @@
 //!    survives, `replay_full` re-simulates to the same hash, and a
 //!    `faults=none` what-if strips the script while conserving the
 //!    captured workload.
+//! 5. **The CLI grammar is total over its own output** — property-style:
+//!    chaos scripts across seeds, platforms and sizes render through
+//!    `describe()` and re-`parse()` to bit-identical scripts *and*
+//!    bit-identical re-rendered strings; a strided single-character
+//!    corruption corpus over valid script strings always fails to parse,
+//!    and every rejection names the offending event spec.
 
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
@@ -276,6 +282,91 @@ fn strongest_ep_failstop_recovers_fast_and_keeps_scaled_goodput() {
         if s.final_state == ReplicaState::Active {
             assert!(!s.eps.contains(&failed), "active replica on dead EP {failed}: {:?}", s.eps);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Property: the CLI grammar round-trips its own output bit-identically,
+//    and a corrupted-script corpus always fails with an actionable error.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grammar_round_trips_chaos_scripts_bit_identically() {
+    // describe() → parse() → describe() must be a fixpoint: the f64
+    // Display form round-trips exactly, so the re-rendered string — not
+    // just the re-parsed script — must match byte for byte.
+    for plat in [configs::c1(), configs::c2(), configs::c5()] {
+        for seed in 1..=20u64 {
+            let n = 1 + (seed as usize % 7);
+            let script = FaultScript::chaos(seed, &plat, 60.0 + seed as f64, n);
+            script.validate(&plat).expect("chaos scripts are valid by construction");
+            let rendered = script.describe();
+            let reparsed = FaultScript::parse(&rendered)
+                .unwrap_or_else(|e| panic!("{}/{seed}: reparse {rendered:?}: {e:#}", plat.name));
+            assert_eq!(
+                reparsed, script,
+                "{}/{seed}: describe→parse must reproduce the script exactly",
+                plat.name
+            );
+            assert_eq!(
+                reparsed.describe(),
+                rendered,
+                "{}/{seed}: re-rendering must be bit-identical",
+                plat.name
+            );
+        }
+    }
+}
+
+#[test]
+fn grammar_rejects_corrupted_scripts_with_actionable_errors() {
+    // Strided single-character corruption: replace every 1st, 2nd, 3rd...
+    // character of a valid script string with '~' (a byte no token of the
+    // grammar accepts). Every corrupted string must fail to parse, and
+    // the error chain must quote the offending event spec so the user can
+    // find it inside a long script.
+    let base = "epfail:1@5; epstall:0@2+1.5; epslow:2x2.5@3+4; chipfail:1@8; \
+                linkslow:3@1+2; linkcut@10+0.5";
+    assert!(FaultScript::parse(base).is_ok(), "the base corpus string must be valid");
+    let mut corrupted = 0usize;
+    for stride in 1..=3usize {
+        for start in 0..stride {
+            for i in (start..base.len()).step_by(stride) {
+                let mut s: Vec<u8> = base.as_bytes().to_vec();
+                if s[i] == b'~' {
+                    continue;
+                }
+                s[i] = b'~';
+                let s = String::from_utf8(s).expect("ASCII corpus");
+                let err = FaultScript::parse(&s).map(|sc| sc.describe()).expect_err(&format!(
+                    "corrupting byte {i} ({:?}) must break the parse: {s:?}",
+                    &base[i..=i]
+                ));
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains("fault spec") || msg.contains('~'),
+                    "byte {i}: error must point at the offending spec, got {msg:?}"
+                );
+                corrupted += 1;
+            }
+        }
+    }
+    assert!(corrupted >= base.len(), "the corpus must cover every byte at stride 1");
+
+    // Structural corruption: valid events recombined into invalid scripts
+    // still fail with messages naming the broken invariant.
+    let plat = configs::c2();
+    for (bad, needle) in [
+        ("epstall:0@1+3; epslow:0x2@2+5", "overlapping windows on EP 0"),
+        ("linkcut@1+3; linkslow:2@2+1", "link windows"),
+        ("epfail:0@1; epfail:1@1; epfail:2@1; epfail:3@1", "fail-stops all"),
+        ("epfail:99@1", "out of range"),
+    ] {
+        let err = FaultScript::parse(bad)
+            .expect("these parse; validation rejects them")
+            .validate(&plat)
+            .expect_err(bad);
+        assert!(format!("{err:#}").contains(needle), "{bad:?}: {err:#}");
     }
 }
 

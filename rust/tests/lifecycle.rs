@@ -1,0 +1,386 @@
+//! Request-lifecycle integration tests: deadlines, deterministic
+//! retry/backoff, and hedged requests, end to end.
+//!
+//! Five contracts, strongest first:
+//!
+//! 1. **Policy-off runs are byte-identical to a blind build** — a run
+//!    whose tenants carry no lifecycle policy (or only *inert* ones: an
+//!    infinite deadline, a zero-attempt retry) produces the same
+//!    `log_hash`, event log, trace bytes (wire v3) and telemetry exports
+//!    as a run of plain default specs. The lifecycle layer must be
+//!    invisible until switched on.
+//! 2. **Lifecycle runs are deterministic** — retry jitter and hedge
+//!    delays derive from hashes, not RNG state: two invocations of a
+//!    faulted, hedged, retrying storm match bit for bit.
+//! 3. **Hedge racing conserves requests** — across chaos fault scripts,
+//!    every offered request (including every retry re-arrival and hedge
+//!    twin) ends in exactly one bucket, per run and per epoch.
+//! 4. **Infinite deadlines never fire** — no tag-9 event ever enters the
+//!    stream without a finite deadline, while a tight deadline under
+//!    overload reaps visibly.
+//! 5. **The acceptance storm** — a tidal MMPP storm through an EP stall
+//!    plus a link slowdown, with retry + hedging on, retains ≥ 95% of the
+//!    fault-free goodput, conserves every request, is back at fault-free
+//!    goodput within two control epochs of the last fault clearing, and
+//!    records/replays through the v4 trace format bit-identically.
+
+use shisha::model::networks;
+use shisha::perfdb::{CostModel, PerfDb};
+use shisha::pipeline::simulator;
+use shisha::platform::configs;
+use shisha::serve::{
+    replay_full, replay_whatif, serve, serve_observed, serve_traced, shisha_config,
+    AdmissionPolicy, ArrivalProcess, BalancerPolicy, FaultEvent, FaultKind, FaultScript,
+    HedgePolicy, RetryPolicy, ServeOptions, ServeReport, TenantSpec, WhatIf,
+};
+
+/// C5 + SynthNet storm fixture: capacity, strongest EP, and a tidal
+/// two-replica tenant, optionally with the full lifecycle layer on.
+fn c5_cap() -> (shisha::platform::Platform, f64) {
+    let plat = configs::c5();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    (plat, cap)
+}
+
+fn storm_tenant(cap: f64, lifecycle: bool) -> TenantSpec {
+    let mut spec = TenantSpec::new(
+        "storm",
+        networks::synthnet(),
+        ArrivalProcess::Mmpp {
+            low_rate: 0.25 * cap,
+            high_rate: 1.1 * cap,
+            mean_low_s: 100.0 / cap,
+            mean_high_s: 100.0 / cap,
+        },
+    )
+    .with_shards(2)
+    .with_balancer(BalancerPolicy::JoinShortestQueue)
+    .with_queue_capacity(32)
+    .with_admission(AdmissionPolicy::DropOldest)
+    .with_slo(500.0 / cap);
+    if lifecycle {
+        spec = spec
+            .with_deadline(1000.0 / cap)
+            .with_retry(RetryPolicy { max_attempts: 3, base_s: 5.0 / cap, cap_s: 100.0 / cap })
+            .with_hedge(HedgePolicy { quantile: 0.95, min_delay_s: 20.0 / cap });
+    }
+    spec
+}
+
+fn assert_flow_conserved(r: &ServeReport, label: &str) {
+    for t in &r.tenants {
+        assert!(
+            t.conserved(),
+            "{label}/{}: offered {} != rejected {} + dropped {} + expired {} + cancelled {} \
+             + completed {} + in-flight {}",
+            t.name,
+            t.offered,
+            t.rejected,
+            t.dropped,
+            t.expired,
+            t.cancelled,
+            t.completed,
+            t.in_flight
+        );
+        assert!(t.epoch_conserved(), "{label}/{}: per-epoch flow conservation", t.name);
+    }
+}
+
+/// Every observable of the two reports must match exactly (the lifecycle
+/// analogue of the golden-test identity check, including the new
+/// counters).
+fn assert_identical(a: &ServeReport, b: &ServeReport, what: &str) {
+    assert_eq!(a.log_hash, b.log_hash, "{what}: log_hash");
+    assert_eq!(a.event_log, b.event_log, "{what}: event log");
+    assert_eq!(a.n_events, b.n_events, "{what}: event count");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let name = &x.name;
+        assert_eq!(x.offered, y.offered, "{what}/{name}: offered");
+        assert_eq!(x.rejected, y.rejected, "{what}/{name}: rejected");
+        assert_eq!(x.dropped, y.dropped, "{what}/{name}: dropped");
+        assert_eq!(x.expired, y.expired, "{what}/{name}: expired");
+        assert_eq!(x.cancelled, y.cancelled, "{what}/{name}: cancelled");
+        assert_eq!(x.retried, y.retried, "{what}/{name}: retried");
+        assert_eq!(x.hedged, y.hedged, "{what}/{name}: hedged");
+        assert_eq!(x.hedge_wins, y.hedge_wins, "{what}/{name}: hedge wins");
+        assert_eq!(x.completed, y.completed, "{what}/{name}: completed");
+        assert_eq!(x.slo_ok, y.slo_ok, "{what}/{name}: slo_ok");
+        assert_eq!(x.in_flight, y.in_flight, "{what}/{name}: in_flight");
+        assert_eq!(x.epochs, y.epochs, "{what}/{name}: epoch series");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Policy-off invariance: blind vs lifecycle-off runs are byte-identical.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inert_lifecycle_policies_leave_runs_byte_identical() {
+    let (plat, cap) = c5_cap();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let opts = ServeOptions {
+        duration_s: 300.0 / cap,
+        seed: 41,
+        control_epoch_s: 15.0 / cap,
+        record_log: true,
+        ..Default::default()
+    };
+    // "Blind": a spec that never heard of the lifecycle layer.
+    let blind = || vec![(storm_tenant(cap, false), config.clone())];
+    // "Inert": lifecycle knobs present but semantically off — an infinite
+    // deadline and a zero-attempt retry schedule nothing.
+    let inert = || {
+        let spec = storm_tenant(cap, false)
+            .with_deadline(f64::INFINITY)
+            .with_retry(RetryPolicy { max_attempts: 0, ..Default::default() });
+        assert!(!spec.lifecycle_active(), "∞ deadline + 0 attempts must stay inert");
+        vec![(spec, config.clone())]
+    };
+
+    let a = serve(&plat, blind(), &opts).expect("blind run");
+    let b = serve(&plat, inert(), &opts).expect("inert run");
+    assert_identical(&a, &b, "blind vs inert");
+    assert_eq!(
+        a.tenants[0].expired + a.tenants[0].cancelled + a.tenants[0].retried
+            + a.tenants[0].hedged,
+        0,
+        "no lifecycle activity without an active policy"
+    );
+
+    // The recorded traces are the same bytes, and both stay on wire v3 —
+    // exactly what a pre-lifecycle build would have written.
+    let (_, trace_a) = serve_traced(&plat, blind(), &opts).expect("blind record");
+    let (_, trace_b) = serve_traced(&plat, inert(), &opts).expect("inert record");
+    let bytes_a = trace_a.to_bytes();
+    assert_eq!(bytes_a[4], 3, "policy-off recordings negotiate wire v3");
+    assert_eq!(bytes_a, trace_b.to_bytes(), "trace bytes must match byte for byte");
+    assert!(!trace_a.events.iter().any(|e| (9..=12).contains(&e.tag)));
+
+    // The telemetry exports match too: no lifecycle series, no lifecycle
+    // JSONL fields, identical bytes.
+    let (_, obs_a) = serve_observed(&plat, blind(), &opts).expect("blind observed");
+    let (_, obs_b) = serve_observed(&plat, inert(), &opts).expect("inert observed");
+    assert_eq!(obs_a.prom, obs_b.prom, "Prometheus snapshots must match");
+    assert_eq!(obs_a.to_jsonl(), obs_b.to_jsonl(), "JSONL exports must match");
+    assert!(!obs_a.prom.contains("tag=\"expire\""), "no lifecycle series when off");
+    assert!(!obs_a.to_jsonl().contains("\"expired\""), "no lifecycle JSONL fields when off");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Lifecycle runs are deterministic across invocations.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retry_and_hedge_runs_are_bit_identical_across_invocations() {
+    let (plat, cap) = c5_cap();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let opts = ServeOptions {
+        duration_s: 400.0 / cap,
+        seed: 61,
+        control_epoch_s: 10.0 / cap,
+        record_log: true,
+        ..Default::default()
+    };
+    let tenants = || vec![(storm_tenant(cap, true), config.clone())];
+    let a = serve(&plat, tenants(), &opts).expect("first lifecycle run");
+    let b = serve(&plat, tenants(), &opts).expect("second lifecycle run");
+    assert_identical(&a, &b, "lifecycle rerun");
+    assert_flow_conserved(&a, "lifecycle rerun");
+    let t = &a.tenants[0];
+    assert!(
+        t.retried + t.hedged > 0,
+        "the storm must exercise retry or hedging (retried {}, hedged {})",
+        t.retried,
+        t.hedged
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Hedge racing conserves requests across chaos scripts.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hedge_cancel_conserves_requests_across_chaos_seeds() {
+    let (plat, cap) = c5_cap();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let duration_s = 400.0 / cap;
+    for seed in [3u64, 5, 9] {
+        let script = FaultScript::chaos(seed, &plat, duration_s, 4);
+        script.validate(&plat).expect("chaos scripts are valid by construction");
+        let opts = ServeOptions {
+            duration_s,
+            seed,
+            control_epoch_s: 10.0 / cap,
+            faults: script,
+            ..Default::default()
+        };
+        let report = serve(&plat, vec![(storm_tenant(cap, true), config.clone())], &opts)
+            .unwrap_or_else(|e| panic!("chaos seed {seed}: {e:#}"));
+        assert_flow_conserved(&report, &format!("chaos seed {seed}"));
+        let t = &report.tenants[0];
+        // Hedge accounting: each race cancels at most one loser, and the
+        // twin can only win a race it entered.
+        assert!(t.cancelled <= t.hedged, "seed {seed}: cancelled {} > hedged {}", t.cancelled, t.hedged);
+        assert!(t.hedge_wins <= t.hedged, "seed {seed}: wins {} > hedged {}", t.hedge_wins, t.hedged);
+        // Retry re-arrivals are a subset of what was offered.
+        assert!(t.retried + t.hedged <= t.offered, "seed {seed}: re-arrivals exceed offered");
+        assert!(t.completed > 0, "seed {seed}: the tenant must keep serving through chaos");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Infinite deadlines never fire; tight ones reap visibly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn infinite_deadline_never_schedules_expiry() {
+    let plat = configs::c1();
+    let net = networks::synthnet_small();
+    let config = shisha_config(&net, &plat);
+    let db = PerfDb::build(&net, &plat, &CostModel::default());
+    let cap = simulator::throughput(&net, &plat, &db, &config);
+    let opts = ServeOptions {
+        duration_s: 200.0 / cap,
+        seed: 7,
+        control: false,
+        control_epoch_s: 20.0 / cap,
+        ..Default::default()
+    };
+    // Overloaded tenant with retry on (so the run is lifecycle-active and
+    // records on wire v4) but an infinite deadline: tag 9 must never fire.
+    let mk = |deadline_s: f64| {
+        vec![(
+            TenantSpec::new("q", net.clone(), ArrivalProcess::Poisson { rate: 3.0 * cap })
+                .with_queue_capacity(32)
+                .with_slo(50.0 / cap)
+                .with_deadline(deadline_s)
+                .with_retry(RetryPolicy { max_attempts: 1, base_s: 5.0 / cap, cap_s: 50.0 / cap }),
+            config.clone(),
+        )]
+    };
+    let (report, trace) =
+        serve_traced(&plat, mk(f64::INFINITY), &opts).expect("infinite-deadline run");
+    assert!(
+        !trace.events.iter().any(|e| e.tag == 9),
+        "an infinite deadline must never produce a tag-9 expiry event"
+    );
+    assert_eq!(report.tenants[0].expired, 0);
+    assert_flow_conserved(&report, "infinite deadline");
+
+    // Control: the same overload with a deadline shorter than the queue
+    // wait must reap — proving the negative above is not vacuous.
+    let (tight, tight_trace) =
+        serve_traced(&plat, mk(10.0 / cap), &opts).expect("tight-deadline run");
+    assert!(
+        tight.tenants[0].expired > 0,
+        "a tight deadline under 3× overload must expire requests"
+    );
+    assert!(tight_trace.events.iter().any(|e| e.tag == 9));
+    assert_flow_conserved(&tight, "tight deadline");
+}
+
+// ---------------------------------------------------------------------------
+// 5. The acceptance storm: chaos faults with the lifecycle layer on.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn acceptance_storm_retains_goodput_and_replays_through_v4() {
+    let (plat, cap) = c5_cap();
+    let net = networks::synthnet();
+    let config = shisha_config(&net, &plat);
+    let duration_s = 400.0 / cap;
+    let epoch_s = 10.0 / cap;
+    let strongest = plat.eps_by_rank()[0];
+    let stall_t = 100.0 / cap;
+    let stall_d = 50.0 / cap;
+    let slow_t = 200.0 / cap;
+    let slow_d = 40.0 / cap;
+    let base = ServeOptions {
+        duration_s,
+        seed: 47,
+        control_epoch_s: epoch_s,
+        ..Default::default()
+    };
+    let tenants = || vec![(storm_tenant(cap, true), config.clone())];
+
+    let free = serve(&plat, tenants(), &base).expect("fault-free lifecycle storm");
+    assert_flow_conserved(&free, "fault-free");
+    let goodput_free = free.goodputs()[0];
+    assert!(goodput_free > 0.0);
+
+    let faulted_opts = ServeOptions {
+        faults: FaultScript {
+            events: vec![
+                FaultEvent { t_s: stall_t, kind: FaultKind::EpStall { ep: strongest, down_s: stall_d } },
+                FaultEvent {
+                    t_s: slow_t,
+                    kind: FaultKind::LinkSlow { factor: 2.0, down_s: slow_d },
+                },
+            ],
+        },
+        ..base.clone()
+    };
+    let (rep, trace) = serve_traced(&plat, tenants(), &faulted_opts).expect("faulted storm");
+    assert_flow_conserved(&rep, "faulted");
+    let t = &rep.tenants[0];
+    assert!(
+        t.retried + t.hedged > 0,
+        "the faults must push the lifecycle layer into action \
+         (retried {}, hedged {})",
+        t.retried,
+        t.hedged
+    );
+
+    // Headline: ≥ 95% of the fault-free goodput retained, at zero loss.
+    let goodput_faulted = rep.goodputs()[0];
+    assert!(
+        goodput_faulted >= 0.95 * goodput_free,
+        "goodput {goodput_faulted:.2} req/s fell below 95% of the fault-free \
+         {goodput_free:.2} req/s"
+    );
+
+    // Recovery: once the last fault clears (plus two control epochs of
+    // slack to drain the backlog), the faulted run serves at fault-free
+    // goodput again. Both runs share the same epoch grid, so the
+    // per-epoch series compare directly.
+    let recovered_t = (slow_t + slow_d) + 2.0 * epoch_s;
+    let tail = |r: &ServeReport| -> f64 {
+        r.tenants[0]
+            .epochs
+            .iter()
+            .filter(|e| e.end_s > recovered_t + 1e-9)
+            .map(|e| e.goodput)
+            .sum()
+    };
+    let (tail_faulted, tail_free) = (tail(&rep), tail(&free));
+    assert!(tail_free > 0.0, "the comparison window must contain epochs");
+    assert!(
+        tail_faulted >= 0.95 * tail_free,
+        "post-recovery goodput {tail_faulted:.2} is below 95% of fault-free {tail_free:.2} \
+         — the storm did not recover within two epochs of the fault clearing"
+    );
+
+    // Determinism: a second faulted invocation reproduces the stream.
+    let (rep2, _) = serve_traced(&plat, tenants(), &faulted_opts).expect("second faulted storm");
+    assert_eq!(rep.log_hash, rep2.log_hash, "faulted lifecycle runs must be deterministic");
+    assert_eq!(rep.n_events, rep2.n_events);
+
+    // The whole thing records on wire v4 and replays bit-identically.
+    let bytes = trace.to_bytes();
+    assert_eq!(bytes[4], 4, "lifecycle recordings negotiate wire v4");
+    let replayed = replay_full(&trace).expect("full replay of the faulted storm");
+    assert_eq!(replayed.log_hash, rep.log_hash, "v4 replay must be bit-identical");
+
+    // And the hedge=off counterfactual answers "what did hedging buy?"
+    // over the same captured storm, still conserving every request.
+    let stripped = replay_whatif(&trace, &WhatIf { hedge: Some(false), ..Default::default() })
+        .expect("hedge=off what-if");
+    assert_eq!(stripped.tenants[0].hedged, 0, "hedge=off must strip every hedge");
+    assert!(stripped.tenants[0].completed > 0);
+}

@@ -56,6 +56,10 @@ fn assert_identical(a: &ServeReport, b: &ServeReport, what: &str) {
         assert_eq!(x.offered, y.offered, "{what}/{name}: offered");
         assert_eq!(x.rejected, y.rejected, "{what}/{name}: rejected");
         assert_eq!(x.dropped, y.dropped, "{what}/{name}: dropped");
+        assert_eq!(x.expired, y.expired, "{what}/{name}: expired");
+        assert_eq!(x.cancelled, y.cancelled, "{what}/{name}: cancelled");
+        assert_eq!(x.retried, y.retried, "{what}/{name}: retried");
+        assert_eq!(x.hedged, y.hedged, "{what}/{name}: hedged");
         assert_eq!(x.completed, y.completed, "{what}/{name}: completed");
         assert_eq!(x.slo_ok, y.slo_ok, "{what}/{name}: slo_ok");
         assert_eq!(x.in_flight, y.in_flight, "{what}/{name}: in_flight");
@@ -74,6 +78,10 @@ fn assert_identical(a: &ServeReport, b: &ServeReport, what: &str) {
             "{what}/{name}: max latency"
         );
         assert!(x.conserved(), "{what}/{name}: conservation");
+        assert!(
+            x.epoch_conserved(),
+            "{what}/{name}: per-epoch flow conservation (incl. expired + cancelled)"
+        );
         // per-replica observables (length 1 for unsharded tenants)
         assert_eq!(x.shards.len(), y.shards.len(), "{what}/{name}: replica count");
         for (sx, sy) in x.shards.iter().zip(&y.shards) {

@@ -19,6 +19,11 @@
 //!    the captured arrival stream, per tenant, across the whole
 //!    [`whatif_grid`] (conservation is how we know the counterfactual
 //!    answers are about the *same* storm).
+//! 5. **Trace format v4 (request lifecycle)** — a recording with
+//!    deadline/retry/hedge policies negotiates wire version 4, survives
+//!    binary + disk round trips, replays bit-identically, and is rejected
+//!    at every truncation boundary; a lifecycle-off recording still
+//!    negotiates v3 so its bytes match a pre-lifecycle build's.
 
 use shisha::model::networks;
 use shisha::perfdb::{CostModel, PerfDb};
@@ -460,6 +465,106 @@ fn whatif_grid_runs_and_conserves() {
             outcome.name
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Trace format v4: lifecycle recordings round-trip and replay.
+// ---------------------------------------------------------------------------
+
+/// The sharded storm with every lifecycle policy live: a finite deadline,
+/// deterministic retry, and hedging across the two replicas.
+fn lifecycle_scenario() -> Inputs {
+    let (plat, mut tenants, opts) = sharded_scenario(2, BalancerPolicy::JoinShortestQueue, false, 61);
+    for (spec, _) in &mut tenants {
+        let slo = spec.slo_latency_s;
+        *spec = spec
+            .clone()
+            .with_deadline(4.0 * slo)
+            .with_retry(shisha::serve::RetryPolicy {
+                max_attempts: 2,
+                base_s: slo / 10.0,
+                cap_s: 4.0 * slo,
+            })
+            .with_hedge(shisha::serve::HedgePolicy { quantile: 0.90, min_delay_s: slo / 20.0 });
+    }
+    (plat, tenants, opts)
+}
+
+#[test]
+fn lifecycle_recordings_negotiate_v4_and_replay_bit_identically() {
+    let (plat, tenants, opts) = lifecycle_scenario();
+    let (live, trace) = serve_traced(&plat, tenants, &opts).expect("lifecycle record run");
+    let t = &live.tenants[0];
+    assert!(
+        t.retried + t.hedged + t.expired > 0,
+        "the storm must exercise at least one lifecycle mechanism \
+         (retried {}, hedged {}, expired {})",
+        t.retried,
+        t.hedged,
+        t.expired
+    );
+
+    // Wire negotiation: lifecycle-active tenants bump the header to v4.
+    let bytes = trace.to_bytes();
+    assert_eq!(bytes[4], 4, "lifecycle recordings carry wire version 4");
+    let back = Trace::from_bytes(&bytes).expect("decode v4 trace");
+    assert_eq!(back.to_bytes(), bytes, "v4 canonical re-encoding");
+    // The lifecycle counters ride in the v4 summary tail.
+    assert_eq!(back.summary.tenants[0].retried, t.retried);
+    assert_eq!(back.summary.tenants[0].hedged, t.hedged);
+    assert_eq!(back.summary.tenants[0].expired, t.expired);
+    assert_eq!(back.summary.tenants[0].cancelled, t.cancelled);
+    // And the policies themselves round-trip through the tenant specs.
+    let (spec, _) = &back.tenants[0];
+    assert!(spec.lifecycle_active());
+    assert_eq!(spec.retry, trace.tenants[0].0.retry);
+    assert_eq!(spec.hedge, trace.tenants[0].0.hedge);
+    assert_eq!(spec.deadline_s.to_bits(), trace.tenants[0].0.deadline_s.to_bits());
+
+    // Disk round trip, then bit-identical re-simulation.
+    let path =
+        std::env::temp_dir().join(format!("shisha_lifecycle_v4_{}.trace", std::process::id()));
+    trace.save(&path).expect("save v4 trace");
+    let loaded = Trace::load(&path).expect("load v4 trace");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.to_bytes(), bytes, "disk round trip is byte-identical");
+    let replayed = replay_full(&loaded).expect("full replay of the lifecycle run");
+    assert_eq!(replayed.log_hash, live.log_hash, "lifecycle replay must be bit-identical");
+    assert_eq!(replayed.n_events, live.n_events);
+    assert_eq!(replayed.tenants[0].retried, t.retried, "replay reproduces the retry schedule");
+    assert_eq!(replayed.tenants[0].hedged, t.hedged, "replay reproduces the hedge decisions");
+}
+
+#[test]
+fn truncated_v4_traces_are_rejected() {
+    let (plat, tenants, opts) = lifecycle_scenario();
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("lifecycle record run");
+    let bytes = trace.to_bytes();
+    assert_eq!(bytes[4], 4);
+    for cut in 0..bytes.len() {
+        assert!(
+            Trace::from_bytes(&bytes[..cut]).is_err(),
+            "a {cut}-byte prefix of a {}-byte v4 trace must be rejected",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn lifecycle_off_recordings_stay_on_wire_v3() {
+    // No lifecycle policy anywhere → the recorder negotiates v3, so the
+    // bytes are exactly what a pre-lifecycle build would have written.
+    let (plat, tenants, opts) = sharded_scenario(2, BalancerPolicy::RoundRobin, false, 41);
+    assert!(tenants.iter().all(|(s, _)| !s.lifecycle_active()));
+    let (_, trace) = serve_traced(&plat, tenants, &opts).expect("record run");
+    let bytes = trace.to_bytes();
+    assert_eq!(bytes[4], 3, "lifecycle-off recordings keep wire version 3");
+    let back = Trace::from_bytes(&bytes).expect("decode v3 trace");
+    assert_eq!(back.to_bytes(), bytes, "v3 canonical re-encoding");
+    assert!(
+        back.summary.tenants.iter().all(|t| t.expired + t.cancelled + t.retried + t.hedged == 0),
+        "pre-v4 summaries decode with zeroed lifecycle counters"
+    );
 }
 
 #[test]

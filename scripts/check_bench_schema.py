@@ -46,7 +46,13 @@ against the copy committed at HEAD:
   sampling overhead fraction must stay below 0.05 (the PR-9 acceptance
   bar — telemetry is derived beside the hash funnel and must cost the
   engine essentially nothing), and the epoch-sample rate must be
-  positive (zero samples means the observed run never ticked).
+  positive (zero samples means the observed run never ticked);
+* `BENCH_retry.json` gets the request-lifecycle envelope on the fresh
+  run: the `aggregate` case must carry the lifecycle metrics, the
+  goodput retained through the faulted storm with the lifecycle on
+  must be at least 0.95 (the PR-10 acceptance bar — the bench asserts
+  this before writing, so a violation here means the file was produced
+  some other way), and the hedge win rate must be a valid fraction.
 
 Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
 (paths relative to the repository root; run from anywhere inside the repo).
@@ -239,6 +245,42 @@ def check_obs_envelope(path: str, fresh_cases: dict) -> list[str]:
     return problems
 
 
+# Fresh-run envelope for BENCH_retry.json: the request-lifecycle
+# metrics the deadline/retry/hedge layer is tracked by.
+RETRY_AGGREGATE_KEYS = {
+    "goodput_retained_frac",
+    "hedge_fire_rate",
+    "hedge_win_rate",
+    "hedge_cancel_rate",
+    "p99_hedged_s",
+    "p99_blind_s",
+}
+
+
+def check_retry_envelope(path: str, fresh_cases: dict) -> list[str]:
+    """Extra validation applied to a freshly generated BENCH_retry.json."""
+    problems = []
+    aggregate = fresh_cases.get("aggregate")
+    if not isinstance(aggregate, dict):
+        return [f"{path}: fresh run has no 'aggregate' case"]
+    missing = RETRY_AGGREGATE_KEYS - set(aggregate)
+    if missing:
+        problems.append(f"{path}: aggregate case lacks {sorted(missing)}")
+    retained = aggregate.get("goodput_retained_frac")
+    if not isinstance(retained, (int, float)) or retained < 0.95:
+        problems.append(
+            f"{path}: goodput_retained_frac {retained!r} must be a number >= 0.95 "
+            "(the lifecycle layer is required to carry the faulted storm)"
+        )
+    win_rate = aggregate.get("hedge_win_rate")
+    if not isinstance(win_rate, (int, float)) or not 0.0 <= win_rate <= 1.0:
+        problems.append(
+            f"{path}: hedge_win_rate {win_rate!r} is not a fraction in [0, 1] "
+            "(hedge races cannot be won more often than they are fired)"
+        )
+    return problems
+
+
 def load_fresh(path: str) -> dict:
     with open(path, encoding="utf-8") as f:
         return json.load(f)
@@ -283,6 +325,8 @@ def main(paths: list[str]) -> int:
             failures.extend(check_elastic_envelope(path, fresh_cases))
         if path.rsplit("/", 1)[-1] == "BENCH_obs.json":
             failures.extend(check_obs_envelope(path, fresh_cases))
+        if path.rsplit("/", 1)[-1] == "BENCH_retry.json":
+            failures.extend(check_retry_envelope(path, fresh_cases))
 
         committed = load_committed(path)
         if committed is None:
